@@ -1,0 +1,57 @@
+//! Ablation sweep driver: runs a compact version of the paper's accuracy
+//! ablations (mixed N:M, module scope, pruning target) back-to-back and
+//! prints a combined summary — handy for kicking the tires on all the
+//! baseline paths without invoking the full experiment harness.
+//!
+//! ```bash
+//! cargo run --release --example ablation_sweep -- [steps]
+//! ```
+
+use slope::config::{Fig9Variant, Method, RunConfig};
+use slope::coordinator::Trainer;
+
+fn run(model: &str, method: Method, steps: usize, label: &str) -> slope::Result<(f64, f64)> {
+    let cfg = RunConfig {
+        model: model.into(),
+        method,
+        steps,
+        lazy_fraction: 0.1,
+        eval_every: steps.max(1),
+        eval_batches: 3,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg)?;
+    t.init()?;
+    let o = t.train()?;
+    println!("{label:<36} ppl {:>8.2}   cloze {:>5.1}%",
+             o.final_perplexity, o.cloze_accuracy * 100.0);
+    Ok((o.final_perplexity, o.cloze_accuracy))
+}
+
+fn main() -> slope::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(40);
+    println!("== ablation sweep ({steps} steps each) ==\n");
+
+    println!("-- mixed N:M (Table 6 shape) --");
+    let a = run("gpt-nano", Method::Slope, steps, "SLoPe 2:4-2:4")?;
+    let b = run("gpt-nano-24-28", Method::Slope, steps, "SLoPe 2:4-2:8")?;
+    let c = run("gpt-nano-28-24", Method::Slope, steps, "SLoPe 2:8-2:4")?;
+
+    println!("\n-- module scope (Table 9 shape) --");
+    run("gpt-nano", Method::Dense, steps, "Dense")?;
+    run("gpt-nano-mlponly", Method::Slope, steps, "SLoPe MLP only")?;
+    run("gpt-nano", Method::Slope, steps, "SLoPe MLP+attn")?;
+
+    println!("\n-- pruning target (Figure 9 shape) --");
+    run("gpt-nano", Method::Fig9(Fig9Variant::WeightStatic), steps, "weight static")?;
+    run("gpt-nano", Method::Fig9(Fig9Variant::InputDynamic), steps, "input dynamic")?;
+
+    println!("\nsanity: uniform 2:4 should not be worse than 2:8-heavy configs");
+    println!("  2:4-2:4 {:.2} | 2:4-2:8 {:.2} | 2:8-2:4 {:.2}", a.0, b.0, c.0);
+    println!("ablation_sweep OK");
+    Ok(())
+}

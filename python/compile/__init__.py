@@ -1,0 +1,5 @@
+"""SLoPe build-time package: L1 Pallas kernels + L2 JAX model + AOT export.
+
+Python is build-time only — ``make artifacts`` runs ``compile.aot`` once and
+the rust coordinator consumes ``artifacts/*.hlo.txt`` thereafter.
+"""

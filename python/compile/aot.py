@@ -1,0 +1,295 @@
+"""AOT exporter: lower every executable to HLO *text* + a JSON manifest.
+
+``make artifacts`` runs this once; the rust runtime then loads
+``artifacts/<config>/<name>.hlo.txt`` via ``HloModuleProto::from_text_file``
+and never touches python again.
+
+HLO text (NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()``) is
+the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records, for every executable, the flattened input/output
+order (dotted path names, shapes, dtypes) so the rust parameter store can
+marshal literals positionally and feed step outputs back into step inputs
+by name.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import (MODEL_CONFIGS, ModelConfig, TrainConfig,
+                      get_model_config, get_train_config)
+from . import model as M
+from . import train as T
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_to_name(prefix: str, path) -> str:
+    parts = [prefix]
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _spec_tree(prefix: str, tree) -> List[Dict]:
+    """Flatten a pytree into [{name, shape, dtype}] in jax flatten order."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        out.append({
+            "name": _path_to_name(prefix, path),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        })
+    return out
+
+
+def export_fn(fn: Callable, arg_specs: Sequence[Tuple[str, object]], out_prefixes,
+              out_dir: str, name: str) -> Dict:
+    """Lower ``fn(*args)`` with abstract args, write HLO text, return the
+    manifest entry.  ``arg_specs``: [(prefix, pytree_of_ShapeDtypeStruct)].
+    ``out_prefixes``: names for the result pytree elements (tuple results)."""
+    args = [spec for _, spec in arg_specs]
+    # keep_unused=True: the manifest promises EVERY declared arg is a real
+    # HLO parameter; without it jit DCEs unused inputs (e.g. magnitude_masks
+    # reads only block weights) and the rust marshalling contract breaks.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    inputs: List[Dict] = []
+    for prefix, spec in arg_specs:
+        inputs.extend(_spec_tree(prefix, spec))
+
+    # Recover the output structure by abstract evaluation.
+    out_shape = jax.eval_shape(fn, *args)
+    if not isinstance(out_shape, tuple):
+        out_shape = (out_shape,)
+        out_prefixes = [out_prefixes] if isinstance(out_prefixes, str) else out_prefixes
+    outputs: List[Dict] = []
+    for prefix, spec in zip(out_prefixes, out_shape):
+        outputs.extend(_spec_tree(prefix, spec))
+
+    print(f"  wrote {fname}: {len(text)} chars, {len(inputs)} in / {len(outputs)} out")
+    return {"file": fname, "inputs": inputs, "outputs": outputs}
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Per-config export sets
+# ---------------------------------------------------------------------------
+
+def export_config(cfg: ModelConfig, tc: TrainConfig, out_root: str,
+                  sets: Sequence[str]) -> Dict:
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"[aot] exporting {cfg.name} (~{cfg.n_params()/1e6:.1f}M params): {','.join(sets)}")
+
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    masks = M.init_masks(cfg, params, key)
+    opt = T.init_opt_state(params)
+    lora = M.init_lora(cfg, key)
+    lora_opt = T.init_opt_state(lora)
+
+    a_params, a_masks = _abstract(params), _abstract(masks)
+    a_opt, a_lora, a_lora_opt = _abstract(opt), _abstract(lora), _abstract(lora_opt)
+    tok_train = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len + 1), jnp.int32)
+    tok_infer = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len), jnp.int32)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+
+    exes: Dict[str, Dict] = {}
+
+    if "core" in sets:
+        def init_fn(s):
+            k = jax.random.PRNGKey(s)
+            k1, k2 = jax.random.split(k)
+            p = M.init_params(cfg, k1)
+            masks = M.init_masks(cfg, p, k2)
+            # Project weights onto the static support: SLoPe stores sparse
+            # weights from step 0 (Algorithm 1 lines 3-4).
+            p = M.project_params(cfg, p, masks)
+            return p, T.init_opt_state(p), masks
+
+        exes["init"] = export_fn(
+            init_fn, [("seed", seed)], ["params", "opt", "masks"], out_dir, "init")
+
+        step = T.make_train_step(cfg, tc)
+        exes["train_step"] = export_fn(
+            step,
+            [("tokens", tok_train), ("params", a_params), ("opt", a_opt),
+             ("masks", a_masks)],
+            ["loss", "params", "opt"], out_dir, "train_step")
+
+        def lora_init_fn(s):
+            lo = M.init_lora(cfg, jax.random.PRNGKey(s))
+            return lo, T.init_opt_state(lo)
+
+        exes["lora_init"] = export_fn(
+            lora_init_fn, [("seed", seed)], ["lora", "lora_opt"], out_dir, "lora_init")
+
+        step_lora = T.make_train_step_lora(cfg, tc)
+        exes["train_step_lora"] = export_fn(
+            step_lora,
+            [("tokens", tok_train), ("params", a_params), ("opt", a_opt),
+             ("masks", a_masks), ("lora", a_lora), ("lora_opt", a_lora_opt)],
+            ["loss", "params", "opt", "lora", "lora_opt"], out_dir, "train_step_lora")
+
+        exes["eval_step"] = export_fn(
+            T.make_eval_step(cfg),
+            [("tokens", tok_train), ("params", a_params), ("masks", a_masks)],
+            ["loss"], out_dir, "eval_step")
+
+        exes["eval_step_lora"] = export_fn(
+            T.make_eval_step(cfg, with_lora=True),
+            [("tokens", tok_train), ("params", a_params), ("masks", a_masks),
+             ("lora", a_lora)],
+            ["loss"], out_dir, "eval_step_lora")
+
+        exes["forward"] = export_fn(
+            T.make_forward(cfg),
+            [("tokens", tok_infer), ("params", a_params), ("masks", a_masks)],
+            ["logits"], out_dir, "forward")
+
+        exes["forward_lora"] = export_fn(
+            T.make_forward(cfg, with_lora=True),
+            [("tokens", tok_infer), ("params", a_params), ("masks", a_masks),
+             ("lora", a_lora)],
+            ["logits"], out_dir, "forward_lora")
+
+    if "srste" in sets:
+        step_srste = T.make_train_step_srste(cfg, tc)
+        exes["train_step_srste"] = export_fn(
+            step_srste,
+            [("tokens", tok_train), ("params", a_params), ("opt", a_opt)],
+            ["loss", "params", "opt"], out_dir, "train_step_srste")
+
+        exes["srste_masks"] = export_fn(
+            lambda p: T.srste_mask_snapshot(cfg, p),
+            [("params", a_params)], ["masks"], out_dir, "srste_masks")
+
+        # Re-mask a trained model by magnitude (also used to hand an SR-STE
+        # result to the sparse eval path).
+        exes["magnitude_masks"] = export_fn(
+            lambda p: M.init_masks(cfg, p, jax.random.PRNGKey(0), scheme="magnitude"),
+            [("params", a_params)], ["masks"], out_dir, "magnitude_masks")
+
+    if "wanda" in sets:
+        exes["wanda_masks"] = export_fn(
+            lambda p, t: M.wanda_masks(cfg, p, t),
+            [("params", a_params), ("tokens", tok_infer)],
+            ["masks"], out_dir, "wanda_masks")
+
+    if "fig9" in sets:
+        fig9_masks = T.make_fig9_masks(cfg, key)
+        a_f9 = _abstract(fig9_masks)
+        exes["fig9_init"] = export_fn(
+            lambda s: T.make_fig9_masks(cfg, jax.random.PRNGKey(s)),
+            [("seed", seed)], ["fig9_masks"], out_dir, "fig9_init")
+        for variant in T.FIG9_VARIANTS:
+            if variant == "dense":
+                continue  # dense == core train_step with ones masks
+            step_v = T.make_train_step_fig9(cfg, tc, variant)
+            exes[f"train_step_fig9_{variant}"] = export_fn(
+                step_v,
+                [("tokens", tok_train), ("params", a_params), ("opt", a_opt),
+                 ("masks", a_masks), ("fig9_masks", a_f9)],
+                ["loss", "params", "opt"], out_dir, f"train_step_fig9_{variant}")
+
+    manifest = {
+        "config": {
+            "name": cfg.name, "vocab_size": cfg.vocab_size,
+            "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+            "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len, "max_seq": cfg.pos_len, "batch_size": cfg.batch_size,
+            "adapter_rank": cfg.adapter_rank,
+            "first_half_sparsity": [cfg.first_half_sparsity.n, cfg.first_half_sparsity.m],
+            "second_half_sparsity": [cfg.second_half_sparsity.n, cfg.second_half_sparsity.m],
+            "prune_attn": cfg.prune_attn, "prune_mlp": cfg.prune_mlp,
+            "n_params_dense": cfg.n_params(),
+        },
+        "train": {
+            "lr": tc.lr, "beta1": tc.beta1, "beta2": tc.beta2,
+            "weight_decay": tc.weight_decay, "grad_clip": tc.grad_clip,
+            "warmup_steps": tc.warmup_steps, "total_steps": tc.total_steps,
+            "lazy_fraction": tc.lazy_fraction, "srste_decay": tc.srste_decay,
+        },
+        "executables": exes,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+# Which export sets each config receives (see DESIGN.md §5).
+EXPORT_PLAN: Dict[str, Tuple[str, Sequence[str]]] = {
+    "gpt-nano": ("default", ("core", "srste", "wanda", "fig9")),
+    "gpt-micro": ("default", ("core", "srste")),
+    "gpt-mini": ("e2e", ("core",)),
+    "bert-phase1": ("short", ("core",)),
+    "bert-phase2": ("short", ("core",)),
+    "gpt-nano-24-28": ("default", ("core", "wanda")),
+    "gpt-nano-28-24": ("default", ("core", "wanda")),
+    "gpt-nano-mlponly": ("default", ("core",)),
+    "gpt-nano-half-depth": ("default", ("core",)),
+    "gpt-nano-half-width": ("default", ("core",)),
+    "gpt-nano-r2": ("default", ("core",)),
+    "bert-phase2-r2": ("short", ("core",)),
+    "bert-phase2-r32": ("short", ("core",)),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root dir")
+    ap.add_argument("--configs", default="all",
+                    help="comma-separated config names, or 'all'")
+    args = ap.parse_args()
+
+    names = list(EXPORT_PLAN) if args.configs == "all" else args.configs.split(",")
+    os.makedirs(args.out, exist_ok=True)
+    index = {}
+    for name in names:
+        tc_name, sets = EXPORT_PLAN[name]
+        cfg = get_model_config(name)
+        tc = get_train_config(tc_name)
+        export_config(cfg, tc, args.out, sets)
+        index[name] = {"dir": name, "train_config": tc_name, "sets": list(sets)}
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] index written for {len(index)} configs")
+
+
+if __name__ == "__main__":
+    main()

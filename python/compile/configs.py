@@ -1,0 +1,181 @@
+"""Model and run configurations shared by the L2 model and the AOT exporter.
+
+Each :class:`ModelConfig` describes a GPT-style decoder-only transformer with
+SLoPe sparse linear layers.  The rust coordinator consumes the same configs
+via the ``manifest.json`` emitted by ``aot.py``; keep this file the single
+source of truth for the scaled-down model zoo used in accuracy experiments
+(the full-size OPT/LLaMA/Mistral shape inventories used by the performance
+and memory models live on the rust side in ``rust/src/config/zoo.rs``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """N:M sparsity scheme for a group of transformer blocks.
+
+    ``n``/``m``: keep at most ``n`` non-zeros out of every ``m`` consecutive
+    elements along the reduction dimension.  SLoPe default is 2:4.
+    """
+
+    n: int = 2
+    m: int = 4
+
+    @property
+    def density(self) -> float:
+        return self.n / self.m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A GPT-style decoder with per-block-group N:M sparsity.
+
+    ``first_half_sparsity`` applies to blocks ``[0, n_layer/2)`` and
+    ``second_half_sparsity`` to the rest — this expresses the paper's mixed
+    N:M experiments (Table 6: 2:4-2:4 / 2:4-2:8 / 2:8-2:4).  ``prune_attn``
+    and ``prune_mlp`` express the module-sensitivity ablation (Table 9).
+    The embedding, the first linear after the input, and the LM head are
+    always dense, matching §3.2 of the paper.
+    """
+
+    name: str = "gpt-nano"
+    vocab_size: int = 512
+    n_layer: int = 4
+    n_head: int = 4
+    d_model: int = 128
+    d_ff: int = 512  # 4 * d_model (upsample/downsample aspect ratio 4)
+    seq_len: int = 128
+    batch_size: int = 8
+    # Positional-embedding capacity; ≥ seq_len.  Lets two-phase (BERT-style)
+    # runs share parameter shapes across phases with different seq_len.
+    max_seq: int = 0
+    first_half_sparsity: SparsityConfig = SparsityConfig(2, 4)
+    second_half_sparsity: SparsityConfig = SparsityConfig(2, 4)
+    prune_attn: bool = True
+    prune_mlp: bool = True
+    # Low-rank adapter rank used during the lazy phase (0 disables adapters).
+    adapter_rank: int = 8
+    tie_embeddings: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    @property
+    def pos_len(self) -> int:
+        return max(self.max_seq, self.seq_len)
+
+    def sparsity_for_layer(self, layer: int) -> SparsityConfig:
+        if layer < self.n_layer // 2:
+            return self.first_half_sparsity
+        return self.second_half_sparsity
+
+    def n_params(self) -> int:
+        """Approximate learnable parameter count (dense equivalent)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab_size, self.n_layer
+        per_block = 4 * d * d + 2 * d * f + 4 * d + 2 * f  # qkv+proj, up+down, ln+bias
+        emb = v * d + self.seq_len * d
+        head = 0 if self.tie_embeddings else v * d
+        return emb + l * per_block + 2 * d + head
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer + schedule parameters consumed by the AOT train steps."""
+
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 20
+    total_steps: int = 1000
+    # Fraction of iterations that run with lazy low-rank adapters (paper: 1%).
+    lazy_fraction: float = 0.01
+    # Extended SR-STE decay factor (gamma_w in Figure 2).
+    srste_decay: float = 6e-6
+
+    @property
+    def lazy_steps(self) -> int:
+        return max(1, int(round(self.total_steps * self.lazy_fraction)))
+
+
+def _cfg(**kw) -> ModelConfig:
+    return ModelConfig(**kw)
+
+
+# Scaled-down model zoo (see DESIGN.md §6 for the scaling rationale).
+MODEL_CONFIGS: Dict[str, ModelConfig] = {
+    # ~2.2M params — the workhorse for ablation sweeps (Tables 4/6/9, Fig 2/9).
+    "gpt-nano": _cfg(name="gpt-nano"),
+    # ~8.6M params — the "large" partner for Figure 2's small/large pairing.
+    "gpt-micro": _cfg(
+        name="gpt-micro", n_layer=6, n_head=8, d_model=256, d_ff=1024, seq_len=128
+    ),
+    # ~27M params — e2e example scale (pretrain_e2e), proves the stack composes.
+    "gpt-mini": _cfg(
+        name="gpt-mini", n_layer=8, n_head=8, d_model=512, d_ff=2048,
+        seq_len=256, batch_size=4, vocab_size=1024, adapter_rank=16,
+    ),
+    # BERT-phase stand-in: short-sequence phase-1 / long-sequence phase-2
+    # (Table 5 / Figure 7 rank sweep uses these two).
+    "bert-phase1": _cfg(
+        name="bert-phase1", n_layer=4, n_head=4, d_model=128, d_ff=512,
+        seq_len=64, max_seq=256, batch_size=16, adapter_rank=8,
+    ),
+    "bert-phase2": _cfg(
+        name="bert-phase2", n_layer=4, n_head=4, d_model=128, d_ff=512,
+        seq_len=256, batch_size=4, adapter_rank=8,
+    ),
+    # Adapter-rank sweep variants (Table 4 / Table 5): same shapes, only
+    # the lazy-adapter rank differs (r/d: 2/128 = 1.56%, 8/128 = 6.25%,
+    # 32/128 = 25%).
+    "gpt-nano-r2": _cfg(name="gpt-nano-r2", adapter_rank=2),
+    "bert-phase2-r2": _cfg(
+        name="bert-phase2-r2", n_layer=4, n_head=4, d_model=128, d_ff=512,
+        seq_len=256, batch_size=4, adapter_rank=2,
+    ),
+    "bert-phase2-r32": _cfg(
+        name="bert-phase2-r32", n_layer=4, n_head=4, d_model=128, d_ff=512,
+        seq_len=256, batch_size=4, adapter_rank=32,
+    ),
+    # Mixed-sparsity variants (Table 6).
+    "gpt-nano-24-28": _cfg(
+        name="gpt-nano-24-28", second_half_sparsity=SparsityConfig(2, 8)
+    ),
+    "gpt-nano-28-24": _cfg(
+        name="gpt-nano-28-24", first_half_sparsity=SparsityConfig(2, 8)
+    ),
+    # Module-sensitivity variants (Table 9).
+    "gpt-nano-mlponly": _cfg(name="gpt-nano-mlponly", prune_attn=False),
+    # Depth/width pruning comparison (Figure 10 / Appendix S).
+    "gpt-nano-half-depth": _cfg(name="gpt-nano-half-depth", n_layer=2),
+    "gpt-nano-half-width": _cfg(name="gpt-nano-half-width", d_ff=256),
+}
+
+
+TRAIN_CONFIGS: Dict[str, TrainConfig] = {
+    "default": TrainConfig(),
+    "short": TrainConfig(total_steps=200, warmup_steps=10),
+    "e2e": TrainConfig(total_steps=400, warmup_steps=20, lazy_fraction=0.05),
+}
+
+
+def get_model_config(name: str) -> ModelConfig:
+    try:
+        return MODEL_CONFIGS[name]
+    except KeyError as e:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(MODEL_CONFIGS)}") from e
+
+
+def get_train_config(name: str) -> TrainConfig:
+    try:
+        return TRAIN_CONFIGS[name]
+    except KeyError as e:
+        raise KeyError(f"unknown train config {name!r}; have {sorted(TRAIN_CONFIGS)}") from e

@@ -1,0 +1,18 @@
+"""L1 Pallas kernel library for SLoPe (see DESIGN.md §3/S4).
+
+All kernels run under ``interpret=True`` so they lower to plain HLO and can
+be executed by the CPU PJRT client from the rust runtime.
+"""
+
+from .matmul import (matmul, matmul_add, matmul_blocked, matmul_add_blocked,
+                     pick_block, vmem_elems, MXU_EDGE)
+from .nm_spmm import spmm_masked, spmm_compressed
+from .lora import lora_forward_naive, lora_forward_fused, lora_forward_ref
+from .prune_compress import apply_mask, prune_and_compress, sparse_add
+
+__all__ = [
+    "matmul", "matmul_add", "pick_block", "vmem_elems", "MXU_EDGE",
+    "spmm_masked", "spmm_compressed",
+    "lora_forward_naive", "lora_forward_fused", "lora_forward_ref",
+    "apply_mask", "prune_and_compress", "sparse_add",
+]

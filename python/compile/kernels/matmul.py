@@ -1,0 +1,180 @@
+"""L1 workhorse: Pallas tiled matmul kernels.
+
+These kernels express the HBM↔VMEM schedule the paper implemented with
+cuSPARSELt threadblocks as Pallas ``BlockSpec`` grids (see DESIGN.md
+§Hardware-Adaptation).  All kernels run with ``interpret=True`` so they
+lower to plain HLO and execute on the CPU PJRT client; on a real TPU the
+same BlockSpecs drive the Mosaic pipeline.
+
+Tile-size policy mirrors the paper's §2.4 finding that *square* tiles keep
+the sparse backend in its high-efficiency regime: :func:`pick_block`
+prefers the largest divisor ≤ the MXU edge (128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU systolic array edge on TPU; also the preferred square-tile edge.
+MXU_EDGE = 128
+
+
+def pick_block(dim: int, pref: int = MXU_EDGE) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``pref``, preferring powers of two."""
+    if dim <= pref:
+        return dim
+    for cand in (pref, 256, 128, 64, 32, 16, 8, 4, 2):
+        if dim % cand == 0 and cand <= pref:
+            return cand
+    return 1
+
+
+# §Perf iteration 1 (see EXPERIMENTS.md §Perf/L1): 128-edge tiles used only
+# 2.3% of VMEM while re-streaming operands 5–10×.  Growing the *output*
+# tile to 256 (keeping bk = 128) quarters the cross-grid HBM re-reads at
+# ~1 MiB VMEM — still far inside budget, and every dot stays a whole
+# multiple of the 128×128 MXU.
+OUT_TILE_PREF = 256
+
+
+def pick_blocks(m: int, n: int, k: int) -> tuple:
+    """Default (bm, bn, bk) for an (m, n, k) GEMM: 256-edge output tiles,
+    128-deep reduction tiles, shrunk to divisors of the actual dims."""
+    return pick_block(m, OUT_TILE_PREF), pick_block(n, OUT_TILE_PREF), pick_block(k)
+
+
+def vmem_elems(bm: int, bn: int, bk: int) -> int:
+    """VMEM working-set estimate (elements) for one (bm, bn, bk) program:
+    x-tile + w-tile + out-tile + f32 scratch accumulator."""
+    return bm * bk + bk * bn + 2 * bm * bn
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_tiles: int):
+    """Grid (m, n, k): accumulate ``x_tile @ w_tile`` into a VMEM scratch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_tiles - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_blocked(x: jnp.ndarray, w: jnp.ndarray, *, bm: int = 0, bn: int = 0, bk: int = 0):
+    """``x @ w`` with an (M, N, K) Pallas grid and a VMEM f32 accumulator.
+
+    ``x``: (M, K), ``w``: (K, N).  Block sizes default to :func:`pick_block`
+    of each dimension (full-dim single tile for the small models used in
+    accuracy experiments, multi-tile for kernel tests and large shapes).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    dbm, dbn, dbk = pick_blocks(m, n, k)
+    bm, bn, bk = bm or dbm, bn or dbn, bk or dbk
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, w.shape, bm, bn, bk)
+    k_tiles = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, k_tiles=k_tiles),
+        grid=(m // bm, n // bn, k_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w)
+
+
+def _mm_add_kernel(x_ref, w_ref, c_ref, o_ref, acc_ref, *, k_tiles: int):
+    """Fused ``x @ w + c`` — the cuBLAS fused matmul+add of §2.4, as one
+    Pallas body: the addend tile is consumed inside the same program, so the
+    sum never round-trips through HBM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_tiles - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_add_blocked(x: jnp.ndarray, w: jnp.ndarray, c: jnp.ndarray, *, bm: int = 0,
+                       bn: int = 0, bk: int = 0):
+    """Fused ``x @ w + c`` (``c``: (M, N)).  Used by the SpMM+LoRA fusion
+    (Eq. 11 right: ``Y = Y2·R + Y1``)."""
+    m, k = x.shape
+    _, n = w.shape
+    assert c.shape == (m, n), (c.shape, m, n)
+    dbm, dbn, dbk = pick_blocks(m, n, k)
+    bm, bn, bk = bm or dbm, bn or dbn, bk or dbk
+    k_tiles = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_add_kernel, k_tiles=k_tiles),
+        grid=(m // bm, n // bn, k_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w, c)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers — pallas_call has no JVP rule, so the L2 model uses
+# these custom-VJP versions whose gradients are themselves Pallas kernels.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable ``x @ w`` (auto-picked blocks)."""
+    return matmul_blocked(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_blocked(x, w), (x, w)
+
+
+def _matmul_bwd(res, gy):
+    x, w = res
+    return matmul_blocked(gy, w.T), matmul_blocked(x.T, gy)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@jax.custom_vjp
+def matmul_add(x: jnp.ndarray, w: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable fused ``x @ w + c``."""
+    return matmul_add_blocked(x, w, c)
+
+
+def _matmul_add_fwd(x, w, c):
+    return matmul_add_blocked(x, w, c), (x, w)
+
+
+def _matmul_add_bwd(res, gy):
+    x, w = res
+    return matmul_blocked(gy, w.T), matmul_blocked(x.T, gy), gy
+
+
+matmul_add.defvjp(_matmul_add_fwd, _matmul_add_bwd)

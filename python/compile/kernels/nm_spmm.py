@@ -1,0 +1,115 @@
+"""L1: N:M structured-sparse matmul kernels (the paper's cuSPARSELt role).
+
+Two layouts are provided:
+
+* :func:`spmm_masked` — weights kept dense with a 0/1 N:M mask applied in
+  VMEM right before the MXU dot.  This is the layout used inside the AOT
+  train steps (the mask is a runtime buffer, so one executable serves every
+  mask/seed; see DESIGN.md §7.1).
+* :func:`spmm_compressed` — weights in the compressed (values, indices)
+  layout of Eq. 7 (``d_in·N/M`` values per row plus index metadata); the
+  kernel expands each weight tile inside VMEM (cheap VPU gather on real
+  hardware, a one-hot contraction under interpret) and feeds the MXU.
+  This is the memory-saving inference layout and matches the rust
+  ``sparsity::compressed`` format.
+
+Both compute ``Y = X · (W ⊙ mask)ᵀ`` for ``X: (b, d_in)``, ``W: (d_out,
+d_in)`` — Eq. 4 of the paper.  The same kernels serve BWD-2 (Eq. 6) by
+passing the double-pruned mask ``mask_rc`` and swapping operands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .matmul import pick_block, pick_blocks
+
+
+def _spmm_masked_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, k_tiles: int):
+    """Grid (m, n, k).  ``w``/``m`` tiles are (bn, bk) slices of the
+    (d_out, d_in) weight; masking happens in VMEM so the HBM-resident weight
+    is the *stored* operand (sparse in the compressed variant)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_sp = w_ref[...] * m_ref[...]
+    acc_ref[...] += jnp.dot(x_ref[...], w_sp.T, preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_tiles - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def spmm_masked(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray, *, bm: int = 0,
+                bn: int = 0, bk: int = 0) -> jnp.ndarray:
+    """``Y = X · (W ⊙ mask)ᵀ`` with square-tile BlockSpecs (§2.4 tiling)."""
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2 and mask.shape == w.shape, (x.shape, w.shape, mask.shape)
+    dbm, dbn, dbk = pick_blocks(m, n, k)
+    bm, bn, bk = bm or dbm, bn or dbn, bk or dbk
+    k_tiles = k // bk
+    return pl.pallas_call(
+        functools.partial(_spmm_masked_kernel, k_tiles=k_tiles),
+        grid=(m // bm, n // bn, k_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w, mask)
+
+
+def _spmm_compressed_kernel(x_ref, v_ref, i_ref, o_ref, *, d_in: int):
+    """Grid (m, n).  Expands the compressed weight tile in VMEM then dots.
+
+    ``v``/``i`` tiles are (bn, kc) with ``kc = d_in·N/M``; indices are
+    absolute column positions.  The expansion is written as a one-hot
+    contraction so it lowers to plain HLO under interpret; on TPU the same
+    dataflow is a VPU scatter into VMEM scratch.
+    """
+    vals = v_ref[...]
+    idx = i_ref[...]
+    onehot = jax.nn.one_hot(idx, d_in, dtype=vals.dtype)  # (bn, kc, d_in)
+    w_tile = jnp.einsum("nc,ncd->nd", vals, onehot)  # (bn, d_in) dense tile
+    o_ref[...] = jnp.dot(x_ref[...], w_tile.T, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def spmm_compressed(x: jnp.ndarray, values: jnp.ndarray, indices: jnp.ndarray,
+                    *, bm: int = 0, bn: int = 0) -> jnp.ndarray:
+    """``Y = X · Wᵀ`` with ``W`` in the compressed N:M layout of Eq. 7.
+
+    ``values``/``indices``: (d_out, d_in·N/M) from
+    :func:`compile.sparsity.compress_nm`.
+    """
+    m, d_in = x.shape
+    n, kc = values.shape
+    assert indices.shape == values.shape
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    return pl.pallas_call(
+        functools.partial(_spmm_compressed_kernel, d_in=d_in),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kc), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, kc), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, values, indices)

@@ -1,0 +1,103 @@
+"""L1: prune-and-compress and sparse-add kernels (Algorithm 1 lines 13/15).
+
+These are the paper's custom CUDA helper kernels (Appendix K), re-thought
+for the Pallas/TPU model:
+
+* :func:`prune_and_compress` — mask a dense gradient with the static weight
+  mask and pack the survivors into the compressed ``(d_out, d_in·N/M)``
+  layout, so the optimizer never stores the ~``(1−N/M)`` known-zero slots
+  (the paper's "50% extra zero values in the dense format").
+* :func:`sparse_add` — ``β·A + γ·B`` over compressed *values* planes (the
+  index metadata is shared because SLoPe masks are static), used for the
+  weight-decay combine ``(1/γ)·∇W + α·W`` on line 15 of Algorithm 1.
+* :func:`apply_mask` — plain masked copy (the "update sparse matrix"
+  primitive when operating in masked-dense layout).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _mask_kernel(g_ref, m_ref, o_ref):
+    o_ref[...] = g_ref[...] * m_ref[...]
+
+
+def apply_mask(g: jnp.ndarray, mask: jnp.ndarray, *, bn: int = 0, bk: int = 0):
+    """Element-wise ``g ⊙ mask`` as a tiled Pallas kernel."""
+    n, k = g.shape
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=True,
+    )(g, mask)
+
+
+def _gather_rows_kernel(g_ref, i_ref, o_ref):
+    """Per-row gather: out[r, c] = g[r, idx[r, c]] (VPU gather on TPU)."""
+    g = g_ref[...]
+    idx = i_ref[...]
+    o_ref[...] = jnp.take_along_axis(g, idx, axis=1)
+
+
+def prune_and_compress(g: jnp.ndarray, indices: jnp.ndarray, *, bn: int = 0):
+    """Pack the masked gradient into the compressed values plane.
+
+    ``indices``: (d_out, d_in·N/M) absolute column indices from the static
+    weight mask (``compile.sparsity.compress_nm``).  Output has the same
+    shape as ``indices`` — the gradient restricted to surviving slots.
+    """
+    n, k = g.shape
+    kc = indices.shape[1]
+    bn = bn or pick_block(n)
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, kc), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, kc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, kc), g.dtype),
+        interpret=True,
+    )(g, indices)
+
+
+def _sparse_add_kernel(a_ref, b_ref, o_ref, *, beta: float, gamma: float):
+    o_ref[...] = beta * a_ref[...] + gamma * b_ref[...]
+
+
+def sparse_add(a: jnp.ndarray, b: jnp.ndarray, beta: float, gamma: float,
+               *, bn: int = 0, bk: int = 0):
+    """``β·A + γ·B`` on compressed values planes with identical sparsity
+    pattern (Algorithm 1 line 15; the paper's custom sparse-add CUDA
+    kernel).  Also valid on masked-dense tensors."""
+    assert a.shape == b.shape
+    n, k = a.shape
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k)
+    return pl.pallas_call(
+        functools.partial(_sparse_add_kernel, beta=beta, gamma=gamma),
+        grid=(n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness contracts: pytest (``python/tests``) sweeps
+shapes/dtypes with hypothesis and asserts ``assert_allclose(kernel, ref)``.
+Keep these boring — no pallas, no tiling, just the math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return x @ w
+
+
+def matmul_add_ref(x, w, c):
+    return x @ w + c
+
+
+def spmm_masked_ref(x, w, mask):
+    """Eq. 4: ``Y = X · (W ⊙ mask)ᵀ``."""
+    return x @ (w * mask).T
+
+
+def spmm_compressed_ref(x, values, indices, d_in):
+    """Decompress-then-matmul oracle for the compressed layout."""
+    d_out = values.shape[0]
+    w = jnp.zeros((d_out, d_in), values.dtype)
+    rows = jnp.arange(d_out)[:, None]
+    w = w.at[rows, indices].add(values)
+    return x @ w.T
+
+
+def lora_ref(x, w, mask, lora_l, lora_r):
+    """Eq. 10/11: ``Y = X·(W⊙mask)ᵀ + X·Rᵀ·Lᵀ``."""
+    return x @ (w * mask).T + (x @ lora_r.T) @ lora_l.T
+
+
+def apply_mask_ref(g, mask):
+    return g * mask
+
+
+def prune_and_compress_ref(g, indices):
+    return jnp.take_along_axis(g, indices, axis=1)
+
+
+def sparse_add_ref(a, b, beta, gamma):
+    return beta * a + gamma * b
+
+
+def slope_linear_ref(x, w, mask_r, mask_rc, gy):
+    """Full Eq. 4–6 contract for one linear layer.
+
+    Returns ``(y, gx, gw)`` where the forward uses the row mask, grad-x uses
+    the double-pruned mask, and grad-w is masked to the row mask's support
+    (Algorithm 1 line 13).
+    """
+    y = x @ (w * mask_r).T
+    gx = gy @ (w * mask_rc)
+    gw = (gy.T @ x) * mask_r
+    return y, gx, gw

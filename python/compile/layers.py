@@ -1,0 +1,172 @@
+"""L2 building blocks: the SLoPe linear layer (Eq. 4–6 as a custom VJP)
+and the transformer sub-modules that use it.
+
+The custom VJP is the heart of the method:
+
+* forward  (Eq. 4):  ``Y = X · (W ⊙ mask_r)ᵀ``          — row-pruned weight
+* BWD-2    (Eq. 6):  ``∇X = ∇Y · (W ⊙ mask_rc)``        — double-pruned
+* BWD-1    (Eq. 5):  ``∇W = (∇Yᵀ · X) ⊙ mask_r``        — masked gradient
+  (Algorithm 1 line 13: never materialize updates for pruned slots)
+
+All three GEMMs go through the L1 Pallas kernels so the AOT-exported HLO
+contains the same tiled dataflow the rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, matmul_add, spmm_masked
+from .kernels.prune_compress import apply_mask
+
+
+# ---------------------------------------------------------------------------
+# SLoPe sparse linear
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def slope_matmul(x, w, mask_r, mask_rc):
+    """``Y = X·(W⊙mask_r)ᵀ`` with the double-pruned backward pass.
+
+    ``x``: (tokens, d_in); ``w``: (d_out, d_in); masks shaped like ``w``.
+    """
+    return spmm_masked(x, w, mask_r)
+
+
+def _slope_matmul_fwd(x, w, mask_r, mask_rc):
+    return spmm_masked(x, w, mask_r), (x, w, mask_r, mask_rc)
+
+
+def _slope_matmul_bwd(res, gy):
+    x, w, mask_r, mask_rc = res
+    # BWD-2 (Eq. 6): ∇X = ∇Y · W^{R,C} — N:M sparse along d_out, so this GEMM
+    # also runs on sparse hardware.  spmm_masked computes A·(B⊙m)ᵀ, so feed
+    # the transposed weight/mask.
+    gx = spmm_masked(gy, w.T, mask_rc.T)
+    # BWD-1 (Eq. 5) + Algorithm 1 line 13: dense GEMM, then prune to the
+    # static support so the optimizer state stays sparse.
+    gw = apply_mask(matmul(gy.T, x), mask_r)
+    return gx, gw, jnp.zeros_like(mask_r), jnp.zeros_like(mask_rc)
+
+
+slope_matmul.defvjp(_slope_matmul_fwd, _slope_matmul_bwd)
+
+
+def slope_linear(x, w, b, mask_r, mask_rc):
+    """Sparse linear with bias over a (..., d_in) input."""
+    lead = x.shape[:-1]
+    y = slope_matmul(x.reshape(-1, x.shape[-1]), w, mask_r, mask_rc)
+    return y.reshape(*lead, -1) + b
+
+
+def slope_linear_lora(x, w, b, mask_r, mask_rc, lo_down, lo_up):
+    """Sparse linear + low-rank adapter: ``Y = X·W_spᵀ + (X·Rᵀ)·Lᵀ + b``.
+
+    ``lo_down`` = R: (r, d_in); ``lo_up`` = L: (d_out, r).  The adapter path
+    uses the L1 fused matmul+add (Eq. 11-right) so ``Y2·L + Y1`` is one
+    kernel.  Gradients flow to both the sparse weight (via the SLoPe custom
+    VJP) and the adapter factors (plain autodiff).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y1 = slope_matmul(x2, w, mask_r, mask_rc)
+    t = matmul(x2, lo_down.T)
+    y = matmul_add(t, lo_up.T, y1)
+    return y.reshape(*lead, -1) + b
+
+
+def dense_linear(x, w, b):
+    """Dense linear through the same L1 matmul kernel (used for the LM head
+    and anywhere pruning is disabled)."""
+    lead = x.shape[:-1]
+    y = matmul(x.reshape(-1, x.shape[-1]), w.T)
+    return y.reshape(*lead, -1) + b
+
+
+# ---------------------------------------------------------------------------
+# Pruning variants for the Figure-9 ablation (choice of pruned matrix)
+# ---------------------------------------------------------------------------
+
+def ste_masked(v, mask):
+    """Straight-through masked value: forward sees ``v⊙mask``, gradient
+    flows to dense ``v`` (the mechanism dynamic-mask methods rely on)."""
+    return v + jax.lax.stop_gradient(v * mask - v)
+
+
+def variant_linear(x, w, b, variant, mask_w, mask_x, n: int, m: int):
+    """Linear layer under one of the Fig. 9 pruning policies.
+
+    ``variant`` ∈ {``weight_static``, ``weight_dynamic``, ``input_static``,
+    ``input_dynamic``, ``gradout_dynamic``, ``dense``}.  Dynamic variants
+    recompute a magnitude N:M mask every call (the paper stores dense values
+    and prunes on the fly); static variants use the fixed masks handed in.
+    ``gradout_dynamic`` prunes the *output gradient* — the configuration the
+    paper reports as divergent.
+    """
+    from .sparsity import magnitude_nm_mask
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if variant == "dense":
+        pass
+    elif variant == "weight_static":
+        w = w * mask_w
+    elif variant == "weight_dynamic":
+        w = ste_masked(w, magnitude_nm_mask(w, n, m))
+    elif variant == "input_static":
+        x2 = x2 * mask_x[None, :]
+    elif variant == "input_dynamic":
+        x2 = ste_masked(x2, magnitude_nm_mask(x2, n, m))
+    elif variant == "gradout_dynamic":
+        x2 = _prune_gradout(x2, n, m)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    y = matmul(x2, w.T)
+    return y.reshape(*lead, -1) + b
+
+
+@jax.custom_vjp
+def _prune_gradout(x, n: int, m: int):
+    return x
+
+
+def _pg_fwd(x, n, m):
+    return x, (n, m)
+
+
+def _pg_bwd(res, gy):
+    from .sparsity import magnitude_nm_mask
+
+    n, m = res
+    return (gy * magnitude_nm_mask(gy, n, m), None, None)
+
+
+_prune_gradout.defvjp(_pg_fwd, _pg_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Transformer sub-modules
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def causal_attention(q, k, v, n_head: int):
+    """Standard causal multi-head attention (B, S, d) → (B, S, d)."""
+    b, s, d = q.shape
+    hd = d // n_head
+
+    def split(t):
+        return t.reshape(b, s, n_head, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(causal[None, None], att, jnp.finfo(att.dtype).min)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)

@@ -1,0 +1,283 @@
+"""L2: the SLoPe GPT model — init, forward, masks, adapters.
+
+Parameters are plain nested dicts (pytrees) with stable, sorted keys so the
+AOT flatten order is deterministic and recordable in ``manifest.json``.
+
+Sparsity policy (paper §3.2): every linear inside the transformer blocks is
+N:M-pruned *except* the first linear after the input (block 0's QKV), and
+the embeddings / LM head are always dense.  ``prune_attn`` / ``prune_mlp``
+gate the module-sensitivity ablation (Table 9); the per-half N:M schemes
+come from the :class:`~compile.configs.ModelConfig` (Table 6).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .layers import (causal_attention, dense_linear, layer_norm, slope_linear,
+                     slope_linear_lora, variant_linear)
+from .sparsity import double_prune_mask, random_nm_mask
+
+# Names of the sparse (prunable) weights inside each block.
+SPARSE_WEIGHTS = ("wqkv", "wproj", "wup", "wdown")
+
+
+def _winit(key, d_out, d_in, scale=0.02):
+    return jax.random.normal(key, (d_out, d_in), jnp.float32) * scale
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    """Initialize all learnable parameters (dense values; masks separate)."""
+    keys = jax.random.split(key, 2 + cfg.n_layer)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    params = {
+        "tok_emb": jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (cfg.pos_len, d), jnp.float32) * 0.01,
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+        "blocks": {},
+    }
+    for i in range(cfg.n_layer):
+        bk = jax.random.split(keys[2 + i], 4)
+        # Residual-branch projections scaled down by depth (GPT-2 style).
+        proj_scale = 0.02 / jnp.sqrt(2.0 * cfg.n_layer)
+        params["blocks"][str(i)] = {
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "wqkv": _winit(bk[0], 3 * d, d),
+            "bqkv": jnp.zeros((3 * d,), jnp.float32),
+            "wproj": _winit(bk[1], d, d, proj_scale),
+            "bproj": jnp.zeros((d,), jnp.float32),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+            "wup": _winit(bk[2], f, d),
+            "bup": jnp.zeros((f,), jnp.float32),
+            "wdown": _winit(bk[3], d, f, proj_scale),
+            "bdown": jnp.zeros((d,), jnp.float32),
+        }
+    if not cfg.tie_embeddings:
+        params["head_w"] = _winit(keys[0], v, d)
+    return params
+
+
+def _is_pruned(cfg: ModelConfig, layer: int, wname: str) -> bool:
+    if wname in ("wqkv", "wproj") and not cfg.prune_attn:
+        return False
+    if wname in ("wup", "wdown") and not cfg.prune_mlp:
+        return False
+    # First linear following the input stays dense (paper §3.2).
+    if layer == 0 and wname == "wqkv":
+        return False
+    return True
+
+
+def init_masks(cfg: ModelConfig, params: Dict, key: jax.Array,
+               scheme: str = "random") -> Dict:
+    """Build the static ``mask_r`` / ``mask_rc`` pair for every block weight.
+
+    ``scheme``: ``random`` (SLoPe §2.1 — chosen at init, frozen forever) or
+    ``magnitude`` (used when re-masking a trained dense model).  Non-pruned
+    weights get all-ones masks so a single executable covers every ablation.
+    """
+    from .sparsity import magnitude_nm_mask
+
+    masks = {"blocks": {}}
+    keys = jax.random.split(key, cfg.n_layer)
+    for i in range(cfg.n_layer):
+        sp = cfg.sparsity_for_layer(i)
+        blk = params["blocks"][str(i)]
+        subkeys = jax.random.split(keys[i], len(SPARSE_WEIGHTS))
+        bm = {}
+        for j, wname in enumerate(SPARSE_WEIGHTS):
+            w = blk[wname]
+            if not _is_pruned(cfg, i, wname):
+                bm[wname + "_r"] = jnp.ones_like(w)
+                bm[wname + "_rc"] = jnp.ones_like(w)
+                continue
+            if scheme == "random":
+                mr = random_nm_mask(subkeys[j], w.shape, sp.n, sp.m)
+            elif scheme == "magnitude":
+                mr = magnitude_nm_mask(w, sp.n, sp.m)
+            else:
+                raise ValueError(f"unknown mask scheme {scheme!r}")
+            mrc = double_prune_mask(w, mr, sp.n, sp.m)
+            bm[wname + "_r"] = mr
+            bm[wname + "_rc"] = mrc
+        masks["blocks"][str(i)] = bm
+    return masks
+
+
+def project_params(cfg: ModelConfig, params: Dict, masks: Dict) -> Dict:
+    """Zero every pruned slot of the block weights (SLoPe stores weights
+    sparsely — Algorithm 1 lines 3–4; the rust runtime asserts pruned slots
+    are exactly 0 throughout training)."""
+    out = jax.tree_util.tree_map(lambda x: x, params)
+    for i in range(cfg.n_layer):
+        blk = dict(out["blocks"][str(i)])
+        for wname in SPARSE_WEIGHTS:
+            blk[wname] = blk[wname] * masks["blocks"][str(i)][wname + "_r"]
+        out["blocks"][str(i)] = blk
+    return out
+
+
+def init_lora(cfg: ModelConfig, key: jax.Array) -> Dict:
+    """Lazy low-rank adapters, one (L, R) pair per sparse block weight.
+
+    Standard LoRA init: downsample R ~ N(0, 0.02²), upsample L = 0, so the
+    adapter starts as an exact no-op when it is switched on at the 99% mark.
+    """
+    r = cfg.adapter_rank
+    d, f = cfg.d_model, cfg.d_ff
+    dims = {"wqkv": (3 * d, d), "wproj": (d, d), "wup": (f, d), "wdown": (d, f)}
+    lora = {"blocks": {}}
+    keys = jax.random.split(key, cfg.n_layer)
+    for i in range(cfg.n_layer):
+        subkeys = jax.random.split(keys[i], len(SPARSE_WEIGHTS))
+        bl = {}
+        for j, wname in enumerate(SPARSE_WEIGHTS):
+            d_out, d_in = dims[wname]
+            bl[wname + "_down"] = jax.random.normal(subkeys[j], (r, d_in), jnp.float32) * 0.02
+            bl[wname + "_up"] = jnp.zeros((d_out, r), jnp.float32)
+        lora["blocks"][str(i)] = bl
+    return lora
+
+
+def _block_linear(blk, masks_blk, lora_blk, x, wname, bname):
+    """Dispatch one block linear through the sparse / sparse+LoRA path."""
+    w, b = blk[wname], blk[bname]
+    mr, mrc = masks_blk[wname + "_r"], masks_blk[wname + "_rc"]
+    if lora_blk is None:
+        return slope_linear(x, w, b, mr, mrc)
+    return slope_linear_lora(x, w, b, mr, mrc,
+                             lora_blk[wname + "_down"], lora_blk[wname + "_up"])
+
+
+def forward(cfg: ModelConfig, params: Dict, masks: Dict, tokens: jnp.ndarray,
+            lora: Optional[Dict] = None, capture_norms: bool = False,
+            fig9_variant: Optional[str] = None, fig9_masks: Optional[Dict] = None):
+    """Run the decoder; returns logits (B, S, V).
+
+    ``capture_norms=True`` additionally returns the per-layer input-feature
+    L2 norms needed for Wanda calibration.  ``fig9_variant`` routes every
+    block linear through :func:`~compile.layers.variant_linear` instead of
+    the SLoPe path (pruning-target ablation).
+    """
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s, :]
+    norms = {}
+    for i in range(cfg.n_layer):
+        blk = params["blocks"][str(i)]
+        mblk = masks["blocks"][str(i)]
+        lblk = None if lora is None else lora["blocks"][str(i)]
+        h = layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+        if capture_norms:
+            norms[f"blocks.{i}.wqkv"] = jnp.sqrt((h * h).sum((0, 1)))
+        if fig9_variant is not None:
+            sp = cfg.sparsity_for_layer(i)
+            fm = fig9_masks["blocks"][str(i)] if fig9_masks else None
+            qkv = variant_linear(h, blk["wqkv"], blk["bqkv"], fig9_variant,
+                                 mblk["wqkv_r"],
+                                 fm["wqkv_x"] if fm else None, sp.n, sp.m)
+        else:
+            qkv = _block_linear(blk, mblk, lblk, h, "wqkv", "bqkv")
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        att = causal_attention(q, k, v, cfg.n_head)
+        if capture_norms:
+            norms[f"blocks.{i}.wproj"] = jnp.sqrt((att * att).sum((0, 1)))
+        if fig9_variant is not None:
+            sp = cfg.sparsity_for_layer(i)
+            fm = fig9_masks["blocks"][str(i)] if fig9_masks else None
+            proj = variant_linear(att, blk["wproj"], blk["bproj"], fig9_variant,
+                                  mblk["wproj_r"],
+                                  fm["wproj_x"] if fm else None, sp.n, sp.m)
+        else:
+            proj = _block_linear(blk, mblk, lblk, att, "wproj", "bproj")
+        x = x + proj
+        h = layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+        if capture_norms:
+            norms[f"blocks.{i}.wup"] = jnp.sqrt((h * h).sum((0, 1)))
+        if fig9_variant is not None:
+            sp = cfg.sparsity_for_layer(i)
+            fm = fig9_masks["blocks"][str(i)] if fig9_masks else None
+            up = variant_linear(h, blk["wup"], blk["bup"], fig9_variant,
+                                mblk["wup_r"], fm["wup_x"] if fm else None,
+                                sp.n, sp.m)
+        else:
+            up = _block_linear(blk, mblk, lblk, h, "wup", "bup")
+        up = jax.nn.gelu(up)
+        if capture_norms:
+            norms[f"blocks.{i}.wdown"] = jnp.sqrt((up * up).sum((0, 1)))
+        if fig9_variant is not None:
+            sp = cfg.sparsity_for_layer(i)
+            fm = fig9_masks["blocks"][str(i)] if fig9_masks else None
+            down = variant_linear(up, blk["wdown"], blk["bdown"], fig9_variant,
+                                  mblk["wdown_r"],
+                                  fm["wdown_x"] if fm else None, sp.n, sp.m)
+        else:
+            down = _block_linear(blk, mblk, lblk, up, "wdown", "bdown")
+        x = x + down
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    head_w = params["tok_emb"] if cfg.tie_embeddings else params["head_w"]
+    logits = dense_linear(x, head_w, jnp.zeros((cfg.vocab_size,), x.dtype))
+    if capture_norms:
+        return logits, norms
+    return logits
+
+
+def lm_loss(cfg: ModelConfig, params: Dict, masks: Dict, tokens: jnp.ndarray,
+            lora: Optional[Dict] = None, **fwd_kw) -> jnp.ndarray:
+    """Causal LM cross-entropy.  ``tokens``: (B, S+1) int32; the model sees
+    ``tokens[:, :-1]`` and predicts ``tokens[:, 1:]``."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, masks, inp, lora=lora, **fwd_kw)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def wanda_calibration(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray) -> Dict:
+    """One calibration forward pass returning per-layer activation norms
+    (dense masks) for Wanda one-shot pruning."""
+    ones = jax.tree_util.tree_map(jnp.ones_like, init_masks_like_ones(cfg, params))
+    _, norms = forward(cfg, params, ones, tokens, capture_norms=True)
+    return norms
+
+
+def init_masks_like_ones(cfg: ModelConfig, params: Dict) -> Dict:
+    """All-ones mask pytree (dense baseline / calibration)."""
+    masks = {"blocks": {}}
+    for i in range(cfg.n_layer):
+        blk = params["blocks"][str(i)]
+        bm = {}
+        for wname in SPARSE_WEIGHTS:
+            bm[wname + "_r"] = jnp.ones_like(blk[wname])
+            bm[wname + "_rc"] = jnp.ones_like(blk[wname])
+        masks["blocks"][str(i)] = bm
+    return masks
+
+
+def wanda_masks(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray) -> Dict:
+    """Wanda one-shot N:M masks from a trained model + calibration batch."""
+    from .sparsity import wanda_nm_mask
+
+    norms = wanda_calibration(cfg, params, tokens)
+    masks = {"blocks": {}}
+    for i in range(cfg.n_layer):
+        sp = cfg.sparsity_for_layer(i)
+        blk = params["blocks"][str(i)]
+        bm = {}
+        for wname in SPARSE_WEIGHTS:
+            w = blk[wname]
+            if not _is_pruned(cfg, i, wname):
+                bm[wname + "_r"] = jnp.ones_like(w)
+                bm[wname + "_rc"] = jnp.ones_like(w)
+                continue
+            mr = wanda_nm_mask(w, norms[f"blocks.{i}.{wname}"], sp.n, sp.m)
+            bm[wname + "_r"] = mr
+            bm[wname + "_rc"] = double_prune_mask(w, mr, sp.n, sp.m)
+        masks["blocks"][str(i)] = bm
+    return masks

@@ -1,0 +1,103 @@
+"""L1 perf analysis: VMEM footprint + MXU-utilization *estimates* for the
+Pallas kernels' BlockSpec schedules (DESIGN.md §8).
+
+interpret=True gives CPU-numpy timing only — NOT a TPU proxy — so the L1
+optimization loop works on structure: tile shapes vs the 16 MiB VMEM
+budget, MXU (128×128 systolic) occupancy of each dot, and the HBM↔VMEM
+traffic each BlockSpec implies.  Run:
+
+    cd python && python -m compile.perf_report
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .configs import MODEL_CONFIGS
+from .kernels.matmul import pick_block, pick_blocks, vmem_elems, MXU_EDGE
+
+VMEM_BYTES = 16 * 1024 * 1024  # v4/v5e per-core VMEM
+F32 = 4
+
+
+@dataclasses.dataclass
+class KernelPlan:
+    name: str
+    m: int
+    n: int
+    k: int
+
+    #: use the pre-iteration-1 (128-edge) plan for the before/after table.
+    legacy: bool = False
+
+    @property
+    def blocks(self):
+        if self.legacy:
+            return (pick_block(self.m, 128), pick_block(self.n, 128),
+                    pick_block(self.k, 128))
+        return pick_blocks(self.m, self.n, self.k)
+
+    def vmem_bytes(self) -> int:
+        bm, bn, bk = self.blocks
+        # + double-buffered input tiles (Mosaic pipelines HBM→VMEM copies).
+        base = vmem_elems(bm, bn, bk)
+        double_buf = bm * bk + bk * bn
+        return (base + double_buf) * F32
+
+    def mxu_utilization(self) -> float:
+        """Tile-quantization utilization of the 128×128 MXU per dot: how
+        full the systolic array is for the chosen block shapes."""
+        bm, bn, bk = self.blocks
+        fill = lambda d: min(d, MXU_EDGE) / MXU_EDGE
+        return fill(bm) * fill(bn)
+
+    def hbm_traffic_ratio(self) -> float:
+        """Actual HBM reads / minimal one-pass reads for the (m,n,k) grid:
+        >1 means operand re-streaming across grid steps."""
+        bm, bn, bk = self.blocks
+        gm, gn, gk = self.m // bm, self.n // bn, self.k // bk
+        # x tile read once per (i, kk) per j; w tile once per (j, kk) per i.
+        actual = gm * gk * gn * bm * bk + gn * gk * gm * bk * bn
+        minimal = self.m * self.k + self.k * self.n
+        return actual / minimal
+
+
+def report(cfg_name: str) -> None:
+    cfg = MODEL_CONFIGS[cfg_name]
+    t = cfg.batch_size * cfg.seq_len
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    plans = [
+        KernelPlan("spmm qkv (fwd)", t, 3 * d, d),
+        KernelPlan("spmm proj (fwd)", t, d, d),
+        KernelPlan("spmm up (fwd)", t, f, d),
+        KernelPlan("spmm down (fwd)", t, d, f),
+        KernelPlan("spmm bwd2 up", t, d, f),
+        KernelPlan("matmul gradW up", f, d, t),
+        KernelPlan("lm head", t, v, d),
+    ]
+    print(f"\n== {cfg.name}: batch·seq = {t}, d = {d}, ffn = {f} ==")
+    legacy_reread = sum(KernelPlan(p.name, p.m, p.n, p.k, legacy=True).hbm_traffic_ratio()
+                        for p in plans) / len(plans)
+    new_reread = sum(p.hbm_traffic_ratio() for p in plans) / len(plans)
+    print(f"   mean HBM re-read: {legacy_reread:.1f}x (128-tiles) → {new_reread:.1f}x (current)")
+    print(f"{'kernel':<20} {'blocks':<16} {'VMEM':>10} {'of 16MiB':>9} "
+          f"{'MXU util':>9} {'HBM re-read':>12}")
+    worst = 0.0
+    for p in plans:
+        vb = p.vmem_bytes()
+        worst = max(worst, vb / VMEM_BYTES)
+        print(f"{p.name:<20} {str(p.blocks):<16} {vb/1024:>8.0f}KiB "
+              f"{vb/VMEM_BYTES:>8.1%} {p.mxu_utilization():>9.1%} "
+              f"{p.hbm_traffic_ratio():>11.1f}x")
+    assert worst <= 1.0, "VMEM budget exceeded — shrink blocks"
+
+
+def main() -> None:
+    for name in ("gpt-nano", "gpt-micro", "gpt-mini"):
+        report(name)
+    print("\nAll kernel plans fit VMEM with double buffering; MXU util is "
+          "100% whenever the model dim ≥ 128 (nano's d=128 edge included).")
+
+
+if __name__ == "__main__":
+    main()

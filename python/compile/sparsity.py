@@ -1,0 +1,137 @@
+"""N:M sparsity mask utilities (L2, pure jnp — traceable and exportable).
+
+Terminology follows the paper (§2.1): for a weight ``W ∈ R^{d_out × d_in}``
+used as ``Y = X Wᵀ``,
+
+* **row-wise pruning** (``W^R``) prunes along ``d_in`` — every group of M
+  consecutive elements *within a row* keeps at most N non-zeros.  This is the
+  reduction dimension of the forward GEMM (Eq. 4).
+* **double pruning** (``W^{R,C}``) takes the already row-pruned matrix and
+  prunes along ``d_out`` (the reduction dimension of BWD-2, Eq. 6) with the
+  same N:M scheme, introducing the extra zeros quantified by Lemma 2.1.
+
+Masks are float (0./1.) tensors so they can flow through the AOT-exported
+HLO as ordinary buffers and be applied with element-wise multiply.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _topn_group_mask(scores: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Keep the top-``n`` scores in each group of ``m`` along the last axis.
+
+    ``scores`` must have ``last_dim % m == 0``.  Ties are broken by position
+    (earlier element wins), matching a stable top-k.
+    """
+    *lead, d = scores.shape
+    if d % m != 0:
+        raise ValueError(f"last dim {d} not divisible by group size {m}")
+    g = scores.reshape(*lead, d // m, m)
+    # Stable ranking: rank[i] = number of elements strictly greater, plus the
+    # number of equal elements appearing earlier.
+    idx = jnp.arange(m)
+    gt = (g[..., None, :] > g[..., :, None]).sum(-1)
+    eq_before = ((g[..., None, :] == g[..., :, None]) & (idx[None, :] < idx[:, None])).sum(-1)
+    rank = gt + eq_before
+    mask = (rank < n).astype(scores.dtype)
+    return mask.reshape(*lead, d)
+
+
+def random_nm_mask(key: jax.Array, shape, n: int, m: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Static random N:M mask along the last axis (SLoPe init policy §2.1).
+
+    Every element has equal probability of being kept, satisfying the
+    assumption of Lemma 2.1 / Theorem 2.2.
+    """
+    scores = jax.random.uniform(key, shape)
+    return _topn_group_mask(scores, n, m).astype(dtype)
+
+
+def magnitude_nm_mask(w: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Magnitude N:M mask along the last axis (used by SR-STE / dynamic prune)."""
+    return _topn_group_mask(jnp.abs(w), n, m).astype(w.dtype)
+
+
+def wanda_nm_mask(w: jnp.ndarray, act_norm: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Wanda (Sun et al. 2023) one-shot N:M mask: score = |W| · ‖X_col‖₂.
+
+    ``act_norm`` is the per-input-feature activation L2 norm, shape
+    ``(d_in,)`` for ``w`` of shape ``(d_out, d_in)``.
+    """
+    scores = jnp.abs(w) * act_norm[None, :]
+    return _topn_group_mask(scores, n, m).astype(w.dtype)
+
+
+def double_prune_mask(w: jnp.ndarray, mask_r: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Compute the ``W^{R,C}`` mask from a row-pruned weight (§2.1).
+
+    The row-pruned weight ``w * mask_r`` is transposed and N:M pruned along
+    its new last axis (= ``d_out``) by magnitude; already-zero elements
+    cannot win a slot unless the whole group is zero-padded, in which case
+    keeping zeros is harmless.  Returns a mask with the same layout as ``w``
+    (``d_out × d_in``); the double-pruned weight is ``w * mask_rc``.
+    """
+    wr_t = (w * mask_r).T  # (d_in, d_out): prune along d_out
+    mask_c = _topn_group_mask(jnp.abs(wr_t), n, m)
+    # Intersect with the row mask: double pruning only removes, never adds.
+    return (mask_c.T * mask_r).astype(w.dtype)
+
+
+def imposed_sparsity(n: int, m: int) -> float:
+    """Closed-form extra zeros from double pruning (Lemma 2.1, Eq. 8).
+
+    Returns ``D(A^R) - D(A^{R,C})`` for a randomly initialized matrix: the
+    expected fraction of elements newly zeroed by the column-wise pass.
+    Paper values: 1:2 → 12.5%, 2:4 → 9.375%, 2:8 → 3.39%.
+    """
+    from math import comb
+
+    s = n / m
+    total = 0.0
+    for j in range(n + 1, m + 1):
+        total += comb(m, j) * s**j * (1 - s) ** (m - j) * (j - n) / m
+    return total
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def compress_nm(w_masked: jnp.ndarray, mask: jnp.ndarray, n: int, m: int):
+    """Pack an N:M-masked matrix into the compressed (values, indices) layout.
+
+    For ``w`` of shape ``(d_out, d_in)`` returns
+
+    * ``values``  — ``(d_out, d_in * n / m)`` kept values, group-major;
+    * ``indices`` — same shape, int32 absolute column index of each value.
+
+    Groups with fewer than ``n`` survivors are padded with zeros pointing at
+    the first masked slot (the decompress path is insensitive to the pad
+    target because the padded value is 0).  Mirrors Eq. 7's index metadata
+    and the rust `sparsity::compressed` format bit-for-bit in semantics.
+    """
+    d_out, d_in = w_masked.shape
+    g = d_in // m
+    wm = (w_masked * mask).reshape(d_out, g, m)
+    mk = mask.reshape(d_out, g, m)
+    # Order kept elements first (stable by position) using argsort on ~mask.
+    order = jnp.argsort(1.0 - mk, axis=-1, stable=True)[..., :n]  # (d_out, g, n)
+    vals = jnp.take_along_axis(wm, order, axis=-1)
+    base = (jnp.arange(g, dtype=jnp.int32) * m)[None, :, None]
+    idx = order.astype(jnp.int32) + base
+    return vals.reshape(d_out, g * n), idx.reshape(d_out, g * n)
+
+
+def decompress_nm(values: jnp.ndarray, indices: jnp.ndarray, d_in: int) -> jnp.ndarray:
+    """Inverse of :func:`compress_nm` — scatter values back to dense."""
+    d_out = values.shape[0]
+    out = jnp.zeros((d_out, d_in), values.dtype)
+    rows = jnp.arange(d_out)[:, None]
+    return out.at[rows, indices].add(values)
+
+
+def density(x: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of non-zero elements."""
+    return jnp.mean((x != 0).astype(jnp.float32))

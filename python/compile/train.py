@@ -1,0 +1,323 @@
+"""L2: optimizer + AOT-exportable train/eval step builders.
+
+Everything here is a pure function of explicit state so the lowered HLO has
+a stable (state-in → state-out) signature the rust coordinator can drive:
+
+    train_step(tokens, step, params, opt, masks[, lora, lora_opt])
+        → (loss, params', opt'[, lora', lora_opt'])
+
+The optimizer is AdamW with the sparse-aware semantics of Algorithm 1:
+gradients arrive already masked (line 13, via the SLoPe custom VJP), the
+weight-decay combine ``(1/γ)·∇W + α·W`` happens on the sparse support
+(line 15, the ``sparseAdd`` kernel), and updates are re-masked so weights
+never leave the static support (lines 17–18).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, TrainConfig
+from .model import SPARSE_WEIGHTS, forward, lm_loss
+from .sparsity import magnitude_nm_mask
+
+
+# ---------------------------------------------------------------------------
+# AdamW with masked updates
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params: Dict) -> Dict:
+    """First/second Adam moments (zeros) + scalar step counter."""
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.float32)}
+
+
+def lr_schedule(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup → cosine decay to 10% of peak."""
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps) /
+                    jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * prog)
+    return tc.lr * warm * cos
+
+
+_NO_DECAY_SUFFIXES = ("_g", "_b", "lnf_g", "lnf_b", "pos_emb")
+
+
+def _decay_coeff(path: str, tc: TrainConfig) -> float:
+    """Decoupled weight decay on matrices only (standard GPT recipe)."""
+    leaf = path.split(".")[-1]
+    if leaf.startswith("b") or leaf.endswith("_g") or leaf.endswith("_b"):
+        return 0.0
+    if leaf in ("pos_emb",):
+        return 0.0
+    return tc.weight_decay
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def adamw_update(tc: TrainConfig, params: Dict, grads: Dict, opt: Dict,
+                 update_masks: Optional[Dict] = None) -> Tuple[Dict, Dict]:
+    """One AdamW step.  ``update_masks`` (same pytree as ``params``, or None
+    per-leaf) constrains a leaf's update to the sparse support — the
+    Algorithm-1 guarantee that pruned slots stay exactly zero and their
+    optimizer state stays empty (memory model: 2×-reduced Adam moments)."""
+    step = opt["step"] + 1.0
+    lr = lr_schedule(tc, step)
+    b1, b2, eps = tc.beta1, tc.beta2, tc.eps
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    flat_mask = (jax.tree_util.tree_leaves(update_masks, is_leaf=lambda x: x is None)
+                 if update_masks is not None else [None] * len(flat_g))
+
+    # Global-norm gradient clip.
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in flat_g) + 1e-12)
+    clip = jnp.minimum(1.0, tc.grad_clip / gnorm)
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v, msk in zip(flat_p, flat_g, flat_m, flat_v, flat_mask):
+        g = g * clip
+        # Algorithm 1 line 15: weight-decay combine on the sparse support.
+        wd = _decay_coeff(_path_str(path), tc)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * p)
+        if msk is not None:
+            upd = upd * msk  # lines 17–18: update only stored non-zeros
+            m = m * msk
+            v = v * msk
+        new_p.append(p - upd)
+        new_m.append(m)
+        new_v.append(v)
+
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    opt = {"m": jax.tree_util.tree_unflatten(treedef, new_m),
+           "v": jax.tree_util.tree_unflatten(treedef, new_v), "step": step}
+    return params, opt
+
+
+def update_masks_from(masks: Dict, params: Dict) -> Dict:
+    """Per-parameter update masks: ``mask_r`` for sparse block weights,
+    ``None`` (unconstrained) elsewhere."""
+    def build(p):
+        res = {}
+        for k, v in p.items():
+            if isinstance(v, dict):
+                res[k] = build(v)
+            else:
+                res[k] = None
+        return res
+
+    res = build(params)
+    for i, blk in masks["blocks"].items():
+        for wname in SPARSE_WEIGHTS:
+            res["blocks"][i][wname] = blk[wname + "_r"]
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Train steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """SLoPe sparse-phase step (the 99%): Eq. 4–6 through the custom VJP."""
+
+    def step_fn(tokens, params, opt, masks):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, masks, tokens))(params)
+        params, opt = adamw_update(tc, params, grads, opt,
+                                   update_masks_from(masks, params))
+        return loss, params, opt
+
+    return step_fn
+
+
+def make_train_step_lora(cfg: ModelConfig, tc: TrainConfig):
+    """Lazy-adapter phase step (the final 1%): sparse weights AND adapters
+    both train; adapter gradients are plain autodiff."""
+
+    def step_fn(tokens, params, opt, masks, lora, lora_opt):
+        def loss_fn(p, lo):
+            return lm_loss(cfg, p, masks, tokens, lora=lo)
+
+        loss, (gp, gl) = jax.value_and_grad(loss_fn, argnums=(0, 1))(params, lora)
+        params, opt = adamw_update(tc, params, gp, opt,
+                                   update_masks_from(masks, params))
+        lora, lora_opt = adamw_update(tc, lora, gl, lora_opt)
+        return loss, params, opt, lora, lora_opt
+
+    return step_fn
+
+
+def make_eval_step(cfg: ModelConfig, with_lora: bool = False):
+    """Validation negative-log-likelihood (perplexity = exp(loss))."""
+
+    if with_lora:
+        def step_fn(tokens, params, masks, lora):
+            return lm_loss(cfg, params, masks, tokens, lora=lora)
+    else:
+        def step_fn(tokens, params, masks):
+            return lm_loss(cfg, params, masks, tokens)
+    return step_fn
+
+
+def make_forward(cfg: ModelConfig, with_lora: bool = False):
+    """Inference logits (B, S, V) — the serving path; LoRA uses the fused
+    Eq.-11 kernels inside ``slope_linear_lora``."""
+
+    if with_lora:
+        def fwd(tokens, params, masks, lora):
+            return forward(cfg, params, masks, tokens, lora=lora)
+    else:
+        def fwd(tokens, params, masks):
+            return forward(cfg, params, masks, tokens)
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Baseline: Extended SR-STE (dynamic magnitude masks + decay regularizer)
+# ---------------------------------------------------------------------------
+
+def make_train_step_srste(cfg: ModelConfig, tc: TrainConfig):
+    """Extended SR-STE (Zhou et al. '21, extended by FST to Adam-family
+    optimizers — Listing 2 of the paper).
+
+    Dense weights are stored; every step a fresh magnitude N:M mask prunes
+    the forward weight; the straight-through gradient additionally receives
+    ``γ_w · (mask̄ ⊙ W)`` pushing pruned weights toward zero.  No update
+    masking — the whole point of the comparison is that SR-STE spends budget
+    updating weights that end up pruned (paper Fig. 4).
+    """
+
+    def loss_fn(params, tokens):
+        # Rebuild masks from current magnitudes (dynamic, per-iteration).
+        masks = {"blocks": {}}
+        from .model import _is_pruned
+        for i in range(cfg.n_layer):
+            sp = cfg.sparsity_for_layer(i)
+            blk = params["blocks"][str(i)]
+            bm = {}
+            for wname in SPARSE_WEIGHTS:
+                if _is_pruned(cfg, i, wname):
+                    mr = magnitude_nm_mask(blk[wname], sp.n, sp.m)
+                else:
+                    mr = jnp.ones_like(blk[wname])
+                bm[wname + "_r"] = mr
+                bm[wname + "_rc"] = mr  # STE path: same mask both directions
+            masks["blocks"][str(i)] = bm
+
+        # Straight-through: forward sees masked weights, grads flow dense.
+        from .layers import ste_masked
+        ste_params = jax.tree_util.tree_map(lambda x: x, params)
+        for i in range(cfg.n_layer):
+            blk = dict(ste_params["blocks"][str(i)])
+            for wname in SPARSE_WEIGHTS:
+                blk[wname] = ste_masked(blk[wname], masks["blocks"][str(i)][wname + "_r"])
+            ste_params["blocks"][str(i)] = blk
+        ones = _ones_masks(cfg, params)
+        return lm_loss(cfg, ste_params, ones, tokens), masks
+
+    def step_fn(tokens, params, opt):
+        (loss, masks), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, tokens)
+        # SR-STE decay term: γ_w · (1 - mask) ⊙ W added to the gradient.
+        for i in range(cfg.n_layer):
+            gblk = dict(grads["blocks"][str(i)])
+            for wname in SPARSE_WEIGHTS:
+                mr = masks["blocks"][str(i)][wname + "_r"]
+                w = params["blocks"][str(i)][wname]
+                gblk[wname] = gblk[wname] + tc.srste_decay * (1.0 - mr) * w
+            grads["blocks"][str(i)] = gblk
+        params, opt = adamw_update(tc, params, grads, opt)
+        return loss, params, opt
+
+    return step_fn
+
+
+def _ones_masks(cfg: ModelConfig, params: Dict) -> Dict:
+    from .model import init_masks_like_ones
+    return init_masks_like_ones(cfg, params)
+
+
+def srste_mask_snapshot(cfg: ModelConfig, params: Dict) -> Dict:
+    """Current magnitude masks of an SR-STE run — the rust coordinator
+    differences consecutive snapshots to reproduce the Figure-4 mask-churn
+    curve."""
+    from .model import _is_pruned
+    masks = {"blocks": {}}
+    for i in range(cfg.n_layer):
+        sp = cfg.sparsity_for_layer(i)
+        blk = params["blocks"][str(i)]
+        bm = {}
+        for wname in SPARSE_WEIGHTS:
+            if _is_pruned(cfg, i, wname):
+                bm[wname] = magnitude_nm_mask(blk[wname], sp.n, sp.m)
+            else:
+                bm[wname] = jnp.ones_like(blk[wname])
+        masks["blocks"][str(i)] = bm
+    return masks
+
+
+# ---------------------------------------------------------------------------
+# Figure-9 ablation steps (choice of pruned matrix)
+# ---------------------------------------------------------------------------
+
+FIG9_VARIANTS = ("dense", "weight_static", "weight_dynamic", "input_static",
+                 "input_dynamic", "gradout_dynamic")
+
+
+def make_fig9_masks(cfg: ModelConfig, key: jax.Array) -> Dict:
+    """Static input-feature masks for the ``input_static`` variant: one N:M
+    mask vector per linear input dimension."""
+    dims = {"wqkv": cfg.d_model, "wproj": cfg.d_model,
+            "wup": cfg.d_model, "wdown": cfg.d_ff}
+    out = {"blocks": {}}
+    keys = jax.random.split(key, cfg.n_layer)
+    for i in range(cfg.n_layer):
+        sp = cfg.sparsity_for_layer(i)
+        sub = jax.random.split(keys[i], 4)
+        out["blocks"][str(i)] = {
+            wname + "_x": random_nm_mask_1d(sub[j], dims[wname], sp.n, sp.m)
+            for j, wname in enumerate(SPARSE_WEIGHTS)
+        }
+    return out
+
+
+def random_nm_mask_1d(key, d, n, m):
+    from .sparsity import random_nm_mask
+    return random_nm_mask(key, (1, d), n, m)[0]
+
+
+def make_train_step_fig9(cfg: ModelConfig, tc: TrainConfig, variant: str):
+    """Train step where the pruned matrix is chosen by ``variant``."""
+    assert variant in FIG9_VARIANTS, variant
+
+    def step_fn(tokens, params, opt, masks, fig9_masks):
+        def loss_fn(p):
+            return lm_loss(cfg, p, masks, tokens, fig9_variant=variant,
+                           fig9_masks=fig9_masks)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        upd = update_masks_from(masks, params) if variant == "weight_static" else None
+        params, opt = adamw_update(tc, params, grads, opt, upd)
+        return loss, params, opt
+
+    return step_fn

@@ -1,0 +1,14 @@
+"""Shared pytest fixtures/settings for the SLoPe build-time test suite."""
+
+import jax
+import pytest
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep hypothesis example counts sane.
+settings.register_profile("slope", max_examples=12, deadline=None)
+settings.load_profile("slope")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

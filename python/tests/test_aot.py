@@ -1,0 +1,106 @@
+"""AOT manifest contract tests (run after `make artifacts`).
+
+These validate the python→rust interface without touching XLA: flattened
+name/shape/dtype order, state round-trip compatibility between executables,
+and export-plan coverage.
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "index.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def load(config):
+    with open(os.path.join(ART, config, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_index_covers_all_export_plan_configs():
+    from compile.aot import EXPORT_PLAN
+
+    with open(os.path.join(ART, "index.json")) as f:
+        index = json.load(f)
+    assert set(index) == set(EXPORT_PLAN)
+
+
+def test_train_step_state_roundtrip():
+    m = load("gpt-nano")
+    ts = m["executables"]["train_step"]
+    ins = {t["name"]: (t["shape"], t["dtype"]) for t in ts["inputs"]}
+    for out in ts["outputs"]:
+        if out["name"].startswith(("params.", "opt.")):
+            assert out["name"] in ins, f"output {out['name']} has no matching input"
+            assert ins[out["name"]] == (out["shape"], out["dtype"])
+
+
+def test_init_provides_everything_train_step_needs():
+    m = load("gpt-nano")
+    init_outs = {t["name"] for t in m["executables"]["init"]["outputs"]}
+    for t in m["executables"]["train_step"]["inputs"]:
+        if t["name"] != "tokens":
+            assert t["name"] in init_outs, f"train_step input {t['name']} not initialized"
+
+
+def test_lora_state_roundtrip_through_lora_step():
+    m = load("gpt-nano")
+    li = {t["name"] for t in m["executables"]["lora_init"]["outputs"]}
+    tsl = m["executables"]["train_step_lora"]
+    lora_ins = {t["name"] for t in tsl["inputs"] if t["name"].startswith("lora")}
+    assert lora_ins == li
+
+
+def test_tokens_shapes():
+    m = load("gpt-nano")
+    c = m["config"]
+    ts_tok = next(t for t in m["executables"]["train_step"]["inputs"] if t["name"] == "tokens")
+    assert ts_tok["shape"] == [c["batch_size"], c["seq_len"] + 1]
+    assert ts_tok["dtype"] == "int32"
+    fwd_tok = next(t for t in m["executables"]["forward"]["inputs"] if t["name"] == "tokens")
+    assert fwd_tok["shape"] == [c["batch_size"], c["seq_len"]]
+
+
+def test_hlo_files_exist_and_are_text():
+    m = load("gpt-nano")
+    for name, exe in m["executables"].items():
+        path = os.path.join(ART, "gpt-nano", exe["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_rank_variant_configs_differ_only_in_adapter_rank():
+    base = load("bert-phase2")["config"]
+    r2 = load("bert-phase2-r2")["config"]
+    r32 = load("bert-phase2-r32")["config"]
+    for k in base:
+        if k in ("name", "adapter_rank"):
+            continue
+        assert base[k] == r2[k] == r32[k], k
+    assert (r2["adapter_rank"], base["adapter_rank"], r32["adapter_rank"]) == (2, 8, 32)
+
+
+def test_phase_transfer_param_shapes_match():
+    """bert-phase1 → bert-phase2 checkpoint transfer requires identical
+    params.* shapes (pos_emb sized to max_seq)."""
+    p1 = {t["name"]: t["shape"]
+          for t in load("bert-phase1")["executables"]["train_step"]["inputs"]
+          if t["name"].startswith("params.")}
+    p2 = {t["name"]: t["shape"]
+          for t in load("bert-phase2")["executables"]["train_step"]["inputs"]
+          if t["name"].startswith("params.")}
+    assert p1 == p2
+
+
+def test_srste_step_has_no_mask_inputs():
+    m = load("gpt-nano")
+    srste = m["executables"]["train_step_srste"]
+    assert not any(t["name"].startswith("masks.") for t in srste["inputs"])

@@ -1,0 +1,224 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-square, multi-tile grids and odd
+group counts) and dtypes; assert_allclose against ref.py is THE correctness
+signal for the kernels the AOT pipeline bakes into the HLO artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import sparsity as sp
+from compile.kernels import (apply_mask, lora_forward_fused, lora_forward_naive,
+                             matmul, matmul_add, matmul_add_blocked,
+                             matmul_blocked, prune_and_compress, sparse_add,
+                             spmm_compressed, spmm_masked)
+from compile.kernels import ref
+
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul family
+# ---------------------------------------------------------------------------
+
+dims = st.sampled_from([4, 8, 12, 16, 24, 32, 64])
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**30))
+def test_matmul_blocked_matches_ref(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = _rand(kx, m, k), _rand(kw, k, n)
+    np.testing.assert_allclose(matmul_blocked(x, w), ref.matmul_ref(x, w), **TOL)
+
+
+@given(m=dims, k=dims, n=dims, bm=st.sampled_from([2, 4]), bk=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**30))
+def test_matmul_multi_tile_grids(m, k, n, bm, bk, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = _rand(kx, m, k), _rand(kw, k, n)
+    out = matmul_blocked(x, w, bm=bm, bk=bk, bn=min(n, 4))
+    np.testing.assert_allclose(out, ref.matmul_ref(x, w), **TOL)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**30))
+def test_matmul_add_fused(m, k, n, seed):
+    kx, kw, kc = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w, c = _rand(kx, m, k), _rand(kw, k, n), _rand(kc, m, n)
+    np.testing.assert_allclose(matmul_add_blocked(x, w, c),
+                               ref.matmul_add_ref(x, w, c), **TOL)
+
+
+def test_matmul_grad_is_pallas_and_correct():
+    x = _rand(jax.random.PRNGKey(0), 8, 16)
+    w = _rand(jax.random.PRNGKey(1), 16, 12)
+    gx, gw = jax.grad(lambda a, b: matmul(a, b).sum(), argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, jnp.ones((8, 12)) @ w.T, **TOL)
+    np.testing.assert_allclose(gw, x.T @ jnp.ones((8, 12)), **TOL)
+
+
+def test_matmul_add_grads():
+    x = _rand(jax.random.PRNGKey(0), 4, 8)
+    w = _rand(jax.random.PRNGKey(1), 8, 6)
+    c = _rand(jax.random.PRNGKey(2), 4, 6)
+    gx, gw, gc = jax.grad(lambda a, b, cc: matmul_add(a, b, cc).sum(),
+                          argnums=(0, 1, 2))(x, w, c)
+    np.testing.assert_allclose(gc, jnp.ones((4, 6)), **TOL)
+    np.testing.assert_allclose(gx, jnp.ones((4, 6)) @ w.T, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# N:M SpMM
+# ---------------------------------------------------------------------------
+
+nm = st.sampled_from([(1, 2), (2, 4), (2, 8), (4, 8)])
+
+
+@given(b=dims, nm=nm, groups=st.sampled_from([2, 3, 4, 8]),
+       dout=dims, seed=st.integers(0, 2**30))
+def test_spmm_masked_matches_ref(b, nm, groups, dout, seed):
+    n, m = nm
+    din = groups * m
+    kx, kw, km = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w = _rand(kx, b, din), _rand(kw, dout, din)
+    mask = sp.random_nm_mask(km, w.shape, n, m)
+    np.testing.assert_allclose(spmm_masked(x, w, mask),
+                               ref.spmm_masked_ref(x, w, mask), **TOL)
+
+
+@given(b=dims, nm=nm, groups=st.sampled_from([2, 4, 8]), dout=dims,
+       seed=st.integers(0, 2**30))
+def test_spmm_compressed_matches_masked(b, nm, groups, dout, seed):
+    """Compressed layout (Eq. 7) must be bit-equivalent to masked-dense."""
+    n, m = nm
+    din = groups * m
+    kx, kw, km = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w = _rand(kx, b, din), _rand(kw, dout, din)
+    mask = sp.random_nm_mask(km, w.shape, n, m)
+    vals, idx = sp.compress_nm(w * mask, mask, n, m)
+    np.testing.assert_allclose(spmm_compressed(x, vals, idx),
+                               ref.spmm_masked_ref(x, w, mask), **TOL)
+    np.testing.assert_allclose(
+        ref.spmm_compressed_ref(x, vals, idx, din),
+        ref.spmm_masked_ref(x, w, mask), **TOL)
+
+
+def test_spmm_masked_tile_invariance():
+    """Tiling must not change the result (§2.4 square-tile optimization)."""
+    x = _rand(jax.random.PRNGKey(0), 16, 32)
+    w = _rand(jax.random.PRNGKey(1), 64, 32)
+    mask = sp.random_nm_mask(jax.random.PRNGKey(2), w.shape, 2, 4)
+    base = ref.spmm_masked_ref(x, w, mask)
+    for bm, bn, bk in [(16, 64, 32), (8, 8, 8), (4, 16, 16), (16, 32, 4)]:
+        np.testing.assert_allclose(spmm_masked(x, w, mask, bm=bm, bn=bn, bk=bk),
+                                   base, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# LoRA fusion (Eq. 11)
+# ---------------------------------------------------------------------------
+
+@given(b=dims, dout=dims, groups=st.sampled_from([2, 4]),
+       r=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 2**30))
+def test_lora_naive_and_fused_match_ref(b, dout, groups, r, seed):
+    din = groups * 4
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x, w = _rand(keys[0], b, din), _rand(keys[1], dout, din)
+    mask = sp.random_nm_mask(keys[2], w.shape, 2, 4)
+    lo_l, lo_r = _rand(keys[3], dout, r), _rand(keys[4], r, din)
+    want = ref.lora_ref(x, w, mask, lo_l, lo_r)
+    np.testing.assert_allclose(lora_forward_naive(x, w, mask, lo_l, lo_r), want, **TOL)
+    np.testing.assert_allclose(lora_forward_fused(x, w, mask, lo_l, lo_r), want, **TOL)
+
+
+def test_lora_fused_equals_naive_large():
+    keys = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = _rand(keys[0], 32, 128)
+    w = _rand(keys[1], 256, 128)
+    mask = sp.random_nm_mask(keys[2], w.shape, 2, 4)
+    lo_l, lo_r = _rand(keys[3], 256, 16), _rand(keys[4], 16, 128)
+    np.testing.assert_allclose(lora_forward_fused(x, w, mask, lo_l, lo_r),
+                               lora_forward_naive(x, w, mask, lo_l, lo_r),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prune&compress / sparse add (Algorithm 1 helpers)
+# ---------------------------------------------------------------------------
+
+@given(dout=dims, groups=st.sampled_from([2, 4, 8]), nm=nm,
+       seed=st.integers(0, 2**30))
+def test_prune_and_compress(dout, groups, nm, seed):
+    n, m = nm
+    din = groups * m
+    kg, kw, km = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g, w = _rand(kg, dout, din), _rand(kw, dout, din)
+    mask = sp.random_nm_mask(km, w.shape, n, m)
+    _, idx = sp.compress_nm(w * mask, mask, n, m)
+    np.testing.assert_allclose(prune_and_compress(g, idx),
+                               ref.prune_and_compress_ref(g, idx))
+
+
+@given(rows=dims, cols=dims, beta=st.floats(-2, 2), gamma=st.floats(-2, 2),
+       seed=st.integers(0, 2**30))
+def test_sparse_add(rows, cols, beta, gamma, seed):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = _rand(ka, rows, cols), _rand(kb, rows, cols)
+    np.testing.assert_allclose(sparse_add(a, b, beta, gamma),
+                               ref.sparse_add_ref(a, b, beta, gamma),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_apply_mask():
+    g = _rand(jax.random.PRNGKey(0), 16, 32)
+    mask = sp.random_nm_mask(jax.random.PRNGKey(1), g.shape, 2, 4)
+    np.testing.assert_allclose(apply_mask(g, mask), g * mask)
+
+
+# ---------------------------------------------------------------------------
+# The full SLoPe linear contract (Eq. 4–6) through the custom VJP
+# ---------------------------------------------------------------------------
+
+def test_slope_matmul_eq456():
+    from compile.layers import slope_matmul
+
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = _rand(keys[0], 8, 16)
+    w = _rand(keys[1], 12, 16)
+    mask_r = sp.random_nm_mask(keys[2], w.shape, 2, 4)
+    mask_rc = sp.double_prune_mask(w, mask_r, 2, 4)
+    gy = _rand(jax.random.PRNGKey(4), 8, 12)
+
+    y, vjp = jax.vjp(lambda xx, ww: slope_matmul(xx, ww, mask_r, mask_rc), x, w)
+    gx, gw = vjp(gy)
+    want_y, want_gx, want_gw = ref.slope_linear_ref(x, w, mask_r, mask_rc, gy)
+    np.testing.assert_allclose(y, want_y, **TOL)
+    np.testing.assert_allclose(gx, want_gx, **TOL)
+    np.testing.assert_allclose(gw, want_gw, **TOL)
+    # Invariant: grad-W support never exceeds the static row mask.
+    assert float(jnp.abs(gw * (1 - mask_r)).max()) == 0.0
+
+
+def test_double_prune_uses_fewer_nonzeros_than_row_prune():
+    """gx through mask_rc must differ from gx through mask_r exactly on the
+    double-pruned (red, Figure 1) positions."""
+    from compile.layers import slope_matmul
+
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = _rand(keys[0], 4, 32)
+    w = _rand(keys[1], 16, 32)
+    mask_r = sp.random_nm_mask(keys[2], w.shape, 2, 4)
+    mask_rc = sp.double_prune_mask(w, mask_r, 2, 4)
+    assert float(mask_rc.sum()) < float(mask_r.sum())
+    gy = _rand(jax.random.PRNGKey(6), 4, 16)
+    _, vjp = jax.vjp(lambda xx: slope_matmul(xx, w, mask_r, mask_rc), x)
+    (gx,) = vjp(gy)
+    np.testing.assert_allclose(gx, gy @ (w * mask_rc), **TOL)

@@ -1,0 +1,135 @@
+"""L2 model correctness: shapes, sparsity policy, adapter no-op init,
+mask plumbing, Wanda calibration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import sparsity as sp
+from compile.configs import ModelConfig, SparsityConfig, get_model_config
+
+
+@pytest.fixture(scope="module")
+def nano():
+    cfg = get_model_config("gpt-nano")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    masks = M.init_masks(cfg, params, key)
+    return cfg, params, masks
+
+
+def test_param_count_close_to_formula(nano):
+    cfg, params, _ = nano
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert abs(n - cfg.n_params()) / cfg.n_params() < 0.05
+
+
+def test_forward_shapes_and_finiteness(nano):
+    cfg, params, masks = nano
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, cfg.seq_len), 0, cfg.vocab_size)
+    logits = M.forward(cfg, params, masks, tok)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality(nano):
+    """Changing a future token must not affect past logits."""
+    cfg, params, masks = nano
+    tok = jax.random.randint(jax.random.PRNGKey(2), (1, cfg.seq_len), 0, cfg.vocab_size)
+    tok2 = tok.at[0, -1].set((tok[0, -1] + 1) % cfg.vocab_size)
+    l1 = M.forward(cfg, params, masks, tok)
+    l2 = M.forward(cfg, params, masks, tok2)
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-4, atol=1e-5)
+    assert float(jnp.abs(l1[0, -1] - l2[0, -1]).max()) > 1e-6
+
+
+def test_mask_policy_first_layer_qkv_dense(nano):
+    """Paper §3.2: first linear after the input is dense; everything else 2:4."""
+    cfg, _, masks = nano
+    b0 = masks["blocks"]["0"]
+    assert float(b0["wqkv_r"].mean()) == 1.0
+    assert abs(float(b0["wproj_r"].mean()) - 0.5) < 1e-6
+    for i in range(1, cfg.n_layer):
+        bm = masks["blocks"][str(i)]
+        for wname in M.SPARSE_WEIGHTS:
+            assert abs(float(bm[wname + "_r"].mean()) - 0.5) < 1e-6
+            assert float(bm[wname + "_rc"].mean()) <= float(bm[wname + "_r"].mean())
+
+
+def test_mixed_sparsity_config():
+    cfg = get_model_config("gpt-nano-24-28")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    masks = M.init_masks(cfg, params, key)
+    # First half 2:4 (density .5), second half 2:8 (density .25).
+    assert abs(float(masks["blocks"]["1"]["wup_r"].mean()) - 0.5) < 1e-6
+    last = str(cfg.n_layer - 1)
+    assert abs(float(masks["blocks"][last]["wup_r"].mean()) - 0.25) < 1e-6
+
+
+def test_module_scope_mlponly():
+    cfg = get_model_config("gpt-nano-mlponly")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    masks = M.init_masks(cfg, params, key)
+    bm = masks["blocks"]["2"]
+    assert float(bm["wqkv_r"].mean()) == 1.0  # attention untouched
+    assert abs(float(bm["wup_r"].mean()) - 0.5) < 1e-6  # MLP pruned
+
+
+def test_lora_init_is_exact_noop(nano):
+    """Upsample factor starts at zero ⇒ switching adapters on at the 99%
+    mark must not change the function (lazy = seamless)."""
+    cfg, params, masks = nano
+    lora = M.init_lora(cfg, jax.random.PRNGKey(3))
+    tok = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, cfg.vocab_size)
+    base = M.forward(cfg, params, masks, tok)
+    with_lora = M.forward(cfg, params, masks, tok, lora=lora)
+    np.testing.assert_allclose(base, with_lora, rtol=1e-4, atol=1e-5)
+
+
+def test_lora_changes_output_after_update(nano):
+    cfg, params, masks = nano
+    lora = M.init_lora(cfg, jax.random.PRNGKey(3))
+    # Nudge one upsample factor off zero.
+    lora["blocks"]["1"]["wup_up"] = lora["blocks"]["1"]["wup_up"] + 0.1
+    tok = jax.random.randint(jax.random.PRNGKey(4), (1, 16), 0, cfg.vocab_size)
+    base = M.forward(cfg, params, masks, tok)
+    pert = M.forward(cfg, params, masks, tok, lora=lora)
+    assert float(jnp.abs(base - pert).max()) > 1e-5
+
+
+def test_wanda_masks_nm_and_shapes(nano):
+    cfg, params, _ = nano
+    tok = jax.random.randint(jax.random.PRNGKey(5), (2, cfg.seq_len), 0, cfg.vocab_size)
+    wmasks = M.wanda_masks(cfg, params, tok)
+    bm = wmasks["blocks"]["2"]
+    m = np.asarray(bm["wup_r"])
+    g = m.reshape(m.shape[0], -1, 4)
+    assert (g.sum(-1) == 2).all()
+
+
+def test_loss_decreases_vs_random():
+    """Sanity: loss at init ≈ ln(V); a few steps reduce it."""
+    cfg = ModelConfig(name="t", vocab_size=64, n_layer=2, n_head=2, d_model=32,
+                      d_ff=128, seq_len=32, batch_size=4)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    masks = M.init_masks(cfg, params, key)
+    tok = jax.random.randint(key, (4, cfg.seq_len + 1), 0, cfg.vocab_size)
+    loss = M.lm_loss(cfg, params, masks, tok)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 0.5
+
+
+def test_project_params_zeroes_pruned_slots(nano):
+    cfg, params, masks = nano
+    proj = M.project_params(cfg, params, masks)
+    w = proj["blocks"]["1"]["wup"]
+    m = masks["blocks"]["1"]["wup_r"]
+    assert float(jnp.abs(w * (1 - m)).max()) == 0.0
+    # Kept slots unchanged.
+    np.testing.assert_allclose(w * m, params["blocks"]["1"]["wup"] * m)
+    # Non-weight leaves untouched.
+    np.testing.assert_allclose(proj["tok_emb"], params["tok_emb"])

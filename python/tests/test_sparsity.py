@@ -1,0 +1,118 @@
+"""Mask-math correctness: N:M constraints, double pruning, Lemma 2.1,
+compressed-format round trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile import sparsity as sp
+
+nm = st.sampled_from([(1, 2), (2, 4), (2, 8), (4, 8), (1, 4)])
+
+
+def _check_nm(mask, n, m, axis=-1):
+    g = np.asarray(mask).reshape(*mask.shape[:-1], mask.shape[-1] // m, m)
+    assert (g.sum(-1) <= n).all(), "N:M constraint violated"
+
+
+@given(nm=nm, rows=st.sampled_from([4, 8, 16]), groups=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31))
+def test_random_mask_satisfies_nm_exactly(nm, rows, groups, seed):
+    n, m = nm
+    mask = sp.random_nm_mask(jax.random.PRNGKey(seed), (rows, groups * m), n, m)
+    _check_nm(mask, n, m)
+    # Random masks keep exactly n per group (no degenerate groups).
+    g = np.asarray(mask).reshape(rows, groups, m)
+    assert (g.sum(-1) == n).all()
+
+
+@given(nm=nm, rows=st.sampled_from([8, 16]), groups=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**31))
+def test_magnitude_mask_keeps_largest(nm, rows, groups, seed):
+    n, m = nm
+    w = jax.random.normal(jax.random.PRNGKey(seed), (rows, groups * m))
+    mask = sp.magnitude_nm_mask(w, n, m)
+    _check_nm(mask, n, m)
+    wg = np.abs(np.asarray(w)).reshape(rows, groups, m)
+    mg = np.asarray(mask).reshape(rows, groups, m)
+    for r in range(rows):
+        for g in range(groups):
+            kept = wg[r, g][mg[r, g] > 0]
+            dropped = wg[r, g][mg[r, g] == 0]
+            if len(kept) and len(dropped):
+                assert kept.min() >= dropped.max() - 1e-6
+
+
+@given(nm=nm, seed=st.integers(0, 2**31))
+def test_double_prune_mask_is_subset_and_column_nm(nm, seed):
+    n, m = nm
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(k1, (4 * m, 4 * m))
+    mr = sp.random_nm_mask(k2, w.shape, n, m)
+    mrc = sp.double_prune_mask(w, mr, n, m)
+    # Subset: double pruning only removes.
+    assert float(((mrc > 0) & (mr == 0)).sum()) == 0
+    # Column-wise N:M on the *effective* backward operand.
+    _check_nm(np.asarray(mrc).T, n, m)
+
+
+def test_lemma21_closed_form_values():
+    """Eq. 8 closed form.  Note: the paper's prose quotes 3.39% for 2:8 but
+    its own Eq. 8 evaluates to 5.84%; we match the equation (and Monte
+    Carlo) and record the discrepancy in EXPERIMENTS.md."""
+    assert abs(sp.imposed_sparsity(1, 2) - 0.125) < 1e-12
+    assert abs(sp.imposed_sparsity(2, 4) - 0.09375) < 1e-12
+    assert abs(sp.imposed_sparsity(2, 8) - 0.05843) < 1e-4
+
+
+@given(nm=st.sampled_from([(1, 2), (2, 4)]), seed=st.integers(0, 2**31))
+def test_lemma21_monte_carlo(nm, seed):
+    """Random-mask double pruning matches the Lemma 2.1 expectation.
+
+    Uses a *random* column mask (the lemma's setting: positions are
+    uniform) rather than magnitude selection.
+    """
+    n, m = nm
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    d = 32 * m
+    w = jax.random.normal(k1, (d, d))
+    mr = sp.random_nm_mask(k2, w.shape, n, m)
+    # Column-wise random N:M prune of the row-pruned matrix: keep top-n of
+    # |w*mr| + noise per column group — with iid noise dominating, kept
+    # positions are uniform among the group, matching the lemma.
+    noise = jax.random.uniform(k3, w.shape)
+    scores = (mr * (1.0 + noise)).T  # nonzeros always beat zeros
+    mc = sp._topn_group_mask(scores, n, m).T * mr
+    measured = float(sp.density(mr) - sp.density(mc * w + 0.0 * w))
+    measured = float(jnp.mean(mr) - jnp.mean(mc))
+    expected = sp.imposed_sparsity(n, m)
+    assert abs(measured - expected) < 0.02
+
+
+@given(nm=nm, rows=st.sampled_from([4, 8]), groups=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**31))
+def test_compress_roundtrip(nm, rows, groups, seed):
+    n, m = nm
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(k1, (rows, groups * m))
+    mask = sp.random_nm_mask(k2, w.shape, n, m)
+    vals, idx = sp.compress_nm(w * mask, mask, n, m)
+    assert vals.shape == (rows, groups * n)
+    back = sp.decompress_nm(vals, idx, groups * m)
+    np.testing.assert_allclose(back, w * mask, rtol=1e-6, atol=1e-7)
+    # Indices must be strictly increasing within each group and in range.
+    ig = np.asarray(idx).reshape(rows, groups, n)
+    assert (np.diff(ig, axis=-1) > 0).all()
+    assert (ig >= 0).all() and (ig < groups * m).all()
+
+
+def test_wanda_mask_uses_activation_scaling():
+    """A column with huge activation norm must survive even with small |w|."""
+    w = jnp.ones((4, 8)) * 0.1
+    w = w.at[:, 0].set(0.01)  # tiny weight...
+    act = jnp.ones((8,)).at[0].set(100.0)  # ...huge activation
+    mask = sp.wanda_nm_mask(w, act, 2, 4)
+    assert (np.asarray(mask)[:, 0] == 1).all()
+    _check_nm(mask, 2, 4)

@@ -1,0 +1,30 @@
+//! Data-pipeline throughput: corpus generation and batch slicing must never
+//! bottleneck the step loop (L3 perf target: batcher ≥ 10⁶ tok/s).
+
+use slope::data::{Corpus, CorpusSpec};
+use slope::util::bench::{bench, bench_auto, black_box, print_header, print_result};
+use slope::util::Rng;
+
+fn main() {
+    print_header("bench_data — corpus generation + batcher");
+    let gen = bench("generate 256k-token corpus", 1, 5, || {
+        black_box(Corpus::generate(CorpusSpec::for_vocab(512, 0)));
+    });
+    print_result(&gen);
+    println!("  → {:.1}M tok/s generation",
+             (1 << 18) as f64 / (gen.median_ns / 1e9) / 1e6);
+
+    let corpus = Corpus::generate(CorpusSpec::for_vocab(512, 0));
+    let mut rng = Rng::seed_from_u64(0);
+    let b = bench_auto("train_batch 8×129", 100.0, || {
+        black_box(corpus.train_batch(8, 128, &mut rng));
+    });
+    print_result(&b);
+    let toks = 8.0 * 129.0;
+    println!("  → {:.1}M tok/s batching", toks / (b.median_ns / 1e9) / 1e6);
+
+    let cz = bench_auto("cloze_batch 8×128", 100.0, || {
+        black_box(corpus.cloze_batch(8, 128, 3));
+    });
+    print_result(&cz);
+}

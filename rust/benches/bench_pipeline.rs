@@ -1,0 +1,56 @@
+//! End-to-end step latency through the PJRT runtime (the L3 hot path):
+//! measures the full train-step execute plus the coordinator's marshalling
+//! overhead on the smallest artifact config.  Requires `make artifacts`.
+//!
+//! This is the bench behind EXPERIMENTS.md §Perf's "coordinator overhead"
+//! number: everything outside `execute` must stay < 5% of the step.
+
+use slope::config::{Method, RunConfig};
+use slope::coordinator::Trainer;
+use slope::util::bench::{bench, print_header};
+use std::time::Instant;
+
+fn main() -> slope::Result<()> {
+    // `cargo bench` passes a `--bench` flag to harness=false binaries; skip flags.
+    let model = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "gpt-nano-half-depth".into());
+    let cfg = RunConfig {
+        model: model.clone(),
+        method: Method::Slope,
+        steps: 1,
+        lazy_fraction: 0.0,
+        eval_every: 1000,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg)?;
+    t.init()?;
+    t.train()?; // warm: compiles + first execution
+
+    print_header(&format!("bench_pipeline — {model} step loop"));
+    // Full step (batch slice + marshal + execute + readback).
+    let (b, s1) = t.manifest.train_tokens_shape();
+    let mut rng = slope::util::Rng::seed_from_u64(1);
+    let full = bench("full step", 2, 12, || {
+        let batch = t.corpus.train_batch(b, s1 - 1, &mut rng);
+        t.store.put_i32("tokens", &[b, s1], &batch.tokens).unwrap();
+        t.session.borrow_mut().run("train_step", &mut t.store).unwrap();
+        let _ = t.store.read_scalar_f32("loss").unwrap();
+    });
+    // Marshal-only (no execute): batch + literal construction + readback.
+    let marshal = bench("marshal only", 2, 12, || {
+        let batch = t.corpus.train_batch(b, s1 - 1, &mut rng);
+        t.store.put_i32("tokens", &[b, s1], &batch.tokens).unwrap();
+        let _ = t.store.read_scalar_f32("loss").unwrap();
+    });
+    println!("full step     : {:>10.2} ms", full.median_ms());
+    println!("marshal only  : {:>10.3} ms", marshal.median_ms());
+    println!("L3 overhead   : {:>10.2} %", marshal.median_ns / full.median_ns * 100.0);
+
+    // Eval + forward latency for the serving path.
+    let t0 = Instant::now();
+    t.eval_point(0)?;
+    println!("eval (4 batches): {:>8.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Setup (prune + compress) vs multiply cost — the measured-CPU half of the
+//! paper's Figure 5 (Appendix B): the asymmetry that makes static masks
+//! (SLoPe) amortize and dynamic masks (FST/Bi-Mask/SR-STE) bleed.
+
+use slope::backend::spmm_rowmajor;
+use slope::sparsity::{magnitude_row_mask, random_row_mask, CompressedNm, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::bench::{bench_auto, black_box, print_header};
+use slope::util::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(1);
+    print_header("bench_setup — compress (setup) vs one multiply, square matrices");
+    println!("{:<12} {:>14} {:>14} {:>14} {:>8}", "dim", "mask search", "compress", "multiply", "ratio");
+    for d in [128usize, 256, 512, 1024] {
+        let x = Matrix::randn(64, d, 1.0, &mut rng);
+        let w = Matrix::randn(d, d, 1.0, &mut rng);
+        let mask = random_row_mask(d, d, NmScheme::TWO_FOUR, &mut rng);
+        let c0 = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let search = bench_auto("search", 100.0, || {
+            black_box(magnitude_row_mask(black_box(&w), NmScheme::TWO_FOUR));
+        });
+        let compress = bench_auto("compress", 100.0, || {
+            black_box(CompressedNm::compress(black_box(&w), black_box(&mask), NmScheme::TWO_FOUR));
+        });
+        let mult = bench_auto("mult", 100.0, || {
+            black_box(spmm_rowmajor(black_box(&x), black_box(&c0)));
+        });
+        let setup = search.median_ns + compress.median_ns;
+        println!(
+            "{:<12} {:>12.2}us {:>12.2}us {:>12.2}us {:>7.1}x",
+            d, search.median_us(), compress.median_us(), mult.median_us(),
+            setup / mult.median_ns
+        );
+    }
+    println!("\n(static masks pay setup ONCE per run; dynamic-mask methods pay it\n every refresh — multiply the ratio column by the refresh rate)");
+}

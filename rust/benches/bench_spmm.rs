@@ -1,0 +1,47 @@
+//! SpMM vs dense GEMM across LLM-relevant shapes — the CPU-measured
+//! counterpart of the paper's Figure 3a (shape-dependent SpMM speedup).
+//!
+//! Roles match the paper: attention (d→d), upsample (d→4d), downsample
+//! (4d→d).  The structured 2:4 kernel does half the MACs and streams half
+//! the weight bytes; the printed speedup column is the measured analogue of
+//! Fig 3a's y-axis.
+
+use slope::backend::{gemm_nt, spmm_rowmajor};
+use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::bench::{bench_auto, black_box, print_header};
+use slope::util::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+    print_header("bench_spmm — dense vs 2:4 compressed (batch 64)");
+    println!("{:<28} {:>12} {:>12} {:>9}", "shape", "dense", "spmm", "speedup");
+    for (name, d_out, d_in) in [
+        ("attention 256×256", 256usize, 256usize),
+        ("attention 512×512", 512, 512),
+        ("upsample 256→1024", 1024, 256),
+        ("upsample 512→2048", 2048, 512),
+        ("downsample 1024→256", 256, 1024),
+        ("downsample 2048→512", 512, 2048),
+    ] {
+        let x = Matrix::randn(64, d_in, 1.0, &mut rng);
+        let w = Matrix::randn(d_out, d_in, 1.0, &mut rng);
+        let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
+        let wm = mask.apply(&w);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let dense = bench_auto("dense", 120.0, || {
+            black_box(gemm_nt(black_box(&x), black_box(&wm)));
+        });
+        let sparse = bench_auto("spmm", 120.0, || {
+            black_box(spmm_rowmajor(black_box(&x), black_box(&c)));
+        });
+        println!(
+            "{:<28} {:>10.2}us {:>10.2}us {:>8.2}x",
+            name,
+            dense.median_us(),
+            sparse.median_us(),
+            dense.median_ns / sparse.median_ns
+        );
+    }
+    println!("\n(2:4 halves MACs and weight bytes; CPU speedup < 2x because the\n gather-indexed access costs more per element than streaming — the\n hardware analogue is the metadata decode sparse tensor cores do for free)");
+}

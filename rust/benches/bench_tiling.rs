@@ -1,0 +1,32 @@
+//! Square-tile sweep for SpMM — the measured-CPU half of the paper's §2.4
+//! upsample-tiling optimization (Table 8 / Appendix E).  On CPU the win is
+//! cache locality; on the A100 it is cuSPARSELt's shape sweet-spot — both
+//! favor square tiles.
+
+use slope::backend::{spmm_rowmajor, spmm_tiled};
+use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::bench::{bench_auto, black_box, print_header};
+use slope::util::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(3);
+    print_header("bench_tiling — upsample SpMM, square output tiles (batch 256)");
+    // Upsample shape: d_in=512 → d_out=2048 (aspect 4, the cliff candidate).
+    let x = Matrix::randn(256, 512, 1.0, &mut rng);
+    let w = Matrix::randn(2048, 512, 1.0, &mut rng);
+    let mask = random_row_mask(2048, 512, NmScheme::TWO_FOUR, &mut rng);
+    let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+    let base = bench_auto("row-major", 200.0, || {
+        black_box(spmm_rowmajor(black_box(&x), black_box(&c)));
+    });
+    println!("{:<16} {:>12} {:>9}", "variant", "median", "vs base");
+    println!("{:<16} {:>10.2}us {:>8.2}x", "row-major", base.median_us(), 1.0);
+    for tile in [8usize, 16, 32, 64, 128, 256] {
+        let r = bench_auto("tiled", 200.0, || {
+            black_box(spmm_tiled(black_box(&x), black_box(&c), tile));
+        });
+        println!("{:<16} {:>10.2}us {:>8.2}x",
+                 format!("tile {tile}"), r.median_us(), base.median_ns / r.median_ns);
+    }
+}

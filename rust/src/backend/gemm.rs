@@ -1,0 +1,161 @@
+//! Dense GEMM kernels (the cuBLAS role on CPU).
+//!
+//! `gemm_nt` is the hot path (it is the dense half of Algorithm 1 and the
+//! baseline every SpMM speedup is measured against), so it is blocked for
+//! L1 reuse with an 8-wide unrolled inner loop over the shared reduction
+//! dimension.  Everything is safe rust; the optimizer auto-vectorizes the
+//! inner loops (checked in the §Perf pass).
+
+use crate::tensor::Matrix;
+
+/// Cache-block edge for the K dimension (f32 lines; 256×4B = 1 KiB rows).
+const KB: usize = 256;
+/// Output-tile edge.
+const JB: usize = 64;
+
+/// `C = A · B` — `a: (m, k)`, `b: (k, n)`.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for kk in (0..k).step_by(KB) {
+        let kend = (kk + KB).min(k);
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for p in kk..kend {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = b.row(p);
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` — `a: (m, k)`, `b: (n, k)`.  Row-dot-row form: unit-stride
+/// on both operands, the fastest layout for row-major data.
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm_nt_acc(a, b, Matrix::zeros(a.rows, b.rows))
+}
+
+/// `C += A · Bᵀ` accumulating into an existing output — the fused
+/// matmul+add of §2.4 (Eq. 11-right): one traversal, no extra pass.
+pub fn gemm_nt_acc(a: &Matrix, b: &Matrix, mut c: Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let k = a.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for jb in (0..b.rows).step_by(JB) {
+            let jend = (jb + JB).min(b.rows);
+            for j in jb..jend {
+                crow[j] += dot(arow, b.row(j), k);
+            }
+        }
+    }
+    c
+}
+
+/// `C = Aᵀ · B` — `a: (k, m)`, `b: (k, n)` → `(m, n)`.  Used for
+/// `∇W = ∇Yᵀ · X` (Algorithm 1 line 12).
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "gemm_tn shape mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // Accumulate rank-1 updates row-by-row of the shared dim: unit stride
+    // on b and c.
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// 8-wide unrolled dot product (auto-vectorizes to SIMD).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let chunks = k / 8;
+    for c in 0..chunks {
+        let o = c * 8;
+        for l in 0..8 {
+            acc[l] += a[o + l] * b[o + l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..k {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_variants_match_naive() {
+        let mut rng = Rng::seed_from_u64(0);
+        for (m, k, n) in [(3, 5, 7), (8, 16, 8), (17, 33, 9), (64, 128, 64)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let want = naive(&a, &b);
+            assert!(gemm(&a, &b).max_abs_diff(&want) < 1e-3, "gemm {m}x{k}x{n}");
+            assert!(gemm_nt(&a, &b.transpose()).max_abs_diff(&want) < 1e-3);
+            assert!(gemm_tn(&a.transpose(), &b).max_abs_diff(&want) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemm_nt_acc_accumulates() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = Matrix::randn(4, 8, 1.0, &mut rng);
+        let b = Matrix::randn(6, 8, 1.0, &mut rng);
+        let c0 = Matrix::randn(4, 6, 1.0, &mut rng);
+        let got = gemm_nt_acc(&a, &b, c0.clone());
+        let mut want = gemm_nt(&a, &b);
+        for (w, c) in want.data.iter_mut().zip(&c0.data) {
+            *w += c;
+        }
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        let a: Vec<f32> = (0..19).map(|v| v as f32).collect();
+        let b = vec![1.0f32; 19];
+        assert_eq!(dot(&a, &b, 19), (0..19).sum::<i32>() as f32);
+    }
+}

@@ -1,0 +1,146 @@
+//! Structured SpMM over the compressed N:M layout: `Y = X · Wᵀ` with `W`
+//! stored as (values, indices) — the computational core of SLoPe's FWD and
+//! BWD-2.
+//!
+//! The N:M structure is what makes this fast: within a group of M dense
+//! columns the kernel touches exactly N values with *known-monotone*
+//! indices, so the inner loop is a short gather-multiply-accumulate with
+//! perfect value locality — the CPU analogue of what sparse tensor cores
+//! do with the 2:4 metadata.  Compared to the dense `gemm_nt`, it performs
+//! `N/M` of the multiply-adds and streams `N/M` of the weight bytes.
+
+use crate::sparsity::CompressedNm;
+use crate::tensor::Matrix;
+
+/// Execution strategy for SpMM (the §2.4 tiling ablation toggle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpmmAlgo {
+    /// Straight row-major traversal.
+    RowMajor,
+    /// Square output tiles of the given edge (paper's upsample tiling).
+    Tiled { tile: usize },
+}
+
+/// `Y[b, o] = Σ_k X[b, idx[o,k]] · vals[o,k]` — row-major traversal.
+///
+/// §Perf iteration (EXPERIMENTS.md §Perf/L3): gathers don't auto-vectorize,
+/// so the kernel processes FOUR weight rows per pass — the four accumulator
+/// chains give the out-of-order core independent gather streams (ILP) and
+/// reuse the cached x row.  Measured ~1.3–1.5× over the 1-row loop.
+pub fn spmm_rowmajor(x: &Matrix, w: &CompressedNm) -> Matrix {
+    assert_eq!(x.cols, w.cols, "spmm: x cols must equal dense weight cols");
+    let kc = w.kcols();
+    let mut y = Matrix::zeros(x.rows, w.rows);
+    let quads = w.rows / 4 * 4;
+    for b in 0..x.rows {
+        let xrow = x.row(b);
+        let yrow = y.row_mut(b);
+        let mut o = 0;
+        while o < quads {
+            let base = o * kc;
+            let v = &w.values[base..base + 4 * kc];
+            let ix = &w.indices[base..base + 4 * kc];
+            let mut acc = [0.0f32; 4];
+            for k in 0..kc {
+                acc[0] += xrow[ix[k] as usize] * v[k];
+                acc[1] += xrow[ix[kc + k] as usize] * v[kc + k];
+                acc[2] += xrow[ix[2 * kc + k] as usize] * v[2 * kc + k];
+                acc[3] += xrow[ix[3 * kc + k] as usize] * v[3 * kc + k];
+            }
+            yrow[o..o + 4].copy_from_slice(&acc);
+            o += 4;
+        }
+        for o in quads..w.rows {
+            let vals = &w.values[o * kc..(o + 1) * kc];
+            let idxs = &w.indices[o * kc..(o + 1) * kc];
+            yrow[o] = sparse_dot(xrow, vals, idxs);
+        }
+    }
+    y
+}
+
+/// Square-tiled traversal (paper §2.4 / Appendix E): process `tile × tile`
+/// output blocks so the active slice of `X` stays cache-resident while a
+/// block of weight rows streams through.  This is the CPU analogue of
+/// splitting the upsample weight into square sub-matrices for cuSPARSELt.
+pub fn spmm_tiled(x: &Matrix, w: &CompressedNm, tile: usize) -> Matrix {
+    assert_eq!(x.cols, w.cols);
+    assert!(tile > 0);
+    let kc = w.kcols();
+    let mut y = Matrix::zeros(x.rows, w.rows);
+    for bt in (0..x.rows).step_by(tile) {
+        let bend = (bt + tile).min(x.rows);
+        for ot in (0..w.rows).step_by(tile) {
+            let oend = (ot + tile).min(w.rows);
+            for b in bt..bend {
+                let xrow = x.row(b);
+                let yrow = y.row_mut(b);
+                for o in ot..oend {
+                    let vals = &w.values[o * kc..(o + 1) * kc];
+                    let idxs = &w.indices[o * kc..(o + 1) * kc];
+                    yrow[o] = sparse_dot(xrow, vals, idxs);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Gather-dot over one compressed weight row.  4-wide unrolled: for 2:4
+/// this is two groups per iteration; the index loads are u16 (half the
+/// metadata traffic of u32 — the Eq. 7 bit-packing spirit).
+#[inline]
+fn sparse_dot(xrow: &[f32], vals: &[f32], idxs: &[u16]) -> f32 {
+    let kc = vals.len();
+    let mut acc = [0.0f32; 4];
+    let chunks = kc / 4;
+    for c in 0..chunks {
+        let o = c * 4;
+        for l in 0..4 {
+            // SAFETY-free fast path: indices are validated < cols at
+            // compress time; use get_unchecked-equivalent via debug assert.
+            debug_assert!((idxs[o + l] as usize) < xrow.len());
+            acc[l] += xrow[idxs[o + l] as usize] * vals[o + l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 4..kc {
+        s += xrow[idxs[i] as usize] * vals[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::gemm_nt;
+    use crate::sparsity::{random_row_mask, NmScheme};
+    use crate::util::Rng;
+
+    #[test]
+    fn spmm_matches_dense_on_masked_weight() {
+        let mut rng = Rng::seed_from_u64(0);
+        for (n, m) in [(1usize, 2usize), (2, 4), (2, 8)] {
+            let s = NmScheme::new(n, m);
+            let x = Matrix::randn(8, 8 * m, 1.0, &mut rng);
+            let w = Matrix::randn(16, 8 * m, 1.0, &mut rng);
+            let mask = random_row_mask(16, 8 * m, s, &mut rng);
+            let c = CompressedNm::compress(&w, &mask, s);
+            let want = gemm_nt(&x, &mask.apply(&w));
+            assert!(spmm_rowmajor(&x, &c).max_abs_diff(&want) < 1e-4, "{s}");
+        }
+    }
+
+    #[test]
+    fn tiled_matches_rowmajor_ragged_tiles() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x = Matrix::randn(13, 32, 1.0, &mut rng); // non-multiple rows
+        let w = Matrix::randn(29, 32, 1.0, &mut rng); // non-multiple outs
+        let mask = random_row_mask(29, 32, NmScheme::TWO_FOUR, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let a = spmm_rowmajor(&x, &c);
+        for tile in [1, 3, 7, 16, 64] {
+            assert!(spmm_tiled(&x, &c, tile).max_abs_diff(&a) < 1e-4, "tile {tile}");
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Run configuration: which AOT-compiled model config to drive, with what
+//! schedule, method and evaluation cadence.  Consumed by the CLI
+//! (`slope train --config ...`), the examples and the experiment harness.
+
+pub mod zoo;
+
+use std::path::PathBuf;
+
+/// Training method selector (which AOT executable family drives the run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// SLoPe: static random N:M masks + double-pruned backward (the paper).
+    Slope,
+    /// Dense baseline (ones masks through the same executable).
+    Dense,
+    /// Extended SR-STE: dynamic magnitude masks + decay regularizer.
+    Srste,
+    /// Extended SR-STE followed by lazy adapters: the dynamic run is
+    /// projected onto its final magnitude mask, then adapters train for the
+    /// lazy tail (the "E-SR-STE + adapters" rows of Table 4).
+    SrsteLora,
+    /// Dense pretrain → Wanda one-shot prune at the end.
+    Wanda,
+    /// Figure-9 pruning-target variants.
+    Fig9(Fig9Variant),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fig9Variant {
+    WeightStatic,
+    WeightDynamic,
+    InputStatic,
+    InputDynamic,
+    GradoutDynamic,
+}
+
+impl Fig9Variant {
+    pub fn exe_name(&self) -> &'static str {
+        match self {
+            Fig9Variant::WeightStatic => "train_step_fig9_weight_static",
+            Fig9Variant::WeightDynamic => "train_step_fig9_weight_dynamic",
+            Fig9Variant::InputStatic => "train_step_fig9_input_static",
+            Fig9Variant::InputDynamic => "train_step_fig9_input_dynamic",
+            Fig9Variant::GradoutDynamic => "train_step_fig9_gradout_dynamic",
+        }
+    }
+}
+
+/// One pretraining run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Artifact config directory name (e.g. "gpt-nano").
+    pub model: String,
+    pub method: Method,
+    /// Total optimizer steps (overrides the manifest's schedule length for
+    /// CPU-budget control; LR schedule still follows the manifest).
+    pub steps: usize,
+    /// Final fraction run with lazy adapters (paper: 0.01); 0 disables.
+    pub lazy_fraction: f64,
+    /// Evaluate every N steps.
+    pub eval_every: usize,
+    /// Validation batches per evaluation.
+    pub eval_batches: usize,
+    /// Data/mask seed.
+    pub seed: u64,
+    /// Artifact root.
+    pub artifacts: PathBuf,
+    /// Where to write metrics (JSON lines).
+    pub out_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "gpt-nano".into(),
+            method: Method::Slope,
+            steps: 200,
+            lazy_fraction: 0.05,
+            eval_every: 25,
+            eval_batches: 4,
+            seed: 0,
+            artifacts: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("runs"),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn lazy_steps(&self) -> usize {
+        ((self.steps as f64 * self.lazy_fraction).round() as usize).min(self.steps)
+    }
+
+    pub fn sparse_steps(&self) -> usize {
+        self.steps - self.lazy_steps()
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.artifacts.join(&self.model).join("manifest.json")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lazy_split_matches_paper_1pct() {
+        let cfg = RunConfig { steps: 1000, lazy_fraction: 0.01, ..Default::default() };
+        assert_eq!(cfg.lazy_steps(), 10);
+        assert_eq!(cfg.sparse_steps(), 990);
+    }
+
+    #[test]
+    fn fig9_exe_names_cover_variants() {
+        for v in [Fig9Variant::WeightStatic, Fig9Variant::WeightDynamic,
+                  Fig9Variant::InputStatic, Fig9Variant::InputDynamic,
+                  Fig9Variant::GradoutDynamic] {
+            assert!(v.exe_name().starts_with("train_step_fig9_"));
+        }
+    }
+}

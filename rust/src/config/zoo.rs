@@ -1,0 +1,183 @@
+//! Full-size model shape inventories for the performance and memory models
+//! (Tables 2/3/7/8/12, Figures 3a/5/6) plus the CNN inventories used by
+//! the Bi-Mask overhead table (Table 10).
+//!
+//! These are the *public architecture shapes* of the models the paper
+//! benchmarks; no weights are involved — the perf/memory models only need
+//! per-layer GEMM dimensions.
+
+/// Decoder-only (or encoder) transformer shape for the analytic models.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShape {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    /// KV heads (GQA); == n_head for MHA models.
+    pub n_kv_head: usize,
+    pub d_ff: usize,
+    /// Gated MLP (LLaMA/Mistral SwiGLU: up, gate, down) vs 2-matrix GELU.
+    pub gated_mlp: bool,
+    pub vocab: usize,
+    /// Approximate parameter count in billions (reporting only).
+    pub params_b: f64,
+}
+
+impl ModelShape {
+    pub const fn head_dim(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    /// Dense parameter count of the prunable linear weights per block.
+    pub fn block_linear_params(&self) -> usize {
+        let d = self.d_model;
+        let kv = self.n_kv_head * self.head_dim();
+        let qkv = d * d + 2 * d * kv; // q + k + v
+        let proj = d * d;
+        let mlp = if self.gated_mlp { 3 * d * self.d_ff } else { 2 * d * self.d_ff };
+        qkv + proj + mlp
+    }
+
+    /// Total dense params (linears + embeddings + norms, approximate).
+    pub fn total_params(&self) -> usize {
+        self.n_layer * (self.block_linear_params() + 4 * self.d_model)
+            + self.vocab * self.d_model
+            + 2 * self.d_model
+    }
+}
+
+pub const OPT_2_6B: ModelShape = ModelShape {
+    name: "OPT-2.6B", d_model: 2560, n_layer: 32, n_head: 32, n_kv_head: 32,
+    d_ff: 10240, gated_mlp: false, vocab: 50272, params_b: 2.6,
+};
+pub const OPT_6_6B: ModelShape = ModelShape {
+    name: "OPT-6.6B", d_model: 4096, n_layer: 32, n_head: 32, n_kv_head: 32,
+    d_ff: 16384, gated_mlp: false, vocab: 50272, params_b: 6.7,
+};
+pub const OPT_13B: ModelShape = ModelShape {
+    name: "OPT-13B", d_model: 5120, n_layer: 40, n_head: 40, n_kv_head: 40,
+    d_ff: 20480, gated_mlp: false, vocab: 50272, params_b: 13.0,
+};
+pub const OPT_30B: ModelShape = ModelShape {
+    name: "OPT-30B", d_model: 7168, n_layer: 48, n_head: 56, n_kv_head: 56,
+    d_ff: 28672, gated_mlp: false, vocab: 50272, params_b: 30.0,
+};
+pub const OPT_66B: ModelShape = ModelShape {
+    name: "OPT-66B", d_model: 9216, n_layer: 64, n_head: 72, n_kv_head: 72,
+    d_ff: 36864, gated_mlp: false, vocab: 50272, params_b: 66.0,
+};
+pub const LLAMA3_8B: ModelShape = ModelShape {
+    name: "LLaMA-3-8B", d_model: 4096, n_layer: 32, n_head: 32, n_kv_head: 8,
+    d_ff: 14336, gated_mlp: true, vocab: 128256, params_b: 8.0,
+};
+pub const MISTRAL_7B: ModelShape = ModelShape {
+    name: "Mistral-v0.3-7B", d_model: 4096, n_layer: 32, n_head: 32, n_kv_head: 8,
+    d_ff: 14336, gated_mlp: true, vocab: 32768, params_b: 7.2,
+};
+pub const GPT2_SMALL: ModelShape = ModelShape {
+    name: "GPT2-Small", d_model: 768, n_layer: 12, n_head: 12, n_kv_head: 12,
+    d_ff: 3072, gated_mlp: false, vocab: 50257, params_b: 0.117,
+};
+pub const GPT2_LARGE: ModelShape = ModelShape {
+    name: "GPT2-Large", d_model: 1280, n_layer: 36, n_head: 20, n_kv_head: 20,
+    d_ff: 5120, gated_mlp: false, vocab: 50257, params_b: 0.774,
+};
+pub const BERT_LARGE: ModelShape = ModelShape {
+    name: "BERT-Large", d_model: 1024, n_layer: 24, n_head: 16, n_kv_head: 16,
+    d_ff: 4096, gated_mlp: false, vocab: 30522, params_b: 0.355,
+};
+
+/// The Table 2/3 sweep set.
+pub const SPEEDUP_MODELS: [ModelShape; 7] = [
+    OPT_66B, OPT_30B, OPT_13B, OPT_6_6B, OPT_2_6B, LLAMA3_8B, MISTRAL_7B,
+];
+
+/// One conv/fc layer as a GEMM (im2col view) for the Table-10 CNN set.
+#[derive(Clone, Copy, Debug)]
+pub struct CnnLayer {
+    /// GEMM m (output pixels × batch), n (out channels), k (in·kh·kw).
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// Compact CNN inventories (representative per-stage shapes × counts) for
+/// the Bi-Mask slowdown reproduction (Table 10).
+pub struct CnnShape {
+    pub name: &'static str,
+    pub dataset: &'static str,
+    pub layers: &'static [(CnnLayer, usize)],
+}
+
+const B32: usize = 128; // CIFAR batch
+const BIMG: usize = 64; // ImageNet batch
+
+pub const MOBILENET_V2: CnnShape = CnnShape {
+    name: "MobileNet-V2", dataset: "CIFAR10",
+    layers: &[
+        (CnnLayer { m: B32 * 1024, n: 96, k: 32 * 9 }, 4),
+        (CnnLayer { m: B32 * 256, n: 192, k: 64 * 9 }, 8),
+        (CnnLayer { m: B32 * 64, n: 384, k: 96 * 9 }, 12),
+        (CnnLayer { m: B32 * 16, n: 960, k: 160 * 9 }, 8),
+    ],
+};
+pub const RESNET_32: CnnShape = CnnShape {
+    name: "ResNet-32", dataset: "CIFAR10",
+    layers: &[
+        (CnnLayer { m: B32 * 1024, n: 16, k: 16 * 9 }, 10),
+        (CnnLayer { m: B32 * 256, n: 32, k: 32 * 9 }, 10),
+        (CnnLayer { m: B32 * 64, n: 64, k: 64 * 9 }, 10),
+    ],
+};
+pub const VGG19: CnnShape = CnnShape {
+    name: "VGG19", dataset: "CIFAR10",
+    layers: &[
+        (CnnLayer { m: B32 * 1024, n: 64, k: 64 * 9 }, 2),
+        (CnnLayer { m: B32 * 256, n: 128, k: 128 * 9 }, 2),
+        (CnnLayer { m: B32 * 64, n: 256, k: 256 * 9 }, 4),
+        (CnnLayer { m: B32 * 16, n: 512, k: 512 * 9 }, 8),
+    ],
+};
+pub const RESNET_18: CnnShape = CnnShape {
+    name: "ResNet-18", dataset: "ImageNet",
+    layers: &[
+        (CnnLayer { m: BIMG * 3136, n: 64, k: 64 * 9 }, 4),
+        (CnnLayer { m: BIMG * 784, n: 128, k: 128 * 9 }, 4),
+        (CnnLayer { m: BIMG * 196, n: 256, k: 256 * 9 }, 4),
+        (CnnLayer { m: BIMG * 49, n: 512, k: 512 * 9 }, 4),
+    ],
+};
+pub const RESNET_50: CnnShape = CnnShape {
+    name: "ResNet-50", dataset: "ImageNet",
+    layers: &[
+        (CnnLayer { m: BIMG * 3136, n: 256, k: 64 * 9 }, 9),
+        (CnnLayer { m: BIMG * 784, n: 512, k: 128 * 9 }, 12),
+        (CnnLayer { m: BIMG * 196, n: 1024, k: 256 * 9 }, 18),
+        (CnnLayer { m: BIMG * 49, n: 2048, k: 512 * 9 }, 9),
+    ],
+};
+
+pub const BIMASK_MODELS: [&CnnShape; 5] =
+    [&MOBILENET_V2, &RESNET_32, &VGG19, &RESNET_18, &RESNET_50];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_in_the_right_ballpark() {
+        for m in SPEEDUP_MODELS {
+            let est = m.total_params() as f64 / 1e9;
+            assert!(
+                est > 0.55 * m.params_b && est < 1.45 * m.params_b,
+                "{}: est {est:.2}B vs nominal {}B", m.name, m.params_b
+            );
+        }
+    }
+
+    #[test]
+    fn gqa_models_have_fewer_kv_heads() {
+        assert!(LLAMA3_8B.n_kv_head < LLAMA3_8B.n_head);
+        assert_eq!(OPT_66B.n_kv_head, OPT_66B.n_head);
+    }
+}

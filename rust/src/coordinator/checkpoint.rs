@@ -1,0 +1,144 @@
+//! Checkpointing: persist a subset of the literal store to a simple
+//! length-prefixed binary format (`.slopeckpt`) and restore it.
+//!
+//! Format (little endian):
+//! ```text
+//!   magic   "SLPE" u32-version
+//!   count   u32
+//!   repeat: name_len u32 | name bytes | dtype u8 (0=f32, 1=i32)
+//!           ndims u32 | dims u64×ndims | raw data
+//! ```
+
+use crate::runtime::Store;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SLPE";
+const VERSION: u32 = 1;
+
+/// Save every store tensor whose name starts with one of `prefixes`.
+pub fn save(store: &Store, prefixes: &[&str], path: &Path) -> crate::Result<usize> {
+    let names: Vec<String> = store
+        .names()
+        .into_iter()
+        .filter(|n| prefixes.iter().any(|p| n.starts_with(p)))
+        .map(|s| s.to_string())
+        .collect();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(names.len() as u32).to_le_bytes())?;
+    for name in &names {
+        let lit = store.get(name)?;
+        let shape = lit.array_shape().map_err(|e| crate::eyre!("{e}"))?;
+        let dims: Vec<u64> = shape.dims().iter().map(|d| *d as u64).collect();
+        let ty = lit.ty().map_err(|e| crate::eyre!("{e}"))?;
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        match ty {
+            xla::ElementType::F32 => {
+                f.write_all(&[0u8])?;
+                f.write_all(&(dims.len() as u32).to_le_bytes())?;
+                for d in &dims {
+                    f.write_all(&d.to_le_bytes())?;
+                }
+                for v in lit.to_vec::<f32>().map_err(|e| crate::eyre!("{e}"))? {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            xla::ElementType::S32 => {
+                f.write_all(&[1u8])?;
+                f.write_all(&(dims.len() as u32).to_le_bytes())?;
+                for d in &dims {
+                    f.write_all(&d.to_le_bytes())?;
+                }
+                for v in lit.to_vec::<i32>().map_err(|e| crate::eyre!("{e}"))? {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            other => return Err(crate::eyre!("checkpoint: unsupported dtype {other:?}")),
+        }
+    }
+    Ok(names.len())
+}
+
+/// Load a checkpoint into the store (overwrites same-name tensors).
+pub fn load(store: &mut Store, path: &Path) -> crate::Result<usize> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(crate::eyre!("not a slope checkpoint: {}", path.display()));
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        return Err(crate::eyre!("unsupported checkpoint version {version}"));
+    }
+    let count = read_u32(&mut f)? as usize;
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|e| crate::eyre!("{e}"))?;
+        let mut dtype = [0u8; 1];
+        f.read_exact(&mut dtype)?;
+        let ndims = read_u32(&mut f)? as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            dims.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = dims.iter().product::<usize>().max(1);
+        match dtype[0] {
+            0 => {
+                let mut data = vec![0f32; n];
+                let mut b = [0u8; 4];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut b)?;
+                    *v = f32::from_le_bytes(b);
+                }
+                store.put_f32(&name, &dims, &data)?;
+            }
+            1 => {
+                let mut data = vec![0i32; n];
+                let mut b = [0u8; 4];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut b)?;
+                    *v = i32::from_le_bytes(b);
+                }
+                store.put_i32(&name, &dims, &data)?;
+            }
+            other => return Err(crate::eyre!("bad dtype tag {other}")),
+        }
+    }
+    Ok(count)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> crate::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut store = Store::new();
+        store.put_f32("params.a", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        store.put_i32("tokens", &[4], &[1, 2, 3, 4]).unwrap();
+        store.put_f32("opt.b", &[1], &[9.0]).unwrap();
+        let tmp = std::env::temp_dir().join("slope_ckpt_test.slopeckpt");
+        let n = save(&store, &["params.", "opt."], &tmp).unwrap();
+        assert_eq!(n, 2, "tokens must be excluded by prefix filter");
+        let mut fresh = Store::new();
+        let m = load(&mut fresh, &tmp).unwrap();
+        assert_eq!(m, 2);
+        assert_eq!(fresh.read_f32("params.a").unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(fresh.read_f32("opt.b").unwrap(), vec![9.0]);
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,145 @@
+//! Run metrics: per-step loss, evaluation points, SR-STE mask churn
+//! (Figure 4), adapter convergence (Figure 3b).  Serialized as JSON for
+//! the experiment harness and EXPERIMENTS.md.
+
+use crate::util::json::{arr, num, obj, s, Json};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct StepRec {
+    pub step: usize,
+    pub loss: f32,
+    /// Wall time of the whole step (ms).
+    pub wall_ms: f64,
+    /// Time spent inside the PJRT execute (ms) — the L3-overhead metric is
+    /// `1 - exec_ms/wall_ms`.
+    pub exec_ms: f64,
+    pub phase: &'static str,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalRec {
+    pub step: usize,
+    pub val_nll: f64,
+    pub perplexity: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClozeRec {
+    pub step: usize,
+    pub accuracy: f64,
+    pub mean_rank: f64,
+}
+
+/// Mask difference vs the previous snapshot and vs the converged (final)
+/// mask — Figure 4 plots the latter.
+#[derive(Clone, Debug)]
+pub struct ChurnRec {
+    pub step: usize,
+    pub frac_changed_vs_prev: f64,
+    /// Filled in post-hoc once the converged mask is known.
+    pub frac_changed_vs_final: f64,
+}
+
+/// Cosine similarity of the adapters at `step` vs the converged adapters
+/// (Figure 3b), split by factor role.
+#[derive(Clone, Debug)]
+pub struct AdapterRec {
+    pub step: usize,
+    pub cos_down: f64,
+    pub cos_up: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub run_name: String,
+    pub steps: Vec<StepRec>,
+    pub evals: Vec<EvalRec>,
+    pub cloze: Vec<ClozeRec>,
+    pub churn: Vec<ChurnRec>,
+    pub adapters: Vec<AdapterRec>,
+}
+
+impl Metrics {
+    pub fn new(run_name: impl Into<String>) -> Self {
+        Self { run_name: run_name.into(), ..Default::default() }
+    }
+
+    pub fn final_perplexity(&self) -> Option<f64> {
+        self.evals.last().map(|e| e.perplexity)
+    }
+
+    pub fn mean_step_wall_ms(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.wall_ms).sum::<f64>() / self.steps.len() as f64
+    }
+
+    /// Fraction of step wall-time spent outside the PJRT execute — the L3
+    /// coordinator-overhead figure reported in EXPERIMENTS.md §Perf.
+    pub fn coordinator_overhead(&self) -> f64 {
+        let wall: f64 = self.steps.iter().map(|s| s.wall_ms).sum();
+        let exec: f64 = self.steps.iter().map(|s| s.exec_ms).sum();
+        if wall == 0.0 {
+            0.0
+        } else {
+            1.0 - exec / wall
+        }
+    }
+
+    /// Serialize via the in-tree JSON writer.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("run_name", s(self.run_name.clone())),
+            ("steps", arr(self.steps.iter().map(|r| obj(vec![
+                ("step", num(r.step as f64)),
+                ("loss", num(r.loss as f64)),
+                ("wall_ms", num(r.wall_ms)),
+                ("exec_ms", num(r.exec_ms)),
+                ("phase", s(r.phase)),
+            ])))),
+            ("evals", arr(self.evals.iter().map(|r| obj(vec![
+                ("step", num(r.step as f64)),
+                ("val_nll", num(r.val_nll)),
+                ("perplexity", num(r.perplexity)),
+            ])))),
+            ("cloze", arr(self.cloze.iter().map(|r| obj(vec![
+                ("step", num(r.step as f64)),
+                ("accuracy", num(r.accuracy)),
+                ("mean_rank", num(r.mean_rank)),
+            ])))),
+            ("churn", arr(self.churn.iter().map(|r| obj(vec![
+                ("step", num(r.step as f64)),
+                ("frac_changed_vs_prev", num(r.frac_changed_vs_prev)),
+                ("frac_changed_vs_final", num(r.frac_changed_vs_final)),
+            ])))),
+            ("adapters", arr(self.adapters.iter().map(|r| obj(vec![
+                ("step", num(r.step as f64)),
+                ("cos_down", num(r.cos_down)),
+                ("cos_up", num(r.cos_up)),
+            ])))),
+        ])
+    }
+
+    pub fn save(&self, dir: &Path) -> crate::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.run_name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_math() {
+        let mut m = Metrics::new("t");
+        m.steps.push(StepRec { step: 0, loss: 1.0, wall_ms: 10.0, exec_ms: 9.0, phase: "sparse" });
+        m.steps.push(StepRec { step: 1, loss: 1.0, wall_ms: 10.0, exec_ms: 10.0, phase: "sparse" });
+        assert!((m.coordinator_overhead() - 0.05).abs() < 1e-9);
+        assert!((m.mean_step_wall_ms() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Pretraining coordinator — the L3 orchestrator.
+//!
+//! Owns the step loop over the AOT train-step executables, the SLoPe phase
+//! schedule (99% sparse → final 1% with lazy low-rank adapters), baseline
+//! drivers (dense / Extended SR-STE / Wanda / Figure-9 variants),
+//! evaluation cadence, metric capture (loss curve, mask churn, adapter
+//! convergence) and checkpointing.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod trainer;
+
+pub use metrics::{EvalRec, Metrics, StepRec};
+pub use trainer::{TrainOutcome, Trainer};

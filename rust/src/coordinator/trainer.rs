@@ -1,0 +1,425 @@
+//! The training orchestrator: drives one pretraining run end-to-end
+//! through the AOT executables.
+//!
+//! Phase schedule (the paper's headline recipe):
+//! ```text
+//!   steps 0 .. (1-λ)·T   : train_step        (sparse, Eq. 4–6)
+//!   step  (1-λ)·T        : lora_init         (lazy adapters appear)
+//!   steps .. T           : train_step_lora   (sparse + adapters)
+//! ```
+//! with λ = `lazy_fraction` (paper: 1%).  Baselines reuse the same loop
+//! with a different executable and mask policy (see [`Method`]).
+
+use crate::config::{Fig9Variant, Method, RunConfig};
+use crate::coordinator::metrics::{AdapterRec, ChurnRec, ClozeRec, EvalRec, Metrics, StepRec};
+use crate::data::{Corpus, CorpusSpec};
+use crate::eval::{cloze_score, perplexity};
+use crate::runtime::{Manifest, Session, SessionHandle, Store};
+use crate::tensor::cosine_similarity;
+use crate::util::Rng;
+use std::time::Instant;
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    /// Shared (process-cached) compiled session for this artifact config.
+    pub session: SessionHandle,
+    /// Cloned manifest (avoids locking for read-only schema queries).
+    pub manifest: Manifest,
+    pub store: Store,
+    pub corpus: Corpus,
+    pub metrics: Metrics,
+    rng: Rng,
+    lora_active: bool,
+    /// Packed mask snapshots for the SR-STE churn metric.
+    churn_snapshots: Vec<(usize, Vec<u64>)>,
+    /// Adapter snapshots (down, up) for the Fig-3b convergence metric.
+    adapter_snapshots: Vec<(usize, Vec<f32>, Vec<f32>)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub final_loss: f32,
+    pub final_perplexity: f64,
+    pub cloze_accuracy: f64,
+    pub mean_step_ms: f64,
+    pub coordinator_overhead: f64,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig) -> crate::Result<Self> {
+        let session = Session::open_cached(&cfg.artifacts.join(&cfg.model))?;
+        let manifest = session.borrow().manifest.clone();
+        let vocab = manifest.config.vocab_size;
+        let corpus = Corpus::generate(CorpusSpec::for_vocab(vocab, cfg.seed ^ 0xC0FFEE));
+        let run_name = format!("{}-{}", cfg.model, method_tag(&cfg.method));
+        Ok(Self {
+            rng: Rng::seed_from_u64(cfg.seed),
+            metrics: Metrics::new(run_name),
+            session,
+            manifest,
+            store: Store::new(),
+            corpus,
+            cfg,
+            lora_active: false,
+            churn_snapshots: vec![],
+            adapter_snapshots: vec![],
+        })
+    }
+
+    fn run_exe(&mut self, name: &str) -> crate::Result<()> {
+        self.session.borrow_mut().run(name, &mut self.store)
+    }
+
+    fn has_exe(&self, name: &str) -> bool {
+        self.manifest.executables.contains_key(name)
+    }
+
+    /// Pre-compile the executables a run will touch so step wall-times
+    /// measure steady-state execution, not XLA compilation.
+    fn warmup(&mut self, lazy_enabled: bool) -> crate::Result<()> {
+        let mut names: Vec<String> = vec![self.step_exe().to_string(),
+                                          "eval_step".into(), "forward".into()];
+        if lazy_enabled {
+            for n in ["lora_init", "train_step_lora", "eval_step_lora", "forward_lora"] {
+                names.push(n.into());
+            }
+        }
+        if matches!(self.cfg.method, Method::Srste | Method::SrsteLora) {
+            names.push("srste_masks".into());
+            names.push("magnitude_masks".into());
+        }
+        if matches!(self.cfg.method, Method::Wanda) {
+            names.push("wanda_masks".into());
+        }
+        let mut sess = self.session.borrow_mut();
+        for n in &names {
+            if sess.manifest.executables.contains_key(n) {
+                sess.exe(n)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Initialize model state (params/opt/masks) on device via the AOT
+    /// `init` executable, then apply the method's mask policy.
+    pub fn init(&mut self) -> crate::Result<()> {
+        self.store.put_scalar_i32("seed", self.cfg.seed as i32);
+        self.run_exe("init")?;
+        match self.cfg.method {
+            Method::Slope => {}
+            Method::Dense | Method::Wanda => self.force_ones_masks()?,
+            Method::Srste | Method::SrsteLora => {} // masks unused by train_step_srste
+            Method::Fig9(_) => {
+                self.run_exe("fig9_init")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace every `masks.*` tensor with ones (dense baseline / Wanda
+    /// pre-prune phase) — fabricated host-side, no executable needed.
+    fn force_ones_masks(&mut self) -> crate::Result<()> {
+        let specs: Vec<_> = self
+            .manifest
+            .exe("train_step")?
+            .inputs
+            .iter()
+            .filter(|t| t.name.starts_with("masks."))
+            .cloned()
+            .collect();
+        for spec in specs {
+            self.store.put_const(&spec, 1.0)?;
+        }
+        Ok(())
+    }
+
+    fn step_exe(&self) -> &'static str {
+        match (&self.cfg.method, self.lora_active) {
+            (Method::Srste, _) | (Method::SrsteLora, false) => "train_step_srste",
+            (Method::Fig9(v), _) => fig9_exe(*v),
+            (_, true) => "train_step_lora",
+            (_, false) => "train_step",
+        }
+    }
+
+    /// Run the full schedule; returns the outcome summary.
+    pub fn train(&mut self) -> crate::Result<TrainOutcome> {
+        let lazy_enabled = self.cfg.lazy_steps() > 0
+            && matches!(self.cfg.method,
+                        Method::Slope | Method::Dense | Method::SrsteLora)
+            && self.has_exe("train_step_lora");
+        self.warmup(lazy_enabled)?;
+        self.eval_point(0)?;
+        let flip_at = self.cfg.sparse_steps();
+
+        let (b, s1) = self.manifest.train_tokens_shape();
+        let mut last_loss = f32::NAN;
+        for step in 1..=self.cfg.steps {
+            if lazy_enabled && !self.lora_active && step > flip_at {
+                self.activate_lora()?;
+            }
+            let wall0 = Instant::now();
+            let batch = self.corpus.train_batch(b, s1 - 1, &mut self.rng);
+            self.store.put_i32("tokens", &[b, s1], &batch.tokens)?;
+            let exe = self.step_exe();
+            let exec0 = Instant::now();
+            self.run_exe(exe)?;
+            let exec_ms = exec0.elapsed().as_secs_f64() * 1e3;
+            last_loss = self.store.read_scalar_f32("loss")?;
+            self.metrics.steps.push(StepRec {
+                step,
+                loss: last_loss,
+                wall_ms: wall0.elapsed().as_secs_f64() * 1e3,
+                exec_ms,
+                phase: if self.lora_active { "lora" } else { "sparse" },
+            });
+            if !last_loss.is_finite() {
+                eprintln!("[trainer] step {step}: loss diverged ({last_loss}); stopping");
+                break;
+            }
+            if step % self.cfg.eval_every == 0 || step == self.cfg.steps {
+                self.eval_point(step)?;
+            }
+            if matches!(self.cfg.method, Method::Srste | Method::SrsteLora)
+                && !self.lora_active
+                && step % self.churn_every() == 0
+            {
+                self.snapshot_srste_masks(step)?;
+            }
+            if self.lora_active && (step - flip_at) % 2 == 0 {
+                self.snapshot_adapters(step)?;
+            }
+        }
+
+        if matches!(self.cfg.method, Method::Wanda) {
+            self.apply_wanda_masks()?;
+            self.eval_point(self.cfg.steps + 1)?;
+        }
+        self.finalize_churn();
+        self.finalize_adapters();
+        let (acc, rank) = self.cloze_point(self.cfg.steps)?;
+        let _ = rank;
+
+        Ok(TrainOutcome {
+            final_loss: last_loss,
+            final_perplexity: self.metrics.final_perplexity().unwrap_or(f64::NAN),
+            cloze_accuracy: acc,
+            mean_step_ms: self.metrics.mean_step_wall_ms(),
+            coordinator_overhead: self.metrics.coordinator_overhead(),
+        })
+    }
+
+    /// Phase flip at the (1−λ)·T mark: materialize the lazy adapters.
+    fn activate_lora(&mut self) -> crate::Result<()> {
+        if matches!(self.cfg.method, Method::SrsteLora) {
+            // Project the dynamic run onto its converged magnitude mask so
+            // the lazy phase (and eval) run the sparse executables.
+            self.run_exe("magnitude_masks")?;
+            eprintln!("[trainer] SR-STE projected onto magnitude N:M masks");
+        }
+        self.store.put_scalar_i32("seed", (self.cfg.seed as i32) ^ 0x10AD);
+        self.run_exe("lora_init")?;
+        self.lora_active = true;
+        eprintln!(
+            "[trainer] lazy low-rank adapters activated (rank {}) at step {}",
+            self.manifest.config.adapter_rank,
+            self.cfg.sparse_steps()
+        );
+        Ok(())
+    }
+
+    /// SR-STE stores dense weights; project onto the current magnitude
+    /// mask before running the sparse eval/forward executables (this is
+    /// exactly what its STE forward computes).
+    fn refresh_dynamic_masks(&mut self) -> crate::Result<()> {
+        if matches!(self.cfg.method, Method::Srste | Method::SrsteLora)
+            && !self.lora_active
+            && self.has_exe("magnitude_masks")
+        {
+            self.run_exe("magnitude_masks")?;
+        }
+        Ok(())
+    }
+
+    /// Validation NLL/perplexity via the eval executable.
+    pub fn eval_point(&mut self, step: usize) -> crate::Result<f64> {
+        self.refresh_dynamic_masks()?;
+        let (b, s1) = self.manifest.train_tokens_shape();
+        let exe = if self.lora_active { "eval_step_lora" } else { "eval_step" };
+        if !self.has_exe(exe) {
+            return Ok(f64::NAN);
+        }
+        let mut nlls = vec![];
+        for i in 0..self.cfg.eval_batches {
+            let batch = self.corpus.val_batch(b, s1 - 1, i);
+            self.store.put_i32("tokens", &[b, s1], &batch.tokens)?;
+            self.run_exe(exe)?;
+            nlls.push(self.store.read_scalar_f32("loss")?);
+        }
+        let nll = nlls.iter().map(|v| *v as f64).sum::<f64>() / nlls.len().max(1) as f64;
+        let ppl = perplexity(&nlls);
+        self.metrics.evals.push(EvalRec { step, val_nll: nll, perplexity: ppl });
+        Ok(ppl)
+    }
+
+    /// Cloze probe via the forward executable (downstream stand-in).
+    pub fn cloze_point(&mut self, step: usize) -> crate::Result<(f64, f64)> {
+        self.refresh_dynamic_masks()?;
+        let exe = if self.lora_active { "forward_lora" } else { "forward" };
+        if !self.has_exe(exe) {
+            return Ok((f64::NAN, f64::NAN));
+        }
+        let c = &self.manifest.config;
+        let (b, s, v) = (c.batch_size, c.seq_len, c.vocab_size);
+        let mut accs = vec![];
+        let mut ranks = vec![];
+        for i in 0..self.cfg.eval_batches {
+            let (batch, answers) = self.corpus.cloze_batch(b, s, i);
+            self.store.put_i32("tokens", &[b, s], &batch.tokens)?;
+            self.run_exe(exe)?;
+            let logits = self.store.read_f32("logits")?;
+            let (acc, rank) = cloze_score(&logits, b, s, v, &answers);
+            accs.push(acc);
+            ranks.push(rank);
+        }
+        let acc = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+        let rank = ranks.iter().sum::<f64>() / ranks.len().max(1) as f64;
+        self.metrics.cloze.push(ClozeRec { step, accuracy: acc, mean_rank: rank });
+        Ok((acc, rank))
+    }
+
+    // -- Wanda -------------------------------------------------------------
+
+    /// One-shot Wanda prune of the (dense-trained) model: calibration
+    /// forward → activation-scaled N:M masks, installed for evaluation.
+    fn apply_wanda_masks(&mut self) -> crate::Result<()> {
+        let c = &self.manifest.config;
+        let (b, s) = (c.batch_size, c.seq_len);
+        let batch = self.corpus.val_batch(b, s - 1, 0);
+        // wanda_masks wants (B, S) tokens.
+        let mut toks = batch.tokens.clone();
+        toks.truncate(b * s);
+        // val_batch gives s tokens per row only if asked; rebuild exactly:
+        let batch = self.corpus.val_batch(b, s, 0);
+        toks = batch
+            .tokens
+            .chunks(s + 1)
+            .flat_map(|row| row[..s].iter().copied())
+            .collect();
+        self.store.put_i32("tokens", &[b, s], &toks)?;
+        self.run_exe("wanda_masks")?;
+        eprintln!("[trainer] applied Wanda one-shot masks");
+        Ok(())
+    }
+
+    // -- SR-STE mask churn (Figure 4) ---------------------------------------
+
+    fn churn_every(&self) -> usize {
+        (self.cfg.steps / 24).max(1)
+    }
+
+    fn snapshot_srste_masks(&mut self, step: usize) -> crate::Result<()> {
+        self.run_exe("srste_masks")?;
+        let names: Vec<String> = self
+            .manifest
+            .exe("srste_masks")?
+            .outputs
+            .iter()
+            .map(|t| t.name.clone())
+            .collect();
+        let mut bits: Vec<u64> = vec![];
+        let mut acc = 0u64;
+        let mut nbits = 0;
+        for name in names {
+            for v in self.store.read_f32(&name)? {
+                acc = (acc << 1) | u64::from(v != 0.0);
+                nbits += 1;
+                if nbits == 64 {
+                    bits.push(acc);
+                    acc = 0;
+                    nbits = 0;
+                }
+            }
+        }
+        if nbits > 0 {
+            bits.push(acc << (64 - nbits));
+        }
+        let prev_changed = self
+            .churn_snapshots
+            .last()
+            .map(|(_, prev)| hamming_frac(prev, &bits))
+            .unwrap_or(0.0);
+        self.churn_snapshots.push((step, bits));
+        self.metrics.churn.push(ChurnRec {
+            step,
+            frac_changed_vs_prev: prev_changed,
+            frac_changed_vs_final: f64::NAN,
+        });
+        Ok(())
+    }
+
+    fn finalize_churn(&mut self) {
+        if let Some((_, converged)) = self.churn_snapshots.last().cloned() {
+            for (rec, (_, snap)) in self.metrics.churn.iter_mut().zip(&self.churn_snapshots) {
+                rec.frac_changed_vs_final = hamming_frac(snap, &converged);
+            }
+        }
+    }
+
+    // -- Adapter convergence (Figure 3b) -------------------------------------
+
+    fn snapshot_adapters(&mut self, step: usize) -> crate::Result<()> {
+        let mut down = vec![];
+        let mut up = vec![];
+        let names: Vec<String> = self
+            .manifest
+            .exe("lora_init")?
+            .outputs
+            .iter()
+            .filter(|t| t.name.starts_with("lora."))
+            .map(|t| t.name.clone())
+            .collect();
+        for name in names {
+            let v = self.store.read_f32(&name)?;
+            if name.ends_with("_down") {
+                down.extend(v);
+            } else {
+                up.extend(v);
+            }
+        }
+        self.adapter_snapshots.push((step, down, up));
+        Ok(())
+    }
+
+    fn finalize_adapters(&mut self) {
+        if let Some((_, fd, fu)) = self.adapter_snapshots.last().cloned() {
+            for (step, d, u) in &self.adapter_snapshots {
+                self.metrics.adapters.push(AdapterRec {
+                    step: *step,
+                    cos_down: cosine_similarity(d, &fd) as f64,
+                    cos_up: cosine_similarity(u, &fu) as f64,
+                });
+            }
+        }
+    }
+}
+
+fn hamming_frac(a: &[u64], b: &[u64]) -> f64 {
+    let diff: u32 = a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()).sum();
+    diff as f64 / (64 * a.len().max(1)) as f64
+}
+
+fn fig9_exe(v: Fig9Variant) -> &'static str {
+    v.exe_name()
+}
+
+fn method_tag(m: &Method) -> String {
+    match m {
+        Method::Slope => "slope".into(),
+        Method::Dense => "dense".into(),
+        Method::Srste => "srste".into(),
+        Method::SrsteLora => "srste-lora".into(),
+        Method::Wanda => "wanda".into(),
+        Method::Fig9(v) => format!("fig9-{}", v.exe_name().trim_start_matches("train_step_fig9_")),
+    }
+}

@@ -1,0 +1,265 @@
+//! Zipf–Markov synthetic corpus generator, splits and batcher.
+
+use crate::util::Rng;
+
+/// Corpus hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    /// Total training tokens.
+    pub train_tokens: usize,
+    /// Validation tokens.
+    pub val_tokens: usize,
+    /// Zipf exponent for the unigram marginal.
+    pub zipf_s: f64,
+    /// Probability the bigram grammar fires (next = σ(prev)).
+    pub link_p: f64,
+    /// Probability of switching topic state per token.
+    pub topic_switch_p: f64,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    pub fn for_vocab(vocab: usize, seed: u64) -> Self {
+        Self {
+            vocab,
+            train_tokens: 1 << 18, // 262k tokens — plenty for 10⁵ step·token budgets
+            val_tokens: 1 << 14,
+            zipf_s: 1.1,
+            link_p: 0.55,
+            topic_switch_p: 0.01,
+            seed,
+        }
+    }
+}
+
+/// A (B, S+1) int32 token batch (inputs + shifted targets share storage).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq_plus_1: usize,
+    pub tokens: Vec<i32>,
+}
+
+/// Generated corpus with train/val splits and the grammar tables needed by
+/// the cloze probe.
+pub struct Corpus {
+    pub spec: CorpusSpec,
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    /// Topic permutations σ₀, σ₁ (the "grammar" the model must learn).
+    pub sigma: [Vec<u32>; 2],
+    zipf_cdf: Vec<f64>,
+    rng: Rng,
+}
+
+impl Corpus {
+    pub fn generate(spec: CorpusSpec) -> Self {
+        let mut rng = Rng::seed_from_u64(spec.seed);
+        // Zipf CDF over the vocab.
+        let mut w: Vec<f64> = (1..=spec.vocab).map(|r| 1.0 / (r as f64).powf(spec.zipf_s)).collect();
+        let total: f64 = w.iter().sum();
+        let mut acc = 0.0;
+        for v in w.iter_mut() {
+            acc += *v / total;
+            *v = acc;
+        }
+        let zipf_cdf = w;
+        // Two topic permutations.
+        let sigma = [random_perm(spec.vocab, &mut rng), random_perm(spec.vocab, &mut rng)];
+        let mut c = Corpus { spec, train: vec![], val: vec![], sigma, zipf_cdf, rng };
+        c.train = c.sample_stream(spec.train_tokens);
+        c.val = c.sample_stream(spec.val_tokens);
+        c
+    }
+
+    fn zipf_sample(&mut self) -> u32 {
+        let u: f64 = self.rng.f64();
+        match self.zipf_cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.spec.vocab - 1) as u32,
+        }
+    }
+
+    fn sample_stream(&mut self, len: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(len);
+        let mut topic = 0usize;
+        let mut prev = self.zipf_sample();
+        out.push(prev);
+        while out.len() < len {
+            if self.rng.chance(self.spec.topic_switch_p) {
+                topic = 1 - topic;
+            }
+            let next = if self.rng.chance(self.spec.link_p) {
+                self.sigma[topic][prev as usize]
+            } else {
+                self.zipf_sample()
+            };
+            out.push(next);
+            prev = next;
+        }
+        out
+    }
+
+    /// Entropy floor estimate (nats/token) of the generating process —
+    /// perplexities below exp(H) are impossible, giving the loss curves an
+    /// interpretable asymptote.
+    pub fn entropy_floor(&self) -> f64 {
+        // H = link_p·H(topic mix) + (1−link_p)·H(zipf); approximate the
+        // mixture as: -p·ln(p·…) — use a simple plug-in over the val split.
+        let mut counts = vec![0f64; self.spec.vocab];
+        for &t in &self.val {
+            counts[t as usize] += 1.0;
+        }
+        let n: f64 = self.val.len() as f64;
+        let h_uni: f64 = counts
+            .iter()
+            .filter(|c| **c > 0.0)
+            .map(|c| {
+                let p = c / n;
+                -p * p.ln()
+            })
+            .sum();
+        let p = self.spec.link_p;
+        // Conditional entropy given prev ≈ mix of the deterministic link
+        // (plus topic uncertainty ≈ 1 bit worst case) and the Zipf draw.
+        -(p * (p.ln())) - ((1.0 - p) * (1.0 - p).ln()) + (1.0 - p) * h_uni
+    }
+
+    /// Random training batch of shape (B, S+1).
+    pub fn train_batch(&self, b: usize, s: usize, rng: &mut Rng) -> Batch {
+        self.batch_from(&self.train, b, s, rng)
+    }
+
+    /// Deterministic validation batches covering the val split.
+    pub fn val_batch(&self, b: usize, s: usize, index: usize) -> Batch {
+        let need = s + 1;
+        let mut tokens = Vec::with_capacity(b * need);
+        let stride = (self.val.len() - need) / b.max(1);
+        for row in 0..b {
+            let start = (row * stride + index * need) % (self.val.len() - need);
+            tokens.extend(self.val[start..start + need].iter().map(|t| *t as i32));
+        }
+        Batch { batch: b, seq_plus_1: need, tokens }
+    }
+
+    fn batch_from(&self, data: &[u32], b: usize, s: usize, rng: &mut Rng) -> Batch {
+        let need = s + 1;
+        let mut tokens = Vec::with_capacity(b * need);
+        for _ in 0..b {
+            let start = rng.below(data.len() - need);
+            tokens.extend(data[start..start + need].iter().map(|t| *t as i32));
+        }
+        Batch { batch: b, seq_plus_1: need, tokens }
+    }
+
+    /// Cloze probe batch: (B, S) contexts drawn from val such that the
+    /// *last* transition observed many σ-link firings for the final token;
+    /// `answers[i]` = σ_topic(last token).  A model that learned the
+    /// grammar predicts answers at the final position.
+    pub fn cloze_batch(&self, b: usize, s: usize, index: usize) -> (Batch, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut answers = Vec::with_capacity(b);
+        let mut pos = (index * 7919) % (self.val.len() - s - 2);
+        let mut rows = 0;
+        while rows < b {
+            // Find a window whose final transition fired the grammar.
+            let end = pos + s;
+            if end + 1 >= self.val.len() {
+                pos = 0;
+                continue;
+            }
+            let last = self.val[end - 1] as usize;
+            let next = self.val[end];
+            if self.sigma[0][last] == next || self.sigma[1][last] == next {
+                tokens.extend(self.val[pos..end].iter().map(|t| *t as i32));
+                answers.push(next as i32);
+                rows += 1;
+            }
+            pos = (pos + s / 2 + 1) % (self.val.len() - s - 2);
+        }
+        (Batch { batch: b, seq_plus_1: s, tokens }, answers)
+    }
+}
+
+fn random_perm(n: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut v: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut v);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Corpus {
+        Corpus::generate(CorpusSpec {
+            train_tokens: 20_000,
+            val_tokens: 4_000,
+            ..CorpusSpec::for_vocab(128, 7)
+        })
+    }
+
+    #[test]
+    fn tokens_in_range_and_lengths() {
+        let c = small();
+        assert_eq!(c.train.len(), 20_000);
+        assert_eq!(c.val.len(), 4_000);
+        assert!(c.train.iter().all(|t| (*t as usize) < 128));
+    }
+
+    #[test]
+    fn zipf_marginal_is_skewed() {
+        let c = small();
+        let mut counts = vec![0usize; 128];
+        for &t in &c.train {
+            counts[t as usize] += 1;
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = sorted[..10].iter().sum();
+        assert!(top10 as f64 / c.train.len() as f64 > 0.25, "head mass too small");
+    }
+
+    #[test]
+    fn bigram_structure_present() {
+        let c = small();
+        let mut fired = 0usize;
+        for w in c.train.windows(2) {
+            if c.sigma[0][w[0] as usize] == w[1] || c.sigma[1][w[0] as usize] == w[1] {
+                fired += 1;
+            }
+        }
+        let rate = fired as f64 / (c.train.len() - 1) as f64;
+        assert!(rate > 0.45 && rate < 0.75, "link rate {rate}");
+    }
+
+    #[test]
+    fn batches_shape_and_determinism() {
+        let c = small();
+        let mut rng = Rng::seed_from_u64(0);
+        let b = c.train_batch(4, 32, &mut rng);
+        assert_eq!(b.tokens.len(), 4 * 33);
+        let v1 = c.val_batch(2, 16, 3);
+        let v2 = c.val_batch(2, 16, 3);
+        assert_eq!(v1.tokens, v2.tokens, "val batches must be deterministic");
+    }
+
+    #[test]
+    fn cloze_answers_follow_grammar() {
+        let c = small();
+        let (batch, answers) = c.cloze_batch(8, 24, 0);
+        assert_eq!(answers.len(), 8);
+        for row in 0..8 {
+            let last = batch.tokens[row * 24 + 23] as usize;
+            let a = answers[row] as u32;
+            assert!(c.sigma[0][last] == a || c.sigma[1][last] == a);
+        }
+    }
+
+    #[test]
+    fn entropy_floor_reasonable() {
+        let c = small();
+        let h = c.entropy_floor();
+        assert!(h > 0.5 && h < (128f64).ln() + 1.0, "H = {h}");
+    }
+}

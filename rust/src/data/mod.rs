@@ -1,0 +1,22 @@
+//! Synthetic pretraining corpus + batcher (DESIGN.md substitution: no
+//! OpenWebText on this testbed).
+//!
+//! The generator produces a *learnable* language with controlled structure,
+//! so perplexity and probe accuracy measure genuine model capacity:
+//!
+//! * **Zipfian unigram marginal** — like natural text, a few tokens carry
+//!   most of the mass (this is what makes dense > sparse gaps visible at
+//!   tiny scale: the tail needs capacity).
+//! * **Bigram grammar** — with probability `link_p`, token `t` is followed
+//!   by its partner `σ(t)` under a fixed random permutation σ.  A model
+//!   must learn the full V-entry table to reach the entropy floor.
+//! * **Topic states** — a slow 2-state Markov switch between two different
+//!   permutations, adding longer-range structure.
+//!
+//! The **cloze probe** (our zero-shot stand-in, §DESIGN 2) asks the model
+//! for `σ(t)` at positions where the grammar fired — a downstream-style
+//! accuracy signal distinct from raw perplexity.
+
+pub mod corpus;
+
+pub use corpus::{Batch, Corpus, CorpusSpec};

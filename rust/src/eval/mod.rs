@@ -1,0 +1,66 @@
+//! Evaluation: validation perplexity and the cloze probe (the downstream
+//! stand-in for the paper's zero-shot tasks — DESIGN.md §2).
+
+/// Aggregate mean NLL values into perplexity.
+pub fn perplexity(nlls: &[f32]) -> f64 {
+    if nlls.is_empty() {
+        return f64::NAN;
+    }
+    let mean = nlls.iter().map(|v| *v as f64).sum::<f64>() / nlls.len() as f64;
+    mean.exp()
+}
+
+/// Score a cloze batch from full logits.
+///
+/// `logits`: flattened (B, S, V); the probe answer for row `i` is scored at
+/// the final position (S-1).  Returns (top-1 accuracy, mean answer rank).
+pub fn cloze_score(logits: &[f32], b: usize, s: usize, v: usize, answers: &[i32]) -> (f64, f64) {
+    assert_eq!(logits.len(), b * s * v);
+    assert_eq!(answers.len(), b);
+    let mut correct = 0usize;
+    let mut rank_sum = 0.0;
+    for row in 0..b {
+        let off = row * s * v + (s - 1) * v;
+        let last = &logits[off..off + v];
+        let ans = answers[row] as usize;
+        let ans_score = last[ans];
+        let mut better = 0usize;
+        let mut best = 0usize;
+        for (tok, &sc) in last.iter().enumerate() {
+            if sc > ans_score {
+                better += 1;
+            }
+            if sc > last[best] {
+                best = tok;
+            }
+        }
+        if best == ans {
+            correct += 1;
+        }
+        rank_sum += (better + 1) as f64;
+    }
+    (correct as f64 / b as f64, rank_sum / b as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform_nll() {
+        let nll = (8f32).ln();
+        assert!((perplexity(&[nll, nll]) - 8.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cloze_scores_argmax_at_final_position() {
+        // b=2, s=2, v=3. Row 0 answer 1 (correct), row 1 answer 0 (rank 2).
+        let mut logits = vec![0.0f32; 2 * 2 * 3];
+        logits[3 + 1] = 5.0; // row0 pos1 tok1 best
+        logits[6 + 3 + 2] = 5.0; // row1 pos1 tok2 best
+        logits[6 + 3] = 1.0; // row1 answer tok0 second
+        let (acc, rank) = cloze_score(&logits, 2, 2, 3, &[1, 0]);
+        assert!((acc - 0.5).abs() < 1e-9);
+        assert!((rank - 1.5).abs() < 1e-9);
+    }
+}

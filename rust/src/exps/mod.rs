@@ -1,0 +1,79 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §5).
+//! Each prints paper-style rows to stdout and (optionally) dumps JSON next
+//! to the run metrics so EXPERIMENTS.md numbers are regenerable.
+
+pub mod accuracy;
+pub mod perf_tables;
+
+use crate::Result;
+
+/// Dispatch an experiment by its paper id (`table2`, `fig3a`, …).
+pub fn run(exp: &str, args: &ExpArgs) -> Result<()> {
+    match exp {
+        "table2" => perf_tables::table2(),
+        "table3" => perf_tables::table3(),
+        "table7" => perf_tables::table7(),
+        "table8" => perf_tables::table8(),
+        "table10" => perf_tables::table10(),
+        "table12" => perf_tables::table12(),
+        "fig3a" => perf_tables::fig3a(),
+        "fig5" => perf_tables::fig5(),
+        "fig6" => perf_tables::fig6(),
+        "fig8" => perf_tables::fig8(),
+        "mem" => perf_tables::memory_closed_forms(),
+        "fig2" => accuracy::fig2(args),
+        "table4" => accuracy::table4(args),
+        "table5" => accuracy::table5(args),
+        "table6" => accuracy::table6(args),
+        "table9" => accuracy::table9(args),
+        "fig3b" => accuracy::fig3b(args),
+        "fig4" => accuracy::fig4(args),
+        "fig7" => accuracy::fig7(args),
+        "fig9" => accuracy::fig9(args),
+        "fig10" => accuracy::fig10(args),
+        // All accuracy experiments in ONE process so compiled sessions are
+        // shared across experiments touching the same artifact config.
+        "all-acc" => {
+            for e in ["fig2", "fig4", "fig3b", "table9", "table6", "fig9",
+                      "fig10", "table4", "table5", "fig7"] {
+                println!("\n================ {e} ================");
+                if let Err(err) = run(e, args) {
+                    eprintln!("[exp] {e} FAILED: {err:#}");
+                }
+            }
+            Ok(())
+        }
+        "all-perf" => {
+            for e in ["table2", "table3", "table7", "table8", "table10", "table12",
+                      "fig3a", "fig5", "fig6", "fig8", "mem"] {
+                println!("\n================ {e} ================");
+                run(e, args)?;
+            }
+            Ok(())
+        }
+        other => Err(crate::eyre!(
+            "unknown experiment {other:?}; see DESIGN.md §5 for the index"
+        )),
+    }
+}
+
+/// Common knobs for the accuracy experiments (CPU-budget control).
+#[derive(Clone, Debug)]
+pub struct ExpArgs {
+    pub artifacts: std::path::PathBuf,
+    pub out_dir: std::path::PathBuf,
+    /// Steps per accuracy run (scaled-down default; paper-shape preserved).
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpArgs {
+    fn default() -> Self {
+        Self {
+            artifacts: "artifacts".into(),
+            out_dir: "runs".into(),
+            steps: 120,
+            seed: 0,
+        }
+    }
+}

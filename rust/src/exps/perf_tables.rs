@@ -1,0 +1,207 @@
+//! Analytic experiments: speedup/memory tables and kernel-level figures
+//! regenerated from the calibrated A100 simulator and the memory model.
+//! Paper-vs-measured comparisons are recorded in EXPERIMENTS.md.
+
+use crate::config::zoo::{self, ModelShape, BIMASK_MODELS, SPEEDUP_MODELS};
+use crate::memmodel;
+use crate::perfmodel::{
+    bimask_slowdown, cusparselt, dense_gemm_time, infer_time, sparse_gemm_time,
+    train_step_time, Gemm, InferOpts, Sparsity, TrainOpts, A100,
+};
+use crate::sparsity::{lemma, NmScheme};
+use crate::Result;
+
+const BATCH: usize = 8;
+const SEQ: usize = 2048;
+
+fn train_opts(sp: Sparsity, fa: bool) -> TrainOpts {
+    TrainOpts { sparsity: sp, flash_attention: fa, batch: BATCH, seq: SEQ }
+}
+
+fn infer_opts(sp: Sparsity, rank: usize, fused: bool, fa: bool) -> InferOpts {
+    InferOpts { sparsity: sp, flash_attention: fa, batch: BATCH, seq: SEQ,
+                adapter_rank: rank, fused_adapters: fused }
+}
+
+const SLOPE: Sparsity = Sparsity::Slope { tiled_upsample: true };
+const SLOPE_UNTILED: Sparsity = Sparsity::Slope { tiled_upsample: false };
+const FST: Sparsity = Sparsity::Fst { mask_interval: 128 };
+
+fn train_speedup(m: &ModelShape, sp: Sparsity) -> f64 {
+    train_step_time(&A100, m, &train_opts(Sparsity::Dense, true))
+        / train_step_time(&A100, m, &train_opts(sp, true))
+}
+
+fn infer_speedup(m: &ModelShape, sp: Sparsity, rank_ratio: f64, fused: bool) -> f64 {
+    let rank = (m.d_model as f64 * rank_ratio).round() as usize;
+    infer_time(&A100, m, &infer_opts(Sparsity::Dense, 0, fused, true))
+        / infer_time(&A100, m, &infer_opts(sp, rank, fused, true))
+}
+
+/// Table 2: end-to-end pretraining and inference speedup, SLoPe vs FST.
+pub fn table2() -> Result<()> {
+    println!("Table 2 — speedup (×) vs dense   [paper: SLoPe train 1.13–1.25, infer 1.31–1.54; FST train 1.06–1.11, infer 1.00]");
+    println!("{:<17} {:<7} {:>8} {:>10} {:>14} {:>14}",
+             "MODEL", "METHOD", "TRAIN", "INFER r=0", "INFER 1.56%", "INFER 6.25%");
+    for m in SPEEDUP_MODELS {
+        println!("{:<17} {:<7} {:>8.2} {:>10.2} {:>14.2} {:>14.2}",
+                 m.name, "SLoPe",
+                 train_speedup(&m, SLOPE),
+                 infer_speedup(&m, SLOPE, 0.0, true),
+                 infer_speedup(&m, SLOPE, 0.0156, true),
+                 infer_speedup(&m, SLOPE, 0.0625, true));
+        println!("{:<17} {:<7} {:>8.2} {:>10.2} {:>14.2} {:>14.2}",
+                 "", "FST",
+                 train_speedup(&m, FST),
+                 infer_speedup(&m, FST, 0.0, true),
+                 infer_speedup(&m, FST, 0.0156, true),
+                 infer_speedup(&m, FST, 0.0625, true));
+    }
+    Ok(())
+}
+
+/// Table 3: end-to-end memory ratio (× of dense), training and inference.
+pub fn table3() -> Result<()> {
+    let s = NmScheme::TWO_FOUR;
+    println!("Table 3 — memory (× of dense)   [paper: SLoPe train 0.63–0.68, infer 0.60–0.71; FST train 1.15–1.27]");
+    println!("{:<17} {:<7} {:>8} {:>10} {:>14} {:>14}",
+             "MODEL", "METHOD", "TRAIN", "INFER r=0", "INFER 1.56%", "INFER 6.25%");
+    for m in SPEEDUP_MODELS {
+        println!("{:<17} {:<7} {:>8.2} {:>10.2} {:>14.2} {:>14.2}",
+                 m.name, "SLoPe",
+                 memmodel::training_memory(&m, s).ratio(),
+                 memmodel::inference_memory(&m, s, 0.0).ratio(),
+                 memmodel::inference_memory(&m, s, 0.0156).ratio(),
+                 memmodel::inference_memory(&m, s, 0.0625).ratio());
+        println!("{:<17} {:<7} {:>8.2} {:>10.2} {:>14.2} {:>14.2}",
+                 "", "FST",
+                 memmodel::fst_training_memory(&m, s).ratio(), 1.0, 1.0, 1.0);
+    }
+    Ok(())
+}
+
+/// Table 7: naive vs fused adapter implementation (Appendix D).
+pub fn table7() -> Result<()> {
+    println!("Table 7 — inference speedup before→after adapter fusion   [paper: up to +6%]");
+    println!("{:<17} {:>20} {:>20}", "MODEL", "1.56% naive→fused", "6.25% naive→fused");
+    for m in [zoo::OPT_66B, zoo::OPT_30B, zoo::OPT_13B, zoo::OPT_6_6B, zoo::OPT_2_6B] {
+        println!("{:<17} {:>9.2}→{:<9.2} {:>9.2}→{:<9.2}",
+                 m.name,
+                 infer_speedup(&m, SLOPE, 0.0156, false),
+                 infer_speedup(&m, SLOPE, 0.0156, true),
+                 infer_speedup(&m, SLOPE, 0.0625, false),
+                 infer_speedup(&m, SLOPE, 0.0625, true));
+    }
+    Ok(())
+}
+
+/// Table 8: upsample square tiling before→after (Appendix E).
+pub fn table8() -> Result<()> {
+    println!("Table 8 — speedup before→after upsample tiling   [paper: train +4%, infer +12%]");
+    println!("{:<17} {:>22} {:>22}", "MODEL", "TRAIN untiled→tiled", "INFER untiled→tiled");
+    for m in [zoo::OPT_66B, zoo::OPT_30B, zoo::OPT_13B, zoo::OPT_6_6B, zoo::OPT_2_6B] {
+        println!("{:<17} {:>10.2}→{:<10.2} {:>10.2}→{:<10.2}",
+                 m.name,
+                 train_speedup(&m, SLOPE_UNTILED), train_speedup(&m, SLOPE),
+                 infer_speedup(&m, SLOPE_UNTILED, 0.0, true),
+                 infer_speedup(&m, SLOPE, 0.0, true));
+    }
+    Ok(())
+}
+
+/// Table 10: Bi-Mask end-to-end slowdown vs dense (Appendix H).
+pub fn table10() -> Result<()> {
+    println!("Table 10 — Bi-Mask slowdown (×) vs dense   [paper: 3.01–8.41]");
+    println!("{:<15} {:<10} {:>10}", "MODEL", "DATASET", "SLOWDOWN");
+    for cnn in BIMASK_MODELS {
+        println!("{:<15} {:<10} {:>10.2}", cnn.name, cnn.dataset, bimask_slowdown(&A100, cnn));
+    }
+    Ok(())
+}
+
+/// Table 12: SLoPe × FlashAttention-2 composition (Appendix M).
+pub fn table12() -> Result<()> {
+    println!("Table 12 — FA2/SLoPe composition, speedup vs dense-noFA   [paper: FA2 1.28–2.26 train; SLoPe+FA2 1.53–2.56]");
+    println!("{:<12} {:>8} {:>8} {:>12} | {:>8} {:>10} {:>12}",
+             "MODEL", "FA2", "SLoPe", "SLoPe+FA2", "inf FA2", "inf SLoPe", "inf S+FA2");
+    for m in [zoo::OPT_66B, zoo::OPT_30B, zoo::OPT_13B, zoo::OPT_6_6B, zoo::OPT_2_6B] {
+        let base_t = train_step_time(&A100, &m, &train_opts(Sparsity::Dense, false));
+        let t = |sp, fa| base_t / train_step_time(&A100, &m, &train_opts(sp, fa));
+        let base_i = infer_time(&A100, &m, &infer_opts(Sparsity::Dense, 0, true, false));
+        let i = |sp, fa| base_i / infer_time(&A100, &m, &infer_opts(sp, 0, true, fa));
+        println!("{:<12} {:>8.2} {:>8.2} {:>12.2} | {:>8.2} {:>10.2} {:>12.2}",
+                 m.name,
+                 t(Sparsity::Dense, true), t(SLOPE, false), t(SLOPE, true),
+                 i(Sparsity::Dense, true), i(SLOPE, false), i(SLOPE, true));
+    }
+    Ok(())
+}
+
+/// Figure 3a: cuSPARSELt SpMM speedup vs hidden dim per tensor role.
+pub fn fig3a() -> Result<()> {
+    println!("Figure 3a — SpMM speedup vs dense (batch 2048)   [paper: rises toward 2×; upsample cliff ≈4000]");
+    println!("{:>8} {:>12} {:>12} {:>12}", "hidden", "attention", "upsample", "downsample");
+    for h in [512usize, 1024, 2048, 3072, 4096, 6144, 8192, 12288] {
+        let sp = |g: Gemm| dense_gemm_time(&A100, &g) / sparse_gemm_time(&A100, &g, false);
+        let att = sp(Gemm::new(2048, h, h));
+        let up = sp(Gemm::new(2048, 4 * h, h));
+        let down = sp(Gemm::new(2048, h / 4, h));
+        println!("{:>8} {:>12.2} {:>12.2} {:>12.2}", h, att, up, down);
+    }
+    Ok(())
+}
+
+/// Figure 5: cuSPARSELt setup vs multiply time for square matrices.
+pub fn fig5() -> Result<()> {
+    println!("Figure 5 — setup vs multiply (ms), square matrices   [paper: setup ≫ multiply]");
+    println!("{:>8} {:>12} {:>12} {:>8}", "dim", "setup", "multiply", "ratio");
+    for d in [1024usize, 2048, 4096, 8192, 12288] {
+        let setup = cusparselt::setup_time_s(d, d) * 1e3;
+        let mult = sparse_gemm_time(&A100, &Gemm::new(d, d, d), false) * 1e3;
+        println!("{:>8} {:>12.3} {:>12.3} {:>8.1}", d, setup, mult, setup / mult);
+    }
+    Ok(())
+}
+
+/// Figure 6: low-rank adapter speedup vs the ideal d/r scaling.
+pub fn fig6() -> Result<()> {
+    println!("Figure 6 — low-rank speedup vs ideal (batch 2048)   [paper: far below ideal at small r]");
+    println!("{:>8} {:>6} {:>12} {:>10} {:>10}", "dim", "rank", "observed", "ideal", "frac");
+    for d in [2048usize, 4096, 8192] {
+        for r in [16usize, 64, 256, 1024] {
+            let dense = dense_gemm_time(&A100, &Gemm::new(2048, d, d));
+            let lora = dense_gemm_time(&A100, &Gemm::new(2048, r, d))
+                + dense_gemm_time(&A100, &Gemm::new(2048, d, r));
+            let obs = dense / lora;
+            let ideal = d as f64 / (2.0 * r as f64);
+            println!("{:>8} {:>6} {:>12.2} {:>10.1} {:>10.2}", d, r, obs, ideal, obs / ideal);
+        }
+    }
+    Ok(())
+}
+
+/// Figure 8: imposed sparsity of the double-pruned backward pass.
+pub fn fig8() -> Result<()> {
+    let mut rng = crate::util::Rng::seed_from_u64(8);
+    println!("Figure 8 — extra zeros imposed by double pruning   [Lemma 2.1 closed form + Monte Carlo]");
+    println!("{:>6} {:>14} {:>14}", "N:M", "closed form", "monte carlo");
+    for (n, m) in [(1usize, 2usize), (1, 4), (2, 4), (2, 8), (4, 8), (4, 16)] {
+        let s = NmScheme::new(n, m);
+        let cf = lemma::imposed_sparsity(s);
+        let mc = lemma::monte_carlo_imposed_sparsity(s, 8 * m, 3, &mut rng);
+        println!("{:>6} {:>13.2}% {:>13.2}%", format!("{n}:{m}"), cf * 100.0, mc * 100.0);
+    }
+    println!("note: paper prose quotes 3.39% for 2:8; its own Eq. 8 gives 5.84% (see EXPERIMENTS.md)");
+    Ok(())
+}
+
+/// §3.1 closed-form memory ratios.
+pub fn memory_closed_forms() -> Result<()> {
+    let s = NmScheme::TWO_FOUR;
+    println!("§3.1 closed forms (pure 2:4 linear):");
+    println!("  training : {:.1}% of dense  (paper: ≈63–68%)",
+             memmodel::theoretical_train_ratio(s) * 100.0);
+    println!("  inference: {:.1}% of dense  (paper: ≈54–59%)",
+             memmodel::theoretical_infer_ratio(s) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! # SLoPe — Double-Pruned Sparse Plus Lazy Low-Rank Adapter Pretraining
+//!
+//! Rust L3 coordinator for the three-layer (rust → JAX → Pallas, AOT via
+//! PJRT) reproduction of *SLoPe* (ICLR 2025).  See `DESIGN.md` for the
+//! system inventory and the per-experiment index.
+//!
+//! Layer map:
+//! * [`runtime`]     — loads `artifacts/*.hlo.txt` (lowered once by
+//!   `python/compile/aot.py`) and executes them on the PJRT CPU client.
+//! * [`coordinator`] — the pretraining orchestrator: phase schedule (99%
+//!   sparse → 1% lazy low-rank adapters), baselines, metrics.
+//! * [`sparsity`] / [`backend`] — the N:M math and the Algorithm-1 sparse
+//!   kernel backend (CPU reference for cuSPARSELt's role).
+//! * [`perfmodel`] / [`memmodel`] — the calibrated A100 analytical
+//!   simulator and the bit-exact memory accounting that regenerate the
+//!   paper's speedup/memory tables.
+//! * [`data`] / [`eval`] — synthetic pretraining corpus and evaluation.
+//! * [`util`]        — offline substrates (PRNG, JSON, bench harness,
+//!   property testing); see DESIGN.md §2.
+
+pub mod backend;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exps;
+pub mod memmodel;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sparsity;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::Result;
+
+/// Error-construction macro (kept under the familiar name).
+#[macro_export]
+macro_rules! eyre {
+    ($($t:tt)*) => { anyhow::anyhow!($($t)*) };
+}

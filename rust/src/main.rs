@@ -1,0 +1,181 @@
+//! `slope` — the L3 coordinator CLI (hand-rolled arg parsing; this build
+//! environment is offline, see DESIGN.md §2).
+//!
+//! ```text
+//! slope train --model gpt-nano --method slope --steps 200     # one pretraining run
+//! slope exp fig2 --steps 120                                  # regenerate a paper table/figure
+//! slope exp all-perf                                          # all analytic tables at once
+//! slope info --model gpt-nano                                 # inspect a manifest
+//! slope list                                                  # available artifact configs
+//! ```
+
+use slope::config::{Fig9Variant, Method, RunConfig};
+use slope::coordinator::Trainer;
+use slope::exps::{self, ExpArgs};
+use slope::runtime::Manifest;
+use slope::util::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+slope — SLoPe (ICLR'25) rust coordinator
+
+USAGE:
+  slope train [--model M] [--method METH] [--steps N] [--lazy-fraction F]
+              [--eval-every N] [--seed S] [--artifacts DIR] [--out-dir DIR]
+  slope exp <ID> [--steps N] [--seed S] [--artifacts DIR] [--out-dir DIR]
+  slope info [--model M] [--artifacts DIR]
+  slope list [--artifacts DIR]
+
+METH: slope | dense | srste | srste-lora | wanda | fig9:<variant>
+ID:   table2|table3|table4|table5|table6|table7|table8|table9|table10|table12
+      fig2|fig3a|fig3b|fig4|fig5|fig6|fig7|fig8|fig9|fig10|mem|all-perf
+";
+
+/// Minimal `--key value` flag parser (positional args returned separately).
+struct Flags {
+    map: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> slope::Result<Self> {
+        let mut map = HashMap::new();
+        let mut positional = vec![];
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| slope::eyre!("flag --{key} needs a value"))?;
+                map.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(args[i].clone());
+                i += 1;
+            }
+        }
+        Ok(Self { map, positional })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.map.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> slope::Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| slope::eyre!("--{key}: {e}")),
+        }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> slope::Result<f64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| slope::eyre!("--{key}: {e}")),
+        }
+    }
+}
+
+fn parse_method(s: &str) -> slope::Result<Method> {
+    Ok(match s {
+        "slope" => Method::Slope,
+        "dense" => Method::Dense,
+        "srste" => Method::Srste,
+        "srste-lora" => Method::SrsteLora,
+        "wanda" => Method::Wanda,
+        "fig9:weight_static" => Method::Fig9(Fig9Variant::WeightStatic),
+        "fig9:weight_dynamic" => Method::Fig9(Fig9Variant::WeightDynamic),
+        "fig9:input_static" => Method::Fig9(Fig9Variant::InputStatic),
+        "fig9:input_dynamic" => Method::Fig9(Fig9Variant::InputDynamic),
+        "fig9:gradout_dynamic" => Method::Fig9(Fig9Variant::GradoutDynamic),
+        other => return Err(slope::eyre!("unknown method {other:?}\n{USAGE}")),
+    })
+}
+
+fn main() -> slope::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&argv[1..])?;
+    let artifacts = PathBuf::from(flags.get("artifacts", "artifacts"));
+    let out_dir = PathBuf::from(flags.get("out-dir", "runs"));
+
+    match cmd {
+        "train" => {
+            let cfg = RunConfig {
+                model: flags.get("model", "gpt-nano"),
+                method: parse_method(&flags.get("method", "slope"))?,
+                steps: flags.usize("steps", 200)?,
+                lazy_fraction: flags.f64("lazy-fraction", 0.05)?,
+                eval_every: flags.usize("eval-every", 25)?,
+                eval_batches: flags.usize("eval-batches", 4)?,
+                seed: flags.usize("seed", 0)? as u64,
+                artifacts,
+                out_dir: out_dir.clone(),
+            };
+            let mut t = Trainer::new(cfg)?;
+            t.init()?;
+            let outcome = t.train()?;
+            let path = t.metrics.save(&out_dir)?;
+            println!("\n== run complete ==");
+            println!("final loss        : {:.4}", outcome.final_loss);
+            println!("final perplexity  : {:.3}", outcome.final_perplexity);
+            println!("cloze accuracy    : {:.1}%", outcome.cloze_accuracy * 100.0);
+            println!("mean step wall    : {:.1} ms", outcome.mean_step_ms);
+            println!("coordinator ovhd  : {:.2}%", outcome.coordinator_overhead * 100.0);
+            println!("metrics           : {}", path.display());
+        }
+        "exp" => {
+            let id = flags
+                .positional
+                .first()
+                .ok_or_else(|| slope::eyre!("exp needs an id\n{USAGE}"))?;
+            let args = ExpArgs {
+                artifacts,
+                out_dir,
+                steps: flags.usize("steps", 120)?,
+                seed: flags.usize("seed", 0)? as u64,
+            };
+            exps::run(id, &args)?;
+        }
+        "info" => {
+            let model = flags.get("model", "gpt-nano");
+            let m = Manifest::load(&artifacts.join(&model))?;
+            let c = &m.config;
+            println!("config {}: d={} L={} heads={} ffn={} seq={} batch={} vocab={} rank={}",
+                     c.name, c.d_model, c.n_layer, c.n_head, c.d_ff, c.seq_len,
+                     c.batch_size, c.vocab_size, c.adapter_rank);
+            println!("~{:.2}M dense params; sparsity {}:{} / {}:{}; prune attn={} mlp={}",
+                     c.n_params_dense as f64 / 1e6,
+                     c.first_half_sparsity.0, c.first_half_sparsity.1,
+                     c.second_half_sparsity.0, c.second_half_sparsity.1,
+                     c.prune_attn, c.prune_mlp);
+            let mut names: Vec<_> = m.executables.keys().collect();
+            names.sort();
+            for n in names {
+                let e = &m.executables[n];
+                println!("  {n:<36} {} in / {} out", e.inputs.len(), e.outputs.len());
+            }
+        }
+        "list" => {
+            let index = Json::parse(&std::fs::read_to_string(artifacts.join("index.json"))?)?;
+            for (name, info) in index.as_obj().into_iter().flatten() {
+                let sets: Vec<&str> = info
+                    .get("sets")
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_str()).collect())
+                    .unwrap_or_default();
+                println!("{name:<22} {}", sets.join(","));
+            }
+        }
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => {
+            print!("{USAGE}");
+            return Err(slope::eyre!("unknown command {other:?}"));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! `manifest.json` schema — written by `python/compile/aot.py`, consumed by
+//! the parameter store and executor.  The manifest is the ONLY contract
+//! between build-time python and the runtime: flattened input/output
+//! orders (dotted path names), shapes and dtypes per executable.
+//!
+//! Parsed with the in-tree JSON parser ([`crate::util::json`]).
+
+use crate::util::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|d| *d as i64).collect()
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(Self {
+            name: j.req_str("name")?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| crate::eyre!("shape not an array"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j.req_str("dtype")?.to_string(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExeSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub adapter_rank: usize,
+    pub first_half_sparsity: (usize, usize),
+    pub second_half_sparsity: (usize, usize),
+    pub prune_attn: bool,
+    pub prune_mlp: bool,
+    pub n_params_dense: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainParams {
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub lazy_fraction: f64,
+    pub srste_decay: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub train: TrainParams,
+    pub executables: HashMap<String, ExeSpec>,
+    pub dir: PathBuf,
+}
+
+fn pair(j: &Json, key: &str) -> crate::Result<(usize, usize)> {
+    let a = j.req(key)?;
+    Ok((
+        a.idx(0).and_then(|v| v.as_usize()).unwrap_or(2),
+        a.idx(1).and_then(|v| v.as_usize()).unwrap_or(4),
+    ))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| crate::eyre!("reading {}/manifest.json: {e}", dir.display()))?;
+        let j = Json::parse(&text)?;
+        let c = j.req("config")?;
+        let config = ModelConfig {
+            name: c.req_str("name")?.to_string(),
+            vocab_size: c.req_usize("vocab_size")?,
+            n_layer: c.req_usize("n_layer")?,
+            n_head: c.req_usize("n_head")?,
+            d_model: c.req_usize("d_model")?,
+            d_ff: c.req_usize("d_ff")?,
+            seq_len: c.req_usize("seq_len")?,
+            batch_size: c.req_usize("batch_size")?,
+            adapter_rank: c.req_usize("adapter_rank")?,
+            first_half_sparsity: pair(c, "first_half_sparsity")?,
+            second_half_sparsity: pair(c, "second_half_sparsity")?,
+            prune_attn: c.req_bool("prune_attn")?,
+            prune_mlp: c.req_bool("prune_mlp")?,
+            n_params_dense: c.req_usize("n_params_dense")?,
+        };
+        let t = j.req("train")?;
+        let train = TrainParams {
+            lr: t.req_f64("lr")?,
+            weight_decay: t.req_f64("weight_decay")?,
+            warmup_steps: t.req_usize("warmup_steps")?,
+            total_steps: t.req_usize("total_steps")?,
+            lazy_fraction: t.req_f64("lazy_fraction")?,
+            srste_decay: t.req_f64("srste_decay")?,
+        };
+        let mut executables = HashMap::new();
+        for (name, e) in j
+            .req("executables")?
+            .as_obj()
+            .ok_or_else(|| crate::eyre!("executables not an object"))?
+        {
+            let inputs = e
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<crate::Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<crate::Result<Vec<_>>>()?;
+            executables.insert(
+                name.clone(),
+                ExeSpec { file: e.req_str("file")?.to_string(), inputs, outputs },
+            );
+        }
+        Ok(Manifest { config, train, executables, dir: dir.to_path_buf() })
+    }
+
+    pub fn exe(&self, name: &str) -> crate::Result<&ExeSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| crate::eyre!("manifest {} has no executable {name:?}", self.config.name))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> crate::Result<PathBuf> {
+        Ok(self.dir.join(&self.exe(name)?.file))
+    }
+
+    /// Batch-of-tokens shape for the train/eval steps: (B, S+1).
+    pub fn train_tokens_shape(&self) -> (usize, usize) {
+        (self.config.batch_size, self.config.seq_len + 1)
+    }
+}

@@ -1,0 +1,132 @@
+//! PJRT runtime: load AOT artifacts (`*.hlo.txt`), compile them once on
+//! the CPU client, and drive them from the coordinator's step loop.
+//!
+//! Python never runs here — the HLO text was lowered once by
+//! `python/compile/aot.py` (`make artifacts`); this module is the bridge
+//! described in DESIGN.md §3 ("Runtime").
+//!
+//! Design notes:
+//! * Executables are compiled lazily and cached (`Session::exe`); an
+//!   accuracy experiment touching 3 of a config's 14 executables pays for 3.
+//! * Step state lives in a name-keyed [`Store`] of literals.  The AOT
+//!   signature convention (manifest input/output names) lets outputs feed
+//!   the next step's inputs by name — `params.*`, `opt.*` round-trip,
+//!   `tokens` is injected fresh each step by the data pipeline.
+//! * xla-rs 0.1.6 returns tuple results as a single tuple literal (no
+//!   buffer-level donation/untupling), so state round-trips through host
+//!   literals; on the CPU PJRT backend device==host and the copy is a
+//!   memcpy — measured < 3% of step time for every config we ship
+//!   (EXPERIMENTS.md §Perf).
+
+pub mod manifest;
+pub mod store;
+
+pub use manifest::{ExeSpec, Manifest, TensorSpec};
+pub use store::Store;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Shared session handle: XLA compiles are expensive (20–60 s for the
+/// train steps), so sessions are cached per artifact directory and shared
+/// across runs within a thread (`Session::open_cached`).  PJRT handles in
+/// xla-rs 0.1.6 are `!Send`, so the cache is thread-local.
+pub type SessionHandle = Rc<RefCell<Session>>;
+
+thread_local! {
+    static SESSION_CACHE: RefCell<HashMap<PathBuf, SessionHandle>> =
+        RefCell::new(HashMap::new());
+}
+
+/// A compiled artifact bundle for one model config.
+pub struct Session {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Session {
+    /// Load the manifest for `artifacts/<config>` and create the CPU client.
+    pub fn open(artifact_dir: &Path) -> crate::Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::eyre!("PJRT cpu client: {e}"))?;
+        Ok(Self { manifest, client, cache: HashMap::new() })
+    }
+
+    /// Process-wide cached open: reuses compiled executables across runs on
+    /// the same artifact config (the experiment sweeps hit each config with
+    /// several methods).
+    pub fn open_cached(artifact_dir: &Path) -> crate::Result<SessionHandle> {
+        SESSION_CACHE.with(|cache| {
+            let mut cache = cache.borrow_mut();
+            if let Some(h) = cache.get(artifact_dir) {
+                return Ok(h.clone());
+            }
+            let h = Rc::new(RefCell::new(Self::open(artifact_dir)?));
+            cache.insert(artifact_dir.to_path_buf(), h.clone());
+            Ok(h)
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable by manifest name.
+    pub fn exe(&mut self, name: &str) -> crate::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.manifest.hlo_path(name)?;
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| crate::eyre!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| crate::eyre!("compiling {name}: {e}"))?;
+            eprintln!(
+                "[runtime] compiled {name} ({} in / {} out) in {:.1}s",
+                self.manifest.exe(name)?.inputs.len(),
+                self.manifest.exe(name)?.outputs.len(),
+                t0.elapsed().as_secs_f32()
+            );
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Run an executable: gather inputs from the store by manifest order,
+    /// execute, untuple, and scatter outputs back into the store by name.
+    /// Returns the output names in order (for callers that want scalars).
+    pub fn run(&mut self, name: &str, store: &mut Store) -> crate::Result<()> {
+        let spec = self.manifest.exe(name)?.clone();
+        let args: Vec<&xla::Literal> = spec
+            .inputs
+            .iter()
+            .map(|t| store.get(&t.name))
+            .collect::<crate::Result<_>>()?;
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| crate::eyre!("executing {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| crate::eyre!("fetching {name} result: {e}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| crate::eyre!("untupling {name} result: {e}"))?;
+        if outs.len() != spec.outputs.len() {
+            return Err(crate::eyre!(
+                "{name}: manifest says {} outputs, HLO returned {}",
+                spec.outputs.len(),
+                outs.len()
+            ));
+        }
+        for (t, lit) in spec.outputs.iter().zip(outs) {
+            store.insert(&t.name, lit);
+        }
+        Ok(())
+    }
+}

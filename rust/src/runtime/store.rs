@@ -1,0 +1,124 @@
+//! Name-keyed literal store: the runtime's training state.
+//!
+//! Keys are the manifest's dotted path names (`params.blocks.0.wqkv`,
+//! `opt.m.lnf_g`, `tokens`, …).  The store also knows how to fabricate
+//! structured constants the coordinator needs without an executable round
+//! trip: all-ones masks (dense baseline), zero adapters, i32 token batches.
+
+use super::manifest::TensorSpec;
+use std::collections::HashMap;
+
+pub struct Store {
+    map: HashMap<String, xla::Literal>,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Self { map: HashMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, lit: xla::Literal) {
+        self.map.insert(name.to_string(), lit);
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&xla::Literal> {
+        self.map
+            .get(name)
+            .ok_or_else(|| crate::eyre!("store missing tensor {name:?}"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<xla::Literal> {
+        self.map.remove(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.map.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Copy a tensor under a new name (literals clone cheaply enough at our
+    /// scales; used for snapshotting converged adapters in Fig 3b).
+    pub fn duplicate(&mut self, from: &str, to: &str) -> crate::Result<()> {
+        let v = self.get(from)?;
+        let fresh = clone_literal(v)?;
+        self.map.insert(to.to_string(), fresh);
+        Ok(())
+    }
+
+    // -- constructors ------------------------------------------------------
+
+    pub fn put_f32(&mut self, name: &str, shape: &[usize], data: &[f32]) -> crate::Result<()> {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| crate::eyre!("reshape {name}: {e}"))?;
+        self.insert(name, lit);
+        Ok(())
+    }
+
+    pub fn put_i32(&mut self, name: &str, shape: &[usize], data: &[i32]) -> crate::Result<()> {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| crate::eyre!("reshape {name}: {e}"))?;
+        self.insert(name, lit);
+        Ok(())
+    }
+
+    pub fn put_scalar_i32(&mut self, name: &str, v: i32) {
+        self.insert(name, xla::Literal::scalar(v));
+    }
+
+    /// Fabricate a tensor of a constant value matching `spec` (used for
+    /// ones-masks in the dense baseline and zero adapters).
+    pub fn put_const(&mut self, spec: &TensorSpec, value: f32) -> crate::Result<()> {
+        match spec.dtype.as_str() {
+            "float32" => {
+                self.put_f32(&spec.name, &spec.shape, &vec![value; spec.elem_count()])
+            }
+            "int32" => self.put_i32(&spec.name, &spec.shape, &vec![value as i32; spec.elem_count()]),
+            other => Err(crate::eyre!("put_const: unsupported dtype {other}")),
+        }
+    }
+
+    // -- readers -----------------------------------------------------------
+
+    pub fn read_f32(&self, name: &str) -> crate::Result<Vec<f32>> {
+        let lit = self.get(name)?;
+        lit.to_vec::<f32>().map_err(|e| crate::eyre!("read {name}: {e}"))
+    }
+
+    pub fn read_scalar_f32(&self, name: &str) -> crate::Result<f32> {
+        Ok(self.read_f32(name)?[0])
+    }
+}
+
+fn clone_literal(lit: &xla::Literal) -> crate::Result<xla::Literal> {
+    // Literal doesn't implement Clone in xla-rs 0.1.6; round-trip via host.
+    let shape = lit.array_shape().map_err(|e| crate::eyre!("{e}"))?;
+    let dims: Vec<i64> = shape.dims().iter().map(|d| *d as i64).collect();
+    match lit.ty().map_err(|e| crate::eyre!("{e}"))? {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| crate::eyre!("{e}"))?;
+            xla::Literal::vec1(&v).reshape(&dims).map_err(|e| crate::eyre!("{e}"))
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| crate::eyre!("{e}"))?;
+            xla::Literal::vec1(&v).reshape(&dims).map_err(|e| crate::eyre!("{e}"))
+        }
+        other => Err(crate::eyre!("clone_literal: unsupported {other:?}")),
+    }
+}

@@ -1,0 +1,210 @@
+//! Compressed N:M storage (the cuSPARSELt "compressed matrix" role).
+//!
+//! Layout matches `python/compile/sparsity.compress_nm` semantics: for a
+//! `d_out × d_in` weight under an N:M row mask, store
+//! * `values`:  `d_out × (d_in·N/M)` kept values, group-major, padded with
+//!   zeros when a group has fewer than N survivors;
+//! * `indices`: same shape, the absolute column index of each value
+//!   (strictly increasing within each group).
+//!
+//! `index_bits()` accounts metadata at the Eq.-7 rate (e.g. 3 bits per
+//! kept pair for 2:4), which is what the memory model charges; the in-RAM
+//! representation uses `u16` for simplicity (cols < 65536 in every model
+//! we instantiate on CPU).
+
+use super::{Mask, NmScheme};
+use crate::tensor::Matrix;
+
+/// A matrix compressed under an N:M row scheme.
+#[derive(Clone, Debug)]
+pub struct CompressedNm {
+    pub rows: usize,
+    /// Original (dense) number of columns.
+    pub cols: usize,
+    pub scheme: NmScheme,
+    /// `rows × cols·N/M` kept values, row-major.
+    pub values: Vec<f32>,
+    /// Absolute dense column index per kept value.
+    pub indices: Vec<u16>,
+}
+
+impl CompressedNm {
+    /// Kept entries per row.
+    #[inline]
+    pub fn kcols(&self) -> usize {
+        self.cols / self.scheme.m * self.scheme.n
+    }
+
+    /// Compress `w` under `mask` (the cuSPARSELt *setup/compress* phase;
+    /// its cost is what Figure 5 profiles vs. the multiply).
+    pub fn compress(w: &Matrix, mask: &Mask, scheme: NmScheme) -> Self {
+        assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+        assert_eq!(w.cols % scheme.m, 0);
+        assert!(w.cols < u16::MAX as usize, "u16 index range");
+        let groups = w.cols / scheme.m;
+        let kc = groups * scheme.n;
+        let mut values = vec![0.0f32; w.rows * kc];
+        let mut indices = vec![0u16; w.rows * kc];
+        for r in 0..w.rows {
+            for g in 0..groups {
+                let mut slot = 0;
+                // First pass: kept positions in order.
+                for i in 0..scheme.m {
+                    let c = g * scheme.m + i;
+                    if mask.at(r, c) && slot < scheme.n {
+                        values[r * kc + g * scheme.n + slot] = w.at(r, c);
+                        indices[r * kc + g * scheme.n + slot] = c as u16;
+                        slot += 1;
+                    }
+                }
+                // Pad under-full groups with zeros pointing at pruned slots
+                // (value 0 ⇒ decompress-insensitive), keeping indices
+                // strictly increasing for the kernel's monotonicity
+                // assumption.
+                let mut pad_c = g * scheme.m;
+                while slot < scheme.n {
+                    while mask.at(r, pad_c) {
+                        pad_c += 1;
+                    }
+                    values[r * kc + g * scheme.n + slot] = 0.0;
+                    indices[r * kc + g * scheme.n + slot] = pad_c as u16;
+                    pad_c += 1;
+                    slot += 1;
+                }
+                // Restore in-group ordering (pads may interleave).
+                let s = r * kc + g * scheme.n;
+                let mut pairs: Vec<(u16, f32)> = (0..scheme.n)
+                    .map(|i| (indices[s + i], values[s + i]))
+                    .collect();
+                pairs.sort_by_key(|p| p.0);
+                for (i, (ix, v)) in pairs.into_iter().enumerate() {
+                    indices[s + i] = ix;
+                    values[s + i] = v;
+                }
+            }
+        }
+        Self { rows: w.rows, cols: w.cols, scheme, values, indices }
+    }
+
+    /// Expand back to dense (test / checkpoint path).
+    pub fn decompress(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let kc = self.kcols();
+        for r in 0..self.rows {
+            for k in 0..kc {
+                let c = self.indices[r * kc + k] as usize;
+                out.data[r * self.cols + c] += self.values[r * kc + k];
+            }
+        }
+        out
+    }
+
+    /// Overwrite values in-place from a dense matrix with the *same* mask
+    /// (Algorithm 1 lines 17–18: `updateSparseMatrix`).  No re-indexing —
+    /// that is the whole point of static masks (Appendix B).
+    pub fn update_from_dense(&mut self, w: &Matrix) {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        let kc = self.kcols();
+        for r in 0..self.rows {
+            for k in 0..kc {
+                let c = self.indices[r * kc + k] as usize;
+                self.values[r * kc + k] = w.at(r, c);
+            }
+        }
+    }
+
+    /// `β·self + γ·other` over values planes that share a sparsity pattern
+    /// (Algorithm 1 line 15 — the paper's custom sparse-add kernel).
+    pub fn sparse_add(&self, other: &CompressedNm, beta: f32, gamma: f32) -> CompressedNm {
+        assert_eq!(self.indices, other.indices, "sparse_add requires identical patterns");
+        let values = self
+            .values
+            .iter()
+            .zip(&other.values)
+            .map(|(a, b)| beta * a + gamma * b)
+            .collect();
+        CompressedNm { values, ..self.clone() }
+    }
+
+    /// Bits of storage (values at `value_bits` + Eq.-7 index metadata).
+    pub fn storage_bits(&self, value_bits: u64) -> u64 {
+        let kept = (self.rows * self.kcols()) as u64;
+        let groups = (self.rows * (self.cols / self.scheme.m)) as u64;
+        kept * value_bits + groups * self.scheme.index_bits_per_group() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::{magnitude_row_mask, random_row_mask};
+    use crate::util::Rng;
+
+    #[test]
+    fn compress_roundtrip_random_mask() {
+        let mut rng = Rng::seed_from_u64(3);
+        for (n, m) in [(1usize, 2usize), (2, 4), (2, 8)] {
+            let s = NmScheme::new(n, m);
+            let w = Matrix::randn(8, 4 * m, 1.0, &mut rng);
+            let mask = random_row_mask(8, 4 * m, s, &mut rng);
+            let c = CompressedNm::compress(&w, &mask, s);
+            assert_eq!(c.decompress(), mask.apply(&w));
+        }
+    }
+
+    #[test]
+    fn compress_roundtrip_magnitude_mask() {
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Matrix::randn(16, 32, 1.0, &mut rng);
+        let mask = magnitude_row_mask(&w, NmScheme::TWO_FOUR);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        assert_eq!(c.decompress(), mask.apply(&w));
+    }
+
+    #[test]
+    fn update_in_place_keeps_pattern() {
+        let mut rng = Rng::seed_from_u64(5);
+        let w = Matrix::randn(8, 16, 1.0, &mut rng);
+        let mask = random_row_mask(8, 16, NmScheme::TWO_FOUR, &mut rng);
+        let mut c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let w2 = Matrix::randn(8, 16, 1.0, &mut rng);
+        c.update_from_dense(&w2);
+        assert_eq!(c.decompress(), mask.apply(&w2));
+    }
+
+    #[test]
+    fn sparse_add_linear_combination() {
+        let mut rng = Rng::seed_from_u64(6);
+        let w = Matrix::randn(4, 8, 1.0, &mut rng);
+        let mask = random_row_mask(4, 8, NmScheme::TWO_FOUR, &mut rng);
+        let a = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let out = a.sparse_add(&a, 0.5, 2.0);
+        for (o, v) in out.values.iter().zip(&a.values) {
+            assert!((o - 2.5 * v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn storage_bits_2to4_example() {
+        // 2:4 over fp16: per 4-elem group, 2×16-bit values + 3 index bits.
+        let w = Matrix::zeros(1, 4);
+        let mask = Mask { rows: 1, cols: 4, keep: vec![true, true, false, false] };
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        assert_eq!(c.storage_bits(16), 2 * 16 + 3);
+    }
+
+    #[test]
+    fn indices_monotone_with_padding() {
+        // A mask with an under-full group (only 1 kept in a 2:4 group).
+        let mask = Mask { rows: 1, cols: 8,
+                          keep: vec![false, true, false, false, true, true, false, false] };
+        let w = Matrix::from_vec(1, 8, (1..=8).map(|v| v as f32).collect());
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let kc = c.kcols();
+        for g in 0..2 {
+            assert!(c.indices[g * 2] < c.indices[g * 2 + 1], "{:?}", c.indices);
+        }
+        assert_eq!(c.decompress(), mask.apply(&w));
+        let _ = kc;
+    }
+}

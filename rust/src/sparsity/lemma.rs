@@ -1,0 +1,91 @@
+//! Lemma 2.1 (Eq. 8): the expected extra sparsity imposed by double
+//! pruning a randomly-initialized row-pruned matrix, in closed form and by
+//! Monte Carlo.  Regenerates Figure 8 (`slope exp fig8`).
+
+use super::{binom, random_row_mask, NmScheme};
+use crate::util::Rng;
+
+/// Closed-form Eq. 8: `D(A^R) − D(A^{R,C}) = Σ_{j=N+1}^{M} C(M,j) s^j
+/// (1−s)^{M−j} (j−N)/M` with `s = N/M`.
+///
+/// Values: 1:2 → 12.5%, 2:4 → 9.375%, 2:8 → 5.84% (the paper's prose says
+/// 3.39% for 2:8, but its own Eq. 8 — and our Monte Carlo — give 5.84%; we
+/// follow the equation and flag the discrepancy in EXPERIMENTS.md).
+pub fn imposed_sparsity(scheme: NmScheme) -> f64 {
+    let (n, m) = (scheme.n as u64, scheme.m as u64);
+    let s = n as f64 / m as f64;
+    let mut total = 0.0;
+    for j in (n + 1)..=m {
+        total += binom(m, j) as f64
+            * s.powi(j as i32)
+            * (1.0 - s).powi((m - j) as i32)
+            * (j - n) as f64
+            / m as f64;
+    }
+    total
+}
+
+/// Monte Carlo estimate: draw a random N:M row mask on a `dim × dim`
+/// matrix, then prune columns with a *random* N:M pass restricted to
+/// surviving elements (the lemma's uniform-position setting), and measure
+/// the density drop.
+pub fn monte_carlo_imposed_sparsity(
+    scheme: NmScheme,
+    dim: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    assert_eq!(dim % scheme.m, 0);
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let row = random_row_mask(dim, dim, scheme, rng);
+        // Column pass: per column group of M, keep min(n, survivors),
+        // chosen uniformly among survivors.
+        let mut extra_zeros = 0usize;
+        for c in 0..dim {
+            for g in 0..dim / scheme.m {
+                let live: Vec<usize> = (0..scheme.m)
+                    .map(|i| g * scheme.m + i)
+                    .filter(|&r| row.at(r, c))
+                    .collect();
+                if live.len() > scheme.n {
+                    extra_zeros += live.len() - scheme.n;
+                }
+            }
+        }
+        acc += extra_zeros as f64 / (dim * dim) as f64;
+    }
+    acc / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_paper_values() {
+        assert!((imposed_sparsity(NmScheme::new(1, 2)) - 0.125).abs() < 1e-12);
+        assert!((imposed_sparsity(NmScheme::new(2, 4)) - 0.09375).abs() < 1e-12);
+        assert!((imposed_sparsity(NmScheme::new(2, 8)) - 0.05843).abs() < 1e-4);
+    }
+
+    #[test]
+    fn monte_carlo_matches_closed_form() {
+        let mut rng = Rng::seed_from_u64(11);
+        for (n, m) in [(1usize, 2usize), (2, 4), (2, 8)] {
+            let s = NmScheme::new(n, m);
+            let mc = monte_carlo_imposed_sparsity(s, 8 * m, 4, &mut rng);
+            let cf = imposed_sparsity(s);
+            assert!((mc - cf).abs() < 0.01, "{s}: mc={mc} cf={cf}");
+        }
+    }
+
+    #[test]
+    fn larger_m_imposes_less_extra_sparsity_at_same_ratio() {
+        // §2.1: as M grows at fixed N/M, the surplus zeros diminish.
+        let a = imposed_sparsity(NmScheme::new(1, 2));
+        let b = imposed_sparsity(NmScheme::new(2, 4));
+        let c = imposed_sparsity(NmScheme::new(4, 8));
+        assert!(a > b && b > c);
+    }
+}

@@ -1,0 +1,287 @@
+//! N:M structured-sparsity math (paper §2.1): mask generation, double
+//! pruning, Lemma 2.1 analytics, and the compressed storage format.
+//!
+//! Conventions match the paper and the python side exactly: for a weight
+//! `W ∈ R^{d_out × d_in}` used as `Y = X·Wᵀ`,
+//! * *row-wise* pruning (`W^R`) constrains every group of M consecutive
+//!   elements **within a row** (along `d_in`) to ≤ N non-zeros — the
+//!   reduction dim of FWD (Eq. 4);
+//! * *double* pruning (`W^{R,C}`) additionally constrains columns (along
+//!   `d_out`) — the reduction dim of BWD-2 (Eq. 6).
+
+pub mod compressed;
+pub mod lemma;
+
+pub use compressed::CompressedNm;
+pub use lemma::{imposed_sparsity, monte_carlo_imposed_sparsity};
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// An N:M sparsity scheme: at most `n` of every `m` consecutive elements
+/// along the constrained dimension are non-zero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NmScheme {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NmScheme {
+    pub const fn new(n: usize, m: usize) -> Self {
+        assert!(n >= 1 && n <= m);
+        Self { n, m }
+    }
+
+    /// 2:4 — the scheme NVIDIA sparse tensor cores accelerate.
+    pub const TWO_FOUR: NmScheme = NmScheme { n: 2, m: 4 };
+
+    pub fn density(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+
+    /// Bits of index metadata per kept element (Eq. 7):
+    /// `ceil(log2(C(M, N))) / N`.
+    pub fn index_bits_per_group(&self) -> u32 {
+        (binom(self.m as u64, self.n as u64) as f64).log2().ceil() as u32
+    }
+}
+
+impl std::fmt::Display for NmScheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.n, self.m)
+    }
+}
+
+pub(crate) fn binom(m: u64, n: u64) -> u64 {
+    let n = n.min(m - n);
+    let mut num = 1u64;
+    let mut den = 1u64;
+    for i in 0..n {
+        num *= m - i;
+        den *= i + 1;
+    }
+    num / den
+}
+
+/// 0/1 mask with `rows × cols` layout; `true` = kept.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub keep: Vec<bool>,
+}
+
+impl Mask {
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, keep: vec![true; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> bool {
+        self.keep[r * self.cols + c]
+    }
+
+    pub fn density(&self) -> f64 {
+        self.keep.iter().filter(|k| **k).count() as f64 / self.keep.len().max(1) as f64
+    }
+
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.keep.iter().map(|k| if *k { 1.0 } else { 0.0 }).collect(),
+        )
+    }
+
+    /// Apply to a weight matrix (zero out pruned slots).
+    pub fn apply(&self, w: &Matrix) -> Matrix {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        let data = w
+            .data
+            .iter()
+            .zip(&self.keep)
+            .map(|(v, k)| if *k { *v } else { 0.0 })
+            .collect();
+        Matrix { rows: w.rows, cols: w.cols, data }
+    }
+
+    /// Number of positions where `self` keeps but `other` prunes or vice
+    /// versa — the Figure-4 mask-churn metric.
+    pub fn hamming(&self, other: &Mask) -> usize {
+        assert_eq!(self.keep.len(), other.keep.len());
+        self.keep
+            .iter()
+            .zip(&other.keep)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+
+    /// Verify the N:M constraint along rows (groups of `m` within a row).
+    pub fn check_row_nm(&self, scheme: NmScheme) -> bool {
+        assert_eq!(self.cols % scheme.m, 0);
+        for r in 0..self.rows {
+            for g in 0..self.cols / scheme.m {
+                let kept = (0..scheme.m)
+                    .filter(|i| self.at(r, g * scheme.m + i))
+                    .count();
+                if kept > scheme.n {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Verify the N:M constraint along columns (groups of `m` within a col).
+    pub fn check_col_nm(&self, scheme: NmScheme) -> bool {
+        assert_eq!(self.rows % scheme.m, 0);
+        for c in 0..self.cols {
+            for g in 0..self.rows / scheme.m {
+                let kept = (0..scheme.m)
+                    .filter(|i| self.at(g * scheme.m + i, c))
+                    .count();
+                if kept > scheme.n {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// SLoPe's init-time policy (§2.1): a *random* static N:M row mask —
+/// every element equally likely to survive, then frozen for all of
+/// pretraining.
+pub fn random_row_mask(rows: usize, cols: usize, scheme: NmScheme, rng: &mut Rng) -> Mask {
+    assert_eq!(cols % scheme.m, 0, "cols must be divisible by M");
+    let mut keep = vec![false; rows * cols];
+    let mut positions: Vec<usize> = (0..scheme.m).collect();
+    for r in 0..rows {
+        for g in 0..cols / scheme.m {
+            rng.shuffle(&mut positions);
+            for &p in positions.iter().take(scheme.n) {
+                keep[r * cols + g * scheme.m + p] = true;
+            }
+        }
+    }
+    Mask { rows, cols, keep }
+}
+
+/// Magnitude row mask: keep the top-N |w| per group (SR-STE / re-masking).
+pub fn magnitude_row_mask(w: &Matrix, scheme: NmScheme) -> Mask {
+    score_row_mask(w, scheme, |v, _c| v.abs())
+}
+
+/// Wanda mask: score = |W[r,c]| · act_norm[c] (one-shot pruning).
+pub fn wanda_row_mask(w: &Matrix, act_norm: &[f32], scheme: NmScheme) -> Mask {
+    assert_eq!(act_norm.len(), w.cols);
+    score_row_mask(w, scheme, |v, c| v.abs() * act_norm[c])
+}
+
+fn score_row_mask(w: &Matrix, scheme: NmScheme, score: impl Fn(f32, usize) -> f32) -> Mask {
+    assert_eq!(w.cols % scheme.m, 0);
+    let mut keep = vec![false; w.rows * w.cols];
+    let mut idx: Vec<usize> = Vec::with_capacity(scheme.m);
+    for r in 0..w.rows {
+        for g in 0..w.cols / scheme.m {
+            idx.clear();
+            idx.extend(0..scheme.m);
+            // Stable sort by descending score; earlier position wins ties.
+            idx.sort_by(|&a, &b| {
+                let ca = g * scheme.m + a;
+                let cb = g * scheme.m + b;
+                score(w.at(r, cb), cb)
+                    .partial_cmp(&score(w.at(r, ca), ca))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            for &p in idx.iter().take(scheme.n) {
+                keep[r * w.cols + g * scheme.m + p] = true;
+            }
+        }
+    }
+    Mask { rows: w.rows, cols: w.cols, keep }
+}
+
+/// Double pruning (§2.1): transpose the row-pruned weight and impose N:M
+/// along the new last dim (`d_out`) by magnitude; intersect with the row
+/// mask (double pruning only removes).  Returns the `W^{R,C}` mask in the
+/// original `d_out × d_in` layout.
+pub fn double_prune_mask(w: &Matrix, row_mask: &Mask, scheme: NmScheme) -> Mask {
+    assert_eq!(w.rows % scheme.m, 0, "rows must be divisible by M for column pruning");
+    let wr = row_mask.apply(w);
+    let wr_t = wr.transpose(); // (d_in, d_out): prune along d_out
+    let col_t = magnitude_row_mask(&wr_t, scheme);
+    let mut keep = vec![false; w.rows * w.cols];
+    for r in 0..w.rows {
+        for c in 0..w.cols {
+            keep[r * w.cols + c] = row_mask.at(r, c) && col_t.at(c, r);
+        }
+    }
+    Mask { rows: w.rows, cols: w.cols, keep }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_bits_match_eq7() {
+        // C(4,2)=6 → 3 bits; C(2,1)=2 → 1 bit; C(8,2)=28 → 5 bits.
+        assert_eq!(NmScheme::new(2, 4).index_bits_per_group(), 3);
+        assert_eq!(NmScheme::new(1, 2).index_bits_per_group(), 1);
+        assert_eq!(NmScheme::new(2, 8).index_bits_per_group(), 5);
+    }
+
+    #[test]
+    fn random_mask_is_exact_nm() {
+        let mut rng = Rng::seed_from_u64(0);
+        for (n, m) in [(1usize, 2usize), (2, 4), (2, 8)] {
+            let s = NmScheme::new(n, m);
+            let mask = random_row_mask(16, 8 * m, s, &mut rng);
+            assert!(mask.check_row_nm(s));
+            assert!((mask.density() - s.density()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn magnitude_mask_keeps_largest() {
+        let w = Matrix::from_vec(1, 4, vec![0.1, -3.0, 2.0, 0.5]);
+        let mask = magnitude_row_mask(&w, NmScheme::TWO_FOUR);
+        assert_eq!(mask.keep, vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn wanda_respects_activation_norms() {
+        let w = Matrix::from_vec(1, 4, vec![0.01, 1.0, 1.0, 1.0]);
+        let act = vec![1000.0, 1.0, 1.0, 1.0];
+        let mask = wanda_row_mask(&w, &act, NmScheme::TWO_FOUR);
+        assert!(mask.at(0, 0), "huge activation norm must rescue small weight");
+    }
+
+    #[test]
+    fn double_prune_is_subset_and_col_nm() {
+        let mut rng = Rng::seed_from_u64(7);
+        let s = NmScheme::TWO_FOUR;
+        let w = Matrix::randn(32, 32, 1.0, &mut rng);
+        let mr = random_row_mask(32, 32, s, &mut rng);
+        let mrc = double_prune_mask(&w, &mr, s);
+        for i in 0..mr.keep.len() {
+            assert!(!mrc.keep[i] || mr.keep[i], "double prune must only remove");
+        }
+        // Column constraint holds on the transpose view.
+        let t = Mask { rows: mrc.cols, cols: mrc.rows,
+                       keep: mrc.to_matrix().transpose().data.iter().map(|v| *v != 0.0).collect() };
+        assert!(t.check_row_nm(s));
+        assert!(mrc.density() <= mr.density());
+    }
+
+    #[test]
+    fn mask_churn_hamming() {
+        let a = Mask::ones(2, 4);
+        let mut b = Mask::ones(2, 4);
+        b.keep[0] = false;
+        b.keep[5] = false;
+        assert_eq!(a.hamming(&b), 2);
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal row-major `f32` matrix used by the CPU sparse backend, the
+//! synthetic-data pipeline and the checkpoint code.
+//!
+//! This is intentionally small: the heavy lifting happens either inside the
+//! AOT-compiled HLO (training/inference) or in [`crate::backend`]'s blocked
+//! kernels (the cuSPARSELt-role CPU implementation).
+
+use crate::util::Rng;
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Fill with iid N(0, scale²) Gaussian values from the supplied RNG.
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal_f32(scale)).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Fraction of non-zero entries.
+    pub fn density(&self) -> f64 {
+        let nnz = self.data.iter().filter(|v| **v != 0.0).count();
+        nnz as f64 / self.data.len().max(1) as f64
+    }
+
+    /// Element-wise multiply (e.g. apply a 0/1 mask).
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+/// Cosine similarity between two equally-shaped matrices viewed as vectors
+/// (used for the Figure-3b adapter-convergence metric).
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from_u64(0);
+        let m = Matrix::randn(7, 5, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Rng::seed_from_u64(1);
+        let m = Matrix::randn(200, 200, 2.0, &mut rng);
+        let mean: f32 = m.data.iter().sum::<f32>() / m.data.len() as f32;
+        let var: f32 = m.data.iter().map(|v| (v - mean).powi(2)).sum::<f32>()
+            / m.data.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn density_and_hadamard() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 0.0, 2.0, 0.0]);
+        assert_eq!(m.density(), 0.5);
+        let h = m.hadamard(&Matrix::from_vec(2, 2, vec![2.0, 3.0, 0.0, 1.0]));
+        assert_eq!(h.data, vec![2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn cosine() {
+        assert!((cosine_similarity(&[1.0, 0.0], &[2.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine_similarity(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,94 @@
+//! Micro-benchmark harness — the offline stand-in for `criterion`
+//! (DESIGN.md §2 substitutions).
+//!
+//! Median-of-N methodology matching the paper's §3.1 protocol ("we
+//! conducted 1,000 iterations for each speedup experiment and reported the
+//! median"): warmup, then N timed iterations, report median / p10 / p90.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+}
+
+/// Time `f` with `iters` samples after `warmup` runs; returns the median.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        iters,
+    }
+}
+
+/// Auto-scale iteration count so one benchmark takes ≈ `budget_ms`.
+pub fn bench_auto<F: FnMut()>(name: &str, budget_ms: f64, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_secs_f64() * 1e3;
+    let iters = ((budget_ms / one.max(1e-6)) as usize).clamp(5, 1000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!("{:<44} {:>12} {:>12} {:>12} {:>7}", "benchmark", "median", "p10", "p90", "iters");
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10.3}us {:>10.3}us {:>10.3}us {:>7}",
+        r.name, r.median_us(), r.p10_ns / 1e3, r.p90_ns / 1e3, r.iters
+    );
+}
+
+/// Black-box: prevent the optimizer from eliding benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 20, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+}

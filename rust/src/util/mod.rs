@@ -1,0 +1,15 @@
+//! In-tree substrates for what an online build would pull from crates.io —
+//! this environment is fully offline (DESIGN.md §2):
+//!
+//! * [`rng`]      — xoshiro256++ PRNG (`rand` stand-in)
+//! * [`json`]     — JSON parser/writer (`serde_json` stand-in)
+//! * [`bench`]    — median-of-N micro-bench harness (`criterion` stand-in)
+//! * [`proptest`] — seeded property-test helper (`proptest` stand-in)
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

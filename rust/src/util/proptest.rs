@@ -1,0 +1,73 @@
+//! Tiny property-testing helper — the offline stand-in for `proptest`
+//! (DESIGN.md §2 substitutions).
+//!
+//! `cases(n, seed, |g| ...)` runs a property over `n` generated cases; on
+//! failure it reports the case seed so the exact inputs are replayable.
+
+use super::rng::Rng;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// A dimension that is a multiple of `m` (N:M group divisibility).
+    pub fn dim_multiple_of(&mut self, m: usize, max_groups: usize) -> usize {
+        m * self.rng.range(1, max_groups + 1)
+    }
+
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32(scale)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        &options[self.rng.below(options.len())]
+    }
+}
+
+/// Run `prop` over `n` seeded cases; panics with the replay seed on failure.
+pub fn cases<F: FnMut(&mut Gen)>(n: usize, seed: u64, mut prop: F) {
+    for case in 0..n {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::seed_from_u64(case_seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (replay seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        cases(17, 0, |_g| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        cases(50, 1, |g| {
+            let d = g.dim_multiple_of(4, 8);
+            assert!(d % 4 == 0 && d >= 4 && d <= 32);
+            let x = g.usize_in(3, 9);
+            assert!((3..9).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        cases(5, 2, |g| assert!(g.usize_in(0, 10) < 5, "will fail eventually"));
+    }
+}

@@ -1,0 +1,193 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! Require `make artifacts` (the smallest config, `gpt-nano-half-depth`,
+//! keeps XLA compile times low).  These tests exercise the python→rust
+//! contract end-to-end: manifest schema, init, the Eq. 4–6 train step,
+//! mask-support invariants, determinism, and checkpoint round-trips.
+
+use slope::coordinator::checkpoint;
+use slope::runtime::{Session, Store};
+use std::path::Path;
+
+const CFG: &str = "artifacts/gpt-nano-half-depth";
+
+fn session() -> slope::runtime::SessionHandle {
+    assert!(Path::new(CFG).exists(), "run `make artifacts` first");
+    Session::open_cached(Path::new(CFG)).expect("open session")
+}
+
+fn init_store(seed: i32) -> (slope::runtime::SessionHandle, Store) {
+    let h = session();
+    let mut store = Store::new();
+    store.put_scalar_i32("seed", seed);
+    h.borrow_mut().run("init", &mut store).expect("init");
+    (h, store)
+}
+
+fn tokens_for(store: &mut Store, b: usize, s1: usize, seed: u64) {
+    let mut rng = slope::util::Rng::seed_from_u64(seed);
+    let toks: Vec<i32> = (0..b * s1).map(|_| rng.below(512) as i32).collect();
+    store.put_i32("tokens", &[b, s1], &toks).unwrap();
+}
+
+#[test]
+fn manifest_contract() {
+    let h = session();
+    let sess = h.borrow();
+    let m = &sess.manifest;
+    assert_eq!(m.config.name, "gpt-nano-half-depth");
+    for name in ["init", "train_step", "lora_init", "train_step_lora",
+                 "eval_step", "forward"] {
+        let e = m.exe(name).expect(name);
+        assert!(!e.inputs.is_empty() || name == "init");
+        assert!(!e.outputs.is_empty());
+        assert!(m.hlo_path(name).unwrap().exists(), "{name} HLO file missing");
+    }
+    // Train step state round-trip: every params.*/opt.* output has a
+    // matching input with identical shape.
+    let ts = m.exe("train_step").unwrap();
+    for out in &ts.outputs {
+        if out.name.starts_with("params.") || out.name.starts_with("opt.") {
+            let inp = ts.inputs.iter().find(|i| i.name == out.name)
+                .unwrap_or_else(|| panic!("no input for output {}", out.name));
+            assert_eq!(inp.shape, out.shape, "{}", out.name);
+            assert_eq!(inp.dtype, out.dtype, "{}", out.name);
+        }
+    }
+}
+
+#[test]
+fn init_produces_nm_masks_and_finite_params() {
+    let (_h, store) = init_store(7);
+    // Block-1 wup row mask must be exactly 2:4 along d_in.
+    let mask = store.read_f32("masks.blocks.1.wup_r").unwrap();
+    let d_in = 128;
+    for group in mask.chunks(4) {
+        let kept: f32 = group.iter().sum();
+        assert_eq!(kept, 2.0, "2:4 violated");
+    }
+    let _ = d_in;
+    // Double-pruned mask is a subset.
+    let mrc = store.read_f32("masks.blocks.1.wup_rc").unwrap();
+    for (r, rc) in mask.iter().zip(&mrc) {
+        assert!(*rc <= *r, "RC mask must be subset of R mask");
+    }
+    // Params finite.
+    let w = store.read_f32("params.blocks.1.wup").unwrap();
+    assert!(w.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_decreases_loss_and_respects_support() {
+    let (h, mut store) = init_store(1);
+    let (b, s1) = h.borrow().manifest.train_tokens_shape();
+    let mut losses = vec![];
+    for i in 0..4 {
+        tokens_for(&mut store, b, s1, 100 + i); // fixed pool of batches
+        h.borrow_mut().run("train_step", &mut store).unwrap();
+        losses.push(store.read_scalar_f32("loss").unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
+    // Pruned slots must be exactly zero after updates (Algorithm 1, 17–18).
+    let w = store.read_f32("params.blocks.1.wup").unwrap();
+    let mask = store.read_f32("masks.blocks.1.wup_r").unwrap();
+    for (wv, mv) in w.iter().zip(&mask) {
+        if *mv == 0.0 {
+            assert_eq!(*wv, 0.0, "update leaked outside the static mask");
+        }
+    }
+    // Optimizer moments stay inside the support too.
+    let m = store.read_f32("opt.m.blocks.1.wup").unwrap();
+    for (mvv, mv) in m.iter().zip(&mask) {
+        if *mv == 0.0 {
+            assert_eq!(*mvv, 0.0, "Adam moment leaked outside the mask");
+        }
+    }
+}
+
+#[test]
+fn lora_init_is_noop_then_trains() {
+    let (h, mut store) = init_store(2);
+    let (b, s1) = h.borrow().manifest.train_tokens_shape();
+    // Eval before adapters.
+    tokens_for(&mut store, b, s1, 55);
+    h.borrow_mut().run("eval_step", &mut store).unwrap();
+    let base = store.read_scalar_f32("loss").unwrap();
+    // Adapters initialized (up factor = 0) must not change the function.
+    store.put_scalar_i32("seed", 99);
+    h.borrow_mut().run("lora_init", &mut store).unwrap();
+    h.borrow_mut().run("eval_step_lora", &mut store).unwrap();
+    let with_lora = store.read_scalar_f32("loss").unwrap();
+    assert!((base - with_lora).abs() < 1e-4, "{base} vs {with_lora}");
+    // One adapter step moves the up factors off zero.
+    h.borrow_mut().run("train_step_lora", &mut store).unwrap();
+    let up = store.read_f32("lora.blocks.0.wup_up").unwrap();
+    assert!(up.iter().any(|v| *v != 0.0), "adapters did not train");
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let (h, mut store) = init_store(3);
+    let (b, s1) = h.borrow().manifest.train_tokens_shape();
+    tokens_for(&mut store, b, s1, 77);
+    h.borrow_mut().run("eval_step", &mut store).unwrap();
+    let a = store.read_scalar_f32("loss").unwrap();
+    h.borrow_mut().run("eval_step", &mut store).unwrap();
+    let b2 = store.read_scalar_f32("loss").unwrap();
+    assert_eq!(a, b2, "same inputs must give identical loss");
+}
+
+#[test]
+fn same_seed_same_init_different_seed_different_masks() {
+    let (_h, s1) = init_store(11);
+    let (_h2, s2) = init_store(11);
+    assert_eq!(
+        s1.read_f32("params.blocks.0.wqkv").unwrap(),
+        s2.read_f32("params.blocks.0.wqkv").unwrap()
+    );
+    let (_h3, s3) = init_store(12);
+    assert_ne!(
+        s1.read_f32("masks.blocks.1.wup_r").unwrap(),
+        s3.read_f32("masks.blocks.1.wup_r").unwrap()
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_through_store() {
+    let (h, mut store) = init_store(4);
+    let (b, s1) = h.borrow().manifest.train_tokens_shape();
+    tokens_for(&mut store, b, s1, 5);
+    h.borrow_mut().run("train_step", &mut store).unwrap();
+
+    let tmp = std::env::temp_dir().join("slope_integration.slopeckpt");
+    let n = checkpoint::save(&store, &["params.", "masks."], &tmp).unwrap();
+    assert!(n > 20);
+
+    // Restore into a freshly-initialized store and verify eval parity.
+    let (_h2, mut fresh) = init_store(999);
+    checkpoint::load(&mut fresh, &tmp).unwrap();
+    tokens_for(&mut store, b, s1, 123);
+    tokens_for(&mut fresh, b, s1, 123);
+    h.borrow_mut().run("eval_step", &mut store).unwrap();
+    let a = store.read_scalar_f32("loss").unwrap();
+    h.borrow_mut().run("eval_step", &mut fresh).unwrap();
+    let b2 = fresh.read_scalar_f32("loss").unwrap();
+    assert!((a - b2).abs() < 1e-6, "checkpoint restore changed the model: {a} vs {b2}");
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn forward_logits_shape_and_finiteness() {
+    let (h, mut store) = init_store(5);
+    let c = h.borrow().manifest.config.clone();
+    let mut rng = slope::util::Rng::seed_from_u64(9);
+    let toks: Vec<i32> = (0..c.batch_size * c.seq_len)
+        .map(|_| rng.below(c.vocab_size) as i32)
+        .collect();
+    store.put_i32("tokens", &[c.batch_size, c.seq_len], &toks).unwrap();
+    h.borrow_mut().run("forward", &mut store).unwrap();
+    let logits = store.read_f32("logits").unwrap();
+    assert_eq!(logits.len(), c.batch_size * c.seq_len * c.vocab_size);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}

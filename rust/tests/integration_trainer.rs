@@ -1,0 +1,121 @@
+//! Integration tests over the Trainer (phase schedule, baselines, metrics)
+//! on the smallest artifact config.  Requires `make artifacts`.
+
+use slope::config::{Fig9Variant, Method, RunConfig};
+use slope::coordinator::Trainer;
+use std::path::Path;
+
+fn cfg(method: Method, steps: usize, lazy: f64) -> RunConfig {
+    RunConfig {
+        model: "gpt-nano-half-depth".into(),
+        method,
+        steps,
+        lazy_fraction: lazy,
+        eval_every: steps.max(1),
+        eval_batches: 2,
+        seed: 3,
+        artifacts: "artifacts".into(),
+        out_dir: std::env::temp_dir().join("slope_test_runs"),
+    }
+}
+
+fn artifacts_present() -> bool {
+    Path::new("artifacts/gpt-nano-half-depth/manifest.json").exists()
+}
+
+#[test]
+fn slope_run_with_phase_flip() {
+    assert!(artifacts_present(), "run `make artifacts` first");
+    let mut t = Trainer::new(cfg(Method::Slope, 6, 0.34)).unwrap();
+    t.init().unwrap();
+    let o = t.train().unwrap();
+    assert!(o.final_loss.is_finite());
+    assert!(o.final_perplexity.is_finite());
+    // Phase flip happened: last steps tagged "lora".
+    let phases: Vec<&str> = t.metrics.steps.iter().map(|s| s.phase).collect();
+    assert!(phases.contains(&"sparse") && phases.contains(&"lora"), "{phases:?}");
+    // Loss goes down over the run.
+    assert!(o.final_loss < t.metrics.steps[0].loss);
+    // Adapter convergence records were captured during the lazy phase.
+    assert!(!t.metrics.adapters.is_empty());
+    // Metrics serialize and save.
+    let path = t.metrics.save(&t.cfg.out_dir.clone()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = slope::util::Json::parse(&text).unwrap();
+    assert_eq!(j.req("steps").unwrap().as_arr().unwrap().len(), 6);
+}
+
+#[test]
+fn dense_baseline_uses_ones_masks() {
+    assert!(artifacts_present());
+    let mut t = Trainer::new(cfg(Method::Dense, 3, 0.0)).unwrap();
+    t.init().unwrap();
+    let mask = t.store.read_f32("masks.blocks.1.wup_r").unwrap();
+    assert!(mask.iter().all(|v| *v == 1.0), "dense run must see ones masks");
+    let o = t.train().unwrap();
+    assert!(o.final_loss.is_finite());
+    // Dense weights are NOT support-constrained.
+    let w = t.store.read_f32("params.blocks.1.wup").unwrap();
+    let zeros = w.iter().filter(|v| **v == 0.0).count();
+    assert!(zeros < w.len() / 10, "dense weights should stay dense");
+}
+
+#[test]
+fn srste_churn_metric_is_populated() {
+    assert!(artifacts_present());
+    // SR-STE executables are exported for gpt-nano (half-depth is core-only).
+    let mut c = cfg(Method::Srste, 8, 0.0);
+    c.model = "gpt-nano".into();
+    let mut t = Trainer::new(c).unwrap();
+    t.init().unwrap();
+    let o = t.train().unwrap();
+    assert!(o.final_loss.is_finite());
+    assert!(!t.metrics.churn.is_empty(), "SR-STE must record mask churn");
+    let last = t.metrics.churn.last().unwrap();
+    // The final snapshot IS the converged mask: distance zero.
+    assert!(last.frac_changed_vs_final.abs() < 1e-12);
+}
+
+#[test]
+fn wanda_flow_installs_nm_masks_after_dense_training() {
+    assert!(artifacts_present());
+    let mut t = Trainer::new(cfg(Method::Wanda, 3, 0.0)).unwrap();
+    t.init().unwrap();
+    // This config has no wanda executable? half-depth exports core only —
+    // use magnitude path guard: skip if absent.
+    if !t.manifest.executables.contains_key("wanda_masks") {
+        eprintln!("skipping: no wanda_masks exe for this config");
+        return;
+    }
+    let o = t.train().unwrap();
+    assert!(o.final_loss.is_finite());
+}
+
+#[test]
+fn fig9_weight_static_matches_support_invariant() {
+    assert!(artifacts_present());
+    if !Path::new("artifacts/gpt-nano/train_step_fig9_weight_static.hlo.txt").exists() {
+        eprintln!("skipping: fig9 set not exported");
+        return;
+    }
+    let mut c = cfg(Method::Fig9(Fig9Variant::WeightStatic), 2, 0.0);
+    c.model = "gpt-nano".into();
+    let mut t = Trainer::new(c).unwrap();
+    t.init().unwrap();
+    let o = t.train().unwrap();
+    assert!(o.final_loss.is_finite());
+}
+
+#[test]
+fn coordinator_overhead_is_small() {
+    assert!(artifacts_present());
+    let mut t = Trainer::new(cfg(Method::Slope, 5, 0.0)).unwrap();
+    t.init().unwrap();
+    let o = t.train().unwrap();
+    // L3 target (DESIGN.md §8): everything outside execute < 5% of step.
+    assert!(
+        o.coordinator_overhead < 0.05,
+        "coordinator overhead {:.3} ≥ 5%",
+        o.coordinator_overhead
+    );
+}

@@ -1,0 +1,270 @@
+//! Property-based tests over the L3 substrates (no artifacts needed).
+//!
+//! Uses the in-tree seeded property harness (`slope::util::proptest` —
+//! DESIGN.md §2 offline substitutions).  Each property runs over dozens of
+//! generated cases; failures report a replay seed.
+
+use slope::backend::{gemm, gemm_nt, gemm_tn, lora_fused, lora_naive, prune_and_compress,
+                     spmm_rowmajor, spmm_tiled, SparseBackend, SpmmAlgo};
+use slope::coordinator::checkpoint;
+use slope::data::{Corpus, CorpusSpec};
+use slope::runtime::Store;
+use slope::sparsity::{double_prune_mask, magnitude_row_mask, random_row_mask, wanda_row_mask,
+                      CompressedNm, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::proptest::cases;
+use slope::util::Json;
+
+const SCHEMES: [(usize, usize); 4] = [(1, 2), (2, 4), (2, 8), (4, 8)];
+
+#[test]
+fn prop_random_masks_satisfy_exact_nm_at_any_shape() {
+    cases(40, 0x51, |g| {
+        let (n, m) = *g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        let rows = g.usize_in(1, 24);
+        let cols = g.dim_multiple_of(m, 12);
+        let mask = random_row_mask(rows, cols, s, &mut g.rng);
+        assert!(mask.check_row_nm(s));
+        assert!((mask.density() - s.density()).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_double_prune_subset_colwise_nm_and_density_drop() {
+    cases(30, 0x52, |g| {
+        let (n, m) = *g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        let dim = g.dim_multiple_of(m, 6).max(m * 2);
+        let w = Matrix::randn(dim, dim, 1.0, &mut g.rng);
+        let mr = random_row_mask(dim, dim, s, &mut g.rng);
+        let mrc = double_prune_mask(&w, &mr, s);
+        for i in 0..mr.keep.len() {
+            assert!(!mrc.keep[i] || mr.keep[i], "only removes");
+        }
+        assert!(mrc.density() <= mr.density() + 1e-12);
+        // Column groups obey N:M.
+        assert!(mrc.check_col_nm(s));
+    });
+}
+
+#[test]
+fn prop_compress_roundtrip_and_inplace_update() {
+    cases(30, 0x53, |g| {
+        let (n, m) = *g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        let rows = g.usize_in(1, 16);
+        let cols = g.dim_multiple_of(m, 8);
+        let w = Matrix::randn(rows, cols, 1.0, &mut g.rng);
+        // Mix mask sources: random and magnitude.
+        let mask = if g.rng.chance(0.5) {
+            random_row_mask(rows, cols, s, &mut g.rng)
+        } else {
+            magnitude_row_mask(&w, s)
+        };
+        let mut c = CompressedNm::compress(&w, &mask, s);
+        assert_eq!(c.decompress(), mask.apply(&w));
+        let w2 = Matrix::randn(rows, cols, 1.0, &mut g.rng);
+        c.update_from_dense(&w2);
+        assert_eq!(c.decompress(), mask.apply(&w2));
+        // Indices strictly increasing per group.
+        let kc = c.kcols();
+        for r in 0..rows {
+            for grp in 0..cols / m {
+                for i in 1..n {
+                    assert!(c.indices[r * kc + grp * n + i - 1] < c.indices[r * kc + grp * n + i]);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spmm_equals_masked_gemm_all_algos() {
+    cases(25, 0x54, |g| {
+        let (n, m) = *g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        let b = g.usize_in(1, 12);
+        let d_in = g.dim_multiple_of(m, 8);
+        let d_out = g.usize_in(1, 24);
+        let x = Matrix::randn(b, d_in, 1.0, &mut g.rng);
+        let w = Matrix::randn(d_out, d_in, 1.0, &mut g.rng);
+        let mask = random_row_mask(d_out, d_in, s, &mut g.rng);
+        let c = CompressedNm::compress(&w, &mask, s);
+        let want = gemm_nt(&x, &mask.apply(&w));
+        assert!(spmm_rowmajor(&x, &c).max_abs_diff(&want) < 1e-3);
+        let tile = g.usize_in(1, 40);
+        assert!(spmm_tiled(&x, &c, tile).max_abs_diff(&want) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_backend_eq456_contract() {
+    // The full Algorithm-1 contract at random shapes: fwd uses W^R, grad-x
+    // uses W^{R,C}, grad-w is masked to the static support.
+    cases(20, 0x55, |g| {
+        let b = g.usize_in(1, 8);
+        let d_in = g.dim_multiple_of(4, 8).max(8);
+        let d_out = g.dim_multiple_of(4, 6).max(8);
+        let x = Matrix::randn(b, d_in, 1.0, &mut g.rng);
+        let w = Matrix::randn(d_out, d_in, 1.0, &mut g.rng);
+        let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut g.rng);
+        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor);
+        let gy = Matrix::randn(b, d_out, 1.0, &mut g.rng);
+
+        let y = be.forward(&x);
+        assert!(y.max_abs_diff(&gemm_nt(&x, &be.mask_r.apply(&w))) < 1e-3);
+
+        let gx = be.grad_input(&gy);
+        assert!(gx.max_abs_diff(&gemm(&gy, &be.mask_rc.apply(&w))) < 1e-3);
+
+        let gw = be.grad_weight(&gy, &x);
+        let dense_gw = gemm_tn(&gy, &x);
+        assert!(gw.decompress().max_abs_diff(&be.mask_r.apply(&dense_gw)) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_lora_fusion_equivalence() {
+    cases(20, 0x56, |g| {
+        let b = g.usize_in(1, 10);
+        let d_in = g.dim_multiple_of(4, 8).max(8);
+        let d_out = g.dim_multiple_of(4, 8).max(8);
+        let r = g.usize_in(1, 9);
+        let x = Matrix::randn(b, d_in, 1.0, &mut g.rng);
+        let w = Matrix::randn(d_out, d_in, 1.0, &mut g.rng);
+        let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut g.rng);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let lo_up = Matrix::randn(d_out, r, 0.5, &mut g.rng);
+        let lo_down = Matrix::randn(r, d_in, 0.5, &mut g.rng);
+        let a = lora_naive(&x, &c, &lo_up, &lo_down, SpmmAlgo::RowMajor);
+        let f = lora_fused(&x, &c, &lo_up, &lo_down, SpmmAlgo::RowMajor);
+        assert!(a.max_abs_diff(&f) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_prune_and_compress_is_gather() {
+    cases(20, 0x57, |g| {
+        let rows = g.usize_in(1, 12);
+        let cols = g.dim_multiple_of(4, 8);
+        let w = Matrix::randn(rows, cols, 1.0, &mut g.rng);
+        let mask = random_row_mask(rows, cols, NmScheme::TWO_FOUR, &mut g.rng);
+        let pattern = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let grad = Matrix::randn(rows, cols, 1.0, &mut g.rng);
+        let packed = prune_and_compress(&grad, &pattern);
+        assert_eq!(packed.decompress(), mask.apply(&grad));
+    });
+}
+
+#[test]
+fn prop_wanda_scores_monotone_in_activation_norm() {
+    cases(20, 0x58, |g| {
+        let cols = g.dim_multiple_of(4, 6);
+        let w = Matrix::randn(4, cols, 1.0, &mut g.rng);
+        // Huge norm on a random column forces it to be kept in its group.
+        let star = g.usize_in(0, cols);
+        let mut norms = vec![1.0f32; cols];
+        norms[star] = 1e6;
+        let mask = wanda_row_mask(&w, &norms, NmScheme::TWO_FOUR);
+        for r in 0..4 {
+            assert!(mask.at(r, star), "boosted column must survive");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    cases(40, 0x59, |g| {
+        // Build a random JSON document and round-trip it.
+        fn build(g: &mut slope::util::proptest::Gen, depth: usize) -> Json {
+            match if depth > 2 { g.usize_in(0, 4) } else { g.usize_in(0, 6) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.rng.chance(0.5)),
+                2 => Json::Num((g.rng.normal() * 100.0 * 8.0).round() / 8.0),
+                3 => {
+                    let n = g.usize_in(0, 999);
+                    Json::Str(format!("s{}-\"q\"\\n{}", g.case, n))
+                }
+                4 => Json::Str("unicode é λ 🤖".into()),
+                5 => Json::Arr((0..g.usize_in(0, 4)).map(|_| build(g, depth + 1)).collect()),
+                _ => Json::Obj((0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), build(g, depth + 1)))
+                    .collect()),
+            }
+        }
+        let doc = build(g, 0);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(doc, back, "{text}");
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_stores() {
+    cases(12, 0x5A, |g| {
+        let mut store = Store::new();
+        let mut names = vec![];
+        for i in 0..g.usize_in(1, 6) {
+            let rows = g.usize_in(1, 8);
+            let cols = g.usize_in(1, 8);
+            let name = format!("params.t{i}");
+            let data = g.f32_vec(rows * cols, 1.0);
+            store.put_f32(&name, &[rows, cols], &data).unwrap();
+            names.push((name, data));
+        }
+        store.put_i32("tokens", &[3], &[1, 2, 3]).unwrap();
+        let path = std::env::temp_dir().join(format!("slope_prop_{}.ckpt", g.case));
+        let n = checkpoint::save(&store, &["params."], &path).unwrap();
+        assert_eq!(n, names.len());
+        let mut fresh = Store::new();
+        checkpoint::load(&mut fresh, &path).unwrap();
+        for (name, data) in names {
+            assert_eq!(fresh.read_f32(&name).unwrap(), data);
+        }
+        assert!(!fresh.contains("tokens"), "prefix filter must exclude tokens");
+        std::fs::remove_file(path).ok();
+    });
+}
+
+#[test]
+fn prop_corpus_batches_always_in_bounds() {
+    cases(8, 0x5B, |g| {
+        let vocab = 8 * g.usize_in(4, 64);
+        let corpus = Corpus::generate(CorpusSpec {
+            train_tokens: 6000,
+            val_tokens: 3000,
+            ..CorpusSpec::for_vocab(vocab, g.case as u64)
+        });
+        let b = g.usize_in(1, 6);
+        let s = g.usize_in(4, 48);
+        let batch = corpus.train_batch(b, s, &mut g.rng);
+        assert_eq!(batch.tokens.len(), b * (s + 1));
+        assert!(batch.tokens.iter().all(|t| (*t as usize) < vocab && *t >= 0));
+        let (cz, answers) = corpus.cloze_batch(b, s.max(8), g.usize_in(0, 5));
+        assert_eq!(answers.len(), b);
+        assert!(cz.tokens.iter().all(|t| (*t as usize) < vocab));
+        // Every answer follows the grammar for the final context token.
+        let sl = s.max(8);
+        for row in 0..b {
+            let last = cz.tokens[row * sl + sl - 1] as usize;
+            let a = answers[row] as u32;
+            assert!(corpus.sigma[0][last] == a || corpus.sigma[1][last] == a);
+        }
+    });
+}
+
+#[test]
+fn prop_mask_hamming_metric_properties() {
+    cases(20, 0x5C, |g| {
+        let rows = g.usize_in(1, 8);
+        let cols = g.dim_multiple_of(4, 6);
+        let s = NmScheme::TWO_FOUR;
+        let a = random_row_mask(rows, cols, s, &mut g.rng);
+        let b = random_row_mask(rows, cols, s, &mut g.rng);
+        // Identity, symmetry, bounds.
+        assert_eq!(a.hamming(&a), 0);
+        assert_eq!(a.hamming(&b), b.hamming(&a));
+        assert!(a.hamming(&b) <= rows * cols);
+    });
+}
