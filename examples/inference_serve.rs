@@ -8,10 +8,15 @@
 //! per-request latency (p50/p95) and token throughput — the serving-side
 //! counterpart of the paper's inference-speedup claims (Table 2).
 //!
+//! The batcher's staging buffers are allocated once and reused for every
+//! coalesced batch (allocation-free steady state), and the kernel-engine
+//! thread count is configurable:
+//!
 //! ```bash
-//! cargo run --release --example inference_serve -- [n_requests] [model]
+//! cargo run --release --example inference_serve -- [n_requests] [model] [threads]
 //! ```
 
+use slope::backend::ParallelPolicy;
 use slope::config::{Method, RunConfig};
 use slope::coordinator::Trainer;
 use slope::data::{Corpus, CorpusSpec};
@@ -28,6 +33,7 @@ fn main() -> slope::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(64);
     let model = args.get(1).cloned().unwrap_or_else(|| "gpt-nano".to_string());
+    let threads: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0);
 
     // Warm up a model: a short training run gives us non-random weights.
     let cfg = RunConfig {
@@ -36,6 +42,7 @@ fn main() -> slope::Result<()> {
         steps: 8,
         lazy_fraction: 0.25,
         eval_every: 1000,
+        parallel: ParallelPolicy::with_threads(threads),
         ..Default::default()
     };
     let mut t = Trainer::new(cfg)?;
@@ -43,7 +50,13 @@ fn main() -> slope::Result<()> {
     t.train()?;
     let c = t.manifest.config.clone();
     let (b, s) = (c.batch_size, c.seq_len);
-    println!("== inference_serve: {model} (batch {b}, seq {s}) ==");
+    // The policy rides on RunConfig for the CPU kernel backend; the AOT
+    // forward path this server drives is single-stream until the runtime
+    // consumes it (ROADMAP "Policy into the AOT path").
+    println!(
+        "== inference_serve: {model} (batch {b}, seq {s}; policy {} thr, CPU kernels only) ==",
+        t.cfg.parallel.effective_threads()
+    );
 
     // Request source: prompts sliced from a held-out corpus.
     let corpus = Corpus::generate(CorpusSpec::for_vocab(c.vocab_size, 0xD15C));
@@ -56,15 +69,19 @@ fn main() -> slope::Result<()> {
         .collect();
 
     // Dynamic batcher: coalesce up to `b` requests per forward; pad the
-    // tail batch by repeating the last request.
-    let mut latencies_ms: Vec<f64> = vec![];
+    // tail batch by repeating the last request.  Staging buffers live
+    // outside the loop — the steady-state batcher does not allocate.
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(n_requests);
     let mut served = 0usize;
+    let mut batch_tokens: Vec<i32> = Vec::with_capacity(b * s);
+    let mut ids: Vec<usize> = Vec::with_capacity(b);
+    let mut submitted: Vec<Instant> = Vec::with_capacity(b);
     let t0 = Instant::now();
     while !queue.is_empty() {
         let take = queue.len().min(b);
-        let mut batch_tokens = Vec::with_capacity(b * s);
-        let mut ids = Vec::with_capacity(take);
-        let mut submitted = Vec::with_capacity(take);
+        batch_tokens.clear();
+        ids.clear();
+        submitted.clear();
         for _ in 0..take {
             let r = queue.pop_front().unwrap();
             batch_tokens.extend_from_slice(&r.tokens);
@@ -72,8 +89,7 @@ fn main() -> slope::Result<()> {
             submitted.push(r.submitted);
         }
         for _ in take..b {
-            let pad = batch_tokens[batch_tokens.len() - s..].to_vec();
-            batch_tokens.extend(pad);
+            batch_tokens.extend_from_within(batch_tokens.len() - s..);
         }
         t.store.put_i32("tokens", &[b, s], &batch_tokens)?;
         t.session.borrow_mut().run("forward_lora", &mut t.store)?;

@@ -31,6 +31,7 @@ fn main() -> slope::Result<()> {
         seed: 0,
         artifacts: "artifacts".into(),
         out_dir: "runs".into(),
+        parallel: slope::backend::ParallelPolicy::auto(),
     };
     println!("== pretrain_e2e: {model}, {steps} steps, SLoPe 2:4 + lazy adapters ==");
     let mut t = Trainer::new(cfg)?;
@@ -69,7 +70,7 @@ fn main() -> slope::Result<()> {
     println!("mean step wall       : {:.0} ms", outcome.mean_step_ms);
     println!("coordinator overhead : {:.2}%", outcome.coordinator_overhead * 100.0);
     let first = t.metrics.steps.first().map(|s| s.loss).unwrap_or(f32::NAN);
-    anyhow::ensure!(outcome.final_loss < first, "training must reduce the loss");
+    slope::ensure!(outcome.final_loss < first, "training must reduce the loss");
     println!("pretrain_e2e OK");
     Ok(())
 }

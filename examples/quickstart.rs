@@ -8,7 +8,7 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use slope::backend::{gemm_nt, SparseBackend, SpmmAlgo};
+use slope::backend::{gemm_nt, ParallelPolicy, SparseBackend, SpmmAlgo};
 use slope::config::{Method, RunConfig};
 use slope::coordinator::Trainer;
 use slope::sparsity::{random_row_mask, NmScheme};
@@ -20,7 +20,8 @@ fn main() -> slope::Result<()> {
     let mut rng = Rng::seed_from_u64(0);
     let w = Matrix::randn(64, 128, 0.5, &mut rng);
     let mask = random_row_mask(64, 128, NmScheme::TWO_FOUR, &mut rng);
-    let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor);
+    let policy = ParallelPolicy::auto();
+    let mut be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor, policy);
     let x = Matrix::randn(8, 128, 1.0, &mut rng);
     let y = be.forward(&x);
     let dense = gemm_nt(&x, &be.mask_r.apply(&w));
@@ -30,6 +31,15 @@ fn main() -> slope::Result<()> {
         be.mask_r.density(),
         be.mask_rc.density()
     );
+    println!(
+        "kernel engine: {} thread(s); packed Eq.-7 metadata: {} B (u16 layout would be {} B)",
+        be.policy.effective_threads(),
+        be.w.meta_bytes(),
+        be.w.rows * be.w.kcols() * 2
+    );
+    // Allocation-free serving call: same result, reused workspace buffer.
+    let y_ws = be.forward_ws(&x);
+    assert_eq!(*y_ws, y);
 
     // ---- 2. The AOT training pipeline ------------------------------------
     let cfg = RunConfig {

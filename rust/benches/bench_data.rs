@@ -1,16 +1,21 @@
 //! Data-pipeline throughput: corpus generation and batch slicing must never
-//! bottleneck the step loop (L3 perf target: batcher ≥ 10⁶ tok/s).
+//! bottleneck the step loop (L3 perf target: batcher ≥ 10⁶ tok/s).  The
+//! pipeline is single-threaded by design (the kernel engine owns the
+//! cores), so the threads column is the constant 1; the reuse row is the
+//! allocation-free `train_batch_into` the trainer's step loop calls.
+//! Set `SLOPE_BENCH_JSON` for the machine-readable rows.
 
 use slope::data::{Corpus, CorpusSpec};
-use slope::util::bench::{bench, bench_auto, black_box, print_header, print_result};
+use slope::util::bench::{bench, bench_auto, black_box, emit_json, print_header, print_result};
 use slope::util::Rng;
 
 fn main() {
-    print_header("bench_data — corpus generation + batcher");
+    print_header("bench_data — corpus generation + batcher (threads: 1)");
     let gen = bench("generate 256k-token corpus", 1, 5, || {
         black_box(Corpus::generate(CorpusSpec::for_vocab(512, 0)));
     });
     print_result(&gen);
+    emit_json("bench_data", "generate-256k", 1, &gen);
     println!("  → {:.1}M tok/s generation",
              (1 << 18) as f64 / (gen.median_ns / 1e9) / 1e6);
 
@@ -20,11 +25,27 @@ fn main() {
         black_box(corpus.train_batch(8, 128, &mut rng));
     });
     print_result(&b);
+    emit_json("bench_data", "train_batch-8x129", 1, &b);
     let toks = 8.0 * 129.0;
     println!("  → {:.1}M tok/s batching", toks / (b.median_ns / 1e9) / 1e6);
+
+    // Allocation-free batcher (the step loop's path): same draws, reused
+    // buffer.
+    let mut rng2 = Rng::seed_from_u64(0);
+    let mut buf: Vec<i32> = vec![];
+    let binto = bench_auto("train_batch_into 8×129", 100.0, || {
+        corpus.train_batch_into(8, 128, &mut rng2, &mut buf);
+        black_box(&buf);
+    });
+    print_result(&binto);
+    emit_json("bench_data", "train_batch_into-8x129", 1, &binto);
+    println!("  → {:.1}M tok/s batching (reused buffer, {:+.1}% vs alloc)",
+             toks / (binto.median_ns / 1e9) / 1e6,
+             (b.median_ns / binto.median_ns - 1.0) * 100.0);
 
     let cz = bench_auto("cloze_batch 8×128", 100.0, || {
         black_box(corpus.cloze_batch(8, 128, 3));
     });
     print_result(&cz);
+    emit_json("bench_data", "cloze_batch-8x128", 1, &cz);
 }

@@ -1,35 +1,57 @@
 //! Naive (4-call) vs fused (Eq. 11, 2-call) adapter inference — the
-//! measured-CPU half of the paper's Appendix C/D (Table 7): fusion wins by
-//! eliminating the separate add pass and raising arithmetic intensity.
+//! measured-CPU half of the paper's Appendix C/D (Table 7): fusion wins
+//! by eliminating the separate add pass and raising arithmetic intensity.
+//! The workspace column is the allocation-free serving call
+//! (`SparseBackend::lora_fused_ws`) the dynamic batcher uses.  Set
+//! `SLOPE_BENCH_JSON` for the machine-readable rows.
 
-use slope::backend::{lora_fused, lora_naive, SpmmAlgo};
-use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
+use slope::backend::{lora_fused, lora_naive, ParallelPolicy, SparseBackend, SpmmAlgo};
+use slope::sparsity::{random_row_mask, NmScheme};
 use slope::tensor::Matrix;
-use slope::util::bench::{bench_auto, black_box, print_header};
+use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
 use slope::util::Rng;
+
+const THREADS: [usize; 2] = [1, 4];
 
 fn main() {
     let mut rng = Rng::seed_from_u64(2);
     print_header("bench_lora_fusion — naive 4-call vs fused 2-call (Eq. 11)");
-    println!("{:<26} {:>12} {:>12} {:>9}", "shape (d, rank)", "naive", "fused", "gain");
+    println!(
+        "{:<20} {:>3} {:>12} {:>12} {:>12} {:>8}",
+        "shape (d, rank)", "thr", "naive", "fused", "fused_ws", "gain"
+    );
     for (d, r) in [(256usize, 4usize), (256, 16), (512, 8), (512, 32), (1024, 16)] {
         let x = Matrix::randn(64, d, 1.0, &mut rng);
         let w = Matrix::randn(d, d, 1.0, &mut rng);
         let mask = random_row_mask(d, d, NmScheme::TWO_FOUR, &mut rng);
-        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
         let lo_up = Matrix::randn(d, r, 0.2, &mut rng);
         let lo_down = Matrix::randn(r, d, 0.2, &mut rng);
-        let naive = bench_auto("naive", 120.0, || {
-            black_box(lora_naive(black_box(&x), &c, &lo_up, &lo_down, SpmmAlgo::RowMajor));
-        });
-        let fused = bench_auto("fused", 120.0, || {
-            black_box(lora_fused(black_box(&x), &c, &lo_up, &lo_down, SpmmAlgo::RowMajor));
-        });
-        println!(
-            "{:<26} {:>10.2}us {:>10.2}us {:>7.1}%",
-            format!("d={d} r={r}"),
-            naive.median_us(), fused.median_us(),
-            (naive.median_ns / fused.median_ns - 1.0) * 100.0
-        );
+        for threads in THREADS {
+            let p = ParallelPolicy::with_threads(threads);
+            let mut be = SparseBackend::setup(&w, mask.clone(), NmScheme::TWO_FOUR,
+                                              SpmmAlgo::RowMajor, p);
+            let c = be.w.clone();
+            let naive = bench_auto("naive", 120.0, || {
+                black_box(lora_naive(black_box(&x), &c, &lo_up, &lo_down,
+                                     SpmmAlgo::RowMajor, &p));
+            });
+            let fused = bench_auto("fused", 120.0, || {
+                black_box(lora_fused(black_box(&x), &c, &lo_up, &lo_down,
+                                     SpmmAlgo::RowMajor, &p));
+            });
+            let fused_ws = bench_auto("fused_ws", 120.0, || {
+                black_box(be.lora_fused_ws(black_box(&x), &lo_up, &lo_down));
+            });
+            let case = format!("d={d} r={r}");
+            emit_json("bench_lora_fusion", &format!("{case}/naive"), threads, &naive);
+            emit_json("bench_lora_fusion", &format!("{case}/fused"), threads, &fused);
+            emit_json("bench_lora_fusion", &format!("{case}/fused_ws"), threads, &fused_ws);
+            println!(
+                "{:<20} {:>3} {:>10.2}us {:>10.2}us {:>10.2}us {:>6.1}%",
+                case, threads,
+                naive.median_us(), fused.median_us(), fused_ws.median_us(),
+                (naive.median_ns / fused.median_ns - 1.0) * 100.0
+            );
+        }
     }
 }

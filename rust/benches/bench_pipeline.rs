@@ -5,23 +5,30 @@
 //! This is the bench behind EXPERIMENTS.md §Perf's "coordinator overhead"
 //! number: everything outside `execute` must stay < 5% of the step.
 
+use slope::backend::ParallelPolicy;
 use slope::config::{Method, RunConfig};
 use slope::coordinator::Trainer;
-use slope::util::bench::{bench, print_header};
+use slope::util::bench::{bench, emit_json, print_header};
 use std::time::Instant;
 
 fn main() -> slope::Result<()> {
     // `cargo bench` passes a `--bench` flag to harness=false binaries; skip flags.
-    let model = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-'))
-        .unwrap_or_else(|| "gpt-nano-half-depth".into());
+    let mut positional = std::env::args().skip(1).filter(|a| !a.starts_with('-'));
+    let model = positional.next().unwrap_or_else(|| "gpt-nano-half-depth".into());
+    // Second positional = kernel-engine threads (0 = auto).  The policy is
+    // carried on RunConfig for forward-compat, but the AOT execute path
+    // does not consume it yet (ROADMAP "Policy into the AOT path"), so the
+    // JSON rows below are emitted at threads=1 — the truthful value for
+    // this measurement.
+    let threads: usize = positional.next().and_then(|v| v.parse().ok()).unwrap_or(0);
+    let policy = ParallelPolicy::with_threads(threads);
     let cfg = RunConfig {
         model: model.clone(),
         method: Method::Slope,
         steps: 1,
         lazy_fraction: 0.0,
         eval_every: 1000,
+        parallel: policy,
         ..Default::default()
     };
     let mut t = Trainer::new(cfg)?;
@@ -44,6 +51,11 @@ fn main() -> slope::Result<()> {
         t.store.put_i32("tokens", &[b, s1], &batch.tokens).unwrap();
         let _ = t.store.read_scalar_f32("loss").unwrap();
     });
+    // threads=1: the AOT step does not run on the kernel engine (yet).
+    emit_json("bench_pipeline", &format!("{model}/full-step"), 1, &full);
+    emit_json("bench_pipeline", &format!("{model}/marshal-only"), 1, &marshal);
+    println!("policy        : {:>10} thr (CPU backend kernels only; AOT step is single-stream)",
+             policy.effective_threads());
     println!("full step     : {:>10.2} ms", full.median_ms());
     println!("marshal only  : {:>10.3} ms", marshal.median_ms());
     println!("L3 overhead   : {:>10.2} %", marshal.median_ns / full.median_ns * 100.0);

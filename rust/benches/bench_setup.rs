@@ -1,17 +1,23 @@
 //! Setup (prune + compress) vs multiply cost — the measured-CPU half of the
 //! paper's Figure 5 (Appendix B): the asymmetry that makes static masks
-//! (SLoPe) amortize and dynamic masks (FST/Bi-Mask/SR-STE) bleed.
+//! (SLoPe) amortize and dynamic masks (FST/Bi-Mask/SR-STE) bleed.  The
+//! multiply column is swept over kernel-engine threads (setup itself is a
+//! one-off, serial by design).  Set `SLOPE_BENCH_JSON` for the
+//! machine-readable rows.
 
-use slope::backend::spmm_rowmajor;
+use slope::backend::{spmm_rowmajor_with, ParallelPolicy};
 use slope::sparsity::{magnitude_row_mask, random_row_mask, CompressedNm, NmScheme};
 use slope::tensor::Matrix;
-use slope::util::bench::{bench_auto, black_box, print_header};
+use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
 use slope::util::Rng;
+
+const THREADS: [usize; 2] = [1, 4];
 
 fn main() {
     let mut rng = Rng::seed_from_u64(1);
     print_header("bench_setup — compress (setup) vs one multiply, square matrices");
-    println!("{:<12} {:>14} {:>14} {:>14} {:>8}", "dim", "mask search", "compress", "multiply", "ratio");
+    println!("{:<8} {:>3} {:>14} {:>14} {:>14} {:>8}",
+             "dim", "thr", "mask search", "compress", "multiply", "ratio");
     for d in [128usize, 256, 512, 1024] {
         let x = Matrix::randn(64, d, 1.0, &mut rng);
         let w = Matrix::randn(d, d, 1.0, &mut rng);
@@ -21,17 +27,24 @@ fn main() {
             black_box(magnitude_row_mask(black_box(&w), NmScheme::TWO_FOUR));
         });
         let compress = bench_auto("compress", 100.0, || {
-            black_box(CompressedNm::compress(black_box(&w), black_box(&mask), NmScheme::TWO_FOUR));
+            black_box(CompressedNm::compress(black_box(&w), black_box(&mask),
+                                             NmScheme::TWO_FOUR));
         });
-        let mult = bench_auto("mult", 100.0, || {
-            black_box(spmm_rowmajor(black_box(&x), black_box(&c0)));
-        });
-        let setup = search.median_ns + compress.median_ns;
-        println!(
-            "{:<12} {:>12.2}us {:>12.2}us {:>12.2}us {:>7.1}x",
-            d, search.median_us(), compress.median_us(), mult.median_us(),
-            setup / mult.median_ns
-        );
+        emit_json("bench_setup", &format!("d={d}/search"), 1, &search);
+        emit_json("bench_setup", &format!("d={d}/compress"), 1, &compress);
+        for threads in THREADS {
+            let p = ParallelPolicy::with_threads(threads);
+            let mult = bench_auto("mult", 100.0, || {
+                black_box(spmm_rowmajor_with(black_box(&x), black_box(&c0), &p));
+            });
+            emit_json("bench_setup", &format!("d={d}/mult"), threads, &mult);
+            let setup = search.median_ns + compress.median_ns;
+            println!(
+                "{:<8} {:>3} {:>12.2}us {:>12.2}us {:>12.2}us {:>7.1}x",
+                d, threads, search.median_us(), compress.median_us(),
+                mult.median_us(), setup / mult.median_ns
+            );
+        }
     }
-    println!("\n(static masks pay setup ONCE per run; dynamic-mask methods pay it\n every refresh — multiply the ratio column by the refresh rate)");
+    println!("\n(static masks pay setup ONCE per run; dynamic-mask methods pay it\n every refresh — multiply the ratio column by the refresh rate.  More\n threads shrink the multiply, making dynamic-mask refresh relatively\n even MORE expensive)");
 }

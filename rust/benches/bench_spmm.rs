@@ -1,21 +1,29 @@
 //! SpMM vs dense GEMM across LLM-relevant shapes — the CPU-measured
-//! counterpart of the paper's Figure 3a (shape-dependent SpMM speedup).
+//! counterpart of the paper's Figure 3a (shape-dependent SpMM speedup),
+//! now swept across kernel-engine thread counts.
 //!
 //! Roles match the paper: attention (d→d), upsample (d→4d), downsample
 //! (4d→d).  The structured 2:4 kernel does half the MACs and streams half
-//! the weight bytes; the printed speedup column is the measured analogue of
-//! Fig 3a's y-axis.
+//! the weight bytes (plus an 8×-smaller packed metadata plane); the
+//! printed speedup columns are the measured analogue of Fig 3a's y-axis,
+//! per thread count.  Set `SLOPE_BENCH_JSON` for the machine-readable
+//! perf trajectory.
 
-use slope::backend::{gemm_nt, spmm_rowmajor};
+use slope::backend::{gemm_nt_with, spmm_rowmajor_with, ParallelPolicy};
 use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
 use slope::tensor::Matrix;
-use slope::util::bench::{bench_auto, black_box, print_header};
+use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
 use slope::util::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 4];
 
 fn main() {
     let mut rng = Rng::seed_from_u64(0);
-    print_header("bench_spmm — dense vs 2:4 compressed (batch 64)");
-    println!("{:<28} {:>12} {:>12} {:>9}", "shape", "dense", "spmm", "speedup");
+    print_header("bench_spmm — dense vs 2:4 compressed (batch 64), by threads");
+    println!(
+        "{:<28} {:>3} {:>12} {:>12} {:>9} {:>9}",
+        "shape", "thr", "dense", "spmm", "vs dense", "vs 1thr"
+    );
     for (name, d_out, d_in) in [
         ("attention 256×256", 256usize, 256usize),
         ("attention 512×512", 512, 512),
@@ -29,19 +37,31 @@ fn main() {
         let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
         let wm = mask.apply(&w);
         let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
-        let dense = bench_auto("dense", 120.0, || {
-            black_box(gemm_nt(black_box(&x), black_box(&wm)));
-        });
-        let sparse = bench_auto("spmm", 120.0, || {
-            black_box(spmm_rowmajor(black_box(&x), black_box(&c)));
-        });
-        println!(
-            "{:<28} {:>10.2}us {:>10.2}us {:>8.2}x",
-            name,
-            dense.median_us(),
-            sparse.median_us(),
-            dense.median_ns / sparse.median_ns
-        );
+        let mut spmm_1thr_ns = f64::NAN;
+        for threads in THREADS {
+            // Width-scaled fork floor (same derivation the CLI applies).
+            let p = ParallelPolicy::for_width(threads, d_in);
+            let dense = bench_auto("dense", 120.0, || {
+                black_box(gemm_nt_with(black_box(&x), black_box(&wm), &p));
+            });
+            let sparse = bench_auto("spmm", 120.0, || {
+                black_box(spmm_rowmajor_with(black_box(&x), black_box(&c), &p));
+            });
+            if threads == 1 {
+                spmm_1thr_ns = sparse.median_ns;
+            }
+            emit_json("bench_spmm", &format!("{name}/dense"), threads, &dense);
+            emit_json("bench_spmm", &format!("{name}/spmm"), threads, &sparse);
+            println!(
+                "{:<28} {:>3} {:>10.2}us {:>10.2}us {:>8.2}x {:>8.2}x",
+                name,
+                threads,
+                dense.median_us(),
+                sparse.median_us(),
+                dense.median_ns / sparse.median_ns,
+                spmm_1thr_ns / sparse.median_ns
+            );
+        }
     }
-    println!("\n(2:4 halves MACs and weight bytes; CPU speedup < 2x because the\n gather-indexed access costs more per element than streaming — the\n hardware analogue is the metadata decode sparse tensor cores do for free)");
+    println!("\n(2:4 halves MACs and weight bytes; CPU speedup vs dense < 2x at one\n thread because the gather-indexed access costs more per element than\n streaming — the hardware analogue is the metadata decode sparse tensor\n cores do for free.  The vs-1thr column is the kernel engine's scaling.)");
 }

@@ -1,13 +1,16 @@
 //! Square-tile sweep for SpMM — the measured-CPU half of the paper's §2.4
-//! upsample-tiling optimization (Table 8 / Appendix E).  On CPU the win is
-//! cache locality; on the A100 it is cuSPARSELt's shape sweet-spot — both
-//! favor square tiles.
+//! upsample-tiling optimization (Table 8 / Appendix E), crossed with the
+//! kernel engine's thread count.  On CPU the tiling win is cache
+//! locality; on the A100 it is cuSPARSELt's shape sweet-spot — both favor
+//! square tiles.  Set `SLOPE_BENCH_JSON` for the machine-readable rows.
 
-use slope::backend::{spmm_rowmajor, spmm_tiled};
+use slope::backend::{spmm_rowmajor_with, spmm_tiled_with, ParallelPolicy};
 use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
 use slope::tensor::Matrix;
-use slope::util::bench::{bench_auto, black_box, print_header};
+use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
 use slope::util::Rng;
+
+const THREADS: [usize; 2] = [1, 4];
 
 fn main() {
     let mut rng = Rng::seed_from_u64(3);
@@ -17,16 +20,23 @@ fn main() {
     let w = Matrix::randn(2048, 512, 1.0, &mut rng);
     let mask = random_row_mask(2048, 512, NmScheme::TWO_FOUR, &mut rng);
     let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
-    let base = bench_auto("row-major", 200.0, || {
-        black_box(spmm_rowmajor(black_box(&x), black_box(&c)));
-    });
-    println!("{:<16} {:>12} {:>9}", "variant", "median", "vs base");
-    println!("{:<16} {:>10.2}us {:>8.2}x", "row-major", base.median_us(), 1.0);
-    for tile in [8usize, 16, 32, 64, 128, 256] {
-        let r = bench_auto("tiled", 200.0, || {
-            black_box(spmm_tiled(black_box(&x), black_box(&c), tile));
+    println!("{:<16} {:>3} {:>12} {:>9}", "variant", "thr", "median", "vs base");
+    for threads in THREADS {
+        let p = ParallelPolicy::for_width(threads, 512);
+        let base = bench_auto("row-major", 200.0, || {
+            black_box(spmm_rowmajor_with(black_box(&x), black_box(&c), &p));
         });
-        println!("{:<16} {:>10.2}us {:>8.2}x",
-                 format!("tile {tile}"), r.median_us(), base.median_ns / r.median_ns);
+        emit_json("bench_tiling", "row-major", threads, &base);
+        println!("{:<16} {:>3} {:>10.2}us {:>8.2}x", "row-major", threads,
+                 base.median_us(), 1.0);
+        for tile in [8usize, 16, 32, 64, 128, 256] {
+            let r = bench_auto("tiled", 200.0, || {
+                black_box(spmm_tiled_with(black_box(&x), black_box(&c), tile, &p));
+            });
+            emit_json("bench_tiling", &format!("tile-{tile}"), threads, &r);
+            println!("{:<16} {:>3} {:>10.2}us {:>8.2}x",
+                     format!("tile {tile}"), threads,
+                     r.median_us(), base.median_ns / r.median_ns);
+        }
     }
 }

@@ -5,29 +5,68 @@
 //! L1 reuse with an 8-wide unrolled inner loop over the shared reduction
 //! dimension.  Everything is safe rust; the optimizer auto-vectorizes the
 //! inner loops (checked in the §Perf pass).
+//!
+//! Every kernel comes in three forms wired to the same per-row core:
+//! * `gemm*(a, b)` — allocating, serial (the seed API, kept for tests
+//!   and cold paths);
+//! * `gemm*_with(a, b, policy)` — allocating, parallel over output rows;
+//! * `gemm*_into(a, b, &mut c, policy)` — out-param, parallel,
+//!   allocation-free once the caller's buffer is warm.
+//!
+//! Because the engine partitions *output rows* and the per-row reduction
+//! order never depends on the partition, parallel results are
+//! bit-identical to serial at any thread count.
 
+use crate::backend::pool::{parallel_over_rows, ParallelPolicy};
 use crate::tensor::Matrix;
+use std::ops::Range;
 
 /// Cache-block edge for the K dimension (f32 lines; 256×4B = 1 KiB rows).
 const KB: usize = 256;
 /// Output-tile edge.
 const JB: usize = 64;
 
-/// `C = A · B` — `a: (m, k)`, `b: (k, n)`.
+// ---- C = A · B --------------------------------------------------------
+
+/// `C = A · B` — `a: (m, k)`, `b: (k, n)`.  Serial.
 pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm_with(a, b, &ParallelPolicy::serial())
+}
+
+/// `C = A · B`, parallel over output rows.
+pub fn gemm_with(a: &Matrix, b: &Matrix, policy: &ParallelPolicy) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    gemm_into(a, b, &mut c, policy);
+    c
+}
+
+/// `C = A · B` into a caller-owned output (overwritten).
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy) {
     assert_eq!(a.cols, b.rows, "gemm shape mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm output shape");
+    c.data.fill(0.0);
+    parallel_over_rows(policy, &mut c.data, b.cols, |range, chunk| {
+        gemm_rows(a, b, range, chunk);
+    });
+}
+
+/// Per-row-chunk core: rows of `C` in `range`, written into `out`
+/// (`range.len() × n`).  The kk block stays OUTER across the chunk's rows
+/// so the streamed `b[kk..kend]` slice is reused by every row of the
+/// chunk (the seed kernel's L2 blocking, now per worker).  Per output row
+/// the update order is still (kk ascending, p ascending) regardless of
+/// the partition, so parallel results stay bit-identical to serial.  The
+/// inner j-loop is branch-free (a zero-skip here mispredicts on dense
+/// operands and starves the vector units).
+fn gemm_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
     for kk in (0..k).step_by(KB) {
         let kend = (kk + KB).min(k);
-        for i in 0..m {
+        for (local, i) in range.clone().enumerate() {
             let arow = a.row(i);
-            let crow = c.row_mut(i);
+            let crow = &mut out[local * n..(local + 1) * n];
             for p in kk..kend {
                 let av = arow[p];
-                if av == 0.0 {
-                    continue;
-                }
                 let brow = b.row(p);
                 for j in 0..n {
                     crow[j] += av * brow[j];
@@ -35,57 +74,102 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
+}
+
+// ---- C = A · Bᵀ -------------------------------------------------------
+
+/// `C = A · Bᵀ` — `a: (m, k)`, `b: (n, k)`.  Row-dot-row form: unit-stride
+/// on both operands, the fastest layout for row-major data.  Serial.
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm_nt_with(a, b, &ParallelPolicy::serial())
+}
+
+/// `C = A · Bᵀ`, parallel over output rows.
+pub fn gemm_nt_with(a: &Matrix, b: &Matrix, policy: &ParallelPolicy) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    gemm_nt_into(a, b, &mut c, policy);
     c
 }
 
-/// `C = A · Bᵀ` — `a: (m, k)`, `b: (n, k)`.  Row-dot-row form: unit-stride
-/// on both operands, the fastest layout for row-major data.
-pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    gemm_nt_acc(a, b, Matrix::zeros(a.rows, b.rows))
+/// `C = A · Bᵀ` into a caller-owned output (overwritten).
+pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy) {
+    c.data.fill(0.0);
+    gemm_nt_acc_into(a, b, c, policy);
 }
 
 /// `C += A · Bᵀ` accumulating into an existing output — the fused
 /// matmul+add of §2.4 (Eq. 11-right): one traversal, no extra pass.
+/// By-value form kept for the seed API.
 pub fn gemm_nt_acc(a: &Matrix, b: &Matrix, mut c: Matrix) -> Matrix {
+    gemm_nt_acc_into(a, b, &mut c, &ParallelPolicy::serial());
+    c
+}
+
+/// `C += A · Bᵀ` into a caller-owned accumulator, parallel over rows.
+pub fn gemm_nt_acc_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy) {
     assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    parallel_over_rows(policy, &mut c.data, b.rows, |range, chunk| {
+        gemm_nt_rows(a, b, range, chunk);
+    });
+}
+
+fn gemm_nt_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
     let k = a.cols;
-    for i in 0..a.rows {
+    let n = b.rows;
+    for (local, i) in range.enumerate() {
         let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for jb in (0..b.rows).step_by(JB) {
-            let jend = (jb + JB).min(b.rows);
+        let crow = &mut out[local * n..(local + 1) * n];
+        for jb in (0..n).step_by(JB) {
+            let jend = (jb + JB).min(n);
             for j in jb..jend {
                 crow[j] += dot(arow, b.row(j), k);
             }
         }
     }
+}
+
+// ---- C = Aᵀ · B -------------------------------------------------------
+
+/// `C = Aᵀ · B` — `a: (k, m)`, `b: (k, n)` → `(m, n)`.  Used for
+/// `∇W = ∇Yᵀ · X` (Algorithm 1 line 12).  Serial.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    gemm_tn_with(a, b, &ParallelPolicy::serial())
+}
+
+/// `C = Aᵀ · B`, parallel over output rows.
+pub fn gemm_tn_with(a: &Matrix, b: &Matrix, policy: &ParallelPolicy) -> Matrix {
+    let mut c = Matrix::zeros(a.cols, b.cols);
+    gemm_tn_into(a, b, &mut c, policy);
     c
 }
 
-/// `C = Aᵀ · B` — `a: (k, m)`, `b: (k, n)` → `(m, n)`.  Used for
-/// `∇W = ∇Yᵀ · X` (Algorithm 1 line 12).
-pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+/// `C = Aᵀ · B` into a caller-owned output (overwritten).
+pub fn gemm_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy) {
     assert_eq!(a.rows, b.rows, "gemm_tn shape mismatch");
-    let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
-    // Accumulate rank-1 updates row-by-row of the shared dim: unit stride
-    // on b and c.
-    for p in 0..k {
-        let arow = a.row(p);
-        let brow = b.row(p);
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "gemm_tn output shape");
+    c.data.fill(0.0);
+    parallel_over_rows(policy, &mut c.data, b.cols, |range, chunk| {
+        gemm_tn_rows(a, b, range, chunk);
+    });
+}
+
+/// Per-row core for the transposed-A form: output row `i` accumulates
+/// `a[p, i] · b[p, :]` for `p` ascending — the same per-row order as the
+/// rank-1-update serial loop, so parallel results stay bit-identical.
+/// The j-loop is branch-free (no zero-skip; see `gemm_rows`).
+fn gemm_tn_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
+    let (k, n) = (a.rows, b.cols);
+    for (local, i) in range.enumerate() {
+        let crow = &mut out[local * n..(local + 1) * n];
+        for p in 0..k {
+            let av = a.data[p * a.cols + i];
+            let brow = b.row(p);
             for j in 0..n {
                 crow[j] += av * brow[j];
             }
         }
     }
-    c
 }
 
 /// 8-wide unrolled dot product (auto-vectorizes to SIMD).
@@ -150,6 +234,45 @@ mod tests {
             *w += c;
         }
         assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let mut rng = Rng::seed_from_u64(2);
+        for (m, k, n) in [(1, 8, 5), (13, 37, 11), (64, 96, 32)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let bt = b.transpose();
+            let at = a.transpose();
+            for threads in [2usize, 4, 7] {
+                let p = ParallelPolicy { threads, min_rows_per_task: 1 };
+                assert_eq!(gemm_with(&a, &b, &p), gemm(&a, &b), "gemm t={threads}");
+                assert_eq!(gemm_nt_with(&a, &bt, &p), gemm_nt(&a, &bt), "nt t={threads}");
+                assert_eq!(gemm_tn_with(&at, &b, &p), gemm_tn(&at, &b), "tn t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_buffers() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = Matrix::randn(6, 12, 1.0, &mut rng);
+        let b = Matrix::randn(12, 9, 1.0, &mut rng);
+        let mut c = Matrix::randn(6, 9, 1.0, &mut rng); // stale garbage
+        gemm_into(&a, &b, &mut c, &ParallelPolicy::serial());
+        assert_eq!(c, gemm(&a, &b), "gemm_into must overwrite stale data");
+        gemm_into(&a, &b, &mut c, &ParallelPolicy::with_threads(3));
+        assert_eq!(c, gemm(&a, &b), "parallel reuse of the same buffer");
+
+        let bt = b.transpose(); // (9, 12)
+        let mut cnt = Matrix::randn(6, 9, 1.0, &mut rng);
+        gemm_nt_into(&a, &bt, &mut cnt, &ParallelPolicy::with_threads(2));
+        assert_eq!(cnt, gemm_nt(&a, &bt));
+
+        let d = Matrix::randn(6, 9, 1.0, &mut rng);
+        let mut ctn = Matrix::randn(12, 9, 1.0, &mut rng);
+        gemm_tn_into(&a, &d, &mut ctn, &ParallelPolicy::with_threads(2));
+        assert_eq!(ctn, gemm_tn(&a, &d));
     }
 
     #[test]

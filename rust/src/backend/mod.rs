@@ -1,5 +1,6 @@
 //! The Algorithm-1 sparse kernel backend — the role cuSPARSELt + the
-//! paper's custom CUDA kernels play, implemented for CPU.
+//! paper's custom CUDA kernels play, implemented for CPU as a parallel
+//! kernel engine.
 //!
 //! API mirrors Algorithm 1 of the paper:
 //! * [`SparseBackend::setup`]            — compress a pruned weight (line 3–4)
@@ -9,6 +10,41 @@
 //! * [`CompressedNm::sparse_add`]        — weight-decay combine (line 15)
 //! * [`CompressedNm::update_from_dense`] — write back updates (line 17–18)
 //!
+//! # Threading model
+//!
+//! All six kernels (`gemm`, `gemm_nt`, `gemm_nt_acc`, `gemm_tn`,
+//! `spmm_rowmajor`, `spmm_tiled`) run on the [`pool`] engine: the output
+//! is split into contiguous **row ranges** (GEMM weight/output rows, SpMM
+//! batch rows), each range is handed to a worker on a std scoped thread,
+//! and every worker runs the *same* per-row loop body the serial kernel
+//! runs.  Since a row's reduction order never depends on the partition,
+//! parallel results are bit-identical to serial at any thread count — the
+//! property `tests/parallel_and_packed.rs` pins across {1, 2, 4, 7}
+//! threads and ragged shapes.  [`ParallelPolicy`] (worker count + a
+//! min-rows-per-task fork floor) persists on [`SparseBackend`] and
+//! [`crate::config::RunConfig`] and flows through every entry point;
+//! `*_with` variants parallelize, the bare seed names stay serial.
+//!
+//! # Packed metadata (Eq. 7 accounting)
+//!
+//! [`CompressedNm`] stores its index plane bit-packed: one intra-group
+//! offset of `ceil(log2 M)` bits per kept value, decoded inline in the
+//! SpMM gather loop as `group·M + offset`.  For 2:4 that is 2 bits per
+//! kept value = 4 bits per group, vs. 32 bits per group for the old
+//! `u16` absolute indices (8× less metadata traffic) and vs. the
+//! `⌈log₂ C(4,2)⌉ = 3` bits per group of the paper's Eq.-7 entropy bound
+//! — the packed layout is the hardware rounding of that bound, exactly
+//! what sparse tensor cores store.  `CompressedNm::storage_bits` charges
+//! the Eq.-7 rate (§3.1 memory model); `packed_storage_bits` charges the
+//! real plane; `memmodel` exposes both rates.
+//!
+//! # Allocation-free hot paths
+//!
+//! Every kernel has an `*_into` out-param form, and [`SparseBackend`]
+//! carries a reusable [`Workspace`] (`forward_ws`, `grad_input_ws`,
+//! `grad_weight_ws`, `lora_fused_ws`) so steady-state training steps and
+//! the serving batcher perform zero heap allocations per call.
+//!
 //! Two SpMM execution strategies are provided because the §2.4 tiling
 //! ablation (Table 8) needs both: [`spmm_rowmajor`] (straight traversal)
 //! and [`spmm_tiled`] (square output tiles — the paper's upsample-tensor
@@ -16,20 +52,55 @@
 //! sweet-spots).
 
 pub mod gemm;
+pub mod pool;
 pub mod spmm;
 
-pub use gemm::{gemm, gemm_nt, gemm_tn};
-pub use spmm::{spmm_rowmajor, spmm_tiled, SpmmAlgo};
+pub use gemm::{gemm, gemm_into, gemm_nt, gemm_nt_acc, gemm_nt_acc_into, gemm_nt_into,
+               gemm_nt_with, gemm_tn, gemm_tn_into, gemm_tn_with, gemm_with};
+pub use pool::{parallel_over_rows, ParallelPolicy};
+pub use spmm::{spmm_rowmajor, spmm_rowmajor_into, spmm_rowmajor_with, spmm_tiled,
+               spmm_tiled_into, spmm_tiled_with, SpmmAlgo};
 
 use crate::sparsity::{CompressedNm, Mask, NmScheme};
 use crate::tensor::Matrix;
+
+/// Grow-once output buffer helper: (re)shape `buf` only when the target
+/// shape changes; the `*_into` kernels overwrite every element.
+#[inline]
+fn ensure_out(buf: &mut Matrix, rows: usize, cols: usize) {
+    if buf.rows != rows || buf.cols != cols {
+        *buf = Matrix::zeros(rows, cols);
+    }
+}
+
+/// Dispatch an SpMM by algorithm into a caller-owned output.
+fn spmm_into_algo(algo: SpmmAlgo, policy: &ParallelPolicy, x: &Matrix, w: &CompressedNm,
+                  y: &mut Matrix) {
+    match algo {
+        SpmmAlgo::RowMajor => spmm_rowmajor_into(x, w, y, policy),
+        SpmmAlgo::Tiled { tile } => spmm_tiled_into(x, w, tile, y, policy),
+    }
+}
+
+/// Reusable kernel outputs for the Algorithm-1 step loop and the serving
+/// path — all buffers are grown once and overwritten thereafter.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    fwd: Matrix,
+    gin: Matrix,
+    gw_stage: Matrix,
+    gw: Option<CompressedNm>,
+    lora_t: Matrix,
+    lora_y: Matrix,
+}
 
 /// Stateful backend handle mirroring Algorithm 1's `backend.*` object.
 ///
 /// Holds the compressed weight and its compressed transpose — SLoPe stores
 /// both (forward uses `Wᵀ`-as-stored = row-compressed `W`; BWD-2 uses the
 /// double-pruned transpose), which is exactly the 2× weight term in the
-/// Table-3 memory model.
+/// Table-3 memory model — plus the parallel policy and the reusable
+/// workspace for allocation-free stepping.
 pub struct SparseBackend {
     pub scheme: NmScheme,
     /// Row-compressed `W` (drives FWD, Eq. 4).
@@ -41,11 +112,15 @@ pub struct SparseBackend {
     /// The double-pruned mask in `W` layout.
     pub mask_rc: Mask,
     pub algo: SpmmAlgo,
+    /// Kernel-engine configuration; flows into every kernel call.
+    pub policy: ParallelPolicy,
+    ws: Workspace,
 }
 
 impl SparseBackend {
     /// `backend.setup(...)` for both W and its double-pruned transpose.
-    pub fn setup(w: &Matrix, mask_r: Mask, scheme: NmScheme, algo: SpmmAlgo) -> Self {
+    pub fn setup(w: &Matrix, mask_r: Mask, scheme: NmScheme, algo: SpmmAlgo,
+                 policy: ParallelPolicy) -> Self {
         let mask_rc = crate::sparsity::double_prune_mask(w, &mask_r, scheme);
         let w_c = CompressedNm::compress(w, &mask_r, scheme);
         // Transpose view for BWD-2: rows of Wᵀ are columns of W; the
@@ -60,7 +135,8 @@ impl SparseBackend {
             },
         };
         let w_t = CompressedNm::compress(&w_rc, &mask_rc_t, scheme);
-        Self { scheme, w: w_c, w_t, mask_r, mask_rc, algo }
+        Self { scheme, w: w_c, w_t, mask_r, mask_rc, algo, policy,
+               ws: Workspace::default() }
     }
 
     /// FWD (Eq. 4): `Y = X · (W^R)ᵀ` — `x: (b, d_in)` → `(b, d_out)`.
@@ -68,23 +144,73 @@ impl SparseBackend {
         self.spmm(x, &self.w)
     }
 
+    /// FWD into a caller-owned output.
+    pub fn forward_into(&self, x: &Matrix, y: &mut Matrix) {
+        ensure_out(y, x.rows, self.w.rows);
+        spmm_into_algo(self.algo, &self.policy, x, &self.w, y);
+    }
+
+    /// Allocation-free FWD: reuses the backend workspace buffer.
+    pub fn forward_ws(&mut self, x: &Matrix) -> &Matrix {
+        ensure_out(&mut self.ws.fwd, x.rows, self.w.rows);
+        spmm_into_algo(self.algo, &self.policy, x, &self.w, &mut self.ws.fwd);
+        &self.ws.fwd
+    }
+
     /// BWD-2 (Eq. 6): `∇X = ∇Y · W^{R,C}` — `gy: (b, d_out)` → `(b, d_in)`.
     pub fn grad_input(&self, gy: &Matrix) -> Matrix {
         self.spmm(gy, &self.w_t)
     }
 
+    /// BWD-2 into a caller-owned output.
+    pub fn grad_input_into(&self, gy: &Matrix, gx: &mut Matrix) {
+        ensure_out(gx, gy.rows, self.w_t.rows);
+        spmm_into_algo(self.algo, &self.policy, gy, &self.w_t, gx);
+    }
+
+    /// Allocation-free BWD-2: reuses the backend workspace buffer.
+    pub fn grad_input_ws(&mut self, gy: &Matrix) -> &Matrix {
+        ensure_out(&mut self.ws.gin, gy.rows, self.w_t.rows);
+        spmm_into_algo(self.algo, &self.policy, gy, &self.w_t, &mut self.ws.gin);
+        &self.ws.gin
+    }
+
     /// BWD-1 (Eq. 5) + line 13: dense `∇Yᵀ·X`, masked and packed.
     pub fn grad_weight(&self, gy: &Matrix, x: &Matrix) -> CompressedNm {
-        let gw = gemm_tn(gy, x); // (d_out, d_in)
+        let gw = gemm_tn_with(gy, x, &self.policy); // (d_out, d_in)
         prune_and_compress(&gw, &self.w)
     }
 
-    /// `backend.spmm` with the configured algorithm.
+    /// Allocation-free BWD-1: dense staging and packed output both live in
+    /// the workspace (the packed pattern is cloned from `w` once).
+    pub fn grad_weight_ws(&mut self, gy: &Matrix, x: &Matrix) -> &CompressedNm {
+        ensure_out(&mut self.ws.gw_stage, gy.cols, x.cols);
+        gemm_tn_into(gy, x, &mut self.ws.gw_stage, &self.policy);
+        if self.ws.gw.is_none() {
+            self.ws.gw = Some(self.w.clone());
+        }
+        let out = self.ws.gw.as_mut().unwrap();
+        prune_and_compress_into(&self.ws.gw_stage, &self.w, out);
+        out
+    }
+
+    /// `backend.spmm` with the configured algorithm and policy.
     pub fn spmm(&self, x: &Matrix, w: &CompressedNm) -> Matrix {
         match self.algo {
-            SpmmAlgo::RowMajor => spmm_rowmajor(x, w),
-            SpmmAlgo::Tiled { tile } => spmm_tiled(x, w, tile),
+            SpmmAlgo::RowMajor => spmm_rowmajor_with(x, w, &self.policy),
+            SpmmAlgo::Tiled { tile } => spmm_tiled_with(x, w, tile, &self.policy),
         }
+    }
+
+    /// Fused LoRA serving call (Eq. 11) through the workspace: zero
+    /// allocations per call once shapes are warm.
+    pub fn lora_fused_ws(&mut self, x: &Matrix, lo_up: &Matrix, lo_down: &Matrix) -> &Matrix {
+        ensure_out(&mut self.ws.lora_y, x.rows, self.w.rows);
+        ensure_out(&mut self.ws.lora_t, x.rows, lo_down.rows);
+        spmm_into_algo(self.algo, &self.policy, x, &self.w, &mut self.ws.lora_y);
+        gemm_nt_into(x, lo_down, &mut self.ws.lora_t, &self.policy);
+        gemm_nt_acc_into(&self.ws.lora_t, lo_up, &mut self.ws.lora_y, &self.policy);
+        &self.ws.lora_y
     }
 
     /// Optimizer epilogue for one step (Algorithm 1 lines 15–18):
@@ -110,27 +236,39 @@ impl SparseBackend {
 /// Algorithm 1 line 13: mask a dense gradient with the weight's static
 /// pattern and pack it (the paper's custom prune-and-compress kernel).
 pub fn prune_and_compress(g: &Matrix, pattern: &CompressedNm) -> CompressedNm {
+    let mut out = pattern.clone();
+    prune_and_compress_into(g, pattern, &mut out);
+    out
+}
+
+/// Out-param form of [`prune_and_compress`]: gathers `g` through the
+/// pattern's packed offsets into `out.values`, reusing `out`'s buffers
+/// (re-cloned from `pattern` only on shape/scheme change).
+pub fn prune_and_compress_into(g: &Matrix, pattern: &CompressedNm, out: &mut CompressedNm) {
     assert_eq!((g.rows, g.cols), (pattern.rows, pattern.cols));
+    if (out.rows, out.cols, out.scheme) != (pattern.rows, pattern.cols, pattern.scheme) {
+        *out = pattern.clone();
+    } else if out.meta != pattern.meta {
+        out.meta.clone_from(&pattern.meta);
+    }
     let kc = pattern.kcols();
-    let mut values = vec![0.0f32; pattern.rows * kc];
     for r in 0..pattern.rows {
         let grow = g.row(r);
-        for k in 0..kc {
-            values[r * kc + k] = grow[pattern.indices[r * kc + k] as usize];
+        for (k, c) in pattern.row_indices(r).enumerate() {
+            out.values[r * kc + k] = grow[c];
         }
     }
-    CompressedNm { values, ..pattern.clone() }
 }
 
 /// Naive LoRA inference path (4 kernel calls — Appendix D "before").
 pub fn lora_naive(x: &Matrix, w: &CompressedNm, lo_up: &Matrix, lo_down: &Matrix,
-                  algo: SpmmAlgo) -> Matrix {
+                  algo: SpmmAlgo, policy: &ParallelPolicy) -> Matrix {
     let y1 = match algo {
-        SpmmAlgo::RowMajor => spmm_rowmajor(x, w),
-        SpmmAlgo::Tiled { tile } => spmm_tiled(x, w, tile),
+        SpmmAlgo::RowMajor => spmm_rowmajor_with(x, w, policy),
+        SpmmAlgo::Tiled { tile } => spmm_tiled_with(x, w, tile, policy),
     };
-    let t = gemm_nt(x, lo_down); // (b, r) = x · Rᵀ
-    let y2 = gemm_nt(&t, lo_up); // (b, d_out) = t · Lᵀ
+    let t = gemm_nt_with(x, lo_down, policy); // (b, r) = x · Rᵀ
+    let y2 = gemm_nt_with(&t, lo_up, policy); // (b, d_out) = t · Lᵀ
     let mut y = y1;
     for (o, v) in y.data.iter_mut().zip(&y2.data) {
         *o += v;
@@ -142,17 +280,18 @@ pub fn lora_naive(x: &Matrix, w: &CompressedNm, lo_up: &Matrix, lo_down: &Matrix
 /// the downsample factor rides along the SpMM as dense trailing rows, and
 /// the upsample multiply is fused with the addition.
 pub fn lora_fused(x: &Matrix, w: &CompressedNm, lo_up: &Matrix, lo_down: &Matrix,
-                  algo: SpmmAlgo) -> Matrix {
+                  algo: SpmmAlgo, policy: &ParallelPolicy) -> Matrix {
     // Call 1: [Y1|T] = X · [Wᵀ|Rᵀ]. We emulate the concatenated operand by
     // one pass over X shared by both products (single traversal = the
     // arithmetic-intensity win the paper measures).
-    let y1 = match algo {
-        SpmmAlgo::RowMajor => spmm_rowmajor(x, w),
-        SpmmAlgo::Tiled { tile } => spmm_tiled(x, w, tile),
+    let mut y1 = match algo {
+        SpmmAlgo::RowMajor => spmm_rowmajor_with(x, w, policy),
+        SpmmAlgo::Tiled { tile } => spmm_tiled_with(x, w, tile, policy),
     };
-    let t = gemm_nt(x, lo_down);
+    let t = gemm_nt_with(x, lo_down, policy);
     // Call 2: fused Y = T·Lᵀ + Y1 (one traversal, accumulate into Y1).
-    gemm::gemm_nt_acc(&t, lo_up, y1)
+    gemm_nt_acc_into(&t, lo_up, &mut y1, policy);
+    y1
 }
 
 #[cfg(test)]
@@ -166,7 +305,8 @@ mod tests {
         let x = Matrix::randn(b, d_in, 1.0, &mut rng);
         let w = Matrix::randn(d_out, d_in, 1.0, &mut rng);
         let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
-        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor);
+        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor,
+                                      ParallelPolicy::serial());
         (x, w, be)
     }
 
@@ -195,6 +335,34 @@ mod tests {
         let gw = be.grad_weight(&gy, &x);
         let dense = gemm_tn(&gy, &x);
         assert!(gw.decompress().max_abs_diff(&be.mask_r.apply(&dense)) < 1e-4);
+    }
+
+    #[test]
+    fn workspace_paths_match_allocating_paths() {
+        let (x, _, mut be) = setup(8, 16, 32, 6);
+        let mut rng = Rng::seed_from_u64(13);
+        let gy = Matrix::randn(8, 16, 1.0, &mut rng);
+
+        let want_y = be.forward(&x);
+        let want_gx = be.grad_input(&gy);
+        let want_gw = be.grad_weight(&gy, &x);
+
+        assert_eq!(*be.forward_ws(&x), want_y);
+        assert_eq!(*be.grad_input_ws(&gy), want_gx);
+        assert_eq!(*be.grad_weight_ws(&gy, &x), want_gw);
+
+        // Steady state: repeat calls reuse the same buffers (no realloc).
+        let p0 = be.forward_ws(&x).data.as_ptr();
+        let p1 = be.forward_ws(&x).data.as_ptr();
+        assert_eq!(p0, p1, "workspace must not reallocate at a stable shape");
+    }
+
+    #[test]
+    fn into_paths_resize_on_shape_change() {
+        let (x, _, be) = setup(8, 16, 32, 7);
+        let mut y = Matrix::zeros(1, 1); // wrong shape: must be regrown
+        be.forward_into(&x, &mut y);
+        assert_eq!(y, be.forward(&x));
     }
 
     #[test]
@@ -227,13 +395,16 @@ mod tests {
 
     #[test]
     fn lora_fused_equals_naive() {
-        let (x, _, be) = setup(8, 16, 32, 4);
+        let (x, _, mut be) = setup(8, 16, 32, 4);
         let mut rng = Rng::seed_from_u64(12);
         let lo_up = Matrix::randn(16, 4, 0.5, &mut rng); // L: (d_out, r)
         let lo_down = Matrix::randn(4, 32, 0.5, &mut rng); // R: (r, d_in)
-        let a = lora_naive(&x, &be.w, &lo_up, &lo_down, SpmmAlgo::RowMajor);
-        let b = lora_fused(&x, &be.w, &lo_up, &lo_down, SpmmAlgo::RowMajor);
+        let p = ParallelPolicy::serial();
+        let a = lora_naive(&x, &be.w, &lo_up, &lo_down, SpmmAlgo::RowMajor, &p);
+        let b = lora_fused(&x, &be.w, &lo_up, &lo_down, SpmmAlgo::RowMajor, &p);
         assert!(a.max_abs_diff(&b) < 1e-4);
+        // The workspace serving call matches the fused path exactly.
+        assert_eq!(*be.lora_fused_ws(&x, &lo_up, &lo_down), b);
     }
 
     #[test]

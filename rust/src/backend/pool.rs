@@ -1,0 +1,174 @@
+//! The parallel execution engine for the kernel backend: row-range work
+//! partitioning over std scoped threads — no external dependencies.
+//!
+//! Every kernel in this backend writes a row-major output whose rows are
+//! independent (GEMM output rows, SpMM batch rows), so the engine's one
+//! primitive is [`parallel_over_rows`]: split the output buffer into
+//! contiguous row ranges, hand each range to a worker, and run the *same*
+//! per-row loop body the serial kernel runs.  Because the partition never
+//! changes the per-row reduction order, results are **bit-identical** to
+//! the serial kernel at any thread count — the property the
+//! `parallel_and_packed` test suite pins.
+//!
+//! [`ParallelPolicy`] is the configuration handle that persists across
+//! kernel calls (it lives on [`crate::backend::SparseBackend`] and
+//! [`crate::config::RunConfig`]): worker count plus a fork-granularity
+//! floor so tiny matrices never pay thread-spawn latency.  Workers are
+//! joined at region end by `std::thread::scope`, which is what lets them
+//! borrow the operands directly instead of copying into `'static` jobs.
+
+use std::ops::Range;
+
+/// Parallelism configuration for the kernel engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelPolicy {
+    /// Worker count; `0` = auto-detect from `available_parallelism`.
+    pub threads: usize,
+    /// Minimum output rows per task — below `threads × min_rows_per_task`
+    /// rows the kernel runs serially (spawn cost would dominate).
+    pub min_rows_per_task: usize,
+}
+
+impl ParallelPolicy {
+    /// Single-threaded execution (the seed kernels' behavior).
+    pub const fn serial() -> Self {
+        Self { threads: 1, min_rows_per_task: 8 }
+    }
+
+    /// Use every available hardware thread.
+    pub const fn auto() -> Self {
+        Self { threads: 0, min_rows_per_task: 8 }
+    }
+
+    /// Fixed worker count (`0` = auto).
+    pub const fn with_threads(threads: usize) -> Self {
+        Self { threads, min_rows_per_task: 8 }
+    }
+
+    /// Policy for kernels over matrices of the given row width (`d_model`
+    /// / `d_in`-sized): the fork floor scales with width so a task always
+    /// carries enough arithmetic to amortize spawn latency, while tiny
+    /// debug shapes stay effectively serial.  Used by the CLI (manifest
+    /// `d_model`), the shape zoo, and the kernel benches.
+    pub fn for_width(threads: usize, width: usize) -> Self {
+        Self { threads, min_rows_per_task: (width / 256).clamp(4, 64) }
+    }
+
+    /// Resolved worker count (auto-detects when `threads == 0`).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+
+    /// How many tasks to fork for an output with `rows` rows.
+    pub fn tasks_for(&self, rows: usize) -> usize {
+        let cap = rows / self.min_rows_per_task.max(1);
+        self.effective_threads().min(cap.max(1)).max(1)
+    }
+}
+
+impl Default for ParallelPolicy {
+    /// Serial by default: callers opt into parallelism explicitly, so the
+    /// pre-engine call sites keep their exact behavior.
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+/// Partition `data` (a `rows × row_len` row-major buffer) into contiguous
+/// row ranges and run `body(range, chunk)` on each — workers on scoped
+/// threads, the final range on the calling thread.  `body` must compute
+/// rows independently; under that contract the result is bit-identical to
+/// `body(0..rows, data)` at any thread count.
+pub fn parallel_over_rows<F>(policy: &ParallelPolicy, data: &mut [f32], row_len: usize, body: F)
+where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+    debug_assert_eq!(rows * row_len, data.len(), "buffer must be rows × row_len");
+    let tasks = policy.tasks_for(rows);
+    if tasks <= 1 || row_len == 0 {
+        body(0..rows, data);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let body = &body;
+        let mut rest: &mut [f32] = data;
+        let mut start = 0usize;
+        for t in 0..tasks - 1 {
+            // Even partition: range t covers rows [rows·t/tasks, rows·(t+1)/tasks).
+            let end = rows * (t + 1) / tasks;
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((end - start) * row_len);
+            rest = tail;
+            let range = start..end;
+            scope.spawn(move || body(range, chunk));
+            start = end;
+        }
+        body(start..rows, rest);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_policy_never_forks() {
+        assert_eq!(ParallelPolicy::serial().tasks_for(1 << 20), 1);
+    }
+
+    #[test]
+    fn tasks_respect_granularity_floor() {
+        let p = ParallelPolicy { threads: 8, min_rows_per_task: 16 };
+        assert_eq!(p.tasks_for(15), 1); // too small to fork
+        assert_eq!(p.tasks_for(64), 4); // 64/16 caps below thread count
+        assert_eq!(p.tasks_for(1024), 8); // thread count caps
+    }
+
+    #[test]
+    fn auto_detects_at_least_one_thread() {
+        assert!(ParallelPolicy::auto().effective_threads() >= 1);
+    }
+
+    #[test]
+    fn for_width_scales_fork_floor() {
+        assert_eq!(ParallelPolicy::for_width(4, 128).min_rows_per_task, 4); // floor
+        assert_eq!(ParallelPolicy::for_width(4, 2048).min_rows_per_task, 8);
+        assert_eq!(ParallelPolicy::for_width(4, 1 << 20).min_rows_per_task, 64); // cap
+        assert_eq!(ParallelPolicy::for_width(4, 512).threads, 4);
+    }
+
+    #[test]
+    fn partition_covers_every_row_exactly_once() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            for rows in [1usize, 2, 7, 29, 64] {
+                let row_len = 3;
+                let mut data = vec![0.0f32; rows * row_len];
+                let p = ParallelPolicy { threads, min_rows_per_task: 1 };
+                parallel_over_rows(&p, &mut data, row_len, |range, chunk| {
+                    assert_eq!(chunk.len(), range.len() * row_len);
+                    for (local, r) in range.clone().enumerate() {
+                        for c in 0..row_len {
+                            chunk[local * row_len + c] += (r * row_len + c) as f32 + 1.0;
+                        }
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, i as f32 + 1.0, "threads={threads} rows={rows} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_is_a_noop() {
+        let p = ParallelPolicy::with_threads(4);
+        let mut empty: Vec<f32> = vec![];
+        parallel_over_rows(&p, &mut empty, 8, |range, chunk| {
+            assert!(range.is_empty() && chunk.is_empty());
+        });
+    }
+}

@@ -1,16 +1,28 @@
 //! Structured SpMM over the compressed N:M layout: `Y = X · Wᵀ` with `W`
-//! stored as (values, indices) — the computational core of SLoPe's FWD and
-//! BWD-2.
+//! stored as (values, packed offsets) — the computational core of SLoPe's
+//! FWD and BWD-2.
 //!
 //! The N:M structure is what makes this fast: within a group of M dense
-//! columns the kernel touches exactly N values with *known-monotone*
-//! indices, so the inner loop is a short gather-multiply-accumulate with
-//! perfect value locality — the CPU analogue of what sparse tensor cores
-//! do with the 2:4 metadata.  Compared to the dense `gemm_nt`, it performs
-//! `N/M` of the multiply-adds and streams `N/M` of the weight bytes.
+//! columns the kernel touches exactly N values whose intra-group offsets
+//! are decoded inline from the Eq.-7 bit-packed metadata plane
+//! (`ceil(log2 M)` bits per kept value — 8× less metadata traffic than
+//! the old `u16` absolute indices for 2:4).  The inner loop is a short
+//! gather-multiply-accumulate with perfect value locality — the CPU
+//! analogue of the metadata decode sparse tensor cores do in hardware.
+//! Compared to the dense `gemm_nt`, it performs `N/M` of the
+//! multiply-adds and streams `N/M` of the weight bytes.
+//!
+//! All kernels partition **batch rows** across the
+//! [`crate::backend::pool`] engine; each worker runs the identical
+//! per-row loop, so parallel outputs are bit-identical to serial ones at
+//! any thread count.  `spmm_rowmajor` and `spmm_tiled` also agree
+//! bit-for-bit with each other: every output element is one
+//! group-ascending `sparse_dot`, and tiling only reorders whole elements.
 
-use crate::sparsity::CompressedNm;
+use crate::backend::pool::{parallel_over_rows, ParallelPolicy};
+use crate::sparsity::{compressed::unpack_offset, CompressedNm};
 use crate::tensor::Matrix;
+use std::ops::Range;
 
 /// Execution strategy for SpMM (the §2.4 tiling ablation toggle).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,91 +33,150 @@ pub enum SpmmAlgo {
     Tiled { tile: usize },
 }
 
-/// `Y[b, o] = Σ_k X[b, idx[o,k]] · vals[o,k]` — row-major traversal.
-///
-/// §Perf iteration (EXPERIMENTS.md §Perf/L3): gathers don't auto-vectorize,
-/// so the kernel processes FOUR weight rows per pass — the four accumulator
-/// chains give the out-of-order core independent gather streams (ILP) and
-/// reuse the cached x row.  Measured ~1.3–1.5× over the 1-row loop.
+// ---- row-major --------------------------------------------------------
+
+/// `Y[b, o] = Σ_k X[b, col(o,k)] · vals[o,k]` — row-major traversal,
+/// serial (the seed API).
 pub fn spmm_rowmajor(x: &Matrix, w: &CompressedNm) -> Matrix {
-    assert_eq!(x.cols, w.cols, "spmm: x cols must equal dense weight cols");
-    let kc = w.kcols();
+    spmm_rowmajor_with(x, w, &ParallelPolicy::serial())
+}
+
+/// Row-major SpMM, parallel over batch rows.
+pub fn spmm_rowmajor_with(x: &Matrix, w: &CompressedNm, policy: &ParallelPolicy) -> Matrix {
     let mut y = Matrix::zeros(x.rows, w.rows);
+    spmm_rowmajor_into(x, w, &mut y, policy);
+    y
+}
+
+/// Row-major SpMM into a caller-owned output (overwritten; every element
+/// is stored, so no pre-zeroing is needed).
+///
+/// §Perf iteration (EXPERIMENTS.md §Perf/L3): gathers don't
+/// auto-vectorize, so the kernel processes FOUR weight rows per pass —
+/// the four accumulator chains give the out-of-order core independent
+/// gather streams (ILP) and reuse the cached x row.
+pub fn spmm_rowmajor_into(x: &Matrix, w: &CompressedNm, y: &mut Matrix, policy: &ParallelPolicy) {
+    assert_eq!(x.cols, w.cols, "spmm: x cols must equal dense weight cols");
+    assert_eq!((y.rows, y.cols), (x.rows, w.rows), "spmm output shape");
+    parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
+        spmm_rowmajor_rows(x, w, range, chunk);
+    });
+}
+
+fn spmm_rowmajor_rows(x: &Matrix, w: &CompressedNm, range: Range<usize>, out: &mut [f32]) {
+    let kc = w.kcols();
+    let rmb = w.row_meta_bytes();
+    let (n, m) = (w.scheme.n, w.scheme.m);
+    let bits = w.scheme.offset_bits();
+    let groups = if n == 0 { 0 } else { kc / n };
     let quads = w.rows / 4 * 4;
-    for b in 0..x.rows {
+    for (local, b) in range.enumerate() {
         let xrow = x.row(b);
-        let yrow = y.row_mut(b);
+        let yrow = &mut out[local * w.rows..(local + 1) * w.rows];
         let mut o = 0;
         while o < quads {
-            let base = o * kc;
-            let v = &w.values[base..base + 4 * kc];
-            let ix = &w.indices[base..base + 4 * kc];
+            let v = &w.values[o * kc..(o + 4) * kc];
+            let (v0, v1, v2, v3) = (&v[..kc], &v[kc..2 * kc], &v[2 * kc..3 * kc], &v[3 * kc..]);
+            let mt = &w.meta[o * rmb..(o + 4) * rmb];
+            let (m0, m1, m2, m3) =
+                (&mt[..rmb], &mt[rmb..2 * rmb], &mt[2 * rmb..3 * rmb], &mt[3 * rmb..]);
             let mut acc = [0.0f32; 4];
-            for k in 0..kc {
-                acc[0] += xrow[ix[k] as usize] * v[k];
-                acc[1] += xrow[ix[kc + k] as usize] * v[kc + k];
-                acc[2] += xrow[ix[2 * kc + k] as usize] * v[2 * kc + k];
-                acc[3] += xrow[ix[3 * kc + k] as usize] * v[3 * kc + k];
+            let mut k = 0;
+            let mut base = 0;
+            for _ in 0..groups {
+                for j in 0..n {
+                    acc[0] += xrow[base + unpack_offset(m0, k + j, bits)] * v0[k + j];
+                    acc[1] += xrow[base + unpack_offset(m1, k + j, bits)] * v1[k + j];
+                    acc[2] += xrow[base + unpack_offset(m2, k + j, bits)] * v2[k + j];
+                    acc[3] += xrow[base + unpack_offset(m3, k + j, bits)] * v3[k + j];
+                }
+                k += n;
+                base += m;
             }
             yrow[o..o + 4].copy_from_slice(&acc);
             o += 4;
         }
         for o in quads..w.rows {
             let vals = &w.values[o * kc..(o + 1) * kc];
-            let idxs = &w.indices[o * kc..(o + 1) * kc];
-            yrow[o] = sparse_dot(xrow, vals, idxs);
+            let meta = &w.meta[o * rmb..(o + 1) * rmb];
+            yrow[o] = sparse_dot(xrow, vals, meta, n, m, bits);
         }
     }
+}
+
+// ---- tiled ------------------------------------------------------------
+
+/// Square-tiled traversal (paper §2.4 / Appendix E), serial.
+pub fn spmm_tiled(x: &Matrix, w: &CompressedNm, tile: usize) -> Matrix {
+    spmm_tiled_with(x, w, tile, &ParallelPolicy::serial())
+}
+
+/// Tiled SpMM, parallel over batch rows.
+pub fn spmm_tiled_with(x: &Matrix, w: &CompressedNm, tile: usize,
+                       policy: &ParallelPolicy) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, w.rows);
+    spmm_tiled_into(x, w, tile, &mut y, policy);
     y
 }
 
-/// Square-tiled traversal (paper §2.4 / Appendix E): process `tile × tile`
-/// output blocks so the active slice of `X` stays cache-resident while a
-/// block of weight rows streams through.  This is the CPU analogue of
-/// splitting the upsample weight into square sub-matrices for cuSPARSELt.
-pub fn spmm_tiled(x: &Matrix, w: &CompressedNm, tile: usize) -> Matrix {
+/// Tiled SpMM into a caller-owned output: process `tile × tile` output
+/// blocks so the active slice of `X` stays cache-resident while a block
+/// of weight rows streams through — the CPU analogue of splitting the
+/// upsample weight into square sub-matrices for cuSPARSELt.  Each worker
+/// tiles its own batch-row range; since every output element is an
+/// independent `sparse_dot`, the traversal order never changes values.
+pub fn spmm_tiled_into(x: &Matrix, w: &CompressedNm, tile: usize, y: &mut Matrix,
+                       policy: &ParallelPolicy) {
     assert_eq!(x.cols, w.cols);
+    assert_eq!((y.rows, y.cols), (x.rows, w.rows), "spmm output shape");
     assert!(tile > 0);
+    parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
+        spmm_tiled_rows(x, w, tile, range, chunk);
+    });
+}
+
+fn spmm_tiled_rows(x: &Matrix, w: &CompressedNm, tile: usize, range: Range<usize>,
+                   out: &mut [f32]) {
     let kc = w.kcols();
-    let mut y = Matrix::zeros(x.rows, w.rows);
-    for bt in (0..x.rows).step_by(tile) {
-        let bend = (bt + tile).min(x.rows);
+    let rmb = w.row_meta_bytes();
+    let (n, m) = (w.scheme.n, w.scheme.m);
+    let bits = w.scheme.offset_bits();
+    let rows = range.len();
+    for bt in (0..rows).step_by(tile) {
+        let bend = (bt + tile).min(rows);
         for ot in (0..w.rows).step_by(tile) {
             let oend = (ot + tile).min(w.rows);
-            for b in bt..bend {
-                let xrow = x.row(b);
-                let yrow = y.row_mut(b);
+            for local in bt..bend {
+                let xrow = x.row(range.start + local);
+                let yrow = &mut out[local * w.rows..(local + 1) * w.rows];
                 for o in ot..oend {
                     let vals = &w.values[o * kc..(o + 1) * kc];
-                    let idxs = &w.indices[o * kc..(o + 1) * kc];
-                    yrow[o] = sparse_dot(xrow, vals, idxs);
+                    let meta = &w.meta[o * rmb..(o + 1) * rmb];
+                    yrow[o] = sparse_dot(xrow, vals, meta, n, m, bits);
                 }
             }
         }
     }
-    y
 }
 
-/// Gather-dot over one compressed weight row.  4-wide unrolled: for 2:4
-/// this is two groups per iteration; the index loads are u16 (half the
-/// metadata traffic of u32 — the Eq. 7 bit-packing spirit).
+/// Gather-dot over one compressed weight row: group-ascending traversal,
+/// decoding the packed intra-group offset inline (`group·M + offset`).
+/// All loads are ordinary bounds-checked slice indexing — safe rust, no
+/// `unsafe` fast path; offsets are `< M` by construction at compress
+/// time, so `base + offset` always lands inside `xrow`.
 #[inline]
-fn sparse_dot(xrow: &[f32], vals: &[f32], idxs: &[u16]) -> f32 {
+fn sparse_dot(xrow: &[f32], vals: &[f32], meta: &[u8], n: usize, m: usize, bits: u32) -> f32 {
     let kc = vals.len();
-    let mut acc = [0.0f32; 4];
-    let chunks = kc / 4;
-    for c in 0..chunks {
-        let o = c * 4;
-        for l in 0..4 {
-            // SAFETY-free fast path: indices are validated < cols at
-            // compress time; use get_unchecked-equivalent via debug assert.
-            debug_assert!((idxs[o + l] as usize) < xrow.len());
-            acc[l] += xrow[idxs[o + l] as usize] * vals[o + l];
+    let groups = if n == 0 { 0 } else { kc / n };
+    let mut s = 0.0f32;
+    let mut k = 0;
+    let mut base = 0;
+    for _ in 0..groups {
+        for j in 0..n {
+            s += xrow[base + unpack_offset(meta, k + j, bits)] * vals[k + j];
         }
-    }
-    let mut s: f32 = acc.iter().sum();
-    for i in chunks * 4..kc {
-        s += xrow[idxs[i] as usize] * vals[i];
+        k += n;
+        base += m;
     }
     s
 }
@@ -140,7 +211,24 @@ mod tests {
         let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
         let a = spmm_rowmajor(&x, &c);
         for tile in [1, 3, 7, 16, 64] {
-            assert!(spmm_tiled(&x, &c, tile).max_abs_diff(&a) < 1e-4, "tile {tile}");
+            // Same sparse_dot per element ⇒ exact agreement.
+            assert_eq!(spmm_tiled(&x, &c, tile), a, "tile {tile}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x = Matrix::randn(23, 64, 1.0, &mut rng); // ragged batch
+        let w = Matrix::randn(37, 64, 1.0, &mut rng); // ragged outs
+        let mask = random_row_mask(37, 64, NmScheme::TWO_FOUR, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let serial = spmm_rowmajor(&x, &c);
+        let serial_t = spmm_tiled(&x, &c, 8);
+        for threads in [2usize, 4, 7] {
+            let p = ParallelPolicy { threads, min_rows_per_task: 1 };
+            assert_eq!(spmm_rowmajor_with(&x, &c, &p), serial, "t={threads}");
+            assert_eq!(spmm_tiled_with(&x, &c, 8, &p), serial_t, "tiled t={threads}");
         }
     }
 }

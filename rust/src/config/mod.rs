@@ -4,6 +4,7 @@
 
 pub mod zoo;
 
+use crate::backend::ParallelPolicy;
 use std::path::PathBuf;
 
 /// Training method selector (which AOT executable family drives the run).
@@ -67,6 +68,9 @@ pub struct RunConfig {
     pub artifacts: PathBuf,
     /// Where to write metrics (JSON lines).
     pub out_dir: PathBuf,
+    /// Kernel-engine parallelism for every CPU backend call this run
+    /// makes (threads = 0 ⇒ auto-detect hardware threads).
+    pub parallel: ParallelPolicy,
 }
 
 impl Default for RunConfig {
@@ -81,6 +85,7 @@ impl Default for RunConfig {
             seed: 0,
             artifacts: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("runs"),
+            parallel: ParallelPolicy::auto(),
         }
     }
 }

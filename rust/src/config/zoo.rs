@@ -28,6 +28,14 @@ impl ModelShape {
         self.d_model / self.n_head
     }
 
+    /// Suggested kernel-engine policy for this shape — the zoo-facing
+    /// alias for [`crate::backend::ParallelPolicy::for_width`] at this
+    /// model's `d_model` (the CLI derives the same policy from a loaded
+    /// manifest's width; the kernel benches from the benched width).
+    pub fn recommended_policy(&self, threads: usize) -> crate::backend::ParallelPolicy {
+        crate::backend::ParallelPolicy::for_width(threads, self.d_model)
+    }
+
     /// Dense parameter count of the prunable linear weights per block.
     pub fn block_linear_params(&self) -> usize {
         let d = self.d_model;
@@ -179,5 +187,15 @@ mod tests {
     fn gqa_models_have_fewer_kv_heads() {
         assert!(LLAMA3_8B.n_kv_head < LLAMA3_8B.n_head);
         assert_eq!(OPT_66B.n_kv_head, OPT_66B.n_head);
+    }
+
+    #[test]
+    fn recommended_policy_scales_fork_floor_with_width() {
+        let small = GPT2_SMALL.recommended_policy(8);
+        let big = OPT_66B.recommended_policy(8);
+        assert_eq!(small.threads, 8);
+        assert!(small.min_rows_per_task <= big.min_rows_per_task);
+        assert!(big.min_rows_per_task <= 64);
+        assert!(small.min_rows_per_task >= 4);
     }
 }

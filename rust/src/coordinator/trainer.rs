@@ -30,6 +30,8 @@ pub struct Trainer {
     pub metrics: Metrics,
     rng: Rng,
     lora_active: bool,
+    /// Reusable token staging for the step loop (allocation-free steps).
+    tokens_buf: Vec<i32>,
     /// Packed mask snapshots for the SR-STE churn metric.
     churn_snapshots: Vec<(usize, Vec<u64>)>,
     /// Adapter snapshots (down, up) for the Fig-3b convergence metric.
@@ -61,6 +63,7 @@ impl Trainer {
             corpus,
             cfg,
             lora_active: false,
+            tokens_buf: vec![],
             churn_snapshots: vec![],
             adapter_snapshots: vec![],
         })
@@ -149,6 +152,15 @@ impl Trainer {
                         Method::Slope | Method::Dense | Method::SrsteLora)
             && self.has_exe("train_step_lora");
         self.warmup(lazy_enabled)?;
+        // NOTE: the policy configures the CPU kernel backend
+        // (crate::backend); this trainer's step path runs through the AOT
+        // runtime, which does not consume it yet (see ROADMAP "Policy into
+        // the AOT path") — say so rather than implying threaded steps.
+        eprintln!(
+            "[trainer] parallel policy: {} thread(s) (applies to CPU backend kernels; \
+             AOT step path is single-stream)",
+            self.cfg.parallel.effective_threads()
+        );
         self.eval_point(0)?;
         let flip_at = self.cfg.sparse_steps();
 
@@ -159,8 +171,11 @@ impl Trainer {
                 self.activate_lora()?;
             }
             let wall0 = Instant::now();
-            let batch = self.corpus.train_batch(b, s1 - 1, &mut self.rng);
-            self.store.put_i32("tokens", &[b, s1], &batch.tokens)?;
+            // Allocation-free batch staging: the buffer is grown once and
+            // refilled in place every step.
+            self.corpus
+                .train_batch_into(b, s1 - 1, &mut self.rng, &mut self.tokens_buf);
+            self.store.put_i32("tokens", &[b, s1], &self.tokens_buf)?;
             let exe = self.step_exe();
             let exec0 = Instant::now();
             self.run_exe(exe)?;

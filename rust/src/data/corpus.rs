@@ -130,6 +130,19 @@ impl Corpus {
         self.batch_from(&self.train, b, s, rng)
     }
 
+    /// Random training batch written into a reusable buffer — the
+    /// allocation-free form the step loop uses (`tokens` is cleared and
+    /// refilled with the same draws `train_batch` would make).
+    pub fn train_batch_into(&self, b: usize, s: usize, rng: &mut Rng, tokens: &mut Vec<i32>) {
+        let need = s + 1;
+        tokens.clear();
+        tokens.reserve(b * need);
+        for _ in 0..b {
+            let start = rng.below(self.train.len() - need);
+            tokens.extend(self.train[start..start + need].iter().map(|t| *t as i32));
+        }
+    }
+
     /// Deterministic validation batches covering the val split.
     pub fn val_batch(&self, b: usize, s: usize, index: usize) -> Batch {
         let need = s + 1;

@@ -31,10 +31,26 @@ pub mod sparsity;
 pub mod tensor;
 pub mod util;
 
-pub use anyhow::Result;
+/// Boxed dynamic error — the std-only stand-in for `anyhow::Error`
+/// (DESIGN.md §2: this build environment is fully offline, so no external
+/// error crate; `?` still converts any `std::error::Error` via `From`).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result alias (the `anyhow::Result` role).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Error-construction macro (kept under the familiar name).
 #[macro_export]
 macro_rules! eyre {
-    ($($t:tt)*) => { anyhow::anyhow!($($t)*) };
+    ($($t:tt)*) => { $crate::Error::from(format!($($t)*)) };
+}
+
+/// `anyhow::ensure!` stand-in: early-return an error unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::eyre!($($t)*));
+        }
+    };
 }

@@ -23,6 +23,8 @@ slope — SLoPe (ICLR'25) rust coordinator
 USAGE:
   slope train [--model M] [--method METH] [--steps N] [--lazy-fraction F]
               [--eval-every N] [--seed S] [--artifacts DIR] [--out-dir DIR]
+              [--threads T]                    # kernel engine; 0 = auto
+
   slope exp <ID> [--steps N] [--seed S] [--artifacts DIR] [--out-dir DIR]
   slope info [--model M] [--artifacts DIR]
   slope list [--artifacts DIR]
@@ -115,8 +117,16 @@ fn main() -> slope::Result<()> {
                 seed: flags.usize("seed", 0)? as u64,
                 artifacts,
                 out_dir: out_dir.clone(),
+                parallel: slope::backend::ParallelPolicy::with_threads(
+                    flags.usize("threads", 0)?,
+                ),
             };
             let mut t = Trainer::new(cfg)?;
+            // Refine the fork floor now that the manifest's width is known.
+            t.cfg.parallel = slope::backend::ParallelPolicy::for_width(
+                t.cfg.parallel.threads,
+                t.manifest.config.d_model,
+            );
             t.init()?;
             let outcome = t.train()?;
             let path = t.metrics.save(&out_dir)?;

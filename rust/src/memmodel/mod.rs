@@ -24,6 +24,21 @@ pub fn index_bits_per_elem(s: NmScheme) -> f64 {
     s.index_bits_per_group() as f64 / s.m as f64
 }
 
+/// Bits per dense element of the *packed in-RAM* metadata the CPU backend
+/// actually stores (`ceil(log2 M)` bits per kept value — the hardware
+/// rounding of the Eq.-7 entropy bound; see `sparsity::CompressedNm`).
+pub fn packed_index_bits_per_elem(s: NmScheme) -> f64 {
+    s.offset_bits() as f64 * s.n as f64 / s.m as f64
+}
+
+/// Packed metadata bytes a `rows × cols` `CompressedNm` stores (rows are
+/// byte-aligned) — the true backend charge, vs. the 2 bytes per kept
+/// value of a `u16` absolute-index plane.
+pub fn packed_metadata_bytes(rows: usize, cols: usize, s: NmScheme) -> usize {
+    let kept_per_row = cols / s.m * s.n;
+    rows * ((kept_per_row * s.offset_bits() as usize + 7) / 8)
+}
+
 /// Training-state bits per dense-equivalent element of a *pruned* linear.
 pub fn slope_train_bits_per_elem(s: NmScheme) -> f64 {
     let dens = s.density();
@@ -187,5 +202,33 @@ mod tests {
         let r24 = training_memory(&m, NmScheme::new(2, 4)).ratio();
         let r28 = training_memory(&m, NmScheme::new(2, 8)).ratio();
         assert!(r28 < r24);
+    }
+
+    #[test]
+    fn packed_metadata_charge_matches_backend_and_shrinks_4x() {
+        use crate::sparsity::{random_row_mask, CompressedNm};
+        use crate::tensor::Matrix;
+        use crate::util::Rng;
+        // The packed rate for 2:4 is 2 bits per kept value = 1 bit per
+        // dense element.
+        assert!((packed_index_bits_per_elem(S24) - 1.0).abs() < 1e-12);
+        // Charge an actual compressed weight at the packed rate and check
+        // it against what the backend really stores.
+        let (rows, cols) = (96, 512);
+        let mut rng = Rng::seed_from_u64(0);
+        let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let mask = random_row_mask(rows, cols, S24, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, S24);
+        assert_eq!(c.meta_bytes(), packed_metadata_bytes(rows, cols, S24));
+        // ≥ 4× smaller than the pre-engine u16 absolute-index plane
+        // (2 bytes per kept value); for 2:4 the actual factor is 8×.
+        let u16_plane_bytes = rows * (cols / 2) * 2;
+        assert!(
+            u16_plane_bytes >= 4 * c.meta_bytes(),
+            "packed plane {} vs u16 plane {}",
+            c.meta_bytes(),
+            u16_plane_bytes
+        );
+        assert_eq!(u16_plane_bytes / c.meta_bytes(), 8);
     }
 }

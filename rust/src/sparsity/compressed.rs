@@ -1,31 +1,74 @@
 //! Compressed N:M storage (the cuSPARSELt "compressed matrix" role).
 //!
-//! Layout matches `python/compile/sparsity.compress_nm` semantics: for a
-//! `d_out × d_in` weight under an N:M row mask, store
-//! * `values`:  `d_out × (d_in·N/M)` kept values, group-major, padded with
-//!   zeros when a group has fewer than N survivors;
-//! * `indices`: same shape, the absolute column index of each value
-//!   (strictly increasing within each group).
+//! Layout matches `python/compile/sparsity.compress_nm` semantics for the
+//! values plane: for a `d_out × d_in` weight under an N:M row mask, store
+//! `values`: `d_out × (d_in·N/M)` kept values, group-major, padded with
+//! zeros when a group has fewer than N survivors.
 //!
-//! `index_bits()` accounts metadata at the Eq.-7 rate (e.g. 3 bits per
-//! kept pair for 2:4), which is what the memory model charges; the in-RAM
-//! representation uses `u16` for simplicity (cols < 65536 in every model
-//! we instantiate on CPU).
+//! The index plane is the Eq.-7 **bit-packed** layout: one intra-group
+//! column offset of `ceil(log2(M))` bits per kept value, packed LSB-first
+//! into `u8` words with every row starting byte-aligned.  For 2:4 that is
+//! 2 bits per kept value — 4 bits per group against the 32 bits the old
+//! `u16` absolute-index plane spent, an 8× metadata-traffic reduction —
+//! and the layout no longer caps `cols` at 65 536.  Offsets are strictly
+//! increasing within each group (the kernels' monotonicity assumption),
+//! and the absolute column is recovered inline in the SpMM gather loop as
+//! `group·M + offset`.  `storage_bits()` still accounts metadata at the
+//! information-theoretic Eq.-7 rate (3 bits per 2:4 group — what the
+//! paper's §3.1 memory model charges); `packed_storage_bits()` accounts
+//! the real in-RAM plane.
 
 use super::{Mask, NmScheme};
 use crate::tensor::Matrix;
 
 /// A matrix compressed under an N:M row scheme.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CompressedNm {
     pub rows: usize,
     /// Original (dense) number of columns.
     pub cols: usize,
     pub scheme: NmScheme,
-    /// `rows × cols·N/M` kept values, row-major.
+    /// `rows × cols·N/M` kept values, row-major, group-major within a row.
     pub values: Vec<f32>,
-    /// Absolute dense column index per kept value.
-    pub indices: Vec<u16>,
+    /// Bit-packed intra-group offsets: `scheme.offset_bits()` bits per
+    /// kept value, LSB-first, rows byte-aligned ([`Self::row_meta_bytes`]).
+    pub meta: Vec<u8>,
+}
+
+/// Decode the `k`-th `bits`-wide offset from a row's packed metadata.
+/// Entries may straddle a byte boundary (e.g. 3-bit offsets for M=8); the
+/// second byte is only touched when the entry actually extends into it,
+/// which by construction is then inside the row's span.
+#[inline]
+pub fn unpack_offset(meta: &[u8], k: usize, bits: u32) -> usize {
+    if bits == 0 {
+        return 0;
+    }
+    let bitpos = k * bits as usize;
+    let byte = bitpos >> 3;
+    let sh = (bitpos & 7) as u32;
+    let mut w = (meta[byte] as u32) >> sh;
+    if sh + bits > 8 {
+        w |= (meta[byte + 1] as u32) << (8 - sh);
+    }
+    (w & ((1u32 << bits) - 1)) as usize
+}
+
+/// Write the `k`-th `bits`-wide offset into zero-initialized packed
+/// metadata (OR-composed, so each slot must be written at most once).
+#[inline]
+fn pack_offset(meta: &mut [u8], k: usize, bits: u32, off: usize) {
+    if bits == 0 {
+        return;
+    }
+    debug_assert!(off < (1usize << bits));
+    let bitpos = k * bits as usize;
+    let byte = bitpos >> 3;
+    let sh = (bitpos & 7) as u32;
+    meta[byte] |= ((off as u32) << sh) as u8;
+    if sh + bits > 8 {
+        meta[byte + 1] |= ((off as u32) >> (8 - sh)) as u8;
+    }
 }
 
 impl CompressedNm {
@@ -35,55 +78,82 @@ impl CompressedNm {
         self.cols / self.scheme.m * self.scheme.n
     }
 
+    /// Packed metadata bytes per row (rows are byte-aligned).
+    #[inline]
+    pub fn row_meta_bytes(&self) -> usize {
+        (self.kcols() * self.scheme.offset_bits() as usize + 7) / 8
+    }
+
+    /// Total packed metadata bytes actually stored (the plane the SpMM
+    /// kernels stream — what the memmodel's packed rate charges).
+    #[inline]
+    pub fn meta_bytes(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Absolute dense column of the `k`-th kept entry of row `r`
+    /// (cold-path accessor; the kernels decode inline instead).
+    #[inline]
+    pub fn index(&self, r: usize, k: usize) -> usize {
+        let rmb = self.row_meta_bytes();
+        let row = &self.meta[r * rmb..(r + 1) * rmb];
+        (k / self.scheme.n) * self.scheme.m + unpack_offset(row, k, self.scheme.offset_bits())
+    }
+
+    /// Iterate the absolute dense columns of row `r`'s kept entries.
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> impl Iterator<Item = usize> + '_ {
+        let bits = self.scheme.offset_bits();
+        let rmb = self.row_meta_bytes();
+        let row = &self.meta[r * rmb..(r + 1) * rmb];
+        let (n, m) = (self.scheme.n, self.scheme.m);
+        (0..self.kcols()).map(move |k| (k / n) * m + unpack_offset(row, k, bits))
+    }
+
     /// Compress `w` under `mask` (the cuSPARSELt *setup/compress* phase;
     /// its cost is what Figure 5 profiles vs. the multiply).
     pub fn compress(w: &Matrix, mask: &Mask, scheme: NmScheme) -> Self {
         assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
         assert_eq!(w.cols % scheme.m, 0);
-        assert!(w.cols < u16::MAX as usize, "u16 index range");
+        assert!(scheme.offset_bits() <= 8, "packed layout supports M ≤ 256");
         let groups = w.cols / scheme.m;
         let kc = groups * scheme.n;
+        let rmb = (kc * scheme.offset_bits() as usize + 7) / 8;
         let mut values = vec![0.0f32; w.rows * kc];
-        let mut indices = vec![0u16; w.rows * kc];
+        let mut meta = vec![0u8; w.rows * rmb];
+        // Scratch for one group: (offset, value) pairs.
+        let mut pairs: Vec<(usize, f32)> = Vec::with_capacity(scheme.n);
         for r in 0..w.rows {
+            let mrow = &mut meta[r * rmb..(r + 1) * rmb];
             for g in 0..groups {
-                let mut slot = 0;
+                pairs.clear();
                 // First pass: kept positions in order.
                 for i in 0..scheme.m {
-                    let c = g * scheme.m + i;
-                    if mask.at(r, c) && slot < scheme.n {
-                        values[r * kc + g * scheme.n + slot] = w.at(r, c);
-                        indices[r * kc + g * scheme.n + slot] = c as u16;
-                        slot += 1;
+                    if mask.at(r, g * scheme.m + i) && pairs.len() < scheme.n {
+                        pairs.push((i, w.at(r, g * scheme.m + i)));
                     }
                 }
                 // Pad under-full groups with zeros pointing at pruned slots
-                // (value 0 ⇒ decompress-insensitive), keeping indices
-                // strictly increasing for the kernel's monotonicity
-                // assumption.
-                let mut pad_c = g * scheme.m;
-                while slot < scheme.n {
-                    while mask.at(r, pad_c) {
-                        pad_c += 1;
+                // (value 0 ⇒ decompress-insensitive), then restore strict
+                // in-group offset ordering for the kernels' monotonicity
+                // assumption (pads may interleave with kept positions).
+                let mut pad_i = 0;
+                while pairs.len() < scheme.n {
+                    while mask.at(r, g * scheme.m + pad_i) {
+                        pad_i += 1;
                     }
-                    values[r * kc + g * scheme.n + slot] = 0.0;
-                    indices[r * kc + g * scheme.n + slot] = pad_c as u16;
-                    pad_c += 1;
-                    slot += 1;
+                    pairs.push((pad_i, 0.0));
+                    pad_i += 1;
                 }
-                // Restore in-group ordering (pads may interleave).
-                let s = r * kc + g * scheme.n;
-                let mut pairs: Vec<(u16, f32)> = (0..scheme.n)
-                    .map(|i| (indices[s + i], values[s + i]))
-                    .collect();
                 pairs.sort_by_key(|p| p.0);
-                for (i, (ix, v)) in pairs.into_iter().enumerate() {
-                    indices[s + i] = ix;
-                    values[s + i] = v;
+                for (slot, (off, v)) in pairs.iter().enumerate() {
+                    let k = g * scheme.n + slot;
+                    values[r * kc + k] = *v;
+                    pack_offset(mrow, k, scheme.offset_bits(), *off);
                 }
             }
         }
-        Self { rows: w.rows, cols: w.cols, scheme, values, indices }
+        Self { rows: w.rows, cols: w.cols, scheme, values, meta }
     }
 
     /// Expand back to dense (test / checkpoint path).
@@ -91,8 +161,7 @@ impl CompressedNm {
         let mut out = Matrix::zeros(self.rows, self.cols);
         let kc = self.kcols();
         for r in 0..self.rows {
-            for k in 0..kc {
-                let c = self.indices[r * kc + k] as usize;
+            for (k, c) in self.row_indices(r).enumerate() {
                 out.data[r * self.cols + c] += self.values[r * kc + k];
             }
         }
@@ -105,10 +174,15 @@ impl CompressedNm {
     pub fn update_from_dense(&mut self, w: &Matrix) {
         assert_eq!((w.rows, w.cols), (self.rows, self.cols));
         let kc = self.kcols();
+        let bits = self.scheme.offset_bits();
+        let rmb = self.row_meta_bytes();
+        let (n, m) = (self.scheme.n, self.scheme.m);
         for r in 0..self.rows {
+            let mrow = &self.meta[r * rmb..(r + 1) * rmb];
+            let wrow = w.row(r);
             for k in 0..kc {
-                let c = self.indices[r * kc + k] as usize;
-                self.values[r * kc + k] = w.at(r, c);
+                let c = (k / n) * m + unpack_offset(mrow, k, bits);
+                self.values[r * kc + k] = wrow[c];
             }
         }
     }
@@ -116,7 +190,8 @@ impl CompressedNm {
     /// `β·self + γ·other` over values planes that share a sparsity pattern
     /// (Algorithm 1 line 15 — the paper's custom sparse-add kernel).
     pub fn sparse_add(&self, other: &CompressedNm, beta: f32, gamma: f32) -> CompressedNm {
-        assert_eq!(self.indices, other.indices, "sparse_add requires identical patterns");
+        assert_eq!((self.rows, self.cols, self.scheme), (other.rows, other.cols, other.scheme));
+        assert_eq!(self.meta, other.meta, "sparse_add requires identical patterns");
         let values = self
             .values
             .iter()
@@ -126,11 +201,19 @@ impl CompressedNm {
         CompressedNm { values, ..self.clone() }
     }
 
-    /// Bits of storage (values at `value_bits` + Eq.-7 index metadata).
+    /// Bits of storage at the information-theoretic Eq.-7 metadata rate
+    /// (values at `value_bits` + `⌈log₂C(M,N)⌉` per group) — what the
+    /// §3.1 memory model charges.
     pub fn storage_bits(&self, value_bits: u64) -> u64 {
         let kept = (self.rows * self.kcols()) as u64;
         let groups = (self.rows * (self.cols / self.scheme.m)) as u64;
         kept * value_bits + groups * self.scheme.index_bits_per_group() as u64
+    }
+
+    /// Bits of storage at the *packed in-RAM* rate actually held by this
+    /// struct: values plus the byte-aligned packed offset plane.
+    pub fn packed_storage_bits(&self, value_bits: u64) -> u64 {
+        (self.rows * self.kcols()) as u64 * value_bits + 8 * self.meta_bytes() as u64
     }
 }
 
@@ -191,6 +274,9 @@ mod tests {
         let mask = Mask { rows: 1, cols: 4, keep: vec![true, true, false, false] };
         let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
         assert_eq!(c.storage_bits(16), 2 * 16 + 3);
+        // Packed plane: 2 offsets × 2 bits = 4 bits → 1 byte-aligned byte.
+        assert_eq!(c.meta_bytes(), 1);
+        assert_eq!(c.packed_storage_bits(16), 2 * 16 + 8);
     }
 
     #[test]
@@ -200,11 +286,38 @@ mod tests {
                           keep: vec![false, true, false, false, true, true, false, false] };
         let w = Matrix::from_vec(1, 8, (1..=8).map(|v| v as f32).collect());
         let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
-        let kc = c.kcols();
         for g in 0..2 {
-            assert!(c.indices[g * 2] < c.indices[g * 2 + 1], "{:?}", c.indices);
+            assert!(c.index(0, g * 2) < c.index(0, g * 2 + 1));
         }
         assert_eq!(c.decompress(), mask.apply(&w));
-        let _ = kc;
+    }
+
+    #[test]
+    fn packed_offsets_decode_to_in_group_columns() {
+        let mut rng = Rng::seed_from_u64(7);
+        for (n, m) in [(1usize, 2usize), (2, 4), (2, 8), (4, 8)] {
+            let s = NmScheme::new(n, m);
+            let w = Matrix::randn(5, 3 * m, 1.0, &mut rng);
+            let mask = random_row_mask(5, 3 * m, s, &mut rng);
+            let c = CompressedNm::compress(&w, &mask, s);
+            for r in 0..c.rows {
+                for (k, col) in c.row_indices(r).enumerate() {
+                    let g = k / n;
+                    assert!(col >= g * m && col < (g + 1) * m, "{s} r{r} k{k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn meta_plane_is_8x_smaller_than_u16_indices_for_2_4() {
+        let mut rng = Rng::seed_from_u64(8);
+        let w = Matrix::randn(64, 256, 1.0, &mut rng);
+        let mask = random_row_mask(64, 256, NmScheme::TWO_FOUR, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let kept = c.rows * c.kcols();
+        assert_eq!(c.meta_bytes() * 8, kept * 2); // 2 bits per kept value
+        let u16_plane_bytes = kept * 2; // the old absolute-index layout
+        assert_eq!(u16_plane_bytes / c.meta_bytes(), 8);
     }
 }

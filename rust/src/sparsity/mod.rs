@@ -44,6 +44,14 @@ impl NmScheme {
     pub fn index_bits_per_group(&self) -> u32 {
         (binom(self.m as u64, self.n as u64) as f64).log2().ceil() as u32
     }
+
+    /// Bits per kept value of the *packed in-RAM* metadata layout:
+    /// `ceil(log2(M))` — one intra-group column offset per kept value,
+    /// the hardware-friendly rounding of the Eq.-7 entropy bound (2 bits
+    /// for 2:4 vs. the 1.5-bit bound; still 8× less than a `u16` index).
+    pub fn offset_bits(&self) -> u32 {
+        usize::BITS - (self.m - 1).leading_zeros()
+    }
 }
 
 impl std::fmt::Display for NmScheme {
@@ -231,6 +239,16 @@ mod tests {
         assert_eq!(NmScheme::new(2, 4).index_bits_per_group(), 3);
         assert_eq!(NmScheme::new(1, 2).index_bits_per_group(), 1);
         assert_eq!(NmScheme::new(2, 8).index_bits_per_group(), 5);
+    }
+
+    #[test]
+    fn offset_bits_are_log2_m() {
+        assert_eq!(NmScheme::new(1, 2).offset_bits(), 1);
+        assert_eq!(NmScheme::new(2, 4).offset_bits(), 2);
+        assert_eq!(NmScheme::new(2, 8).offset_bits(), 3);
+        assert_eq!(NmScheme::new(4, 8).offset_bits(), 3);
+        assert_eq!(NmScheme::new(1, 1).offset_bits(), 0);
+        assert_eq!(NmScheme::new(3, 6).offset_bits(), 3); // non-pow2 M rounds up
     }
 
     #[test]

@@ -15,6 +15,13 @@ pub struct Matrix {
     pub data: Vec<f32>,
 }
 
+impl Default for Matrix {
+    /// Empty 0×0 matrix — the unsized state of reusable kernel workspaces.
+    fn default() -> Self {
+        Matrix::zeros(0, 0)
+    }
+}
+
 impl Matrix {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }

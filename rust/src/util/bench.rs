@@ -49,12 +49,48 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 }
 
 /// Auto-scale iteration count so one benchmark takes ≈ `budget_ms`.
+/// `SLOPE_BENCH_BUDGET_MS` overrides the budget globally (CI smoke runs).
 pub fn bench_auto<F: FnMut()>(name: &str, budget_ms: f64, mut f: F) -> BenchResult {
+    let budget_ms = std::env::var("SLOPE_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(budget_ms);
     let t0 = Instant::now();
     f();
     let one = t0.elapsed().as_secs_f64() * 1e3;
     let iters = ((budget_ms / one.max(1e-6)) as usize).clamp(5, 1000);
     bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Machine-readable perf-trajectory emitter.  When `SLOPE_BENCH_JSON` is
+/// set, each result is appended to that path as one JSON object per line
+/// (`-` = stdout): `{bench, case, threads, median_ns, p10_ns, p90_ns,
+/// iters}`.  Unset ⇒ no-op, so the human tables stay the default.
+pub fn emit_json(bench_name: &str, case: &str, threads: usize, r: &BenchResult) {
+    let Ok(path) = std::env::var("SLOPE_BENCH_JSON") else {
+        return;
+    };
+    let line = crate::util::json::obj(vec![
+        ("bench", crate::util::json::s(bench_name)),
+        ("case", crate::util::json::s(case)),
+        ("threads", crate::util::json::num(threads as f64)),
+        ("median_ns", crate::util::json::num(r.median_ns)),
+        ("p10_ns", crate::util::json::num(r.p10_ns)),
+        ("p90_ns", crate::util::json::num(r.p90_ns)),
+        ("iters", crate::util::json::num(r.iters as f64)),
+    ])
+    .to_string();
+    if path == "-" {
+        println!("{line}");
+    } else {
+        use std::io::Write;
+        match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            Ok(mut fh) => {
+                let _ = writeln!(fh, "{line}");
+            }
+            Err(e) => eprintln!("[bench] cannot append to {path}: {e}"),
+        }
+    }
 }
 
 pub fn print_header(title: &str) {
@@ -78,6 +114,29 @@ pub fn black_box<T>(x: T) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn emit_json_lines_parse_back() {
+        let r = bench("emit", 1, 5, || {
+            black_box(1 + 1);
+        });
+        let path = std::env::temp_dir().join("slope_bench_emit_test.jsonl");
+        std::fs::remove_file(&path).ok();
+        std::env::set_var("SLOPE_BENCH_JSON", &path);
+        emit_json("bench_unit", "case-a", 4, &r);
+        emit_json("bench_unit", "case-b", 1, &r);
+        std::env::remove_var("SLOPE_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = crate::util::Json::parse(line).unwrap();
+            assert_eq!(j.req_str("bench").unwrap(), "bench_unit");
+            assert!(j.req_f64("median_ns").unwrap() >= 0.0);
+            assert!(j.req_usize("threads").unwrap() >= 1);
+        }
+        std::fs::remove_file(&path).ok();
+    }
 
     #[test]
     fn bench_measures_something() {

@@ -5,7 +5,7 @@
 //! generated cases; failures report a replay seed.
 
 use slope::backend::{gemm, gemm_nt, gemm_tn, lora_fused, lora_naive, prune_and_compress,
-                     spmm_rowmajor, spmm_tiled, SparseBackend, SpmmAlgo};
+                     spmm_rowmajor, spmm_tiled, ParallelPolicy, SparseBackend, SpmmAlgo};
 use slope::coordinator::checkpoint;
 use slope::data::{Corpus, CorpusSpec};
 use slope::runtime::Store;
@@ -67,12 +67,11 @@ fn prop_compress_roundtrip_and_inplace_update() {
         let w2 = Matrix::randn(rows, cols, 1.0, &mut g.rng);
         c.update_from_dense(&w2);
         assert_eq!(c.decompress(), mask.apply(&w2));
-        // Indices strictly increasing per group.
-        let kc = c.kcols();
+        // Decoded indices strictly increasing per group (packed layout).
         for r in 0..rows {
             for grp in 0..cols / m {
                 for i in 1..n {
-                    assert!(c.indices[r * kc + grp * n + i - 1] < c.indices[r * kc + grp * n + i]);
+                    assert!(c.index(r, grp * n + i - 1) < c.index(r, grp * n + i));
                 }
             }
         }
@@ -109,7 +108,8 @@ fn prop_backend_eq456_contract() {
         let x = Matrix::randn(b, d_in, 1.0, &mut g.rng);
         let w = Matrix::randn(d_out, d_in, 1.0, &mut g.rng);
         let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut g.rng);
-        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor);
+        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor,
+                                      ParallelPolicy::serial());
         let gy = Matrix::randn(b, d_out, 1.0, &mut g.rng);
 
         let y = be.forward(&x);
@@ -137,8 +137,9 @@ fn prop_lora_fusion_equivalence() {
         let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
         let lo_up = Matrix::randn(d_out, r, 0.5, &mut g.rng);
         let lo_down = Matrix::randn(r, d_in, 0.5, &mut g.rng);
-        let a = lora_naive(&x, &c, &lo_up, &lo_down, SpmmAlgo::RowMajor);
-        let f = lora_fused(&x, &c, &lo_up, &lo_down, SpmmAlgo::RowMajor);
+        let p = ParallelPolicy::serial();
+        let a = lora_naive(&x, &c, &lo_up, &lo_down, SpmmAlgo::RowMajor, &p);
+        let f = lora_fused(&x, &c, &lo_up, &lo_down, SpmmAlgo::RowMajor, &p);
         assert!(a.max_abs_diff(&f) < 1e-3);
     });
 }

@@ -1,0 +1,283 @@
+//! Offline stand-in for the `xla` crate (xla-rs 0.1.6) — the build
+//! environment has no network and no PJRT plugin, so the real bindings
+//! cannot be fetched (DESIGN.md §2 substitutions).
+//!
+//! Two tiers of fidelity:
+//! * **Host literals are real.**  [`Literal`] is a working host tensor
+//!   (f32 / i32 / tuple, shape-carrying, `vec1`/`scalar`/`reshape`/
+//!   `to_vec`/`to_tuple`), because the coordinator's `Store`, checkpoint
+//!   format, and every artifact-free test build on it.
+//! * **PJRT surfaces are gated.**  `PjRtClient::cpu()` succeeds (so
+//!   sessions open and manifests load), but parsing/compiling/executing
+//!   HLO returns a descriptive error.  Code paths that need real XLA are
+//!   exactly the ones that need `make artifacts`, and they skip or fail
+//!   loudly with this message instead of segfaulting.
+//!
+//! Swapping the real xla-rs back in is a one-line change in
+//! `rust/Cargo.toml`; every signature here matches the 0.1.6 call sites
+//! used by the coordinator.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (the `xla::Error` role): message-only, `Display`able.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "offline xla stub: PJRT compile/execute unavailable \
+                        (link the real xla-rs to run AOT artifacts)";
+
+/// Element dtypes the coordinator uses.  `non_exhaustive` mirrors the
+/// real bindings' wider dtype set, so downstream `match` arms keep their
+/// catch-all without tripping `unreachable_patterns`.
+#[non_exhaustive]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host tensor literal: typed storage plus dims (empty dims = scalar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Array shape accessor (`lit.array_shape()?.dims()`).
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Element types storable in a [`Literal`].
+pub trait ArrayElement: Copy {
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn make_literal(v: Vec<Self>) -> Literal
+    where
+        Self: Sized;
+    #[doc(hidden)]
+    fn extract(lit: &Literal) -> Result<Vec<Self>>
+    where
+        Self: Sized;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn make_literal(v: Vec<Self>) -> Literal {
+        let dims = vec![v.len() as i64];
+        Literal { data: Data::F32(v), dims }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            other => Err(Error(format!("literal is not F32: {other:?}"))),
+        }
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn make_literal(v: Vec<Self>) -> Literal {
+        let dims = vec![v.len() as i64];
+        Literal { data: Data::I32(v), dims }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            other => Err(Error(format!("literal is not S32: {other:?}"))),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: ArrayElement>(data: &[T]) -> Literal {
+        T::make_literal(data.to_vec())
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: ArrayElement>(v: T) -> Literal {
+        let mut lit = T::make_literal(vec![v]);
+        lit.dims = vec![];
+        lit
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same storage under new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count {} != {n}",
+                self.dims,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.data {
+            Data::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match &self.data {
+            Data::F32(_) => Ok(ElementType::F32),
+            Data::I32(_) => Ok(ElementType::S32),
+            Data::Tuple(_) => Err(Error("tuple literal has no element type".into())),
+        }
+    }
+
+    /// Copy the elements to a host `Vec` (dtype-checked).
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Build a tuple literal (what executables return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let dims = vec![elems.len() as i64];
+        Literal { data: Data::Tuple(elems), dims }
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            other => Err(Error(format!("not a tuple literal: {other:?}"))),
+        }
+    }
+}
+
+// ---- PJRT surfaces (gated) --------------------------------------------
+
+/// Parsed HLO module handle — parsing needs real XLA, so construction
+/// fails in the stub.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(Error(format!("{STUB_MSG}; cannot parse {}", path.as_ref().display())))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self
+    }
+}
+
+/// CPU PJRT client handle.  Opening succeeds so artifact-free flows
+/// (manifest inspection, store ops) work; `compile` is the gate.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    /// Matches the xla-rs call shape `exe.execute::<&Literal>(&args)`.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype-checked reads");
+    }
+
+    #[test]
+    fn scalar_and_reshape_guards() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.array_shape().unwrap().dims().len(), 0);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(Literal::vec1(&[1.0f32; 6]).reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_destructuring() {
+        let t = Literal::tuple(vec![Literal::scalar(1i32), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(1i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_surfaces_are_gated_not_absent() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-offline-stub");
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("offline xla stub"));
+    }
+}
