@@ -1,121 +1,74 @@
-//! Batched-inference serving example: the deployment story for a
-//! SLoPe-pretrained model.
+//! Batched-inference serving example — now a thin client of the
+//! first-class [`slope::serve`] subsystem (`ServeEngine` + coalescing
+//! `Batcher` + `ServeStats`), which owns the warm sparse+LoRA layers and
+//! the dynamic-batching policy that used to live ad hoc in this file.
 //!
-//! Restores a checkpoint (or fresh-initializes), then serves a stream of
-//! generation requests through the AOT `forward`/`forward_lora`
-//! executable with dynamic batching: requests arrive on a queue, the
-//! server coalesces up to `batch_size` of them per forward, and reports
-//! per-request latency (p50/p95) and token throughput — the serving-side
-//! counterpart of the paper's inference-speedup claims (Table 2).
-//!
-//! The batcher's staging buffers are allocated once and reused for every
-//! coalesced batch (allocation-free steady state), and the kernel-engine
-//! thread count is configurable:
+//! Builds a nano-scale sparse MLP stack (2:4 weights + rank-8 adapters —
+//! the Eq.-11 serving operand), submits a stream of requests,
+//! and reports p50/p95 latency and throughput — the serving-side
+//! counterpart of the paper's inference-speedup claims (Table 2).  With
+//! the column-striped kernel partition even `batch = 1` traffic scales
+//! with `threads` (see `benches/bench_serve.rs` for the sweep).
 //!
 //! ```bash
-//! cargo run --release --example inference_serve -- [n_requests] [model] [threads]
+//! cargo run --release --example inference_serve -- [n_requests] [max_batch] [threads]
 //! ```
 
-use slope::backend::ParallelPolicy;
-use slope::config::{Method, RunConfig};
-use slope::coordinator::Trainer;
-use slope::data::{Corpus, CorpusSpec};
-use std::collections::VecDeque;
-use std::time::Instant;
-
-struct Request {
-    id: usize,
-    tokens: Vec<i32>, // (seq,) prompt
-    submitted: Instant,
-}
+use slope::backend::{ParallelPolicy, SparseBackend, SpmmAlgo};
+use slope::serve::{BatchPolicy, LoraAdapter, ServeEngine, ServeLayer};
+use slope::sparsity::{random_row_mask, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::Rng;
+use std::time::{Duration, Instant};
 
 fn main() -> slope::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(64);
-    let model = args.get(1).cloned().unwrap_or_else(|| "gpt-nano".to_string());
+    let max_batch: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
     let threads: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0);
 
-    // Warm up a model: a short training run gives us non-random weights.
-    let cfg = RunConfig {
-        model: model.clone(),
-        method: Method::Slope,
-        steps: 8,
-        lazy_fraction: 0.25,
-        eval_every: 1000,
-        parallel: ParallelPolicy::with_threads(threads),
-        ..Default::default()
-    };
-    let mut t = Trainer::new(cfg)?;
-    t.init()?;
-    t.train()?;
-    let c = t.manifest.config.clone();
-    let (b, s) = (c.batch_size, c.seq_len);
-    // The policy rides on RunConfig for the CPU kernel backend; the AOT
-    // forward path this server drives is single-stream until the runtime
-    // consumes it (ROADMAP "Policy into the AOT path").
+    // A nano-scale MLP block: upsample d→4d, downsample 4d→d, 2:4 sparse
+    // + rank-8 LoRA — the Eq.-11 serving operand at example-friendly size.
+    let (d, f, rank) = (256usize, 1024usize, 8usize);
+    let policy = ParallelPolicy::for_width(threads, d);
+    let mut rng = Rng::seed_from_u64(0xD15C);
+    let mut layers = Vec::new();
+    for (d_out, d_in) in [(f, d), (d, f)] {
+        let w = Matrix::randn(d_out, d_in, 1.0 / (d_in as f32).sqrt(), &mut rng);
+        let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
+        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor, policy);
+        let lora = LoraAdapter {
+            up: Matrix::randn(d_out, rank, 0.1, &mut rng),
+            down: Matrix::randn(rank, d_in, 0.1, &mut rng),
+        };
+        layers.push(ServeLayer::new(be, Some(lora))?);
+    }
+    let mut eng = ServeEngine::new(
+        layers,
+        BatchPolicy::new(max_batch, Duration::from_millis(2)),
+    )?;
     println!(
-        "== inference_serve: {model} (batch {b}, seq {s}; policy {} thr, CPU kernels only) ==",
-        t.cfg.parallel.effective_threads()
+        "== inference_serve: sparse MLP block ({d}↔{f}, 2:4 + rank-{rank} LoRA; \
+         max_batch {max_batch}, {} thr) ==",
+        policy.effective_threads()
     );
 
-    // Request source: prompts sliced from a held-out corpus.
-    let corpus = Corpus::generate(CorpusSpec::for_vocab(c.vocab_size, 0xD15C));
-    let mut queue: VecDeque<Request> = (0..n_requests)
-        .map(|id| Request {
-            id,
-            tokens: corpus.val_batch(1, s - 1, id).tokens[..s].to_vec(),
-            submitted: Instant::now(),
-        })
-        .collect();
-
-    // Dynamic batcher: coalesce up to `b` requests per forward; pad the
-    // tail batch by repeating the last request.  Staging buffers live
-    // outside the loop — the steady-state batcher does not allocate.
-    let mut latencies_ms: Vec<f64> = Vec::with_capacity(n_requests);
+    // Open-loop request stream: submit, poll (the engine coalesces under
+    // its max_batch / max_wait policy), then drain the tail.
+    let start = Instant::now();
     let mut served = 0usize;
-    let mut batch_tokens: Vec<i32> = Vec::with_capacity(b * s);
-    let mut ids: Vec<usize> = Vec::with_capacity(b);
-    let mut submitted: Vec<Instant> = Vec::with_capacity(b);
-    let t0 = Instant::now();
-    while !queue.is_empty() {
-        let take = queue.len().min(b);
-        batch_tokens.clear();
-        ids.clear();
-        submitted.clear();
-        for _ in 0..take {
-            let r = queue.pop_front().unwrap();
-            batch_tokens.extend_from_slice(&r.tokens);
-            ids.push(r.id);
-            submitted.push(r.submitted);
-        }
-        for _ in take..b {
-            batch_tokens.extend_from_within(batch_tokens.len() - s..);
-        }
-        t.store.put_i32("tokens", &[b, s], &batch_tokens)?;
-        t.session.borrow_mut().run("forward_lora", &mut t.store)?;
-        let logits = t.store.read_f32("logits")?;
-        // "Generation": greedy next token at the final position per request.
-        let v = c.vocab_size;
-        for (row, (_id, sub)) in ids.iter().zip(&submitted).enumerate().map(|(i, x)| (i, x)) {
-            let off = row * s * v + (s - 1) * v;
-            let next = logits[off..off + v]
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap();
-            let _ = next;
-            latencies_ms.push(sub.elapsed().as_secs_f64() * 1e3);
-            served += 1;
-        }
+    for _ in 0..n_requests {
+        let input: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.5)).collect();
+        eng.submit(input, start.elapsed())?;
+        served += eng.poll(start.elapsed()).len();
     }
-    let wall = t0.elapsed().as_secs_f64();
-    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let q = |p: f64| latencies_ms[((latencies_ms.len() - 1) as f64 * p) as usize];
-    println!("served {served} requests in {wall:.2}s");
-    println!("throughput : {:.1} req/s  ({:.0} tok/s prefill)",
-             served as f64 / wall, (served * s) as f64 / wall);
-    println!("latency    : p50 {:.0} ms   p95 {:.0} ms", q(0.50), q(0.95));
+    served += eng.flush(start.elapsed()).len();
+
+    let s = eng.stats().summary();
+    println!("served {served} requests in {} coalesced batches", s.batches);
+    println!("batch fill : {:.2} / {max_batch}", s.mean_batch_fill);
+    println!("throughput : {:.0} req/s", s.req_per_s);
+    println!("latency    : p50 {:.3} ms   p95 {:.3} ms", s.p50_ms, s.p95_ms);
     println!("inference_serve OK");
     Ok(())
 }

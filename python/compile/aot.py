@@ -29,6 +29,7 @@ from jax._src.lib import xla_client as xc
 from .configs import (MODEL_CONFIGS, ModelConfig, TrainConfig,
                       get_model_config, get_train_config)
 from . import model as M
+from . import sparsity as sp
 from . import train as T
 
 
@@ -238,6 +239,16 @@ def export_config(cfg: ModelConfig, tc: TrainConfig, out_root: str,
             "second_half_sparsity": [cfg.second_half_sparsity.n, cfg.second_half_sparsity.m],
             "prune_attn": cfg.prune_attn, "prune_mlp": cfg.prune_mlp,
             "n_params_dense": cfg.n_params(),
+        },
+        # The Eq.-7 bit-packed index layout shipped alongside compressed
+        # weights (mirrors rust sparsity::compressed bit-for-bit; see
+        # sparsity.pack_nm_offsets): one intra-group offset of
+        # ceil(log2 M) bits per kept value, LSB-first, rows byte-aligned.
+        "sparsity_format": {
+            "layout": "eq7-packed-offsets-v1",
+            "row_byte_aligned": True,
+            "offset_bits_first_half": sp.offset_bits(cfg.first_half_sparsity.m),
+            "offset_bits_second_half": sp.offset_bits(cfg.second_half_sparsity.m),
         },
         "train": {
             "lr": tc.lr, "beta1": tc.beta1, "beta2": tc.beta2,

@@ -20,6 +20,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _topn_group_mask(scores: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
@@ -130,6 +131,77 @@ def decompress_nm(values: jnp.ndarray, indices: jnp.ndarray, d_in: int) -> jnp.n
     out = jnp.zeros((d_out, d_in), values.dtype)
     rows = jnp.arange(d_out)[:, None]
     return out.at[rows, indices].add(values)
+
+
+# ---- Eq.-7 bit-packed metadata plane (mirrors rust sparsity::compressed) ----
+#
+# The rust runtime stores the index plane bit-packed: one intra-group column
+# offset of ``ceil(log2 M)`` bits per kept value, LSB-first within each byte,
+# every row starting byte-aligned.  These numpy helpers produce the *same*
+# byte layout bit-for-bit (pinned by a golden-byte test on both sides), so
+# AOT artifacts and checkpoints can ship the small metadata plane directly —
+# for 2:4 that is 2 bits per kept value vs. 32 bits for an int32 index.
+# Packing is an artifact-export step, so plain numpy (not traced jnp).
+
+
+def offset_bits(m: int) -> int:
+    """Bits per packed intra-group offset: ``ceil(log2 M)`` (0 for M=1)."""
+    return int(m - 1).bit_length()
+
+
+def row_meta_bytes(kc: int, m: int) -> int:
+    """Packed metadata bytes per row for ``kc`` kept values (byte-aligned)."""
+    return (kc * offset_bits(m) + 7) // 8
+
+
+def pack_nm_offsets(indices, n: int, m: int) -> np.ndarray:
+    """Bit-pack the intra-group offsets of :func:`compress_nm` indices.
+
+    ``indices``: ``(d_out, d_in·N/M)`` int array of absolute dense columns
+    (group-major, as ``compress_nm`` returns).  Returns a ``uint8`` array of
+    shape ``(d_out, row_meta_bytes)`` in the rust runtime's exact layout.
+    """
+    idx = np.asarray(indices).astype(np.int64)
+    d_out, kc = idx.shape
+    bits = offset_bits(m)
+    rmb = row_meta_bytes(kc, m)
+    out = np.zeros((d_out, rmb), np.uint8)
+    if bits == 0:
+        return out
+    offs = idx % m  # absolute column = group·M + offset
+    if (offs < 0).any() or (offs >= m).any():
+        raise ValueError("indices decode to out-of-group offsets")
+    for k in range(kc):
+        bitpos = k * bits
+        byte, sh = bitpos >> 3, bitpos & 7
+        out[:, byte] |= ((offs[:, k] << sh) & 0xFF).astype(np.uint8)
+        if sh + bits > 8:  # entry straddles a byte boundary (e.g. M=8)
+            out[:, byte + 1] |= ((offs[:, k] >> (8 - sh)) & 0xFF).astype(np.uint8)
+    return out
+
+
+def unpack_nm_offsets(packed, kc: int, n: int, m: int) -> np.ndarray:
+    """Inverse of :func:`pack_nm_offsets` — absolute column indices.
+
+    ``packed``: ``(d_out, row_meta_bytes)`` uint8; returns ``(d_out, kc)``
+    int32 absolute dense column indices.
+    """
+    pk = np.asarray(packed).astype(np.uint16)
+    d_out = pk.shape[0]
+    bits = offset_bits(m)
+    base = (np.arange(kc, dtype=np.int32) // n) * m
+    if bits == 0:
+        return np.broadcast_to(base, (d_out, kc)).copy()
+    out = np.zeros((d_out, kc), np.int32)
+    mask = (1 << bits) - 1
+    for k in range(kc):
+        bitpos = k * bits
+        byte, sh = bitpos >> 3, bitpos & 7
+        word = pk[:, byte] >> sh
+        if sh + bits > 8:
+            word = word | (pk[:, byte + 1] << (8 - sh))
+        out[:, k] = (word & mask).astype(np.int32)
+    return out + base[None, :]
 
 
 def density(x: jnp.ndarray) -> jnp.ndarray:

@@ -108,6 +108,42 @@ def test_compress_roundtrip(nm, rows, groups, seed):
     assert (ig >= 0).all() and (ig < groups * m).all()
 
 
+@given(nm=nm, rows=st.sampled_from([1, 4, 8]), groups=st.sampled_from([2, 3, 5]),
+       seed=st.integers(0, 2**31))
+def test_packed_offsets_roundtrip(nm, rows, groups, seed):
+    """Eq.-7 bit-packing of compress_nm indices round-trips exactly
+    (odd group counts exercise partially-filled tail bytes)."""
+    n, m = nm
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(k1, (rows, groups * m))
+    mask = sp.random_nm_mask(k2, w.shape, n, m)
+    _, idx = sp.compress_nm(w * mask, mask, n, m)
+    packed = sp.pack_nm_offsets(idx, n, m)
+    kc = groups * n
+    assert packed.shape == (rows, sp.row_meta_bytes(kc, m))
+    assert packed.dtype == np.uint8
+    back = sp.unpack_nm_offsets(packed, kc, n, m)
+    np.testing.assert_array_equal(back, np.asarray(idx, dtype=np.int32))
+
+
+def test_packed_offsets_golden_bytes_match_rust_layout():
+    """Byte-layout pin shared with the rust side (sparsity::compressed
+    tests): 2:4 offsets [1, 3 | 0, 2] pack LSB-first into 0b10_00_11_01."""
+    idx = np.array([[1, 3, 4 + 0, 4 + 2]], dtype=np.int32)  # two 2:4 groups
+    packed = sp.pack_nm_offsets(idx, 2, 4)
+    assert packed.shape == (1, 1)
+    assert packed[0, 0] == 0b10001101, f"got {packed[0, 0]:#010b}"
+    # 2:8 (3-bit offsets) straddles byte boundaries: offsets [5, 7 | 1, 6]
+    # → byte0 = 5 | 7<<3 | (1&1)<<6 = 0b01111101, byte1 = 6<<1 = 0b1100.
+    idx8 = np.array([[5, 7, 8 + 1, 8 + 6]], dtype=np.int32)
+    packed8 = sp.pack_nm_offsets(idx8, 2, 8)
+    assert packed8.shape == (1, 2)
+    assert packed8[0, 0] == 0b01111101, f"got {packed8[0, 0]:#010b}"
+    assert packed8[0, 1] == 0b00001100, f"got {packed8[0, 1]:#010b}"
+    # offset_bits mirrors NmScheme::offset_bits.
+    assert [sp.offset_bits(m) for m in (1, 2, 4, 8, 6)] == [0, 1, 2, 3, 3]
+
+
 def test_wanda_mask_uses_activation_scaling():
     """A column with huge activation norm must survive even with small |w|."""
     w = jnp.ones((4, 8)) * 0.1

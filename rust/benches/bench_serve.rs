@@ -1,0 +1,78 @@
+//! Serving-path latency across batch sizes and kernel-engine thread
+//! counts — the measured counterpart of the paper's Table-2 serving
+//! claim, and the acceptance gauge for the column-striped `batch = 1`
+//! partition: with output-column stripes a single-request forward must
+//! scale with worker count (the vs-1thr column), where the old row-only
+//! split pinned it to one core.
+//!
+//! Shape: one upsample+downsample MLP block (512↔2048, 2:4 sparse +
+//! rank-16 LoRA) — the default bench shape.  Set `SLOPE_BENCH_JSON` for
+//! the machine-readable perf trajectory.
+
+use slope::backend::{ParallelPolicy, SparseBackend, SpmmAlgo};
+use slope::serve::{BatchPolicy, LoraAdapter, ServeEngine, ServeLayer};
+use slope::sparsity::{random_row_mask, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
+use slope::util::Rng;
+use std::time::Duration;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const BATCHES: [usize; 3] = [1, 4, 16];
+const D: usize = 512;
+const F: usize = 2048;
+const RANK: usize = 16;
+
+fn engine(threads: usize, rng: &mut Rng) -> ServeEngine {
+    let policy = ParallelPolicy::for_width(threads, D);
+    let mut layers = Vec::new();
+    for (d_out, d_in) in [(F, D), (D, F)] {
+        let w = Matrix::randn(d_out, d_in, 1.0 / (d_in as f32).sqrt(), rng);
+        let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, rng);
+        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor, policy);
+        let lora = LoraAdapter {
+            up: Matrix::randn(d_out, RANK, 0.1, rng),
+            down: Matrix::randn(RANK, d_in, 0.1, rng),
+        };
+        layers.push(ServeLayer::new(be, Some(lora)).expect("bench layer"));
+    }
+    // max_batch is set per measurement below; max_wait never binds because
+    // the bench always submits a full batch before polling.
+    ServeEngine::new(layers, BatchPolicy::new(16, Duration::from_secs(1))).expect("bench engine")
+}
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0);
+    print_header("bench_serve — coalesced forward latency (512↔2048 2:4 + rank-16 LoRA)");
+    println!(
+        "{:<16} {:>3} {:>12} {:>12} {:>9}",
+        "case", "thr", "per-batch", "per-req", "vs 1thr"
+    );
+    for batch in BATCHES {
+        let inputs: Vec<Vec<f32>> =
+            (0..batch).map(|_| (0..D).map(|_| rng.normal_f32(0.5)).collect()).collect();
+        let mut one_thr_ns = f64::NAN;
+        for threads in THREADS {
+            let mut eng = engine(threads, &mut Rng::seed_from_u64(7));
+            let r = bench_auto(&format!("serve b{batch} t{threads}"), 120.0, || {
+                for input in &inputs {
+                    eng.submit(input.clone(), Duration::ZERO).expect("submit");
+                }
+                black_box(eng.flush(Duration::ZERO));
+            });
+            if threads == 1 {
+                one_thr_ns = r.median_ns;
+            }
+            emit_json("bench_serve", &format!("batch{batch}/forward"), threads, &r);
+            println!(
+                "{:<16} {:>3} {:>10.2}us {:>10.2}us {:>8.2}x",
+                format!("batch {batch}"),
+                threads,
+                r.median_ns / 1e3,
+                r.median_ns / 1e3 / batch as f64,
+                one_thr_ns / r.median_ns
+            );
+        }
+    }
+    println!("\n(batch=1 rows are the column-striped partition: the kernel stripes\n output columns across the pool, so single-request latency scales with\n threads; batch≥4 rows row-partition like training.  vs-1thr ≳ 1.5x at\n 4 threads on ≥4 hardware cores is the serving acceptance bar.)");
+}

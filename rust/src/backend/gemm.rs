@@ -9,15 +9,22 @@
 //! Every kernel comes in three forms wired to the same per-row core:
 //! * `gemm*(a, b)` — allocating, serial (the seed API, kept for tests
 //!   and cold paths);
-//! * `gemm*_with(a, b, policy)` — allocating, parallel over output rows;
+//! * `gemm*_with(a, b, policy)` — allocating, parallel;
 //! * `gemm*_into(a, b, &mut c, policy)` — out-param, parallel,
 //!   allocation-free once the caller's buffer is warm.
 //!
-//! Because the engine partitions *output rows* and the per-row reduction
-//! order never depends on the partition, parallel results are
-//! bit-identical to serial at any thread count.
+//! `gemm` / `gemm_tn` partition *output rows* (their outputs are
+//! weight-sized, so rows always saturate the pool).  `gemm_nt` — the
+//! LoRA serving kernel, whose output has only `batch` rows — additionally
+//! honors the policy's [`crate::backend::pool::PartitionStrategy`]: under
+//! a column split each
+//! task computes a disjoint stripe of output columns for every row, so a
+//! `batch = 1` call still spreads across the pool.  Per output element
+//! the reduction order never depends on the partition, so parallel
+//! results are bit-identical to serial at any thread count.
 
-use crate::backend::pool::{parallel_over_rows, ParallelPolicy};
+use crate::backend::pool::{parallel_over_col_stripes, parallel_over_rows, ParallelPolicy,
+                           Partition, StripedOut};
 use crate::tensor::Matrix;
 use std::ops::Range;
 
@@ -84,7 +91,7 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
     gemm_nt_with(a, b, &ParallelPolicy::serial())
 }
 
-/// `C = A · Bᵀ`, parallel over output rows.
+/// `C = A · Bᵀ`, parallel per the policy's partition strategy.
 pub fn gemm_nt_with(a: &Matrix, b: &Matrix, policy: &ParallelPolicy) -> Matrix {
     let mut c = Matrix::zeros(a.rows, b.rows);
     gemm_nt_into(a, b, &mut c, policy);
@@ -105,13 +112,36 @@ pub fn gemm_nt_acc(a: &Matrix, b: &Matrix, mut c: Matrix) -> Matrix {
     c
 }
 
-/// `C += A · Bᵀ` into a caller-owned accumulator, parallel over rows.
+/// `C += A · Bᵀ` into a caller-owned accumulator, parallel per the
+/// policy's partition strategy (row ranges, or column stripes when the
+/// batch is too small to occupy the pool).
 pub fn gemm_nt_acc_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy) {
     assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows));
-    parallel_over_rows(policy, &mut c.data, b.rows, |range, chunk| {
-        gemm_nt_rows(a, b, range, chunk);
-    });
+    match policy.resolve(a.rows, b.rows) {
+        Partition::Serial => gemm_nt_rows(a, b, 0..a.rows, &mut c.data),
+        Partition::Rows(_) => {
+            parallel_over_rows(policy, &mut c.data, b.rows, |range, chunk| {
+                gemm_nt_rows(a, b, range, chunk);
+            });
+        }
+        Partition::Cols(tasks) => {
+            let k = a.cols;
+            let out = StripedOut::new(&mut c.data, b.rows);
+            parallel_over_col_stripes(tasks, b.rows, |stripe| {
+                for i in 0..a.rows {
+                    let arow = a.row(i);
+                    // SAFETY: stripes of distinct tasks are disjoint.
+                    let dst = unsafe { out.row_stripe(i, stripe.clone()) };
+                    for (local, j) in stripe.clone().enumerate() {
+                        // Same single-dot-per-element computation as the
+                        // row path ⇒ bit-identical results.
+                        dst[local] += dot(arow, b.row(j), k);
+                    }
+                }
+            });
+        }
+    }
 }
 
 fn gemm_nt_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
@@ -245,10 +275,17 @@ mod tests {
             let bt = b.transpose();
             let at = a.transpose();
             for threads in [2usize, 4, 7] {
-                let p = ParallelPolicy { threads, min_rows_per_task: 1 };
+                let p = ParallelPolicy {
+                    threads,
+                    min_rows_per_task: 1,
+                    ..ParallelPolicy::serial()
+                };
                 assert_eq!(gemm_with(&a, &b, &p), gemm(&a, &b), "gemm t={threads}");
                 assert_eq!(gemm_nt_with(&a, &bt, &p), gemm_nt(&a, &bt), "nt t={threads}");
                 assert_eq!(gemm_tn_with(&at, &b, &p), gemm_tn(&at, &b), "tn t={threads}");
+                // Forced column stripes must also match exactly.
+                let pc = p.with_partition(crate::backend::pool::PartitionStrategy::Cols);
+                assert_eq!(gemm_nt_with(&a, &bt, &pc), gemm_nt(&a, &bt), "nt cols t={threads}");
             }
         }
     }

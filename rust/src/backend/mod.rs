@@ -13,17 +13,35 @@
 //! # Threading model
 //!
 //! All six kernels (`gemm`, `gemm_nt`, `gemm_nt_acc`, `gemm_tn`,
-//! `spmm_rowmajor`, `spmm_tiled`) run on the [`pool`] engine: the output
-//! is split into contiguous **row ranges** (GEMM weight/output rows, SpMM
-//! batch rows), each range is handed to a worker on a std scoped thread,
-//! and every worker runs the *same* per-row loop body the serial kernel
-//! runs.  Since a row's reduction order never depends on the partition,
-//! parallel results are bit-identical to serial at any thread count — the
-//! property `tests/parallel_and_packed.rs` pins across {1, 2, 4, 7}
-//! threads and ragged shapes.  [`ParallelPolicy`] (worker count + a
-//! min-rows-per-task fork floor) persists on [`SparseBackend`] and
+//! `spmm_rowmajor`, `spmm_tiled`) run on the [`pool`] engine — a
+//! **persistent park/unpark worker set** spawned once per process and
+//! reused by every parallel region thereafter (the `serve_and_pool`
+//! suite pins ≥ 1000 regions with zero new thread spawns).  A region is
+//! a fixed set of index-addressed tasks whose partition is a pure
+//! function of (shape, policy); workers claim indices dynamically, but
+//! since each task computes exactly what it would compute serially,
+//! parallel results are **bit-identical** to serial at any thread count —
+//! the property `tests/parallel_and_packed.rs` pins across {1, 2, 4, 7}
+//! threads and ragged shapes.
+//!
+//! Two partition strategies exist, selected per call by
+//! [`ParallelPolicy::resolve`] under the policy's [`PartitionStrategy`]
+//! knob:
+//! * **Row ranges** — contiguous output rows per task (GEMM weight/output
+//!   rows, SpMM batch rows); the right split whenever the output has
+//!   enough rows to occupy every worker.
+//! * **Column stripes** — contiguous output *columns* (weight rows) per
+//!   task, every task touching every row: the `batch = 1` serving split,
+//!   which lets a single-request forward through `spmm_rowmajor`,
+//!   `spmm_tiled` and `gemm_nt` saturate the pool.  `Auto` (the default)
+//!   picks rows when the row split saturates, else columns.
+//!
+//! [`ParallelPolicy`] (worker count, fork-granularity floor, partition
+//! strategy) persists on [`SparseBackend`] and
 //! [`crate::config::RunConfig`] and flows through every entry point;
-//! `*_with` variants parallelize, the bare seed names stay serial.
+//! `*_with` variants parallelize, the bare seed names stay serial.  The
+//! [`crate::serve`] subsystem drives these kernels through warm
+//! [`SparseBackend`]s for the deployment path.
 //!
 //! # Packed metadata (Eq. 7 accounting)
 //!
@@ -57,9 +75,10 @@ pub mod spmm;
 
 pub use gemm::{gemm, gemm_into, gemm_nt, gemm_nt_acc, gemm_nt_acc_into, gemm_nt_into,
                gemm_nt_with, gemm_tn, gemm_tn_into, gemm_tn_with, gemm_with};
-pub use pool::{parallel_over_rows, ParallelPolicy};
-pub use spmm::{spmm_rowmajor, spmm_rowmajor_into, spmm_rowmajor_with, spmm_tiled,
-               spmm_tiled_into, spmm_tiled_with, SpmmAlgo};
+pub use pool::{parallel_over_col_stripes, parallel_over_rows, spawned_thread_count,
+               ParallelPolicy, Partition, PartitionStrategy, WorkerPool};
+pub use spmm::{sparse_dot, sparse_dot_scalar, spmm_rowmajor, spmm_rowmajor_into,
+               spmm_rowmajor_with, spmm_tiled, spmm_tiled_into, spmm_tiled_with, SpmmAlgo};
 
 use crate::sparsity::{CompressedNm, Mask, NmScheme};
 use crate::tensor::Matrix;
@@ -67,7 +86,7 @@ use crate::tensor::Matrix;
 /// Grow-once output buffer helper: (re)shape `buf` only when the target
 /// shape changes; the `*_into` kernels overwrite every element.
 #[inline]
-fn ensure_out(buf: &mut Matrix, rows: usize, cols: usize) {
+pub(crate) fn ensure_out(buf: &mut Matrix, rows: usize, cols: usize) {
     if buf.rows != rows || buf.cols != cols {
         *buf = Matrix::zeros(rows, cols);
     }
@@ -205,11 +224,9 @@ impl SparseBackend {
     /// Fused LoRA serving call (Eq. 11) through the workspace: zero
     /// allocations per call once shapes are warm.
     pub fn lora_fused_ws(&mut self, x: &Matrix, lo_up: &Matrix, lo_down: &Matrix) -> &Matrix {
-        ensure_out(&mut self.ws.lora_y, x.rows, self.w.rows);
-        ensure_out(&mut self.ws.lora_t, x.rows, lo_down.rows);
-        spmm_into_algo(self.algo, &self.policy, x, &self.w, &mut self.ws.lora_y);
-        gemm_nt_into(x, lo_down, &mut self.ws.lora_t, &self.policy);
-        gemm_nt_acc_into(&self.ws.lora_t, lo_up, &mut self.ws.lora_y, &self.policy);
+        let (algo, policy) = (self.algo, self.policy);
+        lora_fused_seq(algo, &policy, &self.w, x, lo_up, lo_down,
+                       &mut self.ws.lora_t, &mut self.ws.lora_y);
         &self.ws.lora_y
     }
 
@@ -258,6 +275,20 @@ pub fn prune_and_compress_into(g: &Matrix, pattern: &CompressedNm, out: &mut Com
             out.values[r * kc + k] = grow[c];
         }
     }
+}
+
+/// The Eq.-11 fused serving sequence into caller-owned staging (`t`, the
+/// rank intermediate) and output (`y`), both grown once: sparse `X·Wᵀ`,
+/// then the LoRA down-projection, then the up-projection fused with the
+/// add.  The single definition shared by [`SparseBackend::lora_fused_ws`]
+/// and the [`crate::serve`] engine's per-layer forward.
+pub fn lora_fused_seq(algo: SpmmAlgo, policy: &ParallelPolicy, w: &CompressedNm, x: &Matrix,
+                      lo_up: &Matrix, lo_down: &Matrix, t: &mut Matrix, y: &mut Matrix) {
+    ensure_out(y, x.rows, w.rows);
+    ensure_out(t, x.rows, lo_down.rows);
+    spmm_into_algo(algo, policy, x, w, y);
+    gemm_nt_into(x, lo_down, t, policy);
+    gemm_nt_acc_into(t, lo_up, y, policy);
 }
 
 /// Naive LoRA inference path (4 kernel calls — Appendix D "before").

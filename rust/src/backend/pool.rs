@@ -1,23 +1,81 @@
-//! The parallel execution engine for the kernel backend: row-range work
-//! partitioning over std scoped threads — no external dependencies.
+//! The parallel execution engine for the kernel backend: a **persistent
+//! park/unpark worker pool** plus deterministic work partitioning — no
+//! external dependencies.
 //!
-//! Every kernel in this backend writes a row-major output whose rows are
-//! independent (GEMM output rows, SpMM batch rows), so the engine's one
-//! primitive is [`parallel_over_rows`]: split the output buffer into
-//! contiguous row ranges, hand each range to a worker, and run the *same*
-//! per-row loop body the serial kernel runs.  Because the partition never
-//! changes the per-row reduction order, results are **bit-identical** to
-//! the serial kernel at any thread count — the property the
-//! `parallel_and_packed` test suite pins.
+//! # Engine shape
 //!
-//! [`ParallelPolicy`] is the configuration handle that persists across
-//! kernel calls (it lives on [`crate::backend::SparseBackend`] and
-//! [`crate::config::RunConfig`]): worker count plus a fork-granularity
-//! floor so tiny matrices never pay thread-spawn latency.  Workers are
-//! joined at region end by `std::thread::scope`, which is what lets them
-//! borrow the operands directly instead of copying into `'static` jobs.
+//! Workers are spawned **once** (lazily, on the first parallel region) and
+//! then parked on a `Condvar`; every subsequent region is a wake → claim →
+//! park cycle with no thread spawning at all.  The seed engine spawned
+//! scoped threads per region (~10–50 µs per spawn), which was noise for
+//! large shapes but capped scaling for the sub-100 µs kernels the serving
+//! path runs; the persistent pool pushes the parallel crossover down to
+//! where [`ParallelPolicy::min_rows_per_task`] puts it.  The test suite
+//! pins the reuse property via [`spawned_thread_count`]: ≥ 1000 parallel
+//! regions must not spawn a single new thread after warmup.
+//!
+//! # Determinism contract
+//!
+//! A region is a fixed set of `tasks` index-addressed work items whose
+//! *partition* is a pure function of (shape, policy) — never of worker
+//! count, claim order, or timing.  Workers claim task indices dynamically
+//! from an atomic counter, but since every task computes the same output
+//! range it would compute serially, results are **bit-identical** to the
+//! serial kernel at any thread count — the property the
+//! `parallel_and_packed` and `serve_and_pool` test suites pin.
+//!
+//! # Partitioning strategies
+//!
+//! [`parallel_over_rows`] splits a row-major output into contiguous **row
+//! ranges** (GEMM output rows, SpMM batch rows) — the right split when the
+//! output has enough rows to saturate the pool.  For the serving-critical
+//! `batch = 1` forward a row split cannot parallelize at all, so the
+//! kernels can also split **output columns** (weight rows) into per-task
+//! stripes via [`parallel_over_col_stripes`] + [`StripedOut`]: every task
+//! writes a disjoint column stripe of every output row.
+//! [`PartitionStrategy`] on [`ParallelPolicy`] selects Rows / Cols /
+//! Auto (pick from shape); [`ParallelPolicy::resolve`] is the single
+//! decision point the kernels share.
+//!
+//! [`ParallelPolicy`] persists across kernel calls (it lives on
+//! [`crate::backend::SparseBackend`] and [`crate::config::RunConfig`]);
+//! the pool itself is process-global and policy-independent — a policy
+//! only decides how many tasks a region forks, the pool executes them on
+//! however many workers the hardware has.
 
+use std::cell::Cell;
 use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// How a kernel splits its output across pool tasks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Pick per call from the output shape: row split when the output has
+    /// enough rows to occupy every worker, else column split (the
+    /// `batch = 1` serving case).
+    #[default]
+    Auto,
+    /// Always split output rows (the seed engine's only strategy).
+    Rows,
+    /// Always split output columns (weight rows) into per-task stripes.
+    Cols,
+}
+
+/// A resolved partition decision for one kernel call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Run the serial kernel body on the calling thread.
+    Serial,
+    /// Split output rows into this many contiguous ranges.
+    Rows(usize),
+    /// Split output columns into this many contiguous stripes.
+    Cols(usize),
+}
+
+/// Minimum output columns per stripe under a column split — below this a
+/// stripe carries too little arithmetic to amortize a worker wakeup.
+const MIN_COLS_PER_STRIPE: usize = 8;
 
 /// Parallelism configuration for the kernel engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,33 +83,45 @@ pub struct ParallelPolicy {
     /// Worker count; `0` = auto-detect from `available_parallelism`.
     pub threads: usize,
     /// Minimum output rows per task — below `threads × min_rows_per_task`
-    /// rows the kernel runs serially (spawn cost would dominate).
+    /// rows a row split runs serially (wakeup cost would dominate).
     pub min_rows_per_task: usize,
+    /// Row/column split selection (Auto picks from the output shape).
+    pub partition: PartitionStrategy,
 }
 
 impl ParallelPolicy {
     /// Single-threaded execution (the seed kernels' behavior).
     pub const fn serial() -> Self {
-        Self { threads: 1, min_rows_per_task: 8 }
+        Self { threads: 1, min_rows_per_task: 8, partition: PartitionStrategy::Auto }
     }
 
     /// Use every available hardware thread.
     pub const fn auto() -> Self {
-        Self { threads: 0, min_rows_per_task: 8 }
+        Self { threads: 0, min_rows_per_task: 8, partition: PartitionStrategy::Auto }
     }
 
     /// Fixed worker count (`0` = auto).
     pub const fn with_threads(threads: usize) -> Self {
-        Self { threads, min_rows_per_task: 8 }
+        Self { threads, min_rows_per_task: 8, partition: PartitionStrategy::Auto }
+    }
+
+    /// Same policy with an explicit partition strategy.
+    pub const fn with_partition(mut self, partition: PartitionStrategy) -> Self {
+        self.partition = partition;
+        self
     }
 
     /// Policy for kernels over matrices of the given row width (`d_model`
     /// / `d_in`-sized): the fork floor scales with width so a task always
-    /// carries enough arithmetic to amortize spawn latency, while tiny
+    /// carries enough arithmetic to amortize wakeup latency, while tiny
     /// debug shapes stay effectively serial.  Used by the CLI (manifest
     /// `d_model`), the shape zoo, and the kernel benches.
     pub fn for_width(threads: usize, width: usize) -> Self {
-        Self { threads, min_rows_per_task: (width / 256).clamp(4, 64) }
+        Self {
+            threads,
+            min_rows_per_task: (width / 256).clamp(4, 64),
+            partition: PartitionStrategy::Auto,
+        }
     }
 
     /// Resolved worker count (auto-detects when `threads == 0`).
@@ -68,6 +138,37 @@ impl ParallelPolicy {
         let cap = rows / self.min_rows_per_task.max(1);
         self.effective_threads().min(cap.max(1)).max(1)
     }
+
+    /// How many column stripes to fork for an output `cols` wide.
+    pub fn col_tasks_for(&self, cols: usize) -> usize {
+        let cap = cols / MIN_COLS_PER_STRIPE;
+        self.effective_threads().min(cap.max(1)).max(1)
+    }
+
+    /// Resolve the partition for an `out_rows × out_cols` kernel output.
+    ///
+    /// `Auto` prefers the row split (contiguous writes) whenever it can
+    /// occupy every worker or beats the column split's task count;
+    /// otherwise — the small-batch serving shape — it stripes columns.
+    pub fn resolve(&self, out_rows: usize, out_cols: usize) -> Partition {
+        let row_tasks = self.tasks_for(out_rows);
+        let col_tasks = self.col_tasks_for(out_cols);
+        let chosen = match self.partition {
+            PartitionStrategy::Rows => Partition::Rows(row_tasks),
+            PartitionStrategy::Cols => Partition::Cols(col_tasks),
+            PartitionStrategy::Auto => {
+                if row_tasks >= self.effective_threads() || row_tasks >= col_tasks {
+                    Partition::Rows(row_tasks)
+                } else {
+                    Partition::Cols(col_tasks)
+                }
+            }
+        };
+        match chosen {
+            Partition::Rows(t) | Partition::Cols(t) if t <= 1 => Partition::Serial,
+            other => other,
+        }
+    }
 }
 
 impl Default for ParallelPolicy {
@@ -78,10 +179,256 @@ impl Default for ParallelPolicy {
     }
 }
 
+// ---- the persistent worker pool ---------------------------------------
+
+/// Monotonic count of OS threads ever spawned by pool instances — the
+/// test hook that pins "≥ 1000 regions, zero new spawns after warmup".
+static SPAWNED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total OS threads spawned by all [`WorkerPool`]s since process start.
+pub fn spawned_thread_count() -> usize {
+    SPAWNED_THREADS.load(Ordering::SeqCst)
+}
+
+thread_local! {
+    /// Set while this thread executes inside a pool task (worker threads
+    /// permanently; the submitting thread during its own participation).
+    /// A nested region then runs inline instead of deadlocking on the
+    /// submit lock.
+    static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One parallel region: a borrowed task closure plus the claim counter.
+/// Lives on the submitting thread's stack; workers access it through a
+/// raw pointer that is only valid because [`WorkerPool::run`] does not
+/// return (or unwind) before every helper has parked again.
+struct Job {
+    /// Really `&'region (dyn Fn(usize) + Sync)` — the lifetime is erased
+    /// to `'static` at submit because the epoch barrier guarantees the
+    /// region outlives every call through it.
+    task: &'static (dyn Fn(usize) + Sync),
+    /// Next unclaimed task index.
+    next: AtomicUsize,
+    tasks: usize,
+}
+
+/// Raw job pointer, shared with workers under the control mutex.
+#[derive(Clone, Copy)]
+struct JobPtr(*const Job);
+// SAFETY: the pointee outlives every dereference — `run` blocks until all
+// helpers of the epoch have finished before the `Job` leaves scope.
+unsafe impl Send for JobPtr {}
+
+struct Ctl {
+    /// Region generation; bumping it (under the mutex) publishes a job.
+    epoch: u64,
+    job: Option<JobPtr>,
+    /// Workers enlisted for the current epoch (`idx < helpers`).
+    helpers: usize,
+    /// Enlisted workers that have not yet finished the current epoch.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctl: Mutex<Ctl>,
+    /// Parked workers wait here for an epoch bump.
+    work: Condvar,
+    /// The submitter waits here for `active == 0`.
+    done: Condvar,
+    /// A worker task panicked this epoch (re-raised by the submitter).
+    panicked: AtomicBool,
+}
+
+/// A persistent set of parked worker threads executing index-addressed
+/// task regions.  One process-global instance ([`WorkerPool::global`])
+/// serves every kernel call; dedicated instances exist for tests.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    /// Serializes whole regions: two threads submitting concurrently get
+    /// queued, never interleaved epochs.
+    submit: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` parked helper threads (the submitting
+    /// thread always participates too, so total parallelism is
+    /// `workers + 1`).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            ctl: Mutex::new(Ctl {
+                epoch: 0,
+                job: None,
+                helpers: 0,
+                active: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|idx| {
+                SPAWNED_THREADS.fetch_add(1, Ordering::SeqCst);
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("slope-pool-{idx}"))
+                    .spawn(move || worker_loop(sh, idx))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { shared, workers, submit: Mutex::new(()), handles }
+    }
+
+    /// The process-global pool, spawned on first use with
+    /// `available_parallelism − 1` helpers (the caller is the +1).
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            WorkerPool::new(hw.saturating_sub(1))
+        })
+    }
+
+    /// Parked helper threads in this pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute `task(0..tasks)` across the pool; returns when every task
+    /// has finished.  Which worker runs which index is nondeterministic,
+    /// but each index runs exactly once, so any index-deterministic task
+    /// set yields deterministic results.  Nested calls from inside a task
+    /// run inline (serially) on the calling thread.
+    pub fn run(&self, tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if tasks <= 1 || self.workers == 0 || IN_POOL_TASK.with(|f| f.get()) {
+            for t in 0..tasks {
+                task(t);
+            }
+            return;
+        }
+        let region = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: lifetime erasure only — `run` does not return (even on
+        // panic) until every helper has finished with `job`, so the
+        // closure outlives all uses of this "'static" reference.
+        let task_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(task) };
+        let job = Job { task: task_static, next: AtomicUsize::new(0), tasks };
+        {
+            let mut ctl = self.shared.ctl.lock().unwrap_or_else(|e| e.into_inner());
+            ctl.epoch = ctl.epoch.wrapping_add(1);
+            ctl.helpers = self.workers.min(tasks - 1);
+            ctl.active = ctl.helpers;
+            ctl.job = Some(JobPtr(&job));
+            self.shared.work.notify_all();
+        }
+        // The submitter claims tasks like any worker.  Panics are deferred
+        // until every helper has parked — unwinding past `job` while a
+        // worker still holds its address would be unsound.
+        IN_POOL_TASK.with(|f| f.set(true));
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let t = job.next.fetch_add(1, Ordering::SeqCst);
+            if t >= tasks {
+                break;
+            }
+            task(t);
+        }));
+        IN_POOL_TASK.with(|f| f.set(false));
+        {
+            let mut ctl = self.shared.ctl.lock().unwrap_or_else(|e| e.into_inner());
+            while ctl.active > 0 {
+                ctl = self.shared.done.wait(ctl).unwrap_or_else(|e| e.into_inner());
+            }
+            ctl.job = None;
+        }
+        drop(region);
+        // Consume the worker-panic flag BEFORE re-raising a caller panic:
+        // leaving it set would make the next unrelated region on this pool
+        // panic spuriously.
+        let worker_panicked = self.shared.panicked.swap(false, Ordering::SeqCst);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut ctl = self.shared.ctl.lock().unwrap_or_else(|e| e.into_inner());
+            ctl.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    IN_POOL_TASK.with(|f| f.set(true));
+    let mut last_epoch = 0u64;
+    loop {
+        let (job, participate);
+        {
+            let mut ctl = shared.ctl.lock().unwrap_or_else(|e| e.into_inner());
+            while ctl.epoch == last_epoch && !ctl.shutdown {
+                ctl = shared.work.wait(ctl).unwrap_or_else(|e| e.into_inner());
+            }
+            if ctl.shutdown {
+                return;
+            }
+            last_epoch = ctl.epoch;
+            participate = idx < ctl.helpers;
+            job = ctl.job;
+        }
+        let Some(JobPtr(job)) = job else { continue };
+        if !participate {
+            continue;
+        }
+        // SAFETY: the submitter of this epoch is blocked in `run` until we
+        // decrement `active` below, so the Job (and the closure it points
+        // to) is alive for the whole claim loop.
+        let job = unsafe { &*job };
+        let task = job.task;
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let t = job.next.fetch_add(1, Ordering::SeqCst);
+            if t >= job.tasks {
+                break;
+            }
+            task(t);
+        }));
+        if r.is_err() {
+            shared.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut ctl = shared.ctl.lock().unwrap_or_else(|e| e.into_inner());
+        ctl.active -= 1;
+        if ctl.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+// ---- partition primitives ---------------------------------------------
+
+/// Mutable pointer shared read-only across tasks; each task derives its
+/// own disjoint sub-slice from the task index.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: tasks only touch disjoint index ranges (enforced by the
+// deterministic partition arithmetic below).
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 /// Partition `data` (a `rows × row_len` row-major buffer) into contiguous
-/// row ranges and run `body(range, chunk)` on each — workers on scoped
-/// threads, the final range on the calling thread.  `body` must compute
-/// rows independently; under that contract the result is bit-identical to
+/// row ranges and run `body(range, chunk)` on each — ranges on persistent
+/// pool workers plus the calling thread.  `body` must compute rows
+/// independently; under that contract the result is bit-identical to
 /// `body(0..rows, data)` at any thread count.
 pub fn parallel_over_rows<F>(policy: &ParallelPolicy, data: &mut [f32], row_len: usize, body: F)
 where
@@ -94,26 +441,87 @@ where
         body(0..rows, data);
         return;
     }
-    std::thread::scope(|scope| {
-        let body = &body;
-        let mut rest: &mut [f32] = data;
-        let mut start = 0usize;
-        for t in 0..tasks - 1 {
-            // Even partition: range t covers rows [rows·t/tasks, rows·(t+1)/tasks).
-            let end = rows * (t + 1) / tasks;
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((end - start) * row_len);
-            rest = tail;
-            let range = start..end;
-            scope.spawn(move || body(range, chunk));
-            start = end;
-        }
-        body(start..rows, rest);
-    });
+    let base = SendPtr(data.as_mut_ptr());
+    let task_fn = move |t: usize| {
+        // Even partition: task t covers rows [rows·t/tasks, rows·(t+1)/tasks)
+        // — a pure function of (rows, tasks), independent of which worker
+        // claims the index.
+        let start = rows * t / tasks;
+        let end = rows * (t + 1) / tasks;
+        // SAFETY: row ranges of distinct tasks are disjoint and in-bounds,
+        // and each task index is claimed exactly once.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(start * row_len), (end - start) * row_len)
+        };
+        body(start..end, chunk);
+    };
+    WorkerPool::global().run(tasks, &task_fn);
+}
+
+/// Split `0..cols` into `tasks` contiguous stripes and run `body(stripe)`
+/// on the pool.  The body must only write output columns inside its
+/// stripe (via [`StripedOut`]); stripes of distinct tasks are disjoint,
+/// so the writes never alias.
+pub fn parallel_over_col_stripes<F>(tasks: usize, cols: usize, body: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let tasks = tasks.min(cols).max(1);
+    let task_fn = move |t: usize| {
+        body(cols * t / tasks..cols * (t + 1) / tasks);
+    };
+    WorkerPool::global().run(tasks, &task_fn);
+}
+
+/// Column-striped mutable view of a `rows × row_len` row-major buffer for
+/// kernels whose tasks write disjoint *column* stripes of every row
+/// (the `batch = 1` partition, where row chunks cannot be handed out).
+pub struct StripedOut {
+    ptr: *mut f32,
+    rows: usize,
+    row_len: usize,
+}
+
+// SAFETY: concurrent users hold disjoint column stripes (the
+// `parallel_over_col_stripes` contract), so derived slices never overlap.
+unsafe impl Send for StripedOut {}
+unsafe impl Sync for StripedOut {}
+
+impl StripedOut {
+    pub fn new(data: &mut [f32], row_len: usize) -> Self {
+        let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+        debug_assert_eq!(rows * row_len, data.len());
+        Self { ptr: data.as_mut_ptr(), rows, row_len }
+    }
+
+    /// Mutable slice of `stripe` within row `row`.
+    ///
+    /// # Safety
+    /// Callers must hold disjoint `(row, stripe)` regions across threads:
+    /// under `parallel_over_col_stripes` each task passes only its own
+    /// stripe, which is disjoint from every other task's.
+    #[inline]
+    pub unsafe fn row_stripe(&self, row: usize, stripe: Range<usize>) -> &mut [f32] {
+        debug_assert!(row < self.rows && stripe.end <= self.row_len);
+        std::slice::from_raw_parts_mut(
+            self.ptr.add(row * self.row_len + stripe.start),
+            stripe.len(),
+        )
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Serializes the tests that construct pools or read the global spawn
+    /// counter — libtest runs tests concurrently in one process, and a
+    /// dedicated pool spawning mid-measurement would trip the counter.
+    static POOL_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn pool_test_guard() -> std::sync::MutexGuard<'static, ()> {
+        POOL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
 
     #[test]
     fn serial_policy_never_forks() {
@@ -122,7 +530,7 @@ mod tests {
 
     #[test]
     fn tasks_respect_granularity_floor() {
-        let p = ParallelPolicy { threads: 8, min_rows_per_task: 16 };
+        let p = ParallelPolicy { threads: 8, min_rows_per_task: 16, ..ParallelPolicy::serial() };
         assert_eq!(p.tasks_for(15), 1); // too small to fork
         assert_eq!(p.tasks_for(64), 4); // 64/16 caps below thread count
         assert_eq!(p.tasks_for(1024), 8); // thread count caps
@@ -142,12 +550,29 @@ mod tests {
     }
 
     #[test]
+    fn resolve_prefers_rows_when_batch_saturates() {
+        let p = ParallelPolicy { threads: 4, min_rows_per_task: 1, ..ParallelPolicy::serial() };
+        assert_eq!(p.resolve(64, 64), Partition::Rows(4));
+        // batch=1 cannot row-split: Auto stripes columns.
+        assert_eq!(p.resolve(1, 64), Partition::Cols(4));
+        // Tiny outputs stay serial either way.
+        assert_eq!(p.resolve(1, 4), Partition::Serial);
+        // Explicit strategies are honored.
+        assert_eq!(p.with_partition(PartitionStrategy::Rows).resolve(1, 64), Partition::Serial);
+        assert_eq!(p.with_partition(PartitionStrategy::Cols).resolve(64, 64), Partition::Cols(4));
+    }
+
+    #[test]
     fn partition_covers_every_row_exactly_once() {
         for threads in [1usize, 2, 3, 4, 7] {
             for rows in [1usize, 2, 7, 29, 64] {
                 let row_len = 3;
                 let mut data = vec![0.0f32; rows * row_len];
-                let p = ParallelPolicy { threads, min_rows_per_task: 1 };
+                let p = ParallelPolicy {
+                    threads,
+                    min_rows_per_task: 1,
+                    ..ParallelPolicy::serial()
+                };
                 parallel_over_rows(&p, &mut data, row_len, |range, chunk| {
                     assert_eq!(chunk.len(), range.len() * row_len);
                     for (local, r) in range.clone().enumerate() {
@@ -164,11 +589,104 @@ mod tests {
     }
 
     #[test]
+    fn col_stripes_cover_every_column_exactly_once() {
+        for tasks in [1usize, 2, 3, 5, 8] {
+            for cols in [1usize, 7, 16, 33] {
+                let rows = 3;
+                let mut data = vec![0.0f32; rows * cols];
+                let out = StripedOut::new(&mut data, cols);
+                parallel_over_col_stripes(tasks, cols, |stripe| {
+                    for r in 0..rows {
+                        let s = unsafe { out.row_stripe(r, stripe.clone()) };
+                        for (local, c) in stripe.clone().enumerate() {
+                            s[local] += (r * cols + c) as f32 + 1.0;
+                        }
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, i as f32 + 1.0, "tasks={tasks} cols={cols} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn zero_rows_is_a_noop() {
         let p = ParallelPolicy::with_threads(4);
         let mut empty: Vec<f32> = vec![];
         parallel_over_rows(&p, &mut empty, 8, |range, chunk| {
             assert!(range.is_empty() && chunk.is_empty());
         });
+    }
+
+    #[test]
+    fn dedicated_pool_runs_every_task_once() {
+        let _g = pool_test_guard();
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(hits.len(), &|t| {
+                hits[t].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 50, "task {t}");
+        }
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        let _g = pool_test_guard();
+        let pool = WorkerPool::new(2);
+        let sum = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            // A nested region from inside a task must not deadlock.
+            WorkerPool::global().run(3, &|u| {
+                sum.fetch_add(u + 1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 4 * (1 + 2 + 3));
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let _g = pool_test_guard();
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|t| {
+                if t % 2 == 1 {
+                    panic!("boom {t}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "task panic must surface in run()");
+        // The pool must still be usable afterwards.
+        let ran = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn spawn_counter_is_flat_across_regions() {
+        let _g = pool_test_guard();
+        // Warm the global pool, then hammer it: no new threads may spawn.
+        let p = ParallelPolicy { threads: 4, min_rows_per_task: 1, ..ParallelPolicy::serial() };
+        let mut data = vec![0.0f32; 64 * 4];
+        parallel_over_rows(&p, &mut data, 4, |_, chunk| {
+            for v in chunk {
+                *v += 1.0;
+            }
+        });
+        let spawned = spawned_thread_count();
+        for _ in 0..100 {
+            parallel_over_rows(&p, &mut data, 4, |_, chunk| {
+                for v in chunk {
+                    *v += 1.0;
+                }
+            });
+        }
+        assert_eq!(spawned_thread_count(), spawned, "regions must reuse parked workers");
     }
 }

@@ -6,20 +6,28 @@
 //! columns the kernel touches exactly N values whose intra-group offsets
 //! are decoded inline from the Eq.-7 bit-packed metadata plane
 //! (`ceil(log2 M)` bits per kept value — 8× less metadata traffic than
-//! the old `u16` absolute indices for 2:4).  The inner loop is a short
+//! the old `u16` absolute indices for 2:4).  For the 2:4 hot path one
+//! metadata byte holds four offsets (two whole groups), so the kernel
+//! decodes **whole bytes** through a 256-entry table ([`sparse_dot`] →
+//! the `DECODE24` LUT) instead of per-element shift/mask; the scalar
+//! reference decode ([`sparse_dot_scalar`]) is kept and pinned
+//! bit-identical by the property suite.  The inner loop is a short
 //! gather-multiply-accumulate with perfect value locality — the CPU
 //! analogue of the metadata decode sparse tensor cores do in hardware.
 //! Compared to the dense `gemm_nt`, it performs `N/M` of the
 //! multiply-adds and streams `N/M` of the weight bytes.
 //!
-//! All kernels partition **batch rows** across the
-//! [`crate::backend::pool`] engine; each worker runs the identical
-//! per-row loop, so parallel outputs are bit-identical to serial ones at
-//! any thread count.  `spmm_rowmajor` and `spmm_tiled` also agree
-//! bit-for-bit with each other: every output element is one
-//! group-ascending `sparse_dot`, and tiling only reorders whole elements.
+//! Kernels run on the persistent [`crate::backend::pool`] engine and
+//! honor the policy's [`PartitionStrategy`]: **batch rows** are split
+//! when the batch saturates the pool, **output columns** (weight rows)
+//! are striped when it cannot — the `batch = 1` serving shape.  Either
+//! way every output element is one group-ascending reduction, so results
+//! are bit-identical to serial at any thread count and `spmm_rowmajor` /
+//! `spmm_tiled` agree bit-for-bit with each other (tiling and striping
+//! only reorder whole elements).
 
-use crate::backend::pool::{parallel_over_rows, ParallelPolicy};
+use crate::backend::pool::{parallel_over_col_stripes, parallel_over_rows, ParallelPolicy,
+                           Partition, StripedOut};
 use crate::sparsity::{compressed::unpack_offset, CompressedNm};
 use crate::tensor::Matrix;
 use std::ops::Range;
@@ -41,7 +49,7 @@ pub fn spmm_rowmajor(x: &Matrix, w: &CompressedNm) -> Matrix {
     spmm_rowmajor_with(x, w, &ParallelPolicy::serial())
 }
 
-/// Row-major SpMM, parallel over batch rows.
+/// Row-major SpMM, parallel per the policy's partition strategy.
 pub fn spmm_rowmajor_with(x: &Matrix, w: &CompressedNm, policy: &ParallelPolicy) -> Matrix {
     let mut y = Matrix::zeros(x.rows, w.rows);
     spmm_rowmajor_into(x, w, &mut y, policy);
@@ -58,49 +66,169 @@ pub fn spmm_rowmajor_with(x: &Matrix, w: &CompressedNm, policy: &ParallelPolicy)
 pub fn spmm_rowmajor_into(x: &Matrix, w: &CompressedNm, y: &mut Matrix, policy: &ParallelPolicy) {
     assert_eq!(x.cols, w.cols, "spmm: x cols must equal dense weight cols");
     assert_eq!((y.rows, y.cols), (x.rows, w.rows), "spmm output shape");
-    parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
-        spmm_rowmajor_rows(x, w, range, chunk);
-    });
+    match policy.resolve(x.rows, w.rows) {
+        Partition::Serial => spmm_rowmajor_rows(x, w, 0..x.rows, &mut y.data),
+        Partition::Rows(_) => {
+            parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
+                spmm_rowmajor_rows(x, w, range, chunk);
+            });
+        }
+        Partition::Cols(tasks) => {
+            let out = StripedOut::new(&mut y.data, w.rows);
+            parallel_over_col_stripes(tasks, w.rows, |stripe| {
+                for b in 0..x.rows {
+                    // SAFETY: this task's stripe is disjoint from every
+                    // other task's (pool partition contract).
+                    let dst = unsafe { out.row_stripe(b, stripe.clone()) };
+                    spmm_row_block(x.row(b), w, stripe.clone(), dst);
+                }
+            });
+        }
+    }
 }
 
 fn spmm_rowmajor_rows(x: &Matrix, w: &CompressedNm, range: Range<usize>, out: &mut [f32]) {
+    for (local, b) in range.enumerate() {
+        let yrow = &mut out[local * w.rows..(local + 1) * w.rows];
+        spmm_row_block(x.row(b), w, 0..w.rows, yrow);
+    }
+}
+
+/// Compute one batch row's outputs for weight rows `orange`, written to
+/// `out` (`orange.len()` long).  Dispatches to the table-driven 2:4 block
+/// or the generic packed-decode block; both accumulate each output in
+/// group-ascending order, so every element is bit-identical to
+/// [`sparse_dot_scalar`] regardless of path or partition.
+#[inline]
+fn spmm_row_block(xrow: &[f32], w: &CompressedNm, orange: Range<usize>, out: &mut [f32]) {
+    if w.scheme.n == 2 && w.scheme.m == 4 {
+        spmm_row_block24(xrow, w, orange, out);
+    } else {
+        spmm_row_block_generic(xrow, w, orange, out);
+    }
+}
+
+fn spmm_row_block_generic(xrow: &[f32], w: &CompressedNm, orange: Range<usize>, out: &mut [f32]) {
     let kc = w.kcols();
     let rmb = w.row_meta_bytes();
     let (n, m) = (w.scheme.n, w.scheme.m);
     let bits = w.scheme.offset_bits();
     let groups = if n == 0 { 0 } else { kc / n };
-    let quads = w.rows / 4 * 4;
-    for (local, b) in range.enumerate() {
-        let xrow = x.row(b);
-        let yrow = &mut out[local * w.rows..(local + 1) * w.rows];
-        let mut o = 0;
-        while o < quads {
-            let v = &w.values[o * kc..(o + 4) * kc];
-            let (v0, v1, v2, v3) = (&v[..kc], &v[kc..2 * kc], &v[2 * kc..3 * kc], &v[3 * kc..]);
-            let mt = &w.meta[o * rmb..(o + 4) * rmb];
-            let (m0, m1, m2, m3) =
-                (&mt[..rmb], &mt[rmb..2 * rmb], &mt[2 * rmb..3 * rmb], &mt[3 * rmb..]);
-            let mut acc = [0.0f32; 4];
-            let mut k = 0;
-            let mut base = 0;
-            for _ in 0..groups {
-                for j in 0..n {
-                    acc[0] += xrow[base + unpack_offset(m0, k + j, bits)] * v0[k + j];
-                    acc[1] += xrow[base + unpack_offset(m1, k + j, bits)] * v1[k + j];
-                    acc[2] += xrow[base + unpack_offset(m2, k + j, bits)] * v2[k + j];
-                    acc[3] += xrow[base + unpack_offset(m3, k + j, bits)] * v3[k + j];
-                }
-                k += n;
-                base += m;
+    let len = orange.len();
+    let quads = len / 4 * 4;
+    let mut i = 0;
+    while i < quads {
+        let o = orange.start + i;
+        let v = &w.values[o * kc..(o + 4) * kc];
+        let (v0, v1, v2, v3) = (&v[..kc], &v[kc..2 * kc], &v[2 * kc..3 * kc], &v[3 * kc..]);
+        let mt = &w.meta[o * rmb..(o + 4) * rmb];
+        let (m0, m1, m2, m3) =
+            (&mt[..rmb], &mt[rmb..2 * rmb], &mt[2 * rmb..3 * rmb], &mt[3 * rmb..]);
+        let mut acc = [0.0f32; 4];
+        let mut k = 0;
+        let mut base = 0;
+        for _ in 0..groups {
+            for j in 0..n {
+                acc[0] += xrow[base + unpack_offset(m0, k + j, bits)] * v0[k + j];
+                acc[1] += xrow[base + unpack_offset(m1, k + j, bits)] * v1[k + j];
+                acc[2] += xrow[base + unpack_offset(m2, k + j, bits)] * v2[k + j];
+                acc[3] += xrow[base + unpack_offset(m3, k + j, bits)] * v3[k + j];
             }
-            yrow[o..o + 4].copy_from_slice(&acc);
-            o += 4;
+            k += n;
+            base += m;
         }
-        for o in quads..w.rows {
-            let vals = &w.values[o * kc..(o + 1) * kc];
-            let meta = &w.meta[o * rmb..(o + 1) * rmb];
-            yrow[o] = sparse_dot(xrow, vals, meta, n, m, bits);
+        out[i..i + 4].copy_from_slice(&acc);
+        i += 4;
+    }
+    for i in quads..len {
+        let o = orange.start + i;
+        let vals = &w.values[o * kc..(o + 1) * kc];
+        let meta = &w.meta[o * rmb..(o + 1) * rmb];
+        out[i] = sparse_dot_scalar(xrow, vals, meta, n, m, bits);
+    }
+}
+
+/// 256-entry whole-byte decode table for 2:4 metadata: byte → four 2-bit
+/// intra-group offsets, LSB-first (offsets `k, k+1` of one group in the
+/// low nibble, `k+2, k+3` of the next group in the high nibble).
+const DECODE24: [[u8; 4]; 256] = build_decode24();
+
+const fn build_decode24() -> [[u8; 4]; 256] {
+    let mut t = [[0u8; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = [(b & 3) as u8, ((b >> 2) & 3) as u8, ((b >> 4) & 3) as u8, ((b >> 6) & 3) as u8];
+        b += 1;
+    }
+    t
+}
+
+/// 2:4 specialization of the four-row block: one table lookup decodes a
+/// whole metadata byte (two groups, four kept values) per weight row.
+fn spmm_row_block24(xrow: &[f32], w: &CompressedNm, orange: Range<usize>, out: &mut [f32]) {
+    let kc = w.kcols();
+    let rmb = w.row_meta_bytes();
+    let pairs = kc / 4; // full metadata bytes per row (2 groups each)
+    let len = orange.len();
+    let quads = len / 4 * 4;
+    let mut i = 0;
+    while i < quads {
+        let o = orange.start + i;
+        let v = &w.values[o * kc..(o + 4) * kc];
+        let (v0, v1, v2, v3) = (&v[..kc], &v[kc..2 * kc], &v[2 * kc..3 * kc], &v[3 * kc..]);
+        let mt = &w.meta[o * rmb..(o + 4) * rmb];
+        let (m0, m1, m2, m3) =
+            (&mt[..rmb], &mt[rmb..2 * rmb], &mt[2 * rmb..3 * rmb], &mt[3 * rmb..]);
+        let mut acc = [0.0f32; 4];
+        let mut k = 0;
+        let mut base = 0;
+        for byte in 0..pairs {
+            let d0 = DECODE24[m0[byte] as usize];
+            let d1 = DECODE24[m1[byte] as usize];
+            let d2 = DECODE24[m2[byte] as usize];
+            let d3 = DECODE24[m3[byte] as usize];
+            acc[0] += xrow[base + d0[0] as usize] * v0[k];
+            acc[0] += xrow[base + d0[1] as usize] * v0[k + 1];
+            acc[0] += xrow[base + 4 + d0[2] as usize] * v0[k + 2];
+            acc[0] += xrow[base + 4 + d0[3] as usize] * v0[k + 3];
+            acc[1] += xrow[base + d1[0] as usize] * v1[k];
+            acc[1] += xrow[base + d1[1] as usize] * v1[k + 1];
+            acc[1] += xrow[base + 4 + d1[2] as usize] * v1[k + 2];
+            acc[1] += xrow[base + 4 + d1[3] as usize] * v1[k + 3];
+            acc[2] += xrow[base + d2[0] as usize] * v2[k];
+            acc[2] += xrow[base + d2[1] as usize] * v2[k + 1];
+            acc[2] += xrow[base + 4 + d2[2] as usize] * v2[k + 2];
+            acc[2] += xrow[base + 4 + d2[3] as usize] * v2[k + 3];
+            acc[3] += xrow[base + d3[0] as usize] * v3[k];
+            acc[3] += xrow[base + d3[1] as usize] * v3[k + 1];
+            acc[3] += xrow[base + 4 + d3[2] as usize] * v3[k + 2];
+            acc[3] += xrow[base + 4 + d3[3] as usize] * v3[k + 3];
+            k += 4;
+            base += 8;
         }
+        if k < kc {
+            // Odd group count: the last byte's low nibble holds one group.
+            let d0 = DECODE24[m0[pairs] as usize];
+            let d1 = DECODE24[m1[pairs] as usize];
+            let d2 = DECODE24[m2[pairs] as usize];
+            let d3 = DECODE24[m3[pairs] as usize];
+            acc[0] += xrow[base + d0[0] as usize] * v0[k];
+            acc[0] += xrow[base + d0[1] as usize] * v0[k + 1];
+            acc[1] += xrow[base + d1[0] as usize] * v1[k];
+            acc[1] += xrow[base + d1[1] as usize] * v1[k + 1];
+            acc[2] += xrow[base + d2[0] as usize] * v2[k];
+            acc[2] += xrow[base + d2[1] as usize] * v2[k + 1];
+            acc[3] += xrow[base + d3[0] as usize] * v3[k];
+            acc[3] += xrow[base + d3[1] as usize] * v3[k + 1];
+        }
+        out[i..i + 4].copy_from_slice(&acc);
+        i += 4;
+    }
+    for i in quads..len {
+        let o = orange.start + i;
+        let vals = &w.values[o * kc..(o + 1) * kc];
+        let meta = &w.meta[o * rmb..(o + 1) * rmb];
+        out[i] = sparse_dot24(xrow, vals, meta);
     }
 }
 
@@ -111,7 +239,7 @@ pub fn spmm_tiled(x: &Matrix, w: &CompressedNm, tile: usize) -> Matrix {
     spmm_tiled_with(x, w, tile, &ParallelPolicy::serial())
 }
 
-/// Tiled SpMM, parallel over batch rows.
+/// Tiled SpMM, parallel per the policy's partition strategy.
 pub fn spmm_tiled_with(x: &Matrix, w: &CompressedNm, tile: usize,
                        policy: &ParallelPolicy) -> Matrix {
     let mut y = Matrix::zeros(x.rows, w.rows);
@@ -122,17 +250,29 @@ pub fn spmm_tiled_with(x: &Matrix, w: &CompressedNm, tile: usize,
 /// Tiled SpMM into a caller-owned output: process `tile × tile` output
 /// blocks so the active slice of `X` stays cache-resident while a block
 /// of weight rows streams through — the CPU analogue of splitting the
-/// upsample weight into square sub-matrices for cuSPARSELt.  Each worker
-/// tiles its own batch-row range; since every output element is an
-/// independent `sparse_dot`, the traversal order never changes values.
+/// upsample weight into square sub-matrices for cuSPARSELt.  Workers tile
+/// their own batch-row range (row split) or column stripe (column split);
+/// since every output element is an independent `sparse_dot`, the
+/// traversal order never changes values.
 pub fn spmm_tiled_into(x: &Matrix, w: &CompressedNm, tile: usize, y: &mut Matrix,
                        policy: &ParallelPolicy) {
     assert_eq!(x.cols, w.cols);
     assert_eq!((y.rows, y.cols), (x.rows, w.rows), "spmm output shape");
     assert!(tile > 0);
-    parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
-        spmm_tiled_rows(x, w, tile, range, chunk);
-    });
+    match policy.resolve(x.rows, w.rows) {
+        Partition::Serial => spmm_tiled_rows(x, w, tile, 0..x.rows, &mut y.data),
+        Partition::Rows(_) => {
+            parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
+                spmm_tiled_rows(x, w, tile, range, chunk);
+            });
+        }
+        Partition::Cols(tasks) => {
+            let out = StripedOut::new(&mut y.data, w.rows);
+            parallel_over_col_stripes(tasks, w.rows, |stripe| {
+                spmm_tiled_cols(x, w, tile, stripe, &out);
+            });
+        }
+    }
 }
 
 fn spmm_tiled_rows(x: &Matrix, w: &CompressedNm, tile: usize, range: Range<usize>,
@@ -159,13 +299,54 @@ fn spmm_tiled_rows(x: &Matrix, w: &CompressedNm, tile: usize, range: Range<usize
     }
 }
 
-/// Gather-dot over one compressed weight row: group-ascending traversal,
-/// decoding the packed intra-group offset inline (`group·M + offset`).
-/// All loads are ordinary bounds-checked slice indexing — safe rust, no
-/// `unsafe` fast path; offsets are `< M` by construction at compress
-/// time, so `base + offset` always lands inside `xrow`.
+/// Column-striped tiled traversal: tile batch rows against this task's
+/// stripe of weight rows, writing only inside the stripe.
+fn spmm_tiled_cols(x: &Matrix, w: &CompressedNm, tile: usize, stripe: Range<usize>,
+                   out: &StripedOut) {
+    let kc = w.kcols();
+    let rmb = w.row_meta_bytes();
+    let (n, m) = (w.scheme.n, w.scheme.m);
+    let bits = w.scheme.offset_bits();
+    for bt in (0..x.rows).step_by(tile) {
+        let bend = (bt + tile).min(x.rows);
+        for ot in (stripe.start..stripe.end).step_by(tile) {
+            let oend = (ot + tile).min(stripe.end);
+            for b in bt..bend {
+                let xrow = x.row(b);
+                // SAFETY: ot..oend lies inside this task's stripe.
+                let dst = unsafe { out.row_stripe(b, ot..oend) };
+                for (local, o) in (ot..oend).enumerate() {
+                    let vals = &w.values[o * kc..(o + 1) * kc];
+                    let meta = &w.meta[o * rmb..(o + 1) * rmb];
+                    dst[local] = sparse_dot(xrow, vals, meta, n, m, bits);
+                }
+            }
+        }
+    }
+}
+
+/// Gather-dot over one compressed weight row, dispatching to the
+/// table-driven whole-byte decode for 2:4 and the scalar packed decode
+/// otherwise.  Both paths accumulate in group-ascending order, so the
+/// result is bit-identical to [`sparse_dot_scalar`] for every scheme —
+/// the property the `parallel_and_packed` suite pins.
 #[inline]
-fn sparse_dot(xrow: &[f32], vals: &[f32], meta: &[u8], n: usize, m: usize, bits: u32) -> f32 {
+pub fn sparse_dot(xrow: &[f32], vals: &[f32], meta: &[u8], n: usize, m: usize, bits: u32) -> f32 {
+    if n == 2 && m == 4 {
+        sparse_dot24(xrow, vals, meta)
+    } else {
+        sparse_dot_scalar(xrow, vals, meta, n, m, bits)
+    }
+}
+
+/// Reference gather-dot: group-ascending traversal decoding each packed
+/// intra-group offset individually (`group·M + offset`).  All loads are
+/// ordinary bounds-checked slice indexing — safe rust, no `unsafe` fast
+/// path; offsets are `< M` by construction at compress time, so
+/// `base + offset` always lands inside `xrow`.
+#[inline]
+pub fn sparse_dot_scalar(xrow: &[f32], vals: &[f32], meta: &[u8], n: usize, m: usize,
+                         bits: u32) -> f32 {
     let kc = vals.len();
     let groups = if n == 0 { 0 } else { kc / n };
     let mut s = 0.0f32;
@@ -181,10 +362,37 @@ fn sparse_dot(xrow: &[f32], vals: &[f32], meta: &[u8], n: usize, m: usize, bits:
     s
 }
 
+/// 2:4 gather-dot decoding whole metadata bytes through the LUT; add
+/// order matches [`sparse_dot_scalar`] exactly (k-ascending).
+#[inline]
+fn sparse_dot24(xrow: &[f32], vals: &[f32], meta: &[u8]) -> f32 {
+    let kc = vals.len();
+    let pairs = kc / 4;
+    let mut s = 0.0f32;
+    let mut k = 0;
+    let mut base = 0;
+    for byte in 0..pairs {
+        let d = DECODE24[meta[byte] as usize];
+        s += xrow[base + d[0] as usize] * vals[k];
+        s += xrow[base + d[1] as usize] * vals[k + 1];
+        s += xrow[base + 4 + d[2] as usize] * vals[k + 2];
+        s += xrow[base + 4 + d[3] as usize] * vals[k + 3];
+        k += 4;
+        base += 8;
+    }
+    if k < kc {
+        let d = DECODE24[meta[pairs] as usize];
+        s += xrow[base + d[0] as usize] * vals[k];
+        s += xrow[base + d[1] as usize] * vals[k + 1];
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::gemm_nt;
+    use crate::backend::pool::PartitionStrategy;
     use crate::sparsity::{random_row_mask, NmScheme};
     use crate::util::Rng;
 
@@ -226,9 +434,58 @@ mod tests {
         let serial = spmm_rowmajor(&x, &c);
         let serial_t = spmm_tiled(&x, &c, 8);
         for threads in [2usize, 4, 7] {
-            let p = ParallelPolicy { threads, min_rows_per_task: 1 };
+            for strategy in
+                [PartitionStrategy::Auto, PartitionStrategy::Rows, PartitionStrategy::Cols]
+            {
+                let p = ParallelPolicy { threads, min_rows_per_task: 1, partition: strategy };
+                assert_eq!(spmm_rowmajor_with(&x, &c, &p), serial, "t={threads} {strategy:?}");
+                assert_eq!(spmm_tiled_with(&x, &c, 8, &p), serial_t,
+                           "tiled t={threads} {strategy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_one_col_partition_matches_serial() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = Matrix::randn(1, 64, 1.0, &mut rng); // the serving shape
+        let w = Matrix::randn(53, 64, 1.0, &mut rng);
+        let mask = random_row_mask(53, 64, NmScheme::TWO_FOUR, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let serial = spmm_rowmajor(&x, &c);
+        for threads in [2usize, 4, 7] {
+            let p = ParallelPolicy {
+                threads,
+                min_rows_per_task: 1,
+                partition: PartitionStrategy::Auto,
+            };
+            // Auto must pick the column split here (batch row split is a
+            // single task) and still match serial exactly.
+            assert_eq!(p.resolve(x.rows, w.rows), Partition::Cols(threads.min(53 / 8)));
             assert_eq!(spmm_rowmajor_with(&x, &c, &p), serial, "t={threads}");
-            assert_eq!(spmm_tiled_with(&x, &c, 8, &p), serial_t, "tiled t={threads}");
+            assert_eq!(spmm_tiled_with(&x, &c, 8, &p), spmm_tiled(&x, &c, 8), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn byte_decode_matches_scalar_decode() {
+        let mut rng = Rng::seed_from_u64(4);
+        for cols in [8usize, 16, 20, 64] {
+            // 20 cols ⇒ 5 groups: exercises the odd-group tail byte.
+            let s = NmScheme::TWO_FOUR;
+            let x = Matrix::randn(1, cols, 1.0, &mut rng);
+            let w = Matrix::randn(9, cols, 1.0, &mut rng);
+            let mask = random_row_mask(9, cols, s, &mut rng);
+            let c = CompressedNm::compress(&w, &mask, s);
+            let kc = c.kcols();
+            let rmb = c.row_meta_bytes();
+            for o in 0..c.rows {
+                let vals = &c.values[o * kc..(o + 1) * kc];
+                let meta = &c.meta[o * rmb..(o + 1) * rmb];
+                let fast = sparse_dot(x.row(0), vals, meta, s.n, s.m, s.offset_bits());
+                let scalar = sparse_dot_scalar(x.row(0), vals, meta, s.n, s.m, s.offset_bits());
+                assert_eq!(fast.to_bits(), scalar.to_bits(), "cols={cols} row={o}");
+            }
         }
     }
 }

@@ -5,16 +5,26 @@
 //! ```text
 //!   magic   "SLPE" u32-version
 //!   count   u32
-//!   repeat: name_len u32 | name bytes | dtype u8 (0=f32, 1=i32)
+//!   repeat: name_len u32 | name bytes | dtype u8 (0=f32, 1=i32, 2=u8)
 //!           ndims u32 | dims u64×ndims | raw data
 //! ```
+//!
+//! Version 2 adds the `u8` dtype (tag 2), used to ship the Eq.-7
+//! bit-packed metadata plane of compressed weights: a
+//! [`CompressedNm`] serializes as three records —
+//! `<name>.values` (f32 `[rows, kcols]`), `<name>.meta` (u8
+//! `[rows, row_meta_bytes]`, the byte layout `python/compile/sparsity.py`
+//! mirrors), and `<name>.scheme` (i32 `[n, m, rows, cols]`) — via
+//! [`save_packed_weights`] / [`load_packed_weights`].  Version-1 files
+//! load unchanged.
 
 use crate::runtime::Store;
+use crate::sparsity::{CompressedNm, NmScheme};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SLPE";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Save every store tensor whose name starts with one of `prefixes`.
 pub fn save(store: &Store, prefixes: &[&str], path: &Path) -> crate::Result<usize> {
@@ -71,7 +81,7 @@ pub fn load(store: &mut Store, path: &Path) -> crate::Result<usize> {
         return Err(crate::eyre!("not a slope checkpoint: {}", path.display()));
     }
     let version = read_u32(&mut f)?;
-    if version != VERSION {
+    if version == 0 || version > VERSION {
         return Err(crate::eyre!("unsupported checkpoint version {version}"));
     }
     let count = read_u32(&mut f)? as usize;
@@ -121,9 +131,165 @@ fn read_u32<R: Read>(r: &mut R) -> crate::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+// ---- packed compressed-weight planes (version 2) ----------------------
+
+fn write_record_header<W: Write>(f: &mut W, name: &str, dtype: u8,
+                                 dims: &[u64]) -> crate::Result<()> {
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name.as_bytes())?;
+    f.write_all(&[dtype])?;
+    f.write_all(&(dims.len() as u32).to_le_bytes())?;
+    for d in dims {
+        f.write_all(&d.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Save compressed weights with their bit-packed metadata plane — the
+/// artifact-shipping path for the Eq.-7 layout (values f32, offsets u8,
+/// scheme/shape i32).  Names must be unique.
+pub fn save_packed_weights(planes: &[(&str, &CompressedNm)], path: &Path) -> crate::Result<usize> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&((planes.len() * 3) as u32).to_le_bytes())?;
+    for (name, c) in planes {
+        write_record_header(&mut f, &format!("{name}.values"), 0,
+                            &[c.rows as u64, c.kcols() as u64])?;
+        for v in &c.values {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        write_record_header(&mut f, &format!("{name}.meta"), 2,
+                            &[c.rows as u64, c.row_meta_bytes() as u64])?;
+        f.write_all(&c.meta)?;
+        write_record_header(&mut f, &format!("{name}.scheme"), 1, &[4])?;
+        for v in [c.scheme.n as i32, c.scheme.m as i32, c.rows as i32, c.cols as i32] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(planes.len())
+}
+
+/// Load compressed weights saved by [`save_packed_weights`], rebuilding
+/// each [`CompressedNm`] (values + packed metadata plane) by name.
+pub fn load_packed_weights(path: &Path) -> crate::Result<Vec<(String, CompressedNm)>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(crate::eyre!("not a slope checkpoint: {}", path.display()));
+    }
+    let version = read_u32(&mut f)?;
+    if version < 2 || version > VERSION {
+        return Err(crate::eyre!("packed planes need checkpoint version ≥ 2, got {version}"));
+    }
+    let count = read_u32(&mut f)? as usize;
+    // Collect raw records, then assemble by prefix.
+    let mut values: Vec<(String, Vec<f32>)> = vec![];
+    let mut metas: Vec<(String, Vec<u8>)> = vec![];
+    let mut schemes: Vec<(String, Vec<i32>)> = vec![];
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|e| crate::eyre!("{e}"))?;
+        let mut dtype = [0u8; 1];
+        f.read_exact(&mut dtype)?;
+        let ndims = read_u32(&mut f)? as usize;
+        let mut n = 1usize;
+        for _ in 0..ndims {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            n *= u64::from_le_bytes(b) as usize;
+        }
+        match (dtype[0], name.rsplit_once('.')) {
+            (0, Some((prefix, "values"))) => {
+                let mut data = vec![0f32; n];
+                let mut b = [0u8; 4];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut b)?;
+                    *v = f32::from_le_bytes(b);
+                }
+                values.push((prefix.to_string(), data));
+            }
+            (2, Some((prefix, "meta"))) => {
+                let mut data = vec![0u8; n];
+                f.read_exact(&mut data)?;
+                metas.push((prefix.to_string(), data));
+            }
+            (1, Some((prefix, "scheme"))) => {
+                let mut data = vec![0i32; n];
+                let mut b = [0u8; 4];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut b)?;
+                    *v = i32::from_le_bytes(b);
+                }
+                schemes.push((prefix.to_string(), data));
+            }
+            (d, _) => return Err(crate::eyre!("unexpected packed record {name:?} dtype {d}")),
+        }
+    }
+    let mut out = Vec::with_capacity(schemes.len());
+    for (prefix, s) in schemes {
+        crate::ensure!(s.len() == 4, "malformed scheme record for {prefix:?}");
+        let (n, m, rows, cols) =
+            (s[0] as usize, s[1] as usize, s[2] as usize, s[3] as usize);
+        crate::ensure!(n >= 1 && n <= m && m <= 256 && cols % m == 0,
+                       "invalid {n}:{m} scheme for {prefix:?}");
+        let vals = values
+            .iter()
+            .find(|(p, _)| *p == prefix)
+            .ok_or_else(|| crate::eyre!("missing values plane for {prefix:?}"))?;
+        let meta = metas
+            .iter()
+            .find(|(p, _)| *p == prefix)
+            .ok_or_else(|| crate::eyre!("missing meta plane for {prefix:?}"))?;
+        let c = CompressedNm {
+            rows,
+            cols,
+            scheme: NmScheme::new(n, m),
+            values: vals.1.clone(),
+            meta: meta.1.clone(),
+        };
+        crate::ensure!(
+            c.values.len() == rows * c.kcols() && c.meta.len() == rows * c.row_meta_bytes(),
+            "inconsistent packed planes for {prefix:?}"
+        );
+        out.push((prefix, c));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparsity::random_row_mask;
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn packed_weights_roundtrip_with_metadata_plane() {
+        let mut rng = Rng::seed_from_u64(9);
+        let mut planes = vec![];
+        for (name, (n, m), rows, cols) in [("blocks.0.wq", (2usize, 4usize), 8usize, 16usize),
+                                           ("blocks.0.wup", (2, 8), 4, 24)] {
+            let s = NmScheme::new(n, m);
+            let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+            let mask = random_row_mask(rows, cols, s, &mut rng);
+            planes.push((name, CompressedNm::compress(&w, &mask, s)));
+        }
+        let tmp = std::env::temp_dir().join("slope_packed_ckpt_test.slopeckpt");
+        let refs: Vec<(&str, &CompressedNm)> =
+            planes.iter().map(|(n, c)| (*n, c)).collect();
+        assert_eq!(save_packed_weights(&refs, &tmp).unwrap(), 2);
+        let back = load_packed_weights(&tmp).unwrap();
+        assert_eq!(back.len(), 2);
+        for (name, c) in &planes {
+            let (_, got) = back.iter().find(|(n, _)| n == name).unwrap();
+            assert_eq!(got, c, "{name}: values AND packed metadata must round-trip");
+        }
+        std::fs::remove_file(tmp).ok();
+    }
 
     #[test]
     fn roundtrip() {

@@ -14,6 +14,8 @@
 //! * [`perfmodel`] / [`memmodel`] — the calibrated A100 analytical
 //!   simulator and the bit-exact memory accounting that regenerate the
 //!   paper's speedup/memory tables.
+//! * [`serve`]       — the serving subsystem: coalescing batcher, warm
+//!   sparse+LoRA layer engine, latency/throughput stats (`slope serve`).
 //! * [`data`] / [`eval`] — synthetic pretraining corpus and evaluation.
 //! * [`util`]        — offline substrates (PRNG, JSON, bench harness,
 //!   property testing); see DESIGN.md §2.
@@ -27,6 +29,7 @@ pub mod exps;
 pub mod memmodel;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod tensor;
 pub mod util;

@@ -9,6 +9,7 @@
 //! slope list                                                  # available artifact configs
 //! ```
 
+use slope::backend::{ParallelPolicy, PartitionStrategy};
 use slope::config::{Fig9Variant, Method, RunConfig};
 use slope::coordinator::Trainer;
 use slope::exps::{self, ExpArgs};
@@ -23,13 +24,19 @@ slope — SLoPe (ICLR'25) rust coordinator
 USAGE:
   slope train [--model M] [--method METH] [--steps N] [--lazy-fraction F]
               [--eval-every N] [--seed S] [--artifacts DIR] [--out-dir DIR]
-              [--threads T]                    # kernel engine; 0 = auto
+              [--threads T] [--partition P]    # kernel engine; 0 = auto
+
+  slope serve [--layers L] [--d-model D] [--d-ff F] [--rank R]
+              [--requests N] [--max-batch B] [--max-wait-ms MS]
+              [--threads T] [--partition P] [--seed S]
+              # dynamic-batched sparse+LoRA serving on the kernel engine
 
   slope exp <ID> [--steps N] [--seed S] [--artifacts DIR] [--out-dir DIR]
   slope info [--model M] [--artifacts DIR]
   slope list [--artifacts DIR]
 
 METH: slope | dense | srste | srste-lora | wanda | fig9:<variant>
+P:    auto | rows | cols                       # kernel partition strategy
 ID:   table2|table3|table4|table5|table6|table7|table8|table9|table10|table12
       fig2|fig3a|fig3b|fig4|fig5|fig6|fig7|fig8|fig9|fig10|mem|all-perf
 ";
@@ -79,6 +86,15 @@ impl Flags {
     }
 }
 
+fn parse_partition(s: &str) -> slope::Result<PartitionStrategy> {
+    Ok(match s {
+        "auto" => PartitionStrategy::Auto,
+        "rows" => PartitionStrategy::Rows,
+        "cols" => PartitionStrategy::Cols,
+        other => return Err(slope::eyre!("unknown partition strategy {other:?}\n{USAGE}")),
+    })
+}
+
 fn parse_method(s: &str) -> slope::Result<Method> {
     Ok(match s {
         "slope" => Method::Slope,
@@ -117,16 +133,18 @@ fn main() -> slope::Result<()> {
                 seed: flags.usize("seed", 0)? as u64,
                 artifacts,
                 out_dir: out_dir.clone(),
-                parallel: slope::backend::ParallelPolicy::with_threads(
-                    flags.usize("threads", 0)?,
-                ),
+                parallel: ParallelPolicy::with_threads(flags.usize("threads", 0)?)
+                    .with_partition(parse_partition(&flags.get("partition", "auto"))?),
             };
             let mut t = Trainer::new(cfg)?;
-            // Refine the fork floor now that the manifest's width is known.
-            t.cfg.parallel = slope::backend::ParallelPolicy::for_width(
+            // Refine the fork floor now that the manifest's width is known
+            // (the partition strategy flag is preserved).
+            let partition = t.cfg.parallel.partition;
+            t.cfg.parallel = ParallelPolicy::for_width(
                 t.cfg.parallel.threads,
                 t.manifest.config.d_model,
-            );
+            )
+            .with_partition(partition);
             t.init()?;
             let outcome = t.train()?;
             let path = t.metrics.save(&out_dir)?;
@@ -137,6 +155,69 @@ fn main() -> slope::Result<()> {
             println!("mean step wall    : {:.1} ms", outcome.mean_step_ms);
             println!("coordinator ovhd  : {:.2}%", outcome.coordinator_overhead * 100.0);
             println!("metrics           : {}", path.display());
+        }
+        "serve" => {
+            use slope::serve::{BatchPolicy, LoraAdapter, ServeEngine, ServeLayer};
+            use slope::sparsity::{random_row_mask, NmScheme};
+            use slope::tensor::Matrix;
+            use slope::util::Rng;
+            use std::time::{Duration, Instant};
+
+            let n_layers = flags.usize("layers", 2)?;
+            let d_model = flags.usize("d-model", 256)?;
+            let d_ff = flags.usize("d-ff", 1024)?;
+            let rank = flags.usize("rank", 8)?;
+            let n_requests = flags.usize("requests", 256)?;
+            let max_batch = flags.usize("max-batch", 8)?;
+            let max_wait = Duration::from_secs_f64(flags.f64("max-wait-ms", 2.0)? / 1e3);
+            let threads = flags.usize("threads", 0)?;
+            let partition = parse_partition(&flags.get("partition", "auto"))?;
+            let seed = flags.usize("seed", 0)? as u64;
+
+            let policy =
+                ParallelPolicy::for_width(threads, d_model).with_partition(partition);
+            let mut rng = Rng::seed_from_u64(seed);
+            // Alternating d_model → d_ff → d_model … sparse+LoRA stack.
+            let mut layers = Vec::with_capacity(n_layers.max(1));
+            let mut d_in = d_model;
+            for i in 0..n_layers.max(1) {
+                let d_out = if i % 2 == 0 { d_ff } else { d_model };
+                let w = Matrix::randn(d_out, d_in, 1.0 / (d_in as f32).sqrt(), &mut rng);
+                let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
+                let be = slope::backend::SparseBackend::setup(
+                    &w, mask, NmScheme::TWO_FOUR, slope::backend::SpmmAlgo::RowMajor, policy,
+                );
+                let lora = (rank > 0).then(|| LoraAdapter {
+                    up: Matrix::randn(d_out, rank, 0.1, &mut rng),
+                    down: Matrix::randn(rank, d_in, 0.1, &mut rng),
+                });
+                layers.push(ServeLayer::new(be, lora)?);
+                d_in = d_out;
+            }
+            let mut eng = ServeEngine::new(layers, BatchPolicy::new(max_batch, max_wait))?;
+            println!(
+                "== slope serve: {n_layers} layers ({d_model}↔{d_ff}, 2:4, rank {rank}) — \
+                 max_batch {max_batch}, max_wait {:.1} ms, {} thr, {partition:?} ==",
+                max_wait.as_secs_f64() * 1e3,
+                policy.effective_threads(),
+            );
+            // Synthetic open-loop traffic: submit all requests, polling the
+            // engine after each so batches coalesce under real time.
+            let d_req = eng.d_in();
+            let start = Instant::now();
+            let mut done = 0usize;
+            for _ in 0..n_requests {
+                let input: Vec<f32> = (0..d_req).map(|_| rng.normal() as f32 * 0.5).collect();
+                eng.submit(input, start.elapsed())?;
+                done += eng.poll(start.elapsed()).len();
+            }
+            // End of stream: drain the tail without waiting out max_wait.
+            done += eng.flush(start.elapsed()).len();
+            let s = eng.stats().summary();
+            println!("served     : {done} requests in {} batches", s.batches);
+            println!("batch fill : {:.2} / {max_batch}", s.mean_batch_fill);
+            println!("latency    : p50 {:.3} ms   p95 {:.3} ms", s.p50_ms, s.p95_ms);
+            println!("throughput : {:.0} req/s", s.req_per_s);
         }
         "exp" => {
             let id = flags

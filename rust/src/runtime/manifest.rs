@@ -65,6 +65,20 @@ pub struct ModelConfig {
     pub n_params_dense: usize,
 }
 
+/// How artifact checkpoints encode the compressed-weight index plane —
+/// the Eq.-7 bit-packed layout shared bit-for-bit with
+/// [`crate::sparsity::CompressedNm`] (written by `python/compile/aot.py`;
+/// absent in pre-packing manifests).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SparsityFormat {
+    /// Layout identifier (currently `"eq7-packed-offsets-v1"`).
+    pub layout: String,
+    pub row_byte_aligned: bool,
+    /// `ceil(log2 M)` for the first-half / second-half schemes.
+    pub offset_bits_first_half: u32,
+    pub offset_bits_second_half: u32,
+}
+
 #[derive(Clone, Debug)]
 pub struct TrainParams {
     pub lr: f64,
@@ -79,6 +93,9 @@ pub struct TrainParams {
 pub struct Manifest {
     pub config: ModelConfig,
     pub train: TrainParams,
+    /// Packed-metadata layout descriptor (`None` for seed-era manifests
+    /// that predate artifact metadata-plane shipping).
+    pub sparsity_format: Option<SparsityFormat>,
     pub executables: HashMap<String, ExeSpec>,
     pub dir: PathBuf,
 }
@@ -122,6 +139,19 @@ impl Manifest {
             lazy_fraction: t.req_f64("lazy_fraction")?,
             srste_decay: t.req_f64("srste_decay")?,
         };
+        // Optional (newer manifests ship the packed-metadata descriptor).
+        let sparsity_format = j.get("sparsity_format").map(|sf| -> crate::Result<_> {
+            Ok(SparsityFormat {
+                layout: sf.req_str("layout")?.to_string(),
+                row_byte_aligned: sf.req_bool("row_byte_aligned")?,
+                offset_bits_first_half: sf.req_usize("offset_bits_first_half")? as u32,
+                offset_bits_second_half: sf.req_usize("offset_bits_second_half")? as u32,
+            })
+        });
+        let sparsity_format = match sparsity_format {
+            Some(r) => Some(r?),
+            None => None,
+        };
         let mut executables = HashMap::new();
         for (name, e) in j
             .req("executables")?
@@ -147,7 +177,7 @@ impl Manifest {
                 ExeSpec { file: e.req_str("file")?.to_string(), inputs, outputs },
             );
         }
-        Ok(Manifest { config, train, executables, dir: dir.to_path_buf() })
+        Ok(Manifest { config, train, sparsity_format, executables, dir: dir.to_path_buf() })
     }
 
     pub fn exe(&self, name: &str) -> crate::Result<&ExeSpec> {

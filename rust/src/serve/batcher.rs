@@ -1,0 +1,137 @@
+//! Coalescing request queue — the admission side of the serving engine.
+//!
+//! Requests arrive one at a time and are coalesced into forward batches
+//! under a [`BatchPolicy`]: dispatch as soon as `max_batch` requests are
+//! queued, or as soon as the *oldest* queued request has waited
+//! `max_wait` (the latency/throughput trade every dynamic batcher makes).
+//!
+//! Time is an explicit [`Duration`]-since-engine-start parameter rather
+//! than an internal clock read, so the policy logic is deterministic and
+//! testable with synthetic timelines; the CLI and example simply pass
+//! `start.elapsed()`.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Dispatch policy for the coalescing queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Maximum requests per forward (dispatch immediately at this fill).
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before a partial batch
+    /// is dispatched anyway.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        Self { max_batch, max_wait }
+    }
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One queued inference request: a single `d_in`-feature input row.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+    /// Engine-relative submission time.
+    pub submitted: Duration,
+}
+
+/// FIFO coalescing queue under a [`BatchPolicy`].
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, queue: VecDeque::new() }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Would a batch dispatch at time `now`?  True when the queue holds a
+    /// full `max_batch`, or when the oldest request has waited `max_wait`.
+    pub fn ready(&self, now: Duration) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(oldest) => now.saturating_sub(oldest.submitted) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop the next batch (up to `max_batch` requests, FIFO).  Callers
+    /// gate on [`Batcher::ready`]; `take_batch` itself just drains.
+    pub fn take_batch(&mut self) -> Vec<Request> {
+        let k = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, at_ms: u64) -> Request {
+        Request { id, input: vec![0.0; 4], submitted: Duration::from_millis(at_ms) }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut b = Batcher::new(BatchPolicy::new(3, Duration::from_millis(100)));
+        b.push(req(0, 0));
+        b.push(req(1, 0));
+        assert!(!b.ready(Duration::from_millis(1)), "2 of 3 and wait not exceeded");
+        b.push(req(2, 1));
+        assert!(b.ready(Duration::from_millis(1)), "full batch is ready at once");
+        let batch = b.take_batch();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn max_wait_flushes_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy::new(8, Duration::from_millis(10)));
+        b.push(req(7, 5));
+        assert!(!b.ready(Duration::from_millis(14)), "9 ms wait < 10 ms max_wait");
+        assert!(b.ready(Duration::from_millis(15)), "10 ms wait hits max_wait");
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn overfull_queue_dispatches_in_policy_sized_chunks() {
+        let mut b = Batcher::new(BatchPolicy::new(2, Duration::from_millis(1)));
+        for i in 0..5 {
+            b.push(req(i, 0));
+        }
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.take_batch().len(), 1);
+        assert!(!b.ready(Duration::from_millis(999)), "empty queue is never ready");
+    }
+}

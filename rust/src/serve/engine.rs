@@ -1,0 +1,358 @@
+//! The serving engine: warm sparse layers + coalescing batcher + stats.
+//!
+//! [`ServeEngine`] owns a stack of [`ServeLayer`]s — each a warm
+//! [`SparseBackend`] (compressed weight + workspace + kernel policy) with
+//! an optional fused LoRA adapter — and drives coalesced forward batches
+//! through them with zero steady-state allocations: the input staging
+//! matrix, every layer's activation buffer, and the LoRA rank staging are
+//! grown once at the first batch of a given fill and reused thereafter.
+//!
+//! The engine is clocked externally (`now` = [`Duration`] since engine
+//! start): [`ServeEngine::submit`] enqueues, [`ServeEngine::poll`]
+//! dispatches at most one batch when the [`Batcher`] says one is due, and
+//! [`ServeEngine::flush`] drains.  Latency = queue wait (virtual, from
+//! the caller's clock) + compute (measured).  The CLI (`slope serve`) and
+//! `examples/inference_serve.rs` drive it with `start.elapsed()`; tests
+//! drive it with synthetic timelines.
+
+use crate::backend::{ensure_out, lora_fused_seq, SparseBackend};
+use crate::serve::batcher::{BatchPolicy, Batcher, Request};
+use crate::serve::stats::ServeStats;
+use crate::tensor::Matrix;
+use std::time::{Duration, Instant};
+
+/// A LoRA adapter pair for one layer (Eq. 11): `L: (d_out, r)`,
+/// `R: (r, d_in)`.
+#[derive(Clone, Debug)]
+pub struct LoraAdapter {
+    pub up: Matrix,
+    pub down: Matrix,
+}
+
+/// One serving layer: a warm sparse weight and an optional adapter.
+pub struct ServeLayer {
+    pub backend: SparseBackend,
+    pub lora: Option<LoraAdapter>,
+    /// Rank staging for the fused LoRA path (grown once).
+    t: Matrix,
+}
+
+impl ServeLayer {
+    pub fn new(backend: SparseBackend, lora: Option<LoraAdapter>) -> crate::Result<Self> {
+        if let Some(l) = &lora {
+            crate::ensure!(
+                l.up.rows == backend.w.rows && l.down.cols == backend.w.cols
+                    && l.up.cols == l.down.rows,
+                "lora shapes (up {}x{}, down {}x{}) do not fit layer {}x{}",
+                l.up.rows, l.up.cols, l.down.rows, l.down.cols,
+                backend.w.rows, backend.w.cols
+            );
+        }
+        Ok(Self { backend, lora, t: Matrix::zeros(0, 0) })
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.backend.w.cols
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.backend.w.rows
+    }
+
+    /// `y = x · Wᵀ (+ x · Rᵀ · Lᵀ)` into a caller-owned output — the
+    /// Eq.-11 fused serving sequence ([`lora_fused_seq`], shared with the
+    /// backend workspace path) through reusable buffers.
+    fn forward_into(&mut self, x: &Matrix, y: &mut Matrix) {
+        match &self.lora {
+            Some(l) => lora_fused_seq(self.backend.algo, &self.backend.policy, &self.backend.w,
+                                      x, &l.up, &l.down, &mut self.t, y),
+            None => self.backend.forward_into(x, y),
+        }
+    }
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// Time spent coalescing in the queue.
+    pub queued: Duration,
+    /// Queue wait + batch compute.
+    pub latency: Duration,
+}
+
+/// The serving engine (see module docs).
+pub struct ServeEngine {
+    layers: Vec<ServeLayer>,
+    batcher: Batcher,
+    stats: ServeStats,
+    staging: Matrix,
+    /// Ping-pong activation buffers between layers.
+    bufs: [Matrix; 2],
+    next_id: u64,
+}
+
+impl ServeEngine {
+    /// Build an engine over a validated layer stack (each layer's `d_in`
+    /// must equal the previous layer's `d_out`).
+    pub fn new(layers: Vec<ServeLayer>, policy: BatchPolicy) -> crate::Result<Self> {
+        crate::ensure!(!layers.is_empty(), "serve engine needs at least one layer");
+        for pair in layers.windows(2) {
+            crate::ensure!(
+                pair[1].d_in() == pair[0].d_out(),
+                "layer dims do not chain: {} -> {}",
+                pair[0].d_out(),
+                pair[1].d_in()
+            );
+        }
+        Ok(Self {
+            layers,
+            batcher: Batcher::new(policy),
+            stats: ServeStats::default(),
+            staging: Matrix::zeros(0, 0),
+            bufs: [Matrix::zeros(0, 0), Matrix::zeros(0, 0)],
+            next_id: 0,
+        })
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.layers[0].d_in()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.layers[self.layers.len() - 1].d_out()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.len()
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Enqueue one request (`input` is a `d_in` feature row); returns its
+    /// id.  `now` is the caller's engine-relative clock.
+    pub fn submit(&mut self, input: Vec<f32>, now: Duration) -> crate::Result<u64> {
+        crate::ensure!(
+            input.len() == self.d_in(),
+            "request dim {} != engine d_in {}",
+            input.len(),
+            self.d_in()
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.batcher.push(Request { id, input, submitted: now });
+        Ok(id)
+    }
+
+    /// Dispatch at most one coalesced batch if the batcher says one is
+    /// due at `now`; returns the completed responses (empty when not yet
+    /// due).
+    pub fn poll(&mut self, now: Duration) -> Vec<Response> {
+        if !self.batcher.ready(now) {
+            return Vec::new();
+        }
+        let batch = self.batcher.take_batch();
+        self.forward_batch(batch, now)
+    }
+
+    /// Drain the queue regardless of policy (shutdown / end of stream).
+    pub fn flush(&mut self, now: Duration) -> Vec<Response> {
+        let mut out = Vec::new();
+        while !self.batcher.is_empty() {
+            let batch = self.batcher.take_batch();
+            out.extend(self.forward_batch(batch, now));
+        }
+        out
+    }
+
+    /// Run one coalesced forward.  Steady state (same fill as the
+    /// previous batch) performs no heap allocation inside the kernels:
+    /// staging and activation buffers are shape-checked and reused.
+    fn forward_batch(&mut self, batch: Vec<Request>, now: Duration) -> Vec<Response> {
+        let k = batch.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        let d_in = self.d_in();
+        ensure_out(&mut self.staging, k, d_in);
+        for (row, req) in batch.iter().enumerate() {
+            self.staging.row_mut(row).copy_from_slice(&req.input);
+        }
+        let t0 = Instant::now();
+        // Ping-pong through the layer stack: layer i reads bufs[i%2 ^ 1]
+        // (or staging for i == 0) and writes bufs[i%2].
+        for i in 0..self.layers.len() {
+            let (x, y): (&Matrix, &mut Matrix) = if i == 0 {
+                let [b0, _] = &mut self.bufs;
+                (&self.staging, b0)
+            } else if i % 2 == 1 {
+                let [b0, b1] = &mut self.bufs;
+                (b0, b1)
+            } else {
+                let [b0, b1] = &mut self.bufs;
+                (b1, b0)
+            };
+            self.layers[i].forward_into(x, y);
+        }
+        let compute = t0.elapsed();
+        let last = (self.layers.len() - 1) % 2;
+        let out = &self.bufs[last];
+        let responses: Vec<Response> = batch
+            .iter()
+            .enumerate()
+            .map(|(row, req)| {
+                let queued = now.saturating_sub(req.submitted);
+                Response {
+                    id: req.id,
+                    output: out.row(row).to_vec(),
+                    queued,
+                    latency: queued + compute,
+                }
+            })
+            .collect();
+        self.stats.record_batch(
+            now,
+            compute,
+            responses.iter().map(|r| r.latency),
+        );
+        responses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{gemm_nt, ParallelPolicy, SpmmAlgo};
+    use crate::sparsity::{random_row_mask, NmScheme};
+    use crate::util::Rng;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    fn layer(d_out: usize, d_in: usize, rank: usize, threads: usize,
+             rng: &mut Rng) -> ServeLayer {
+        let w = Matrix::randn(d_out, d_in, 1.0, rng);
+        let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, rng);
+        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor,
+                                      ParallelPolicy::with_threads(threads));
+        let lora = (rank > 0).then(|| LoraAdapter {
+            up: Matrix::randn(d_out, rank, 0.3, rng),
+            down: Matrix::randn(rank, d_in, 0.3, rng),
+        });
+        ServeLayer::new(be, lora).unwrap()
+    }
+
+    /// Dense reference for one layer: `x · (W masked)ᵀ + x·Rᵀ·Lᵀ`.
+    fn reference(layers: &[ServeLayer], x: &Matrix) -> Matrix {
+        let mut cur = x.clone();
+        for l in layers {
+            let mut y = gemm_nt(&cur, &l.backend.dense_weight());
+            if let Some(a) = &l.lora {
+                let t = gemm_nt(&cur, &a.down);
+                let y2 = gemm_nt(&t, &a.up);
+                for (o, v) in y.data.iter_mut().zip(&y2.data) {
+                    *o += v;
+                }
+            }
+            cur = y;
+        }
+        cur
+    }
+
+    #[test]
+    fn engine_output_matches_dense_reference() {
+        let mut rng = Rng::seed_from_u64(0);
+        let layers = vec![layer(24, 16, 4, 2, &mut rng), layer(16, 24, 0, 2, &mut rng)];
+        let x = Matrix::randn(3, 16, 1.0, &mut rng);
+        let want = reference(&layers, &x);
+        let mut eng =
+            ServeEngine::new(layers, BatchPolicy::new(3, Duration::from_millis(1))).unwrap();
+        for r in 0..3 {
+            eng.submit(x.row(r).to_vec(), Duration::ZERO).unwrap();
+        }
+        let resp = eng.poll(Duration::ZERO);
+        assert_eq!(resp.len(), 3, "full batch dispatches at once");
+        for (row, r) in resp.iter().enumerate() {
+            let got = Matrix::from_vec(1, want.cols, r.output.clone());
+            let wrow = Matrix::from_vec(1, want.cols, want.row(row).to_vec());
+            assert!(got.max_abs_diff(&wrow) < 1e-4, "row {row}");
+        }
+    }
+
+    #[test]
+    fn mismatched_dims_rejected() {
+        let mut rng = Rng::seed_from_u64(1);
+        let layers = vec![layer(24, 16, 0, 1, &mut rng), layer(16, 32, 0, 1, &mut rng)];
+        assert!(ServeEngine::new(layers, BatchPolicy::default()).is_err());
+        let mut eng = ServeEngine::new(vec![layer(8, 16, 0, 1, &mut rng)],
+                                       BatchPolicy::default())
+            .unwrap();
+        assert!(eng.submit(vec![0.0; 7], Duration::ZERO).is_err());
+    }
+
+    #[test]
+    fn coalescing_honors_max_batch_and_max_wait() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut eng = ServeEngine::new(vec![layer(8, 16, 0, 1, &mut rng)],
+                                       BatchPolicy::new(4, 10 * MS))
+            .unwrap();
+        // Three requests at t=0: not a full batch, wait below max_wait.
+        for _ in 0..3 {
+            eng.submit(vec![0.5; 16], Duration::ZERO).unwrap();
+        }
+        assert!(eng.poll(5 * MS).is_empty(), "partial batch below max_wait holds");
+        // Fourth request completes the batch: dispatch on the next poll.
+        eng.submit(vec![0.5; 16], 6 * MS).unwrap();
+        let r = eng.poll(6 * MS);
+        assert_eq!(r.len(), 4, "max_batch reached ⇒ immediate dispatch");
+        assert_eq!(r[0].queued, 6 * MS);
+        assert_eq!(r[3].queued, Duration::ZERO);
+        // Two stragglers: held until the oldest has waited max_wait.
+        eng.submit(vec![0.5; 16], 8 * MS).unwrap();
+        eng.submit(vec![0.5; 16], 9 * MS).unwrap();
+        assert!(eng.poll(17 * MS).is_empty(), "9 ms < max_wait");
+        let r = eng.poll(18 * MS);
+        assert_eq!(r.len(), 2, "max_wait exceeded ⇒ partial dispatch");
+        assert!(r[0].queued >= 10 * MS);
+        assert_eq!(eng.pending(), 0);
+        assert_eq!(eng.stats().served(), 6);
+    }
+
+    #[test]
+    fn steady_state_reuses_buffers() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut eng = ServeEngine::new(vec![layer(32, 16, 4, 2, &mut rng)],
+                                       BatchPolicy::new(2, MS))
+            .unwrap();
+        for _ in 0..2 {
+            eng.submit(vec![0.1; 16], Duration::ZERO).unwrap();
+        }
+        eng.poll(Duration::ZERO);
+        let staging_ptr = eng.staging.data.as_ptr();
+        let buf_ptr = eng.bufs[0].data.as_ptr();
+        for _ in 0..2 {
+            eng.submit(vec![0.2; 16], MS).unwrap();
+        }
+        eng.poll(MS);
+        assert_eq!(eng.staging.data.as_ptr(), staging_ptr, "staging must not realloc");
+        assert_eq!(eng.bufs[0].data.as_ptr(), buf_ptr, "activation buffer must not realloc");
+    }
+
+    #[test]
+    fn flush_drains_everything() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut eng = ServeEngine::new(vec![layer(8, 16, 0, 1, &mut rng)],
+                                       BatchPolicy::new(4, Duration::from_secs(1)))
+            .unwrap();
+        for _ in 0..10 {
+            eng.submit(vec![1.0; 16], Duration::ZERO).unwrap();
+        }
+        let r = eng.flush(MS);
+        assert_eq!(r.len(), 10);
+        assert_eq!(eng.pending(), 0);
+        let s = eng.stats().summary();
+        assert_eq!(s.batches, 3, "10 requests at max_batch 4 ⇒ 4+4+2");
+    }
+}

@@ -1,0 +1,27 @@
+//! `slope::serve` — the first-class serving subsystem.
+//!
+//! SLoPe's headline inference claim (Table 2: up to 1.54× end-to-end
+//! speedup) is a *serving* claim, so deployment gets a real subsystem
+//! rather than an ad-hoc loop in an example:
+//!
+//! * [`batcher`] — the coalescing request queue: dispatch at `max_batch`
+//!   fill or when the oldest request has waited `max_wait`;
+//! * [`engine`]  — [`ServeEngine`], owning warm [`crate::backend::SparseBackend`]s
+//!   (+ optional fused LoRA adapters) per layer and running coalesced
+//!   forwards with zero steady-state allocations;
+//! * [`stats`]   — p50/p95 latency, batch fill and throughput telemetry.
+//!
+//! The kernel engine underneath partitions a `batch = 1` forward across
+//! **output-column stripes** (see [`crate::backend::pool`]), so
+//! single-request latency-critical traffic scales with worker count too —
+//! the combination this subsystem exists to exercise.  Entry points:
+//! the `slope serve` CLI subcommand, `examples/inference_serve.rs`, and
+//! `benches/bench_serve.rs`.
+
+pub mod batcher;
+pub mod engine;
+pub mod stats;
+
+pub use batcher::{BatchPolicy, Batcher, Request};
+pub use engine::{LoraAdapter, Response, ServeEngine, ServeLayer};
+pub use stats::{ServeStats, StatsSummary};

@@ -1,0 +1,154 @@
+//! Serving telemetry: per-request latency quantiles, batch-fill, and
+//! throughput — the measured counterpart of the paper's Table-2
+//! inference-speedup claim, reported the way serving systems report it
+//! (p50/p95 + req/s) rather than as a single kernel median.
+
+use std::time::Duration;
+
+/// Latency samples retained for quantiles: a ring of the most recent
+/// requests, so a long-lived engine's stats stay O(window) in memory
+/// while counters (`served`, `batches`, throughput) remain exact.
+const LATENCY_WINDOW: usize = 1 << 16;
+
+/// Accumulated serving statistics (monotone; one per engine lifetime).
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Ring buffer of the last [`LATENCY_WINDOW`] request latencies (ms).
+    latencies_ms: Vec<f64>,
+    /// Next ring slot to overwrite once the window is full.
+    lat_next: usize,
+    batches: usize,
+    served: usize,
+    compute: Duration,
+    /// Engine-relative time of the first/last dispatch observed.
+    first_dispatch: Option<Duration>,
+    last_dispatch: Duration,
+}
+
+/// A point-in-time summary of [`ServeStats`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StatsSummary {
+    pub served: usize,
+    pub batches: usize,
+    /// Mean requests per dispatched batch.
+    pub mean_batch_fill: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// Requests per second over the dispatch span (compute-time based
+    /// when the span is degenerate, e.g. a single batch).
+    pub req_per_s: f64,
+}
+
+impl ServeStats {
+    /// Record one dispatched batch: its fill, the compute wall time, and
+    /// each request's end-to-end latency (queue wait + compute).
+    pub fn record_batch(&mut self, now: Duration, compute: Duration,
+                        latencies: impl IntoIterator<Item = Duration>) {
+        for l in latencies {
+            let ms = l.as_secs_f64() * 1e3;
+            if self.latencies_ms.len() < LATENCY_WINDOW {
+                self.latencies_ms.push(ms);
+            } else {
+                self.latencies_ms[self.lat_next] = ms;
+                self.lat_next = (self.lat_next + 1) % LATENCY_WINDOW;
+            }
+            self.served += 1;
+        }
+        self.batches += 1;
+        self.compute += compute;
+        self.first_dispatch.get_or_insert(now);
+        self.last_dispatch = self.last_dispatch.max(now + compute);
+    }
+
+    pub fn served(&self) -> usize {
+        self.served
+    }
+
+    /// Latency quantile in milliseconds over the retained window (`p` in
+    /// `[0, 1]`); 0 when empty.  Point query — [`ServeStats::summary`]
+    /// computes all quantiles from one sort.
+    pub fn quantile_ms(&self, p: f64) -> f64 {
+        let mut sorted = self.latencies_ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quantile_of_sorted(&sorted, p)
+    }
+
+    pub fn summary(&self) -> StatsSummary {
+        let span = match self.first_dispatch {
+            Some(first) => (self.last_dispatch.saturating_sub(first)).as_secs_f64(),
+            None => 0.0,
+        };
+        let wall = if span > 0.0 { span } else { self.compute.as_secs_f64() };
+        let mut sorted = self.latencies_ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        StatsSummary {
+            served: self.served,
+            batches: self.batches,
+            mean_batch_fill: if self.batches == 0 {
+                0.0
+            } else {
+                self.served as f64 / self.batches as f64
+            },
+            p50_ms: quantile_of_sorted(&sorted, 0.50),
+            p95_ms: quantile_of_sorted(&sorted, 0.95),
+            req_per_s: if wall > 0.0 { self.served as f64 / wall } else { 0.0 },
+        }
+    }
+}
+
+/// Lower-nearest quantile of an ascending slice; 0 when empty.
+fn quantile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn quantiles_and_fill() {
+        let mut s = ServeStats::default();
+        // Two batches: fills 4 and 2, latencies 1..=6 ms.
+        s.record_batch(10 * MS, 2 * MS, (1..=4).map(|i| i * MS));
+        s.record_batch(20 * MS, 2 * MS, (5..=6).map(|i| i * MS));
+        let sum = s.summary();
+        assert_eq!(sum.served, 6);
+        assert_eq!(sum.batches, 2);
+        assert!((sum.mean_batch_fill - 3.0).abs() < 1e-12);
+        assert!((sum.p50_ms - 3.0).abs() < 1e-9, "p50 of 1..6 ms = 3 (lower-nearest)");
+        assert!((sum.p95_ms - 5.0).abs() < 1e-9);
+        // Span: first dispatch 10 ms, last end 22 ms ⇒ 6 req / 12 ms.
+        assert!((sum.req_per_s - 500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_window_stays_bounded_but_counters_stay_exact() {
+        let mut s = ServeStats::default();
+        let n = LATENCY_WINDOW + 100;
+        s.record_batch(Duration::ZERO, MS, (0..n).map(|_| MS));
+        assert_eq!(s.served(), n, "served counts every request");
+        assert!(s.latencies_ms.len() <= LATENCY_WINDOW, "quantile window is bounded");
+        assert!((s.summary().p50_ms - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let sum = ServeStats::default().summary();
+        assert_eq!(sum.served, 0);
+        assert_eq!(sum.p50_ms, 0.0);
+        assert_eq!(sum.req_per_s, 0.0);
+    }
+
+    #[test]
+    fn single_batch_uses_compute_time_for_throughput() {
+        let mut s = ServeStats::default();
+        s.record_batch(Duration::ZERO, 4 * MS, [MS, MS]);
+        // Span = 0 + 4ms compute end... first=0, last=4ms ⇒ span 4 ms.
+        assert!((s.summary().req_per_s - 500.0).abs() < 1e-6);
+    }
+}

@@ -310,6 +310,27 @@ mod tests {
     }
 
     #[test]
+    fn golden_bytes_match_python_packed_layout() {
+        // Cross-language byte pin (python/tests/test_sparsity.py holds the
+        // mirror): 2:4 offsets [1, 3 | 0, 2] pack LSB-first to 0b10001101.
+        let mask = Mask { rows: 1, cols: 8,
+                          keep: vec![false, true, false, true, true, false, true, false] };
+        let w = Matrix::from_vec(1, 8, (1..=8).map(|v| v as f32).collect());
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        assert_eq!(c.meta, vec![0b1000_1101]);
+        // 2:8 (3-bit offsets, straddling a byte): offsets [5, 7 | 1, 6]
+        // → bytes [0b01111101, 0b00001100].
+        let mut keep = vec![false; 16];
+        for i in [5usize, 7, 8 + 1, 8 + 6] {
+            keep[i] = true;
+        }
+        let mask8 = Mask { rows: 1, cols: 16, keep };
+        let w8 = Matrix::from_vec(1, 16, (1..=16).map(|v| v as f32).collect());
+        let c8 = CompressedNm::compress(&w8, &mask8, NmScheme::new(2, 8));
+        assert_eq!(c8.meta, vec![0b0111_1101, 0b0000_1100]);
+    }
+
+    #[test]
     fn meta_plane_is_8x_smaller_than_u16_indices_for_2_4() {
         let mut rng = Rng::seed_from_u64(8);
         let w = Matrix::randn(64, 256, 1.0, &mut rng);

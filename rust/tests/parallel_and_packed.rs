@@ -9,9 +9,10 @@
 //!   the byte budget `memmodel::packed_metadata_bytes` predicts.
 
 use slope::backend::{gemm, gemm_nt, gemm_nt_acc, gemm_nt_acc_into, gemm_nt_with, gemm_tn,
-                     gemm_tn_with, gemm_with, lora_fused, lora_naive, spmm_rowmajor,
-                     spmm_rowmajor_with, spmm_tiled, spmm_tiled_with, ParallelPolicy,
-                     SparseBackend, SpmmAlgo};
+                     gemm_tn_with, gemm_with, lora_fused, lora_naive, sparse_dot,
+                     sparse_dot_scalar, spmm_rowmajor, spmm_rowmajor_with, spmm_tiled,
+                     spmm_tiled_with, ParallelPolicy, PartitionStrategy, SparseBackend,
+                     SpmmAlgo};
 use slope::memmodel::packed_metadata_bytes;
 use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
 use slope::tensor::Matrix;
@@ -22,7 +23,7 @@ const PACK_SCHEMES: [(usize, usize); 3] = [(1, 2), (2, 4), (2, 8)];
 
 /// Aggressive policy: forces real partitioning even at tiny row counts.
 fn policy(threads: usize) -> ParallelPolicy {
-    ParallelPolicy { threads, min_rows_per_task: 1 }
+    ParallelPolicy { threads, min_rows_per_task: 1, partition: PartitionStrategy::Auto }
 }
 
 #[test]
@@ -72,9 +73,38 @@ fn prop_parallel_spmm_bit_identical() {
         // Tiling only reorders independent elements ⇒ exact agreement.
         assert_eq!(want, want_tiled, "{s} tile={tile}");
         for t in THREADS {
-            let p = policy(t);
-            assert_eq!(spmm_rowmajor_with(&x, &c, &p), want, "{s} t={t}");
-            assert_eq!(spmm_tiled_with(&x, &c, tile, &p), want, "{s} tiled t={t}");
+            for strategy in
+                [PartitionStrategy::Auto, PartitionStrategy::Rows, PartitionStrategy::Cols]
+            {
+                let p = policy(t).with_partition(strategy);
+                assert_eq!(spmm_rowmajor_with(&x, &c, &p), want, "{s} t={t} {strategy:?}");
+                assert_eq!(spmm_tiled_with(&x, &c, tile, &p), want,
+                           "{s} tiled t={t} {strategy:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_byte_decode_matches_scalar_decode() {
+    // The table-driven whole-byte 2:4 decode must agree bit-for-bit with
+    // the scalar per-element packed decode on every row, including the
+    // odd-group tail byte (cols ≡ 4 mod 8).
+    cases(30, 0x76, |g| {
+        let s = NmScheme::TWO_FOUR;
+        let cols = g.dim_multiple_of(4, 16);
+        let rows = g.usize_in(1, 17);
+        let x = Matrix::randn(1, cols, 1.0, &mut g.rng);
+        let w = Matrix::randn(rows, cols, 1.0, &mut g.rng);
+        let mask = random_row_mask(rows, cols, s, &mut g.rng);
+        let c = CompressedNm::compress(&w, &mask, s);
+        let (kc, rmb) = (c.kcols(), c.row_meta_bytes());
+        for o in 0..rows {
+            let vals = &c.values[o * kc..(o + 1) * kc];
+            let meta = &c.meta[o * rmb..(o + 1) * rmb];
+            let fast = sparse_dot(x.row(0), vals, meta, s.n, s.m, s.offset_bits());
+            let scalar = sparse_dot_scalar(x.row(0), vals, meta, s.n, s.m, s.offset_bits());
+            assert_eq!(fast.to_bits(), scalar.to_bits(), "cols={cols} row={o}");
         }
     });
 }

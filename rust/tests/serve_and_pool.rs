@@ -1,0 +1,172 @@
+//! Integration suites for the persistent worker pool and the serving
+//! subsystem:
+//!
+//! * column-partitioned SpMM/GEMM is **bit-identical** to serial across
+//!   worker counts {1, 2, 4, 7} and ragged shapes — including the
+//!   `batch = 1` serving shape the column split exists for;
+//! * the pool is truly persistent: ≥ 1000 parallel regions reuse the
+//!   same parked workers without spawning a single new thread (pinned
+//!   via the engine's spawn counter);
+//! * `ServeEngine` coalescing honors `max_batch` and `max_wait`, and its
+//!   outputs match a dense reference.
+
+use slope::backend::{gemm_nt, gemm_nt_with, spawned_thread_count, spmm_rowmajor,
+                     spmm_rowmajor_with, spmm_tiled, spmm_tiled_with, ParallelPolicy,
+                     PartitionStrategy, SparseBackend, SpmmAlgo};
+use slope::serve::{BatchPolicy, LoraAdapter, ServeEngine, ServeLayer};
+use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::Rng;
+use std::time::Duration;
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+
+fn cols_policy(threads: usize) -> ParallelPolicy {
+    ParallelPolicy { threads, min_rows_per_task: 1, partition: PartitionStrategy::Cols }
+}
+
+#[test]
+fn col_partitioned_spmm_bit_identical_to_serial() {
+    let mut rng = Rng::seed_from_u64(0x5e1);
+    // Ragged on purpose: batches {1, 3, 23}, outs {7, 37, 53} — nothing
+    // divides the stripe counts.
+    for (b, d_out, d_in) in [(1usize, 37usize, 64usize), (3, 53, 32), (23, 7, 64), (1, 7, 8)] {
+        let x = Matrix::randn(b, d_in, 1.0, &mut rng);
+        let w = Matrix::randn(d_out, d_in, 1.0, &mut rng);
+        let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let serial = spmm_rowmajor(&x, &c);
+        let serial_tiled = spmm_tiled(&x, &c, 8);
+        for threads in THREADS {
+            let p = cols_policy(threads);
+            assert_eq!(spmm_rowmajor_with(&x, &c, &p), serial,
+                       "spmm b={b} {d_out}x{d_in} t={threads}");
+            assert_eq!(spmm_tiled_with(&x, &c, 8, &p), serial_tiled,
+                       "tiled b={b} {d_out}x{d_in} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn col_partitioned_gemm_nt_bit_identical_to_serial() {
+    let mut rng = Rng::seed_from_u64(0x5e2);
+    for (m, k, n) in [(1usize, 32usize, 29usize), (2, 17, 61), (13, 64, 9)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let serial = gemm_nt(&a, &bt);
+        for threads in THREADS {
+            assert_eq!(gemm_nt_with(&a, &bt, &cols_policy(threads)), serial,
+                       "gemm_nt {m}x{k}x{n} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn pool_reuses_workers_across_1000_regions() {
+    let mut rng = Rng::seed_from_u64(0x5e3);
+    let x = Matrix::randn(4, 32, 1.0, &mut rng);
+    let w = Matrix::randn(24, 32, 1.0, &mut rng);
+    let mask = random_row_mask(24, 32, NmScheme::TWO_FOUR, &mut rng);
+    let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+    let serial = spmm_rowmajor(&x, &c);
+    // Warm the global pool (first parallel region may spawn its workers),
+    // then snapshot the process-wide spawn counter.
+    let p_rows = ParallelPolicy { threads: 4, min_rows_per_task: 1,
+                                  partition: PartitionStrategy::Rows };
+    let p_cols = cols_policy(4);
+    assert_eq!(spmm_rowmajor_with(&x, &c, &p_rows), serial);
+    let spawned = spawned_thread_count();
+    // ≥ 1000 parallel regions across both partition strategies: every one
+    // must run on the already-parked workers.
+    for i in 0..500 {
+        let p = if i % 2 == 0 { p_rows } else { p_cols };
+        assert_eq!(spmm_rowmajor_with(&x, &c, &p), serial, "region {i}");
+        assert_eq!(gemm_nt_with(&x, &w, &p), gemm_nt(&x, &w), "gemm region {i}");
+    }
+    assert_eq!(spawned_thread_count(), spawned,
+               "1000 regions must not spawn any new threads");
+}
+
+fn serve_layer(d_out: usize, d_in: usize, rank: usize, rng: &mut Rng) -> ServeLayer {
+    let w = Matrix::randn(d_out, d_in, 1.0, rng);
+    let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, rng);
+    let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor,
+                                  ParallelPolicy::with_threads(2));
+    let lora = (rank > 0).then(|| LoraAdapter {
+        up: Matrix::randn(d_out, rank, 0.3, rng),
+        down: Matrix::randn(rank, d_in, 0.3, rng),
+    });
+    ServeLayer::new(be, lora).unwrap()
+}
+
+#[test]
+fn serve_engine_coalesces_under_max_batch_and_max_wait() {
+    let ms = Duration::from_millis(1);
+    let mut rng = Rng::seed_from_u64(0x5e4);
+    let mut eng = ServeEngine::new(
+        vec![serve_layer(24, 16, 4, &mut rng), serve_layer(16, 24, 0, &mut rng)],
+        BatchPolicy::new(4, 10 * ms),
+    )
+    .unwrap();
+
+    // 5 requests at t = 0..4 ms: the first 4 coalesce into one full batch
+    // the moment the 4th arrives; the 5th waits.
+    for i in 0..5u64 {
+        eng.submit(vec![0.1 * (i as f32 + 1.0); 16], i as u32 * ms).unwrap();
+        if i < 3 {
+            assert!(eng.poll(i as u32 * ms).is_empty(), "below max_batch and max_wait");
+        }
+    }
+    let first = eng.poll(4 * ms);
+    assert_eq!(first.len(), 4, "max_batch dispatch");
+    assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    assert_eq!(first[0].queued, 4 * ms, "oldest waited 4 ms");
+    assert_eq!(eng.pending(), 1);
+
+    // The straggler holds until its wait hits max_wait (submitted at
+    // 4 ms ⇒ due at 14 ms), then dispatches as a partial batch.
+    assert!(eng.poll(13 * ms).is_empty(), "straggler below max_wait");
+    let tail = eng.poll(14 * ms);
+    assert_eq!(tail.len(), 1, "max_wait flush");
+    assert_eq!(tail[0].id, 4);
+    assert!(tail[0].queued >= 10 * ms);
+
+    let s = eng.stats().summary();
+    assert_eq!(s.served, 5);
+    assert_eq!(s.batches, 2);
+    assert!((s.mean_batch_fill - 2.5).abs() < 1e-12);
+}
+
+#[test]
+fn serve_engine_matches_dense_reference_across_fills() {
+    let mut rng = Rng::seed_from_u64(0x5e5);
+    let layers = vec![serve_layer(32, 16, 4, &mut rng), serve_layer(16, 32, 2, &mut rng)];
+    // Dense reference on a 5-request batch.
+    let x = Matrix::randn(5, 16, 1.0, &mut rng);
+    let mut want = x.clone();
+    for l in &layers {
+        let mut y = gemm_nt(&want, &l.backend.dense_weight());
+        if let Some(a) = &l.lora {
+            let t = gemm_nt(&want, &a.down);
+            let y2 = gemm_nt(&t, &a.up);
+            for (o, v) in y.data.iter_mut().zip(&y2.data) {
+                *o += v;
+            }
+        }
+        want = y;
+    }
+    let mut eng =
+        ServeEngine::new(layers, BatchPolicy::new(3, Duration::from_millis(1))).unwrap();
+    for r in 0..5 {
+        eng.submit(x.row(r).to_vec(), Duration::ZERO).unwrap();
+    }
+    // Fills 3 + 2: different staging shapes, same math.
+    let mut got = eng.flush(Duration::ZERO);
+    got.sort_by_key(|r| r.id);
+    assert_eq!(got.len(), 5);
+    for (row, resp) in got.iter().enumerate() {
+        let g = Matrix::from_vec(1, want.cols, resp.output.clone());
+        let wrow = Matrix::from_vec(1, want.cols, want.row(row).to_vec());
+        assert!(g.max_abs_diff(&wrow) < 1e-3, "row {row}");
+    }
+}

@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Perf-trajectory tooling for the bench-smoke CI job.
+
+The benches emit one JSON object per line when ``SLOPE_BENCH_JSON`` is set
+(``{bench, case, threads, median_ns, p10_ns, p90_ns, iters}``).  This tool
+
+* ``archive`` — validates the rows and writes them as ``BENCH_<sha>.json``
+  (a single JSON document with a timestamp) into the trajectory directory;
+* ``compare`` — diffs the freshest archived trajectory (excluding the
+  current sha) against the new rows and reports regressions where
+  ``median_ns`` grew by more than ``--threshold`` (default 20%).
+
+``compare`` is **fail-soft** by default: regressions are printed as GitHub
+``::warning::`` annotations and the exit code stays 0 — CI-runner noise on
+shared hardware must not gate kernel PRs; the archived trajectory is the
+durable record.  Pass ``--hard`` to turn regressions into a non-zero exit.
+
+Usage (what .github/workflows/ci.yml runs):
+    python3 tools/bench_trajectory.py archive --json bench-smoke.jsonl \
+        --sha "$GITHUB_SHA" --dir rust/bench-history
+    python3 tools/bench_trajectory.py compare --json bench-smoke.jsonl \
+        --sha "$GITHUB_SHA" --dir rust/bench-history
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REQUIRED = {"bench", "case", "threads", "median_ns", "p10_ns", "p90_ns", "iters"}
+
+
+def load_rows(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            row = json.loads(line)
+            missing = REQUIRED - set(row)
+            if missing:
+                raise SystemExit(f"bench row missing {sorted(missing)}: {row}")
+            if row["median_ns"] <= 0 or row["threads"] < 1:
+                raise SystemExit(f"implausible bench row: {row}")
+            rows.append(row)
+    if not rows:
+        raise SystemExit(f"{path}: no bench rows emitted")
+    return rows
+
+
+def key(row: dict) -> tuple:
+    return (row["bench"], row["case"], row["threads"])
+
+
+def archive(args) -> int:
+    rows = load_rows(args.json)
+    os.makedirs(args.dir, exist_ok=True)
+    doc = {
+        "sha": args.sha,
+        "generated_unix": int(time.time()),
+        "rows": sorted(rows, key=key),
+    }
+    out = os.path.join(args.dir, f"BENCH_{args.sha}.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    threads = sorted({r["threads"] for r in rows})
+    print(f"archived {len(rows)} rows (threads {threads}) -> {out}")
+    benches = sorted({r["bench"] for r in rows})
+    if not {1, 2, 4} <= set(threads):
+        raise SystemExit(f"expected a threads sweep, got {threads}")
+    print(f"benches in trajectory: {benches}")
+    return 0
+
+
+def newest_baseline(dirname: str, exclude_sha: str):
+    best = None
+    if not os.path.isdir(dirname):
+        return None
+    for fname in os.listdir(dirname):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        try:
+            with open(os.path.join(dirname, fname)) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"::warning::unreadable trajectory file {fname}: {e}")
+            continue
+        if doc.get("sha") == exclude_sha:
+            continue
+        if best is None or doc.get("generated_unix", 0) > best.get("generated_unix", 0):
+            best = doc
+    return best
+
+
+def compare(args) -> int:
+    rows = {key(r): r for r in load_rows(args.json)}
+    base = newest_baseline(args.dir, args.sha)
+    if base is None:
+        print("no prior trajectory to compare against (first archived run)")
+        return 0
+    baseline = {key(r): r for r in base["rows"]}
+    regressions, improvements, compared = [], 0, 0
+    for k, row in sorted(rows.items()):
+        old = baseline.get(k)
+        if old is None:
+            continue
+        compared += 1
+        ratio = row["median_ns"] / old["median_ns"]
+        if ratio > 1.0 + args.threshold:
+            regressions.append((k, old["median_ns"], row["median_ns"], ratio))
+        elif ratio < 1.0 - args.threshold:
+            improvements += 1
+    print(f"compared {compared} cases against {base['sha'][:12]} "
+          f"({improvements} improved beyond the threshold)")
+    for (bench, case, thr), old_ns, new_ns, ratio in regressions:
+        print(f"::warning::perf regression {bench}/{case} t={thr}: "
+              f"{old_ns / 1e3:.1f}us -> {new_ns / 1e3:.1f}us ({ratio:.2f}x)")
+    if regressions and args.hard:
+        return 1
+    if regressions:
+        print(f"{len(regressions)} regression(s) flagged fail-soft "
+              f"(>{args.threshold:.0%} vs stored trajectory)")
+    else:
+        print("no regressions beyond threshold")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name, fn in [("archive", archive), ("compare", compare)]:
+        p = sub.add_parser(name)
+        p.add_argument("--json", required=True, help="bench JSONL emitted by the smoke run")
+        p.add_argument("--sha", required=True, help="current commit sha")
+        p.add_argument("--dir", required=True, help="trajectory directory (BENCH_<sha>.json)")
+        if name == "compare":
+            p.add_argument("--threshold", type=float, default=0.20,
+                           help="relative median_ns growth flagged as regression")
+            p.add_argument("--hard", action="store_true",
+                           help="exit non-zero on regressions (default: fail-soft)")
+        p.set_defaults(fn=fn)
+    args = ap.parse_args()
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
