@@ -1,31 +1,72 @@
-//! Batched-inference serving example — now a thin client of the
-//! first-class [`slope::serve`] subsystem (`ServeEngine` + coalescing
-//! `Batcher` + `ServeStats`), which owns the warm sparse+LoRA layers and
-//! the dynamic-batching policy that used to live ad hoc in this file.
+//! Batched-inference serving example — a thin client of the
+//! [`slope::serve`] subsystem, now built around the `ServeModel` trait:
+//! the same engine/batcher/stats plumbing drives either a synthetic
+//! kernel stack ([`slope::serve::KernelStackModel`]) or a checkpointed
+//! transformer behind a manifest ([`slope::serve::AotModel`]).
 //!
-//! Builds a nano-scale sparse MLP stack (2:4 weights + rank-8 adapters —
-//! the Eq.-11 serving operand), submits a stream of requests,
-//! and reports p50/p95 latency and throughput — the serving-side
-//! counterpart of the paper's inference-speedup claims (Table 2).  With
-//! the column-striped kernel partition even `batch = 1` traffic scales
-//! with `threads` (see `benches/bench_serve.rs` for the sweep).
+//! Default mode builds a nano-scale sparse MLP stack (2:4 weights +
+//! rank-8 adapters — the Eq.-11 serving operand), submits a stream of
+//! requests, and reports p50/p95/p99 latency and throughput — the
+//! serving-side counterpart of the paper's inference-speedup claims
+//! (Table 2).  Pass an artifact directory as the fourth argument to
+//! serve a checkpointed model end-to-end instead (requests become token
+//! sequences, responses next-token logits).
 //!
 //! ```bash
-//! cargo run --release --example inference_serve -- [n_requests] [max_batch] [threads]
+//! cargo run --release --example inference_serve -- [n_requests] [max_batch] [threads] [manifest_dir]
 //! ```
 
 use slope::backend::{ParallelPolicy, SparseBackend, SpmmAlgo};
-use slope::serve::{BatchPolicy, LoraAdapter, ServeEngine, ServeLayer};
+use slope::serve::{AotModel, BatchPolicy, LoraAdapter, ServeEngine, ServeLayer, ServeModel};
 use slope::sparsity::{random_row_mask, NmScheme};
 use slope::tensor::Matrix;
 use slope::util::Rng;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+/// Open-loop request stream via the engine's shared driver
+/// ([`ServeEngine::run_open_loop`] — the same loop `slope serve` uses),
+/// then report — generic over the serving backend.
+fn drive<M, G>(eng: &mut ServeEngine<M>, n_requests: usize,
+               mut make_input: G) -> slope::Result<()>
+where
+    M: ServeModel,
+    G: FnMut(&mut Rng) -> Vec<f32>,
+{
+    println!("model      : {}", eng.model().describe());
+    let mut rng = Rng::seed_from_u64(0x7AFF1C);
+    let served = eng.run_open_loop(n_requests, || make_input(&mut rng))?;
+    println!("{}", eng.stats().summary().report(served, eng.policy().max_batch));
+    Ok(())
+}
 
 fn main() -> slope::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(64);
     let max_batch: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
     let threads: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let policy_batch = BatchPolicy::new(max_batch, Duration::from_millis(2));
+
+    if let Some(dir) = args.get(3) {
+        // Manifest mode: serve a checkpointed transformer (see
+        // `slope train --checkpoint-dir` / `slope serve --manifest`).
+        let dir = std::path::PathBuf::from(dir);
+        let m = slope::runtime::Manifest::load(&dir)?;
+        let (vocab, seq) = (m.config.vocab_size, m.config.seq_len);
+        let policy = ParallelPolicy::for_width(threads, m.config.d_model);
+        println!(
+            "== inference_serve: manifest {} ({}); max_batch {max_batch}, {} thr ==",
+            dir.display(),
+            m.config.name,
+            policy.effective_threads()
+        );
+        let model = AotModel::open(&dir, policy)?;
+        let mut eng = ServeEngine::with_model(model, policy_batch)?;
+        drive(&mut eng, n_requests, |rng| {
+            (0..seq).map(|_| rng.below(vocab) as f32).collect()
+        })?;
+        println!("inference_serve OK");
+        return Ok(());
+    }
 
     // A nano-scale MLP block: upsample d→4d, downsample 4d→d, 2:4 sparse
     // + rank-8 LoRA — the Eq.-11 serving operand at example-friendly size.
@@ -43,32 +84,15 @@ fn main() -> slope::Result<()> {
         };
         layers.push(ServeLayer::new(be, Some(lora))?);
     }
-    let mut eng = ServeEngine::new(
-        layers,
-        BatchPolicy::new(max_batch, Duration::from_millis(2)),
-    )?;
+    let mut eng = ServeEngine::new(layers, policy_batch)?;
     println!(
         "== inference_serve: sparse MLP block ({d}↔{f}, 2:4 + rank-{rank} LoRA; \
          max_batch {max_batch}, {} thr) ==",
         policy.effective_threads()
     );
-
-    // Open-loop request stream: submit, poll (the engine coalesces under
-    // its max_batch / max_wait policy), then drain the tail.
-    let start = Instant::now();
-    let mut served = 0usize;
-    for _ in 0..n_requests {
-        let input: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.5)).collect();
-        eng.submit(input, start.elapsed())?;
-        served += eng.poll(start.elapsed()).len();
-    }
-    served += eng.flush(start.elapsed()).len();
-
-    let s = eng.stats().summary();
-    println!("served {served} requests in {} coalesced batches", s.batches);
-    println!("batch fill : {:.2} / {max_batch}", s.mean_batch_fill);
-    println!("throughput : {:.0} req/s", s.req_per_s);
-    println!("latency    : p50 {:.3} ms   p95 {:.3} ms", s.p50_ms, s.p95_ms);
+    drive(&mut eng, n_requests, |rng| {
+        (0..d).map(|_| rng.normal_f32(0.5)).collect()
+    })?;
     println!("inference_serve OK");
     Ok(())
 }

@@ -31,6 +31,7 @@ fn main() -> slope::Result<()> {
         seed: 0,
         artifacts: "artifacts".into(),
         out_dir: "runs".into(),
+        checkpoint_dir: None,
         parallel: slope::backend::ParallelPolicy::auto(),
     };
     println!("== pretrain_e2e: {model}, {steps} steps, SLoPe 2:4 + lazy adapters ==");

@@ -1,16 +1,23 @@
-//! Serving-path latency across batch sizes and kernel-engine thread
-//! counts — the measured counterpart of the paper's Table-2 serving
-//! claim, and the acceptance gauge for the column-striped `batch = 1`
-//! partition: with output-column stripes a single-request forward must
-//! scale with worker count (the vs-1thr column), where the old row-only
-//! split pinned it to one core.
+//! Serving-path latency across batch sizes, kernel-engine thread counts,
+//! and — new with the `ServeModel` redesign — both serving backends:
 //!
-//! Shape: one upsample+downsample MLP block (512↔2048, 2:4 sparse +
-//! rank-16 LoRA) — the default bench shape.  Set `SLOPE_BENCH_JSON` for
-//! the machine-readable perf trajectory.
+//! * **kernel-stack** (cases `batch{B}/forward`, series unchanged for
+//!   trajectory continuity): one upsample+downsample MLP block
+//!   (512↔2048, 2:4 sparse + rank-16 LoRA) on warm `ServeLayer`s;
+//! * **manifest** (cases `manifest/batch{B}/forward`): a checkpointed
+//!   synthetic transformer served through `AotModel` — restore from
+//!   packed v2 planes, token staging, host kernel executor — i.e. the
+//!   full `slope serve --manifest` data path.
+//!
+//! The batch=1 rows are the acceptance gauge for the column-striped
+//! partition: a single-request forward must scale with worker count
+//! (vs-1thr column).  Set `SLOPE_BENCH_JSON` for the machine-readable
+//! perf trajectory; `SLOPE_BENCH_SERVE_MODE=kernel|manifest|both`
+//! restricts the sweep (default both).
 
 use slope::backend::{ParallelPolicy, SparseBackend, SpmmAlgo};
-use slope::serve::{BatchPolicy, LoraAdapter, ServeEngine, ServeLayer};
+use slope::runtime::{write_synthetic_artifact, SynthSpec};
+use slope::serve::{AotModel, BatchPolicy, LoraAdapter, ServeEngine, ServeLayer, ServeModel};
 use slope::sparsity::{random_row_mask, NmScheme};
 use slope::tensor::Matrix;
 use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
@@ -23,7 +30,7 @@ const D: usize = 512;
 const F: usize = 2048;
 const RANK: usize = 16;
 
-fn engine(threads: usize, rng: &mut Rng) -> ServeEngine {
+fn kernel_engine(threads: usize, rng: &mut Rng) -> ServeEngine {
     let policy = ParallelPolicy::for_width(threads, D);
     let mut layers = Vec::new();
     for (d_out, d_in) in [(F, D), (D, F)] {
@@ -36,43 +43,100 @@ fn engine(threads: usize, rng: &mut Rng) -> ServeEngine {
         };
         layers.push(ServeLayer::new(be, Some(lora)).expect("bench layer"));
     }
-    // max_batch is set per measurement below; max_wait never binds because
-    // the bench always submits a full batch before polling.
-    ServeEngine::new(layers, BatchPolicy::new(16, Duration::from_secs(1))).expect("bench engine")
+    // max_batch 16 covers every measured fill; max_wait never binds
+    // because the bench always submits a full batch before polling.
+    ServeEngine::new(layers, BatchPolicy::new(16, Duration::from_secs(1)))
+        .expect("bench engine")
+}
+
+/// Measure one engine at one (batch, threads) point: submit `inputs`,
+/// flush, record.
+fn measure<M: ServeModel>(eng: &mut ServeEngine<M>, case: &str, batch: usize, threads: usize,
+                          inputs: &[Vec<f32>], one_thr_ns: &mut f64) {
+    let r = bench_auto(&format!("serve {case} b{batch} t{threads}"), 120.0, || {
+        for input in inputs {
+            eng.submit(input.clone(), Duration::ZERO).expect("submit");
+        }
+        black_box(eng.flush(Duration::ZERO).expect("flush"));
+    });
+    if threads == 1 {
+        *one_thr_ns = r.median_ns;
+    }
+    let json_case = if case == "kernel" {
+        format!("batch{batch}/forward") // stable pre-redesign series name
+    } else {
+        format!("{case}/batch{batch}/forward")
+    };
+    emit_json("bench_serve", &json_case, threads, &r);
+    println!(
+        "{:<22} {:>3} {:>10.2}us {:>10.2}us {:>8.2}x",
+        format!("{case} batch {batch}"),
+        threads,
+        r.median_ns / 1e3,
+        r.median_ns / 1e3 / batch as f64,
+        *one_thr_ns / r.median_ns
+    );
 }
 
 fn main() {
+    let mode = std::env::var("SLOPE_BENCH_SERVE_MODE").unwrap_or_else(|_| "both".into());
+    let run_kernel = mode == "kernel" || mode == "both";
+    let run_manifest = mode == "manifest" || mode == "both";
     let mut rng = Rng::seed_from_u64(0);
-    print_header("bench_serve — coalesced forward latency (512↔2048 2:4 + rank-16 LoRA)");
+    print_header("bench_serve — coalesced forward latency (both ServeModel backends)");
     println!(
-        "{:<16} {:>3} {:>12} {:>12} {:>9}",
+        "{:<22} {:>3} {:>12} {:>12} {:>9}",
         "case", "thr", "per-batch", "per-req", "vs 1thr"
     );
-    for batch in BATCHES {
-        let inputs: Vec<Vec<f32>> =
-            (0..batch).map(|_| (0..D).map(|_| rng.normal_f32(0.5)).collect()).collect();
-        let mut one_thr_ns = f64::NAN;
-        for threads in THREADS {
-            let mut eng = engine(threads, &mut Rng::seed_from_u64(7));
-            let r = bench_auto(&format!("serve b{batch} t{threads}"), 120.0, || {
-                for input in &inputs {
-                    eng.submit(input.clone(), Duration::ZERO).expect("submit");
-                }
-                black_box(eng.flush(Duration::ZERO));
-            });
-            if threads == 1 {
-                one_thr_ns = r.median_ns;
+
+    if run_kernel {
+        for batch in BATCHES {
+            let inputs: Vec<Vec<f32>> =
+                (0..batch).map(|_| (0..D).map(|_| rng.normal_f32(0.5)).collect()).collect();
+            let mut one_thr_ns = f64::NAN;
+            for threads in THREADS {
+                let mut eng = kernel_engine(threads, &mut Rng::seed_from_u64(7));
+                measure(&mut eng, "kernel", batch, threads, &inputs, &mut one_thr_ns);
             }
-            emit_json("bench_serve", &format!("batch{batch}/forward"), threads, &r);
-            println!(
-                "{:<16} {:>3} {:>10.2}us {:>10.2}us {:>8.2}x",
-                format!("batch {batch}"),
-                threads,
-                r.median_ns / 1e3,
-                r.median_ns / 1e3 / batch as f64,
-                one_thr_ns / r.median_ns
-            );
         }
     }
-    println!("\n(batch=1 rows are the column-striped partition: the kernel stripes\n output columns across the pool, so single-request latency scales with\n threads; batch≥4 rows row-partition like training.  vs-1thr ≳ 1.5x at\n 4 threads on ≥4 hardware cores is the serving acceptance bar.)");
+
+    if run_manifest {
+        // A self-contained synthetic artifact (manifest + packed-plane
+        // checkpoint): the full `slope serve --manifest` restore-and-serve
+        // path, sized so the smoke budget stays in seconds.
+        let dir = std::env::temp_dir().join("slope_bench_serve_manifest");
+        let spec = SynthSpec {
+            name: "bench-synth".into(),
+            vocab: 256,
+            n_layer: 2,
+            n_head: 4,
+            d_model: 64,
+            d_ff: 256,
+            seq_len: 16,
+            batch_size: 16,
+            rank: 8,
+            seed: 7,
+        };
+        write_synthetic_artifact(&dir, &spec).expect("synthetic artifact");
+        for batch in BATCHES {
+            let inputs: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..spec.seq_len).map(|_| rng.below(spec.vocab) as f32).collect())
+                .collect();
+            let mut one_thr_ns = f64::NAN;
+            for threads in THREADS {
+                let policy = ParallelPolicy::for_width(threads, spec.d_model);
+                let model = AotModel::open(&dir, policy).expect("aot model");
+                let mut eng = ServeEngine::with_model(
+                    model,
+                    BatchPolicy::new(16, Duration::from_secs(1)),
+                )
+                .expect("aot engine");
+                measure(&mut eng, "manifest", batch, threads, &inputs, &mut one_thr_ns);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    println!("\n(kernel batch=1 rows exercise the column-striped partition — stripe\n widths are quad-rounded so narrow stripes keep the 2:4 four-row ILP;\n manifest rows run the checkpointed transformer through AotModel's host\n kernel executor, the `slope serve --manifest` data path.  vs-1thr ≳ 1.5x\n at 4 threads on ≥4 hardware cores is the serving acceptance bar.)");
 }

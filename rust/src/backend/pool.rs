@@ -462,13 +462,27 @@ where
 /// on the pool.  The body must only write output columns inside its
 /// stripe (via [`StripedOut`]); stripes of distinct tasks are disjoint,
 /// so the writes never alias.
+///
+/// Stripe boundaries are **quad-aligned**: the split is computed over
+/// `ceil(cols / 4)` four-column quads, so every stripe except possibly
+/// the last has a multiple-of-4 width.  The SpMM/GEMM cores process four
+/// output columns (weight rows) per pass for ILP; with unaligned
+/// boundaries every narrow stripe ended in a `< 4`-wide element-wise
+/// tail, costing the narrow-stripe serving shapes their four-chain
+/// gather parallelism.  Quad alignment confines the ragged tail to the
+/// single final stripe.  Which columns land in which stripe is still a
+/// pure function of `(cols, tasks)`, and each output element's value is
+/// independent of the partition, so results stay bit-identical to serial.
 pub fn parallel_over_col_stripes<F>(tasks: usize, cols: usize, body: F)
 where
     F: Fn(Range<usize>) + Sync,
 {
-    let tasks = tasks.min(cols).max(1);
+    let quads = cols.div_ceil(4);
+    let tasks = tasks.min(quads).max(1);
     let task_fn = move |t: usize| {
-        body(cols * t / tasks..cols * (t + 1) / tasks);
+        let start = 4 * (quads * t / tasks);
+        let end = (4 * (quads * (t + 1) / tasks)).min(cols);
+        body(start..end);
     };
     WorkerPool::global().run(tasks, &task_fn);
 }
@@ -605,6 +619,33 @@ mod tests {
                 });
                 for (i, v) in data.iter().enumerate() {
                     assert_eq!(*v, i as f32 + 1.0, "tasks={tasks} cols={cols} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_stripes_are_quad_aligned_with_one_ragged_tail() {
+        for tasks in [2usize, 3, 5, 8] {
+            for cols in [9usize, 12, 23, 37, 64] {
+                let bounds = Mutex::new(Vec::new());
+                parallel_over_col_stripes(tasks, cols, |stripe| {
+                    bounds.lock().unwrap().push((stripe.start, stripe.end));
+                });
+                let mut b = bounds.into_inner().unwrap();
+                b.sort_unstable();
+                assert_eq!(b.first().unwrap().0, 0, "tasks={tasks} cols={cols}");
+                assert_eq!(b.last().unwrap().1, cols, "tasks={tasks} cols={cols}");
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "stripes must tile 0..cols contiguously");
+                }
+                for (i, (s, e)) in b.iter().enumerate() {
+                    assert!(e > s, "no empty stripes (tasks={tasks} cols={cols})");
+                    assert_eq!(s % 4, 0, "stripe starts are quad-aligned");
+                    if i + 1 < b.len() {
+                        assert_eq!((e - s) % 4, 0,
+                                   "only the final stripe may carry a ragged quad tail");
+                    }
                 }
             }
         }

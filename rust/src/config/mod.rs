@@ -68,6 +68,10 @@ pub struct RunConfig {
     pub artifacts: PathBuf,
     /// Where to write metrics (JSON lines).
     pub out_dir: PathBuf,
+    /// When set, write a serving checkpoint (store planes + packed
+    /// compressed-weight planes + a manifest copy) into this directory at
+    /// every eval point — the artifact `slope serve --manifest` restores.
+    pub checkpoint_dir: Option<PathBuf>,
     /// Kernel-engine parallelism for every CPU backend call this run
     /// makes (threads = 0 ⇒ auto-detect hardware threads).
     pub parallel: ParallelPolicy,
@@ -85,6 +89,7 @@ impl Default for RunConfig {
             seed: 0,
             artifacts: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("runs"),
+            checkpoint_dir: None,
             parallel: ParallelPolicy::auto(),
         }
     }

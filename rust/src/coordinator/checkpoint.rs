@@ -17,14 +17,27 @@
 //! mirrors), and `<name>.scheme` (i32 `[n, m, rows, cols]`) — via
 //! [`save_packed_weights`] / [`load_packed_weights`].  Version-1 files
 //! load unchanged.
+//!
+//! On top of the raw formats sit **serving-checkpoint directories**
+//! ([`save_model_checkpoint`] / [`load_model_checkpoint`]): the trainer
+//! writes one at every eval checkpoint when `--checkpoint-dir` is set —
+//! store planes plus the pruned weights' packed `CompressedNm` planes —
+//! and `slope serve --manifest <dir>` restores it without re-running
+//! compression.
 
-use crate::runtime::Store;
-use crate::sparsity::{CompressedNm, NmScheme};
+use crate::runtime::{Manifest, Store, SPARSE_WEIGHTS};
+use crate::sparsity::{CompressedNm, Mask, NmScheme};
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SLPE";
 const VERSION: u32 = 2;
+
+/// Store-plane file inside a serving-checkpoint directory.
+pub const MODEL_FILE: &str = "model.slopeckpt";
+/// Packed compressed-weight planes (format v2) beside [`MODEL_FILE`].
+pub const PACKED_FILE: &str = "model.packed.slopeckpt";
 
 /// Save every store tensor whose name starts with one of `prefixes`.
 pub fn save(store: &Store, prefixes: &[&str], path: &Path) -> crate::Result<usize> {
@@ -260,6 +273,103 @@ pub fn load_packed_weights(path: &Path) -> crate::Result<Vec<(String, Compressed
     Ok(out)
 }
 
+// ---- serving-checkpoint directories -----------------------------------
+
+/// Write a **serving checkpoint** for the manifest's model into `dir`:
+///
+/// * [`MODEL_FILE`] — every `params.*` / `masks.*` / `lora.*` store
+///   tensor (the state the `forward`/`forward_lora` executables read);
+/// * [`PACKED_FILE`] — one pre-compressed [`CompressedNm`] plane
+///   (values + Eq.-7 bit-packed metadata) per pruned block weight, so a
+///   restore ([`load_model_checkpoint`] → `HostModel`/`AotModel`) skips
+///   the compress step entirely.
+///
+/// Weights whose checkpointed mask is not a valid N:M pattern for the
+/// manifest's per-half scheme (e.g. the dense baseline's all-ones masks,
+/// or a dynamic-mask method mid-run) are skipped from the packed file —
+/// they restore through the dense path instead.  Returns
+/// `(store_tensors, packed_planes)` written.
+pub fn save_model_checkpoint(store: &Store, manifest: &Manifest,
+                             dir: &Path) -> crate::Result<(usize, usize)> {
+    let tensors = save(store, &["params.", "masks.", "lora."], &dir.join(MODEL_FILE))?;
+    let mut planes: Vec<(String, CompressedNm)> = Vec::new();
+    for layer in 0..manifest.config.n_layer {
+        for wname in SPARSE_WEIGHTS {
+            if let Some(c) = packed_plane_from_store(store, manifest, layer, wname)? {
+                planes.push((format!("params.blocks.{layer}.{wname}"), c));
+            }
+        }
+    }
+    let refs: Vec<(&str, &CompressedNm)> =
+        planes.iter().map(|(name, c)| (name.as_str(), c)).collect();
+    save_packed_weights(&refs, &dir.join(PACKED_FILE))?;
+    Ok((tensors, planes.len()))
+}
+
+/// Decode `masks.blocks.<layer>.<wname>_r` and compress the matching
+/// stored weight under the manifest's per-half scheme — the single
+/// definition of "which planes pack", shared by the checkpoint writer and
+/// the host executor's restore (so save and restore can never disagree).
+/// `Ok(None)` means the weight serves dense: unpruned by policy, planes
+/// absent from the store, or a mask that is not a valid N:M pattern
+/// (dense baselines / dynamic-mask methods mid-run).  A shape-mismatched
+/// mask is corrupt state and errors.
+pub fn packed_plane_from_store(store: &Store, manifest: &Manifest, layer: usize,
+                               wname: &str) -> crate::Result<Option<CompressedNm>> {
+    if !manifest.is_pruned(layer, wname) {
+        return Ok(None);
+    }
+    let pname = format!("params.blocks.{layer}.{wname}");
+    let mname = format!("masks.blocks.{layer}.{wname}_r");
+    if !store.contains(&pname) || !store.contains(&mname) {
+        return Ok(None);
+    }
+    let w = store.read_matrix(&pname)?;
+    let mm = store.read_matrix(&mname)?;
+    crate::ensure!(
+        (mm.rows, mm.cols) == (w.rows, w.cols),
+        "mask {mname} is {}x{}, weight is {}x{}",
+        mm.rows, mm.cols, w.rows, w.cols
+    );
+    let (n, m) = manifest.scheme_for_layer(layer);
+    let scheme = NmScheme::new(n, m);
+    if w.cols % scheme.m != 0 {
+        return Ok(None);
+    }
+    let mask = Mask {
+        rows: mm.rows,
+        cols: mm.cols,
+        keep: mm.data.iter().map(|v| *v != 0.0).collect(),
+    };
+    if !mask.check_row_nm(scheme) {
+        return Ok(None);
+    }
+    Ok(Some(CompressedNm::compress(&w, &mask, scheme)))
+}
+
+/// Restore a serving checkpoint directory: the literal store plus the
+/// packed planes keyed by weight name (empty map when the packed file is
+/// absent — pre-packing checkpoints restore via re-compression).
+pub fn load_model_checkpoint(dir: &Path)
+                             -> crate::Result<(Store, HashMap<String, CompressedNm>)> {
+    let model_path = dir.join(MODEL_FILE);
+    crate::ensure!(
+        model_path.exists(),
+        "no serving checkpoint at {} (train with --checkpoint-dir first)",
+        model_path.display()
+    );
+    let mut store = Store::new();
+    load(&mut store, &model_path)?;
+    let mut packed = HashMap::new();
+    let packed_path = dir.join(PACKED_FILE);
+    if packed_path.exists() {
+        for (name, c) in load_packed_weights(&packed_path)? {
+            packed.insert(name, c);
+        }
+    }
+    Ok((store, packed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +399,64 @@ mod tests {
             assert_eq!(got, c, "{name}: values AND packed metadata must round-trip");
         }
         std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn model_checkpoint_roundtrips_with_packed_planes() {
+        use crate::runtime::manifest::{ModelConfig, TrainParams};
+        let dir = std::env::temp_dir().join("slope_model_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = Manifest {
+            config: ModelConfig {
+                name: "tiny".into(),
+                vocab_size: 8,
+                n_layer: 1,
+                n_head: 1,
+                d_model: 8,
+                d_ff: 8,
+                seq_len: 4,
+                batch_size: 2,
+                adapter_rank: 0,
+                first_half_sparsity: (2, 4),
+                second_half_sparsity: (2, 4),
+                prune_attn: true,
+                prune_mlp: true,
+                n_params_dense: 0,
+            },
+            train: TrainParams {
+                lr: 0.0,
+                weight_decay: 0.0,
+                warmup_steps: 0,
+                total_steps: 0,
+                lazy_fraction: 0.0,
+                srste_decay: 0.0,
+            },
+            sparsity_format: None,
+            executables: std::collections::HashMap::new(),
+            dir: dir.clone(),
+        };
+        let mut rng = Rng::seed_from_u64(5);
+        let mut store = Store::new();
+        let w = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mask = random_row_mask(8, 8, NmScheme::TWO_FOUR, &mut rng);
+        let wm = mask.apply(&w);
+        store.put_f32("params.blocks.0.wproj", &[8, 8], &wm.data).unwrap();
+        store.put_f32("masks.blocks.0.wproj_r", &[8, 8], &mask.to_matrix().data).unwrap();
+        // Ones mask (dense baseline): not 2:4 ⇒ restored dense, no plane.
+        store.put_f32("params.blocks.0.wup", &[8, 8], &w.data).unwrap();
+        store.put_f32("masks.blocks.0.wup_r", &[8, 8], &vec![1.0; 64]).unwrap();
+        let (tensors, planes) = save_model_checkpoint(&store, &manifest, &dir).unwrap();
+        assert_eq!(tensors, 4);
+        assert_eq!(planes, 1, "only the valid 2:4 mask ships a packed plane");
+        let (back, packed) = load_model_checkpoint(&dir).unwrap();
+        assert_eq!(
+            back.read_f32("params.blocks.0.wproj").unwrap(),
+            store.read_f32("params.blocks.0.wproj").unwrap()
+        );
+        let want = CompressedNm::compress(&wm, &mask, NmScheme::TWO_FOUR);
+        assert_eq!(packed.get("params.blocks.0.wproj").unwrap(), &want,
+                   "packed plane must restore the exact compressed operand");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! with a different executable and mask policy (see [`Method`]).
 
 use crate::config::{Fig9Variant, Method, RunConfig};
+use crate::coordinator::checkpoint;
 use crate::coordinator::metrics::{AdapterRec, ChurnRec, ClozeRec, EvalRec, Metrics, StepRec};
 use crate::data::{Corpus, CorpusSpec};
 use crate::eval::{cloze_score, perplexity};
@@ -106,6 +107,11 @@ impl Trainer {
     /// Initialize model state (params/opt/masks) on device via the AOT
     /// `init` executable, then apply the method's mask policy.
     pub fn init(&mut self) -> crate::Result<()> {
+        // Thread the run's parallelism into the session so everything
+        // executed through it — today the host kernel executor behind
+        // manifest-backed serving, on real PJRT the intra-op hint — obeys
+        // the same `--threads` the L3 kernels do.
+        self.session.borrow_mut().set_parallel(self.cfg.parallel);
         self.store.put_scalar_i32("seed", self.cfg.seed as i32);
         self.run_exe("init")?;
         match self.cfg.method {
@@ -152,16 +158,21 @@ impl Trainer {
                         Method::Slope | Method::Dense | Method::SrsteLora)
             && self.has_exe("train_step_lora");
         self.warmup(lazy_enabled)?;
-        // NOTE: the policy configures the CPU kernel backend
-        // (crate::backend); this trainer's step path runs through the AOT
-        // runtime, which does not consume it yet (see ROADMAP "Policy into
-        // the AOT path") — say so rather than implying threaded steps.
+        // NOTE: the policy configures the CPU kernel backend and is
+        // threaded into the Session (host executor / PJRT intra-op hint);
+        // the xla-rs 0.1.6 train-step execution itself exposes no thread
+        // knob, so AOT *training* steps stay single-stream — say so
+        // rather than implying threaded steps.
         eprintln!(
-            "[trainer] parallel policy: {} thread(s) (applies to CPU backend kernels; \
-             AOT step path is single-stream)",
+            "[trainer] parallel policy: {} thread(s) (CPU backend kernels + \
+             session-hosted serving; AOT train steps are single-stream)",
             self.cfg.parallel.effective_threads()
         );
         self.eval_point(0)?;
+        // Checkpoint at EVERY eval point, step 0 included — a
+        // `--steps 0` run (or one that diverges before the first cadence
+        // point) must still leave a servable checkpoint behind.
+        self.checkpoint_point(0)?;
         let flip_at = self.cfg.sparse_steps();
 
         let (b, s1) = self.manifest.train_tokens_shape();
@@ -194,6 +205,7 @@ impl Trainer {
             }
             if step % self.cfg.eval_every == 0 || step == self.cfg.steps {
                 self.eval_point(step)?;
+                self.checkpoint_point(step)?;
             }
             if matches!(self.cfg.method, Method::Srste | Method::SrsteLora)
                 && !self.lora_active
@@ -209,6 +221,8 @@ impl Trainer {
         if matches!(self.cfg.method, Method::Wanda) {
             self.apply_wanda_masks()?;
             self.eval_point(self.cfg.steps + 1)?;
+            // The one-shot masks changed the servable model: re-checkpoint.
+            self.checkpoint_point(self.cfg.steps + 1)?;
         }
         self.finalize_churn();
         self.finalize_adapters();
@@ -222,6 +236,35 @@ impl Trainer {
             mean_step_ms: self.metrics.mean_step_wall_ms(),
             coordinator_overhead: self.metrics.coordinator_overhead(),
         })
+    }
+
+    /// Eval-cadence serving checkpoint (when `--checkpoint-dir` is set):
+    /// store planes + the backends' packed `CompressedNm` planes (format
+    /// v2, so restores skip re-compression) + a manifest copy, making the
+    /// directory self-contained for `slope serve --manifest`.
+    fn checkpoint_point(&mut self, step: usize) -> crate::Result<()> {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            return Ok(());
+        };
+        self.refresh_dynamic_masks()?;
+        std::fs::create_dir_all(&dir)?;
+        let (tensors, planes) =
+            checkpoint::save_model_checkpoint(&self.store, &self.manifest, &dir)?;
+        // Copy the manifest the session actually loaded (its recorded
+        // `dir`), not a re-derived artifacts/<model> path.
+        let manifest_src = self.manifest.dir.join("manifest.json");
+        let manifest_dst = dir.join("manifest.json");
+        if manifest_src != manifest_dst {
+            std::fs::copy(&manifest_src, &manifest_dst).map_err(|e| {
+                crate::eyre!("copying {} into the checkpoint: {e}", manifest_src.display())
+            })?;
+        }
+        eprintln!(
+            "[trainer] step {step}: serving checkpoint ({tensors} tensors, \
+             {planes} packed planes) -> {}",
+            dir.display()
+        );
+        Ok(())
     }
 
     /// Phase flip at the (1−λ)·T mark: materialize the lazy adapters.

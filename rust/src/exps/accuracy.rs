@@ -22,6 +22,7 @@ fn run_cfg(args: &ExpArgs, model: &str, method: Method, lazy: f64) -> RunConfig 
         seed: args.seed,
         artifacts: args.artifacts.clone(),
         out_dir: args.out_dir.clone(),
+        checkpoint_dir: None,
         parallel: crate::backend::ParallelPolicy::auto(),
     }
 }

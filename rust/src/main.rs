@@ -14,9 +14,12 @@ use slope::config::{Fig9Variant, Method, RunConfig};
 use slope::coordinator::Trainer;
 use slope::exps::{self, ExpArgs};
 use slope::runtime::Manifest;
-use slope::util::Json;
+use slope::serve::{Admission, AotModel, BatchPolicy, LoraAdapter, ServeEngine, ServeLayer,
+                   ServeModel, StatsSummary};
+use slope::util::{Json, Rng};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::Duration;
 
 const USAGE: &str = "\
 slope — SLoPe (ICLR'25) rust coordinator
@@ -24,12 +27,17 @@ slope — SLoPe (ICLR'25) rust coordinator
 USAGE:
   slope train [--model M] [--method METH] [--steps N] [--lazy-fraction F]
               [--eval-every N] [--seed S] [--artifacts DIR] [--out-dir DIR]
+              [--checkpoint-dir DIR]           # serving checkpoints at evals
               [--threads T] [--partition P]    # kernel engine; 0 = auto
 
-  slope serve [--layers L] [--d-model D] [--d-ff F] [--rank R]
+  slope serve [--manifest DIR]                 # serve a checkpointed model
+              [--layers L] [--d-model D] [--d-ff F] [--rank R]  # synthetic stack
               [--requests N] [--max-batch B] [--max-wait-ms MS]
+              [--producers N]                  # async admission, N producer threads
               [--threads T] [--partition P] [--seed S]
-              # dynamic-batched sparse+LoRA serving on the kernel engine
+              # dynamic-batched sparse+LoRA serving; --manifest points at a
+              # directory holding manifest.json + model.slopeckpt (what
+              # `slope train --checkpoint-dir` writes)
 
   slope exp <ID> [--steps N] [--seed S] [--artifacts DIR] [--out-dir DIR]
   slope info [--model M] [--artifacts DIR]
@@ -86,6 +94,63 @@ impl Flags {
     }
 }
 
+/// Print the uniform serving summary block (inline and admission modes).
+fn print_serve_summary(done: usize, s: &StatsSummary, max_batch: usize) {
+    println!("{}", s.report(done, max_batch));
+}
+
+/// Drive a serving engine end-to-end over synthetic open-loop traffic —
+/// generic over the [`ServeModel`], shared by the kernel-stack and
+/// manifest paths.  `producers == 0` runs the classic inline
+/// submit/poll loop; `producers >= 1` routes everything through the
+/// async admission front-end with that many concurrent producer threads
+/// (the tail-latency-under-contention measurement).
+fn serve_run<M, F, G>(build: F, make_input: G, n_requests: usize, producers: usize,
+                      policy: BatchPolicy, seed: u64) -> slope::Result<()>
+where
+    M: ServeModel + 'static,
+    F: FnOnce() -> slope::Result<ServeEngine<M>> + Send + 'static,
+    G: Fn(&mut Rng) -> Vec<f32> + Send + Clone + 'static,
+{
+    if producers == 0 {
+        let mut eng = build()?;
+        println!("model      : {}", eng.model().describe());
+        let mut rng = Rng::seed_from_u64(seed);
+        let done = eng.run_open_loop(n_requests, || make_input(&mut rng))?;
+        let s = eng.stats().summary();
+        print_serve_summary(done, &s, eng.policy().max_batch);
+        return Ok(());
+    }
+
+    let adm = Admission::spawn(build, Admission::tick_for(policy.max_wait));
+    let base = n_requests / producers;
+    let extra = n_requests % producers;
+    let mut handles = Vec::with_capacity(producers);
+    for p in 0..producers {
+        let client = adm.client();
+        let make_input = make_input.clone();
+        let quota = base + usize::from(p < extra);
+        handles.push(std::thread::spawn(move || -> slope::Result<usize> {
+            let mut rng = Rng::seed_from_u64(seed ^ (0x9E37_79B9 + p as u64));
+            for i in 0..quota {
+                client.submit(i as u64, make_input(&mut rng))?;
+            }
+            for _ in 0..quota {
+                client.recv()?;
+            }
+            Ok(quota)
+        }));
+    }
+    let mut done = 0usize;
+    for h in handles {
+        done += h.join().map_err(|_| slope::eyre!("producer thread panicked"))??;
+    }
+    let s = adm.finish()?;
+    println!("producers  : {producers} concurrent (open-loop, async admission)");
+    print_serve_summary(done, &s, policy.max_batch);
+    Ok(())
+}
+
 fn parse_partition(s: &str) -> slope::Result<PartitionStrategy> {
     Ok(match s {
         "auto" => PartitionStrategy::Auto,
@@ -133,6 +198,7 @@ fn main() -> slope::Result<()> {
                 seed: flags.usize("seed", 0)? as u64,
                 artifacts,
                 out_dir: out_dir.clone(),
+                checkpoint_dir: flags.map.get("checkpoint-dir").map(PathBuf::from),
                 parallel: ParallelPolicy::with_threads(flags.usize("threads", 0)?)
                     .with_partition(parse_partition(&flags.get("partition", "auto"))?),
             };
@@ -157,67 +223,98 @@ fn main() -> slope::Result<()> {
             println!("metrics           : {}", path.display());
         }
         "serve" => {
-            use slope::serve::{BatchPolicy, LoraAdapter, ServeEngine, ServeLayer};
-            use slope::sparsity::{random_row_mask, NmScheme};
-            use slope::tensor::Matrix;
-            use slope::util::Rng;
-            use std::time::{Duration, Instant};
-
-            let n_layers = flags.usize("layers", 2)?;
-            let d_model = flags.usize("d-model", 256)?;
-            let d_ff = flags.usize("d-ff", 1024)?;
-            let rank = flags.usize("rank", 8)?;
             let n_requests = flags.usize("requests", 256)?;
             let max_batch = flags.usize("max-batch", 8)?;
             let max_wait = Duration::from_secs_f64(flags.f64("max-wait-ms", 2.0)? / 1e3);
             let threads = flags.usize("threads", 0)?;
             let partition = parse_partition(&flags.get("partition", "auto"))?;
             let seed = flags.usize("seed", 0)? as u64;
+            let producers = flags.usize("producers", 0)?;
+            let batch_policy = BatchPolicy::new(max_batch, max_wait);
 
-            let policy =
-                ParallelPolicy::for_width(threads, d_model).with_partition(partition);
-            let mut rng = Rng::seed_from_u64(seed);
-            // Alternating d_model → d_ff → d_model … sparse+LoRA stack.
-            let mut layers = Vec::with_capacity(n_layers.max(1));
-            let mut d_in = d_model;
-            for i in 0..n_layers.max(1) {
-                let d_out = if i % 2 == 0 { d_ff } else { d_model };
-                let w = Matrix::randn(d_out, d_in, 1.0 / (d_in as f32).sqrt(), &mut rng);
-                let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
-                let be = slope::backend::SparseBackend::setup(
-                    &w, mask, NmScheme::TWO_FOUR, slope::backend::SpmmAlgo::RowMajor, policy,
+            if let Some(dir) = flags.map.get("manifest").map(PathBuf::from) {
+                // Manifest-backed path: a checkpointed transformer served
+                // through its `forward`/`forward_lora` semantics.  Clamp
+                // the policy to the compiled batch up front so every
+                // report (inline and admission) shows the effective cap.
+                let m = Manifest::load(&dir)?;
+                let (vocab, seq) = (m.config.vocab_size, m.config.seq_len);
+                let eff_batch = max_batch.min(m.config.batch_size.max(1));
+                let batch_policy = BatchPolicy::new(eff_batch, max_wait);
+                let policy = ParallelPolicy::for_width(threads, m.config.d_model)
+                    .with_partition(partition);
+                println!(
+                    "== slope serve --manifest {} ({}) — max_batch {eff_batch}, \
+                     max_wait {:.1} ms, {} thr, {partition:?} ==",
+                    dir.display(),
+                    m.config.name,
+                    max_wait.as_secs_f64() * 1e3,
+                    policy.effective_threads(),
                 );
-                let lora = (rank > 0).then(|| LoraAdapter {
-                    up: Matrix::randn(d_out, rank, 0.1, &mut rng),
-                    down: Matrix::randn(rank, d_in, 0.1, &mut rng),
-                });
-                layers.push(ServeLayer::new(be, lora)?);
-                d_in = d_out;
+                serve_run(
+                    move || {
+                        let model = AotModel::open(&dir, policy)?;
+                        eprintln!("[serve] {}", model.describe());
+                        ServeEngine::with_model(model, batch_policy)
+                    },
+                    move |rng: &mut Rng| {
+                        (0..seq).map(|_| rng.below(vocab) as f32).collect()
+                    },
+                    n_requests,
+                    producers,
+                    batch_policy,
+                    seed,
+                )?;
+            } else {
+                // Synthetic kernel-stack path: alternating
+                // d_model → d_ff → d_model … sparse+LoRA layers.
+                let n_layers = flags.usize("layers", 2)?;
+                let d_model = flags.usize("d-model", 256)?;
+                let d_ff = flags.usize("d-ff", 1024)?;
+                let rank = flags.usize("rank", 8)?;
+                let policy =
+                    ParallelPolicy::for_width(threads, d_model).with_partition(partition);
+                println!(
+                    "== slope serve: {n_layers} layers ({d_model}↔{d_ff}, 2:4, rank {rank}) — \
+                     max_batch {max_batch}, max_wait {:.1} ms, {} thr, {partition:?} ==",
+                    max_wait.as_secs_f64() * 1e3,
+                    policy.effective_threads(),
+                );
+                serve_run(
+                    move || {
+                        use slope::sparsity::{random_row_mask, NmScheme};
+                        use slope::tensor::Matrix;
+                        let mut rng = Rng::seed_from_u64(seed);
+                        let mut layers = Vec::with_capacity(n_layers.max(1));
+                        let mut d_in = d_model;
+                        for i in 0..n_layers.max(1) {
+                            let d_out = if i % 2 == 0 { d_ff } else { d_model };
+                            let w = Matrix::randn(d_out, d_in, 1.0 / (d_in as f32).sqrt(),
+                                                  &mut rng);
+                            let mask =
+                                random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
+                            let be = slope::backend::SparseBackend::setup(
+                                &w, mask, NmScheme::TWO_FOUR,
+                                slope::backend::SpmmAlgo::RowMajor, policy,
+                            );
+                            let lora = (rank > 0).then(|| LoraAdapter {
+                                up: Matrix::randn(d_out, rank, 0.1, &mut rng),
+                                down: Matrix::randn(rank, d_in, 0.1, &mut rng),
+                            });
+                            layers.push(ServeLayer::new(be, lora)?);
+                            d_in = d_out;
+                        }
+                        ServeEngine::new(layers, batch_policy)
+                    },
+                    move |rng: &mut Rng| {
+                        (0..d_model).map(|_| rng.normal() as f32 * 0.5).collect()
+                    },
+                    n_requests,
+                    producers,
+                    batch_policy,
+                    seed,
+                )?;
             }
-            let mut eng = ServeEngine::new(layers, BatchPolicy::new(max_batch, max_wait))?;
-            println!(
-                "== slope serve: {n_layers} layers ({d_model}↔{d_ff}, 2:4, rank {rank}) — \
-                 max_batch {max_batch}, max_wait {:.1} ms, {} thr, {partition:?} ==",
-                max_wait.as_secs_f64() * 1e3,
-                policy.effective_threads(),
-            );
-            // Synthetic open-loop traffic: submit all requests, polling the
-            // engine after each so batches coalesce under real time.
-            let d_req = eng.d_in();
-            let start = Instant::now();
-            let mut done = 0usize;
-            for _ in 0..n_requests {
-                let input: Vec<f32> = (0..d_req).map(|_| rng.normal() as f32 * 0.5).collect();
-                eng.submit(input, start.elapsed())?;
-                done += eng.poll(start.elapsed()).len();
-            }
-            // End of stream: drain the tail without waiting out max_wait.
-            done += eng.flush(start.elapsed()).len();
-            let s = eng.stats().summary();
-            println!("served     : {done} requests in {} batches", s.batches);
-            println!("batch fill : {:.2} / {max_batch}", s.mean_batch_fill);
-            println!("latency    : p50 {:.3} ms   p95 {:.3} ms", s.p50_ms, s.p95_ms);
-            println!("throughput : {:.0} req/s", s.req_per_s);
         }
         "exp" => {
             let id = flags

@@ -1,0 +1,644 @@
+//! Host kernel executor for manifest-described SLoPe transformers.
+//!
+//! [`HostModel`] implements the semantics of the AOT `forward` /
+//! `forward_lora` executables — the pre-LN GPT of
+//! `python/compile/model.py` — directly on the crate's CPU kernel engine:
+//! every pruned block linear runs as a packed 2:4/N:M SpMM
+//! ([`crate::backend::spmm_rowmajor_into`]), adapters ride the Eq.-11
+//! fused sequence ([`crate::backend::lora_fused_seq`]), and the dense
+//! pieces (embeddings, LM head, unpruned linears) use the blocked GEMMs —
+//! all under one [`ParallelPolicy`], so `--threads` governs manifest-backed
+//! serving exactly as it governs the raw kernels.
+//!
+//! The executor is built from a **serving checkpoint** (see
+//! [`crate::coordinator::checkpoint::save_model_checkpoint`]): the literal
+//! store's `params.*` / `masks.*` / `lora.*` planes, plus — when the
+//! format-v2 packed file is present — the pre-compressed
+//! [`CompressedNm`] weight planes, which restore without re-running the
+//! compress step.  [`crate::serve::AotModel`] selects this executor
+//! whenever PJRT compilation is unavailable (the offline xla stub, or a
+//! checkpoint directory that carries no HLO files); on a real-XLA build
+//! the same checkpoint serves through `Session::run` instead and this
+//! module doubles as the cross-implementation parity reference.
+//!
+//! Numerics follow the python model exactly: layer-norm with ε = 1e-5,
+//! max-subtracted causal softmax, and the tanh-approximate GELU
+//! (`jax.nn.gelu`'s default).  Forward math is row-independent per
+//! sequence, so outputs do not depend on how requests were coalesced into
+//! batches — the property the serving parity tests pin.
+//!
+//! [`write_synthetic_artifact`] fabricates a self-contained artifact
+//! directory (manifest + checkpoint) from a seed — the fixture the serve
+//! tests and `benches/bench_serve.rs` use to exercise manifest-backed
+//! serving without `make artifacts`.
+
+use crate::backend::gemm::dot;
+use crate::backend::{ensure_out, gemm_nt_acc_into, gemm_nt_into, lora_fused_seq,
+                     spmm_rowmajor_into, ParallelPolicy, SpmmAlgo};
+use crate::coordinator::checkpoint;
+use crate::runtime::{Manifest, Store};
+use crate::sparsity::{random_row_mask, CompressedNm, Mask, NmScheme};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One block linear: a dense or packed-sparse weight, its bias, and an
+/// optional low-rank adapter pair.
+struct HostLinear {
+    w: HostWeight,
+    bias: Vec<f32>,
+    /// `(up: (d_out, r), down: (r, d_in))` — Eq.-11 adapter factors.
+    lora: Option<(Matrix, Matrix)>,
+    /// Rank staging for the adapter path (grown once).
+    t: Matrix,
+}
+
+enum HostWeight {
+    Dense(Matrix),
+    Sparse(CompressedNm),
+}
+
+impl HostLinear {
+    fn d_out(&self) -> usize {
+        match &self.w {
+            HostWeight::Dense(m) => m.rows,
+            HostWeight::Sparse(c) => c.rows,
+        }
+    }
+
+    /// `y = x · Wᵀ + x · Rᵀ · Lᵀ + b` through the kernel engine.
+    fn forward_into(&mut self, x: &Matrix, y: &mut Matrix, policy: &ParallelPolicy) {
+        ensure_out(y, x.rows, self.d_out());
+        match (&self.w, &self.lora) {
+            (HostWeight::Sparse(c), Some((up, down))) => {
+                lora_fused_seq(SpmmAlgo::RowMajor, policy, c, x, up, down, &mut self.t, y);
+            }
+            (HostWeight::Sparse(c), None) => spmm_rowmajor_into(x, c, y, policy),
+            (HostWeight::Dense(w), lora) => {
+                gemm_nt_into(x, w, y, policy);
+                if let Some((up, down)) = lora {
+                    ensure_out(&mut self.t, x.rows, down.rows);
+                    gemm_nt_into(x, down, &mut self.t, policy);
+                    gemm_nt_acc_into(&self.t, up, y, policy);
+                }
+            }
+        }
+        for r in 0..y.rows {
+            for (v, b) in y.row_mut(r).iter_mut().zip(&self.bias) {
+                *v += *b;
+            }
+        }
+    }
+}
+
+/// One transformer block's host-side state.
+struct HostBlock {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    qkv: HostLinear,
+    proj: HostLinear,
+    up: HostLinear,
+    down: HostLinear,
+}
+
+/// Reusable activation buffers — grown at the first batch of a given
+/// fill, reused thereafter (zero steady-state allocations).
+#[derive(Default)]
+struct HostWs {
+    /// Residual stream, `(k·S, d)`.
+    h: Matrix,
+    /// Layer-norm output staging.
+    hn: Matrix,
+    /// Fused QKV projection, `(k·S, 3d)`.
+    qkv: Matrix,
+    /// Attention output, `(k·S, d)`.
+    att: Matrix,
+    /// MLP upsample, `(k·S, d_ff)`.
+    up: Matrix,
+    /// Residual-branch staging (`proj` / `down` outputs), `(k·S, d)`.
+    branch: Matrix,
+    /// One query row's attention scores (`S` long).
+    scores: Vec<f32>,
+    /// Last-position hidden states, `(k, d)`.
+    last: Matrix,
+}
+
+/// Checkpoint-backed host executor for one manifest config (module docs).
+pub struct HostModel {
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// Block-weight planes restored directly from packed v2 planes (the
+    /// rest were re-compressed from `params.*` × `masks.*`).
+    pub packed_restored: usize,
+    policy: ParallelPolicy,
+    tok_emb: Matrix,
+    pos_emb: Matrix,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    /// Untied LM head; `None` = tied to `tok_emb` (the default configs).
+    head_w: Option<Matrix>,
+    blocks: Vec<HostBlock>,
+    ws: HostWs,
+}
+
+impl HostModel {
+    /// Build the executor from checkpointed state: the literal store's
+    /// `params.*`/`masks.*`/`lora.*` planes, plus any pre-packed
+    /// [`CompressedNm`] planes (keyed by the weight's `params.…` name),
+    /// which skip re-compression.
+    pub fn from_store(manifest: &Manifest, store: &Store,
+                      packed: &HashMap<String, CompressedNm>,
+                      policy: ParallelPolicy) -> crate::Result<Self> {
+        let c = &manifest.config;
+        let tok_emb = store.read_matrix("params.tok_emb")?;
+        crate::ensure!(
+            tok_emb.rows == c.vocab_size && tok_emb.cols == c.d_model,
+            "tok_emb is {}x{}, manifest says {}x{}",
+            tok_emb.rows, tok_emb.cols, c.vocab_size, c.d_model
+        );
+        let pos_emb = store.read_matrix("params.pos_emb")?;
+        crate::ensure!(
+            pos_emb.rows >= c.seq_len && pos_emb.cols == c.d_model,
+            "pos_emb ({}x{}) too short for seq_len {}",
+            pos_emb.rows, pos_emb.cols, c.seq_len
+        );
+        let lnf_g = store.read_f32("params.lnf_g")?;
+        let lnf_b = store.read_f32("params.lnf_b")?;
+        let head_w = if store.contains("params.head_w") {
+            Some(store.read_matrix("params.head_w")?)
+        } else {
+            None
+        };
+        let mut packed_restored = 0usize;
+        let mut blocks = Vec::with_capacity(c.n_layer);
+        for layer in 0..c.n_layer {
+            let ln = |suffix: &str| store.read_f32(&format!("params.blocks.{layer}.{suffix}"));
+            blocks.push(HostBlock {
+                ln1_g: ln("ln1_g")?,
+                ln1_b: ln("ln1_b")?,
+                ln2_g: ln("ln2_g")?,
+                ln2_b: ln("ln2_b")?,
+                qkv: build_linear(manifest, store, packed, layer, "wqkv", "bqkv",
+                                  &mut packed_restored)?,
+                proj: build_linear(manifest, store, packed, layer, "wproj", "bproj",
+                                   &mut packed_restored)?,
+                up: build_linear(manifest, store, packed, layer, "wup", "bup",
+                                 &mut packed_restored)?,
+                down: build_linear(manifest, store, packed, layer, "wdown", "bdown",
+                                   &mut packed_restored)?,
+            });
+        }
+        Ok(Self {
+            n_layer: c.n_layer,
+            n_head: c.n_head,
+            d_model: c.d_model,
+            d_ff: c.d_ff,
+            vocab: c.vocab_size,
+            seq_len: c.seq_len,
+            packed_restored,
+            policy,
+            tok_emb,
+            pos_emb,
+            lnf_g,
+            lnf_b,
+            head_w,
+            blocks,
+            ws: HostWs::default(),
+        })
+    }
+
+    /// Next-token logits for `k` coalesced sequences: `tokens` holds
+    /// `k × seq_len` ids row-major; writes the last position's logits —
+    /// `(k, vocab)` — into `y`.  Steady state reuses every internal
+    /// buffer, so repeat calls at a stable fill allocate nothing.
+    pub fn forward_last_logits_into(&mut self, tokens: &[i32], k: usize,
+                                    y: &mut Matrix) -> crate::Result<()> {
+        let (s, d) = (self.seq_len, self.d_model);
+        crate::ensure!(
+            tokens.len() == k * s,
+            "expected {k}×{s} tokens, got {}",
+            tokens.len()
+        );
+        crate::ensure!(k > 0, "empty batch");
+        let rows = k * s;
+        let (n_head, vocab) = (self.n_head, self.vocab);
+        let policy = self.policy;
+        let Self { ws, blocks, tok_emb, pos_emb, lnf_g, lnf_b, head_w, .. } = self;
+
+        // Embedding: h[b·S + t] = tok_emb[token] + pos_emb[t].
+        ensure_out(&mut ws.h, rows, d);
+        for b in 0..k {
+            for t in 0..s {
+                let tok = tokens[b * s + t];
+                crate::ensure!(
+                    tok >= 0 && (tok as usize) < vocab,
+                    "token id {tok} outside vocab 0..{vocab}"
+                );
+                let dst = ws.h.row_mut(b * s + t);
+                let te = tok_emb.row(tok as usize);
+                let pe = pos_emb.row(t);
+                for j in 0..d {
+                    dst[j] = te[j] + pe[j];
+                }
+            }
+        }
+
+        for blk in blocks.iter_mut() {
+            // Attention sub-block: ln1 → qkv → causal attention → proj.
+            layer_norm_into(&ws.h, &blk.ln1_g, &blk.ln1_b, &mut ws.hn);
+            blk.qkv.forward_into(&ws.hn, &mut ws.qkv, &policy);
+            causal_attention_into(&ws.qkv, k, s, d, n_head, &mut ws.scores, &mut ws.att);
+            blk.proj.forward_into(&ws.att, &mut ws.branch, &policy);
+            add_inplace(&mut ws.h, &ws.branch);
+            // MLP sub-block: ln2 → up → gelu → down.
+            layer_norm_into(&ws.h, &blk.ln2_g, &blk.ln2_b, &mut ws.hn);
+            blk.up.forward_into(&ws.hn, &mut ws.up, &policy);
+            gelu_tanh_inplace(&mut ws.up);
+            blk.down.forward_into(&ws.up, &mut ws.branch, &policy);
+            add_inplace(&mut ws.h, &ws.branch);
+        }
+
+        layer_norm_into(&ws.h, lnf_g, lnf_b, &mut ws.hn);
+        ensure_out(&mut ws.last, k, d);
+        for b in 0..k {
+            let src_row = b * s + (s - 1);
+            ws.last.row_mut(b).copy_from_slice(ws.hn.row(src_row));
+        }
+        let head: &Matrix = match &*head_w {
+            Some(hw) => hw,
+            None => &*tok_emb,
+        };
+        ensure_out(y, k, vocab);
+        gemm_nt_into(&ws.last, head, y, &policy);
+        Ok(())
+    }
+
+    /// The policy every kernel call of this executor runs under.
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
+    }
+}
+
+/// Assemble one block linear from the store (+ optional packed plane).
+fn build_linear(manifest: &Manifest, store: &Store, packed: &HashMap<String, CompressedNm>,
+                layer: usize, wname: &str, bname: &str,
+                packed_restored: &mut usize) -> crate::Result<HostLinear> {
+    let pname = format!("params.blocks.{layer}.{wname}");
+    let bias = store.read_f32(&format!("params.blocks.{layer}.{bname}"))?;
+    let down_name = format!("lora.blocks.{layer}.{wname}_down");
+    let up_name = format!("lora.blocks.{layer}.{wname}_up");
+    let lora = if store.contains(&down_name) && store.contains(&up_name) {
+        Some((store.read_matrix(&up_name)?, store.read_matrix(&down_name)?))
+    } else {
+        None
+    };
+    let w = if let Some(c) = packed.get(&pname) {
+        *packed_restored += 1;
+        HostWeight::Sparse(c.clone())
+    } else if let Some(c) =
+        checkpoint::packed_plane_from_store(store, manifest, layer, wname)?
+    {
+        // No pre-packed plane shipped (pre-packing checkpoint): compress
+        // through the same rule the checkpoint writer uses.
+        HostWeight::Sparse(c)
+    } else {
+        // Dense route — unpruned weight, or a non-N:M (dynamic-baseline)
+        // mask.  Python's forward always multiplies by mask_r (ones
+        // included), so apply any stored mask.
+        let dense = store.read_matrix(&pname)?;
+        let mname = format!("masks.blocks.{layer}.{wname}_r");
+        if store.contains(&mname) {
+            let mm = store.read_matrix(&mname)?;
+            crate::ensure!(
+                (mm.rows, mm.cols) == (dense.rows, dense.cols),
+                "mask {mname} shape mismatch"
+            );
+            HostWeight::Dense(dense.hadamard(&mm))
+        } else {
+            HostWeight::Dense(dense)
+        }
+    };
+    if let Some((up, down)) = &lora {
+        let d_out = match &w {
+            HostWeight::Dense(m) => m.rows,
+            HostWeight::Sparse(c) => c.rows,
+        };
+        let d_in = match &w {
+            HostWeight::Dense(m) => m.cols,
+            HostWeight::Sparse(c) => c.cols,
+        };
+        crate::ensure!(
+            up.rows == d_out && down.cols == d_in && up.cols == down.rows,
+            "lora factors for {pname} do not fit ({}x{} / {}x{} vs {d_out}x{d_in})",
+            up.rows, up.cols, down.rows, down.cols
+        );
+    }
+    crate::ensure!(
+        bias.len() == match &w {
+            HostWeight::Dense(m) => m.rows,
+            HostWeight::Sparse(c) => c.rows,
+        },
+        "bias length mismatch for {pname}"
+    );
+    Ok(HostLinear { w, bias, lora, t: Matrix::zeros(0, 0) })
+}
+
+/// Row-wise layer norm (ε = 1e-5, matching python `layers.layer_norm`).
+fn layer_norm_into(x: &Matrix, g: &[f32], b: &[f32], y: &mut Matrix) {
+    ensure_out(y, x.rows, x.cols);
+    let n = x.cols as f32;
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let mut mu = 0.0f32;
+        for v in xr {
+            mu += *v;
+        }
+        mu /= n;
+        let mut var = 0.0f32;
+        for v in xr {
+            let dv = *v - mu;
+            var += dv * dv;
+        }
+        var /= n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let yr = y.row_mut(r);
+        for j in 0..xr.len() {
+            yr[j] = (xr[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// Standard causal multi-head attention over a fused-QKV activation:
+/// `qkv` rows are `[q | k | v]` (`3d` wide); writes `(k·S, d)` into
+/// `out`.  One query row at a time with max-subtracted softmax — the
+/// same math as python `layers.causal_attention`.
+fn causal_attention_into(qkv: &Matrix, batch: usize, s: usize, d: usize, n_head: usize,
+                         scores: &mut Vec<f32>, out: &mut Matrix) {
+    ensure_out(out, batch * s, d);
+    let hd = d / n_head;
+    let scale = 1.0 / (hd as f32).sqrt();
+    if scores.len() < s {
+        scores.resize(s, 0.0);
+    }
+    for b in 0..batch {
+        for h in 0..n_head {
+            let qo = h * hd;
+            let ko = d + h * hd;
+            let vo = 2 * d + h * hd;
+            for q in 0..s {
+                let qrow = &qkv.row(b * s + q)[qo..qo + hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for t in 0..=q {
+                    let krow = &qkv.row(b * s + t)[ko..ko + hd];
+                    let sc = dot(qrow, krow, hd) * scale;
+                    scores[t] = sc;
+                    if sc > maxv {
+                        maxv = sc;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut().take(q + 1) {
+                    let e = (*sc - maxv).exp();
+                    *sc = e;
+                    denom += e;
+                }
+                let inv = 1.0 / denom;
+                let orow = &mut out.row_mut(b * s + q)[qo..qo + hd];
+                orow.fill(0.0);
+                for t in 0..=q {
+                    let wgt = scores[t] * inv;
+                    let vrow = &qkv.row(b * s + t)[vo..vo + hd];
+                    for j in 0..hd {
+                        orow[j] += wgt * vrow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Element-wise residual add.
+fn add_inplace(acc: &mut Matrix, rhs: &Matrix) {
+    debug_assert_eq!((acc.rows, acc.cols), (rhs.rows, rhs.cols));
+    for (a, r) in acc.data.iter_mut().zip(&rhs.data) {
+        *a += *r;
+    }
+}
+
+/// Tanh-approximate GELU — `jax.nn.gelu`'s default, which is what the
+/// AOT executables compute.
+fn gelu_tanh_inplace(m: &mut Matrix) {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    for v in m.data.iter_mut() {
+        let x = *v;
+        let inner = SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x);
+        *v = 0.5 * x * (1.0 + inner.tanh());
+    }
+}
+
+// ---- synthetic artifact fixture ---------------------------------------
+
+/// Shape of a synthetic (host-servable) artifact (see
+/// [`write_synthetic_artifact`]).
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    /// Adapter rank (0 disables the `lora.*` planes).
+    pub rank: usize,
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        Self {
+            name: "synth-nano".into(),
+            vocab: 96,
+            n_layer: 2,
+            n_head: 2,
+            d_model: 32,
+            d_ff: 64,
+            seq_len: 12,
+            batch_size: 16,
+            rank: 4,
+            seed: 0x51,
+        }
+    }
+}
+
+/// Fabricate a self-contained artifact directory: a `manifest.json` plus a
+/// serving checkpoint (store planes + packed v2 weight planes) for a
+/// random model of the given shape — everything
+/// [`crate::serve::AotModel`] needs, with no python or XLA involved.
+/// Deviations from a trained artifact are deliberate and noted: adapter
+/// `up` factors are non-zero (a freshly-initialized LoRA is an exact
+/// no-op, which would leave the adapter path untested), and the
+/// `executables` section lists only the inference entry points with their
+/// token/logit signatures (the fixture ships no HLO, so the PJRT probe
+/// always falls through to the host executor).
+pub fn write_synthetic_artifact(dir: &Path, spec: &SynthSpec) -> crate::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let (v, l, d, f, s, bsz) =
+        (spec.vocab, spec.n_layer, spec.d_model, spec.d_ff, spec.seq_len, spec.batch_size);
+    crate::ensure!(d % spec.n_head == 0, "d_model must divide by n_head");
+    crate::ensure!(d % 4 == 0 && f % 4 == 0, "synthetic dims must be 2:4 groupable");
+    let n_params = v * d + s * d + l * (3 * d * d + d * d + 2 * d * f);
+    let manifest_json = format!(
+        r#"{{
+  "config": {{
+    "name": "{name}", "vocab_size": {v}, "n_layer": {l}, "n_head": {nh},
+    "d_model": {d}, "d_ff": {f}, "seq_len": {s}, "batch_size": {bsz},
+    "adapter_rank": {rank}, "first_half_sparsity": [2, 4],
+    "second_half_sparsity": [2, 4], "prune_attn": true, "prune_mlp": true,
+    "n_params_dense": {n_params}
+  }},
+  "train": {{
+    "lr": 0.001, "weight_decay": 0.1, "warmup_steps": 10, "total_steps": 100,
+    "lazy_fraction": 0.01, "srste_decay": 0.0002
+  }},
+  "sparsity_format": {{
+    "layout": "eq7-packed-offsets-v1", "row_byte_aligned": true,
+    "offset_bits_first_half": 2, "offset_bits_second_half": 2
+  }},
+  "executables": {{
+    "forward": {{
+      "file": "forward.hlo.txt",
+      "inputs": [{{"name": "tokens", "shape": [{bsz}, {s}], "dtype": "int32"}}],
+      "outputs": [{{"name": "logits", "shape": [{bsz}, {s}, {v}], "dtype": "float32"}}]
+    }},
+    "forward_lora": {{
+      "file": "forward_lora.hlo.txt",
+      "inputs": [{{"name": "tokens", "shape": [{bsz}, {s}], "dtype": "int32"}}],
+      "outputs": [{{"name": "logits", "shape": [{bsz}, {s}, {v}], "dtype": "float32"}}]
+    }}
+  }}
+}}
+"#,
+        name = spec.name,
+        nh = spec.n_head,
+        rank = spec.rank,
+    );
+    std::fs::write(dir.join("manifest.json"), manifest_json)?;
+    let manifest = Manifest::load(dir)?;
+
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let mut store = Store::new();
+    let put = |store: &mut Store, name: &str, m: &Matrix| -> crate::Result<()> {
+        store.put_f32(name, &[m.rows, m.cols], &m.data)
+    };
+    put(&mut store, "params.tok_emb", &Matrix::randn(v, d, 0.02, &mut rng))?;
+    put(&mut store, "params.pos_emb", &Matrix::randn(s, d, 0.01, &mut rng))?;
+    store.put_f32("params.lnf_g", &[d], &vec![1.0; d])?;
+    store.put_f32("params.lnf_b", &[d], &vec![0.0; d])?;
+    for layer in 0..l {
+        for suffix in ["ln1_g", "ln2_g"] {
+            store.put_f32(&format!("params.blocks.{layer}.{suffix}"), &[d], &vec![1.0; d])?;
+        }
+        for suffix in ["ln1_b", "ln2_b"] {
+            store.put_f32(&format!("params.blocks.{layer}.{suffix}"), &[d], &vec![0.0; d])?;
+        }
+        let dims: [(&str, &str, usize, usize); 4] = [
+            ("wqkv", "bqkv", 3 * d, d),
+            ("wproj", "bproj", d, d),
+            ("wup", "bup", f, d),
+            ("wdown", "bdown", d, f),
+        ];
+        for (wname, bname, d_out, d_in) in dims {
+            let scale = 0.25 / (d_in as f32).sqrt();
+            let mut w = Matrix::randn(d_out, d_in, scale, &mut rng);
+            let (n, m) = manifest.scheme_for_layer(layer);
+            let scheme = NmScheme::new(n, m);
+            let mask = if manifest.is_pruned(layer, wname) {
+                random_row_mask(d_out, d_in, scheme, &mut rng)
+            } else {
+                Mask::ones(d_out, d_in)
+            };
+            // Training stores weights projected onto the support.
+            w = mask.apply(&w);
+            put(&mut store, &format!("params.blocks.{layer}.{wname}"), &w)?;
+            put(&mut store, &format!("masks.blocks.{layer}.{wname}_r"),
+                &mask.to_matrix())?;
+            store.put_f32(
+                &format!("params.blocks.{layer}.{bname}"),
+                &[d_out],
+                &Matrix::randn(1, d_out, 0.02, &mut rng).data,
+            )?;
+            if spec.rank > 0 {
+                put(&mut store, &format!("lora.blocks.{layer}.{wname}_down"),
+                    &Matrix::randn(spec.rank, d_in, 0.02, &mut rng))?;
+                put(&mut store, &format!("lora.blocks.{layer}.{wname}_up"),
+                    &Matrix::randn(d_out, spec.rank, 0.05, &mut rng))?;
+            }
+        }
+    }
+    crate::coordinator::checkpoint::save_model_checkpoint(&store, &manifest, dir)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_artifact_roundtrips_through_host_model() {
+        let dir = std::env::temp_dir().join("slope_host_synth_test");
+        let spec = SynthSpec { seed: 3, ..SynthSpec::default() };
+        write_synthetic_artifact(&dir, &spec).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let (store, packed) =
+            crate::coordinator::checkpoint::load_model_checkpoint(&dir).unwrap();
+        let mut hm = HostModel::from_store(&manifest, &store, &packed,
+                                           ParallelPolicy::with_threads(2))
+            .unwrap();
+        // layer-0 wqkv stays dense ⇒ 2·4 − 1 packed planes.
+        assert_eq!(hm.packed_restored, 2 * 4 - 1);
+        let mut rng = Rng::seed_from_u64(9);
+        let k = 3;
+        let tokens: Vec<i32> =
+            (0..k * spec.seq_len).map(|_| rng.below(spec.vocab) as i32).collect();
+        let mut y = Matrix::zeros(0, 0);
+        hm.forward_last_logits_into(&tokens, k, &mut y).unwrap();
+        assert_eq!((y.rows, y.cols), (k, spec.vocab));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // Same tokens, different coalescing: single rows must reproduce the
+        // batched rows bit-for-bit (row-independent forward).
+        for b in 0..k {
+            let mut y1 = Matrix::zeros(0, 0);
+            hm.forward_last_logits_into(&tokens[b * spec.seq_len..(b + 1) * spec.seq_len],
+                                        1, &mut y1)
+                .unwrap();
+            assert_eq!(y1.row(0), y.row(b), "row {b} must not depend on batch fill");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_range_tokens_rejected() {
+        let dir = std::env::temp_dir().join("slope_host_synth_range_test");
+        let spec = SynthSpec { seed: 4, ..SynthSpec::default() };
+        write_synthetic_artifact(&dir, &spec).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let (store, packed) =
+            crate::coordinator::checkpoint::load_model_checkpoint(&dir).unwrap();
+        let mut hm = HostModel::from_store(&manifest, &store, &packed,
+                                           ParallelPolicy::serial())
+            .unwrap();
+        let mut y = Matrix::zeros(0, 0);
+        let bad = vec![spec.vocab as i32; spec.seq_len];
+        assert!(hm.forward_last_logits_into(&bad, 1, &mut y).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -9,6 +9,11 @@ use crate::util::Json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+/// The four block weights the sparsity policy ranges over, in python's
+/// `compile.model.SPARSE_WEIGHTS` order (checkpoint/store names are
+/// `params.blocks.<i>.<wname>`).
+pub const SPARSE_WEIGHTS: [&str; 4] = ["wqkv", "wproj", "wup", "wdown"];
+
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
     pub name: String,
@@ -193,5 +198,37 @@ impl Manifest {
     /// Batch-of-tokens shape for the train/eval steps: (B, S+1).
     pub fn train_tokens_shape(&self) -> (usize, usize) {
         (self.config.batch_size, self.config.seq_len + 1)
+    }
+
+    /// Batch-of-tokens shape for the inference executables
+    /// (`forward` / `forward_lora`): (B, S).
+    pub fn forward_tokens_shape(&self) -> (usize, usize) {
+        (self.config.batch_size, self.config.seq_len)
+    }
+
+    /// N:M scheme for block `layer` — the paper's per-half split
+    /// (`first_half_sparsity` for blocks `[0, n_layer/2)`, the second-half
+    /// scheme for the rest), mirroring python
+    /// `ModelConfig.sparsity_for_layer` exactly.
+    pub fn scheme_for_layer(&self, layer: usize) -> (usize, usize) {
+        if layer < self.config.n_layer / 2 {
+            self.config.first_half_sparsity
+        } else {
+            self.config.second_half_sparsity
+        }
+    }
+
+    /// Whether block `layer`'s weight `wname` carries a real N:M mask —
+    /// the mirror of python `compile.model._is_pruned` (§3.2: the first
+    /// linear after the input and any module disabled by the
+    /// `prune_attn` / `prune_mlp` ablation stay dense).
+    pub fn is_pruned(&self, layer: usize, wname: &str) -> bool {
+        if matches!(wname, "wqkv" | "wproj") && !self.config.prune_attn {
+            return false;
+        }
+        if matches!(wname, "wup" | "wdown") && !self.config.prune_mlp {
+            return false;
+        }
+        !(layer == 0 && wname == "wqkv")
     }
 }

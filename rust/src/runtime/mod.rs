@@ -17,13 +17,21 @@
 //!   literals; on the CPU PJRT backend device==host and the copy is a
 //!   memcpy — measured < 3% of step time for every config we ship
 //!   (EXPERIMENTS.md §Perf).
+//! * [`host`] provides the **host kernel executor**: a checkpoint-backed
+//!   implementation of the manifest's `forward`/`forward_lora` semantics
+//!   running on the crate's own sparse kernel engine, used by
+//!   `slope serve --manifest` wherever PJRT compile is unavailable (the
+//!   offline stub, or a checkpoint directory without HLO files).
 
+pub mod host;
 pub mod manifest;
 pub mod store;
 
-pub use manifest::{ExeSpec, Manifest, TensorSpec};
+pub use host::{write_synthetic_artifact, HostModel, SynthSpec};
+pub use manifest::{ExeSpec, Manifest, TensorSpec, SPARSE_WEIGHTS};
 pub use store::Store;
 
+use crate::backend::ParallelPolicy;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -45,6 +53,13 @@ pub struct Session {
     pub manifest: Manifest,
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Execution parallelism for work dispatched through this session
+    /// (`RunConfig.parallel` threads through here).  Consumed today by the
+    /// host kernel executor ([`HostModel`]) behind manifest-backed
+    /// serving; on a real PJRT backend it is the intra-op thread-count
+    /// hint the client should be created with (xla-rs 0.1.6 exposes no
+    /// knob, so there it is advisory).
+    parallel: ParallelPolicy,
 }
 
 impl Session {
@@ -52,7 +67,18 @@ impl Session {
     pub fn open(artifact_dir: &Path) -> crate::Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| crate::eyre!("PJRT cpu client: {e}"))?;
-        Ok(Self { manifest, client, cache: HashMap::new() })
+        Ok(Self { manifest, client, cache: HashMap::new(), parallel: ParallelPolicy::serial() })
+    }
+
+    /// Set the execution parallelism for this session (see the `parallel`
+    /// field docs).  Cached sessions keep the most recent caller's policy.
+    pub fn set_parallel(&mut self, policy: ParallelPolicy) {
+        self.parallel = policy;
+    }
+
+    /// The session's execution-parallelism policy.
+    pub fn parallel(&self) -> ParallelPolicy {
+        self.parallel
     }
 
     /// Process-wide cached open: reuses compiled executables across runs on

@@ -6,6 +6,7 @@
 //! trip: all-ones masks (dense baseline), zero adapters, i32 token batches.
 
 use super::manifest::TensorSpec;
+use crate::tensor::Matrix;
 use std::collections::HashMap;
 
 pub struct Store {
@@ -103,6 +104,29 @@ impl Store {
 
     pub fn read_scalar_f32(&self, name: &str) -> crate::Result<f32> {
         Ok(self.read_f32(name)?[0])
+    }
+
+    /// Read a tensor into a caller-owned buffer (cleared, then filled), so
+    /// hot loops reuse the buffer's capacity across calls.  The literal
+    /// API itself still materializes one transient host copy — that copy
+    /// is inherent to PJRT host transfers, not to this call.
+    pub fn read_f32_into(&self, name: &str, out: &mut Vec<f32>) -> crate::Result<()> {
+        let v = self.read_f32(name)?;
+        out.clear();
+        out.extend_from_slice(&v);
+        Ok(())
+    }
+
+    /// Read a rank-2 f32 tensor as a [`Matrix`] (the shape comes from the
+    /// stored literal) — the bridge from checkpointed AOT state to the
+    /// CPU kernel backend's operands.
+    pub fn read_matrix(&self, name: &str) -> crate::Result<Matrix> {
+        let lit = self.get(name)?;
+        let shape = lit.array_shape().map_err(|e| crate::eyre!("shape of {name}: {e}"))?;
+        let dims = shape.dims().to_vec();
+        crate::ensure!(dims.len() == 2, "{name} is not rank-2 (dims {dims:?})");
+        let data = lit.to_vec::<f32>().map_err(|e| crate::eyre!("read {name}: {e}"))?;
+        Ok(Matrix::from_vec(dims[0] as usize, dims[1] as usize, data))
     }
 }
 

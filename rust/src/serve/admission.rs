@@ -1,0 +1,335 @@
+//! Async admission: concurrent producers over the externally-clocked
+//! engine.
+//!
+//! [`ServeEngine`] is single-threaded by design (submit/poll under one
+//! caller's clock), which keeps the batching policy deterministic and
+//! testable — but a deployment has many producers.  [`Admission`] bridges
+//! the two with the classic channel-fed dispatch-thread shape:
+//!
+//! * any number of [`AdmissionClient`]s (cheap to mint, `Send`) push
+//!   requests into an mpsc queue, each tagged with a caller-chosen id;
+//! * one dedicated dispatch thread owns the engine, draining the queue
+//!   into [`ServeEngine::submit`] and polling on a short tick so
+//!   `max_wait` deadlines fire between arrivals;
+//! * completed [`Response`]s are routed back to the submitting client
+//!   over its private reply channel.
+//!
+//! The engine is **built inside the dispatch thread** (the `spawn`
+//! closure), not handed over: an [`crate::serve::AotModel`] holds a
+//! thread-local cached `Session` and cannot cross threads, and the warm
+//! kernel stack is cheaper to build where it will run anyway.
+//!
+//! Because every [`crate::serve::ServeModel`] is row-independent, the
+//! nondeterministic coalescing that concurrency produces never changes
+//! any response's payload — N concurrent producers get the same answers
+//! serial submission would give them (pinned in
+//! `tests/serve_model.rs`) — only the *latency distribution* moves, which
+//! is exactly what `slope serve --producers N` measures (p50/p95/p99
+//! under contention).
+//!
+//! Shutdown: drop every client, then call [`Admission::finish`] — the
+//! dispatch thread sees the queue disconnect, flushes the engine, routes
+//! the tail, and returns the final [`StatsSummary`].
+
+use crate::serve::engine::{Response, ServeEngine};
+use crate::serve::model::ServeModel;
+use crate::serve::stats::StatsSummary;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One routed reply: the client's tag plus the outcome.
+pub type Reply = (u64, crate::Result<Response>);
+
+enum Msg {
+    Submit { tag: u64, input: Vec<f32>, reply: Sender<Reply> },
+}
+
+/// Handle to a running admission front-end (module docs).
+pub struct Admission {
+    tx: Option<Sender<Msg>>,
+    dispatcher: Option<JoinHandle<crate::Result<StatsSummary>>>,
+    /// Cleared (via a drop guard) when the dispatch thread exits for any
+    /// reason — clients poll it so a dead dispatcher can never strand
+    /// them in `recv` (each client holds its own reply sender, so the
+    /// reply channel alone cannot signal disconnection).
+    alive: Arc<AtomicBool>,
+}
+
+/// A producer-side handle: submit tagged inputs, receive tagged replies.
+/// Mint one per producer thread with [`Admission::client`].
+pub struct AdmissionClient {
+    tx: Sender<Msg>,
+    reply_tx: Sender<Reply>,
+    reply_rx: Receiver<Reply>,
+    alive: Arc<AtomicBool>,
+}
+
+impl Admission {
+    /// Start the dispatch thread.  `build` runs on that thread and
+    /// constructs the engine (see module docs for why); `tick` bounds how
+    /// long the dispatcher sleeps between polls when no requests arrive —
+    /// it should be a fraction of the batch policy's `max_wait` (see
+    /// [`Admission::tick_for`]).
+    pub fn spawn<M, F>(build: F, tick: Duration) -> Self
+    where
+        M: ServeModel + 'static,
+        F: FnOnce() -> crate::Result<ServeEngine<M>> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let alive = Arc::new(AtomicBool::new(true));
+        let alive_in_thread = Arc::clone(&alive);
+        let dispatcher = std::thread::Builder::new()
+            .name("slope-admission".into())
+            .spawn(move || {
+                // Clears the liveness flag however the thread exits
+                // (return or panic).
+                struct ClearOnExit(Arc<AtomicBool>);
+                impl Drop for ClearOnExit {
+                    fn drop(&mut self) {
+                        self.0.store(false, Ordering::SeqCst);
+                    }
+                }
+                let _clear = ClearOnExit(alive_in_thread);
+                dispatch(build, rx, tick)
+            })
+            .expect("spawning admission dispatch thread");
+        Self { tx: Some(tx), dispatcher: Some(dispatcher), alive }
+    }
+
+    /// A reasonable dispatch tick for a batch policy: a quarter of
+    /// `max_wait`, clamped to [50 µs, 1 ms].
+    pub fn tick_for(max_wait: Duration) -> Duration {
+        (max_wait / 4).clamp(Duration::from_micros(50), Duration::from_millis(1))
+    }
+
+    /// Mint a producer handle (its own private reply channel).
+    pub fn client(&self) -> AdmissionClient {
+        let (reply_tx, reply_rx) = channel();
+        AdmissionClient {
+            tx: self.tx.as_ref().expect("admission already finished").clone(),
+            reply_tx,
+            reply_rx,
+            alive: Arc::clone(&self.alive),
+        }
+    }
+
+    /// Shut down: close the queue, let the dispatcher flush, and return
+    /// the engine's final stats.  Every [`AdmissionClient`] must be
+    /// dropped first (each holds a queue sender; the dispatcher only
+    /// stops once all senders are gone).
+    pub fn finish(mut self) -> crate::Result<StatsSummary> {
+        drop(self.tx.take());
+        match self.dispatcher.take().expect("admission finished twice").join() {
+            Ok(result) => result,
+            Err(_) => Err(crate::eyre!("admission dispatch thread panicked")),
+        }
+    }
+}
+
+impl AdmissionClient {
+    /// Enqueue one input under a caller-chosen tag (echoed on the reply).
+    /// Errors only if the admission queue has shut down.
+    pub fn submit(&self, tag: u64, input: Vec<f32>) -> crate::Result<()> {
+        self.tx
+            .send(Msg::Submit { tag, input, reply: self.reply_tx.clone() })
+            .map_err(|_| crate::eyre!("admission queue is closed"))
+    }
+
+    /// Block until the next reply for this client arrives.  Returns an
+    /// error (instead of hanging) if the dispatcher has died with the
+    /// request unanswered.
+    pub fn recv(&self) -> crate::Result<(u64, Response)> {
+        loop {
+            match self.reply_rx.recv_timeout(Duration::from_millis(5)) {
+                Ok((tag, result)) => return Ok((tag, result?)),
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.alive.load(Ordering::SeqCst) {
+                        // One last non-blocking look: a reply routed just
+                        // before shutdown must not be lost.
+                        if let Ok((tag, result)) = self.reply_rx.try_recv() {
+                            return Ok((tag, result?));
+                        }
+                        return Err(crate::eyre!("admission dispatcher is gone"));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(crate::eyre!("admission dispatcher is gone"));
+                }
+            }
+        }
+    }
+}
+
+/// The dispatch thread body: run the loop, and on a fatal error reply
+/// `Err` to every submission still sitting in the queue so no producer is
+/// left blocking on a reply that will never come (submissions arriving
+/// after this drain fail at `send` — the receiver is dropped with us).
+fn dispatch<M, F>(build: F, rx: Receiver<Msg>, tick: Duration) -> crate::Result<StatsSummary>
+where
+    M: ServeModel,
+    F: FnOnce() -> crate::Result<ServeEngine<M>>,
+{
+    let result = dispatch_loop(build, &rx, tick);
+    if let Err(e) = &result {
+        let why = e.to_string();
+        while let Ok(Msg::Submit { tag, reply, .. }) = rx.try_recv() {
+            let _ = reply.send((tag, Err(crate::eyre!("serve dispatch failed: {why}"))));
+        }
+    }
+    result
+}
+
+/// The dispatch loop (runs on the dedicated thread).
+fn dispatch_loop<M, F>(build: F, rx: &Receiver<Msg>,
+                       tick: Duration) -> crate::Result<StatsSummary>
+where
+    M: ServeModel,
+    F: FnOnce() -> crate::Result<ServeEngine<M>>,
+{
+    let mut engine = build()?;
+    let start = Instant::now();
+    let mut routes: HashMap<u64, (u64, Sender<Reply>)> = HashMap::new();
+    let mut open = true;
+    while open {
+        match rx.recv_timeout(tick) {
+            Ok(msg) => {
+                admit(&mut engine, msg, start, &mut routes);
+                // Drain whatever else queued up while we were busy, so a
+                // burst coalesces into one batch instead of one per tick.
+                while let Ok(msg) = rx.try_recv() {
+                    admit(&mut engine, msg, start, &mut routes);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => open = false,
+        }
+        // Dispatch EVERY due batch before sleeping again: a backlog must
+        // drain at compute speed, not at one batch per tick (the tick
+        // would otherwise dominate the tail latencies this front-end
+        // exists to measure).
+        loop {
+            let due = engine.poll(start.elapsed());
+            let drained = matches!(&due, Ok(v) if v.is_empty());
+            route(due, &mut routes)?;
+            if drained {
+                break;
+            }
+        }
+    }
+    let tail = engine.flush(start.elapsed());
+    route(tail, &mut routes)?;
+    Ok(engine.stats().summary())
+}
+
+fn admit<M: ServeModel>(engine: &mut ServeEngine<M>, msg: Msg, start: Instant,
+                        routes: &mut HashMap<u64, (u64, Sender<Reply>)>) {
+    let Msg::Submit { tag, input, reply } = msg;
+    match engine.submit(input, start.elapsed()) {
+        Ok(id) => {
+            routes.insert(id, (tag, reply));
+        }
+        Err(e) => {
+            let _ = reply.send((tag, Err(e)));
+        }
+    }
+}
+
+/// Send completed responses to their submitters; on an engine error,
+/// fail every outstanding route (the batch that died is unidentifiable
+/// from here) and propagate.
+fn route(result: crate::Result<Vec<Response>>,
+         routes: &mut HashMap<u64, (u64, Sender<Reply>)>) -> crate::Result<()> {
+    match result {
+        Ok(responses) => {
+            for resp in responses {
+                if let Some((tag, reply)) = routes.remove(&resp.id) {
+                    let _ = reply.send((tag, Ok(resp)));
+                }
+            }
+            Ok(())
+        }
+        Err(e) => {
+            let why = e.to_string();
+            for (_, (tag, reply)) in routes.drain() {
+                let _ = reply.send((tag, Err(crate::eyre!("serve dispatch failed: {why}"))));
+            }
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{ParallelPolicy, SparseBackend, SpmmAlgo};
+    use crate::serve::batcher::BatchPolicy;
+    use crate::serve::model::ServeLayer;
+    use crate::sparsity::{random_row_mask, NmScheme};
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    fn engine() -> crate::Result<ServeEngine> {
+        let mut rng = Rng::seed_from_u64(0xADA);
+        let w = Matrix::randn(8, 16, 1.0, &mut rng);
+        let mask = random_row_mask(8, 16, NmScheme::TWO_FOUR, &mut rng);
+        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor,
+                                      ParallelPolicy::serial());
+        ServeEngine::new(vec![ServeLayer::new(be, None)?],
+                         BatchPolicy::new(4, Duration::from_micros(200)))
+    }
+
+    #[test]
+    fn closed_loop_client_round_trips() {
+        let adm = Admission::spawn(engine, Duration::from_micros(100));
+        let client = adm.client();
+        for tag in 0..10u64 {
+            client.submit(tag, vec![tag as f32; 16]).unwrap();
+            let (got, resp) = client.recv().unwrap();
+            assert_eq!(got, tag);
+            assert_eq!(resp.output.len(), 8);
+        }
+        drop(client);
+        let stats = adm.finish().unwrap();
+        assert_eq!(stats.served, 10);
+    }
+
+    #[test]
+    fn bad_request_is_rejected_per_request_not_fatally() {
+        let adm = Admission::spawn(engine, Duration::from_micros(100));
+        let client = adm.client();
+        client.submit(7, vec![0.0; 3]).unwrap(); // wrong d_in
+        let (tag, result) = {
+            let (tag, r) = client.reply_rx.recv().unwrap();
+            (tag, r)
+        };
+        assert_eq!(tag, 7);
+        assert!(result.is_err(), "dimension mismatch surfaces on the reply");
+        // The queue stays serviceable.
+        client.submit(8, vec![1.0; 16]).unwrap();
+        let (tag, resp) = client.recv().unwrap();
+        assert_eq!(tag, 8);
+        assert_eq!(resp.output.len(), 8);
+        drop(client);
+        let stats = adm.finish().unwrap();
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn engine_build_failure_surfaces_at_finish() {
+        let adm = Admission::spawn(
+            || -> crate::Result<ServeEngine> { Err(crate::eyre!("no model")) },
+            Duration::from_micros(100),
+        );
+        let client = adm.client();
+        // Submissions may race the dispatcher's death; either the send or
+        // the reply fails, and finish reports the build error.
+        let _ = client.submit(0, vec![0.0; 16]);
+        drop(client);
+        let err = adm.finish().unwrap_err();
+        assert!(err.to_string().contains("no model"));
+    }
+}

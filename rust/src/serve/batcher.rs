@@ -88,8 +88,18 @@ impl Batcher {
     /// Pop the next batch (up to `max_batch` requests, FIFO).  Callers
     /// gate on [`Batcher::ready`]; `take_batch` itself just drains.
     pub fn take_batch(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        self.take_batch_into(&mut out);
+        out
+    }
+
+    /// [`Batcher::take_batch`] into a reusable buffer (cleared first) —
+    /// the engine's dispatch loop reuses one buffer across batches so
+    /// steady-state dispatch allocates nothing.
+    pub fn take_batch_into(&mut self, out: &mut Vec<Request>) {
+        out.clear();
         let k = self.queue.len().min(self.policy.max_batch);
-        self.queue.drain(..k).collect()
+        out.extend(self.queue.drain(..k));
     }
 }
 
@@ -133,5 +143,23 @@ mod tests {
         assert_eq!(b.take_batch().len(), 2);
         assert_eq!(b.take_batch().len(), 1);
         assert!(!b.ready(Duration::from_millis(999)), "empty queue is never ready");
+    }
+
+    #[test]
+    fn take_batch_into_reuses_the_buffer() {
+        let mut b = Batcher::new(BatchPolicy::new(4, Duration::from_millis(1)));
+        let mut buf = Vec::with_capacity(4);
+        for round in 0..3u64 {
+            for i in 0..4 {
+                b.push(req(round * 4 + i, 0));
+            }
+            let cap_before = buf.capacity();
+            b.take_batch_into(&mut buf);
+            assert_eq!(buf.len(), 4);
+            assert_eq!(buf[0].id, round * 4, "FIFO order per round");
+            if round > 0 {
+                assert_eq!(buf.capacity(), cap_before, "steady state must not regrow");
+            }
+        }
     }
 }

@@ -1,75 +1,29 @@
-//! The serving engine: warm sparse layers + coalescing batcher + stats.
+//! The serving engine: admission (batcher + stats + staging) generic
+//! over a [`ServeModel`].
 //!
-//! [`ServeEngine`] owns a stack of [`ServeLayer`]s — each a warm
-//! [`SparseBackend`] (compressed weight + workspace + kernel policy) with
-//! an optional fused LoRA adapter — and drives coalesced forward batches
-//! through them with zero steady-state allocations: the input staging
-//! matrix, every layer's activation buffer, and the LoRA rank staging are
-//! grown once at the first batch of a given fill and reused thereafter.
+//! [`ServeEngine<M>`] owns the coalescing [`Batcher`], the latency
+//! telemetry, and the reusable request-staging/output matrices; the model
+//! owns the math.  `ServeEngine::new` builds the classic kernel-stack
+//! engine ([`KernelStackModel`]); [`ServeEngine::with_model`] accepts any
+//! backend — notably [`crate::serve::AotModel`] for checkpointed
+//! manifest-backed transformers.  A model with a compiled batch cap
+//! ([`ServeModel::max_batch`]) clamps the batch policy at construction.
 //!
 //! The engine is clocked externally (`now` = [`Duration`] since engine
 //! start): [`ServeEngine::submit`] enqueues, [`ServeEngine::poll`]
 //! dispatches at most one batch when the [`Batcher`] says one is due, and
 //! [`ServeEngine::flush`] drains.  Latency = queue wait (virtual, from
 //! the caller's clock) + compute (measured).  The CLI (`slope serve`) and
-//! `examples/inference_serve.rs` drive it with `start.elapsed()`; tests
-//! drive it with synthetic timelines.
+//! `examples/inference_serve.rs` drive it with `start.elapsed()`; the
+//! async admission front-end ([`crate::serve::admission`]) wraps it in a
+//! dispatch thread; tests drive it with synthetic timelines.
 
-use crate::backend::{ensure_out, lora_fused_seq, SparseBackend};
+use crate::backend::ensure_out;
 use crate::serve::batcher::{BatchPolicy, Batcher, Request};
+use crate::serve::model::{KernelStackModel, ServeLayer, ServeModel};
 use crate::serve::stats::ServeStats;
 use crate::tensor::Matrix;
 use std::time::{Duration, Instant};
-
-/// A LoRA adapter pair for one layer (Eq. 11): `L: (d_out, r)`,
-/// `R: (r, d_in)`.
-#[derive(Clone, Debug)]
-pub struct LoraAdapter {
-    pub up: Matrix,
-    pub down: Matrix,
-}
-
-/// One serving layer: a warm sparse weight and an optional adapter.
-pub struct ServeLayer {
-    pub backend: SparseBackend,
-    pub lora: Option<LoraAdapter>,
-    /// Rank staging for the fused LoRA path (grown once).
-    t: Matrix,
-}
-
-impl ServeLayer {
-    pub fn new(backend: SparseBackend, lora: Option<LoraAdapter>) -> crate::Result<Self> {
-        if let Some(l) = &lora {
-            crate::ensure!(
-                l.up.rows == backend.w.rows && l.down.cols == backend.w.cols
-                    && l.up.cols == l.down.rows,
-                "lora shapes (up {}x{}, down {}x{}) do not fit layer {}x{}",
-                l.up.rows, l.up.cols, l.down.rows, l.down.cols,
-                backend.w.rows, backend.w.cols
-            );
-        }
-        Ok(Self { backend, lora, t: Matrix::zeros(0, 0) })
-    }
-
-    pub fn d_in(&self) -> usize {
-        self.backend.w.cols
-    }
-
-    pub fn d_out(&self) -> usize {
-        self.backend.w.rows
-    }
-
-    /// `y = x · Wᵀ (+ x · Rᵀ · Lᵀ)` into a caller-owned output — the
-    /// Eq.-11 fused serving sequence ([`lora_fused_seq`], shared with the
-    /// backend workspace path) through reusable buffers.
-    fn forward_into(&mut self, x: &Matrix, y: &mut Matrix) {
-        match &self.lora {
-            Some(l) => lora_fused_seq(self.backend.algo, &self.backend.policy, &self.backend.w,
-                                      x, &l.up, &l.down, &mut self.t, y),
-            None => self.backend.forward_into(x, y),
-        }
-    }
-}
 
 /// A completed request.
 #[derive(Clone, Debug)]
@@ -83,45 +37,62 @@ pub struct Response {
 }
 
 /// The serving engine (see module docs).
-pub struct ServeEngine {
-    layers: Vec<ServeLayer>,
+pub struct ServeEngine<M: ServeModel = KernelStackModel> {
+    model: M,
     batcher: Batcher,
     stats: ServeStats,
     staging: Matrix,
-    /// Ping-pong activation buffers between layers.
-    bufs: [Matrix; 2],
+    out: Matrix,
+    /// Reusable drain buffer for the dispatch loop.
+    batch_buf: Vec<Request>,
     next_id: u64,
 }
 
-impl ServeEngine {
-    /// Build an engine over a validated layer stack (each layer's `d_in`
-    /// must equal the previous layer's `d_out`).
+impl ServeEngine<KernelStackModel> {
+    /// Build the kernel-stack engine over a validated layer stack (each
+    /// layer's `d_in` must equal the previous layer's `d_out`).
     pub fn new(layers: Vec<ServeLayer>, policy: BatchPolicy) -> crate::Result<Self> {
-        crate::ensure!(!layers.is_empty(), "serve engine needs at least one layer");
-        for pair in layers.windows(2) {
-            crate::ensure!(
-                pair[1].d_in() == pair[0].d_out(),
-                "layer dims do not chain: {} -> {}",
-                pair[0].d_out(),
-                pair[1].d_in()
-            );
+        Self::with_model(KernelStackModel::new(layers)?, policy)
+    }
+}
+
+impl<M: ServeModel> ServeEngine<M> {
+    /// Build an engine over any [`ServeModel`].  `policy.max_batch` is
+    /// clamped to the model's compiled batch cap when it has one.
+    pub fn with_model(model: M, policy: BatchPolicy) -> crate::Result<Self> {
+        let mut policy = policy;
+        if let Some(cap) = model.max_batch() {
+            crate::ensure!(cap >= 1, "model reports a zero batch cap");
+            if policy.max_batch > cap {
+                policy = BatchPolicy::new(cap, policy.max_wait);
+            }
         }
         Ok(Self {
-            layers,
+            model,
             batcher: Batcher::new(policy),
             stats: ServeStats::default(),
             staging: Matrix::zeros(0, 0),
-            bufs: [Matrix::zeros(0, 0), Matrix::zeros(0, 0)],
+            out: Matrix::zeros(0, 0),
+            batch_buf: Vec::new(),
             next_id: 0,
         })
     }
 
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+
     pub fn d_in(&self) -> usize {
-        self.layers[0].d_in()
+        self.model.d_in()
     }
 
     pub fn d_out(&self) -> usize {
-        self.layers[self.layers.len() - 1].d_out()
+        self.model.d_out()
+    }
+
+    /// The (possibly model-clamped) batch policy in effect.
+    pub fn policy(&self) -> BatchPolicy {
+        self.batcher.policy()
     }
 
     pub fn pending(&self) -> usize {
@@ -133,7 +104,9 @@ impl ServeEngine {
     }
 
     /// Enqueue one request (`input` is a `d_in` feature row); returns its
-    /// id.  `now` is the caller's engine-relative clock.
+    /// id.  `now` is the caller's engine-relative clock.  Rejection here
+    /// (wrong length, or the model's [`ServeModel::validate_request`]) is
+    /// per-request; batch dispatch never sees a malformed payload.
     pub fn submit(&mut self, input: Vec<f32>, now: Duration) -> crate::Result<u64> {
         crate::ensure!(
             input.len() == self.d_in(),
@@ -141,6 +114,7 @@ impl ServeEngine {
             input.len(),
             self.d_in()
         );
+        self.model.validate_request(&input)?;
         let id = self.next_id;
         self.next_id += 1;
         self.batcher.push(Request { id, input, submitted: now });
@@ -149,57 +123,70 @@ impl ServeEngine {
 
     /// Dispatch at most one coalesced batch if the batcher says one is
     /// due at `now`; returns the completed responses (empty when not yet
-    /// due).
-    pub fn poll(&mut self, now: Duration) -> Vec<Response> {
+    /// due).  A model error leaves the engine usable; the failed batch's
+    /// requests are dropped.
+    pub fn poll(&mut self, now: Duration) -> crate::Result<Vec<Response>> {
         if !self.batcher.ready(now) {
-            return Vec::new();
+            return Ok(Vec::new());
         }
-        let batch = self.batcher.take_batch();
-        self.forward_batch(batch, now)
+        self.forward_batch(now)
     }
 
     /// Drain the queue regardless of policy (shutdown / end of stream).
-    pub fn flush(&mut self, now: Duration) -> Vec<Response> {
+    pub fn flush(&mut self, now: Duration) -> crate::Result<Vec<Response>> {
         let mut out = Vec::new();
         while !self.batcher.is_empty() {
-            let batch = self.batcher.take_batch();
-            out.extend(self.forward_batch(batch, now));
+            out.extend(self.forward_batch(now)?);
         }
-        out
+        Ok(out)
+    }
+
+    /// Drive a synthetic open-loop stream on the real clock: submit `n`
+    /// inputs from `make_input`, polling after each so batches coalesce
+    /// under real time, then flush the tail.  Returns the number of
+    /// completed responses (the single-submitter loop the CLI and
+    /// `examples/inference_serve.rs` share; stats accumulate on the
+    /// engine as usual).
+    pub fn run_open_loop<G>(&mut self, n: usize, mut make_input: G) -> crate::Result<usize>
+    where
+        G: FnMut() -> Vec<f32>,
+    {
+        let start = Instant::now();
+        let mut done = 0usize;
+        for _ in 0..n {
+            self.submit(make_input(), start.elapsed())?;
+            done += self.poll(start.elapsed())?.len();
+        }
+        done += self.flush(start.elapsed())?.len();
+        Ok(done)
     }
 
     /// Run one coalesced forward.  Steady state (same fill as the
-    /// previous batch) performs no heap allocation inside the kernels:
-    /// staging and activation buffers are shape-checked and reused.
-    fn forward_batch(&mut self, batch: Vec<Request>, now: Duration) -> Vec<Response> {
+    /// previous batch) performs no heap allocation inside the engine or
+    /// the kernels: the drain buffer, staging and output matrices are
+    /// shape-checked and reused.
+    fn forward_batch(&mut self, now: Duration) -> crate::Result<Vec<Response>> {
+        let mut batch = std::mem::take(&mut self.batch_buf);
+        self.batcher.take_batch_into(&mut batch);
         let k = batch.len();
         if k == 0 {
-            return Vec::new();
+            self.batch_buf = batch;
+            return Ok(Vec::new());
         }
-        let d_in = self.d_in();
+        let d_in = self.model.d_in();
         ensure_out(&mut self.staging, k, d_in);
         for (row, req) in batch.iter().enumerate() {
             self.staging.row_mut(row).copy_from_slice(&req.input);
         }
         let t0 = Instant::now();
-        // Ping-pong through the layer stack: layer i reads bufs[i%2 ^ 1]
-        // (or staging for i == 0) and writes bufs[i%2].
-        for i in 0..self.layers.len() {
-            let (x, y): (&Matrix, &mut Matrix) = if i == 0 {
-                let [b0, _] = &mut self.bufs;
-                (&self.staging, b0)
-            } else if i % 2 == 1 {
-                let [b0, b1] = &mut self.bufs;
-                (b0, b1)
-            } else {
-                let [b0, b1] = &mut self.bufs;
-                (b1, b0)
-            };
-            self.layers[i].forward_into(x, y);
+        let r = self.model.forward_batch_into(&self.staging, &mut self.out);
+        if let Err(e) = r {
+            batch.clear();
+            self.batch_buf = batch;
+            return Err(e);
         }
         let compute = t0.elapsed();
-        let last = (self.layers.len() - 1) % 2;
-        let out = &self.bufs[last];
+        debug_assert_eq!((self.out.rows, self.out.cols), (k, self.model.d_out()));
         let responses: Vec<Response> = batch
             .iter()
             .enumerate()
@@ -207,7 +194,7 @@ impl ServeEngine {
                 let queued = now.saturating_sub(req.submitted);
                 Response {
                     id: req.id,
-                    output: out.row(row).to_vec(),
+                    output: self.out.row(row).to_vec(),
                     queued,
                     latency: queued + compute,
                 }
@@ -218,14 +205,17 @@ impl ServeEngine {
             compute,
             responses.iter().map(|r| r.latency),
         );
-        responses
+        batch.clear();
+        self.batch_buf = batch;
+        Ok(responses)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{gemm_nt, ParallelPolicy, SpmmAlgo};
+    use crate::backend::{gemm_nt, ParallelPolicy, SparseBackend, SpmmAlgo};
+    use crate::serve::model::LoraAdapter;
     use crate::sparsity::{random_row_mask, NmScheme};
     use crate::util::Rng;
 
@@ -244,7 +234,7 @@ mod tests {
         ServeLayer::new(be, lora).unwrap()
     }
 
-    /// Dense reference for one layer: `x · (W masked)ᵀ + x·Rᵀ·Lᵀ`.
+    /// Dense reference for one layer stack: `x · (W masked)ᵀ + x·Rᵀ·Lᵀ`.
     fn reference(layers: &[ServeLayer], x: &Matrix) -> Matrix {
         let mut cur = x.clone();
         for l in layers {
@@ -272,7 +262,7 @@ mod tests {
         for r in 0..3 {
             eng.submit(x.row(r).to_vec(), Duration::ZERO).unwrap();
         }
-        let resp = eng.poll(Duration::ZERO);
+        let resp = eng.poll(Duration::ZERO).unwrap();
         assert_eq!(resp.len(), 3, "full batch dispatches at once");
         for (row, r) in resp.iter().enumerate() {
             let got = Matrix::from_vec(1, want.cols, r.output.clone());
@@ -302,18 +292,19 @@ mod tests {
         for _ in 0..3 {
             eng.submit(vec![0.5; 16], Duration::ZERO).unwrap();
         }
-        assert!(eng.poll(5 * MS).is_empty(), "partial batch below max_wait holds");
+        assert!(eng.poll(5 * MS).unwrap().is_empty(),
+                "partial batch below max_wait holds");
         // Fourth request completes the batch: dispatch on the next poll.
         eng.submit(vec![0.5; 16], 6 * MS).unwrap();
-        let r = eng.poll(6 * MS);
+        let r = eng.poll(6 * MS).unwrap();
         assert_eq!(r.len(), 4, "max_batch reached ⇒ immediate dispatch");
         assert_eq!(r[0].queued, 6 * MS);
         assert_eq!(r[3].queued, Duration::ZERO);
         // Two stragglers: held until the oldest has waited max_wait.
         eng.submit(vec![0.5; 16], 8 * MS).unwrap();
         eng.submit(vec![0.5; 16], 9 * MS).unwrap();
-        assert!(eng.poll(17 * MS).is_empty(), "9 ms < max_wait");
-        let r = eng.poll(18 * MS);
+        assert!(eng.poll(17 * MS).unwrap().is_empty(), "9 ms < max_wait");
+        let r = eng.poll(18 * MS).unwrap();
         assert_eq!(r.len(), 2, "max_wait exceeded ⇒ partial dispatch");
         assert!(r[0].queued >= 10 * MS);
         assert_eq!(eng.pending(), 0);
@@ -323,21 +314,24 @@ mod tests {
     #[test]
     fn steady_state_reuses_buffers() {
         let mut rng = Rng::seed_from_u64(3);
-        let mut eng = ServeEngine::new(vec![layer(32, 16, 4, 2, &mut rng)],
+        let mut eng = ServeEngine::new(vec![layer(32, 16, 4, 2, &mut rng),
+                                            layer(16, 32, 0, 2, &mut rng)],
                                        BatchPolicy::new(2, MS))
             .unwrap();
         for _ in 0..2 {
             eng.submit(vec![0.1; 16], Duration::ZERO).unwrap();
         }
-        eng.poll(Duration::ZERO);
+        eng.poll(Duration::ZERO).unwrap();
         let staging_ptr = eng.staging.data.as_ptr();
-        let buf_ptr = eng.bufs[0].data.as_ptr();
+        let out_ptr = eng.out.data.as_ptr();
+        let buf_ptr = eng.model().buf_ptr();
         for _ in 0..2 {
             eng.submit(vec![0.2; 16], MS).unwrap();
         }
-        eng.poll(MS);
+        eng.poll(MS).unwrap();
         assert_eq!(eng.staging.data.as_ptr(), staging_ptr, "staging must not realloc");
-        assert_eq!(eng.bufs[0].data.as_ptr(), buf_ptr, "activation buffer must not realloc");
+        assert_eq!(eng.out.data.as_ptr(), out_ptr, "output must not realloc");
+        assert_eq!(eng.model().buf_ptr(), buf_ptr, "activation buffer must not realloc");
     }
 
     #[test]
@@ -349,10 +343,42 @@ mod tests {
         for _ in 0..10 {
             eng.submit(vec![1.0; 16], Duration::ZERO).unwrap();
         }
-        let r = eng.flush(MS);
+        let r = eng.flush(MS).unwrap();
         assert_eq!(r.len(), 10);
         assert_eq!(eng.pending(), 0);
         let s = eng.stats().summary();
         assert_eq!(s.batches, 3, "10 requests at max_batch 4 ⇒ 4+4+2");
+    }
+
+    #[test]
+    fn model_batch_cap_clamps_policy() {
+        struct Tiny;
+        impl ServeModel for Tiny {
+            fn d_in(&self) -> usize {
+                2
+            }
+            fn d_out(&self) -> usize {
+                2
+            }
+            fn forward_batch_into(&mut self, x: &Matrix, y: &mut Matrix) -> crate::Result<()> {
+                ensure_out(y, x.rows, 2);
+                y.data.copy_from_slice(&x.data);
+                Ok(())
+            }
+            fn max_batch(&self) -> Option<usize> {
+                Some(3)
+            }
+            fn describe(&self) -> String {
+                "tiny".into()
+            }
+        }
+        let mut eng = ServeEngine::with_model(Tiny, BatchPolicy::new(64, MS)).unwrap();
+        assert_eq!(eng.policy().max_batch, 3, "policy clamps to the compiled batch");
+        for _ in 0..7 {
+            eng.submit(vec![1.0, 2.0], Duration::ZERO).unwrap();
+        }
+        let r = eng.flush(Duration::ZERO).unwrap();
+        assert_eq!(r.len(), 7);
+        assert_eq!(eng.stats().summary().batches, 3, "7 at cap 3 ⇒ 3+3+1");
     }
 }

@@ -1,27 +1,54 @@
 //! `slope::serve` — the first-class serving subsystem.
 //!
 //! SLoPe's headline inference claim (Table 2: up to 1.54× end-to-end
-//! speedup) is a *serving* claim, so deployment gets a real subsystem
-//! rather than an ad-hoc loop in an example:
+//! speedup) is a *serving* claim, so deployment gets a real subsystem.
+//! Its spine is one trait:
 //!
-//! * [`batcher`] — the coalescing request queue: dispatch at `max_batch`
-//!   fill or when the oldest request has waited `max_wait`;
-//! * [`engine`]  — [`ServeEngine`], owning warm [`crate::backend::SparseBackend`]s
-//!   (+ optional fused LoRA adapters) per layer and running coalesced
-//!   forwards with zero steady-state allocations;
-//! * [`stats`]   — p50/p95 latency, batch fill and throughput telemetry.
+//! ```text
+//!   producers ──mpsc──► [admission]  ──► ServeEngine<M: ServeModel> ──► M
+//!                        dispatch         batcher + stats + staging      the math
+//! ```
 //!
-//! The kernel engine underneath partitions a `batch = 1` forward across
-//! **output-column stripes** (see [`crate::backend::pool`]), so
-//! single-request latency-critical traffic scales with worker count too —
-//! the combination this subsystem exists to exercise.  Entry points:
-//! the `slope serve` CLI subcommand, `examples/inference_serve.rs`, and
-//! `benches/bench_serve.rs`.
+//! * [`model`] — [`ServeModel`], the coalesced-batch contract
+//!   (`d_in`/`d_out`/`forward_batch_into` + `max_batch`/`describe`
+//!   metadata), with two production implementations:
+//!   [`KernelStackModel`] (warm compressed-2:4 [`ServeLayer`]s + fused
+//!   LoRA, straight on the kernel engine) and [`AotModel`] (a
+//!   checkpointed transformer behind a manifest — PJRT when the
+//!   executables compile, the in-process host kernel executor
+//!   ([`crate::runtime::host`]) otherwise; requests are token sequences,
+//!   responses next-token logits);
+//! * [`engine`] — [`ServeEngine`], the externally-clocked admission core:
+//!   coalesces requests under a [`BatchPolicy`], stages them
+//!   allocation-free, runs the model, and records telemetry;
+//! * [`batcher`] — the coalescing queue: dispatch at `max_batch` fill or
+//!   when the oldest request has waited `max_wait`;
+//! * [`admission`] — the async front-end: mpsc producers + a dedicated
+//!   dispatch thread, so `slope serve --producers N` measures tail
+//!   latency under concurrent open-loop traffic;
+//! * [`stats`] — p50/p95/p99 latency, batch fill and throughput.
+//!
+//! Every model is **row-independent** (a response never depends on its
+//! batch-mates), so coalescing — however the producers race — is
+//! invisible in the payloads and visible only in the latency quantiles.
+//! The kernel engine underneath additionally stripes `batch = 1` forwards
+//! across **output columns** (see [`crate::backend::pool`]), so
+//! single-request latency-critical traffic scales with worker count too.
+//!
+//! Entry points: the `slope serve` CLI subcommand (`--manifest <dir>` for
+//! checkpointed transformers, the synthetic kernel stack otherwise,
+//! `--producers N` for concurrent admission), `examples/inference_serve.rs`,
+//! and `benches/bench_serve.rs` (both backends × batch {1, 4, 16} ×
+//! threads {1, 2, 4}).
 
+pub mod admission;
 pub mod batcher;
 pub mod engine;
+pub mod model;
 pub mod stats;
 
+pub use admission::{Admission, AdmissionClient, Reply};
 pub use batcher::{BatchPolicy, Batcher, Request};
-pub use engine::{LoraAdapter, Response, ServeEngine, ServeLayer};
+pub use engine::{Response, ServeEngine};
+pub use model::{AotModel, AotPath, KernelStackModel, LoraAdapter, ServeLayer, ServeModel};
 pub use stats::{ServeStats, StatsSummary};

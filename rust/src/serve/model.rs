@@ -1,0 +1,502 @@
+//! [`ServeModel`] — the one serving contract every engine backend
+//! implements, and its two production implementations.
+//!
+//! The redesign splits *what* is served from *how* requests are admitted:
+//! [`crate::serve::ServeEngine`] owns admission (batcher, stats, staging)
+//! and is generic over a `ServeModel`, which owns the math:
+//!
+//! * [`KernelStackModel`] — a stack of warm [`ServeLayer`]s (compressed
+//!   2:4 weight + optional fused LoRA adapter each) driven directly on
+//!   the CPU kernel engine, ping-ponging activations through two reusable
+//!   buffers.  The synthetic-stack path `slope serve` always had.
+//! * [`AotModel`] — a checkpointed transformer behind a manifest: opens
+//!   the artifact's cached [`Session`], restores the serving checkpoint
+//!   (packed v2 planes included), and runs the manifest's
+//!   `forward`/`forward_lora` per coalesced batch — through PJRT when the
+//!   executables compile, else through the in-process
+//!   [`HostModel`] kernel executor (the offline path, bit-for-bit the
+//!   same checkpoint).  Requests are token sequences (`d_in = seq_len`,
+//!   each feature an integral token id); responses are the last
+//!   position's next-token logits (`d_out = vocab`), copied out through a
+//!   reusable staging buffer.
+//!
+//! Both implementations are **row-independent**: a request's output does
+//! not depend on which batch it was coalesced into — the invariant that
+//! makes dynamic batching and the async admission front-end
+//! ([`crate::serve::admission`]) transparent to clients.
+
+use crate::backend::{ensure_out, lora_fused_seq, ParallelPolicy, SparseBackend};
+use crate::coordinator::checkpoint;
+use crate::runtime::{HostModel, Manifest, Session, SessionHandle};
+use crate::tensor::Matrix;
+use std::path::Path;
+
+/// A model the serving engine can drive: a pure coalesced-batch function
+/// plus the shape and policy metadata admission needs.
+pub trait ServeModel {
+    /// Features per request row.
+    fn d_in(&self) -> usize;
+
+    /// Features per response row.
+    fn d_out(&self) -> usize;
+
+    /// Run one coalesced batch: `x` is `(k, d_in)` (one request per row),
+    /// `y` is resized to `(k, d_out)` and overwritten.  Must be
+    /// row-independent and allocation-free at a warm fill.
+    fn forward_batch_into(&mut self, x: &Matrix, y: &mut Matrix) -> crate::Result<()>;
+
+    /// Hard cap on the coalesced batch, when the backend has one (an AOT
+    /// executable is compiled for a fixed batch).  The engine clamps its
+    /// `BatchPolicy.max_batch` to this.
+    fn max_batch(&self) -> Option<usize> {
+        None
+    }
+
+    /// Validate one request's payload beyond its length (the engine
+    /// checks length).  Called at submit time, so a malformed request is
+    /// rejected individually instead of poisoning the coalesced batch it
+    /// would have landed in.
+    fn validate_request(&self, _input: &[f32]) -> crate::Result<()> {
+        Ok(())
+    }
+
+    /// One-line description for stats headers and the CLI.
+    fn describe(&self) -> String;
+}
+
+/// A LoRA adapter pair for one layer (Eq. 11): `up = L: (d_out, r)`,
+/// `down = R: (r, d_in)`.
+#[derive(Clone, Debug)]
+pub struct LoraAdapter {
+    pub up: Matrix,
+    pub down: Matrix,
+}
+
+/// One serving layer: a warm sparse weight and an optional adapter.
+pub struct ServeLayer {
+    pub backend: SparseBackend,
+    pub lora: Option<LoraAdapter>,
+    /// Rank staging for the fused LoRA path (grown once).
+    t: Matrix,
+}
+
+impl ServeLayer {
+    pub fn new(backend: SparseBackend, lora: Option<LoraAdapter>) -> crate::Result<Self> {
+        if let Some(l) = &lora {
+            crate::ensure!(
+                l.up.rows == backend.w.rows && l.down.cols == backend.w.cols
+                    && l.up.cols == l.down.rows,
+                "lora shapes (up {}x{}, down {}x{}) do not fit layer {}x{}",
+                l.up.rows, l.up.cols, l.down.rows, l.down.cols,
+                backend.w.rows, backend.w.cols
+            );
+        }
+        Ok(Self { backend, lora, t: Matrix::zeros(0, 0) })
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.backend.w.cols
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.backend.w.rows
+    }
+
+    /// `y = x · Wᵀ (+ x · Rᵀ · Lᵀ)` into a caller-owned output — the
+    /// Eq.-11 fused serving sequence ([`lora_fused_seq`], shared with the
+    /// backend workspace path) through reusable buffers.
+    fn forward_into(&mut self, x: &Matrix, y: &mut Matrix) {
+        match &self.lora {
+            Some(l) => lora_fused_seq(self.backend.algo, &self.backend.policy, &self.backend.w,
+                                      x, &l.up, &l.down, &mut self.t, y),
+            None => self.backend.forward_into(x, y),
+        }
+    }
+}
+
+/// The warm kernel-stack backend: a validated chain of [`ServeLayer`]s
+/// plus the ping-pong activation buffers between them (module docs).
+pub struct KernelStackModel {
+    layers: Vec<ServeLayer>,
+    /// Ping-pong activation buffers between layers (grown once).
+    bufs: [Matrix; 2],
+}
+
+impl KernelStackModel {
+    /// Validate the chain (each layer's `d_in` must equal the previous
+    /// layer's `d_out`) and take ownership of the stack.
+    pub fn new(layers: Vec<ServeLayer>) -> crate::Result<Self> {
+        crate::ensure!(!layers.is_empty(), "kernel-stack model needs at least one layer");
+        for pair in layers.windows(2) {
+            crate::ensure!(
+                pair[1].d_in() == pair[0].d_out(),
+                "layer dims do not chain: {} -> {}",
+                pair[0].d_out(),
+                pair[1].d_in()
+            );
+        }
+        Ok(Self { layers, bufs: [Matrix::zeros(0, 0), Matrix::zeros(0, 0)] })
+    }
+
+    pub fn layers(&self) -> &[ServeLayer] {
+        &self.layers
+    }
+
+    /// Pointer to the first ping-pong buffer's storage — the test hook
+    /// pinning "steady state performs no reallocation".
+    #[cfg(test)]
+    pub(crate) fn buf_ptr(&self) -> *const f32 {
+        self.bufs[0].data.as_ptr()
+    }
+}
+
+impl ServeModel for KernelStackModel {
+    fn d_in(&self) -> usize {
+        self.layers[0].d_in()
+    }
+
+    fn d_out(&self) -> usize {
+        self.layers[self.layers.len() - 1].d_out()
+    }
+
+    fn forward_batch_into(&mut self, x: &Matrix, y: &mut Matrix) -> crate::Result<()> {
+        crate::ensure!(x.cols == self.d_in(), "batch dim {} != d_in {}", x.cols, self.d_in());
+        ensure_out(y, x.rows, self.d_out());
+        let n = self.layers.len();
+        // Ping-pong through the stack: layer i reads bufs[(i−1) % 2] (or
+        // the staging input for i == 0) and writes bufs[i % 2], except the
+        // final layer, which writes straight into the caller's output.
+        for i in 0..n {
+            let last = i + 1 == n;
+            let [b0, b1] = &mut self.bufs;
+            let (src, dst): (&Matrix, &mut Matrix) = match (i == 0, i % 2 == 0, last) {
+                (true, _, true) => (x, &mut *y),
+                (true, _, false) => (x, &mut *b0),
+                (false, true, true) => (&*b1, &mut *y),
+                (false, true, false) => (&*b1, &mut *b0),
+                (false, false, true) => (&*b0, &mut *y),
+                (false, false, false) => (&*b0, &mut *b1),
+            };
+            self.layers[i].forward_into(src, dst);
+        }
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        let lora = self.layers.iter().filter(|l| l.lora.is_some()).count();
+        format!(
+            "kernel-stack: {} layers ({} -> {}), {} with LoRA, {} {} thread(s)",
+            self.layers.len(),
+            self.d_in(),
+            self.d_out(),
+            lora,
+            self.layers[0].backend.scheme,
+            self.layers[0].backend.policy.effective_threads()
+        )
+    }
+}
+
+/// Execution route an [`AotModel`] resolved to at open time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AotPath {
+    /// The manifest's executable compiled: batches run via `Session::run`.
+    Pjrt,
+    /// PJRT unavailable (offline stub / checkpoint dir without HLO):
+    /// batches run on the in-process [`HostModel`] kernel executor.
+    HostKernels,
+}
+
+/// A checkpointed transformer served through its manifest (module docs).
+///
+/// Open with a directory holding `manifest.json` plus a serving
+/// checkpoint ([`checkpoint::save_model_checkpoint`]'s layout — what
+/// `slope train --checkpoint-dir` writes).
+pub struct AotModel {
+    manifest: Manifest,
+    session: SessionHandle,
+    /// The checkpoint store feeding `Session::run` — `None` on the
+    /// host-kernel route, which copies what it needs into [`HostModel`]
+    /// at open (keeping both would double resident model memory).
+    store: Option<crate::runtime::Store>,
+    host: Option<HostModel>,
+    exe: String,
+    path: AotPath,
+    packed_restored: usize,
+    /// Reusable decoded-token staging for each batch.
+    tokens: Vec<i32>,
+    /// Reusable logits copy-out staging (PJRT path).
+    logits: Vec<f32>,
+}
+
+impl AotModel {
+    /// Open `dir` (manifest + serving checkpoint), probe the PJRT path
+    /// once, and fall back to the host kernel executor when the probe
+    /// fails.  `policy` governs the host executor's kernel calls and is
+    /// recorded on the session (`Session::set_parallel`).
+    pub fn open(dir: &Path, policy: ParallelPolicy) -> crate::Result<Self> {
+        let session = Session::open_cached(dir)?;
+        session.borrow_mut().set_parallel(policy);
+        let manifest = session.borrow().manifest.clone();
+        let (store, packed) = checkpoint::load_model_checkpoint(dir)?;
+        let has_lora = store.names().iter().any(|n| n.starts_with("lora."));
+        // Refuse a checkpoint whose adapters the PJRT route could not
+        // honor: silently serving base-only weights there while the host
+        // executor applied the adapters would make the two routes compute
+        // different functions from the same checkpoint.
+        crate::ensure!(
+            !has_lora || manifest.executables.contains_key("forward_lora"),
+            "checkpoint carries lora.* adapters but manifest {} has no forward_lora executable",
+            manifest.config.name
+        );
+        let exe = if has_lora { "forward_lora" } else { "forward" };
+        crate::ensure!(
+            manifest.executables.contains_key(exe),
+            "manifest {} has no inference executable",
+            manifest.config.name
+        );
+        // One-time probe: a compile failure (offline xla stub, or no HLO
+        // beside the checkpoint) routes every batch to the host executor.
+        let probe: Result<(), String> = {
+            let mut sess = session.borrow_mut();
+            sess.exe(exe).map(|_| ()).map_err(|e| e.to_string())
+        };
+        let packed_restored = packed.len();
+        let (host, store, path) = match probe {
+            Ok(()) => (None, Some(store), AotPath::Pjrt),
+            Err(why) => {
+                eprintln!(
+                    "[serve] PJRT unavailable for {} ({why}); using the host kernel executor",
+                    dir.display()
+                );
+                let hm = HostModel::from_store(&manifest, &store, &packed, policy)?;
+                // The host executor owns its operand copies; drop the
+                // checkpoint store rather than keeping the model resident
+                // twice.
+                (Some(hm), None, AotPath::HostKernels)
+            }
+        };
+        Ok(Self {
+            manifest,
+            session,
+            store,
+            host,
+            exe: exe.to_string(),
+            path,
+            packed_restored,
+            tokens: Vec::new(),
+            logits: Vec::new(),
+        })
+    }
+
+    /// Which execution route `open` resolved to.
+    pub fn path(&self) -> AotPath {
+        self.path
+    }
+
+    /// Packed v2 planes the restore consumed without re-compression.
+    pub fn packed_restored(&self) -> usize {
+        self.packed_restored
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Encode a token sequence as an engine request row (`f32` ids).
+    pub fn encode_tokens(tokens: &[i32]) -> Vec<f32> {
+        tokens.iter().map(|t| *t as f32).collect()
+    }
+
+    /// PJRT route: pad the coalesced tokens to the compiled batch, run
+    /// the executable, and copy the last position's logits out of the
+    /// result through the reusable staging buffer.
+    fn forward_pjrt(&mut self, k: usize, y: &mut Matrix) -> crate::Result<()> {
+        let (bb, s) = self.manifest.forward_tokens_shape();
+        let vocab = self.manifest.config.vocab_size;
+        crate::ensure!(k <= bb, "batch {k} exceeds the compiled batch size {bb}");
+        self.tokens.resize(bb * s, 0);
+        let store = self
+            .store
+            .as_mut()
+            .ok_or_else(|| crate::eyre!("PJRT route has no checkpoint store"))?;
+        store.put_i32("tokens", &[bb, s], &self.tokens)?;
+        self.session.borrow_mut().run(&self.exe, store)?;
+        store.read_f32_into("logits", &mut self.logits)?;
+        crate::ensure!(
+            self.logits.len() == bb * s * vocab,
+            "logits are {} long, expected {}x{}x{}",
+            self.logits.len(), bb, s, vocab
+        );
+        for r in 0..k {
+            let off = (r * s + (s - 1)) * vocab;
+            y.row_mut(r).copy_from_slice(&self.logits[off..off + vocab]);
+        }
+        Ok(())
+    }
+}
+
+impl ServeModel for AotModel {
+    fn d_in(&self) -> usize {
+        self.manifest.config.seq_len
+    }
+
+    fn d_out(&self) -> usize {
+        self.manifest.config.vocab_size
+    }
+
+    fn forward_batch_into(&mut self, x: &Matrix, y: &mut Matrix) -> crate::Result<()> {
+        let (k, s) = (x.rows, self.manifest.config.seq_len);
+        let vocab = self.manifest.config.vocab_size;
+        crate::ensure!(x.cols == s, "request carries {} features, seq_len is {s}", x.cols);
+        self.tokens.clear();
+        for r in 0..k {
+            for &v in x.row(r) {
+                let t = v.round() as i64;
+                crate::ensure!(
+                    v.is_finite() && t >= 0 && (t as usize) < vocab,
+                    "token id {v} outside vocab 0..{vocab}"
+                );
+                self.tokens.push(t as i32);
+            }
+        }
+        ensure_out(y, k, vocab);
+        if let Some(hm) = self.host.as_mut() {
+            return hm.forward_last_logits_into(&self.tokens, k, y);
+        }
+        self.forward_pjrt(k, y)
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        // The PJRT executable is compiled for the manifest's batch; the
+        // host executor keeps the same cap so both routes batch alike.
+        Some(self.manifest.config.batch_size)
+    }
+
+    /// Reject malformed token payloads at submit, before they can
+    /// coalesce with (and fail alongside) well-formed requests: every
+    /// feature must be a finite, integral id inside the vocab (NaN would
+    /// otherwise saturate to token 0 and be served silently).
+    fn validate_request(&self, input: &[f32]) -> crate::Result<()> {
+        let vocab = self.manifest.config.vocab_size;
+        for &v in input {
+            crate::ensure!(
+                v.is_finite() && v == v.round(),
+                "token id {v} is not an integral id"
+            );
+            let t = v as i64;
+            crate::ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {v} outside vocab 0..{vocab}"
+            );
+        }
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        let c = &self.manifest.config;
+        format!(
+            "aot:{} ({}L d{} ff{} heads{} vocab{} seq{}; {}, {} packed planes)",
+            c.name, c.n_layer, c.d_model, c.d_ff, c.n_head, c.vocab_size, c.seq_len,
+            match self.path {
+                AotPath::Pjrt => "pjrt".to_string(),
+                AotPath::HostKernels => format!(
+                    "host kernels, {} thread(s)",
+                    self.host.as_ref().map(|h| h.policy().effective_threads()).unwrap_or(1)
+                ),
+            },
+            self.packed_restored
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SpmmAlgo;
+    use crate::runtime::{write_synthetic_artifact, SynthSpec};
+    use crate::sparsity::{random_row_mask, NmScheme};
+    use crate::util::Rng;
+
+    fn layer(d_out: usize, d_in: usize, rank: usize, rng: &mut Rng) -> ServeLayer {
+        let w = Matrix::randn(d_out, d_in, 1.0, rng);
+        let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, rng);
+        let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor,
+                                      ParallelPolicy::with_threads(2));
+        let lora = (rank > 0).then(|| LoraAdapter {
+            up: Matrix::randn(d_out, rank, 0.3, rng),
+            down: Matrix::randn(rank, d_in, 0.3, rng),
+        });
+        ServeLayer::new(be, lora).unwrap()
+    }
+
+    #[test]
+    fn kernel_stack_validates_chaining() {
+        let mut rng = Rng::seed_from_u64(1);
+        assert!(KernelStackModel::new(vec![]).is_err());
+        let bad = vec![layer(24, 16, 0, &mut rng), layer(16, 32, 0, &mut rng)];
+        assert!(KernelStackModel::new(bad).is_err());
+        let ok = vec![layer(24, 16, 0, &mut rng), layer(16, 24, 0, &mut rng)];
+        let m = KernelStackModel::new(ok).unwrap();
+        assert_eq!((m.d_in(), m.d_out()), (16, 16));
+        assert!(m.max_batch().is_none());
+    }
+
+    #[test]
+    fn kernel_stack_forward_writes_final_layer_into_output() {
+        let mut rng = Rng::seed_from_u64(2);
+        for depth in [1usize, 2, 3] {
+            let mut layers = Vec::new();
+            let mut d_in = 16;
+            for i in 0..depth {
+                let d_out = if i % 2 == 0 { 24 } else { 16 };
+                layers.push(layer(d_out, d_in, if i == 0 { 4 } else { 0 }, &mut rng));
+                d_in = d_out;
+            }
+            // Dense reference.
+            let x = Matrix::randn(3, 16, 1.0, &mut rng);
+            let mut want = x.clone();
+            for l in &layers {
+                let mut y = crate::backend::gemm_nt(&want, &l.backend.dense_weight());
+                if let Some(a) = &l.lora {
+                    let t = crate::backend::gemm_nt(&want, &a.down);
+                    let y2 = crate::backend::gemm_nt(&t, &a.up);
+                    for (o, v) in y.data.iter_mut().zip(&y2.data) {
+                        *o += v;
+                    }
+                }
+                want = y;
+            }
+            let mut m = KernelStackModel::new(layers).unwrap();
+            let mut y = Matrix::zeros(0, 0);
+            m.forward_batch_into(&x, &mut y).unwrap();
+            assert_eq!((y.rows, y.cols), (want.rows, want.cols), "depth {depth}");
+            assert!(y.max_abs_diff(&want) < 1e-3, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn aot_model_restores_packed_planes_and_serves() {
+        let dir = std::env::temp_dir().join("slope_aot_model_unit_test");
+        let spec = SynthSpec { seed: 11, ..SynthSpec::default() };
+        write_synthetic_artifact(&dir, &spec).unwrap();
+        let mut m = AotModel::open(&dir, ParallelPolicy::with_threads(2)).unwrap();
+        assert_eq!(m.path(), AotPath::HostKernels, "offline stub must fall back");
+        assert_eq!(m.packed_restored(), 2 * 4 - 1);
+        assert_eq!((m.d_in(), m.d_out()), (spec.seq_len, spec.vocab));
+        assert_eq!(m.max_batch(), Some(spec.batch_size));
+        let mut rng = Rng::seed_from_u64(0);
+        let toks: Vec<i32> = (0..spec.seq_len).map(|_| rng.below(spec.vocab) as i32).collect();
+        let x = Matrix::from_vec(1, spec.seq_len, AotModel::encode_tokens(&toks));
+        let mut y = Matrix::zeros(0, 0);
+        m.forward_batch_into(&x, &mut y).unwrap();
+        assert_eq!((y.rows, y.cols), (1, spec.vocab));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // Out-of-vocab tokens: rejected by the submit-time validator AND
+        // (defensively) by the batch path itself.
+        let bad_row = vec![spec.vocab as f32; spec.seq_len];
+        assert!(m.validate_request(&bad_row).is_err());
+        let bad = Matrix::from_vec(1, spec.seq_len, bad_row);
+        assert!(m.forward_batch_into(&bad, &mut y).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

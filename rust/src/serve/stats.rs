@@ -1,7 +1,7 @@
 //! Serving telemetry: per-request latency quantiles, batch-fill, and
 //! throughput — the measured counterpart of the paper's Table-2
 //! inference-speedup claim, reported the way serving systems report it
-//! (p50/p95 + req/s) rather than as a single kernel median.
+//! (p50/p95/p99 + req/s) rather than as a single kernel median.
 
 use std::time::Duration;
 
@@ -34,6 +34,9 @@ pub struct StatsSummary {
     pub mean_batch_fill: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    /// Tail latency — the number the async admission front-end exists to
+    /// measure under concurrent producers.
+    pub p99_ms: f64,
     /// Requests per second over the dispatch span (compute-time based
     /// when the span is degenerate, e.g. a single batch).
     pub req_per_s: f64,
@@ -91,8 +94,26 @@ impl ServeStats {
             },
             p50_ms: quantile_of_sorted(&sorted, 0.50),
             p95_ms: quantile_of_sorted(&sorted, 0.95),
+            p99_ms: quantile_of_sorted(&sorted, 0.99),
             req_per_s: if wall > 0.0 { self.served as f64 / wall } else { 0.0 },
         }
+    }
+}
+
+impl StatsSummary {
+    /// The uniform multi-line serving report the CLI and the serving
+    /// example both print — one definition, so their output cannot
+    /// drift.  `served` is the caller's completed-response count and
+    /// `max_batch` the effective coalescing cap.
+    pub fn report(&self, served: usize, max_batch: usize) -> String {
+        format!(
+            "served     : {served} requests in {} batches\n\
+             batch fill : {:.2} / {max_batch}\n\
+             latency    : p50 {:.3} ms   p95 {:.3} ms   p99 {:.3} ms\n\
+             throughput : {:.0} req/s",
+            self.batches, self.mean_batch_fill, self.p50_ms, self.p95_ms, self.p99_ms,
+            self.req_per_s
+        )
     }
 }
 
@@ -122,6 +143,7 @@ mod tests {
         assert!((sum.mean_batch_fill - 3.0).abs() < 1e-12);
         assert!((sum.p50_ms - 3.0).abs() < 1e-9, "p50 of 1..6 ms = 3 (lower-nearest)");
         assert!((sum.p95_ms - 5.0).abs() < 1e-9);
+        assert!((sum.p99_ms - 5.0).abs() < 1e-9, "p99 lower-nearest of 6 samples");
         // Span: first dispatch 10 ms, last end 22 ms ⇒ 6 req / 12 ms.
         assert!((sum.req_per_s - 500.0).abs() < 1e-6);
     }

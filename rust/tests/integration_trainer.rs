@@ -16,6 +16,7 @@ fn cfg(method: Method, steps: usize, lazy: f64) -> RunConfig {
         seed: 3,
         artifacts: "artifacts".into(),
         out_dir: std::env::temp_dir().join("slope_test_runs"),
+        checkpoint_dir: None,
         parallel: slope::backend::ParallelPolicy::serial(),
     }
 }

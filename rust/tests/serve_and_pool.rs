@@ -114,10 +114,11 @@ fn serve_engine_coalesces_under_max_batch_and_max_wait() {
     for i in 0..5u64 {
         eng.submit(vec![0.1 * (i as f32 + 1.0); 16], i as u32 * ms).unwrap();
         if i < 3 {
-            assert!(eng.poll(i as u32 * ms).is_empty(), "below max_batch and max_wait");
+            assert!(eng.poll(i as u32 * ms).unwrap().is_empty(),
+                    "below max_batch and max_wait");
         }
     }
-    let first = eng.poll(4 * ms);
+    let first = eng.poll(4 * ms).unwrap();
     assert_eq!(first.len(), 4, "max_batch dispatch");
     assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
     assert_eq!(first[0].queued, 4 * ms, "oldest waited 4 ms");
@@ -125,8 +126,8 @@ fn serve_engine_coalesces_under_max_batch_and_max_wait() {
 
     // The straggler holds until its wait hits max_wait (submitted at
     // 4 ms ⇒ due at 14 ms), then dispatches as a partial batch.
-    assert!(eng.poll(13 * ms).is_empty(), "straggler below max_wait");
-    let tail = eng.poll(14 * ms);
+    assert!(eng.poll(13 * ms).unwrap().is_empty(), "straggler below max_wait");
+    let tail = eng.poll(14 * ms).unwrap();
     assert_eq!(tail.len(), 1, "max_wait flush");
     assert_eq!(tail[0].id, 4);
     assert!(tail[0].queued >= 10 * ms);
@@ -161,7 +162,7 @@ fn serve_engine_matches_dense_reference_across_fills() {
         eng.submit(x.row(r).to_vec(), Duration::ZERO).unwrap();
     }
     // Fills 3 + 2: different staging shapes, same math.
-    let mut got = eng.flush(Duration::ZERO);
+    let mut got = eng.flush(Duration::ZERO).unwrap();
     got.sort_by_key(|r| r.id);
     assert_eq!(got.len(), 5);
     for (row, resp) in got.iter().enumerate() {

@@ -72,6 +72,24 @@ def archive(args) -> int:
     if not {1, 2, 4} <= set(threads):
         raise SystemExit(f"expected a threads sweep, got {threads}")
     print(f"benches in trajectory: {benches}")
+    # bench_serve must record BOTH ServeModel series: the kernel-stack
+    # cases keep their pre-redesign names (batch{B}/forward) so the
+    # trajectory stays continuous, the manifest-backed AotModel series is
+    # prefixed (manifest/batch{B}/forward).
+    serve_cases = {r["case"] for r in rows if r["bench"] == "bench_serve"}
+    if not serve_cases:
+        raise SystemExit(
+            "no bench_serve rows in the smoke run — the trajectory must carry "
+            "both the kernel-stack and manifest serving series"
+        )
+    kernel = {c for c in serve_cases if c.startswith("batch")}
+    manifest = {c for c in serve_cases if c.startswith("manifest/")}
+    if not kernel or not manifest:
+        raise SystemExit(
+            "bench_serve must emit both the kernel-stack (batch*/...) and "
+            f"manifest (manifest/...) series; got {sorted(serve_cases)}"
+        )
+    print(f"bench_serve series: {len(kernel)} kernel-stack, {len(manifest)} manifest")
     return 0
 
 
