@@ -15,7 +15,9 @@
 //!   simulator and the bit-exact memory accounting that regenerate the
 //!   paper's speedup/memory tables.
 //! * [`serve`]       — the serving subsystem: coalescing batcher, warm
-//!   sparse+LoRA layer engine, latency/throughput stats (`slope serve`).
+//!   sparse+LoRA layer engine, KV-cached continuous-batching decode, and
+//!   split request/per-token latency stats (`slope serve`,
+//!   `slope generate`).
 //! * [`data`] / [`eval`] — synthetic pretraining corpus and evaluation.
 //! * [`util`]        — offline substrates (PRNG, JSON, bench harness,
 //!   property testing); see DESIGN.md §2.

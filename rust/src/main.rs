@@ -14,12 +14,13 @@ use slope::config::{Fig9Variant, Method, RunConfig};
 use slope::coordinator::Trainer;
 use slope::exps::{self, ExpArgs};
 use slope::runtime::Manifest;
-use slope::serve::{Admission, AotModel, BatchPolicy, LoraAdapter, ServeEngine, ServeLayer,
-                   ServeModel, StatsSummary};
+use slope::serve::{Admission, AotModel, BatchPolicy, DecodeAdmission, DecodeEngine,
+                   DecodeModel, DecodePolicy, KernelDecodeModel, LoraAdapter, Overload,
+                   QueuePolicy, Sampler, ServeEngine, ServeLayer, ServeModel, StatsSummary};
 use slope::util::{Json, Rng};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const USAGE: &str = "\
 slope — SLoPe (ICLR'25) rust coordinator
@@ -34,10 +35,18 @@ USAGE:
               [--layers L] [--d-model D] [--d-ff F] [--rank R]  # synthetic stack
               [--requests N] [--max-batch B] [--max-wait-ms MS]
               [--producers N]                  # async admission, N producer threads
+              [--queue-cap N] [--overload O]   # bounded admission (shed/backpressure)
+              [--decode]                       # continuous-batching generation mode
+              [--max-new-tokens N] [--prompt-len P] [--temp T] [--eos ID]
               [--threads T] [--partition P] [--seed S]
               # dynamic-batched sparse+LoRA serving; --manifest points at a
               # directory holding manifest.json + model.slopeckpt (what
               # `slope train --checkpoint-dir` writes)
+
+  slope generate --manifest DIR                # KV-cached autoregressive decode
+              [--max-new-tokens N] [--max-batch B] [--requests K]
+              [--prompt-len P] [--prompt \"1,2,3\"] [--temp T] [--eos ID]
+              [--threads T] [--partition P] [--seed S]
 
   slope exp <ID> [--steps N] [--seed S] [--artifacts DIR] [--out-dir DIR]
   slope info [--model M] [--artifacts DIR]
@@ -45,6 +54,7 @@ USAGE:
 
 METH: slope | dense | srste | srste-lora | wanda | fig9:<variant>
 P:    auto | rows | cols                       # kernel partition strategy
+O:    reject | block                           # overload policy for --queue-cap
 ID:   table2|table3|table4|table5|table6|table7|table8|table9|table10|table12
       fig2|fig3a|fig3b|fig4|fig5|fig6|fig7|fig8|fig9|fig10|mem|all-perf
 ";
@@ -55,6 +65,10 @@ struct Flags {
     positional: Vec<String>,
 }
 
+/// Flags that are boolean switches (value optional, default "true");
+/// every other flag still requires an explicit value.
+const BOOL_FLAGS: [&str; 1] = ["decode"];
+
 impl Flags {
     fn parse(args: &[String]) -> slope::Result<Self> {
         let mut map = HashMap::new();
@@ -62,11 +76,19 @@ impl Flags {
         let mut i = 0;
         while i < args.len() {
             if let Some(key) = args[i].strip_prefix("--") {
-                let val = args
-                    .get(i + 1)
-                    .ok_or_else(|| slope::eyre!("flag --{key} needs a value"))?;
-                map.insert(key.to_string(), val.clone());
-                i += 2;
+                match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        map.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    // A boolean switch followed by another flag (or
+                    // nothing) stands alone, e.g. `--decode`.
+                    _ if BOOL_FLAGS.contains(&key) => {
+                        map.insert(key.to_string(), "true".to_string());
+                        i += 1;
+                    }
+                    _ => return Err(slope::eyre!("flag --{key} needs a value")),
+                }
             } else {
                 positional.push(args[i].clone());
                 i += 1;
@@ -77,6 +99,11 @@ impl Flags {
 
     fn get(&self, key: &str, default: &str) -> String {
         self.map.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean switch: present (with any value but "false") = set.
+    fn flag_set(&self, key: &str) -> bool {
+        self.map.get(key).map(|v| v != "false").unwrap_or(false)
     }
 
     fn usize(&self, key: &str, default: usize) -> slope::Result<usize> {
@@ -104,9 +131,12 @@ fn print_serve_summary(done: usize, s: &StatsSummary, max_batch: usize) {
 /// manifest paths.  `producers == 0` runs the classic inline
 /// submit/poll loop; `producers >= 1` routes everything through the
 /// async admission front-end with that many concurrent producer threads
-/// (the tail-latency-under-contention measurement).
+/// (the tail-latency-under-contention measurement).  Under a bounded
+/// `queue` with the reject policy, shed submissions are counted rather
+/// than treated as failures — overload is the behaviour being measured.
 fn serve_run<M, F, G>(build: F, make_input: G, n_requests: usize, producers: usize,
-                      policy: BatchPolicy, seed: u64) -> slope::Result<()>
+                      policy: BatchPolicy, queue: QueuePolicy,
+                      seed: u64) -> slope::Result<()>
 where
     M: ServeModel + 'static,
     F: FnOnce() -> slope::Result<ServeEngine<M>> + Send + 'static,
@@ -122,7 +152,7 @@ where
         return Ok(());
     }
 
-    let adm = Admission::spawn(build, Admission::tick_for(policy.max_wait));
+    let adm = Admission::spawn_with_queue(build, Admission::tick_for(policy.max_wait), queue);
     let base = n_requests / producers;
     let extra = n_requests % producers;
     let mut handles = Vec::with_capacity(producers);
@@ -130,25 +160,142 @@ where
         let client = adm.client();
         let make_input = make_input.clone();
         let quota = base + usize::from(p < extra);
-        handles.push(std::thread::spawn(move || -> slope::Result<usize> {
+        handles.push(std::thread::spawn(move || -> (usize, usize, usize) {
             let mut rng = Rng::seed_from_u64(seed ^ (0x9E37_79B9 + p as u64));
+            let (mut submitted, mut shed) = (0usize, 0usize);
             for i in 0..quota {
-                client.submit(i as u64, make_input(&mut rng))?;
+                match client.submit(i as u64, make_input(&mut rng)) {
+                    Ok(()) => submitted += 1,
+                    Err(_) => shed += 1, // bounded-reject overload signal
+                }
             }
-            for _ in 0..quota {
-                client.recv()?;
+            let (mut got, mut failed) = (0usize, 0usize);
+            for _ in 0..submitted {
+                match client.recv() {
+                    Ok(_) => got += 1,
+                    Err(_) => failed += 1,
+                }
             }
-            Ok(quota)
+            (got, shed, failed)
         }));
     }
-    let mut done = 0usize;
+    let (mut done, mut shed, mut failed) = (0usize, 0usize, 0usize);
     for h in handles {
-        done += h.join().map_err(|_| slope::eyre!("producer thread panicked"))??;
+        let (g, s, f) = h.join().map_err(|_| slope::eyre!("producer thread panicked"))?;
+        done += g;
+        shed += s;
+        failed += f;
     }
     let s = adm.finish()?;
     println!("producers  : {producers} concurrent (open-loop, async admission)");
     print_serve_summary(done, &s, policy.max_batch);
+    report_drops(shed, failed, queue);
     Ok(())
+}
+
+/// Decode-mode counterpart of [`serve_run`]: open-loop prompt traffic
+/// through the continuous-batching [`DecodeEngine`] — inline
+/// (`producers == 0`) or via the async [`DecodeAdmission`] front-end.
+fn serve_decode_run<M, F, G>(build: F, make_prompt: G, n_requests: usize, producers: usize,
+                             max_batch: usize, queue: QueuePolicy,
+                             seed: u64) -> slope::Result<()>
+where
+    M: DecodeModel + 'static,
+    F: FnOnce() -> slope::Result<DecodeEngine<M>> + Send + 'static,
+    G: Fn(&mut Rng) -> Vec<i32> + Send + Clone + 'static,
+{
+    if producers == 0 {
+        let mut eng = build()?;
+        println!("model      : {}", eng.model().describe_decode());
+        let mut rng = Rng::seed_from_u64(seed);
+        let start = Instant::now();
+        let (mut done, mut shed) = (0usize, 0usize);
+        for _ in 0..n_requests {
+            match eng.submit(make_prompt(&mut rng), None, start.elapsed()) {
+                Ok(_) => {}
+                Err(_) => shed += 1, // inline engines can only shed
+            }
+            done += eng.step(start.elapsed())?.len();
+        }
+        while eng.active() > 0 {
+            done += eng.step(start.elapsed())?.len();
+        }
+        let s = eng.stats().summary();
+        print_serve_summary(done, &s, eng.policy().max_batch);
+        report_drops(shed, 0, queue);
+        return Ok(());
+    }
+
+    let adm = DecodeAdmission::spawn(build, Duration::from_micros(200), queue);
+    let base = n_requests / producers;
+    let extra = n_requests % producers;
+    let mut handles = Vec::with_capacity(producers);
+    for p in 0..producers {
+        let client = adm.client();
+        let make_prompt = make_prompt.clone();
+        let quota = base + usize::from(p < extra);
+        handles.push(std::thread::spawn(move || -> (usize, usize, usize) {
+            let mut rng = Rng::seed_from_u64(seed ^ (0xA11CE + p as u64));
+            let (mut submitted, mut shed) = (0usize, 0usize);
+            for i in 0..quota {
+                match client.submit(i as u64, make_prompt(&mut rng), None) {
+                    Ok(()) => submitted += 1,
+                    Err(_) => shed += 1,
+                }
+            }
+            let (mut got, mut failed) = (0usize, 0usize);
+            for _ in 0..submitted {
+                match client.recv() {
+                    Ok(_) => got += 1,
+                    Err(_) => failed += 1,
+                }
+            }
+            (got, shed, failed)
+        }));
+    }
+    let (mut done, mut shed, mut failed) = (0usize, 0usize, 0usize);
+    for h in handles {
+        let (g, s, f) = h.join().map_err(|_| slope::eyre!("producer thread panicked"))?;
+        done += g;
+        shed += s;
+        failed += f;
+    }
+    let s = adm.finish()?;
+    println!("producers  : {producers} concurrent (open-loop, async decode admission)");
+    print_serve_summary(done, &s, max_batch);
+    report_drops(shed, failed, queue);
+    Ok(())
+}
+
+/// Print dropped-request diagnostics so the summary never silently
+/// undercounts: `shed` = rejected at the (bounded) admission queue,
+/// `failed` = submitted but answered with an error reply.
+fn report_drops(shed: usize, failed: usize, queue: QueuePolicy) {
+    if shed > 0 {
+        println!(
+            "shed       : {shed} requests (queue cap {:?}, {:?})",
+            queue.cap, queue.overload
+        );
+    }
+    if failed > 0 {
+        println!("failed     : {failed} requests (error replies)");
+    }
+}
+
+/// Parse a `--prompt "1,2,3"` token list (commas and/or whitespace).
+fn parse_tokens(s: &str) -> slope::Result<Vec<i32>> {
+    s.split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<i32>().map_err(|e| slope::eyre!("token {t:?}: {e}")))
+        .collect()
+}
+
+fn parse_overload(s: &str) -> slope::Result<Overload> {
+    Ok(match s {
+        "reject" => Overload::Reject,
+        "block" => Overload::Block,
+        other => return Err(slope::eyre!("unknown overload policy {other:?}\n{USAGE}")),
+    })
 }
 
 fn parse_partition(s: &str) -> slope::Result<PartitionStrategy> {
@@ -231,8 +378,124 @@ fn main() -> slope::Result<()> {
             let seed = flags.usize("seed", 0)? as u64;
             let producers = flags.usize("producers", 0)?;
             let batch_policy = BatchPolicy::new(max_batch, max_wait);
+            let queue = match flags.map.get("queue-cap") {
+                None => QueuePolicy::unbounded(),
+                Some(_) => QueuePolicy::bounded(
+                    flags.usize("queue-cap", 64)?.max(1),
+                    parse_overload(&flags.get("overload", "reject"))?,
+                ),
+            };
 
-            if let Some(dir) = flags.map.get("manifest").map(PathBuf::from) {
+            if flags.flag_set("decode") {
+                // Continuous-batching generation mode.
+                let max_new = flags.usize("max-new-tokens", 16)?;
+                let temp = flags.f64("temp", 0.0)?;
+                let sampler = if temp > 0.0 {
+                    Sampler::Temperature(temp as f32)
+                } else {
+                    Sampler::Greedy
+                };
+                let eos = match flags.map.get("eos") {
+                    Some(v) => {
+                        Some(v.parse::<i32>().map_err(|e| slope::eyre!("--eos: {e}"))?)
+                    }
+                    None => None,
+                };
+                // Inline engines bound their own waiting queue; the async
+                // front-end bounds the channel instead.  An inline engine
+                // has no producer to park, so it can only shed — refuse
+                // the contradictory combination rather than silently
+                // rejecting what the user asked to block.
+                if producers == 0
+                    && queue.cap.is_some()
+                    && queue.overload == Overload::Block
+                {
+                    return Err(slope::eyre!(
+                        "--overload block needs --producers >= 1 (inline decode can only \
+                         shed; use --overload reject)"
+                    ));
+                }
+                let inline_cap = if producers == 0 { queue.cap } else { None };
+                if let Some(dir) = flags.map.get("manifest").map(PathBuf::from) {
+                    let m = Manifest::load(&dir)?;
+                    let (vocab, seq) = (m.config.vocab_size, m.config.seq_len);
+                    let eff_batch = max_batch.min(m.config.batch_size.max(1));
+                    let prompt_len = flags
+                        .usize("prompt-len", (seq / 2).max(1))?
+                        .clamp(1, seq.saturating_sub(1).max(1));
+                    let policy = ParallelPolicy::for_width(threads, m.config.d_model)
+                        .with_partition(partition);
+                    let dpolicy = DecodePolicy {
+                        max_batch: eff_batch,
+                        max_new_tokens: max_new,
+                        eos,
+                        sampler,
+                        seed,
+                        queue_cap: inline_cap,
+                    };
+                    println!(
+                        "== slope serve --decode --manifest {} ({}) — max_batch \
+                         {eff_batch}, max_new {max_new}, prompt {prompt_len}, {} thr ==",
+                        dir.display(),
+                        m.config.name,
+                        policy.effective_threads(),
+                    );
+                    serve_decode_run(
+                        move || {
+                            let model = AotModel::open(&dir, policy)?;
+                            eprintln!("[serve] {}", model.describe_decode());
+                            DecodeEngine::new(model, dpolicy)
+                        },
+                        move |rng: &mut Rng| {
+                            (0..prompt_len).map(|_| rng.below(vocab) as i32).collect()
+                        },
+                        n_requests,
+                        producers,
+                        eff_batch,
+                        queue,
+                        seed,
+                    )?;
+                } else {
+                    let d_model = flags.usize("d-model", 256)?;
+                    let d_ff = flags.usize("d-ff", 1024)?;
+                    let rank = flags.usize("rank", 8)?;
+                    let vocab = flags.usize("vocab", 512)?;
+                    let prompt_len = flags.usize("prompt-len", 8)?.max(1);
+                    let max_seq = prompt_len + max_new;
+                    let policy = ParallelPolicy::for_width(threads, d_model)
+                        .with_partition(partition);
+                    let dpolicy = DecodePolicy {
+                        max_batch,
+                        max_new_tokens: max_new,
+                        eos,
+                        sampler,
+                        seed,
+                        queue_cap: inline_cap,
+                    };
+                    println!(
+                        "== slope serve --decode: synthetic kernel-decode (d {d_model}, \
+                         vocab {vocab}, 2:4 + rank {rank}) — max_batch {max_batch}, \
+                         max_new {max_new}, {} thr ==",
+                        policy.effective_threads(),
+                    );
+                    serve_decode_run(
+                        move || {
+                            let model = KernelDecodeModel::synthetic(
+                                vocab, d_model, d_ff, rank, max_seq, policy, seed,
+                            )?;
+                            DecodeEngine::new(model, dpolicy)
+                        },
+                        move |rng: &mut Rng| {
+                            (0..prompt_len).map(|_| rng.below(vocab) as i32).collect()
+                        },
+                        n_requests,
+                        producers,
+                        max_batch,
+                        queue,
+                        seed,
+                    )?;
+                }
+            } else if let Some(dir) = flags.map.get("manifest").map(PathBuf::from) {
                 // Manifest-backed path: a checkpointed transformer served
                 // through its `forward`/`forward_lora` semantics.  Clamp
                 // the policy to the compiled batch up front so every
@@ -263,6 +526,7 @@ fn main() -> slope::Result<()> {
                     n_requests,
                     producers,
                     batch_policy,
+                    queue,
                     seed,
                 )?;
             } else {
@@ -312,9 +576,91 @@ fn main() -> slope::Result<()> {
                     n_requests,
                     producers,
                     batch_policy,
+                    queue,
                     seed,
                 )?;
             }
+        }
+        "generate" => {
+            let dir = flags
+                .map
+                .get("manifest")
+                .map(PathBuf::from)
+                .ok_or_else(|| slope::eyre!("generate needs --manifest DIR\n{USAGE}"))?;
+            let m = Manifest::load(&dir)?;
+            let threads = flags.usize("threads", 0)?;
+            let partition = parse_partition(&flags.get("partition", "auto"))?;
+            let policy = ParallelPolicy::for_width(threads, m.config.d_model)
+                .with_partition(partition);
+            let seed = flags.usize("seed", 0)? as u64;
+            let max_new = flags.usize("max-new-tokens", 16)?;
+            let max_batch = flags.usize("max-batch", 8)?.max(1);
+            let temp = flags.f64("temp", 0.0)?;
+            let eos = match flags.map.get("eos") {
+                Some(v) => Some(v.parse::<i32>().map_err(|e| slope::eyre!("--eos: {e}"))?),
+                None => None,
+            };
+            let sampler = if temp > 0.0 {
+                Sampler::Temperature(temp as f32)
+            } else {
+                Sampler::Greedy
+            };
+            let seq = m.config.seq_len;
+            let prompt_len = flags
+                .usize("prompt-len", (seq / 2).max(1))?
+                .clamp(1, seq.saturating_sub(1).max(1));
+            let requests = flags.usize("requests", 4)?.max(1);
+            let prompts: Vec<Vec<i32>> = match flags.map.get("prompt") {
+                Some(p) => vec![parse_tokens(p)?],
+                None => {
+                    let mut rng = Rng::seed_from_u64(seed);
+                    (0..requests)
+                        .map(|_| {
+                            (0..prompt_len)
+                                .map(|_| rng.below(m.config.vocab_size) as i32)
+                                .collect()
+                        })
+                        .collect()
+                }
+            };
+            println!(
+                "== slope generate --manifest {} ({}) — max_new {max_new}, \
+                 max_batch {max_batch}, {} thr ==",
+                dir.display(),
+                m.config.name,
+                policy.effective_threads(),
+            );
+            let model = AotModel::open(&dir, policy)?;
+            println!("model      : {}", model.describe_decode());
+            let dpolicy = DecodePolicy {
+                max_batch,
+                max_new_tokens: max_new,
+                eos,
+                sampler,
+                seed,
+                queue_cap: None,
+            };
+            let mut eng = DecodeEngine::new(model, dpolicy)?;
+            let start = Instant::now();
+            for p in prompts {
+                eng.submit(p, None, start.elapsed())?;
+            }
+            let mut done = eng.run_to_completion(start)?;
+            done.sort_by_key(|g| g.id);
+            for g in &done {
+                let toks: Vec<String> = g.tokens.iter().map(|t| t.to_string()).collect();
+                println!(
+                    "gen {:>3}  prompt[{:>3}] +{:<3} {:<9} {}",
+                    g.id,
+                    g.prompt_len,
+                    g.tokens.len(),
+                    format!("{:?}", g.finish),
+                    toks.join(" ")
+                );
+            }
+            let served = done.len();
+            let s = eng.stats().summary();
+            print_serve_summary(served, &s, eng.policy().max_batch);
         }
         "exp" => {
             let id = flags

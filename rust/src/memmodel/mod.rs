@@ -15,6 +15,13 @@
 //! head) are charged at full dense rates, which is why measured ratios sit
 //! slightly above the closed-form 2:4 numbers — exactly the effect the
 //! paper notes under Table 3.
+//!
+//! Autoregressive serving adds **decode state**: an f32 KV cache of
+//! `layers × 2 × seq × d` per sequence ([`kv_cache_bytes`], matching
+//! [`crate::runtime::KvCache`] exactly).  Sparsity compresses weights,
+//! not activations, so the cache charges both sides of the ratio equally
+//! ([`inference_memory_with_decode`]) — the paper's 0.61× inference
+//! claim re-derived with generation state included.
 
 use crate::config::zoo::ModelShape;
 use crate::sparsity::NmScheme;
@@ -129,6 +136,32 @@ pub fn inference_memory(shape: &ModelShape, s: NmScheme, rank_ratio: f64) -> Mem
     MemoryReport { dense_bits, slope_bits }
 }
 
+/// Raw bytes of ONE sequence's KV cache at full context:
+/// `layers × 2 × seq_len × d_kv × 4` (f32 K and V planes) — exactly what
+/// [`crate::runtime::KvCache`] allocates (`d_kv = d_model` for the MHA
+/// models we serve; pass `n_kv_head · head_dim` for GQA shapes).
+pub fn kv_cache_bytes(n_layer: usize, seq_len: usize, d_kv: usize) -> usize {
+    n_layer * 2 * seq_len * d_kv * 4
+}
+
+/// Table-3 inference column **with decode state included**: the weight
+/// footprint of [`inference_memory`] plus the f32 KV cache for `batch`
+/// concurrent sequences at context `seq_len`.  Dense and SLoPe
+/// deployments carry the *same* cache (sparsity compresses weights, not
+/// activations), so both sides gain the identical term and the ratio
+/// relaxes toward 1 as `batch × seq_len` grows — the honest re-derivation
+/// of the paper's 0.61× inference-memory claim under autoregressive
+/// serving.
+pub fn inference_memory_with_decode(shape: &ModelShape, s: NmScheme, rank_ratio: f64,
+                                    seq_len: usize, batch: usize) -> MemoryReport {
+    let mut report = inference_memory(shape, s, rank_ratio);
+    let d_kv = shape.n_kv_head * shape.head_dim();
+    let kv_bits = (batch * kv_cache_bytes(shape.n_layer, seq_len, d_kv)) as f64 * 8.0;
+    report.dense_bits += kv_bits;
+    report.slope_bits += kv_bits;
+    report
+}
+
 /// FST training memory (Table 3 shows FST > 1.0): dense weights PLUS the
 /// compressed sparse copies and transposable-mask metadata coexist.
 pub fn fst_training_memory(shape: &ModelShape, s: NmScheme) -> MemoryReport {
@@ -202,6 +235,34 @@ mod tests {
         let r24 = training_memory(&m, NmScheme::new(2, 4)).ratio();
         let r28 = training_memory(&m, NmScheme::new(2, 8)).ratio();
         assert!(r28 < r24);
+    }
+
+    #[test]
+    fn kv_cache_charge_matches_the_runtime_and_relaxes_the_ratio() {
+        use crate::runtime::KvCache;
+        // The closed-form charge is exactly what the decode runtime
+        // allocates per sequence.
+        let (l, s, d) = (4usize, 128usize, 96usize);
+        assert_eq!(KvCache::new(l, d, s).bytes(), kv_cache_bytes(l, s, d));
+        assert_eq!(kv_cache_bytes(l, s, d), l * 2 * s * d * 4);
+        // Decode state is sparsity-blind: both sides gain the same bits,
+        // so the ratio sits strictly between the weight-only ratio and 1,
+        // and grows monotonically with context and batch.
+        let m = OPT_13B;
+        let r0 = inference_memory(&m, S24, 0.0156).ratio();
+        let r1 = inference_memory_with_decode(&m, S24, 0.0156, 2048, 1).ratio();
+        let r8 = inference_memory_with_decode(&m, S24, 0.0156, 2048, 8).ratio();
+        let r_long = inference_memory_with_decode(&m, S24, 0.0156, 8192, 8).ratio();
+        let r_big = inference_memory_with_decode(&m, S24, 0.0156, 8192, 64).ratio();
+        assert!(r0 < r1 && r1 < r8 && r8 < r_long && r_long < r_big && r_big < 1.0,
+                "{r0:.4} {r1:.4} {r8:.4} {r_long:.4} {r_big:.4}");
+        // A single full-context sequence leaves the weight term dominant,
+        // so the headline claim survives with decode state included...
+        assert!(r1 < 0.70, "0.61x-claim band with one sequence of state: {r1:.3}");
+        // ...while a batch of 8 full-context f32 caches rivals the fp16
+        // weights themselves — the quantitative case for paging/quantizing
+        // the cache that the report now makes visible.
+        assert!(r8 > 0.75, "batched decode state must dominate: {r8:.3}");
     }
 
     #[test]

@@ -27,6 +27,16 @@
 //! sequence, so outputs do not depend on how requests were coalesced into
 //! batches — the property the serving parity tests pin.
 //!
+//! **Autoregressive decode** splits the forward into a prefill and an
+//! incremental step over a per-sequence [`KvCache`]: `prefill_into` runs
+//! the prompt once and banks every layer's K/V rows; `decode_step_into`
+//! then advances a coalesced batch of sequences one token each, attending
+//! over the cached planes instead of recomputing the prefix — the same
+//! arithmetic term-for-term, so KV-cached generation is bit-identical to
+//! full-prefix recompute (pinned in `tests/decode.rs`).  Per token this
+//! turns O(len·d²) recompute into O(d²) linears + O(len·d) attention —
+//! the per-token hot path where the 2:4 SpMM speedup compounds.
+//!
 //! [`write_synthetic_artifact`] fabricates a self-contained artifact
 //! directory (manifest + checkpoint) from a seed — the fixture the serve
 //! tests and `benches/bench_serve.rs` use to exercise manifest-backed
@@ -220,19 +230,160 @@ impl HostModel {
     /// buffer, so repeat calls at a stable fill allocate nothing.
     pub fn forward_last_logits_into(&mut self, tokens: &[i32], k: usize,
                                     y: &mut Matrix) -> crate::Result<()> {
-        let (s, d) = (self.seq_len, self.d_model);
+        self.forward_prefix(tokens, k, self.seq_len, None, y)
+    }
+
+    /// Full-recompute last-position logits for ONE sequence of arbitrary
+    /// length `1..=seq_len` — the reference the KV-cached incremental
+    /// path is pinned against (and the semantics a naive decode loop
+    /// would recompute per token).
+    pub fn forward_prefix_logits_into(&mut self, tokens: &[i32],
+                                      y: &mut Matrix) -> crate::Result<()> {
+        self.forward_prefix(tokens, 1, tokens.len(), None, y)
+    }
+
+    /// A fresh per-sequence [`KvCache`] sized to this model's context
+    /// bound (`seq_len` — the S of the manifest's
+    /// `forward_tokens_shape`).
+    pub fn new_kv_cache(&self) -> KvCache {
+        KvCache::new(self.n_layer, self.d_model, self.seq_len)
+    }
+
+    /// Prefill: run one prompt (`1..=seq_len` tokens), populate `cache`
+    /// with every layer's K/V rows for positions `0..len`, and write the
+    /// last position's logits (`1 × vocab`) into `y`.  The cache is
+    /// reset first, so re-prefilling a recycled cache is fine.  The
+    /// stored planes are exactly the values the full forward computes,
+    /// so subsequent [`HostModel::decode_step_into`] calls reproduce the
+    /// full-recompute logits bit-for-bit.
+    pub fn prefill_into(&mut self, tokens: &[i32], cache: &mut KvCache,
+                        y: &mut Matrix) -> crate::Result<()> {
+        cache.reset();
+        self.forward_prefix(tokens, 1, tokens.len(), Some(std::slice::from_mut(cache)), y)
+    }
+
+    /// One incremental decode step for a coalesced batch of sequences:
+    /// sequence `i` consumes `tokens[i]` at its cache's next position,
+    /// attends over the cached K/V planes (plus the freshly appended
+    /// row) instead of recomputing the prefix, and gets its next-token
+    /// logits in row `i` of `y` (`k × vocab`).  Every non-attention op
+    /// (layer norm, SpMM/GEMM linears, fused LoRA, GELU) is row-per-row
+    /// identical to the full forward, and the attention loop mirrors
+    /// [`causal_attention_into`] term-for-term, so the step is
+    /// bit-identical to a full-prefix recompute.  All validation happens
+    /// before any cache is touched: on error the caches are unchanged.
+    ///
+    /// Cost per token is O(d²) for the linears plus O(len·d) for
+    /// attention — flat in generated-token count for the model sizes the
+    /// bench sweeps — where the recompute path pays O(len·d²).
+    pub fn decode_step_into(&mut self, tokens: &[i32], caches: &mut [KvCache],
+                            y: &mut Matrix) -> crate::Result<()> {
+        let kb = tokens.len();
+        crate::ensure!(kb > 0, "empty decode batch");
+        crate::ensure!(caches.len() == kb, "{} caches for {kb} tokens", caches.len());
+        let (d, n_head, vocab) = (self.d_model, self.n_head, self.vocab);
+        for (i, c) in caches.iter().enumerate() {
+            c.check(self.n_layer, d)?;
+            crate::ensure!(!c.is_empty(), "sequence {i}: decode_step before prefill");
+            crate::ensure!(
+                c.len() < c.capacity(),
+                "sequence {i}: context window full ({} tokens)",
+                c.capacity()
+            );
+        }
+        for &tok in tokens {
+            crate::ensure!(
+                tok >= 0 && (tok as usize) < vocab,
+                "token id {tok} outside vocab 0..{vocab}"
+            );
+        }
+        let policy = self.policy;
+        let Self { ws, blocks, tok_emb, pos_emb, lnf_g, lnf_b, head_w, .. } = self;
+
+        // Embedding: h[i] = tok_emb[token_i] + pos_emb[position_i].
+        ensure_out(&mut ws.h, kb, d);
+        for (i, cache) in caches.iter().enumerate() {
+            let dst = ws.h.row_mut(i);
+            let te = tok_emb.row(tokens[i] as usize);
+            let pe = pos_emb.row(cache.len());
+            for j in 0..d {
+                dst[j] = te[j] + pe[j];
+            }
+        }
+
+        for (li, blk) in blocks.iter_mut().enumerate() {
+            // Attention sub-block: ln1 → qkv → cached attention → proj.
+            layer_norm_into(&ws.h, &blk.ln1_g, &blk.ln1_b, &mut ws.hn);
+            blk.qkv.forward_into(&ws.hn, &mut ws.qkv, &policy);
+            ensure_out(&mut ws.att, kb, d);
+            for (i, cache) in caches.iter_mut().enumerate() {
+                let pos = cache.len();
+                let row = ws.qkv.row(i);
+                cache.write_row(li, pos, &row[d..2 * d], &row[2 * d..3 * d]);
+                decode_attention_row(&cache.k[li], &cache.v[li], &row[..d], pos,
+                                     n_head, &mut ws.scores, ws.att.row_mut(i));
+            }
+            blk.proj.forward_into(&ws.att, &mut ws.branch, &policy);
+            add_inplace(&mut ws.h, &ws.branch);
+            // MLP sub-block: ln2 → up → gelu → down.
+            layer_norm_into(&ws.h, &blk.ln2_g, &blk.ln2_b, &mut ws.hn);
+            blk.up.forward_into(&ws.hn, &mut ws.up, &policy);
+            gelu_tanh_inplace(&mut ws.up);
+            blk.down.forward_into(&ws.up, &mut ws.branch, &policy);
+            add_inplace(&mut ws.h, &ws.branch);
+        }
+
+        layer_norm_into(&ws.h, lnf_g, lnf_b, &mut ws.hn);
+        let head: &Matrix = match &*head_w {
+            Some(hw) => hw,
+            None => &*tok_emb,
+        };
+        ensure_out(y, kb, vocab);
+        gemm_nt_into(&ws.hn, head, y, &policy);
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        Ok(())
+    }
+
+    /// The shared forward core: `k` sequences of `s` tokens each
+    /// (`1 <= s <= seq_len`), last-position logits into `y`
+    /// (`k × vocab`).  With `caches`, every layer's K/V activations for
+    /// positions `0..s` are written into the per-sequence cache — the
+    /// prefill route.  Steady state reuses every internal buffer, so
+    /// repeat calls at a stable `(k, s)` allocate nothing.
+    fn forward_prefix(&mut self, tokens: &[i32], k: usize, s: usize,
+                      mut caches: Option<&mut [KvCache]>,
+                      y: &mut Matrix) -> crate::Result<()> {
+        crate::ensure!(k > 0, "empty batch");
+        crate::ensure!(
+            s >= 1 && s <= self.seq_len,
+            "prefix length {s} outside 1..={}",
+            self.seq_len
+        );
         crate::ensure!(
             tokens.len() == k * s,
             "expected {k}×{s} tokens, got {}",
             tokens.len()
         );
-        crate::ensure!(k > 0, "empty batch");
+        if let Some(cs) = caches.as_deref_mut() {
+            crate::ensure!(cs.len() == k, "{} caches for a batch of {k}", cs.len());
+            for c in cs.iter() {
+                c.check(self.n_layer, self.d_model)?;
+                crate::ensure!(
+                    c.capacity() >= s,
+                    "cache capacity {} below prefix length {s}",
+                    c.capacity()
+                );
+            }
+        }
+        let d = self.d_model;
         let rows = k * s;
         let (n_head, vocab) = (self.n_head, self.vocab);
         let policy = self.policy;
         let Self { ws, blocks, tok_emb, pos_emb, lnf_g, lnf_b, head_w, .. } = self;
 
-        // Embedding: h[b·S + t] = tok_emb[token] + pos_emb[t].
+        // Embedding: h[b·s + t] = tok_emb[token] + pos_emb[t].
         ensure_out(&mut ws.h, rows, d);
         for b in 0..k {
             for t in 0..s {
@@ -250,10 +401,19 @@ impl HostModel {
             }
         }
 
-        for blk in blocks.iter_mut() {
+        for (li, blk) in blocks.iter_mut().enumerate() {
             // Attention sub-block: ln1 → qkv → causal attention → proj.
             layer_norm_into(&ws.h, &blk.ln1_g, &blk.ln1_b, &mut ws.hn);
             blk.qkv.forward_into(&ws.hn, &mut ws.qkv, &policy);
+            if let Some(cs) = caches.as_deref_mut() {
+                // Prefill: bank this layer's K/V rows for every position.
+                for (b, cache) in cs.iter_mut().enumerate() {
+                    for t in 0..s {
+                        let row = ws.qkv.row(b * s + t);
+                        cache.write_row(li, t, &row[d..2 * d], &row[2 * d..3 * d]);
+                    }
+                }
+            }
             causal_attention_into(&ws.qkv, k, s, d, n_head, &mut ws.scores, &mut ws.att);
             blk.proj.forward_into(&ws.att, &mut ws.branch, &policy);
             add_inplace(&mut ws.h, &ws.branch);
@@ -277,12 +437,151 @@ impl HostModel {
         };
         ensure_out(y, k, vocab);
         gemm_nt_into(&ws.last, head, y, &policy);
+        if let Some(cs) = caches {
+            for c in cs.iter_mut() {
+                c.len = s;
+            }
+        }
         Ok(())
     }
 
     /// The policy every kernel call of this executor runs under.
     pub fn policy(&self) -> ParallelPolicy {
         self.policy
+    }
+}
+
+// ---- KV cache ---------------------------------------------------------
+
+/// Per-sequence decode state: one K and one V plane per layer, each
+/// `capacity × d_model`, preallocated at the model's context bound so
+/// decode steps never allocate.  `len` is the logical fill — it grows by
+/// one per decoded token (rows `len..capacity` are dead space a later
+/// write simply overwrites).  Resident size is
+/// `layers × 2 × capacity × d_model × 4` bytes — the
+/// [`crate::memmodel::kv_cache_bytes`] charge in the inference memory
+/// model.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    /// Per-layer key planes; row `t` is the full `d_model`-wide key
+    /// vector (all heads) of position `t`.
+    k: Vec<Matrix>,
+    /// Per-layer value planes, same layout.
+    v: Vec<Matrix>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layer: usize, d_model: usize, capacity: usize) -> Self {
+        assert!(n_layer > 0 && d_model > 0 && capacity > 0, "degenerate KvCache shape");
+        Self {
+            k: (0..n_layer).map(|_| Matrix::zeros(capacity, d_model)).collect(),
+            v: (0..n_layer).map(|_| Matrix::zeros(capacity, d_model)).collect(),
+            len: 0,
+        }
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.k[0].cols
+    }
+
+    /// Maximum positions the planes can hold (the model's `seq_len`).
+    pub fn capacity(&self) -> usize {
+        self.k[0].rows
+    }
+
+    /// Positions currently cached (prompt + decoded tokens).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Forget everything (capacity and allocation are retained).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Roll the logical fill back to `len` — rows beyond it become dead
+    /// and are overwritten by the next step.  The rollback hook the
+    /// bench uses to pin per-step cost at a fixed position (and what a
+    /// speculative-decode rejection would call).
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate({len}) beyond fill {}", self.len);
+        self.len = len;
+    }
+
+    /// Resident bytes of the preallocated planes:
+    /// `layers × 2 × capacity × d_model × 4` (f32 K and V).
+    pub fn bytes(&self) -> usize {
+        self.k.len() * 2 * self.capacity() * self.d_model() * 4
+    }
+
+    fn check(&self, n_layer: usize, d: usize) -> crate::Result<()> {
+        crate::ensure!(
+            self.k.len() == n_layer && self.d_model() == d,
+            "cache shape ({} layers, d {}) does not match the model ({n_layer}, {d})",
+            self.k.len(),
+            self.d_model()
+        );
+        Ok(())
+    }
+
+    #[inline]
+    fn write_row(&mut self, layer: usize, t: usize, krow: &[f32], vrow: &[f32]) {
+        self.k[layer].row_mut(t).copy_from_slice(krow);
+        self.v[layer].row_mut(t).copy_from_slice(vrow);
+    }
+}
+
+/// One query row's attention over a sequence's cached K/V planes (rows
+/// `0..=pos`, the appended current position included) — the incremental
+/// counterpart of [`causal_attention_into`], mirroring its max-subtracted
+/// softmax term-for-term so the decode path stays bit-identical to the
+/// full recompute.  `q` is the `d`-wide fused-QKV query slice; `out` the
+/// `d`-wide attention output row.
+fn decode_attention_row(kplane: &Matrix, vplane: &Matrix, q: &[f32], pos: usize,
+                        n_head: usize, scores: &mut Vec<f32>, out: &mut [f32]) {
+    let d = q.len();
+    let hd = d / n_head;
+    let scale = 1.0 / (hd as f32).sqrt();
+    if scores.len() < pos + 1 {
+        scores.resize(pos + 1, 0.0);
+    }
+    for h in 0..n_head {
+        let off = h * hd;
+        let qrow = &q[off..off + hd];
+        let mut maxv = f32::NEG_INFINITY;
+        for t in 0..=pos {
+            let krow = &kplane.row(t)[off..off + hd];
+            let sc = dot(qrow, krow, hd) * scale;
+            scores[t] = sc;
+            if sc > maxv {
+                maxv = sc;
+            }
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut().take(pos + 1) {
+            let e = (*sc - maxv).exp();
+            *sc = e;
+            denom += e;
+        }
+        let inv = 1.0 / denom;
+        let orow = &mut out[off..off + hd];
+        orow.fill(0.0);
+        for t in 0..=pos {
+            let wgt = scores[t] * inv;
+            let vrow = &vplane.row(t)[off..off + hd];
+            for j in 0..hd {
+                orow[j] += wgt * vrow[j];
+            }
+        }
     }
 }
 
@@ -622,6 +921,86 @@ mod tests {
                 .unwrap();
             assert_eq!(y1.row(0), y.row(b), "row {b} must not depend on batch fill");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kv_cached_decode_matches_full_recompute_bit_for_bit() {
+        let dir = std::env::temp_dir().join("slope_host_kv_parity_test");
+        let spec = SynthSpec { seed: 5, ..SynthSpec::default() };
+        write_synthetic_artifact(&dir, &spec).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let (store, packed) =
+            crate::coordinator::checkpoint::load_model_checkpoint(&dir).unwrap();
+        let mut hm = HostModel::from_store(&manifest, &store, &packed,
+                                           ParallelPolicy::with_threads(2))
+            .unwrap();
+        let mut rng = Rng::seed_from_u64(31);
+        let prompt_len = 3usize;
+        let mut toks: Vec<i32> =
+            (0..prompt_len).map(|_| rng.below(spec.vocab) as i32).collect();
+        let mut cache = hm.new_kv_cache();
+        let mut y_inc = Matrix::zeros(0, 0);
+        hm.prefill_into(&toks, &mut cache, &mut y_inc).unwrap();
+        assert_eq!(cache.len(), prompt_len);
+        let mut y_full = Matrix::zeros(0, 0);
+        hm.forward_prefix_logits_into(&toks, &mut y_full).unwrap();
+        assert_eq!(y_inc.data, y_full.data, "prefill logits must equal full recompute");
+        // Greedy-extend to the context bound, pinning every step.
+        while toks.len() < spec.seq_len {
+            let next = y_inc
+                .row(0)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            toks.push(next);
+            hm.decode_step_into(&[next], std::slice::from_mut(&mut cache), &mut y_inc)
+                .unwrap();
+            hm.forward_prefix_logits_into(&toks, &mut y_full).unwrap();
+            assert_eq!(
+                y_inc.data, y_full.data,
+                "decode at position {} must equal full recompute",
+                toks.len() - 1
+            );
+        }
+        // Cache full: the next step must refuse, leaving the cache intact.
+        assert!(hm
+            .decode_step_into(&[0], std::slice::from_mut(&mut cache), &mut y_inc)
+            .is_err());
+        assert_eq!(cache.len(), spec.seq_len);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kv_cache_truncate_replays_identically() {
+        let dir = std::env::temp_dir().join("slope_host_kv_truncate_test");
+        let spec = SynthSpec { seed: 6, ..SynthSpec::default() };
+        write_synthetic_artifact(&dir, &spec).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let (store, packed) =
+            crate::coordinator::checkpoint::load_model_checkpoint(&dir).unwrap();
+        let mut hm =
+            HostModel::from_store(&manifest, &store, &packed, ParallelPolicy::serial())
+                .unwrap();
+        let mut cache = hm.new_kv_cache();
+        assert_eq!(
+            cache.bytes(),
+            spec.n_layer * 2 * spec.seq_len * spec.d_model * 4,
+            "KvCache charge must match the memmodel formula"
+        );
+        let mut y = Matrix::zeros(0, 0);
+        hm.prefill_into(&[1, 2, 3], &mut cache, &mut y).unwrap();
+        let mut first = Matrix::zeros(0, 0);
+        hm.decode_step_into(&[5], std::slice::from_mut(&mut cache), &mut first)
+            .unwrap();
+        assert_eq!(cache.len(), 4);
+        cache.truncate(3);
+        let mut again = Matrix::zeros(0, 0);
+        hm.decode_step_into(&[5], std::slice::from_mut(&mut cache), &mut again)
+            .unwrap();
+        assert_eq!(first.data, again.data, "rollback + replay must be bit-identical");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -27,7 +27,7 @@ pub mod host;
 pub mod manifest;
 pub mod store;
 
-pub use host::{write_synthetic_artifact, HostModel, SynthSpec};
+pub use host::{write_synthetic_artifact, HostModel, KvCache, SynthSpec};
 pub use manifest::{ExeSpec, Manifest, TensorSpec, SPARSE_WEIGHTS};
 pub use store::Store;
 

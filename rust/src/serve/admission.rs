@@ -1,45 +1,146 @@
 //! Async admission: concurrent producers over the externally-clocked
-//! engine.
+//! engines.
 //!
-//! [`ServeEngine`] is single-threaded by design (submit/poll under one
-//! caller's clock), which keeps the batching policy deterministic and
-//! testable — but a deployment has many producers.  [`Admission`] bridges
-//! the two with the classic channel-fed dispatch-thread shape:
+//! [`ServeEngine`] and [`DecodeEngine`] are single-threaded by design
+//! (submit/poll under one caller's clock), which keeps the batching
+//! policy deterministic and testable — but a deployment has many
+//! producers.  This module bridges the two with the classic channel-fed
+//! dispatch-thread shape, twice:
 //!
-//! * any number of [`AdmissionClient`]s (cheap to mint, `Send`) push
-//!   requests into an mpsc queue, each tagged with a caller-chosen id;
-//! * one dedicated dispatch thread owns the engine, draining the queue
-//!   into [`ServeEngine::submit`] and polling on a short tick so
-//!   `max_wait` deadlines fire between arrivals;
-//! * completed [`Response`]s are routed back to the submitting client
-//!   over its private reply channel.
+//! * [`Admission`] — one-shot requests over a [`ServeEngine`]: any number
+//!   of [`AdmissionClient`]s push tagged inputs into the queue, one
+//!   dedicated dispatch thread owns the engine, and completed
+//!   [`Response`]s are routed back over each client's private reply
+//!   channel.
+//! * [`DecodeAdmission`] — generation requests over a [`DecodeEngine`]:
+//!   same shape, but the dispatch thread runs the continuous-batching
+//!   scheduler hot while sequences are in flight, and replies carry whole
+//!   [`Generation`]s.
 //!
-//! The engine is **built inside the dispatch thread** (the `spawn`
+//! **Backpressure** ([`QueuePolicy`]): the queue between producers and
+//! dispatcher is unbounded by default — fine for experiments, unbounded
+//! memory under overload.  A bounded policy (`--queue-cap N`) makes
+//! overload explicit with two shed disciplines ([`Overload`]):
+//! `Reject` fails the submit immediately ("load shed" — the producer
+//! sees the error and can back off), `Block` parks the producer on the
+//! bounded channel until the dispatcher drains (classic backpressure).
+//! The dispatcher cooperates by not draining the channel while the
+//! engine already holds `cap` queued requests, so the end-to-end buffer
+//! is bounded by ~2·cap rather than growing with offered load — the
+//! knob tail-latency experiments use to model overload instead of just
+//! contention.
+//!
+//! Engines are **built inside the dispatch thread** (the `spawn`
 //! closure), not handed over: an [`crate::serve::AotModel`] holds a
 //! thread-local cached `Session` and cannot cross threads, and the warm
 //! kernel stack is cheaper to build where it will run anyway.
 //!
-//! Because every [`crate::serve::ServeModel`] is row-independent, the
-//! nondeterministic coalescing that concurrency produces never changes
-//! any response's payload — N concurrent producers get the same answers
-//! serial submission would give them (pinned in
-//! `tests/serve_model.rs`) — only the *latency distribution* moves, which
-//! is exactly what `slope serve --producers N` measures (p50/p95/p99
-//! under contention).
+//! Because every model is row/sequence-independent, the nondeterministic
+//! coalescing that concurrency produces never changes any payload — N
+//! concurrent producers get the same answers serial submission would
+//! give them (pinned in `tests/serve_model.rs` and `tests/decode.rs`) —
+//! only the *latency distribution* moves, which is exactly what
+//! `slope serve --producers N` measures.
 //!
-//! Shutdown: drop every client, then call [`Admission::finish`] — the
-//! dispatch thread sees the queue disconnect, flushes the engine, routes
-//! the tail, and returns the final [`StatsSummary`].
+//! Shutdown: drop every client, then call `finish` — the dispatch thread
+//! sees the queue disconnect, flushes the engine, routes the tail, and
+//! returns the final [`StatsSummary`].
 
-use crate::serve::engine::{Response, ServeEngine};
-use crate::serve::model::ServeModel;
+use crate::serve::engine::{DecodeEngine, Generation, Response, ServeEngine};
+use crate::serve::model::{DecodeModel, ServeModel};
 use crate::serve::stats::StatsSummary;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender,
+                      TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// What a producer does when the bounded admission queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Overload {
+    /// Fail the submit immediately (load shedding; the producer sees the
+    /// error).
+    Reject,
+    /// Park the producer until the dispatcher drains (backpressure).
+    Block,
+}
+
+/// Admission-queue bound + overload discipline (module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct QueuePolicy {
+    /// `None` = unbounded (the pre-backpressure behaviour).
+    pub cap: Option<usize>,
+    pub overload: Overload,
+}
+
+impl QueuePolicy {
+    pub fn unbounded() -> Self {
+        Self { cap: None, overload: Overload::Reject }
+    }
+
+    pub fn bounded(cap: usize, overload: Overload) -> Self {
+        assert!(cap >= 1, "queue cap must be at least 1");
+        Self { cap: Some(cap), overload }
+    }
+}
+
+impl Default for QueuePolicy {
+    fn default() -> Self {
+        Self::unbounded()
+    }
+}
+
+/// Producer-side sender honoring the queue policy.
+enum Tx<T> {
+    Unbounded(Sender<T>),
+    Bounded(SyncSender<T>, Overload),
+}
+
+impl<T> Clone for Tx<T> {
+    fn clone(&self) -> Self {
+        match self {
+            Tx::Unbounded(s) => Tx::Unbounded(s.clone()),
+            Tx::Bounded(s, o) => Tx::Bounded(s.clone(), *o),
+        }
+    }
+}
+
+impl<T> Tx<T> {
+    fn send(&self, msg: T) -> crate::Result<()> {
+        match self {
+            Tx::Unbounded(s) => {
+                s.send(msg).map_err(|_| crate::eyre!("admission queue is closed"))
+            }
+            Tx::Bounded(s, Overload::Block) => {
+                s.send(msg).map_err(|_| crate::eyre!("admission queue is closed"))
+            }
+            Tx::Bounded(s, Overload::Reject) => match s.try_send(msg) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(_)) => {
+                    Err(crate::eyre!("admission queue full; request shed"))
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    Err(crate::eyre!("admission queue is closed"))
+                }
+            },
+        }
+    }
+}
+
+fn queue_channel<T>(policy: QueuePolicy) -> (Tx<T>, Receiver<T>) {
+    match policy.cap {
+        None => {
+            let (tx, rx) = channel();
+            (Tx::Unbounded(tx), rx)
+        }
+        Some(cap) => {
+            let (tx, rx) = sync_channel(cap);
+            (Tx::Bounded(tx, policy.overload), rx)
+        }
+    }
+}
 
 /// One routed reply: the client's tag plus the outcome.
 pub type Reply = (u64, crate::Result<Response>);
@@ -48,9 +149,9 @@ enum Msg {
     Submit { tag: u64, input: Vec<f32>, reply: Sender<Reply> },
 }
 
-/// Handle to a running admission front-end (module docs).
+/// Handle to a running one-shot admission front-end (module docs).
 pub struct Admission {
-    tx: Option<Sender<Msg>>,
+    tx: Option<Tx<Msg>>,
     dispatcher: Option<JoinHandle<crate::Result<StatsSummary>>>,
     /// Cleared (via a drop guard) when the dispatch thread exits for any
     /// reason — clients poll it so a dead dispatcher can never strand
@@ -62,39 +163,50 @@ pub struct Admission {
 /// A producer-side handle: submit tagged inputs, receive tagged replies.
 /// Mint one per producer thread with [`Admission::client`].
 pub struct AdmissionClient {
-    tx: Sender<Msg>,
+    tx: Tx<Msg>,
     reply_tx: Sender<Reply>,
     reply_rx: Receiver<Reply>,
     alive: Arc<AtomicBool>,
 }
 
+/// RAII: clears the liveness flag however the dispatch thread exits
+/// (return or panic).
+struct ClearOnExit(Arc<AtomicBool>);
+
+impl Drop for ClearOnExit {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+}
+
 impl Admission {
-    /// Start the dispatch thread.  `build` runs on that thread and
-    /// constructs the engine (see module docs for why); `tick` bounds how
-    /// long the dispatcher sleeps between polls when no requests arrive —
-    /// it should be a fraction of the batch policy's `max_wait` (see
-    /// [`Admission::tick_for`]).
+    /// Start the dispatch thread with an unbounded queue.  `build` runs
+    /// on that thread and constructs the engine (see module docs for
+    /// why); `tick` bounds how long the dispatcher sleeps between polls
+    /// when no requests arrive — it should be a fraction of the batch
+    /// policy's `max_wait` (see [`Admission::tick_for`]).
     pub fn spawn<M, F>(build: F, tick: Duration) -> Self
     where
         M: ServeModel + 'static,
         F: FnOnce() -> crate::Result<ServeEngine<M>> + Send + 'static,
     {
-        let (tx, rx) = channel::<Msg>();
+        Self::spawn_with_queue(build, tick, QueuePolicy::unbounded())
+    }
+
+    /// [`Admission::spawn`] with an explicit admission-queue policy.
+    pub fn spawn_with_queue<M, F>(build: F, tick: Duration, queue: QueuePolicy) -> Self
+    where
+        M: ServeModel + 'static,
+        F: FnOnce() -> crate::Result<ServeEngine<M>> + Send + 'static,
+    {
+        let (tx, rx) = queue_channel::<Msg>(queue);
         let alive = Arc::new(AtomicBool::new(true));
         let alive_in_thread = Arc::clone(&alive);
         let dispatcher = std::thread::Builder::new()
             .name("slope-admission".into())
             .spawn(move || {
-                // Clears the liveness flag however the thread exits
-                // (return or panic).
-                struct ClearOnExit(Arc<AtomicBool>);
-                impl Drop for ClearOnExit {
-                    fn drop(&mut self) {
-                        self.0.store(false, Ordering::SeqCst);
-                    }
-                }
                 let _clear = ClearOnExit(alive_in_thread);
-                dispatch(build, rx, tick)
+                dispatch(build, rx, tick, queue)
             })
             .expect("spawning admission dispatch thread");
         Self { tx: Some(tx), dispatcher: Some(dispatcher), alive }
@@ -132,11 +244,11 @@ impl Admission {
 
 impl AdmissionClient {
     /// Enqueue one input under a caller-chosen tag (echoed on the reply).
-    /// Errors only if the admission queue has shut down.
+    /// Errors if the queue has shut down — or, under a bounded
+    /// [`Overload::Reject`] policy, if the queue is full (the shed
+    /// signal).
     pub fn submit(&self, tag: u64, input: Vec<f32>) -> crate::Result<()> {
-        self.tx
-            .send(Msg::Submit { tag, input, reply: self.reply_tx.clone() })
-            .map_err(|_| crate::eyre!("admission queue is closed"))
+        self.tx.send(Msg::Submit { tag, input, reply: self.reply_tx.clone() })
     }
 
     /// Block until the next reply for this client arrives.  Returns an
@@ -168,12 +280,13 @@ impl AdmissionClient {
 /// `Err` to every submission still sitting in the queue so no producer is
 /// left blocking on a reply that will never come (submissions arriving
 /// after this drain fail at `send` — the receiver is dropped with us).
-fn dispatch<M, F>(build: F, rx: Receiver<Msg>, tick: Duration) -> crate::Result<StatsSummary>
+fn dispatch<M, F>(build: F, rx: Receiver<Msg>, tick: Duration,
+                  queue: QueuePolicy) -> crate::Result<StatsSummary>
 where
     M: ServeModel,
     F: FnOnce() -> crate::Result<ServeEngine<M>>,
 {
-    let result = dispatch_loop(build, &rx, tick);
+    let result = dispatch_loop(build, &rx, tick, queue);
     if let Err(e) = &result {
         let why = e.to_string();
         while let Ok(Msg::Submit { tag, reply, .. }) = rx.try_recv() {
@@ -184,8 +297,8 @@ where
 }
 
 /// The dispatch loop (runs on the dedicated thread).
-fn dispatch_loop<M, F>(build: F, rx: &Receiver<Msg>,
-                       tick: Duration) -> crate::Result<StatsSummary>
+fn dispatch_loop<M, F>(build: F, rx: &Receiver<Msg>, tick: Duration,
+                       queue: QueuePolicy) -> crate::Result<StatsSummary>
 where
     M: ServeModel,
     F: FnOnce() -> crate::Result<ServeEngine<M>>,
@@ -195,17 +308,32 @@ where
     let mut routes: HashMap<u64, (u64, Sender<Reply>)> = HashMap::new();
     let mut open = true;
     while open {
-        match rx.recv_timeout(tick) {
-            Ok(msg) => {
-                admit(&mut engine, msg, start, &mut routes);
-                // Drain whatever else queued up while we were busy, so a
-                // burst coalesces into one batch instead of one per tick.
-                while let Ok(msg) = rx.try_recv() {
+        // Backpressure: with the engine already holding `cap` queued
+        // requests, leave arrivals in the (bounded) channel — producers
+        // block or shed there — and let the poll below drain the engine.
+        let room = |engine: &ServeEngine<M>| match queue.cap {
+            Some(c) => engine.pending() < c,
+            None => true,
+        };
+        if room(&engine) {
+            match rx.recv_timeout(tick) {
+                Ok(msg) => {
                     admit(&mut engine, msg, start, &mut routes);
+                    // Drain whatever else queued up while we were busy, so
+                    // a burst coalesces into one batch instead of one per
+                    // tick — but never past the queue bound.
+                    while room(&engine) {
+                        match rx.try_recv() {
+                            Ok(msg) => admit(&mut engine, msg, start, &mut routes),
+                            Err(_) => break,
+                        }
+                    }
                 }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
             }
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => open = false,
+        } else {
+            std::thread::sleep(tick);
         }
         // Dispatch EVERY due batch before sleeping again: a backlog must
         // drain at compute speed, not at one batch per tick (the tick
@@ -262,12 +390,227 @@ fn route(result: crate::Result<Vec<Response>>,
     }
 }
 
+// ---- generation admission ----------------------------------------------
+
+/// One routed generation reply: the client's tag plus the outcome.
+pub type GenReply = (u64, crate::Result<Generation>);
+
+enum GenMsg {
+    Submit { tag: u64, prompt: Vec<i32>, max_new: Option<usize>, reply: Sender<GenReply> },
+}
+
+/// Handle to a running generation admission front-end: the async face of
+/// the continuous-batching [`DecodeEngine`] (module docs).
+pub struct DecodeAdmission {
+    tx: Option<Tx<GenMsg>>,
+    dispatcher: Option<JoinHandle<crate::Result<StatsSummary>>>,
+    alive: Arc<AtomicBool>,
+}
+
+/// A producer-side handle for generation requests.
+pub struct DecodeClient {
+    tx: Tx<GenMsg>,
+    reply_tx: Sender<GenReply>,
+    reply_rx: Receiver<GenReply>,
+    alive: Arc<AtomicBool>,
+}
+
+impl DecodeAdmission {
+    /// Start the dispatch thread (engine built inside it).  While
+    /// sequences are in flight the dispatcher steps the scheduler hot,
+    /// draining arrivals non-blockingly between steps; idle, it parks on
+    /// the queue with `tick` timeouts.
+    pub fn spawn<M, F>(build: F, tick: Duration, queue: QueuePolicy) -> Self
+    where
+        M: DecodeModel + 'static,
+        F: FnOnce() -> crate::Result<DecodeEngine<M>> + Send + 'static,
+    {
+        let (tx, rx) = queue_channel::<GenMsg>(queue);
+        let alive = Arc::new(AtomicBool::new(true));
+        let alive_in_thread = Arc::clone(&alive);
+        let dispatcher = std::thread::Builder::new()
+            .name("slope-decode-admission".into())
+            .spawn(move || {
+                let _clear = ClearOnExit(alive_in_thread);
+                gen_dispatch(build, rx, tick, queue)
+            })
+            .expect("spawning decode admission dispatch thread");
+        Self { tx: Some(tx), dispatcher: Some(dispatcher), alive }
+    }
+
+    /// Mint a producer handle (its own private reply channel).
+    pub fn client(&self) -> DecodeClient {
+        let (reply_tx, reply_rx) = channel();
+        DecodeClient {
+            tx: self.tx.as_ref().expect("admission already finished").clone(),
+            reply_tx,
+            reply_rx,
+            alive: Arc::clone(&self.alive),
+        }
+    }
+
+    /// Shut down: close the queue, let the dispatcher run every in-flight
+    /// generation to completion, and return the final stats.  Every
+    /// [`DecodeClient`] must be dropped first.
+    pub fn finish(mut self) -> crate::Result<StatsSummary> {
+        drop(self.tx.take());
+        match self.dispatcher.take().expect("admission finished twice").join() {
+            Ok(result) => result,
+            Err(_) => Err(crate::eyre!("decode admission dispatch thread panicked")),
+        }
+    }
+}
+
+impl DecodeClient {
+    /// Enqueue one prompt under a caller-chosen tag (echoed on the
+    /// reply); `max_new` caps this request's generated tokens (`None` =
+    /// engine default).  Errors if the queue has shut down — or, under a
+    /// bounded [`Overload::Reject`] policy, if the queue is full.
+    pub fn submit(&self, tag: u64, prompt: Vec<i32>,
+                  max_new: Option<usize>) -> crate::Result<()> {
+        self.tx.send(GenMsg::Submit { tag, prompt, max_new, reply: self.reply_tx.clone() })
+    }
+
+    /// Block until this client's next completed generation arrives.
+    pub fn recv(&self) -> crate::Result<(u64, Generation)> {
+        loop {
+            match self.reply_rx.recv_timeout(Duration::from_millis(5)) {
+                Ok((tag, result)) => return Ok((tag, result?)),
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.alive.load(Ordering::SeqCst) {
+                        if let Ok((tag, result)) = self.reply_rx.try_recv() {
+                            return Ok((tag, result?));
+                        }
+                        return Err(crate::eyre!("decode admission dispatcher is gone"));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(crate::eyre!("decode admission dispatcher is gone"));
+                }
+            }
+        }
+    }
+}
+
+fn gen_dispatch<M, F>(build: F, rx: Receiver<GenMsg>, tick: Duration,
+                      queue: QueuePolicy) -> crate::Result<StatsSummary>
+where
+    M: DecodeModel,
+    F: FnOnce() -> crate::Result<DecodeEngine<M>>,
+{
+    let result = gen_dispatch_loop(build, &rx, tick, queue);
+    if let Err(e) = &result {
+        let why = e.to_string();
+        while let Ok(GenMsg::Submit { tag, reply, .. }) = rx.try_recv() {
+            let _ = reply.send((tag, Err(crate::eyre!("decode dispatch failed: {why}"))));
+        }
+    }
+    result
+}
+
+fn gen_dispatch_loop<M, F>(build: F, rx: &Receiver<GenMsg>, tick: Duration,
+                           queue: QueuePolicy) -> crate::Result<StatsSummary>
+where
+    M: DecodeModel,
+    F: FnOnce() -> crate::Result<DecodeEngine<M>>,
+{
+    let mut engine = build()?;
+    let start = Instant::now();
+    let mut routes: HashMap<u64, (u64, Sender<GenReply>)> = HashMap::new();
+    let mut open = true;
+    loop {
+        if open {
+            let room = |engine: &DecodeEngine<M>| match queue.cap {
+                Some(c) => engine.pending() < c,
+                None => true,
+            };
+            if room(&engine) {
+                if engine.active() > 0 {
+                    // Busy: drain ready arrivals without blocking; the
+                    // scheduler below keeps the batch hot.
+                    loop {
+                        if !room(&engine) {
+                            break;
+                        }
+                        match rx.try_recv() {
+                            Ok(msg) => gen_admit(&mut engine, msg, start, &mut routes),
+                            Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                } else {
+                    match rx.recv_timeout(tick) {
+                        Ok(msg) => {
+                            gen_admit(&mut engine, msg, start, &mut routes);
+                            while room(&engine) {
+                                match rx.try_recv() {
+                                    Ok(msg) => {
+                                        gen_admit(&mut engine, msg, start, &mut routes)
+                                    }
+                                    Err(_) => break,
+                                }
+                            }
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => open = false,
+                    }
+                }
+            }
+        }
+        if engine.active() > 0 {
+            let done = engine.step(start.elapsed());
+            route_gen(done, &mut routes)?;
+        } else if !open {
+            break;
+        }
+    }
+    Ok(engine.stats().summary())
+}
+
+fn gen_admit<M: DecodeModel>(engine: &mut DecodeEngine<M>, msg: GenMsg, start: Instant,
+                             routes: &mut HashMap<u64, (u64, Sender<GenReply>)>) {
+    let GenMsg::Submit { tag, prompt, max_new, reply } = msg;
+    match engine.submit(prompt, max_new, start.elapsed()) {
+        Ok(id) => {
+            routes.insert(id, (tag, reply));
+        }
+        Err(e) => {
+            let _ = reply.send((tag, Err(e)));
+        }
+    }
+}
+
+fn route_gen(result: crate::Result<Vec<Generation>>,
+             routes: &mut HashMap<u64, (u64, Sender<GenReply>)>) -> crate::Result<()> {
+    match result {
+        Ok(done) => {
+            for gen in done {
+                if let Some((tag, reply)) = routes.remove(&gen.id) {
+                    let _ = reply.send((tag, Ok(gen)));
+                }
+            }
+            Ok(())
+        }
+        Err(e) => {
+            let why = e.to_string();
+            for (_, (tag, reply)) in routes.drain() {
+                let _ = reply.send((tag, Err(crate::eyre!("decode dispatch failed: {why}"))));
+            }
+            Err(e)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::{ParallelPolicy, SparseBackend, SpmmAlgo};
     use crate::serve::batcher::BatchPolicy;
-    use crate::serve::model::ServeLayer;
+    use crate::serve::engine::DecodePolicy;
+    use crate::serve::model::{KernelDecodeModel, ServeLayer};
     use crate::sparsity::{random_row_mask, NmScheme};
     use crate::tensor::Matrix;
     use crate::util::Rng;
@@ -331,5 +674,86 @@ mod tests {
         drop(client);
         let err = adm.finish().unwrap_err();
         assert!(err.to_string().contains("no model"));
+    }
+
+    #[test]
+    fn bounded_reject_sheds_when_the_dispatcher_is_stalled() {
+        // A build that parks the dispatcher long enough for the bounded
+        // channel to fill deterministically: cap 2 ⇒ the third submit is
+        // shed client-side with a queue-full error.
+        let adm = Admission::spawn_with_queue(
+            || -> crate::Result<ServeEngine> {
+                std::thread::sleep(Duration::from_millis(150));
+                engine()
+            },
+            Duration::from_micros(100),
+            QueuePolicy::bounded(2, Overload::Reject),
+        );
+        let client = adm.client();
+        client.submit(0, vec![1.0; 16]).unwrap();
+        client.submit(1, vec![1.0; 16]).unwrap();
+        let err = client.submit(2, vec![1.0; 16]).unwrap_err();
+        assert!(err.to_string().contains("full"), "{err}");
+        // The two admitted requests complete once the engine is up.
+        let mut tags = vec![client.recv().unwrap().0, client.recv().unwrap().0];
+        tags.sort_unstable();
+        assert_eq!(tags, vec![0, 1]);
+        drop(client);
+        let stats = adm.finish().unwrap();
+        assert_eq!(stats.served, 2);
+    }
+
+    #[test]
+    fn bounded_block_backpressures_but_completes_everything() {
+        let adm = Admission::spawn_with_queue(
+            engine,
+            Duration::from_micros(100),
+            QueuePolicy::bounded(1, Overload::Block),
+        );
+        let n = 16u64;
+        let submitter = {
+            let c = adm.client();
+            std::thread::spawn(move || {
+                for tag in 0..n {
+                    c.submit(tag, vec![0.5; 16]).unwrap();
+                }
+            })
+        };
+        // All submissions eventually land despite the cap-1 queue.
+        submitter.join().expect("submitter");
+        let stats = adm.finish().unwrap();
+        assert_eq!(stats.served, n as usize, "blocking producers lose nothing");
+    }
+
+    #[test]
+    fn decode_admission_round_trips_generations() {
+        let build = || -> crate::Result<DecodeEngine<KernelDecodeModel>> {
+            let model = KernelDecodeModel::synthetic(64, 16, 32, 4, 12,
+                                                     ParallelPolicy::serial(), 9)?;
+            DecodeEngine::new(
+                model,
+                DecodePolicy { max_batch: 2, max_new_tokens: 4, ..Default::default() },
+            )
+        };
+        let adm = DecodeAdmission::spawn(build, Duration::from_micros(100),
+                                         QueuePolicy::unbounded());
+        let client = adm.client();
+        for tag in 0..6u64 {
+            client.submit(tag, vec![(tag % 8) as i32, 3], None).unwrap();
+        }
+        let mut got = 0usize;
+        for _ in 0..6 {
+            let (_, gen) = client.recv().unwrap();
+            assert_eq!(gen.tokens.len(), 4);
+            assert_eq!(gen.prompt_len, 2);
+            got += 1;
+        }
+        assert_eq!(got, 6);
+        drop(client);
+        let stats = adm.finish().unwrap();
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.prefills, 6);
+        assert_eq!(stats.tokens_out, 6 * 3, "3 post-prefill tokens per request");
+        assert!(stats.decode_p99_ms >= 0.0);
     }
 }

@@ -20,9 +20,12 @@
 
 use crate::backend::ensure_out;
 use crate::serve::batcher::{BatchPolicy, Batcher, Request};
-use crate::serve::model::{KernelStackModel, ServeLayer, ServeModel};
+use crate::serve::model::{DecodeModel, KernelStackModel, Sampler, SeqId, ServeLayer,
+                          ServeModel};
 use crate::serve::stats::ServeStats;
 use crate::tensor::Matrix;
+use crate::util::Rng;
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// A completed request.
@@ -211,6 +214,355 @@ impl<M: ServeModel> ServeEngine<M> {
     }
 }
 
+// ---- continuous-batching decode scheduler ------------------------------
+
+/// Scheduling policy for [`DecodeEngine`].
+#[derive(Clone, Copy, Debug)]
+pub struct DecodePolicy {
+    /// Maximum sequences decoding concurrently (one coalesced step per
+    /// [`DecodeEngine::step`]); clamped to the model's
+    /// [`DecodeModel::max_decode_batch`] at construction.
+    pub max_batch: usize,
+    /// Default generated-token cap per request (a request may lower it;
+    /// the model's context bound always applies).
+    pub max_new_tokens: usize,
+    /// Stop token: a sequence finishes when it samples this id (the id is
+    /// included in the output).
+    pub eos: Option<i32>,
+    /// Token-selection rule (greedy / temperature).
+    pub sampler: Sampler,
+    /// Base seed for the per-sequence sampling RNGs (each sequence draws
+    /// from `seed ⊕ request-id`, so streams are independent of batching).
+    pub seed: u64,
+    /// Bound on the waiting queue: a submit beyond it is rejected with an
+    /// error (the inline engine can only shed; the async front-end adds a
+    /// blocking alternative — see [`crate::serve::admission`]).
+    pub queue_cap: Option<usize>,
+}
+
+impl Default for DecodePolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_new_tokens: 32,
+            eos: None,
+            sampler: Sampler::Greedy,
+            seed: 0,
+            queue_cap: None,
+        }
+    }
+}
+
+/// Why a generation stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Sampled the policy's stop token.
+    Eos,
+    /// Hit its generated-token cap (request cap, policy cap, or the
+    /// model's context bound — whichever bound first).
+    MaxTokens,
+}
+
+/// A completed generation request.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Generated tokens only (the prompt is not echoed); includes the
+    /// stop token when [`FinishReason::Eos`].
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Time spent waiting for a prefill slot.
+    pub queued: Duration,
+    /// Submit → final token.
+    pub latency: Duration,
+}
+
+struct WaitingGen {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    submitted: Duration,
+}
+
+struct RunningGen {
+    id: u64,
+    seq: SeqId,
+    prompt_len: usize,
+    max_new: usize,
+    submitted: Duration,
+    queued: Duration,
+    tokens: Vec<i32>,
+    rng: Rng,
+}
+
+/// The continuous-batching decode scheduler: sequences join the running
+/// batch as soon as a slot frees (prefill), share one coalesced
+/// [`DecodeModel::decode_step`] per [`DecodeEngine::step`] call, and
+/// leave individually on EOS or their token cap — no batch-of-requests
+/// barrier, so a short generation never waits for a long batch-mate.
+///
+/// Externally clocked like [`ServeEngine`] (`now` = caller's engine-
+/// relative [`Duration`]): `submit` enqueues, `step` advances the world
+/// by one admission round + one decode step and returns whatever
+/// finished.  Because every [`DecodeModel`] is sequence-independent and
+/// sampling RNGs are per-sequence, the token streams are identical to
+/// solo runs regardless of how sequences joined and left (pinned in
+/// `tests/decode.rs`) — only latency moves, which is what
+/// [`ServeStats`]' split request/per-token windows measure.
+pub struct DecodeEngine<M: DecodeModel> {
+    model: M,
+    policy: DecodePolicy,
+    waiting: VecDeque<WaitingGen>,
+    running: Vec<RunningGen>,
+    stats: ServeStats,
+    /// Reusable logits staging (`k × vocab` at the current fill).
+    logits: Matrix,
+    step_seqs: Vec<SeqId>,
+    step_tokens: Vec<i32>,
+    next_id: u64,
+}
+
+impl<M: DecodeModel> DecodeEngine<M> {
+    /// Build the scheduler; `policy.max_batch` is clamped to the model's
+    /// compiled decode-batch cap when it has one.
+    pub fn new(model: M, policy: DecodePolicy) -> crate::Result<Self> {
+        let mut policy = policy;
+        crate::ensure!(policy.max_batch >= 1, "max_batch must be at least 1");
+        crate::ensure!(policy.max_new_tokens >= 1, "max_new_tokens must be at least 1");
+        if let Some(cap) = model.max_decode_batch() {
+            crate::ensure!(cap >= 1, "model reports a zero decode-batch cap");
+            policy.max_batch = policy.max_batch.min(cap);
+        }
+        Ok(Self {
+            model,
+            policy,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            stats: ServeStats::default(),
+            logits: Matrix::zeros(0, 0),
+            step_seqs: Vec::new(),
+            step_tokens: Vec::new(),
+            next_id: 0,
+        })
+    }
+
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+
+    /// The (possibly model-clamped) policy in effect.
+    pub fn policy(&self) -> DecodePolicy {
+        self.policy
+    }
+
+    /// Requests waiting for a prefill slot.
+    pub fn pending(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Sequences currently in the running batch.
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Requests anywhere in flight (waiting + running).
+    pub fn active(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Enqueue one generation request; returns its id.  `max_new` caps
+    /// this request's generated tokens (`None` = policy default); the
+    /// model's context bound clamps it either way.  Rejection (queue cap,
+    /// malformed prompt, no room to generate) is per-request — a bad
+    /// prompt can never fail a shared decode step.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: Option<usize>,
+                  now: Duration) -> crate::Result<u64> {
+        if let Some(cap) = self.policy.queue_cap {
+            crate::ensure!(
+                self.waiting.len() < cap,
+                "admission queue full ({cap} waiting); request shed"
+            );
+        }
+        self.model.validate_prompt(&prompt)?;
+        let bound = self.model.max_seq_len();
+        crate::ensure!(
+            prompt.len() < bound,
+            "prompt of {} tokens leaves no room to generate within the {bound}-token context",
+            prompt.len()
+        );
+        let requested = max_new.unwrap_or(self.policy.max_new_tokens);
+        crate::ensure!(requested >= 1, "max_new_tokens must be at least 1");
+        // A request may lower the cap, never raise it past the policy's;
+        // the model's context bound applies either way.
+        let max_new = requested
+            .min(self.policy.max_new_tokens)
+            .min(bound - prompt.len());
+        let id = self.next_id;
+        self.next_id += 1;
+        self.waiting.push_back(WaitingGen { id, prompt, max_new, submitted: now });
+        Ok(id)
+    }
+
+    /// Advance the world: admit waiting requests into free slots (one
+    /// prefill each, first token sampled), then run ONE coalesced decode
+    /// step over the running batch.  Returns the generations that
+    /// finished during this step (possibly empty).  A prefill error
+    /// re-queues the request at the head and surfaces (after delivering
+    /// any generations that already finished this step); a decode-step
+    /// error fails the running batch (sequences freed, error returned)
+    /// but leaves the engine serviceable.
+    pub fn step(&mut self, now: Duration) -> crate::Result<Vec<Generation>> {
+        let mut done = Vec::new();
+        let mut admit_err: Option<crate::Error> = None;
+        // Admission: prefill into free slots — sequences join the running
+        // batch mid-stream, the "continuous" in continuous batching.
+        while self.running.len() < self.policy.max_batch {
+            let Some(req) = self.waiting.pop_front() else { break };
+            let t0 = Instant::now();
+            let seq = match self.model.prefill(&req.prompt, &mut self.logits) {
+                Ok(seq) => seq,
+                Err(e) => {
+                    // Don't lose the request: back to the head of the
+                    // queue, surface the error (the next step retries, so
+                    // a transient failure self-heals and a persistent one
+                    // keeps erroring visibly).
+                    self.waiting.push_front(req);
+                    admit_err = Some(e);
+                    break;
+                }
+            };
+            let compute = t0.elapsed();
+            self.stats.record_prefill(now, compute);
+            let mut run = RunningGen {
+                id: req.id,
+                seq,
+                prompt_len: req.prompt.len(),
+                max_new: req.max_new,
+                submitted: req.submitted,
+                queued: now.saturating_sub(req.submitted),
+                tokens: Vec::with_capacity(req.max_new),
+                rng: Rng::seed_from_u64(
+                    self.policy.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                ),
+            };
+            let first = self.policy.sampler.sample(self.logits.row(0), &mut run.rng);
+            run.tokens.push(first);
+            match finish_of(&run, self.policy.eos) {
+                Some(reason) => {
+                    // Best-effort: a free failure must not discard the
+                    // finished generation (the slab rejects double frees
+                    // on its own).
+                    let _ = self.model.free_seq(run.seq);
+                    done.push(complete(run, reason, now, compute));
+                }
+                None => self.running.push(run),
+            }
+        }
+        if let Some(e) = admit_err {
+            // Deliver any work that already completed this step; with
+            // nothing to deliver, surface the prefill failure now (it
+            // resurfaces on the next step either way — the request is
+            // still at the head of the queue).
+            if done.is_empty() {
+                return Err(e);
+            }
+            for g in &done {
+                self.stats.record_generation(g.latency);
+            }
+            return Ok(done);
+        }
+        // One coalesced decode step over every running sequence.
+        if !self.running.is_empty() {
+            self.step_seqs.clear();
+            self.step_tokens.clear();
+            for r in &self.running {
+                self.step_seqs.push(r.seq);
+                self.step_tokens.push(*r.tokens.last().expect("running implies a token"));
+            }
+            let t0 = Instant::now();
+            if let Err(e) =
+                self.model.decode_step(&self.step_seqs, &self.step_tokens, &mut self.logits)
+            {
+                // Fail the batch but keep the engine serviceable.
+                for r in self.running.drain(..) {
+                    let _ = self.model.free_seq(r.seq);
+                }
+                return Err(e);
+            }
+            let compute = t0.elapsed();
+            let k = self.step_seqs.len();
+            self.stats.record_decode_step(now, compute, k);
+            // `row` walks the fixed logits rows (the step's original
+            // batch order); `i` tracks the shrinking `running` vec — a
+            // mid-batch removal must not shift later sequences onto the
+            // wrong logits row.
+            let mut i = 0;
+            for row in 0..k {
+                {
+                    let run = &mut self.running[i];
+                    let tok =
+                        self.policy.sampler.sample(self.logits.row(row), &mut run.rng);
+                    run.tokens.push(tok);
+                }
+                match finish_of(&self.running[i], self.policy.eos) {
+                    Some(reason) => {
+                        // `remove` (not swap_remove) keeps batch order
+                        // stable, so step composition stays deterministic.
+                        let run = self.running.remove(i);
+                        // Best-effort free: never discard a finished
+                        // generation over a release failure.
+                        let _ = self.model.free_seq(run.seq);
+                        done.push(complete(run, reason, now, compute));
+                    }
+                    None => i += 1,
+                }
+            }
+        }
+        for g in &done {
+            self.stats.record_generation(g.latency);
+        }
+        Ok(done)
+    }
+
+    /// Drive every in-flight request to completion on the real clock —
+    /// the `slope generate` loop.
+    pub fn run_to_completion(&mut self, start: Instant) -> crate::Result<Vec<Generation>> {
+        let mut out = Vec::new();
+        while self.active() > 0 {
+            out.extend(self.step(start.elapsed())?);
+        }
+        Ok(out)
+    }
+}
+
+fn finish_of(run: &RunningGen, eos: Option<i32>) -> Option<FinishReason> {
+    let last = *run.tokens.last().expect("at least one sampled token");
+    if eos == Some(last) {
+        return Some(FinishReason::Eos);
+    }
+    if run.tokens.len() >= run.max_new {
+        return Some(FinishReason::MaxTokens);
+    }
+    None
+}
+
+fn complete(run: RunningGen, finish: FinishReason, now: Duration,
+            compute: Duration) -> Generation {
+    Generation {
+        id: run.id,
+        prompt_len: run.prompt_len,
+        tokens: run.tokens,
+        finish,
+        queued: run.queued,
+        latency: now.saturating_sub(run.submitted) + compute,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,6 +700,136 @@ mod tests {
         assert_eq!(eng.pending(), 0);
         let s = eng.stats().summary();
         assert_eq!(s.batches, 3, "10 requests at max_batch 4 ⇒ 4+4+2");
+    }
+
+    /// Deterministic fake decode model: logits are one-hot at
+    /// `(last_token + 1) % vocab`, so greedy generation counts upward —
+    /// every scheduling edge is predictable.
+    struct Arith {
+        seqs: Vec<Option<(i32, usize)>>,
+    }
+
+    impl Arith {
+        const VOCAB: usize = 16;
+        const MAX_SEQ: usize = 8;
+
+        fn new() -> Self {
+            Self { seqs: Vec::new() }
+        }
+
+        fn one_hot(tok: i32, row: &mut [f32]) {
+            row.fill(0.0);
+            row[(tok as usize + 1) % Self::VOCAB] = 1.0;
+        }
+    }
+
+    impl DecodeModel for Arith {
+        fn vocab(&self) -> usize {
+            Self::VOCAB
+        }
+        fn max_seq_len(&self) -> usize {
+            Self::MAX_SEQ
+        }
+        fn validate_prompt(&self, prompt: &[i32]) -> crate::Result<()> {
+            crate::ensure!(!prompt.is_empty(), "empty prompt");
+            crate::ensure!(prompt.len() <= Self::MAX_SEQ, "prompt too long");
+            Ok(())
+        }
+        fn prefill(&mut self, prompt: &[i32], logits: &mut Matrix) -> crate::Result<SeqId> {
+            ensure_out(logits, 1, Self::VOCAB);
+            let last = *prompt.last().expect("validated");
+            Self::one_hot(last, logits.row_mut(0));
+            self.seqs.push(Some((last, prompt.len())));
+            Ok((self.seqs.len() - 1) as SeqId)
+        }
+        fn decode_step(&mut self, seqs: &[SeqId], tokens: &[i32],
+                       logits: &mut Matrix) -> crate::Result<()> {
+            ensure_out(logits, seqs.len(), Self::VOCAB);
+            for (i, (&id, &tok)) in seqs.iter().zip(tokens).enumerate() {
+                let st = self.seqs[id as usize]
+                    .as_mut()
+                    .ok_or_else(|| crate::eyre!("freed seq {id}"))?;
+                crate::ensure!(st.1 < Self::MAX_SEQ, "context full");
+                *st = (tok, st.1 + 1);
+                Self::one_hot(tok, logits.row_mut(i));
+            }
+            Ok(())
+        }
+        fn free_seq(&mut self, seq: SeqId) -> crate::Result<()> {
+            crate::ensure!(self.seqs[seq as usize].take().is_some(), "double free");
+            Ok(())
+        }
+        fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+            self.seqs.get(seq as usize).and_then(|s| s.map(|x| x.1))
+        }
+        fn live_seqs(&self) -> usize {
+            self.seqs.iter().filter(|s| s.is_some()).count()
+        }
+        fn describe_decode(&self) -> String {
+            "arith".into()
+        }
+    }
+
+    #[test]
+    fn decode_engine_generates_caps_and_stops_on_eos() {
+        let policy = DecodePolicy { max_batch: 2, max_new_tokens: 4, ..Default::default() };
+        let mut eng = DecodeEngine::new(Arith::new(), policy).unwrap();
+        // Greedy from prompt [3]: 4, 5, 6, 7 — capped at max_new 4.
+        eng.submit(vec![3], None, Duration::ZERO).unwrap();
+        // Per-request cap of 2: 4, 5.
+        eng.submit(vec![3], Some(2), Duration::ZERO).unwrap();
+        // Third waits for a slot (max_batch 2), then generates 11, 12.
+        eng.submit(vec![10], Some(2), Duration::ZERO).unwrap();
+        let mut done = Vec::new();
+        let start = Instant::now();
+        while eng.active() > 0 {
+            done.extend(eng.step(start.elapsed()).unwrap());
+        }
+        done.sort_by_key(|g| g.id);
+        assert_eq!(done.len(), 3);
+        assert_eq!(done[0].tokens, vec![4, 5, 6, 7]);
+        assert_eq!(done[0].finish, FinishReason::MaxTokens);
+        assert_eq!(done[1].tokens, vec![4, 5]);
+        assert_eq!(done[2].tokens, vec![11, 12]);
+        assert_eq!(eng.model().live_seqs(), 0, "every sequence freed");
+        let s = eng.stats().summary();
+        assert_eq!(s.served, 3);
+        assert_eq!(s.prefills, 3);
+        // 8 generated tokens total; the first of each came from prefill.
+        assert_eq!(s.tokens_out, 8 - 3);
+        // EOS: from [3] with eos 6 → 4, 5, 6 (inclusive).
+        let policy = DecodePolicy { max_batch: 2, max_new_tokens: 8, eos: Some(6),
+                                    ..Default::default() };
+        let mut eng = DecodeEngine::new(Arith::new(), policy).unwrap();
+        eng.submit(vec![3], None, Duration::ZERO).unwrap();
+        let mut done = Vec::new();
+        while eng.active() > 0 {
+            done.extend(eng.step(Duration::ZERO).unwrap());
+        }
+        assert_eq!(done[0].tokens, vec![4, 5, 6]);
+        assert_eq!(done[0].finish, FinishReason::Eos);
+    }
+
+    #[test]
+    fn decode_engine_queue_cap_sheds_and_context_bound_clamps() {
+        let policy = DecodePolicy { max_batch: 1, queue_cap: Some(2), ..Default::default() };
+        let mut eng = DecodeEngine::new(Arith::new(), policy).unwrap();
+        eng.submit(vec![1], None, Duration::ZERO).unwrap();
+        eng.submit(vec![1], None, Duration::ZERO).unwrap();
+        let err = eng.submit(vec![1], None, Duration::ZERO).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        // A full-context prompt leaves no room to generate.
+        let long = vec![0i32; Arith::MAX_SEQ];
+        assert!(eng.submit(long, None, Duration::ZERO).is_err());
+        // A 7-token prompt in an 8-token context clamps max_new to 1.
+        let mut eng =
+            DecodeEngine::new(Arith::new(), DecodePolicy::default()).unwrap();
+        eng.submit(vec![0; 7], Some(5), Duration::ZERO).unwrap();
+        let mut done = Vec::new();
+        while eng.active() > 0 {
+            done.extend(eng.step(Duration::ZERO).unwrap());
+        }
+        assert_eq!(done[0].tokens.len(), 1, "context bound clamps the request cap");
     }
 
     #[test]

@@ -2,44 +2,57 @@
 //!
 //! SLoPe's headline inference claim (Table 2: up to 1.54× end-to-end
 //! speedup) is a *serving* claim, so deployment gets a real subsystem.
-//! Its spine is one trait:
+//! Its spine is two traits over one admission shape:
 //!
 //! ```text
-//!   producers ──mpsc──► [admission]  ──► ServeEngine<M: ServeModel> ──► M
-//!                        dispatch         batcher + stats + staging      the math
+//!   producers ──mpsc──► [admission]  ──► ServeEngine<M: ServeModel>   ──► M
+//!             (bounded,  dispatch        batcher + stats + staging        one-shot math
+//!              shed or   thread
+//!              block)             └────► DecodeEngine<M: DecodeModel> ──► M
+//!                                        continuous batching              prefill +
+//!                                        (join/leave per sequence)        KV-cached steps
 //! ```
 //!
-//! * [`model`] — [`ServeModel`], the coalesced-batch contract
-//!   (`d_in`/`d_out`/`forward_batch_into` + `max_batch`/`describe`
-//!   metadata), with two production implementations:
-//!   [`KernelStackModel`] (warm compressed-2:4 [`ServeLayer`]s + fused
-//!   LoRA, straight on the kernel engine) and [`AotModel`] (a
-//!   checkpointed transformer behind a manifest — PJRT when the
-//!   executables compile, the in-process host kernel executor
-//!   ([`crate::runtime::host`]) otherwise; requests are token sequences,
-//!   responses next-token logits);
-//! * [`engine`] — [`ServeEngine`], the externally-clocked admission core:
-//!   coalesces requests under a [`BatchPolicy`], stages them
-//!   allocation-free, runs the model, and records telemetry;
+//! * [`model`] — the contracts and their production implementations:
+//!   * [`ServeModel`] — the one-shot coalesced-batch contract
+//!     (`d_in`/`d_out`/`forward_batch_into`), served by
+//!     [`KernelStackModel`] (warm compressed-2:4 [`ServeLayer`]s + fused
+//!     LoRA) and [`AotModel`] (a checkpointed transformer behind a
+//!     manifest — PJRT when the executables compile, the host kernel
+//!     executor otherwise);
+//!   * [`DecodeModel`] — the autoregressive contract (`prefill` /
+//!     `decode_step` / `free_seq` over [`SeqId`] handles, plus the
+//!     [`Sampler`] hook).  [`AotModel`] implements it over the host
+//!     executor's per-sequence [`crate::runtime::KvCache`] (incremental,
+//!     bit-identical to full recompute) with a padded-replay fallback on
+//!     the PJRT route; [`KernelDecodeModel`] is the synthetic
+//!     kernel-stack analog for tests and the no-checkpoint CLI path.
+//! * [`engine`] — [`ServeEngine`] (externally-clocked one-shot admission
+//!   core) and [`DecodeEngine`] (the continuous-batching scheduler:
+//!   sequences join the running batch after prefill, share one coalesced
+//!   decode step per tick, and leave individually on EOS/max-tokens).
 //! * [`batcher`] — the coalescing queue: dispatch at `max_batch` fill or
-//!   when the oldest request has waited `max_wait`;
-//! * [`admission`] — the async front-end: mpsc producers + a dedicated
-//!   dispatch thread, so `slope serve --producers N` measures tail
-//!   latency under concurrent open-loop traffic;
-//! * [`stats`] — p50/p95/p99 latency, batch fill and throughput.
+//!   when the oldest request has waited `max_wait`.
+//! * [`admission`] — the async front-ends ([`Admission`],
+//!   [`DecodeAdmission`]): mpsc producers + a dedicated dispatch thread,
+//!   now with an explicit [`QueuePolicy`] — bounded admission
+//!   (`--queue-cap N`) that sheds ([`Overload::Reject`]) or
+//!   backpressures ([`Overload::Block`]) instead of growing without
+//!   bound.
+//! * [`stats`] — split telemetry: per-request latency quantiles AND
+//!   per-token decode-step quantiles, batch/decode fill, req/s and
+//!   tok/s.
 //!
-//! Every model is **row-independent** (a response never depends on its
-//! batch-mates), so coalescing — however the producers race — is
-//! invisible in the payloads and visible only in the latency quantiles.
-//! The kernel engine underneath additionally stripes `batch = 1` forwards
-//! across **output columns** (see [`crate::backend::pool`]), so
-//! single-request latency-critical traffic scales with worker count too.
+//! Every model is **row/sequence-independent** (a response never depends
+//! on its batch-mates), so coalescing — however producers race, however
+//! sequences join and leave mid-stream — is invisible in the payloads
+//! and visible only in the latency quantiles.
 //!
-//! Entry points: the `slope serve` CLI subcommand (`--manifest <dir>` for
-//! checkpointed transformers, the synthetic kernel stack otherwise,
-//! `--producers N` for concurrent admission), `examples/inference_serve.rs`,
-//! and `benches/bench_serve.rs` (both backends × batch {1, 4, 16} ×
-//! threads {1, 2, 4}).
+//! Entry points: `slope serve` (`--manifest` / synthetic stack /
+//! `--producers` / `--decode` / `--queue-cap`), `slope generate`
+//! (KV-cached continuous-batching generation from a checkpoint),
+//! `examples/inference_serve.rs`, `examples/generate.rs`, and
+//! `benches/bench_serve.rs` (kernel-stack + manifest + decode series).
 
 pub mod admission;
 pub mod batcher;
@@ -47,8 +60,10 @@ pub mod engine;
 pub mod model;
 pub mod stats;
 
-pub use admission::{Admission, AdmissionClient, Reply};
+pub use admission::{Admission, AdmissionClient, DecodeAdmission, DecodeClient, GenReply,
+                    Overload, QueuePolicy, Reply};
 pub use batcher::{BatchPolicy, Batcher, Request};
-pub use engine::{Response, ServeEngine};
-pub use model::{AotModel, AotPath, KernelStackModel, LoraAdapter, ServeLayer, ServeModel};
+pub use engine::{DecodeEngine, DecodePolicy, FinishReason, Generation, Response, ServeEngine};
+pub use model::{AotModel, AotPath, DecodeModel, KernelDecodeModel, KernelStackModel,
+                LoraAdapter, Sampler, SeqId, ServeLayer, ServeModel};
 pub use stats::{ServeStats, StatsSummary};

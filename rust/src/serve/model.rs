@@ -24,11 +24,27 @@
 //! not depend on which batch it was coalesced into — the invariant that
 //! makes dynamic batching and the async admission front-end
 //! ([`crate::serve::admission`]) transparent to clients.
+//!
+//! **Autoregressive decode** adds a second contract, [`DecodeModel`]
+//! (`prefill` / `decode_step` / `free_seq` over [`SeqId`] handles, plus
+//! the greedy/temperature [`Sampler`] hook), for the continuous-batching
+//! scheduler [`crate::serve::DecodeEngine`].  [`AotModel`] implements it
+//! over the host executor's per-sequence [`KvCache`] — incremental steps
+//! bit-identical to full recompute — with a padded full-recompute replay
+//! keeping the PJRT route functional; [`KernelDecodeModel`] is the
+//! synthetic kernel-stack analog (a recurrent 2:4 stack) for tests and
+//! the no-checkpoint CLI path.  The decode invariant is
+//! **sequence-independence**: a sequence's stream never depends on its
+//! batch-mates, so sequences joining/leaving mid-stream are invisible in
+//! the generated text.
 
-use crate::backend::{ensure_out, lora_fused_seq, ParallelPolicy, SparseBackend};
+use crate::backend::{ensure_out, gemm_nt_into, lora_fused_seq, ParallelPolicy, SparseBackend,
+                     SpmmAlgo};
 use crate::coordinator::checkpoint;
-use crate::runtime::{HostModel, Manifest, Session, SessionHandle};
+use crate::runtime::{HostModel, KvCache, Manifest, Session, SessionHandle};
+use crate::sparsity::{random_row_mask, NmScheme};
 use crate::tensor::Matrix;
+use crate::util::Rng;
 use std::path::Path;
 
 /// A model the serving engine can drive: a pure coalesced-batch function
@@ -226,6 +242,26 @@ pub struct AotModel {
     tokens: Vec<i32>,
     /// Reusable logits copy-out staging (PJRT path).
     logits: Vec<f32>,
+    /// Live decode sequences (KV caches on the host route, token
+    /// histories on the PJRT route) behind slot-reusing handles.
+    seqs: SeqSlab<SeqState>,
+    /// Scratch for batched host-route decode: caches are taken out of
+    /// the slab for the step and returned afterwards (reused buffer, no
+    /// steady-state allocation).
+    dec_caches: Vec<KvCache>,
+    /// Recycled host-route caches: `free_seq` parks them here and
+    /// `prefill` reuses them (`prefill_into` resets), so steady-state
+    /// traffic allocates no KV planes once the pool is warm.
+    cache_pool: Vec<KvCache>,
+}
+
+/// Per-sequence decode state (see [`DecodeModel`] impl on [`AotModel`]).
+enum SeqState {
+    /// Host-kernel route: the KV planes incremental decode attends over.
+    Host(KvCache),
+    /// PJRT route: the token history replayed (right-padded) through the
+    /// compiled full forward each step.
+    Pjrt(Vec<i32>),
 }
 
 impl AotModel {
@@ -285,6 +321,9 @@ impl AotModel {
             packed_restored,
             tokens: Vec::new(),
             logits: Vec::new(),
+            seqs: SeqSlab::new(),
+            dec_caches: Vec::new(),
+            cache_pool: Vec::new(),
         })
     }
 
@@ -329,6 +368,48 @@ impl AotModel {
         );
         for r in 0..k {
             let off = (r * s + (s - 1)) * vocab;
+            y.row_mut(r).copy_from_slice(&self.logits[off..off + vocab]);
+        }
+        Ok(())
+    }
+
+    /// PJRT decode route: stage each token history right-padded into the
+    /// compiled `(B, S)` token buffer, run the forward executable once,
+    /// and copy row `i`'s logits at its last *real* position.  Correct —
+    /// causal attention means padding positions never influence an
+    /// earlier position's logits — but O(S) per generated token; the
+    /// KV-cached host route is the fast path, this keeps real-XLA builds
+    /// functional for `slope generate`.
+    fn pjrt_hist_logits(&mut self, hists: &[Vec<i32>], y: &mut Matrix) -> crate::Result<()> {
+        let (bb, s) = self.manifest.forward_tokens_shape();
+        let vocab = self.manifest.config.vocab_size;
+        let k = hists.len();
+        crate::ensure!(k <= bb, "decode batch {k} exceeds the compiled batch size {bb}");
+        self.tokens.clear();
+        self.tokens.resize(bb * s, 0);
+        for (r, hist) in hists.iter().enumerate() {
+            crate::ensure!(
+                !hist.is_empty() && hist.len() <= s,
+                "history of {} tokens outside 1..={s}",
+                hist.len()
+            );
+            self.tokens[r * s..r * s + hist.len()].copy_from_slice(hist);
+        }
+        let store = self
+            .store
+            .as_mut()
+            .ok_or_else(|| crate::eyre!("PJRT route has no checkpoint store"))?;
+        store.put_i32("tokens", &[bb, s], &self.tokens)?;
+        self.session.borrow_mut().run(&self.exe, store)?;
+        store.read_f32_into("logits", &mut self.logits)?;
+        crate::ensure!(
+            self.logits.len() == bb * s * vocab,
+            "logits are {} long, expected {}x{}x{}",
+            self.logits.len(), bb, s, vocab
+        );
+        ensure_out(y, k, vocab);
+        for (r, hist) in hists.iter().enumerate() {
+            let off = (r * s + (hist.len() - 1)) * vocab;
             y.row_mut(r).copy_from_slice(&self.logits[off..off + vocab]);
         }
         Ok(())
@@ -409,6 +490,534 @@ impl ServeModel for AotModel {
     }
 }
 
+// ---- autoregressive decode surface ------------------------------------
+
+/// Handle to a live decode sequence on a [`DecodeModel`].  Handles are
+/// reused after [`DecodeModel::free_seq`], so holding a stale one is a
+/// scheduler bug (the slab rejects unknown ids, not recycled ones).
+pub type SeqId = u64;
+
+/// Slot-reusing table of live per-sequence state — bounded by the peak
+/// concurrent sequence count, not by how many sequences ever ran.
+struct SeqSlab<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<usize>,
+}
+
+impl<T> SeqSlab<T> {
+    fn new() -> Self {
+        Self { slots: Vec::new(), free: Vec::new() }
+    }
+
+    fn insert(&mut self, v: T) -> SeqId {
+        match self.free.pop() {
+            Some(i) => {
+                debug_assert!(self.slots[i].is_none());
+                self.slots[i] = Some(v);
+                i as SeqId
+            }
+            None => {
+                self.slots.push(Some(v));
+                (self.slots.len() - 1) as SeqId
+            }
+        }
+    }
+
+    fn get(&self, id: SeqId) -> Option<&T> {
+        self.slots.get(id as usize).and_then(|s| s.as_ref())
+    }
+
+    fn get_mut(&mut self, id: SeqId) -> Option<&mut T> {
+        self.slots.get_mut(id as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Take the state out for a batched step; it must be [`SeqSlab::put`]
+    /// back.  A second take of the same id (a duplicate in the batch)
+    /// fails here, before any state is touched.
+    fn take(&mut self, id: SeqId) -> crate::Result<T> {
+        self.slots
+            .get_mut(id as usize)
+            .and_then(|s| s.take())
+            .ok_or_else(|| crate::eyre!("unknown or duplicate sequence handle {id}"))
+    }
+
+    fn put(&mut self, id: SeqId, v: T) {
+        self.slots[id as usize] = Some(v);
+    }
+
+    fn remove(&mut self, id: SeqId) -> crate::Result<T> {
+        let v = self.take(id)?;
+        self.free.push(id as usize);
+        Ok(v)
+    }
+
+    /// Live sequences (slots currently occupied).
+    fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+/// Token-selection rule applied to one logits row — the generation
+/// loop's sampling hook.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampler {
+    /// Deterministic argmax (first index wins ties).
+    Greedy,
+    /// Softmax sampling at the given temperature (`<= 0` degenerates to
+    /// greedy).  Draws come from the caller's per-sequence RNG, so a
+    /// sequence's token stream never depends on its batch-mates.
+    Temperature(f32),
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        debug_assert!(!logits.is_empty());
+        match *self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::Temperature(t) if t <= 0.0 => argmax(logits),
+            Sampler::Temperature(t) => {
+                // Max-subtracted softmax CDF walk in f64 (one pass for the
+                // denominator, one for the draw) — no allocation.
+                let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let denom: f64 =
+                    logits.iter().map(|l| (((l - maxv) / t) as f64).exp()).sum();
+                let target = rng.f64() * denom;
+                let mut acc = 0.0f64;
+                for (i, l) in logits.iter().enumerate() {
+                    acc += (((l - maxv) / t) as f64).exp();
+                    if acc >= target {
+                        return i as i32;
+                    }
+                }
+                (logits.len() - 1) as i32
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Every id must sit inside `0..vocab` — the one token-range check both
+/// decode backends share (prompt validation and per-step tokens alike).
+fn check_token_ids(tokens: &[i32], vocab: usize) -> crate::Result<()> {
+    for &t in tokens {
+        crate::ensure!(
+            t >= 0 && (t as usize) < vocab,
+            "token id {t} outside vocab 0..{vocab}"
+        );
+    }
+    Ok(())
+}
+
+/// A model that generates autoregressively: per-sequence state behind
+/// opaque handles, a prompt prefill, and a coalesced single-token decode
+/// step — the per-token hot path the continuous-batching scheduler
+/// ([`crate::serve::DecodeEngine`]) drives.
+///
+/// Implementations must be **sequence-independent**: a sequence's logits
+/// depend only on its own tokens, never on which batch-mates shared its
+/// decode step — the invariant that makes continuous batching (sequences
+/// joining and leaving mid-stream) invisible in the generated text,
+/// pinned in `tests/decode.rs`.
+pub trait DecodeModel {
+    /// Vocabulary size (logits row width).
+    fn vocab(&self) -> usize;
+
+    /// Hard context bound: prompt + generated tokens per sequence.
+    fn max_seq_len(&self) -> usize;
+
+    /// Cap on sequences per coalesced decode step, when the backend has
+    /// one (the AOT route is compiled for a fixed batch).
+    fn max_decode_batch(&self) -> Option<usize> {
+        None
+    }
+
+    /// Validate a prompt at submit time (so a malformed request is
+    /// rejected individually, never failing a shared decode step).
+    fn validate_prompt(&self, prompt: &[i32]) -> crate::Result<()>;
+
+    /// Run the prompt, allocate a sequence, write its last-position
+    /// logits (`1 × vocab`) into `logits`, and return the handle.
+    fn prefill(&mut self, prompt: &[i32], logits: &mut Matrix) -> crate::Result<SeqId>;
+
+    /// One decode step for a coalesced batch: sequence `seqs[i]` consumes
+    /// `tokens[i]`; `logits` is resized to `(k, vocab)` with row `i`
+    /// holding sequence `i`'s next-token logits.  Handles must be
+    /// distinct.  On error no sequence's state has advanced.
+    fn decode_step(&mut self, seqs: &[SeqId], tokens: &[i32],
+                   logits: &mut Matrix) -> crate::Result<()>;
+
+    /// Release a sequence's state (its handle may be reused).
+    fn free_seq(&mut self, seq: SeqId) -> crate::Result<()>;
+
+    /// Tokens currently held by a live sequence (prompt + decoded), or
+    /// `None` for a freed/unknown handle.
+    fn seq_tokens(&self, seq: SeqId) -> Option<usize>;
+
+    /// Live (prefilled, not yet freed) sequences.
+    fn live_seqs(&self) -> usize;
+
+    /// One-line description for stats headers and the CLI.
+    fn describe_decode(&self) -> String;
+}
+
+impl AotModel {
+    /// Restore host-route caches taken for a failed batched step.
+    fn restore_taken(&mut self, seqs: &[SeqId]) {
+        for (j, c) in self.dec_caches.drain(..).enumerate() {
+            self.seqs.put(seqs[j], SeqState::Host(c));
+        }
+    }
+}
+
+impl DecodeModel for AotModel {
+    fn vocab(&self) -> usize {
+        self.manifest.config.vocab_size
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.manifest.config.seq_len
+    }
+
+    fn max_decode_batch(&self) -> Option<usize> {
+        // The PJRT replay is compiled for the manifest's batch; the host
+        // route keeps the same cap so both routes schedule alike.
+        Some(self.manifest.config.batch_size)
+    }
+
+    fn validate_prompt(&self, prompt: &[i32]) -> crate::Result<()> {
+        let (vocab, s) = (self.manifest.config.vocab_size, self.manifest.config.seq_len);
+        crate::ensure!(!prompt.is_empty(), "empty prompt");
+        crate::ensure!(
+            prompt.len() <= s,
+            "prompt of {} tokens exceeds the {s}-token context",
+            prompt.len()
+        );
+        check_token_ids(prompt, vocab)
+    }
+
+    fn prefill(&mut self, prompt: &[i32], logits: &mut Matrix) -> crate::Result<SeqId> {
+        self.validate_prompt(prompt)?;
+        if let Some(hm) = self.host.as_mut() {
+            let mut cache =
+                self.cache_pool.pop().unwrap_or_else(|| hm.new_kv_cache());
+            if let Err(e) = hm.prefill_into(prompt, &mut cache, logits) {
+                self.cache_pool.push(cache);
+                return Err(e);
+            }
+            return Ok(self.seqs.insert(SeqState::Host(cache)));
+        }
+        let hists = vec![prompt.to_vec()];
+        self.pjrt_hist_logits(&hists, logits)?;
+        let hist = hists.into_iter().next().expect("one history");
+        Ok(self.seqs.insert(SeqState::Pjrt(hist)))
+    }
+
+    fn decode_step(&mut self, seqs: &[SeqId], tokens: &[i32],
+                   logits: &mut Matrix) -> crate::Result<()> {
+        let k = seqs.len();
+        crate::ensure!(k > 0, "empty decode batch");
+        crate::ensure!(tokens.len() == k, "{} tokens for {k} sequences", tokens.len());
+        check_token_ids(tokens, self.manifest.config.vocab_size)?;
+        if self.host.is_some() {
+            self.dec_caches.clear();
+            for &id in seqs {
+                match self.seqs.take(id) {
+                    Ok(SeqState::Host(c)) => self.dec_caches.push(c),
+                    Ok(other) => {
+                        self.seqs.put(id, other);
+                        self.restore_taken(seqs);
+                        return Err(crate::eyre!(
+                            "sequence {id} is not a host-route sequence"
+                        ));
+                    }
+                    Err(e) => {
+                        self.restore_taken(seqs);
+                        return Err(e);
+                    }
+                }
+            }
+            let hm = self.host.as_mut().expect("host route");
+            let r = hm.decode_step_into(tokens, &mut self.dec_caches, logits);
+            self.restore_taken(seqs);
+            return r;
+        }
+        // PJRT route: append each sequence's token and replay the padded
+        // full forward (see `pjrt_hist_logits`).
+        let mut hists: Vec<Vec<i32>> = Vec::with_capacity(k);
+        for &id in seqs {
+            match self.seqs.take(id) {
+                Ok(SeqState::Pjrt(h)) => hists.push(h),
+                Ok(other) => {
+                    self.seqs.put(id, other);
+                    for (j, h) in hists.drain(..).enumerate() {
+                        self.seqs.put(seqs[j], SeqState::Pjrt(h));
+                    }
+                    return Err(crate::eyre!("sequence {id} is not a PJRT-route sequence"));
+                }
+                Err(e) => {
+                    for (j, h) in hists.drain(..).enumerate() {
+                        self.seqs.put(seqs[j], SeqState::Pjrt(h));
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let s = self.manifest.config.seq_len;
+        let mut r: crate::Result<()> = Ok(());
+        for h in hists.iter() {
+            if h.len() >= s {
+                r = Err(crate::eyre!("sequence context window full ({s} tokens)"));
+                break;
+            }
+        }
+        if r.is_ok() {
+            for (h, &t) in hists.iter_mut().zip(tokens) {
+                h.push(t);
+            }
+            r = self.pjrt_hist_logits(&hists, logits);
+            if r.is_err() {
+                // A failed replay must not advance any sequence.
+                for h in hists.iter_mut() {
+                    h.pop();
+                }
+            }
+        }
+        for (j, h) in hists.into_iter().enumerate() {
+            self.seqs.put(seqs[j], SeqState::Pjrt(h));
+        }
+        r
+    }
+
+    fn free_seq(&mut self, seq: SeqId) -> crate::Result<()> {
+        if let SeqState::Host(cache) = self.seqs.remove(seq)? {
+            // Recycle the planes for the next prefill.
+            self.cache_pool.push(cache);
+        }
+        Ok(())
+    }
+
+    fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+        self.seqs.get(seq).map(|st| match st {
+            SeqState::Host(c) => c.len(),
+            SeqState::Pjrt(h) => h.len(),
+        })
+    }
+
+    fn live_seqs(&self) -> usize {
+        self.seqs.live()
+    }
+
+    fn describe_decode(&self) -> String {
+        format!(
+            "{} — decode: {}",
+            ServeModel::describe(self),
+            match self.path {
+                AotPath::HostKernels => "KV-cached incremental (host kernels)",
+                AotPath::Pjrt => "padded full-recompute replay (PJRT, O(S)/token)",
+            }
+        )
+    }
+}
+
+/// Synthetic kernel-stack decode analog: a recurrent sparse stack over a
+/// token embedding.  Per-sequence state is one hidden row `h`; each step
+/// computes `h' = tanh(stack(h + emb[token]))` and `logits = h' · embᵀ`,
+/// batching live rows through the same warm 2:4 [`ServeLayer`] chain
+/// [`KernelStackModel`] serves.  Not a transformer — the test/CLI
+/// stand-in that exercises the continuous-batching scheduler and the
+/// coalesced kernel hot path without a checkpoint, and (being
+/// row-independent) obeys the same join/leave-invariance contract.
+pub struct KernelDecodeModel {
+    /// Token embedding, `(vocab, d)` — also the tied logits head.
+    emb: Matrix,
+    stack: KernelStackModel,
+    max_seq: usize,
+    seqs: SeqSlab<RnnSeq>,
+    /// Staged step inputs, `(k, d)` (grown once per fill).
+    x: Matrix,
+    /// Stack outputs, `(k, d)`.
+    hbuf: Matrix,
+    policy: ParallelPolicy,
+}
+
+struct RnnSeq {
+    h: Vec<f32>,
+    len: usize,
+}
+
+impl KernelDecodeModel {
+    /// `emb` is `(vocab, d)`; the stack must chain `d → … → d`.
+    pub fn new(layers: Vec<ServeLayer>, emb: Matrix, max_seq: usize) -> crate::Result<Self> {
+        let stack = KernelStackModel::new(layers)?;
+        crate::ensure!(
+            stack.d_in() == emb.cols && stack.d_out() == emb.cols,
+            "stack must chain d→d over the embedding width {} (got {}→{})",
+            emb.cols,
+            stack.d_in(),
+            stack.d_out()
+        );
+        crate::ensure!(max_seq >= 2, "max_seq must admit a prompt and a generated token");
+        let policy = stack.layers()[0].backend.policy;
+        Ok(Self {
+            emb,
+            stack,
+            max_seq,
+            seqs: SeqSlab::new(),
+            x: Matrix::zeros(0, 0),
+            hbuf: Matrix::zeros(0, 0),
+            policy,
+        })
+    }
+
+    /// Random instance (2:4 layers, optional rank-`rank` LoRA on the
+    /// first) — the decode analog of `slope serve`'s synthetic stack.
+    /// `d` and `d_ff` must be 2:4-groupable (divisible by 4).
+    pub fn synthetic(vocab: usize, d: usize, d_ff: usize, rank: usize, max_seq: usize,
+                     policy: ParallelPolicy, seed: u64) -> crate::Result<Self> {
+        crate::ensure!(d % 4 == 0 && d_ff % 4 == 0, "dims must be 2:4 groupable");
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut layers = Vec::new();
+        let mut d_in = d;
+        for (i, d_out) in [d_ff, d].into_iter().enumerate() {
+            let w = Matrix::randn(d_out, d_in, 1.0 / (d_in as f32).sqrt(), &mut rng);
+            let mask = random_row_mask(d_out, d_in, NmScheme::TWO_FOUR, &mut rng);
+            let be = SparseBackend::setup(&w, mask, NmScheme::TWO_FOUR, SpmmAlgo::RowMajor,
+                                          policy);
+            let lora = (rank > 0 && i == 0).then(|| LoraAdapter {
+                up: Matrix::randn(d_out, rank, 0.1, &mut rng),
+                down: Matrix::randn(rank, d_in, 0.1, &mut rng),
+            });
+            layers.push(ServeLayer::new(be, lora)?);
+            d_in = d_out;
+        }
+        let emb = Matrix::randn(vocab, d, 0.5, &mut rng);
+        Self::new(layers, emb, max_seq)
+    }
+
+    /// Advance the `k` rows staged in `self.x` through the stack:
+    /// `hbuf = tanh(stack(x))`.
+    fn advance_rows(&mut self) -> crate::Result<()> {
+        self.stack.forward_batch_into(&self.x, &mut self.hbuf)?;
+        for v in self.hbuf.data.iter_mut() {
+            *v = v.tanh();
+        }
+        Ok(())
+    }
+}
+
+impl DecodeModel for KernelDecodeModel {
+    fn vocab(&self) -> usize {
+        self.emb.rows
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.max_seq
+    }
+
+    fn validate_prompt(&self, prompt: &[i32]) -> crate::Result<()> {
+        crate::ensure!(!prompt.is_empty(), "empty prompt");
+        crate::ensure!(
+            prompt.len() <= self.max_seq,
+            "prompt of {} tokens exceeds the {}-token context",
+            prompt.len(),
+            self.max_seq
+        );
+        check_token_ids(prompt, self.emb.rows)
+    }
+
+    fn prefill(&mut self, prompt: &[i32], logits: &mut Matrix) -> crate::Result<SeqId> {
+        self.validate_prompt(prompt)?;
+        let d = self.emb.cols;
+        let mut h = vec![0.0f32; d];
+        for &t in prompt {
+            ensure_out(&mut self.x, 1, d);
+            {
+                let e = self.emb.row(t as usize);
+                let xr = self.x.row_mut(0);
+                for j in 0..d {
+                    xr[j] = h[j] + e[j];
+                }
+            }
+            self.advance_rows()?;
+            h.copy_from_slice(self.hbuf.row(0));
+        }
+        ensure_out(&mut self.x, 1, d);
+        self.x.row_mut(0).copy_from_slice(&h);
+        ensure_out(logits, 1, self.emb.rows);
+        gemm_nt_into(&self.x, &self.emb, logits, &self.policy);
+        Ok(self.seqs.insert(RnnSeq { h, len: prompt.len() }))
+    }
+
+    fn decode_step(&mut self, seqs: &[SeqId], tokens: &[i32],
+                   logits: &mut Matrix) -> crate::Result<()> {
+        let k = seqs.len();
+        crate::ensure!(k > 0, "empty decode batch");
+        crate::ensure!(tokens.len() == k, "{} tokens for {k} sequences", tokens.len());
+        let (d, vocab) = (self.emb.cols, self.emb.rows);
+        check_token_ids(tokens, vocab)?;
+        // Validate and stage every row before mutating any sequence.
+        ensure_out(&mut self.x, k, d);
+        for (i, &id) in seqs.iter().enumerate() {
+            let st = self
+                .seqs
+                .get(id)
+                .ok_or_else(|| crate::eyre!("unknown sequence handle {id}"))?;
+            crate::ensure!(
+                st.len < self.max_seq,
+                "sequence {id}: context window full ({} tokens)",
+                self.max_seq
+            );
+            let e = self.emb.row(tokens[i] as usize);
+            let xr = self.x.row_mut(i);
+            for j in 0..d {
+                xr[j] = st.h[j] + e[j];
+            }
+        }
+        self.advance_rows()?;
+        ensure_out(logits, k, vocab);
+        gemm_nt_into(&self.hbuf, &self.emb, logits, &self.policy);
+        for (i, &id) in seqs.iter().enumerate() {
+            let st = self.seqs.get_mut(id).expect("validated above");
+            st.h.copy_from_slice(self.hbuf.row(i));
+            st.len += 1;
+        }
+        Ok(())
+    }
+
+    fn free_seq(&mut self, seq: SeqId) -> crate::Result<()> {
+        self.seqs.remove(seq).map(|_| ())
+    }
+
+    fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+        self.seqs.get(seq).map(|st| st.len)
+    }
+
+    fn live_seqs(&self) -> usize {
+        self.seqs.live()
+    }
+
+    fn describe_decode(&self) -> String {
+        format!(
+            "kernel-decode: recurrent {}-layer 2:4 stack, d {}, vocab {}, context {}, \
+             {} thread(s)",
+            self.stack.layers().len(),
+            self.emb.cols,
+            self.emb.rows,
+            self.max_seq,
+            self.policy.effective_threads()
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -472,6 +1081,107 @@ mod tests {
             assert_eq!((y.rows, y.cols), (want.rows, want.cols), "depth {depth}");
             assert!(y.max_abs_diff(&want) < 1e-3, "depth {depth}");
         }
+    }
+
+    #[test]
+    fn sampler_greedy_and_temperature() {
+        let logits = [0.1f32, 2.0, 1.9, -3.0];
+        let mut rng = Rng::seed_from_u64(0);
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+        assert_eq!(Sampler::Temperature(0.0).sample(&logits, &mut rng), 1,
+                   "non-positive temperature degenerates to greedy");
+        // At a low temperature the distribution concentrates on the top
+        // two logits; every draw must be a valid index.
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            let t = Sampler::Temperature(0.5).sample(&logits, &mut rng);
+            counts[t as usize] += 1;
+        }
+        assert!(counts[1] + counts[2] > 1800, "mass on the top logits: {counts:?}");
+        assert!(counts[1] > counts[2], "higher logit draws more: {counts:?}");
+        // Determinism: same seed, same stream.
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..50 {
+            assert_eq!(Sampler::Temperature(1.0).sample(&logits, &mut a),
+                       Sampler::Temperature(1.0).sample(&logits, &mut b));
+        }
+    }
+
+    #[test]
+    fn kernel_decode_model_sequences_and_slots() {
+        let mut m = KernelDecodeModel::synthetic(32, 16, 32, 4, 8,
+                                                 ParallelPolicy::serial(), 3)
+            .unwrap();
+        assert!(m.validate_prompt(&[]).is_err());
+        assert!(m.validate_prompt(&[32]).is_err(), "out-of-vocab prompt rejected");
+        assert!(m.validate_prompt(&[0; 9]).is_err(), "over-long prompt rejected");
+        let mut logits = Matrix::zeros(0, 0);
+        let a = m.prefill(&[1, 2, 3], &mut logits).unwrap();
+        assert_eq!((logits.rows, logits.cols), (1, 32));
+        let b = m.prefill(&[4], &mut logits).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(m.live_seqs(), 2);
+        assert_eq!(m.seq_tokens(a), Some(3));
+        m.decode_step(&[a, b], &[5, 6], &mut logits).unwrap();
+        assert_eq!((logits.rows, logits.cols), (2, 32));
+        assert_eq!(m.seq_tokens(a), Some(4));
+        assert_eq!(m.seq_tokens(b), Some(2));
+        m.free_seq(a).unwrap();
+        assert!(m.free_seq(a).is_err(), "double free rejected");
+        assert_eq!(m.seq_tokens(a), None);
+        // The freed slot is recycled for the next sequence.
+        let c = m.prefill(&[7], &mut logits).unwrap();
+        assert_eq!(c, a, "slot reuse");
+        assert_eq!(m.live_seqs(), 2);
+        // Unknown handle in a batch leaves every sequence unadvanced.
+        assert!(m.decode_step(&[b, 99], &[1, 1], &mut logits).is_err());
+        assert_eq!(m.seq_tokens(b), Some(2));
+    }
+
+    #[test]
+    fn aot_decode_surface_matches_recompute_and_reuses_slots() {
+        let dir = std::env::temp_dir().join("slope_aot_decode_unit_test");
+        let spec = SynthSpec { seed: 12, ..SynthSpec::default() };
+        write_synthetic_artifact(&dir, &spec).unwrap();
+        let mut m = AotModel::open(&dir, ParallelPolicy::with_threads(2)).unwrap();
+        assert_eq!(m.max_decode_batch(), Some(spec.batch_size));
+        assert_eq!((m.vocab(), m.max_seq_len()), (spec.vocab, spec.seq_len));
+        let mut rng = Rng::seed_from_u64(4);
+        let prompt: Vec<i32> = (0..4).map(|_| rng.below(spec.vocab) as i32).collect();
+        let mut logits = Matrix::zeros(0, 0);
+        let seq = m.prefill(&prompt, &mut logits).unwrap();
+        assert_eq!(m.seq_tokens(seq), Some(4));
+        // Greedy-decode 3 tokens through the trait; pin each step against
+        // the full-prefix recompute of the same token stream.
+        let mut toks = prompt.clone();
+        for _ in 0..3 {
+            let next = logits
+                .row(0)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            toks.push(next);
+            m.decode_step(&[seq], &[next], &mut logits).unwrap();
+            // Bit-exact reference: the host model's ragged full recompute
+            // over the same token stream.
+            let manifest = Manifest::load(&dir).unwrap();
+            let (store, packed) = checkpoint::load_model_checkpoint(&dir).unwrap();
+            let mut hm = HostModel::from_store(&manifest, &store, &packed,
+                                               ParallelPolicy::with_threads(2))
+                .unwrap();
+            let mut want = Matrix::zeros(0, 0);
+            hm.forward_prefix_logits_into(&toks, &mut want).unwrap();
+            assert_eq!(logits.data, want.data, "decode step diverged at {}", toks.len());
+        }
+        assert_eq!(m.seq_tokens(seq), Some(7));
+        m.free_seq(seq).unwrap();
+        assert_eq!(m.live_seqs(), 0);
+        let seq2 = m.prefill(&prompt, &mut logits).unwrap();
+        assert_eq!(seq2, seq, "freed slot is recycled");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! throughput — the measured counterpart of the paper's Table-2
 //! inference-speedup claim, reported the way serving systems report it
 //! (p50/p95/p99 + req/s) rather than as a single kernel median.
+//!
+//! Generation serving adds a second, **separate** distribution: per-token
+//! decode-step latency.  A generation request's end-to-end latency mixes
+//! queueing, prefill, and every decode step it lived through; the
+//! per-token number is what the continuous-batching scheduler actually
+//! controls, so the two are windowed and reported independently
+//! (`latency` vs `tok latency` in [`StatsSummary::report`]), plus a
+//! tokens/s decode rate.
 
 use std::time::Duration;
 
@@ -10,15 +18,46 @@ use std::time::Duration;
 /// while counters (`served`, `batches`, throughput) remain exact.
 const LATENCY_WINDOW: usize = 1 << 16;
 
+/// Bounded quantile window (ring buffer of the last [`LATENCY_WINDOW`]
+/// samples, in milliseconds).
+#[derive(Debug, Default)]
+struct LatencyWindow {
+    ms: Vec<f64>,
+    /// Next ring slot to overwrite once the window is full.
+    next: usize,
+}
+
+impl LatencyWindow {
+    fn push(&mut self, v_ms: f64) {
+        if self.ms.len() < LATENCY_WINDOW {
+            self.ms.push(v_ms);
+        } else {
+            self.ms[self.next] = v_ms;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+}
+
 /// Accumulated serving statistics (monotone; one per engine lifetime).
 #[derive(Debug, Default)]
 pub struct ServeStats {
-    /// Ring buffer of the last [`LATENCY_WINDOW`] request latencies (ms).
-    latencies_ms: Vec<f64>,
-    /// Next ring slot to overwrite once the window is full.
-    lat_next: usize,
+    /// Per-request end-to-end latencies (queue wait + compute; for
+    /// generations, submit → final token).
+    requests: LatencyWindow,
+    /// Per-token decode-step latencies (one sample per token per step).
+    decode: LatencyWindow,
     batches: usize,
     served: usize,
+    /// Tokens emitted by decode steps (generation workload only).
+    tokens_out: usize,
+    decode_steps: usize,
+    prefills: usize,
     compute: Duration,
     /// Engine-relative time of the first/last dispatch observed.
     first_dispatch: Option<Duration>,
@@ -40,6 +79,20 @@ pub struct StatsSummary {
     /// Requests per second over the dispatch span (compute-time based
     /// when the span is degenerate, e.g. a single batch).
     pub req_per_s: f64,
+    // -- generation (zero when the engine served no decode steps) --
+    /// Tokens emitted by decode steps.
+    pub tokens_out: usize,
+    pub decode_steps: usize,
+    pub prefills: usize,
+    /// Mean sequences per coalesced decode step.
+    pub mean_decode_fill: f64,
+    /// Per-token decode-step latency quantiles — separate from the
+    /// request distribution above.
+    pub decode_p50_ms: f64,
+    pub decode_p95_ms: f64,
+    pub decode_p99_ms: f64,
+    /// Generated tokens per second over the dispatch span.
+    pub tok_per_s: f64,
 }
 
 impl ServeStats {
@@ -48,16 +101,41 @@ impl ServeStats {
     pub fn record_batch(&mut self, now: Duration, compute: Duration,
                         latencies: impl IntoIterator<Item = Duration>) {
         for l in latencies {
-            let ms = l.as_secs_f64() * 1e3;
-            if self.latencies_ms.len() < LATENCY_WINDOW {
-                self.latencies_ms.push(ms);
-            } else {
-                self.latencies_ms[self.lat_next] = ms;
-                self.lat_next = (self.lat_next + 1) % LATENCY_WINDOW;
-            }
+            self.requests.push(l.as_secs_f64() * 1e3);
             self.served += 1;
         }
         self.batches += 1;
+        self.mark_dispatch(now, compute);
+    }
+
+    /// Record one coalesced decode step of `fill` sequences: each of the
+    /// `fill` tokens emitted waited `compute` for its step, so the
+    /// per-token window gains `fill` samples of the step's wall time.
+    pub fn record_decode_step(&mut self, now: Duration, compute: Duration, fill: usize) {
+        let ms = compute.as_secs_f64() * 1e3;
+        for _ in 0..fill {
+            self.decode.push(ms);
+        }
+        self.tokens_out += fill;
+        self.decode_steps += 1;
+        self.mark_dispatch(now, compute);
+    }
+
+    /// Record one prompt prefill (counted and charged to the compute
+    /// span; prefill cost never pollutes the per-token decode window).
+    pub fn record_prefill(&mut self, now: Duration, compute: Duration) {
+        self.prefills += 1;
+        self.mark_dispatch(now, compute);
+    }
+
+    /// Record one completed generation request's end-to-end latency
+    /// (submit → final token) in the request window.
+    pub fn record_generation(&mut self, latency: Duration) {
+        self.requests.push(latency.as_secs_f64() * 1e3);
+        self.served += 1;
+    }
+
+    fn mark_dispatch(&mut self, now: Duration, compute: Duration) {
         self.compute += compute;
         self.first_dispatch.get_or_insert(now);
         self.last_dispatch = self.last_dispatch.max(now + compute);
@@ -67,13 +145,15 @@ impl ServeStats {
         self.served
     }
 
-    /// Latency quantile in milliseconds over the retained window (`p` in
-    /// `[0, 1]`); 0 when empty.  Point query — [`ServeStats::summary`]
-    /// computes all quantiles from one sort.
+    pub fn tokens_out(&self) -> usize {
+        self.tokens_out
+    }
+
+    /// Request-latency quantile in milliseconds over the retained window
+    /// (`p` in `[0, 1]`); 0 when empty.  Point query —
+    /// [`ServeStats::summary`] computes all quantiles from one sort.
     pub fn quantile_ms(&self, p: f64) -> f64 {
-        let mut sorted = self.latencies_ms.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        quantile_of_sorted(&sorted, p)
+        quantile_of_sorted(&self.requests.sorted(), p)
     }
 
     pub fn summary(&self) -> StatsSummary {
@@ -82,8 +162,8 @@ impl ServeStats {
             None => 0.0,
         };
         let wall = if span > 0.0 { span } else { self.compute.as_secs_f64() };
-        let mut sorted = self.latencies_ms.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let sorted = self.requests.sorted();
+        let dec_sorted = self.decode.sorted();
         StatsSummary {
             served: self.served,
             batches: self.batches,
@@ -96,6 +176,18 @@ impl ServeStats {
             p95_ms: quantile_of_sorted(&sorted, 0.95),
             p99_ms: quantile_of_sorted(&sorted, 0.99),
             req_per_s: if wall > 0.0 { self.served as f64 / wall } else { 0.0 },
+            tokens_out: self.tokens_out,
+            decode_steps: self.decode_steps,
+            prefills: self.prefills,
+            mean_decode_fill: if self.decode_steps == 0 {
+                0.0
+            } else {
+                self.tokens_out as f64 / self.decode_steps as f64
+            },
+            decode_p50_ms: quantile_of_sorted(&dec_sorted, 0.50),
+            decode_p95_ms: quantile_of_sorted(&dec_sorted, 0.95),
+            decode_p99_ms: quantile_of_sorted(&dec_sorted, 0.99),
+            tok_per_s: if wall > 0.0 { self.tokens_out as f64 / wall } else { 0.0 },
         }
     }
 }
@@ -104,16 +196,35 @@ impl StatsSummary {
     /// The uniform multi-line serving report the CLI and the serving
     /// example both print — one definition, so their output cannot
     /// drift.  `served` is the caller's completed-response count and
-    /// `max_batch` the effective coalescing cap.
+    /// `max_batch` the effective coalescing cap.  Generation engines
+    /// (decode steps recorded) get the per-token block appended; pure
+    /// request engines keep the classic four lines.
     pub fn report(&self, served: usize, max_batch: usize) -> String {
-        format!(
-            "served     : {served} requests in {} batches\n\
-             batch fill : {:.2} / {max_batch}\n\
-             latency    : p50 {:.3} ms   p95 {:.3} ms   p99 {:.3} ms\n\
+        let mut out = if self.batches > 0 {
+            format!(
+                "served     : {served} requests in {} batches\n\
+                 batch fill : {:.2} / {max_batch}\n",
+                self.batches, self.mean_batch_fill
+            )
+        } else {
+            format!("served     : {served} requests\n")
+        };
+        out.push_str(&format!(
+            "latency    : p50 {:.3} ms   p95 {:.3} ms   p99 {:.3} ms\n\
              throughput : {:.0} req/s",
-            self.batches, self.mean_batch_fill, self.p50_ms, self.p95_ms, self.p99_ms,
-            self.req_per_s
-        )
+            self.p50_ms, self.p95_ms, self.p99_ms, self.req_per_s
+        ));
+        if self.decode_steps > 0 {
+            out.push_str(&format!(
+                "\ngeneration : {} tokens in {} decode steps ({} prefills), \
+                 decode fill {:.2} / {max_batch}\n\
+                 tok latency: p50 {:.3} ms   p95 {:.3} ms   p99 {:.3} ms\n\
+                 decode rate: {:.0} tok/s",
+                self.tokens_out, self.decode_steps, self.prefills, self.mean_decode_fill,
+                self.decode_p50_ms, self.decode_p95_ms, self.decode_p99_ms, self.tok_per_s
+            ));
+        }
+        out
     }
 }
 
@@ -146,6 +257,9 @@ mod tests {
         assert!((sum.p99_ms - 5.0).abs() < 1e-9, "p99 lower-nearest of 6 samples");
         // Span: first dispatch 10 ms, last end 22 ms ⇒ 6 req / 12 ms.
         assert!((sum.req_per_s - 500.0).abs() < 1e-6);
+        // No decode activity ⇒ generation block zeroed out.
+        assert_eq!(sum.tokens_out, 0);
+        assert_eq!(sum.decode_p99_ms, 0.0);
     }
 
     #[test]
@@ -154,7 +268,7 @@ mod tests {
         let n = LATENCY_WINDOW + 100;
         s.record_batch(Duration::ZERO, MS, (0..n).map(|_| MS));
         assert_eq!(s.served(), n, "served counts every request");
-        assert!(s.latencies_ms.len() <= LATENCY_WINDOW, "quantile window is bounded");
+        assert!(s.requests.ms.len() <= LATENCY_WINDOW, "quantile window is bounded");
         assert!((s.summary().p50_ms - 1.0).abs() < 1e-9);
     }
 
@@ -164,6 +278,7 @@ mod tests {
         assert_eq!(sum.served, 0);
         assert_eq!(sum.p50_ms, 0.0);
         assert_eq!(sum.req_per_s, 0.0);
+        assert_eq!(sum.tok_per_s, 0.0);
     }
 
     #[test]
@@ -172,5 +287,38 @@ mod tests {
         s.record_batch(Duration::ZERO, 4 * MS, [MS, MS]);
         // Span = 0 + 4ms compute end... first=0, last=4ms ⇒ span 4 ms.
         assert!((s.summary().req_per_s - 500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_window_is_separate_from_request_window() {
+        let mut s = ServeStats::default();
+        // Two prefills, then three decode steps at fills 2, 2, 1 with step
+        // times 1/2/3 ms; two generations complete at 10 and 20 ms.
+        s.record_prefill(Duration::ZERO, MS);
+        s.record_prefill(MS, MS);
+        s.record_decode_step(2 * MS, MS, 2);
+        s.record_decode_step(4 * MS, 2 * MS, 2);
+        s.record_decode_step(7 * MS, 3 * MS, 1);
+        s.record_generation(10 * MS);
+        s.record_generation(20 * MS);
+        let sum = s.summary();
+        assert_eq!(sum.served, 2);
+        assert_eq!(sum.batches, 0, "decode steps are not request batches");
+        assert_eq!(sum.tokens_out, 5);
+        assert_eq!(sum.decode_steps, 3);
+        assert_eq!(sum.prefills, 2);
+        assert!((sum.mean_decode_fill - 5.0 / 3.0).abs() < 1e-12);
+        // Decode window: [1, 1, 2, 2, 3] ms ⇒ p50 = 2 ms.
+        assert!((sum.decode_p50_ms - 2.0).abs() < 1e-9);
+        assert!((sum.decode_p99_ms - 3.0).abs() < 1e-9);
+        // Request window: [10, 20] ms — untouched by step samples.
+        assert!((sum.p50_ms - 10.0).abs() < 1e-9);
+        assert!((sum.p99_ms - 20.0).abs() < 1e-9);
+        // Span: first dispatch 0, last 7+3 = 10 ms ⇒ 5 tokens / 10 ms.
+        assert!((sum.tok_per_s - 500.0).abs() < 1e-6);
+        // Report carries both distributions.
+        let rep = sum.report(2, 4);
+        assert!(rep.contains("tok latency"), "{rep}");
+        assert!(rep.contains("decode rate"), "{rep}");
     }
 }

@@ -1,0 +1,333 @@
+//! Integration suites for autoregressive decode:
+//!
+//! * **KV parity** — prefill + incremental steps over the per-sequence
+//!   `KvCache` reproduce the full-prefix recompute **bit-for-bit**, for
+//!   ragged prompt lengths, decode batches {1, 4}, and kernel-engine
+//!   threads {1, 4} (the acceptance pin for the decode refactor);
+//! * **continuous batching** — sequences joining and leaving the running
+//!   batch mid-stream produce exactly the token streams solo runs
+//!   produce (greedy), through the `DecodeEngine` scheduler and the
+//!   `AotModel` decode surface;
+//! * **async admission** — N concurrent producers over `DecodeAdmission`
+//!   get the same generations as inline submission, and the bounded
+//!   queue sheds deterministically under the reject policy.
+
+use slope::backend::ParallelPolicy;
+use slope::coordinator::checkpoint;
+use slope::runtime::{write_synthetic_artifact, HostModel, KvCache, Manifest, SynthSpec};
+use slope::serve::{AotModel, DecodeAdmission, DecodeEngine, DecodeModel, DecodePolicy,
+                   KernelDecodeModel, Overload, QueuePolicy, Sampler};
+use slope::tensor::Matrix;
+use slope::util::Rng;
+use std::time::Duration;
+
+fn synth_dir(tag: &str, seed: u64) -> (std::path::PathBuf, SynthSpec) {
+    let dir = std::env::temp_dir().join(format!("slope_decode_{tag}"));
+    let spec = SynthSpec { seed, ..SynthSpec::default() };
+    write_synthetic_artifact(&dir, &spec).unwrap();
+    (dir, spec)
+}
+
+fn host_model(dir: &std::path::Path, threads: usize) -> HostModel {
+    let manifest = Manifest::load(dir).unwrap();
+    let (store, packed) = checkpoint::load_model_checkpoint(dir).unwrap();
+    HostModel::from_store(&manifest, &store, &packed, ParallelPolicy::with_threads(threads))
+        .unwrap()
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Greedy-decode one prompt solo (batch 1) until the context fills;
+/// returns the generated stream.  Each step is pinned bit-for-bit
+/// against the full-prefix recompute of the same tokens.
+fn solo_stream(hm: &mut HostModel, prompt: &[i32], pin_recompute: bool) -> Vec<i32> {
+    let mut cache = hm.new_kv_cache();
+    let mut y = Matrix::zeros(0, 0);
+    hm.prefill_into(prompt, &mut cache, &mut y).unwrap();
+    let mut toks = prompt.to_vec();
+    let mut stream = Vec::new();
+    loop {
+        let next = argmax(y.row(0));
+        stream.push(next);
+        if cache.len() >= cache.capacity() {
+            break;
+        }
+        toks.push(next);
+        hm.decode_step_into(&[next], std::slice::from_mut(&mut cache), &mut y).unwrap();
+        if pin_recompute {
+            let mut y_full = Matrix::zeros(0, 0);
+            hm.forward_prefix_logits_into(&toks, &mut y_full).unwrap();
+            assert_eq!(y.data, y_full.data,
+                       "incremental logits diverged at position {}", toks.len() - 1);
+        }
+    }
+    stream
+}
+
+#[test]
+fn kv_parity_ragged_lengths_batches_and_threads() {
+    let (dir, spec) = synth_dir("parity", 41);
+    let mut rng = Rng::seed_from_u64(0xDEC0);
+    // Ragged prompt lengths, including the 1-token and (seq_len - 1) edges.
+    let plens = [1usize, 3, 6, spec.seq_len - 1];
+    let prompts: Vec<Vec<i32>> = plens
+        .iter()
+        .map(|&p| (0..p).map(|_| rng.below(spec.vocab) as i32).collect())
+        .collect();
+    for threads in [1usize, 4] {
+        let mut hm = host_model(&dir, threads);
+        // Solo streams, each step pinned against full recompute.
+        let want: Vec<Vec<i32>> =
+            prompts.iter().map(|p| solo_stream(&mut hm, p, true)).collect();
+
+        // Batched decode over the ragged batch of 4: sequences leave the
+        // batch individually as their contexts fill (the continuous-
+        // batching shrink), and every stream must match its solo run
+        // exactly.
+        let mut caches: Vec<KvCache> = Vec::new();
+        let mut last: Vec<i32> = Vec::new();
+        let mut idxmap: Vec<usize> = Vec::new();
+        let mut streams: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        let mut y = Matrix::zeros(0, 0);
+        for (i, p) in prompts.iter().enumerate() {
+            let mut c = hm.new_kv_cache();
+            hm.prefill_into(p, &mut c, &mut y).unwrap();
+            let first = argmax(y.row(0));
+            streams[i].push(first);
+            if c.len() < c.capacity() {
+                caches.push(c);
+                last.push(first);
+                idxmap.push(i);
+            }
+        }
+        while !caches.is_empty() {
+            hm.decode_step_into(&last, &mut caches, &mut y).unwrap();
+            let k = caches.len();
+            let mut keep = vec![true; k];
+            for i in 0..k {
+                let tok = argmax(y.row(i));
+                streams[idxmap[i]].push(tok);
+                last[i] = tok;
+                if caches[i].len() >= caches[i].capacity() {
+                    keep[i] = false;
+                }
+            }
+            for i in (0..k).rev() {
+                if !keep[i] {
+                    caches.remove(i);
+                    last.remove(i);
+                    idxmap.remove(i);
+                }
+            }
+        }
+        for (i, s) in streams.iter().enumerate() {
+            assert_eq!(s, &want[i],
+                       "prompt {i} (len {}), {threads} thr: batched decode diverged",
+                       plens[i]);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn continuous_batching_join_leave_matches_solo_runs() {
+    let (dir, spec) = synth_dir("joinleave", 42);
+    let mut rng = Rng::seed_from_u64(7);
+    let specs: Vec<(Vec<i32>, usize)> = [2usize, 4, 3, 5, 2, 4]
+        .iter()
+        .zip([3usize, 1, 4, 2, 6, 3])
+        .map(|(&plen, max_new)| {
+            let p: Vec<i32> = (0..plen).map(|_| rng.below(spec.vocab) as i32).collect();
+            (p, max_new)
+        })
+        .collect();
+
+    // Solo ground truth: each request alone on a fresh engine.
+    let mut want: Vec<Vec<i32>> = Vec::new();
+    for (prompt, max_new) in &specs {
+        let model = AotModel::open(&dir, ParallelPolicy::with_threads(2)).unwrap();
+        let mut eng = DecodeEngine::new(
+            model,
+            DecodePolicy { max_batch: 4, max_new_tokens: 8, ..Default::default() },
+        )
+        .unwrap();
+        eng.submit(prompt.clone(), Some(*max_new), Duration::ZERO).unwrap();
+        let mut done = Vec::new();
+        while eng.active() > 0 {
+            done.extend(eng.step(Duration::ZERO).unwrap());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), *max_new);
+        want.push(done[0].tokens.clone());
+    }
+
+    // Staggered arrivals over one shared engine (max_batch 3): sequences
+    // join as slots free and leave at their own caps — the token streams
+    // must be identical to the solo runs.
+    let model = AotModel::open(&dir, ParallelPolicy::with_threads(2)).unwrap();
+    let mut eng = DecodeEngine::new(
+        model,
+        DecodePolicy { max_batch: 3, max_new_tokens: 8, ..Default::default() },
+    )
+    .unwrap();
+    let mut done = Vec::new();
+    for chunk in specs.chunks(2) {
+        for (prompt, max_new) in chunk {
+            eng.submit(prompt.clone(), Some(*max_new), Duration::ZERO).unwrap();
+        }
+        done.extend(eng.step(Duration::ZERO).unwrap());
+    }
+    while eng.active() > 0 {
+        done.extend(eng.step(Duration::ZERO).unwrap());
+    }
+    assert_eq!(done.len(), specs.len());
+    done.sort_by_key(|g| g.id);
+    for (i, g) in done.iter().enumerate() {
+        assert_eq!(g.tokens, want[i],
+                   "request {i}: continuous batching changed the stream");
+        assert_eq!(g.prompt_len, specs[i].0.len());
+    }
+    assert_eq!(eng.model().live_seqs(), 0, "all sequences freed");
+    let s = eng.stats().summary();
+    assert_eq!(s.served, specs.len());
+    assert_eq!(s.prefills, specs.len());
+    let total: usize = specs.iter().map(|(_, n)| *n).sum();
+    assert_eq!(s.tokens_out + s.prefills, total, "every token accounted for");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn temperature_sampling_is_reproducible_and_batch_invariant_rng() {
+    let (dir, _spec) = synth_dir("temp", 43);
+    let run = || -> Vec<Vec<i32>> {
+        let model = AotModel::open(&dir, ParallelPolicy::serial()).unwrap();
+        let mut eng = DecodeEngine::new(
+            model,
+            DecodePolicy {
+                max_batch: 2,
+                max_new_tokens: 4,
+                sampler: Sampler::Temperature(0.8),
+                seed: 99,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for p in [vec![1, 2], vec![3], vec![4, 5, 6]] {
+            eng.submit(p, None, Duration::ZERO).unwrap();
+        }
+        let mut done = Vec::new();
+        while eng.active() > 0 {
+            done.extend(eng.step(Duration::ZERO).unwrap());
+        }
+        done.sort_by_key(|g| g.id);
+        done.into_iter().map(|g| g.tokens).collect()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed ⇒ same sampled streams, batching and all");
+    assert!(a.iter().all(|t| t.len() == 4));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn decode_admission_concurrent_producers_match_inline() {
+    let prompts: Vec<Vec<i32>> = (0..12u64)
+        .map(|i| vec![(i % 7) as i32, ((i * 3) % 11) as i32 + 1])
+        .collect();
+    let make_engine = || -> slope::Result<DecodeEngine<KernelDecodeModel>> {
+        let model = KernelDecodeModel::synthetic(48, 16, 32, 4, 10,
+                                                 ParallelPolicy::with_threads(2), 0xFEED)?;
+        DecodeEngine::new(
+            model,
+            DecodePolicy { max_batch: 3, max_new_tokens: 5, ..Default::default() },
+        )
+    };
+
+    // Inline ground truth.
+    let mut eng = make_engine().unwrap();
+    for p in &prompts {
+        eng.submit(p.clone(), None, Duration::ZERO).unwrap();
+    }
+    let mut done = Vec::new();
+    while eng.active() > 0 {
+        done.extend(eng.step(Duration::ZERO).unwrap());
+    }
+    done.sort_by_key(|g| g.id);
+    let want: Vec<Vec<i32>> = done.into_iter().map(|g| g.tokens).collect();
+
+    // Concurrent producers over the async front-end, arbitrary
+    // interleaving — same streams.
+    let adm = DecodeAdmission::spawn(make_engine, Duration::from_micros(100),
+                                     QueuePolicy::unbounded());
+    let producers = 3usize;
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let client = adm.client();
+        let mine: Vec<(u64, Vec<i32>)> = prompts
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % producers == p)
+            .map(|(i, pr)| (i as u64, pr.clone()))
+            .collect();
+        handles.push(std::thread::spawn(move || -> Vec<(u64, Vec<i32>)> {
+            for (tag, prompt) in &mine {
+                client.submit(*tag, prompt.clone(), None).unwrap();
+            }
+            (0..mine.len())
+                .map(|_| {
+                    let (tag, gen) = client.recv().unwrap();
+                    (tag, gen.tokens)
+                })
+                .collect()
+        }));
+    }
+    let mut got: Vec<(u64, Vec<i32>)> = Vec::new();
+    for h in handles {
+        got.extend(h.join().expect("producer thread"));
+    }
+    assert_eq!(got.len(), prompts.len());
+    got.sort_by_key(|(tag, _)| *tag);
+    for (tag, tokens) in got {
+        assert_eq!(tokens, want[tag as usize],
+                   "request {tag}: concurrent admission changed the stream");
+    }
+    let stats = adm.finish().unwrap();
+    assert_eq!(stats.served, prompts.len());
+    assert!(stats.decode_p99_ms >= stats.decode_p50_ms);
+    assert!(stats.p99_ms >= stats.p50_ms);
+}
+
+#[test]
+fn decode_admission_bounded_reject_sheds_deterministically() {
+    // Stall the dispatcher in build so the cap-2 channel fills.
+    let build = || -> slope::Result<DecodeEngine<KernelDecodeModel>> {
+        std::thread::sleep(Duration::from_millis(150));
+        let model = KernelDecodeModel::synthetic(32, 16, 32, 0, 8,
+                                                 ParallelPolicy::serial(), 5)?;
+        DecodeEngine::new(
+            model,
+            DecodePolicy { max_batch: 2, max_new_tokens: 3, ..Default::default() },
+        )
+    };
+    let adm = DecodeAdmission::spawn(build, Duration::from_micros(100),
+                                     QueuePolicy::bounded(2, Overload::Reject));
+    let client = adm.client();
+    client.submit(0, vec![1, 2], None).unwrap();
+    client.submit(1, vec![3], None).unwrap();
+    let err = client.submit(2, vec![4], None).unwrap_err();
+    assert!(err.to_string().contains("full"), "{err}");
+    let mut tags = vec![client.recv().unwrap().0, client.recv().unwrap().0];
+    tags.sort_unstable();
+    assert_eq!(tags, vec![0, 1], "admitted requests complete after the stall");
+    drop(client);
+    let stats = adm.finish().unwrap();
+    assert_eq!(stats.served, 2);
+}

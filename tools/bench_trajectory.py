@@ -72,24 +72,29 @@ def archive(args) -> int:
     if not {1, 2, 4} <= set(threads):
         raise SystemExit(f"expected a threads sweep, got {threads}")
     print(f"benches in trajectory: {benches}")
-    # bench_serve must record BOTH ServeModel series: the kernel-stack
+    # bench_serve must record ALL THREE serving series: the kernel-stack
     # cases keep their pre-redesign names (batch{B}/forward) so the
     # trajectory stays continuous, the manifest-backed AotModel series is
-    # prefixed (manifest/batch{B}/forward).
+    # prefixed (manifest/batch{B}/forward), and the KV-cached per-token
+    # decode series (decode/batch{B}/step) guards the autoregressive
+    # hot path the same way.
     serve_cases = {r["case"] for r in rows if r["bench"] == "bench_serve"}
     if not serve_cases:
         raise SystemExit(
             "no bench_serve rows in the smoke run — the trajectory must carry "
-            "both the kernel-stack and manifest serving series"
+            "the kernel-stack, manifest, and decode serving series"
         )
     kernel = {c for c in serve_cases if c.startswith("batch")}
     manifest = {c for c in serve_cases if c.startswith("manifest/")}
-    if not kernel or not manifest:
+    decode = {c for c in serve_cases if c.startswith("decode/")}
+    if not kernel or not manifest or not decode:
         raise SystemExit(
-            "bench_serve must emit both the kernel-stack (batch*/...) and "
-            f"manifest (manifest/...) series; got {sorted(serve_cases)}"
+            "bench_serve must emit the kernel-stack (batch*/...), manifest "
+            "(manifest/...), and decode (decode/...) series; "
+            f"got {sorted(serve_cases)}"
         )
-    print(f"bench_serve series: {len(kernel)} kernel-stack, {len(manifest)} manifest")
+    print(f"bench_serve series: {len(kernel)} kernel-stack, {len(manifest)} manifest, "
+          f"{len(decode)} decode")
     return 0
 
 
