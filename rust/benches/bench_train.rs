@@ -1,0 +1,80 @@
+//! Native host training-step latency across kernel-engine thread counts —
+//! the perf trajectory of the double-pruned backward pass.
+//!
+//! Two archived series, matching the bench_serve convention (CI's
+//! trajectory archive fails if either is missing):
+//! * `train/step` — one sparse-phase `train_step` (Eq. 4–6 forward +
+//!   backward through the packed kernels, AdamW epilogue);
+//! * `train_lora/step` — one lazy-phase `train_step_lora` (adapters
+//!   riding along, second AdamW chain).
+//!
+//! Threads sweep {1, 2, 4}: the step's GEMM/SpMM work runs under the
+//! worker pool, so the vs-1thr column is the acceptance gauge for
+//! threaded training (hand loops — layer norm, attention softmax chain,
+//! optimizer — stay serial and deterministic).  Steady state reuses the
+//! tape and every staging pool, so the loop is allocation-free past the
+//! first iteration.
+
+use slope::backend::ParallelPolicy;
+use slope::runtime::{write_host_train_artifact, HostTrainModel, Manifest};
+use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
+use slope::util::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn main() {
+    let dir = std::env::temp_dir().join("slope_bench_train_artifact");
+    std::fs::remove_dir_all(&dir).ok();
+    write_host_train_artifact(&dir, "bench-train").expect("fabricate artifact");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let c = manifest.config.clone();
+    let mut rng = Rng::seed_from_u64(0);
+    let tokens: Vec<i32> = (0..c.batch_size * (c.seq_len + 1))
+        .map(|_| rng.below(c.vocab_size) as i32)
+        .collect();
+
+    print_header("bench_train — host train step (double-pruned backward)");
+    println!(
+        "{:<26} {:>3} {:>12} {:>12} {:>9}",
+        "case", "thr", "per-step", "per-seq", "vs 1thr"
+    );
+    for (case, with_lora) in [("train/step", false), ("train_lora/step", true)] {
+        let mut one_thr_ns = f64::NAN;
+        for threads in THREADS {
+            let policy = ParallelPolicy::for_width(threads, c.d_model);
+            let mut model =
+                HostTrainModel::init(&manifest, 7, policy).expect("host train model");
+            if with_lora {
+                model.lora_init(9).expect("lora init");
+            }
+            // Warm the tape/pools so the measured loop is steady-state.
+            let r = bench_auto(&format!("{case} t{threads}"), 180.0, || {
+                let loss = if with_lora {
+                    model.train_step_lora(&tokens).expect("step")
+                } else {
+                    model.train_step(&tokens).expect("step")
+                };
+                black_box(loss);
+            });
+            if threads == 1 {
+                one_thr_ns = r.median_ns;
+            }
+            emit_json("bench_train", case, threads, &r);
+            println!(
+                "{:<26} {:>3} {:>10.2}us {:>10.2}us {:>8.2}x",
+                case,
+                threads,
+                r.median_ns / 1e3,
+                r.median_ns / 1e3 / c.batch_size as f64,
+                one_thr_ns / r.median_ns
+            );
+        }
+    }
+    println!(
+        "\n(each step = full forward tape + cross-entropy + backward through\n \
+         LN/attention/GELU with the Eq.-6 packed W^(R,C) grad_input and the\n \
+         Eq.-5 masked packed grad_weight, plus the AdamW epilogue in\n \
+         compressed space — the native `slope train` hot path.)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

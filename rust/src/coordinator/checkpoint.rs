@@ -430,6 +430,9 @@ mod tests {
                 total_steps: 0,
                 lazy_fraction: 0.0,
                 srste_decay: 0.0,
+                beta1: 0.9,
+                beta2: 0.95,
+                grad_clip: 1.0,
             },
             sparsity_format: None,
             executables: std::collections::HashMap::new(),

@@ -50,7 +50,32 @@ pub struct TrainOutcome {
 
 impl Trainer {
     pub fn new(cfg: RunConfig) -> crate::Result<Self> {
-        let session = Session::open_cached(&cfg.artifacts.join(&cfg.model))?;
+        let dir = cfg.artifacts.join(&cfg.model);
+        if !dir.join("manifest.json").exists() {
+            // No AOT artifacts: fabricate a host-trainable config in
+            // place (manifest only — `init` creates the state) instead of
+            // failing on the manifest load.  The session below routes to
+            // the host kernel executor, so the whole run is pure rust.
+            // Methods that need PJRT-only executables (SR-STE's dynamic
+            // masks, Wanda calibration, the Fig-9 variants) are rejected
+            // HERE — before any steps run — rather than failing at their
+            // first missing executable mid-run.
+            crate::ensure!(
+                matches!(cfg.method, Method::Slope | Method::Dense),
+                "method {:?} needs PJRT-only executables, and {} has no artifacts; \
+                 run `make artifacts` first (the host executor covers slope/dense only \
+                 — see ROADMAP §Training open items)",
+                cfg.method,
+                dir.display()
+            );
+            eprintln!(
+                "[trainer] no artifacts at {}: fabricating a host-trainable config \
+                 (native kernel-engine training; run `make artifacts` for the PJRT route)",
+                dir.display()
+            );
+            crate::runtime::write_host_train_artifact(&dir, &cfg.model)?;
+        }
+        let session = Session::open_cached(&dir)?;
         let manifest = session.borrow().manifest.clone();
         let vocab = manifest.config.vocab_size;
         let corpus = Corpus::generate(CorpusSpec::for_vocab(vocab, cfg.seed ^ 0xC0FFEE));
@@ -98,20 +123,27 @@ impl Trainer {
         let mut sess = self.session.borrow_mut();
         for n in &names {
             if sess.manifest.executables.contains_key(n) {
-                sess.exe(n)?;
+                sess.prepare(n)?;
             }
         }
         Ok(())
     }
 
-    /// Initialize model state (params/opt/masks) on device via the AOT
-    /// `init` executable, then apply the method's mask policy.
+    /// Initialize model state (params/opt/masks) via the `init`
+    /// executable of whichever executor the session resolved to, then
+    /// apply the method's mask policy.
     pub fn init(&mut self) -> crate::Result<()> {
         // Thread the run's parallelism into the session so everything
-        // executed through it — today the host kernel executor behind
-        // manifest-backed serving, on real PJRT the intra-op hint — obeys
-        // the same `--threads` the L3 kernels do.
-        self.session.borrow_mut().set_parallel(self.cfg.parallel);
+        // executed through it — the host executor's kernel calls, on real
+        // PJRT the intra-op hint — obeys the same `--threads` the L3
+        // kernels do.  Say which executor is active: the difference is
+        // material (native double-pruned backward vs compiled HLO).
+        let kind = {
+            let mut sess = self.session.borrow_mut();
+            sess.set_parallel(self.cfg.parallel);
+            sess.executor_kind()
+        };
+        eprintln!("[trainer] executor: {}", kind.describe());
         self.store.put_scalar_i32("seed", self.cfg.seed as i32);
         self.run_exe("init")?;
         match self.cfg.method {
@@ -158,15 +190,22 @@ impl Trainer {
                         Method::Slope | Method::Dense | Method::SrsteLora)
             && self.has_exe("train_step_lora");
         self.warmup(lazy_enabled)?;
-        // NOTE: the policy configures the CPU kernel backend and is
-        // threaded into the Session (host executor / PJRT intra-op hint);
-        // the xla-rs 0.1.6 train-step execution itself exposes no thread
-        // knob, so AOT *training* steps stay single-stream — say so
-        // rather than implying threaded steps.
+        // NOTE: on the host route the policy governs the train-step
+        // kernels themselves; on PJRT it only configures the CPU kernel
+        // backend + session-hosted serving (xla-rs 0.1.6 exposes no
+        // intra-op knob, so AOT train steps stay single-stream) — say
+        // which, rather than implying threaded AOT steps.
+        let threaded_steps = self.session.borrow().executor_kind()
+            == crate::runtime::ExecutorKind::HostKernels;
         eprintln!(
-            "[trainer] parallel policy: {} thread(s) (CPU backend kernels + \
-             session-hosted serving; AOT train steps are single-stream)",
-            self.cfg.parallel.effective_threads()
+            "[trainer] parallel policy: {} thread(s) ({})",
+            self.cfg.parallel.effective_threads(),
+            if threaded_steps {
+                "host kernel engine: forward AND backward run under this policy"
+            } else {
+                "CPU backend kernels + session-hosted serving; AOT train steps are \
+                 single-stream"
+            }
         );
         self.eval_point(0)?;
         // Checkpoint at EVERY eval point, step 0 included — a

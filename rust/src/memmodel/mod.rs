@@ -60,6 +60,53 @@ pub fn slope_train_bits_per_elem(s: NmScheme) -> f64 {
 pub const DENSE_TRAIN_BITS: f64 = 16.0 + 16.0 + 64.0;
 pub const DENSE_INFER_BITS: f64 = 16.0;
 
+/// Dense f32 training state per element on the **host training path**
+/// (`runtime::host_train`): weight + gradient + two Adam moments, all
+/// f32 (the CPU engine trains in f32, not fp16).
+pub const DENSE_HOST_TRAIN_BITS: f64 = 4.0 * 32.0;
+
+/// Live f32 host-path training bits per dense-equivalent element of a
+/// pruned linear — charging exactly what [`crate::runtime::HostTrainModel`]
+/// keeps resident per pruned weight:
+/// * `W^R` and the `W^{R,C}` transpose, each packed values (`32·ρ`) +
+///   the Eq.-7 bit-packed offset plane;
+/// * the packed masked gradient (same layout);
+/// * the `w_t` pad bitset (1 bit per packed slot = `ρ` bits/elem);
+/// * masked Adam moments (`2·32·ρ` — the §3.1 2×-reduced optimizer
+///   state, stored slot-aligned with the packed values).
+///
+/// The dense ∇W staging is a *shared* transient (one buffer per distinct
+/// shape, reused by every linear), so it amortizes instead of scaling
+/// with parameter count and is excluded here — the same treatment the
+/// paper gives its fused prune-and-compress kernel's intermediate.
+pub fn host_train_bits_per_elem(s: NmScheme) -> f64 {
+    let rho = s.density();
+    let packed_plane = 32.0 * rho + packed_index_bits_per_elem(s);
+    let copies = 2.0 * packed_plane; // W^R and W^{R,C}ᵀ
+    let grad = packed_plane; // packed masked ∇W
+    let pad_bits = rho; // w_t pad bitset
+    let moments = 2.0 * 32.0 * rho;
+    copies + grad + pad_bits + moments
+}
+
+/// Host-path training ratio for a pure-2:4 pruned linear — the live-size
+/// re-derivation of the paper's 0.63× training-memory claim at f32 rates
+/// (2:4: 83.5 / 128 ≈ 0.652, inside the Table-3 0.63–0.68 band).
+pub fn host_train_ratio(s: NmScheme) -> f64 {
+    host_train_bits_per_elem(s) / DENSE_HOST_TRAIN_BITS
+}
+
+/// Table-3 training column re-derived from the host path's live rates:
+/// pruned linears at [`host_train_bits_per_elem`], the dense remainder at
+/// [`DENSE_HOST_TRAIN_BITS`].
+pub fn host_training_memory(shape: &ModelShape, s: NmScheme) -> MemoryReport {
+    let (pruned, dense_rest) = split_params(shape);
+    let dense_bits = (pruned + dense_rest) * DENSE_HOST_TRAIN_BITS;
+    let slope_bits =
+        pruned * host_train_bits_per_elem(s) + dense_rest * DENSE_HOST_TRAIN_BITS;
+    MemoryReport { dense_bits, slope_bits }
+}
+
 /// Inference bits per dense-equivalent element of a pruned linear.
 pub fn slope_infer_bits_per_elem(s: NmScheme) -> f64 {
     16.0 * s.density() + index_bits_per_elem(s)
@@ -263,6 +310,48 @@ mod tests {
         // weights themselves — the quantitative case for paging/quantizing
         // the cache that the report now makes visible.
         assert!(r8 > 0.75, "batched decode state must dominate: {r8:.3}");
+    }
+
+    #[test]
+    fn host_training_state_rederives_the_063x_claim_from_live_sizes() {
+        use crate::backend::ParallelPolicy;
+        use crate::runtime::{write_host_train_artifact, HostTrainModel, Manifest};
+        // Closed form first: f32 host rates land inside the Table-3
+        // training band (0.63–0.68 at 2:4; the f32 number is 83.5/128).
+        let r = host_train_ratio(S24);
+        assert!((r - 83.5 / 128.0).abs() < 1e-9, "host 2:4 rate: {r}");
+        assert!(r > 0.58 && r < 0.72, "host train ratio {r}");
+        for m in SPEEDUP_MODELS {
+            let full = host_training_memory(&m, S24).ratio();
+            assert!(full > 0.60 && full < 0.80, "{}: {full:.3}", m.name);
+        }
+        // Live sizes: build an actual host training model and charge the
+        // bytes it really holds for the pruned linears.
+        let dir = std::env::temp_dir().join("slope_memmodel_host_train_test");
+        std::fs::remove_dir_all(&dir).ok();
+        write_host_train_artifact(&dir, "mem-derive").unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let model =
+            HostTrainModel::init(&manifest, 7, ParallelPolicy::serial()).unwrap();
+        let sb = model.state_bytes();
+        assert!(sb.pruned_bytes > 0 && sb.pruned_dense_bytes > 0);
+        // Measured packed/dense ratio must re-derive the closed-form rate
+        // (1% slack: the pad bitset rounds up to whole u64 words).
+        let live = sb.pruned_bytes as f64 / sb.pruned_dense_bytes as f64;
+        let want = host_train_ratio(S24);
+        assert!(
+            (live - want).abs() < 0.01,
+            "live packed ratio {live:.4} vs closed form {want:.4}"
+        );
+        assert!(live > 0.58 && live < 0.72, "live host train ratio {live:.4}");
+        // Dense-equivalent charge is literally 4 f32 planes per element.
+        let (d, f, l) = (32usize, 64, 2); // SynthSpec::default shape
+        let pruned_elems = l * (3 * d * d + d * d + 2 * d * f) - 3 * d * d; // layer-0 qkv dense
+        assert_eq!(sb.pruned_dense_bytes, pruned_elems * 16);
+        // The shared ∇W staging stays transient-sized: a few distinct
+        // shapes, not one per linear.
+        assert!(sb.workspace_bytes <= 4 * (3 * d * d + d * d + 2 * d * f) * 4);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! The [`Executor`] abstraction: run-executable-by-manifest-name over a
+//! [`Store`], with two interchangeable backends.
+//!
+//! * [`PjrtExec`] — the original route: parse the artifact's HLO text,
+//!   compile once on the PJRT CPU client, marshal literals positionally
+//!   per the manifest's input/output specs.
+//! * [`HostExec`] — the **native** route: the manifest's `init` /
+//!   `train_step` / `train_step_lora` / `lora_init` / `eval_step` /
+//!   `eval_step_lora` / `forward` / `forward_lora` semantics implemented
+//!   on the crate's own kernel engine via
+//!   [`HostTrainModel`] — the double-pruned
+//!   backward pass (Eq. 4–6) in pure rust, no python, no XLA, no
+//!   artifacts.
+//!
+//! [`super::Session`] picks the backend at open time: a directory whose
+//! manifest's HLO files exist routes to PJRT; a manifest without HLO
+//! beside it (a fabricated host-train config, or a serving-checkpoint
+//! directory) routes to the host executor.  The trainer is agnostic — it
+//! only ever calls `Session::run(name, store)`.
+//!
+//! ## Store contract on the host route
+//!
+//! The AOT contract is state-in/state-out through the store by name; the
+//! host executor honors it while keeping **resident operand state**
+//! (packed weights, moments) so steady-state steps skip re-compression:
+//! after every state-changing executable it writes the outputs back to
+//! the store and records their [`Store`] versions; before every run it
+//! diffs the tracked prefixes (`params.` / `opt.` / `masks.` / `lora.` /
+//! `lora_opt.`) against those versions and rebuilds from the store only
+//! when something else wrote them (e.g. the dense baseline's fabricated
+//! ones-masks, or a checkpoint restore).  Per-step external writes
+//! (`tokens`, `seed`) are untracked, so the hot loop never re-ingests.
+
+use crate::backend::ParallelPolicy;
+use crate::runtime::host_train::HostTrainModel;
+use crate::runtime::{Manifest, Store};
+use std::collections::HashMap;
+
+/// Which backend a [`super::Session`] resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Compiled AOT executables through the PJRT client.
+    Pjrt,
+    /// The crate's own kernel engine ([`HostTrainModel`]).
+    HostKernels,
+}
+
+impl ExecutorKind {
+    /// Human-readable route label for CLI notices.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            ExecutorKind::Pjrt => "pjrt (compiled AOT executables)",
+            ExecutorKind::HostKernels => {
+                "host kernels (double-pruned backward on the crate's engine)"
+            }
+        }
+    }
+}
+
+/// Run-executable-by-manifest-name over a [`Store`].
+pub trait Executor {
+    fn kind(&self) -> ExecutorKind;
+
+    /// Execution parallelism for subsequent work (kernel engine threads
+    /// on the host route; the intra-op hint on a real PJRT backend).
+    fn set_parallel(&mut self, policy: ParallelPolicy);
+
+    /// Pre-build `name` so the first `run` measures steady-state work
+    /// (PJRT: compile; host: validate the name is implemented).
+    fn prepare(&mut self, name: &str) -> crate::Result<()>;
+
+    /// Execute `name`: read its inputs from the store, write its outputs
+    /// back by name.
+    fn run(&mut self, name: &str, store: &mut Store) -> crate::Result<()>;
+}
+
+// ---- PJRT ---------------------------------------------------------------
+
+/// The compiled-artifact executor (the pre-refactor `Session` internals).
+pub struct PjrtExec {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtExec {
+    pub fn new(manifest: Manifest) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::eyre!("PJRT cpu client: {e}"))?;
+        Ok(Self { manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable by manifest name.
+    fn exe(&mut self, name: &str) -> crate::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.manifest.hlo_path(name)?;
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| crate::eyre!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| crate::eyre!("compiling {name}: {e}"))?;
+            eprintln!(
+                "[runtime] compiled {name} ({} in / {} out) in {:.1}s",
+                self.manifest.exe(name)?.inputs.len(),
+                self.manifest.exe(name)?.outputs.len(),
+                t0.elapsed().as_secs_f32()
+            );
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+}
+
+impl Executor for PjrtExec {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Pjrt
+    }
+
+    fn set_parallel(&mut self, _policy: ParallelPolicy) {
+        // Advisory on xla-rs 0.1.6: the PJRT client exposes no intra-op
+        // thread knob, so the policy only lives on the Session mirror
+        // (ROADMAP "Session intra-op threads" tracks the real hookup).
+    }
+
+    fn prepare(&mut self, name: &str) -> crate::Result<()> {
+        self.exe(name).map(|_| ())
+    }
+
+    /// Gather inputs from the store by manifest order, execute, untuple,
+    /// scatter outputs back by name.
+    fn run(&mut self, name: &str, store: &mut Store) -> crate::Result<()> {
+        let spec = self.manifest.exe(name)?.clone();
+        let args: Vec<&xla::Literal> = spec
+            .inputs
+            .iter()
+            .map(|t| store.get(&t.name))
+            .collect::<crate::Result<_>>()?;
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| crate::eyre!("executing {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| crate::eyre!("fetching {name} result: {e}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| crate::eyre!("untupling {name} result: {e}"))?;
+        if outs.len() != spec.outputs.len() {
+            return Err(crate::eyre!(
+                "{name}: manifest says {} outputs, HLO returned {}",
+                spec.outputs.len(),
+                outs.len()
+            ));
+        }
+        for (t, lit) in spec.outputs.iter().zip(outs) {
+            store.insert(&t.name, lit);
+        }
+        Ok(())
+    }
+}
+
+// ---- host kernels -------------------------------------------------------
+
+/// Executable names the host route implements (the AOT "core" set).
+/// Baseline variants (`train_step_srste`, `wanda_masks`, `fig9_*`) stay
+/// PJRT-only for now — see ROADMAP §Training follow-ups.
+pub const HOST_EXES: [&str; 8] = [
+    "init",
+    "train_step",
+    "train_step_lora",
+    "lora_init",
+    "eval_step",
+    "eval_step_lora",
+    "forward",
+    "forward_lora",
+];
+
+const TRACKED_PREFIXES: [&str; 5] = ["params.", "opt.", "masks.", "lora.", "lora_opt."];
+
+/// The native training/inference executor (module docs).
+pub struct HostExec {
+    manifest: Manifest,
+    policy: ParallelPolicy,
+    model: Option<HostTrainModel>,
+    /// Store identity + tracked-tensor versions the resident model
+    /// reflects.
+    store_id: u64,
+    synced: HashMap<String, u64>,
+    /// Reusable token staging.
+    tokens: Vec<i32>,
+}
+
+impl HostExec {
+    pub fn new(manifest: Manifest) -> Self {
+        Self {
+            manifest,
+            policy: ParallelPolicy::serial(),
+            model: None,
+            store_id: 0,
+            synced: HashMap::new(),
+            tokens: Vec::new(),
+        }
+    }
+
+    fn tracked(name: &str) -> bool {
+        TRACKED_PREFIXES.iter().any(|p| name.starts_with(p))
+    }
+
+    /// Record the tracked tensors' versions after a sync point.
+    fn record_synced(&mut self, store: &Store) {
+        self.store_id = store.id();
+        self.synced.clear();
+        for (name, ver) in store.versions() {
+            if Self::tracked(name) {
+                self.synced.insert(name.to_string(), ver);
+            }
+        }
+    }
+
+    /// Rebuild the resident model from the store (external state change
+    /// or first touch of this store).
+    fn rebuild(&mut self, store: &Store) -> crate::Result<()> {
+        let model =
+            HostTrainModel::from_store(&self.manifest, store, self.policy).map_err(|e| {
+                crate::eyre!(
+                    "host executor: cannot build model state from the store ({e}); \
+                     run the `init` executable (or restore a checkpoint) first"
+                )
+            })?;
+        self.model = Some(model);
+        self.record_synced(store);
+        Ok(())
+    }
+
+    /// Make the resident model agree with the store's tracked tensors.
+    fn ensure_synced(&mut self, store: &Store) -> crate::Result<()> {
+        if self.model.is_none() || self.store_id != store.id() {
+            return self.rebuild(store);
+        }
+        let mut tracked_now = 0usize;
+        let mut dirty = false;
+        for (name, ver) in store.versions() {
+            if !Self::tracked(name) {
+                continue;
+            }
+            tracked_now += 1;
+            if self.synced.get(name) != Some(&ver) {
+                dirty = true;
+                break;
+            }
+        }
+        if dirty || tracked_now != self.synced.len() {
+            return self.rebuild(store);
+        }
+        if let Some(m) = self.model.as_mut() {
+            m.set_policy(self.policy);
+        }
+        Ok(())
+    }
+
+    fn read_tokens(&mut self, store: &Store, rows: usize, cols: usize) -> crate::Result<()> {
+        let mut tokens = std::mem::take(&mut self.tokens);
+        let r = store.read_i32_into("tokens", &mut tokens);
+        self.tokens = tokens;
+        r?;
+        crate::ensure!(
+            self.tokens.len() == rows * cols,
+            "tokens holds {} ids, expected {rows}x{cols}",
+            self.tokens.len()
+        );
+        Ok(())
+    }
+
+    fn model_mut(&mut self) -> crate::Result<&mut HostTrainModel> {
+        self.model
+            .as_mut()
+            .ok_or_else(|| crate::eyre!("host executor has no model state (run `init` first)"))
+    }
+}
+
+impl Executor for HostExec {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::HostKernels
+    }
+
+    fn set_parallel(&mut self, policy: ParallelPolicy) {
+        self.policy = policy;
+        if let Some(m) = self.model.as_mut() {
+            m.set_policy(policy);
+        }
+    }
+
+    fn prepare(&mut self, name: &str) -> crate::Result<()> {
+        crate::ensure!(
+            HOST_EXES.contains(&name),
+            "the host executor does not implement {name:?} (PJRT-only executable; \
+             run `make artifacts` to use the compiled route)"
+        );
+        Ok(())
+    }
+
+    fn run(&mut self, name: &str, store: &mut Store) -> crate::Result<()> {
+        self.prepare(name)?;
+        let c = self.manifest.config.clone();
+        let (b, s) = (c.batch_size, c.seq_len);
+        match name {
+            "init" => {
+                let seed = store.read_scalar_i32("seed")? as i64 as u64;
+                let mut model = HostTrainModel::init(&self.manifest, seed, self.policy)?;
+                model.export_params(store)?;
+                model.export_opt(store)?;
+                model.export_masks(store)?;
+                self.model = Some(model);
+                self.record_synced(store);
+            }
+            "lora_init" => {
+                self.ensure_synced(store)?;
+                let seed = store.read_scalar_i32("seed")? as i64 as u64;
+                let model = self.model_mut()?;
+                model.lora_init(seed)?;
+                model.export_lora(store)?;
+                self.record_synced(store);
+            }
+            "train_step" | "train_step_lora" => {
+                self.ensure_synced(store)?;
+                self.read_tokens(store, b, s + 1)?;
+                let lora = name == "train_step_lora";
+                let model = self.model.as_mut().expect("synced");
+                let loss = if lora {
+                    model.train_step_lora(&self.tokens)?
+                } else {
+                    model.train_step(&self.tokens)?
+                };
+                store.put_f32("loss", &[], &[loss])?;
+                model.export_params(store)?;
+                model.export_opt(store)?;
+                if lora {
+                    model.export_lora(store)?;
+                }
+                self.record_synced(store);
+            }
+            "eval_step" | "eval_step_lora" => {
+                self.ensure_synced(store)?;
+                self.read_tokens(store, b, s + 1)?;
+                let lora = name == "eval_step_lora";
+                let model = self.model.as_mut().expect("synced");
+                let loss = model.eval_loss(&self.tokens, lora)?;
+                store.put_f32("loss", &[], &[loss])?;
+            }
+            "forward" | "forward_lora" => {
+                self.ensure_synced(store)?;
+                self.read_tokens(store, b, s)?;
+                let lora = name == "forward_lora";
+                let model = self.model.as_mut().expect("synced");
+                let logits = model.forward_logits(&self.tokens, b, lora)?;
+                store.put_f32("logits", &[b, s, c.vocab_size], &logits.data)?;
+            }
+            other => unreachable!("prepare() admitted {other}"),
+        }
+        Ok(())
+    }
+}

@@ -650,7 +650,9 @@ fn build_linear(manifest: &Manifest, store: &Store, packed: &HashMap<String, Com
 }
 
 /// Row-wise layer norm (ε = 1e-5, matching python `layers.layer_norm`).
-fn layer_norm_into(x: &Matrix, g: &[f32], b: &[f32], y: &mut Matrix) {
+/// Shared with the host *training* executor ([`crate::runtime::host_train`]),
+/// whose backward mirrors this definition term-for-term.
+pub(crate) fn layer_norm_into(x: &Matrix, g: &[f32], b: &[f32], y: &mut Matrix) {
     ensure_out(y, x.rows, x.cols);
     let n = x.cols as f32;
     for r in 0..x.rows {
@@ -677,9 +679,12 @@ fn layer_norm_into(x: &Matrix, g: &[f32], b: &[f32], y: &mut Matrix) {
 /// Standard causal multi-head attention over a fused-QKV activation:
 /// `qkv` rows are `[q | k | v]` (`3d` wide); writes `(k·S, d)` into
 /// `out`.  One query row at a time with max-subtracted softmax — the
-/// same math as python `layers.causal_attention`.
-fn causal_attention_into(qkv: &Matrix, batch: usize, s: usize, d: usize, n_head: usize,
-                         scores: &mut Vec<f32>, out: &mut Matrix) {
+/// same math as python `layers.causal_attention`.  Shared with the host
+/// training executor, whose attention backward recomputes these softmax
+/// rows from the forward tape.
+pub(crate) fn causal_attention_into(qkv: &Matrix, batch: usize, s: usize, d: usize,
+                                    n_head: usize, scores: &mut Vec<f32>,
+                                    out: &mut Matrix) {
     ensure_out(out, batch * s, d);
     let hd = d / n_head;
     let scale = 1.0 / (hd as f32).sqrt();
@@ -724,7 +729,7 @@ fn causal_attention_into(qkv: &Matrix, batch: usize, s: usize, d: usize, n_head:
 }
 
 /// Element-wise residual add.
-fn add_inplace(acc: &mut Matrix, rhs: &Matrix) {
+pub(crate) fn add_inplace(acc: &mut Matrix, rhs: &Matrix) {
     debug_assert_eq!((acc.rows, acc.cols), (rhs.rows, rhs.cols));
     for (a, r) in acc.data.iter_mut().zip(&rhs.data) {
         *a += *r;
@@ -733,13 +738,28 @@ fn add_inplace(acc: &mut Matrix, rhs: &Matrix) {
 
 /// Tanh-approximate GELU — `jax.nn.gelu`'s default, which is what the
 /// AOT executables compute.
-fn gelu_tanh_inplace(m: &mut Matrix) {
-    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+pub(crate) fn gelu_tanh_inplace(m: &mut Matrix) {
     for v in m.data.iter_mut() {
-        let x = *v;
-        let inner = SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x);
-        *v = 0.5 * x * (1.0 + inner.tanh());
+        *v = gelu_tanh(*v);
     }
+}
+
+pub(crate) const GELU_SQRT_2_OVER_PI: f32 = 0.797_884_56;
+pub(crate) const GELU_CUBIC: f32 = 0.044_715;
+
+#[inline]
+pub(crate) fn gelu_tanh(x: f32) -> f32 {
+    let inner = GELU_SQRT_2_OVER_PI * (x + GELU_CUBIC * x * x * x);
+    0.5 * x * (1.0 + inner.tanh())
+}
+
+/// d/dx of [`gelu_tanh`] — the training executor's GELU backward.
+#[inline]
+pub(crate) fn gelu_tanh_grad(x: f32) -> f32 {
+    let u = GELU_SQRT_2_OVER_PI * (x + GELU_CUBIC * x * x * x);
+    let t = u.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * GELU_SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_CUBIC * x * x)
 }
 
 // ---- synthetic artifact fixture ---------------------------------------
@@ -778,23 +798,120 @@ impl Default for SynthSpec {
     }
 }
 
-/// Fabricate a self-contained artifact directory: a `manifest.json` plus a
-/// serving checkpoint (store planes + packed v2 weight planes) for a
-/// random model of the given shape — everything
-/// [`crate::serve::AotModel`] needs, with no python or XLA involved.
-/// Deviations from a trained artifact are deliberate and noted: adapter
-/// `up` factors are non-zero (a freshly-initialized LoRA is an exact
-/// no-op, which would leave the adapter path untested), and the
-/// `executables` section lists only the inference entry points with their
-/// token/logit signatures (the fixture ships no HLO, so the PJRT probe
-/// always falls through to the host executor).
-pub fn write_synthetic_artifact(dir: &Path, spec: &SynthSpec) -> crate::Result<()> {
+/// One `{"name", "shape", "dtype"}` manifest tensor spec.
+fn tensor_spec_json(name: &str, shape: &[usize], dtype: &str) -> String {
+    let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    format!(r#"{{"name": "{name}", "shape": [{}], "dtype": "{dtype}"}}"#, dims.join(", "))
+}
+
+/// One manifest executable entry (`"file"` points at HLO that the
+/// fixture never ships — that absence is what routes the session to the
+/// host executor).
+fn exe_entry_json(name: &str, inputs: &[String], outputs: &[String]) -> String {
+    format!(
+        "\"{name}\": {{\n   \"file\": \"{name}.hlo.txt\",\n   \"inputs\": [{}],\n   \"outputs\": [{}]\n  }}",
+        inputs.join(",\n    "),
+        outputs.join(",\n    ")
+    )
+}
+
+/// The AOT "core" executable set (`python/compile/aot.py`) with full
+/// input/output tensor specs — the schema the host executor implements
+/// natively, so a fabricated manifest drives the exact store contract a
+/// lowered one would.
+fn core_executables_json(c: &crate::runtime::manifest::ModelConfig) -> String {
+    use crate::runtime::host_train::{lora_leaves, mask_leaves, param_leaves};
+    let prefixed = |prefix: &str, leaves: &[(String, Vec<usize>)]| -> Vec<String> {
+        leaves
+            .iter()
+            .map(|(s, shape)| tensor_spec_json(&format!("{prefix}.{s}"), shape, "float32"))
+            .collect()
+    };
+    let opt_planes = |prefix: &str, leaves: &[(String, Vec<usize>)]| -> Vec<String> {
+        let mut out = Vec::new();
+        for plane in ["m", "v"] {
+            for (s, shape) in leaves {
+                out.push(tensor_spec_json(&format!("{prefix}.{plane}.{s}"), shape, "float32"));
+            }
+        }
+        out.push(tensor_spec_json(&format!("{prefix}.step"), &[], "float32"));
+        out
+    };
+    let pl = param_leaves(c);
+    let params = prefixed("params", &pl);
+    let masks = prefixed("masks", &mask_leaves(c));
+    let opt = opt_planes("opt", &pl);
+    let seed = vec![tensor_spec_json("seed", &[], "int32")];
+    let tok_train = vec![tensor_spec_json("tokens", &[c.batch_size, c.seq_len + 1], "int32")];
+    let tok_infer = vec![tensor_spec_json("tokens", &[c.batch_size, c.seq_len], "int32")];
+    let loss = vec![tensor_spec_json("loss", &[], "float32")];
+    let logits =
+        vec![tensor_spec_json("logits", &[c.batch_size, c.seq_len, c.vocab_size], "float32")];
+    let cat = |lists: &[&Vec<String>]| -> Vec<String> {
+        lists.iter().flat_map(|l| l.iter().cloned()).collect()
+    };
+
+    let mut entries = vec![
+        exe_entry_json("init", &seed, &cat(&[&params, &opt, &masks])),
+        exe_entry_json(
+            "train_step",
+            &cat(&[&tok_train, &params, &opt, &masks]),
+            &cat(&[&loss, &params, &opt]),
+        ),
+        exe_entry_json("eval_step", &cat(&[&tok_train, &params, &masks]), &loss),
+        exe_entry_json("forward", &cat(&[&tok_infer, &params, &masks]), &logits),
+    ];
+    if c.adapter_rank > 0 {
+        let ll = lora_leaves(c);
+        let lora = prefixed("lora", &ll);
+        let lora_opt = opt_planes("lora_opt", &ll);
+        entries.push(exe_entry_json("lora_init", &seed, &cat(&[&lora, &lora_opt])));
+        entries.push(exe_entry_json(
+            "train_step_lora",
+            &cat(&[&tok_train, &params, &opt, &masks, &lora, &lora_opt]),
+            &cat(&[&loss, &params, &opt, &lora, &lora_opt]),
+        ));
+        entries.push(exe_entry_json(
+            "eval_step_lora",
+            &cat(&[&tok_train, &params, &masks, &lora]),
+            &loss,
+        ));
+        entries.push(exe_entry_json(
+            "forward_lora",
+            &cat(&[&tok_infer, &params, &masks, &lora]),
+            &logits,
+        ));
+    }
+    entries.join(",\n  ")
+}
+
+/// Write a `manifest.json` for the spec's shape (no HLO, no checkpoint):
+/// config + train schedule + sparsity format + the full core executable
+/// schema.  Loading the directory routes straight to the host executor.
+fn write_manifest_json(dir: &Path, spec: &SynthSpec) -> crate::Result<Manifest> {
     std::fs::create_dir_all(dir)?;
     let (v, l, d, f, s, bsz) =
         (spec.vocab, spec.n_layer, spec.d_model, spec.d_ff, spec.seq_len, spec.batch_size);
     crate::ensure!(d % spec.n_head == 0, "d_model must divide by n_head");
     crate::ensure!(d % 4 == 0 && f % 4 == 0, "synthetic dims must be 2:4 groupable");
     let n_params = v * d + s * d + l * (3 * d * d + d * d + 2 * d * f);
+    let cfg = crate::runtime::manifest::ModelConfig {
+        name: spec.name.clone(),
+        vocab_size: v,
+        n_layer: l,
+        n_head: spec.n_head,
+        d_model: d,
+        d_ff: f,
+        seq_len: s,
+        batch_size: bsz,
+        adapter_rank: spec.rank,
+        first_half_sparsity: (2, 4),
+        second_half_sparsity: (2, 4),
+        prune_attn: true,
+        prune_mlp: true,
+        n_params_dense: n_params,
+    };
+    let exes = core_executables_json(&cfg);
     let manifest_json = format!(
         r#"{{
   "config": {{
@@ -805,7 +922,8 @@ pub fn write_synthetic_artifact(dir: &Path, spec: &SynthSpec) -> crate::Result<(
     "n_params_dense": {n_params}
   }},
   "train": {{
-    "lr": 0.001, "weight_decay": 0.1, "warmup_steps": 10, "total_steps": 100,
+    "lr": 0.005, "beta1": 0.9, "beta2": 0.95, "weight_decay": 0.1,
+    "grad_clip": 1.0, "warmup_steps": 5, "total_steps": 200,
     "lazy_fraction": 0.01, "srste_decay": 0.0002
   }},
   "sparsity_format": {{
@@ -813,16 +931,7 @@ pub fn write_synthetic_artifact(dir: &Path, spec: &SynthSpec) -> crate::Result<(
     "offset_bits_first_half": 2, "offset_bits_second_half": 2
   }},
   "executables": {{
-    "forward": {{
-      "file": "forward.hlo.txt",
-      "inputs": [{{"name": "tokens", "shape": [{bsz}, {s}], "dtype": "int32"}}],
-      "outputs": [{{"name": "logits", "shape": [{bsz}, {s}, {v}], "dtype": "float32"}}]
-    }},
-    "forward_lora": {{
-      "file": "forward_lora.hlo.txt",
-      "inputs": [{{"name": "tokens", "shape": [{bsz}, {s}], "dtype": "int32"}}],
-      "outputs": [{{"name": "logits", "shape": [{bsz}, {s}, {v}], "dtype": "float32"}}]
-    }}
+  {exes}
   }}
 }}
 "#,
@@ -831,7 +940,32 @@ pub fn write_synthetic_artifact(dir: &Path, spec: &SynthSpec) -> crate::Result<(
         rank = spec.rank,
     );
     std::fs::write(dir.join("manifest.json"), manifest_json)?;
-    let manifest = Manifest::load(dir)?;
+    Manifest::load(dir)
+}
+
+/// Fabricate a **host-trainable artifact**: manifest only, no weights —
+/// the `init` executable creates the state.  This is what `slope train`
+/// falls back to on a clean checkout (no `make artifacts`), making the
+/// train → checkpoint → serve/generate pipeline self-contained.
+pub fn write_host_train_artifact(dir: &Path, model_name: &str) -> crate::Result<()> {
+    let spec = SynthSpec { name: model_name.to_string(), ..SynthSpec::default() };
+    write_manifest_json(dir, &spec).map(|_| ())
+}
+
+/// Fabricate a self-contained artifact directory: a `manifest.json` plus a
+/// serving checkpoint (store planes + packed v2 weight planes) for a
+/// random model of the given shape — everything
+/// [`crate::serve::AotModel`] needs, with no python or XLA involved.
+/// Deviations from a trained artifact are deliberate and noted: adapter
+/// `up` factors are non-zero (a freshly-initialized LoRA is an exact
+/// no-op, which would leave the adapter path untested), and no HLO ships
+/// beside the manifest, so sessions on the directory always route to the
+/// host executor.  The manifest carries the full core executable schema,
+/// so the same fixture drives training tests and benches.
+pub fn write_synthetic_artifact(dir: &Path, spec: &SynthSpec) -> crate::Result<()> {
+    let manifest = write_manifest_json(dir, spec)?;
+    let (v, l, d, f, s, _bsz) =
+        (spec.vocab, spec.n_layer, spec.d_model, spec.d_ff, spec.seq_len, spec.batch_size);
 
     let mut rng = Rng::seed_from_u64(spec.seed);
     let mut store = Store::new();

@@ -1,0 +1,1968 @@
+//! Differentiable host training model — the paper's Eq. 4–6 recipe
+//! executed natively on the crate's CPU kernel engine.
+//!
+//! [`HostTrainModel`] holds the full training state of one manifest config
+//! (params, masks as packed patterns, AdamW moments, lazy adapters) and
+//! implements the semantics of the AOT `train_step` / `train_step_lora` /
+//! `eval_step` / `forward` executables:
+//!
+//! * **Forward** — the pre-LN GPT of `python/compile/model.py`, sharing
+//!   [`super::host`]'s layer-norm / causal-attention / tanh-GELU kernels
+//!   with the serving executor, every pruned linear an Eq.-4 packed SpMM.
+//! * **Backward** — hand-derived reverse pass over the forward tape.  Per
+//!   pruned linear it is exactly the paper's custom VJP
+//!   (`python/compile/layers.slope_matmul`):
+//!   - BWD-2 (Eq. 6): `∇X = ∇Y · W^{R,C}` through the **row-compressed
+//!     double-pruned transpose** — the same packed SpMM kernel as the
+//!     forward, NOT a dense `∇Y·Wᵀ`;
+//!   - BWD-1 (Eq. 5, line 13): dense `∇Yᵀ·X` staged once, then
+//!     masked+packed via [`crate::backend::prune_and_compress_into`] so
+//!     gradients (and the Adam moments fed from them) never materialize
+//!     for pruned slots.
+//! * **Optimizer** — AdamW matching `python/compile/train.py` exactly:
+//!   global-norm clip, linear-warmup→cosine LR, decoupled decay on
+//!   matrices only, masked updates/moments (Algorithm 1 lines 15–18).
+//!   For packed weights the whole update runs in compressed space: the
+//!   moments are slot-aligned with `w.values` (the §3.1 2×-reduced Adam
+//!   state), and the transpose operand is refreshed in place.
+//! * **Lazy adapters** — `lora_init` (down ~ N(0, 0.02²), up = 0: an
+//!   exact no-op at activation) and the adapter half of
+//!   `train_step_lora` (plain autodiff through the fused Eq.-11 path,
+//!   its own AdamW chain with an independent step counter, as python's
+//!   second `adamw_update` call does).
+//!
+//! All matrix work routes through the [`crate::backend`] engine under one
+//! [`ParallelPolicy`]; the kernels are bit-identical across thread counts
+//! and every hand loop is serial, so a train step is **deterministic in
+//! the thread count** (pinned in `tests/host_train.rs`).  Steady-state
+//! steps reuse every tape/workspace buffer (shape-keyed pools for the
+//! shapes that alternate), so the hot loop performs no per-step
+//! allocations beyond the literal-store round-trip the AOT path also pays.
+
+use crate::backend::gemm::dot;
+use crate::backend::{ensure_out, gemm_into, gemm_nt_acc_into, gemm_nt_into, gemm_tn_into,
+                     prune_and_compress_into, spmm_rowmajor_into, ParallelPolicy};
+use crate::runtime::host::{add_inplace, causal_attention_into, gelu_tanh, gelu_tanh_grad,
+                           layer_norm_into};
+use crate::runtime::manifest::{ModelConfig, TrainParams};
+use crate::runtime::{Manifest, Store, SPARSE_WEIGHTS};
+use crate::sparsity::{double_prune_mask, random_row_mask, CompressedNm, Mask, NmScheme};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+const ADAM_EPS: f32 = 1e-8;
+
+// ---- state-tree enumeration (shared with the manifest fabricator) -----
+
+/// `(suffix, shape)` of every parameter leaf, in a stable order.  Store
+/// names are `params.<suffix>`; optimizer planes `opt.m.<suffix>` /
+/// `opt.v.<suffix>`.
+pub(crate) fn param_leaves(c: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let (d, f, v, s) = (c.d_model, c.d_ff, c.vocab_size, c.seq_len);
+    let mut out: Vec<(String, Vec<usize>)> = vec![
+        ("tok_emb".into(), vec![v, d]),
+        ("pos_emb".into(), vec![s, d]),
+        ("lnf_g".into(), vec![d]),
+        ("lnf_b".into(), vec![d]),
+    ];
+    for i in 0..c.n_layer {
+        let p = |suffix: &str| format!("blocks.{i}.{suffix}");
+        out.push((p("ln1_g"), vec![d]));
+        out.push((p("ln1_b"), vec![d]));
+        out.push((p("wqkv"), vec![3 * d, d]));
+        out.push((p("bqkv"), vec![3 * d]));
+        out.push((p("wproj"), vec![d, d]));
+        out.push((p("bproj"), vec![d]));
+        out.push((p("ln2_g"), vec![d]));
+        out.push((p("ln2_b"), vec![d]));
+        out.push((p("wup"), vec![f, d]));
+        out.push((p("bup"), vec![f]));
+        out.push((p("wdown"), vec![d, f]));
+        out.push((p("bdown"), vec![d]));
+    }
+    out
+}
+
+/// Dense shape of one block weight.
+pub(crate) fn weight_dims(c: &ModelConfig, wname: &str) -> (usize, usize) {
+    let (d, f) = (c.d_model, c.d_ff);
+    match wname {
+        "wqkv" => (3 * d, d),
+        "wproj" => (d, d),
+        "wup" => (f, d),
+        "wdown" => (d, f),
+        other => unreachable!("unknown block weight {other}"),
+    }
+}
+
+/// `(suffix, shape)` of every mask leaf (`masks.<suffix>`).
+pub(crate) fn mask_leaves(c: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let mut out = Vec::new();
+    for i in 0..c.n_layer {
+        for wname in SPARSE_WEIGHTS {
+            let (d_out, d_in) = weight_dims(c, wname);
+            out.push((format!("blocks.{i}.{wname}_r"), vec![d_out, d_in]));
+            out.push((format!("blocks.{i}.{wname}_rc"), vec![d_out, d_in]));
+        }
+    }
+    out
+}
+
+/// `(suffix, shape)` of every adapter leaf (`lora.<suffix>`;
+/// `lora_opt.{m,v}.<suffix>`).
+pub(crate) fn lora_leaves(c: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let r = c.adapter_rank;
+    let mut out = Vec::new();
+    for i in 0..c.n_layer {
+        for wname in SPARSE_WEIGHTS {
+            let (d_out, d_in) = weight_dims(c, wname);
+            out.push((format!("blocks.{i}.{wname}_down"), vec![r, d_in]));
+            out.push((format!("blocks.{i}.{wname}_up"), vec![d_out, r]));
+        }
+    }
+    out
+}
+
+/// Decoupled-weight-decay coefficient for a leaf (python `_decay_coeff`):
+/// biases, norm gains/shifts and the positional embedding never decay.
+fn decay_of(suffix: &str, wd: f32) -> f32 {
+    let leaf = suffix.rsplit('.').next().unwrap_or(suffix);
+    if leaf.starts_with('b') || leaf.ends_with("_g") || leaf.ends_with("_b") || leaf == "pos_emb"
+    {
+        0.0
+    } else {
+        wd
+    }
+}
+
+// ---- per-leaf state ----------------------------------------------------
+
+/// Dense vector parameter (norm gain/shift, bias) with grads + moments.
+struct VecParam {
+    suffix: String,
+    w: Vec<f32>,
+    g: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl VecParam {
+    fn new(suffix: &str, w: Vec<f32>) -> Self {
+        let n = w.len();
+        Self { suffix: suffix.into(), w, g: vec![0.0; n], m: vec![0.0; n], v: vec![0.0; n] }
+    }
+}
+
+/// Dense matrix parameter (embeddings) with grads + moments.
+struct MatParam {
+    suffix: String,
+    w: Matrix,
+    g: Matrix,
+    m: Matrix,
+    v: Matrix,
+}
+
+impl MatParam {
+    fn new(suffix: &str, w: Matrix) -> Self {
+        let (r, c) = (w.rows, w.cols);
+        Self {
+            suffix: suffix.into(),
+            w,
+            g: Matrix::zeros(r, c),
+            m: Matrix::zeros(r, c),
+            v: Matrix::zeros(r, c),
+        }
+    }
+}
+
+/// Packed operand set of a pruned linear — the Table-3 training-memory
+/// layout: both weight copies bit-packed, packed masked gradient, masked
+/// (slot-aligned) Adam moments.  No dense mirror is kept; masks live only
+/// as the packed patterns (and are re-derived for store export).
+struct SparseOps {
+    scheme: NmScheme,
+    /// Row-compressed `W^R` (Eq. 4 forward operand; also the grad pattern).
+    w: CompressedNm,
+    /// Row-compressed transpose of `W^{R,C}` (Eq. 6 backward operand).
+    w_t: CompressedNm,
+    /// Pad slots of `w_t` (bitset): column groups of the double-pruned
+    /// mask with fewer than N survivors; those slots stay exactly 0.
+    wt_pad: Vec<u64>,
+    /// Packed masked gradient (Eq. 5 / Algorithm 1 line 13).
+    gw: CompressedNm,
+    /// Masked Adam moments, slot-aligned with `w.values` (§3.1: sparse
+    /// optimizer state).
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl SparseOps {
+    #[inline]
+    fn pad(&self, slot: usize) -> bool {
+        (self.wt_pad[slot / 64] >> (slot % 64)) & 1 == 1
+    }
+
+    /// Refresh the BWD-2 operand from the updated forward operand: for
+    /// every non-pad `w_t` slot `(r', c')`, gather `W[c', r']` out of
+    /// row `c'` of `w` by scanning its ≤N in-group candidates.  O(nnz·N),
+    /// allocation-free, and needs no dense mirror or gather map.
+    fn refresh_wt(&mut self) {
+        let (n, m) = (self.scheme.n, self.scheme.m);
+        let kc = self.w.kcols();
+        let kc_t = self.w_t.kcols();
+        for rt in 0..self.w_t.rows {
+            for k in 0..kc_t {
+                let slot = rt * kc_t + k;
+                if self.pad(slot) {
+                    continue; // stays exactly 0 (rc-pruned slot)
+                }
+                let ct = self.w_t.index(rt, k);
+                // W[ct, rt]: scan row `ct` of `w`, group rt/m (≤N probes;
+                // mask_rc ⊆ mask_r guarantees a hit for non-pad slots).
+                let g = rt / m;
+                let mut val = 0.0;
+                for j in 0..n {
+                    let wslot = g * n + j;
+                    if self.w.index(ct, wslot) == rt {
+                        val = self.w.values[ct * kc + wslot];
+                        break;
+                    }
+                }
+                self.w_t.values[slot] = val;
+            }
+        }
+    }
+
+    /// Scatter packed values (grad/moments) to a dense staging matrix.
+    fn scatter(&self, values: &[f32], out: &mut Matrix) {
+        ensure_out(out, self.w.rows, self.w.cols);
+        out.data.fill(0.0);
+        let kc = self.w.kcols();
+        for r in 0..self.w.rows {
+            for (k, c) in self.w.row_indices(r).enumerate() {
+                out.data[r * self.w.cols + c] = values[r * kc + k];
+            }
+        }
+    }
+
+    /// Re-derive `mask_r` (exact by construction) as a dense 0/1 matrix.
+    fn mask_r_dense(&self, out: &mut Matrix) {
+        ensure_out(out, self.w.rows, self.w.cols);
+        out.data.fill(0.0);
+        for r in 0..self.w.rows {
+            for c in self.w.row_indices(r) {
+                out.data[r * self.w.cols + c] = 1.0;
+            }
+        }
+    }
+
+    /// Re-derive `mask_rc` (pads excluded) as a dense 0/1 matrix in the
+    /// original `d_out × d_in` layout.
+    fn mask_rc_dense(&self, out: &mut Matrix) {
+        ensure_out(out, self.w.rows, self.w.cols);
+        out.data.fill(0.0);
+        let kc_t = self.w_t.kcols();
+        for rt in 0..self.w_t.rows {
+            for (k, ct) in self.w_t.row_indices(rt).enumerate() {
+                if !self.pad(rt * kc_t + k) {
+                    out.data[ct * self.w.cols + rt] = 1.0;
+                }
+            }
+        }
+    }
+}
+
+/// Dense operand set: unpruned weights, and the dense-baseline /
+/// non-N:M-mask route (python's single executable covers both via masks).
+struct DenseOps {
+    w: Matrix,
+    /// Row mask (`None` = all-ones / absent).  Kept dense-boolean here —
+    /// this route is not the one the §3.1 memory claims charge.
+    mask_r: Option<Mask>,
+    mask_rc: Option<Mask>,
+    /// Masked forward / backward operands (refreshed after each update;
+    /// empty when the masks are trivial).
+    wm_r: Matrix,
+    wm_rc: Matrix,
+    /// Dense (masked) gradient.
+    gw: Matrix,
+    m: Matrix,
+    v: Matrix,
+}
+
+impl DenseOps {
+    fn refresh_masked(&mut self) {
+        if let Some(mask) = &self.mask_r {
+            ensure_out(&mut self.wm_r, self.w.rows, self.w.cols);
+            for (o, (wv, k)) in
+                self.wm_r.data.iter_mut().zip(self.w.data.iter().zip(&mask.keep))
+            {
+                *o = if *k { *wv } else { 0.0 };
+            }
+        }
+        if let Some(mask) = &self.mask_rc {
+            ensure_out(&mut self.wm_rc, self.w.rows, self.w.cols);
+            for (o, (wv, k)) in
+                self.wm_rc.data.iter_mut().zip(self.w.data.iter().zip(&mask.keep))
+            {
+                *o = if *k { *wv } else { 0.0 };
+            }
+        }
+    }
+
+    fn fwd_operand(&self) -> &Matrix {
+        if self.mask_r.is_some() {
+            &self.wm_r
+        } else {
+            &self.w
+        }
+    }
+
+    fn bwd_operand(&self) -> &Matrix {
+        if self.mask_rc.is_some() {
+            &self.wm_rc
+        } else {
+            &self.w
+        }
+    }
+}
+
+enum LinOps {
+    Sparse(SparseOps),
+    Dense(DenseOps),
+}
+
+/// One block linear: weight operands (packed or dense), bias, grads,
+/// moments.
+struct TrainLinear {
+    /// Store suffix of the weight, e.g. `blocks.0.wqkv`.
+    wsuffix: String,
+    d_out: usize,
+    d_in: usize,
+    ops: LinOps,
+    bias: VecParam,
+}
+
+/// One lazy adapter pair (`down` = R: (r, d_in), `up` = L: (d_out, r)).
+struct LoraPair {
+    wsuffix: String,
+    down: MatParam,
+    up: MatParam,
+    /// Taped rank intermediate `T = X·Rᵀ` from the forward.
+    t: Matrix,
+}
+
+struct LoraState {
+    /// `n_layer × 4` pairs, indexed `layer*4 + SPARSE_WEIGHTS position`.
+    pairs: Vec<LoraPair>,
+    step: f32,
+}
+
+struct NormParam {
+    g: VecParam,
+    b: VecParam,
+}
+
+struct TrainBlock {
+    ln1: NormParam,
+    ln2: NormParam,
+    qkv: TrainLinear,
+    proj: TrainLinear,
+    up: TrainLinear,
+    down: TrainLinear,
+}
+
+// ---- tape + workspace --------------------------------------------------
+
+/// Per-layer forward activations retained for the backward pass.
+#[derive(Default)]
+struct LayerTape {
+    /// Residual stream entering the block.
+    x_in: Matrix,
+    /// ln1 output (qkv input).
+    h1: Matrix,
+    /// Fused QKV activation.
+    qkv: Matrix,
+    /// Attention output (proj input).
+    att: Matrix,
+    /// Residual after the attention branch.
+    x_mid: Matrix,
+    /// ln2 output (up input).
+    h2: Matrix,
+    /// Pre-GELU upsample.
+    up: Matrix,
+    /// Post-GELU (down input).
+    gel: Matrix,
+}
+
+#[derive(Default)]
+struct Tape {
+    layers: Vec<LayerTape>,
+    /// Final residual stream.
+    x_out: Matrix,
+    /// lnf output.
+    hf: Matrix,
+    /// Full-position logits `(k·S, V)`.
+    logits: Matrix,
+}
+
+/// Shape-keyed buffer pool: the backward staging shapes alternate
+/// (`(3d,d)/(d,d)/(f,d)/(d,f)` for ∇W, `(rows,d)/(rows,f)` for adapter
+/// input-grads), so a single `ensure_out` buffer would reallocate every
+/// call; the pool holds one warm buffer per distinct shape instead.
+#[derive(Default)]
+struct ShapePool {
+    bufs: Vec<Matrix>,
+}
+
+impl ShapePool {
+    fn get(&mut self, rows: usize, cols: usize) -> &mut Matrix {
+        if let Some(i) = self.bufs.iter().position(|m| m.rows == rows && m.cols == cols) {
+            return &mut self.bufs[i];
+        }
+        self.bufs.push(Matrix::zeros(rows, cols));
+        self.bufs.last_mut().expect("just pushed")
+    }
+
+    fn bytes(&self) -> usize {
+        self.bufs.iter().map(|m| m.data.len() * 4).sum()
+    }
+}
+
+#[derive(Default)]
+struct TrainWs {
+    /// Residual-stream gradient (rows, d).
+    d_res: Matrix,
+    /// LN input-grad staging (rows, d).
+    d_branch: Matrix,
+    /// Grad wrt lnf output (rows, d).
+    d_hf: Matrix,
+    /// Grad wrt ln2 output (rows, d).
+    d_h2: Matrix,
+    /// Grad wrt post-GELU (rows, f).
+    d_gel: Matrix,
+    /// Grad wrt pre-GELU (rows, f).
+    d_up: Matrix,
+    /// Grad wrt fused QKV (rows, 3d).
+    d_qkv: Matrix,
+    /// Grad wrt attention output (rows, d).
+    d_att: Matrix,
+    /// Grad wrt ln1 output (rows, d).
+    d_h1: Matrix,
+    /// Adapter rank grad (rows, r).
+    d_t: Matrix,
+    /// Softmax CE gradient (rows, V).
+    dlogits: Matrix,
+    /// Forward branch staging (rows, d).
+    fwd_branch: Matrix,
+    /// Attention scratch (probability / dot rows + one dq accumulator).
+    scores: Vec<f32>,
+    att_dw: Vec<f32>,
+    att_dq: Vec<f32>,
+    /// Dense ∇W staging shared across all linears (shape-keyed).
+    gw_pool: ShapePool,
+    /// Adapter input-grad staging (shape-keyed).
+    lin_pool: ShapePool,
+    /// Store-export scratch.
+    export: Matrix,
+}
+
+// ---- the model ---------------------------------------------------------
+
+/// Live training-state accounting of a built model (see
+/// [`HostTrainModel::state_bytes`]) — the measured counterpart of the
+/// `memmodel` closed forms.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStateBytes {
+    /// Packed state of the pruned linears: both weight planes (+ the
+    /// `w_t` pad bitset), the packed gradient, and the masked moments.
+    pub pruned_bytes: usize,
+    /// What dense f32 training state for the same linears would hold
+    /// (weight + gradient + two moments).
+    pub pruned_dense_bytes: usize,
+    /// Dense remainder state (embeddings, norms, biases, unpruned
+    /// linears), with grads + moments.
+    pub dense_rest_bytes: usize,
+    /// Transient shared workspaces (dense ∇W staging pool) — reused
+    /// across every linear, so they amortize instead of scaling with
+    /// parameter count.
+    pub workspace_bytes: usize,
+}
+
+/// Checkpoint-backed / seed-initialized host training executor for one
+/// manifest config (module docs).
+pub struct HostTrainModel {
+    cfg: ModelConfig,
+    train: TrainParams,
+    policy: ParallelPolicy,
+    tok_emb: MatParam,
+    pos_emb: MatParam,
+    lnf: NormParam,
+    blocks: Vec<TrainBlock>,
+    lora: Option<LoraState>,
+    opt_step: f32,
+    tape: Tape,
+    ws: TrainWs,
+    /// Token ids of the taped forward (embedding-scatter backward).
+    fwd_tokens: Vec<i32>,
+    /// Reusable input-token staging (targets stripped off).
+    inp_buf: Vec<i32>,
+}
+
+impl HostTrainModel {
+    // ---- construction --------------------------------------------------
+
+    /// Seed-initialize model + masks + optimizer — the `init` executable.
+    /// Mirrors python `model.init_params` / `init_masks(scheme="random")` /
+    /// `project_params` (values differ — the offline RNG is not jax's —
+    /// but distributions, shapes, projection and the double-pruned mask
+    /// rule match).
+    pub fn init(manifest: &Manifest, seed: u64, policy: ParallelPolicy) -> crate::Result<Self> {
+        let c = manifest.config.clone();
+        crate::ensure!(c.d_model % c.n_head == 0, "d_model must divide by n_head");
+        let mut rng = Rng::seed_from_u64(seed);
+        let (d, f) = (c.d_model, c.d_ff);
+        let tok_emb = MatParam::new("tok_emb", Matrix::randn(c.vocab_size, d, 0.02, &mut rng));
+        let pos_emb = MatParam::new("pos_emb", Matrix::randn(c.seq_len, d, 0.01, &mut rng));
+        let lnf = norm_param("lnf_g", "lnf_b", vec![1.0; d], vec![0.0; d]);
+        let proj_scale = 0.02 / (2.0 * c.n_layer as f32).sqrt();
+        let mut blocks = Vec::with_capacity(c.n_layer);
+        for layer in 0..c.n_layer {
+            let p = |s: &str| format!("blocks.{layer}.{s}");
+            let ln1 = norm_param(&p("ln1_g"), &p("ln1_b"), vec![1.0; d], vec![0.0; d]);
+            let ln2 = norm_param(&p("ln2_g"), &p("ln2_b"), vec![1.0; d], vec![0.0; d]);
+            let mut linear = |wname: &str, bname: &str, scale: f32| -> crate::Result<TrainLinear> {
+                let (d_out, d_in) = weight_dims(&c, wname);
+                let w = Matrix::randn(d_out, d_in, scale, &mut rng);
+                let (n, m) = manifest.scheme_for_layer(layer);
+                let scheme = NmScheme::new(n, m);
+                let (mask_r, mask_rc) = if manifest.is_pruned(layer, wname) {
+                    crate::ensure!(
+                        d_in % m == 0 && d_out % m == 0,
+                        "{} is {d_out}x{d_in}: not {n}:{m} groupable",
+                        p(wname)
+                    );
+                    let mr = random_row_mask(d_out, d_in, scheme, &mut rng);
+                    let mrc = double_prune_mask(&w, &mr, scheme);
+                    (Some(mr), Some(mrc))
+                } else {
+                    (None, None)
+                };
+                build_linear(
+                    &p(wname),
+                    &p(bname),
+                    w,
+                    vec![0.0; d_out],
+                    mask_r,
+                    mask_rc,
+                    scheme,
+                    None,
+                )
+            };
+            let qkv = linear("wqkv", "bqkv", 0.02)?;
+            let proj = linear("wproj", "bproj", proj_scale)?;
+            let up = linear("wup", "bup", 0.02)?;
+            let down = linear("wdown", "bdown", proj_scale)?;
+            blocks.push(TrainBlock { ln1, ln2, qkv, proj, up, down });
+        }
+        let mut me = Self {
+            cfg: c,
+            train: manifest.train.clone(),
+            policy,
+            tok_emb,
+            pos_emb,
+            lnf,
+            blocks,
+            lora: None,
+            opt_step: 0.0,
+            tape: Tape::default(),
+            ws: TrainWs::default(),
+            fwd_tokens: Vec::new(),
+            inp_buf: Vec::new(),
+        };
+        me.tape.layers = (0..me.cfg.n_layer).map(|_| LayerTape::default()).collect();
+        Ok(me)
+    }
+
+    /// Rebuild the full training state from a literal store (`params.*`
+    /// required; `masks.*` / `opt.*` / `lora.*` / `lora_opt.*` optional).
+    /// The route per weight follows the checkpoint rule: a present,
+    /// shape-matched, **exact**-N:M row mask (with a column-valid
+    /// `mask_rc`) restores packed; everything else restores dense with the
+    /// stored masks applied in forward/backward.
+    pub fn from_store(manifest: &Manifest, store: &Store,
+                      policy: ParallelPolicy) -> crate::Result<Self> {
+        let c = manifest.config.clone();
+        crate::ensure!(
+            !store.contains("params.head_w"),
+            "host trainer supports tied embeddings only (params.head_w present)"
+        );
+        let read_vec = |suffix: &str| store.read_f32(&format!("params.{suffix}"));
+        let tok_emb = mat_param_from_store(store, "tok_emb", c.vocab_size, c.d_model)?;
+        let pos = store.read_matrix("params.pos_emb")?;
+        crate::ensure!(
+            pos.rows >= c.seq_len && pos.cols == c.d_model,
+            "pos_emb ({}x{}) too short for seq_len {}",
+            pos.rows, pos.cols, c.seq_len
+        );
+        let mut pos_emb = MatParam::new("pos_emb", pos);
+        ingest_moments_mat(store, &mut pos_emb)?;
+        let lnf = norm_param_from_store(store, "lnf_g", "lnf_b", read_vec("lnf_g")?,
+                                        read_vec("lnf_b")?, c.d_model)?;
+        let mut blocks = Vec::with_capacity(c.n_layer);
+        for layer in 0..c.n_layer {
+            let p = |s: &str| format!("blocks.{layer}.{s}");
+            let ln1 = norm_param_from_store(store, &p("ln1_g"), &p("ln1_b"),
+                                            read_vec(&p("ln1_g"))?, read_vec(&p("ln1_b"))?,
+                                            c.d_model)?;
+            let ln2 = norm_param_from_store(store, &p("ln2_g"), &p("ln2_b"),
+                                            read_vec(&p("ln2_g"))?, read_vec(&p("ln2_b"))?,
+                                            c.d_model)?;
+            let mut linear = |wname: &str, bname: &str| -> crate::Result<TrainLinear> {
+                let (d_out, d_in) = weight_dims(&c, wname);
+                let w = store.read_matrix(&format!("params.{}", p(wname)))?;
+                crate::ensure!(
+                    (w.rows, w.cols) == (d_out, d_in),
+                    "params.{} is {}x{}, expected {d_out}x{d_in}",
+                    p(wname), w.rows, w.cols
+                );
+                let bias = read_vec(&p(bname))?;
+                crate::ensure!(bias.len() == d_out, "bias length mismatch for {}", p(bname));
+                let (n, m) = manifest.scheme_for_layer(layer);
+                let scheme = NmScheme::new(n, m);
+                let mask_r = read_mask(store, &format!("masks.{}_r", p(wname)), d_out, d_in)?;
+                let mask_rc = read_mask(store, &format!("masks.{}_rc", p(wname)), d_out, d_in)?;
+                build_linear(&p(wname), &p(bname), w, bias, mask_r, mask_rc, scheme,
+                             Some(store))
+            };
+            let qkv = linear("wqkv", "bqkv")?;
+            let proj = linear("wproj", "bproj")?;
+            let up = linear("wup", "bup")?;
+            let down = linear("wdown", "bdown")?;
+            blocks.push(TrainBlock { ln1, ln2, qkv, proj, up, down });
+        }
+        let opt_step = if store.contains("opt.step") {
+            store.read_scalar_f32("opt.step")?
+        } else {
+            0.0
+        };
+        let lora = ingest_lora(&c, store)?;
+        let mut me = Self {
+            cfg: c,
+            train: manifest.train.clone(),
+            policy,
+            tok_emb,
+            pos_emb,
+            lnf,
+            blocks,
+            lora,
+            opt_step,
+            tape: Tape::default(),
+            ws: TrainWs::default(),
+            fwd_tokens: Vec::new(),
+            inp_buf: Vec::new(),
+        };
+        me.tape.layers = (0..me.cfg.n_layer).map(|_| LayerTape::default()).collect();
+        Ok(me)
+    }
+
+    /// The policy every kernel call runs under.
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
+    }
+
+    /// Re-point the kernel-engine policy (results are bit-identical at
+    /// any thread count, so this never changes the training trajectory).
+    pub fn set_policy(&mut self, policy: ParallelPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn has_lora(&self) -> bool {
+        self.lora.is_some()
+    }
+
+    pub fn opt_step(&self) -> f32 {
+        self.opt_step
+    }
+
+    /// Materialize the lazy adapters (python `lora_init`): down ~
+    /// N(0, 0.02²), up = 0 — an exact no-op at activation — with a fresh
+    /// optimizer chain (own step counter, as python's separate
+    /// `adamw_update` call implies).
+    pub fn lora_init(&mut self, seed: u64) -> crate::Result<()> {
+        crate::ensure!(self.cfg.adapter_rank > 0, "adapter_rank is 0: no adapters to init");
+        let r = self.cfg.adapter_rank;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut pairs = Vec::with_capacity(self.cfg.n_layer * SPARSE_WEIGHTS.len());
+        for layer in 0..self.cfg.n_layer {
+            for wname in SPARSE_WEIGHTS {
+                let (d_out, d_in) = weight_dims(&self.cfg, wname);
+                let wsuffix = format!("blocks.{layer}.{wname}");
+                pairs.push(LoraPair {
+                    down: MatParam::new(&format!("{wsuffix}_down"),
+                                        Matrix::randn(r, d_in, 0.02, &mut rng)),
+                    up: MatParam::new(&format!("{wsuffix}_up"), Matrix::zeros(d_out, r)),
+                    t: Matrix::zeros(0, 0),
+                    wsuffix,
+                });
+            }
+        }
+        self.lora = Some(LoraState { pairs, step: 0.0 });
+        Ok(())
+    }
+
+    // ---- forward / loss ------------------------------------------------
+
+    /// Full-position logits for `k` sequences of `s` tokens (`(k·s, V)`),
+    /// retained on the tape.  `s` must equal the config's `seq_len` (the
+    /// AOT executables are shaped that way too).
+    pub fn forward_logits(&mut self, tokens: &[i32], k: usize,
+                          with_lora: bool) -> crate::Result<&Matrix> {
+        self.forward_tape(tokens, k, with_lora)?;
+        Ok(&self.tape.logits)
+    }
+
+    /// Validate a full `(B, S+1)` train/eval batch — the target column
+    /// included, which `forward_tape` never sees but `loss_and_dlogits`
+    /// indexes with.
+    fn check_train_batch(&self, tokens: &[i32]) -> crate::Result<()> {
+        let (b, s1, vocab) = (self.cfg.batch_size, self.cfg.seq_len + 1, self.cfg.vocab_size);
+        crate::ensure!(
+            tokens.len() == b * s1,
+            "expected {b}x{s1} tokens, got {}",
+            tokens.len()
+        );
+        for &t in tokens {
+            crate::ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} outside vocab 0..{vocab}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Mean causal-LM cross-entropy over a `(B, S+1)` token batch
+    /// (`eval_step` semantics: no state change).
+    pub fn eval_loss(&mut self, tokens: &[i32], with_lora: bool) -> crate::Result<f32> {
+        let (b, s1) = (self.cfg.batch_size, self.cfg.seq_len + 1);
+        self.check_train_batch(tokens)?;
+        let inp = self.stage_inputs(tokens, b, s1);
+        let fwd = self.forward_tape(&inp, b, with_lora);
+        self.inp_buf = inp;
+        fwd?;
+        Ok(self.loss_and_dlogits(tokens, b, false))
+    }
+
+    /// Forward + loss + full backward: fills every gradient buffer and
+    /// returns the loss.  Public so the finite-difference suite can probe
+    /// analytic gradients directly.
+    pub fn loss_and_grad(&mut self, tokens: &[i32], with_lora: bool) -> crate::Result<f32> {
+        let (b, s1) = (self.cfg.batch_size, self.cfg.seq_len + 1);
+        self.check_train_batch(tokens)?;
+        crate::ensure!(!with_lora || self.lora.is_some(), "adapters not initialized");
+        let inp = self.stage_inputs(tokens, b, s1);
+        let fwd = self.forward_tape(&inp, b, with_lora);
+        self.inp_buf = inp;
+        fwd?;
+        let loss = self.loss_and_dlogits(tokens, b, true);
+        self.backward(b, with_lora);
+        Ok(loss)
+    }
+
+    /// One sparse-phase step (`train_step`): Eq. 4–6 fwd/bwd + AdamW.
+    pub fn train_step(&mut self, tokens: &[i32]) -> crate::Result<f32> {
+        let loss = self.loss_and_grad(tokens, false)?;
+        self.adam_step_params();
+        Ok(loss)
+    }
+
+    /// One lazy-phase step (`train_step_lora`): base weights AND adapters
+    /// train, each under its own global-norm clip + AdamW chain.
+    pub fn train_step_lora(&mut self, tokens: &[i32]) -> crate::Result<f32> {
+        crate::ensure!(self.lora.is_some(), "train_step_lora before lora_init");
+        let loss = self.loss_and_grad(tokens, true)?;
+        self.adam_step_params();
+        self.adam_step_lora();
+        Ok(loss)
+    }
+
+    /// Strip the shifted targets off a `(B, S+1)` batch into the reusable
+    /// staging buffer (taken out of `self` so `forward_tape` can borrow).
+    fn stage_inputs(&mut self, tokens: &[i32], b: usize, s1: usize) -> Vec<i32> {
+        let s = s1 - 1;
+        let mut inp = std::mem::take(&mut self.inp_buf);
+        inp.clear();
+        inp.reserve(b * s);
+        for row in 0..b {
+            inp.extend_from_slice(&tokens[row * s1..row * s1 + s]);
+        }
+        inp
+    }
+
+    /// Shared forward with activation taping: `k` sequences × `seq_len`
+    /// tokens, full-position logits into `tape.logits`.
+    fn forward_tape(&mut self, tokens: &[i32], k: usize, with_lora: bool) -> crate::Result<()> {
+        let (d, s, vocab) = (self.cfg.d_model, self.cfg.seq_len, self.cfg.vocab_size);
+        crate::ensure!(k > 0, "empty batch");
+        crate::ensure!(
+            tokens.len() == k * s,
+            "expected {k}x{s} tokens, got {}",
+            tokens.len()
+        );
+        crate::ensure!(!with_lora || self.lora.is_some(), "adapters not initialized");
+        for &t in tokens {
+            crate::ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} outside vocab 0..{vocab}"
+            );
+        }
+        let rows = k * s;
+        let n_head = self.cfg.n_head;
+        let policy = self.policy;
+        self.fwd_tokens.clear();
+        self.fwd_tokens.extend_from_slice(tokens);
+        let Self { tape, ws, blocks, lora, tok_emb, pos_emb, lnf, .. } = self;
+        let mut lora_pairs = lora.as_mut().filter(|_| with_lora).map(|l| &mut l.pairs);
+
+        // Embedding.
+        {
+            let x0 = &mut tape.layers[0].x_in;
+            ensure_out(x0, rows, d);
+            for bi in 0..k {
+                for ti in 0..s {
+                    let tok = tokens[bi * s + ti] as usize;
+                    let dst = x0.row_mut(bi * s + ti);
+                    let te = tok_emb.w.row(tok);
+                    let pe = pos_emb.w.row(ti);
+                    for (o, (a, b)) in dst.iter_mut().zip(te.iter().zip(pe)) {
+                        *o = a + b;
+                    }
+                }
+            }
+        }
+
+        for li in 0..blocks.len() {
+            // Split the tape so layer li's fields and layer li+1's x_in
+            // are simultaneously borrowable.
+            let (cur, rest) = tape.layers[li..].split_first_mut().expect("layer tape");
+            let blk = &mut blocks[li];
+            // Attention sub-block.
+            layer_norm_into(&cur.x_in, &blk.ln1.g.w, &blk.ln1.b.w, &mut cur.h1);
+            {
+                let lp = lora_pairs_get_mut(&mut lora_pairs, li, 0);
+                linear_forward(&mut blk.qkv, lp, &cur.h1, &mut cur.qkv, &policy);
+            }
+            causal_attention_into(&cur.qkv, k, s, d, n_head, &mut ws.scores, &mut cur.att);
+            {
+                let lp = lora_pairs_get_mut(&mut lora_pairs, li, 1);
+                linear_forward(&mut blk.proj, lp, &cur.att, &mut ws.fwd_branch, &policy);
+            }
+            ensure_out(&mut cur.x_mid, rows, d);
+            cur.x_mid.data.copy_from_slice(&cur.x_in.data);
+            add_inplace(&mut cur.x_mid, &ws.fwd_branch);
+            // MLP sub-block.
+            layer_norm_into(&cur.x_mid, &blk.ln2.g.w, &blk.ln2.b.w, &mut cur.h2);
+            {
+                let lp = lora_pairs_get_mut(&mut lora_pairs, li, 2);
+                linear_forward(&mut blk.up, lp, &cur.h2, &mut cur.up, &policy);
+            }
+            ensure_out(&mut cur.gel, rows, cur.up.cols);
+            for (o, x) in cur.gel.data.iter_mut().zip(&cur.up.data) {
+                *o = gelu_tanh(*x);
+            }
+            {
+                let lp = lora_pairs_get_mut(&mut lora_pairs, li, 3);
+                linear_forward(&mut blk.down, lp, &cur.gel, &mut ws.fwd_branch, &policy);
+            }
+            let x_next: &mut Matrix = match rest.first_mut() {
+                Some(next) => &mut next.x_in,
+                None => &mut tape.x_out,
+            };
+            ensure_out(x_next, rows, d);
+            x_next.data.copy_from_slice(&cur.x_mid.data);
+            add_inplace(x_next, &ws.fwd_branch);
+        }
+
+        layer_norm_into(&tape.x_out, &lnf.g.w, &lnf.b.w, &mut tape.hf);
+        ensure_out(&mut tape.logits, rows, vocab);
+        gemm_nt_into(&tape.hf, &tok_emb.w, &mut tape.logits, &policy);
+        Ok(())
+    }
+
+    /// Mean NLL over all `B·S` positions; when `fill_dlogits`, also write
+    /// `(softmax − onehot)/(B·S)` into `ws.dlogits`.
+    fn loss_and_dlogits(&mut self, tokens: &[i32], b: usize, fill_dlogits: bool) -> f32 {
+        let (s, vocab) = (self.cfg.seq_len, self.cfg.vocab_size);
+        let s1 = s + 1;
+        let rows = b * s;
+        let inv_rows = 1.0 / rows as f32;
+        if fill_dlogits {
+            ensure_out(&mut self.ws.dlogits, rows, vocab);
+        }
+        let mut loss = 0.0f64;
+        for bi in 0..b {
+            for ti in 0..s {
+                let r = bi * s + ti;
+                let tgt = tokens[bi * s1 + ti + 1] as usize;
+                let lrow = self.tape.logits.row(r);
+                let mut maxv = f32::NEG_INFINITY;
+                for &v in lrow {
+                    if v > maxv {
+                        maxv = v;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for &v in lrow {
+                    denom += (v - maxv).exp();
+                }
+                loss -= ((lrow[tgt] - maxv) as f64) - (denom as f64).ln();
+                if fill_dlogits {
+                    let inv = inv_rows / denom;
+                    let drow = self.ws.dlogits.row_mut(r);
+                    for (o, &v) in drow.iter_mut().zip(lrow) {
+                        *o = (v - maxv).exp() * inv;
+                    }
+                    drow[tgt] -= inv_rows;
+                }
+            }
+        }
+        (loss / rows as f64) as f32
+    }
+
+    /// Reverse pass over the tape: fills every parameter gradient.
+    fn backward(&mut self, k: usize, with_lora: bool) {
+        let (d, s, n_head) = (self.cfg.d_model, self.cfg.seq_len, self.cfg.n_head);
+        let rows = k * s;
+        let policy = self.policy;
+        let Self { tape, ws, blocks, lora, tok_emb, pos_emb, lnf, fwd_tokens, .. } = self;
+        let mut lora_pairs = lora.as_mut().filter(|_| with_lora).map(|l| &mut l.pairs);
+
+        // Tied head: ∇tok_emb ← dlogitsᵀ·hf (overwrite), scatter added later.
+        gemm_tn_into(&ws.dlogits, &tape.hf, &mut tok_emb.g, &policy);
+        // d_hf = dlogits · tok_emb.
+        ensure_out(&mut ws.d_hf, rows, d);
+        gemm_into(&ws.dlogits, &tok_emb.w, &mut ws.d_hf, &policy);
+        // Final layer norm.
+        ln_backward(&tape.x_out, &ws.d_hf, &lnf.g.w, &mut lnf.g.g, &mut lnf.b.g,
+                    &mut ws.d_res);
+
+        for li in (0..blocks.len()).rev() {
+            let cur = &tape.layers[li];
+            let blk = &mut blocks[li];
+            // MLP branch: d_res holds dx_out = dx_mid (residual) and the
+            // branch gradient feeding `down`.
+            {
+                let lp = lora_pairs_get_mut(&mut lora_pairs, li, 3);
+                linear_backward(&mut blk.down, lp, &cur.gel, &ws.d_res, &mut ws.d_gel,
+                                &mut ws.d_t, &mut ws.gw_pool, &mut ws.lin_pool, &policy);
+            }
+            ensure_out(&mut ws.d_up, rows, cur.up.cols);
+            for (o, (g, x)) in ws.d_up.data.iter_mut().zip(ws.d_gel.data.iter().zip(&cur.up.data))
+            {
+                *o = g * gelu_tanh_grad(*x);
+            }
+            {
+                let lp = lora_pairs_get_mut(&mut lora_pairs, li, 2);
+                linear_backward(&mut blk.up, lp, &cur.h2, &ws.d_up, &mut ws.d_h2,
+                                &mut ws.d_t, &mut ws.gw_pool, &mut ws.lin_pool, &policy);
+            }
+            ln_backward(&cur.x_mid, &ws.d_h2, &blk.ln2.g.w, &mut blk.ln2.g.g,
+                        &mut blk.ln2.b.g, &mut ws.d_branch);
+            add_inplace(&mut ws.d_res, &ws.d_branch);
+            // Attention branch: d_res now holds dx_mid.
+            {
+                let lp = lora_pairs_get_mut(&mut lora_pairs, li, 1);
+                linear_backward(&mut blk.proj, lp, &cur.att, &ws.d_res, &mut ws.d_att,
+                                &mut ws.d_t, &mut ws.gw_pool, &mut ws.lin_pool, &policy);
+            }
+            attention_backward(&cur.qkv, &ws.d_att, k, s, d, n_head, &mut ws.scores,
+                               &mut ws.att_dw, &mut ws.att_dq, &mut ws.d_qkv);
+            {
+                let lp = lora_pairs_get_mut(&mut lora_pairs, li, 0);
+                linear_backward(&mut blk.qkv, lp, &cur.h1, &ws.d_qkv, &mut ws.d_h1,
+                                &mut ws.d_t, &mut ws.gw_pool, &mut ws.lin_pool, &policy);
+            }
+            ln_backward(&cur.x_in, &ws.d_h1, &blk.ln1.g.w, &mut blk.ln1.g.g,
+                        &mut blk.ln1.b.g, &mut ws.d_branch);
+            add_inplace(&mut ws.d_res, &ws.d_branch);
+        }
+
+        // Embedding scatter (tok_emb.g already holds the tied-head term;
+        // `x = tok_emb[tok] + pos_emb[t]` routes d_res to both tables).
+        pos_emb.g.data.fill(0.0);
+        for bi in 0..k {
+            for ti in 0..s {
+                let r = bi * s + ti;
+                let src = ws.d_res.row(r);
+                let tok = fwd_tokens[r] as usize;
+                for (o, v) in tok_emb.g.row_mut(tok).iter_mut().zip(src) {
+                    *o += *v;
+                }
+                for (o, v) in pos_emb.g.row_mut(ti).iter_mut().zip(src) {
+                    *o += *v;
+                }
+            }
+        }
+    }
+
+    // ---- optimizer -----------------------------------------------------
+
+    /// Linear warmup → cosine decay (python `lr_schedule`), bias
+    /// corrections included.
+    fn schedule(train: &TrainParams, step: f32) -> (f32, f32, f32) {
+        let warm = (step / (train.warmup_steps.max(1) as f32)).min(1.0);
+        let denom = (train.total_steps as f32 - train.warmup_steps as f32).max(1.0);
+        let prog = ((step - train.warmup_steps as f32) / denom).clamp(0.0, 1.0);
+        let cos = 0.55 + 0.45 * (std::f32::consts::PI * prog).cos();
+        let lr = train.lr as f32 * warm * cos;
+        let bc1 = 1.0 - (train.beta1 as f32).powf(step);
+        let bc2 = 1.0 - (train.beta2 as f32).powf(step);
+        (lr, bc1, bc2)
+    }
+
+    /// AdamW over the base parameters (masked updates for packed weights).
+    fn adam_step_params(&mut self) {
+        let mut sq = 0.0f64;
+        self.for_each_param_grad(|g| sq += g.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>());
+        let gnorm = (sq + 1e-12).sqrt() as f32;
+        let clip = (self.train.grad_clip as f32 / gnorm).min(1.0);
+        self.opt_step += 1.0;
+        let step = self.opt_step;
+        let (lr, bc1, bc2) = Self::schedule(&self.train, step);
+        let (b1, b2) = (self.train.beta1 as f32, self.train.beta2 as f32);
+        let wd = self.train.weight_decay as f32;
+
+        let upd_dense = |w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], decay: f32| {
+            for i in 0..w.len() {
+                let gi = clip * g[i];
+                m[i] = b1 * m[i] + (1.0 - b1) * gi;
+                v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+                let upd = lr * ((m[i] / bc1) / ((v[i] / bc2).sqrt() + ADAM_EPS) + decay * w[i]);
+                w[i] -= upd;
+            }
+        };
+
+        upd_dense(&mut self.tok_emb.w.data, &self.tok_emb.g.data, &mut self.tok_emb.m.data,
+                  &mut self.tok_emb.v.data, decay_of("tok_emb", wd));
+        upd_dense(&mut self.pos_emb.w.data, &self.pos_emb.g.data, &mut self.pos_emb.m.data,
+                  &mut self.pos_emb.v.data, 0.0);
+        for np in [&mut self.lnf] {
+            upd_dense(&mut np.g.w, &np.g.g, &mut np.g.m, &mut np.g.v, 0.0);
+            upd_dense(&mut np.b.w, &np.b.g, &mut np.b.m, &mut np.b.v, 0.0);
+        }
+        for blk in &mut self.blocks {
+            for np in [&mut blk.ln1, &mut blk.ln2] {
+                upd_dense(&mut np.g.w, &np.g.g, &mut np.g.m, &mut np.g.v, 0.0);
+                upd_dense(&mut np.b.w, &np.b.g, &mut np.b.m, &mut np.b.v, 0.0);
+            }
+            for lin in [&mut blk.qkv, &mut blk.proj, &mut blk.up, &mut blk.down] {
+                let decay = decay_of(&lin.wsuffix, wd);
+                match &mut lin.ops {
+                    LinOps::Sparse(ops) => {
+                        // Compressed-space AdamW: Algorithm 1 lines 15–18 —
+                        // the (1/γ)·∇W + α·W combine and the masked update
+                        // in one pass over the packed support.
+                        for i in 0..ops.w.values.len() {
+                            let gi = clip * ops.gw.values[i];
+                            ops.m[i] = b1 * ops.m[i] + (1.0 - b1) * gi;
+                            ops.v[i] = b2 * ops.v[i] + (1.0 - b2) * gi * gi;
+                            let upd = lr
+                                * ((ops.m[i] / bc1) / ((ops.v[i] / bc2).sqrt() + ADAM_EPS)
+                                    + decay * ops.w.values[i]);
+                            ops.w.values[i] -= upd;
+                        }
+                        ops.refresh_wt();
+                    }
+                    LinOps::Dense(ops) => {
+                        // python masks update AND moments by mask_r.
+                        match &ops.mask_r {
+                            Some(mask) => {
+                                for i in 0..ops.w.data.len() {
+                                    if !mask.keep[i] {
+                                        ops.m.data[i] = 0.0;
+                                        ops.v.data[i] = 0.0;
+                                        continue;
+                                    }
+                                    let gi = clip * ops.gw.data[i];
+                                    ops.m.data[i] = b1 * ops.m.data[i] + (1.0 - b1) * gi;
+                                    ops.v.data[i] = b2 * ops.v.data[i] + (1.0 - b2) * gi * gi;
+                                    let upd = lr
+                                        * ((ops.m.data[i] / bc1)
+                                            / ((ops.v.data[i] / bc2).sqrt() + ADAM_EPS)
+                                            + decay * ops.w.data[i]);
+                                    ops.w.data[i] -= upd;
+                                }
+                            }
+                            None => upd_dense(&mut ops.w.data, &ops.gw.data, &mut ops.m.data,
+                                              &mut ops.v.data, decay),
+                        }
+                        ops.refresh_masked();
+                    }
+                }
+                upd_dense(&mut lin.bias.w, &lin.bias.g, &mut lin.bias.m, &mut lin.bias.v, 0.0);
+            }
+        }
+    }
+
+    /// AdamW over the adapters (their own clip + step counter).
+    fn adam_step_lora(&mut self) {
+        let Some(lora) = self.lora.as_mut() else {
+            return;
+        };
+        let mut sq = 0.0f64;
+        for pair in &lora.pairs {
+            for g in [&pair.down.g, &pair.up.g] {
+                sq += g.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+            }
+        }
+        let gnorm = (sq + 1e-12).sqrt() as f32;
+        let clip = (self.train.grad_clip as f32 / gnorm).min(1.0);
+        lora.step += 1.0;
+        let (lr, bc1, bc2) = Self::schedule(&self.train, lora.step);
+        let (b1, b2) = (self.train.beta1 as f32, self.train.beta2 as f32);
+        let wd = self.train.weight_decay as f32;
+        for pair in &mut lora.pairs {
+            for mp in [&mut pair.down, &mut pair.up] {
+                let decay = decay_of(&mp.suffix, wd);
+                for i in 0..mp.w.data.len() {
+                    let gi = clip * mp.g.data[i];
+                    mp.m.data[i] = b1 * mp.m.data[i] + (1.0 - b1) * gi;
+                    mp.v.data[i] = b2 * mp.v.data[i] + (1.0 - b2) * gi * gi;
+                    let upd = lr
+                        * ((mp.m.data[i] / bc1) / ((mp.v.data[i] / bc2).sqrt() + ADAM_EPS)
+                            + decay * mp.w.data[i]);
+                    mp.w.data[i] -= upd;
+                }
+            }
+        }
+    }
+
+    /// Visit every base-parameter gradient slice (clip-norm accumulation).
+    fn for_each_param_grad(&self, mut f: impl FnMut(&[f32])) {
+        f(&self.tok_emb.g.data);
+        f(&self.pos_emb.g.data);
+        f(&self.lnf.g.g);
+        f(&self.lnf.b.g);
+        for blk in &self.blocks {
+            for np in [&blk.ln1, &blk.ln2] {
+                f(&np.g.g);
+                f(&np.b.g);
+            }
+            for lin in [&blk.qkv, &blk.proj, &blk.up, &blk.down] {
+                match &lin.ops {
+                    LinOps::Sparse(ops) => f(&ops.gw.values),
+                    LinOps::Dense(ops) => f(&ops.gw.data),
+                }
+                f(&lin.bias.g);
+            }
+        }
+    }
+}
+
+impl HostTrainModel {
+    // ---- store export / inspection -------------------------------------
+
+    /// Write every `params.*` plane (dense shapes; packed weights are
+    /// decompressed through the export scratch).
+    pub fn export_params(&mut self, store: &mut Store) -> crate::Result<()> {
+        let put_mat = |store: &mut Store, suffix: &str, m: &Matrix| {
+            store.put_f32(&format!("params.{suffix}"), &[m.rows, m.cols], &m.data)
+        };
+        put_mat(store, &self.tok_emb.suffix, &self.tok_emb.w)?;
+        put_mat(store, &self.pos_emb.suffix, &self.pos_emb.w)?;
+        for vp in [&self.lnf.g, &self.lnf.b] {
+            store.put_f32(&format!("params.{}", vp.suffix), &[vp.w.len()], &vp.w)?;
+        }
+        // Split borrows: the export scratch lives in ws.
+        let Self { ws, blocks, .. } = self;
+        for blk in blocks.iter() {
+            for np in [&blk.ln1, &blk.ln2] {
+                for vp in [&np.g, &np.b] {
+                    store.put_f32(&format!("params.{}", vp.suffix), &[vp.w.len()], &vp.w)?;
+                }
+            }
+            for lin in [&blk.qkv, &blk.proj, &blk.up, &blk.down] {
+                match &lin.ops {
+                    LinOps::Sparse(ops) => {
+                        ops.w.decompress_into(&mut ws.export);
+                        store.put_f32(&format!("params.{}", lin.wsuffix),
+                                      &[lin.d_out, lin.d_in], &ws.export.data)?;
+                    }
+                    LinOps::Dense(ops) => {
+                        store.put_f32(&format!("params.{}", lin.wsuffix),
+                                      &[lin.d_out, lin.d_in], &ops.w.data)?;
+                    }
+                }
+                store.put_f32(&format!("params.{}", lin.bias.suffix),
+                              &[lin.bias.w.len()], &lin.bias.w)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write every `opt.m.*` / `opt.v.*` plane plus `opt.step` (packed
+    /// moments scatter to their dense shapes).
+    pub fn export_opt(&mut self, store: &mut Store) -> crate::Result<()> {
+        store.put_f32("opt.step", &[], &[self.opt_step])?;
+        let put_mat = |store: &mut Store, plane: &str, suffix: &str, m: &Matrix| {
+            store.put_f32(&format!("opt.{plane}.{suffix}"), &[m.rows, m.cols], &m.data)
+        };
+        for mp in [&self.tok_emb, &self.pos_emb] {
+            put_mat(store, "m", &mp.suffix, &mp.m)?;
+            put_mat(store, "v", &mp.suffix, &mp.v)?;
+        }
+        let put_vec = |store: &mut Store, vp: &VecParam| -> crate::Result<()> {
+            store.put_f32(&format!("opt.m.{}", vp.suffix), &[vp.m.len()], &vp.m)?;
+            store.put_f32(&format!("opt.v.{}", vp.suffix), &[vp.v.len()], &vp.v)?;
+            Ok(())
+        };
+        put_vec(store, &self.lnf.g)?;
+        put_vec(store, &self.lnf.b)?;
+        let Self { ws, blocks, .. } = self;
+        for blk in blocks.iter() {
+            for np in [&blk.ln1, &blk.ln2] {
+                put_vec(store, &np.g)?;
+                put_vec(store, &np.b)?;
+            }
+            for lin in [&blk.qkv, &blk.proj, &blk.up, &blk.down] {
+                match &lin.ops {
+                    LinOps::Sparse(ops) => {
+                        for (plane, vals) in [("m", &ops.m), ("v", &ops.v)] {
+                            ops.scatter(vals, &mut ws.export);
+                            store.put_f32(&format!("opt.{plane}.{}", lin.wsuffix),
+                                          &[lin.d_out, lin.d_in], &ws.export.data)?;
+                        }
+                    }
+                    LinOps::Dense(ops) => {
+                        put_mat(store, "m", &lin.wsuffix, &ops.m)?;
+                        put_mat(store, "v", &lin.wsuffix, &ops.v)?;
+                    }
+                }
+                put_vec(store, &lin.bias)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write every `masks.*` plane.  Packed routes re-derive the masks
+    /// from the pattern planes (no dense masks are retained); dense
+    /// routes write their stored masks (ones when trivial).
+    pub fn export_masks(&mut self, store: &mut Store) -> crate::Result<()> {
+        let Self { ws, blocks, .. } = self;
+        for blk in blocks.iter() {
+            for lin in [&blk.qkv, &blk.proj, &blk.up, &blk.down] {
+                for (kind, rc) in [("_r", false), ("_rc", true)] {
+                    let name = format!("masks.{}{kind}", lin.wsuffix);
+                    match &lin.ops {
+                        LinOps::Sparse(ops) => {
+                            if rc {
+                                ops.mask_rc_dense(&mut ws.export);
+                            } else {
+                                ops.mask_r_dense(&mut ws.export);
+                            }
+                            store.put_f32(&name, &[lin.d_out, lin.d_in], &ws.export.data)?;
+                        }
+                        LinOps::Dense(ops) => {
+                            let mask = if rc { &ops.mask_rc } else { &ops.mask_r };
+                            ensure_out(&mut ws.export, lin.d_out, lin.d_in);
+                            match mask {
+                                Some(m) => {
+                                    for (o, k) in ws.export.data.iter_mut().zip(&m.keep) {
+                                        *o = if *k { 1.0 } else { 0.0 };
+                                    }
+                                }
+                                None => ws.export.data.fill(1.0),
+                            }
+                            store.put_f32(&name, &[lin.d_out, lin.d_in], &ws.export.data)?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write every `lora.*` / `lora_opt.*` plane (no-op when adapters are
+    /// not initialized).
+    pub fn export_lora(&mut self, store: &mut Store) -> crate::Result<()> {
+        let Some(lora) = &self.lora else {
+            return Ok(());
+        };
+        store.put_f32("lora_opt.step", &[], &[lora.step])?;
+        for pair in &lora.pairs {
+            for mp in [&pair.down, &pair.up] {
+                store.put_f32(&format!("lora.{}", mp.suffix),
+                              &[mp.w.rows, mp.w.cols], &mp.w.data)?;
+                store.put_f32(&format!("lora_opt.m.{}", mp.suffix),
+                              &[mp.m.rows, mp.m.cols], &mp.m.data)?;
+                store.put_f32(&format!("lora_opt.v.{}", mp.suffix),
+                              &[mp.v.rows, mp.v.cols], &mp.v.data)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense-shaped gradient of one parameter by store suffix (packed
+    /// gradients scatter; `lora.`-prefixed suffixes address adapters) —
+    /// the finite-difference suite's probe point.  `None` for unknown
+    /// names.
+    pub fn grad_dense(&self, suffix: &str) -> Option<Matrix> {
+        if let Some(rest) = suffix.strip_prefix("lora.") {
+            let lora = self.lora.as_ref()?;
+            for pair in &lora.pairs {
+                for mp in [&pair.down, &pair.up] {
+                    if mp.suffix == rest {
+                        return Some(mp.g.clone());
+                    }
+                }
+            }
+            return None;
+        }
+        match suffix {
+            "tok_emb" => return Some(self.tok_emb.g.clone()),
+            "pos_emb" => return Some(self.pos_emb.g.clone()),
+            "lnf_g" => return Some(vec_as_row(&self.lnf.g.g)),
+            "lnf_b" => return Some(vec_as_row(&self.lnf.b.g)),
+            _ => {}
+        }
+        for blk in &self.blocks {
+            for np in [&blk.ln1, &blk.ln2] {
+                for vp in [&np.g, &np.b] {
+                    if vp.suffix == suffix {
+                        return Some(vec_as_row(&vp.g));
+                    }
+                }
+            }
+            for lin in [&blk.qkv, &blk.proj, &blk.up, &blk.down] {
+                if lin.bias.suffix == suffix {
+                    return Some(vec_as_row(&lin.bias.g));
+                }
+                if lin.wsuffix == suffix {
+                    return Some(match &lin.ops {
+                        LinOps::Sparse(ops) => {
+                            let mut out = Matrix::zeros(0, 0);
+                            ops.scatter(&ops.gw.values, &mut out);
+                            out
+                        }
+                        LinOps::Dense(ops) => ops.gw.clone(),
+                    });
+                }
+            }
+        }
+        None
+    }
+
+    /// Live training-state byte accounting (module docs; the measured
+    /// side of `memmodel::host_train_bits_per_elem`).
+    pub fn state_bytes(&self) -> TrainStateBytes {
+        let mut pruned = 0usize;
+        let mut pruned_dense = 0usize;
+        let mut rest = 0usize;
+        let vec_state = |v: &VecParam| (v.w.len() + v.g.len() + v.m.len() + v.v.len()) * 4;
+        let mat_state = |m: &MatParam| {
+            (m.w.data.len() + m.g.data.len() + m.m.data.len() + m.v.data.len()) * 4
+        };
+        rest += mat_state(&self.tok_emb) + mat_state(&self.pos_emb);
+        rest += vec_state(&self.lnf.g) + vec_state(&self.lnf.b);
+        for blk in &self.blocks {
+            for np in [&blk.ln1, &blk.ln2] {
+                rest += vec_state(&np.g) + vec_state(&np.b);
+            }
+            for lin in [&blk.qkv, &blk.proj, &blk.up, &blk.down] {
+                rest += vec_state(&lin.bias);
+                match &lin.ops {
+                    LinOps::Sparse(ops) => {
+                        let plane = |c: &CompressedNm| c.values.len() * 4 + c.meta.len();
+                        pruned += plane(&ops.w) + plane(&ops.w_t) + plane(&ops.gw);
+                        pruned += ops.wt_pad.len() * 8;
+                        pruned += (ops.m.len() + ops.v.len()) * 4;
+                        pruned_dense += lin.d_out * lin.d_in * 4 * 4;
+                    }
+                    LinOps::Dense(ops) => {
+                        rest += (ops.w.data.len()
+                            + ops.gw.data.len()
+                            + ops.m.data.len()
+                            + ops.v.data.len())
+                            * 4;
+                        rest += (ops.wm_r.data.len() + ops.wm_rc.data.len()) * 4;
+                    }
+                }
+            }
+        }
+        if let Some(lora) = &self.lora {
+            for pair in &lora.pairs {
+                rest += mat_state(&pair.down) + mat_state(&pair.up);
+            }
+        }
+        TrainStateBytes {
+            pruned_bytes: pruned,
+            pruned_dense_bytes: pruned_dense,
+            dense_rest_bytes: rest,
+            workspace_bytes: self.ws.gw_pool.bytes() + self.ws.lin_pool.bytes(),
+        }
+    }
+}
+
+fn vec_as_row(v: &[f32]) -> Matrix {
+    Matrix::from_vec(1, v.len(), v.to_vec())
+}
+
+/// Mutable access to the adapter pair of `(layer, SPARSE_WEIGHTS index)`
+/// when adapters are active (`None` otherwise).
+fn lora_pairs_get_mut<'a>(pairs: &'a mut Option<&mut Vec<LoraPair>>, li: usize,
+                          wi: usize) -> Option<&'a mut LoraPair> {
+    pairs.as_mut().map(|p| &mut p[li * SPARSE_WEIGHTS.len() + wi])
+}
+
+fn norm_param(gsuffix: &str, bsuffix: &str, g: Vec<f32>, b: Vec<f32>) -> NormParam {
+    NormParam { g: VecParam::new(gsuffix, g), b: VecParam::new(bsuffix, b) }
+}
+
+fn norm_param_from_store(store: &Store, gsuffix: &str, bsuffix: &str, g: Vec<f32>,
+                         b: Vec<f32>, expect: usize) -> crate::Result<NormParam> {
+    crate::ensure!(
+        g.len() == expect && b.len() == expect,
+        "params.{gsuffix}/{bsuffix}: length {}/{} != {expect}",
+        g.len(), b.len()
+    );
+    let mut np = norm_param(gsuffix, bsuffix, g, b);
+    ingest_moments_vec(store, &mut np.g)?;
+    ingest_moments_vec(store, &mut np.b)?;
+    Ok(np)
+}
+
+fn mat_param_from_store(store: &Store, suffix: &str, rows: usize,
+                        cols: usize) -> crate::Result<MatParam> {
+    let w = store.read_matrix(&format!("params.{suffix}"))?;
+    crate::ensure!(
+        (w.rows, w.cols) == (rows, cols),
+        "params.{suffix} is {}x{}, expected {rows}x{cols}",
+        w.rows, w.cols
+    );
+    let mut mp = MatParam::new(suffix, w);
+    ingest_moments_mat(store, &mut mp)?;
+    Ok(mp)
+}
+
+fn ingest_moments_vec(store: &Store, p: &mut VecParam) -> crate::Result<()> {
+    for (plane, dst_is_m) in [("m", true), ("v", false)] {
+        let name = format!("opt.{plane}.{}", p.suffix);
+        if store.contains(&name) {
+            let v = store.read_f32(&name)?;
+            crate::ensure!(v.len() == p.w.len(), "{name} length mismatch");
+            if dst_is_m {
+                p.m = v;
+            } else {
+                p.v = v;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn ingest_moments_mat(store: &Store, p: &mut MatParam) -> crate::Result<()> {
+    for (plane, dst_is_m) in [("m", true), ("v", false)] {
+        let name = format!("opt.{plane}.{}", p.suffix);
+        if store.contains(&name) {
+            let v = store.read_matrix(&name)?;
+            crate::ensure!(
+                (v.rows, v.cols) == (p.w.rows, p.w.cols),
+                "{name} shape mismatch"
+            );
+            if dst_is_m {
+                p.m = v;
+            } else {
+                p.v = v;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_mask(store: &Store, name: &str, rows: usize, cols: usize)
+             -> crate::Result<Option<Mask>> {
+    if !store.contains(name) {
+        return Ok(None);
+    }
+    let mm = store.read_matrix(name)?;
+    crate::ensure!(
+        (mm.rows, mm.cols) == (rows, cols),
+        "{name} is {}x{}, weight is {rows}x{cols}",
+        mm.rows, mm.cols
+    );
+    Ok(Some(Mask { rows, cols, keep: mm.data.iter().map(|v| *v != 0.0).collect() }))
+}
+
+fn ingest_lora(c: &ModelConfig, store: &Store) -> crate::Result<Option<LoraState>> {
+    let any = store.names().iter().any(|n| n.starts_with("lora."));
+    if !any {
+        return Ok(None);
+    }
+    let r = c.adapter_rank;
+    crate::ensure!(r > 0, "store carries lora.* planes but adapter_rank is 0");
+    let mut pairs = Vec::with_capacity(c.n_layer * SPARSE_WEIGHTS.len());
+    for layer in 0..c.n_layer {
+        for wname in SPARSE_WEIGHTS {
+            let (d_out, d_in) = weight_dims(c, wname);
+            let wsuffix = format!("blocks.{layer}.{wname}");
+            let down = store.read_matrix(&format!("lora.{wsuffix}_down"))?;
+            let up = store.read_matrix(&format!("lora.{wsuffix}_up"))?;
+            crate::ensure!(
+                (down.rows, down.cols) == (r, d_in) && (up.rows, up.cols) == (d_out, r),
+                "lora factors for {wsuffix} do not fit ({}x{} / {}x{})",
+                down.rows, down.cols, up.rows, up.cols
+            );
+            let mut dp = MatParam::new(&format!("{wsuffix}_down"), down);
+            let mut upp = MatParam::new(&format!("{wsuffix}_up"), up);
+            for (plane, p) in [("lora_opt.m", 0), ("lora_opt.v", 1)] {
+                for mp in [&mut dp, &mut upp] {
+                    let name = format!("{plane}.{}", mp.suffix);
+                    if store.contains(&name) {
+                        let v = store.read_matrix(&name)?;
+                        crate::ensure!(
+                            (v.rows, v.cols) == (mp.w.rows, mp.w.cols),
+                            "{name} shape mismatch"
+                        );
+                        if p == 0 {
+                            mp.m = v;
+                        } else {
+                            mp.v = v;
+                        }
+                    }
+                }
+            }
+            pairs.push(LoraPair { down: dp, up: upp, t: Matrix::zeros(0, 0), wsuffix });
+        }
+    }
+    let step = if store.contains("lora_opt.step") {
+        store.read_scalar_f32("lora_opt.step")?
+    } else {
+        0.0
+    };
+    Ok(Some(LoraState { pairs, step }))
+}
+
+/// Assemble one block linear, choosing the packed or dense route.
+#[allow(clippy::too_many_arguments)]
+fn build_linear(wsuffix: &str, bsuffix: &str, w: Matrix, bias: Vec<f32>,
+                mask_r: Option<Mask>, mask_rc: Option<Mask>, scheme: NmScheme,
+                store: Option<&Store>) -> crate::Result<TrainLinear> {
+    let (d_out, d_in) = (w.rows, w.cols);
+    let sparse_ok = match (&mask_r, &mask_rc) {
+        (Some(mr), Some(mrc)) => {
+            d_in % scheme.m == 0
+                && d_out % scheme.m == 0
+                && mr.is_exact_row_nm(scheme)
+                && mrc.check_col_nm(scheme)
+                && subset(mrc, mr)
+        }
+        _ => false,
+    };
+    let m_name = format!("opt.m.{wsuffix}");
+    let v_name = format!("opt.v.{wsuffix}");
+    let read_moment = |name: &str| -> crate::Result<Option<Matrix>> {
+        match store {
+            Some(st) if st.contains(name) => {
+                let v = st.read_matrix(name)?;
+                crate::ensure!((v.rows, v.cols) == (d_out, d_in), "{name} shape mismatch");
+                Ok(Some(v))
+            }
+            _ => Ok(None),
+        }
+    };
+    let m_dense = read_moment(&m_name)?;
+    let v_dense = read_moment(&v_name)?;
+
+    let ops = if sparse_ok {
+        let mr = mask_r.expect("checked");
+        let mrc = mask_rc.expect("checked");
+        // Project (training state stores weights on the support).
+        let wp = mr.apply(&w);
+        let w_c = CompressedNm::compress(&wp, &mr, scheme);
+        // Transpose view for BWD-2: rows of W^{R,C}ᵀ are columns of W.
+        let wt_dense = mrc.apply(&wp).transpose();
+        let mrc_t = Mask {
+            rows: mrc.cols,
+            cols: mrc.rows,
+            keep: {
+                let mt = mrc.to_matrix().transpose();
+                mt.data.iter().map(|v| *v != 0.0).collect()
+            },
+        };
+        let w_t = CompressedNm::compress(&wt_dense, &mrc_t, scheme);
+        // Pad bitset: slots whose decoded column is not kept by mask_rc_t.
+        let kc_t = w_t.kcols();
+        let n_slots = w_t.rows * kc_t;
+        let mut wt_pad = vec![0u64; (n_slots + 63) / 64];
+        for rt in 0..w_t.rows {
+            for (k, ct) in w_t.row_indices(rt).enumerate() {
+                if !mrc_t.at(rt, ct) {
+                    let slot = rt * kc_t + k;
+                    wt_pad[slot / 64] |= 1 << (slot % 64);
+                }
+            }
+        }
+        let nnz = w_c.values.len();
+        let gather = |dense: Option<Matrix>| -> Vec<f32> {
+            match dense {
+                None => vec![0.0; nnz],
+                Some(dm) => {
+                    let kc = w_c.kcols();
+                    let mut out = vec![0.0; nnz];
+                    for r in 0..w_c.rows {
+                        for (k, c) in w_c.row_indices(r).enumerate() {
+                            out[r * kc + k] = dm.data[r * w_c.cols + c];
+                        }
+                    }
+                    out
+                }
+            }
+        };
+        let m_packed = gather(m_dense);
+        let v_packed = gather(v_dense);
+        drop(gather);
+        let gw = w_c.clone();
+        LinOps::Sparse(SparseOps {
+            scheme,
+            m: m_packed,
+            v: v_packed,
+            w: w_c,
+            w_t,
+            wt_pad,
+            gw,
+        })
+    } else {
+        // All-ones masks are trivial: drop them so the dense route runs
+        // unmasked (the dense baseline's fast path).  A present mask_r
+        // without a usable mask_rc falls back to mask_r for the backward
+        // operand — the exact gradient of the masked forward.
+        let trivial = |m: &Option<Mask>| m.as_ref().map(|x| x.keep.iter().all(|k| *k));
+        let mask_r = if trivial(&mask_r) == Some(true) { None } else { mask_r };
+        let mask_rc = if trivial(&mask_rc) == Some(true) { None } else { mask_rc };
+        let mask_rc = mask_rc.or_else(|| mask_r.clone());
+        let mut ops = DenseOps {
+            gw: Matrix::zeros(d_out, d_in),
+            m: m_dense.unwrap_or_else(|| Matrix::zeros(d_out, d_in)),
+            v: v_dense.unwrap_or_else(|| Matrix::zeros(d_out, d_in)),
+            wm_r: Matrix::zeros(0, 0),
+            wm_rc: Matrix::zeros(0, 0),
+            mask_r,
+            mask_rc,
+            w,
+        };
+        ops.refresh_masked();
+        LinOps::Dense(ops)
+    };
+    Ok(TrainLinear {
+        wsuffix: wsuffix.into(),
+        d_out,
+        d_in,
+        ops,
+        bias: VecParam::new(bsuffix, bias),
+    })
+}
+
+fn subset(inner: &Mask, outer: &Mask) -> bool {
+    inner.keep.iter().zip(&outer.keep).all(|(i, o)| !*i || *o)
+}
+
+/// `y = x·Wᵀ (+ x·Rᵀ·Lᵀ) + b` — Eq. 4 through the packed SpMM on the
+/// sparse route; the rank intermediate `T` is taped on the pair.
+fn linear_forward(lin: &mut TrainLinear, lora: Option<&mut LoraPair>, x: &Matrix,
+                  y: &mut Matrix, policy: &ParallelPolicy) {
+    ensure_out(y, x.rows, lin.d_out);
+    match &lin.ops {
+        LinOps::Sparse(ops) => spmm_rowmajor_into(x, &ops.w, y, policy),
+        LinOps::Dense(ops) => gemm_nt_into(x, ops.fwd_operand(), y, policy),
+    }
+    if let Some(pair) = lora {
+        ensure_out(&mut pair.t, x.rows, pair.down.w.rows);
+        gemm_nt_into(x, &pair.down.w, &mut pair.t, policy);
+        gemm_nt_acc_into(&pair.t, &pair.up.w, y, policy);
+    }
+    for r in 0..y.rows {
+        for (v, b) in y.row_mut(r).iter_mut().zip(&lin.bias.w) {
+            *v += *b;
+        }
+    }
+}
+
+/// The paper's custom VJP for one linear (+ plain autodiff for the
+/// adapter factors):
+/// * `∇X = ∇Y · W^{R,C}` — packed SpMM through the compressed transpose
+///   (Eq. 6; the dense route multiplies by `mask_rc ⊙ W`);
+/// * `∇W = (∇Yᵀ·X) ⊙ mask_r`, packed (Eq. 5 / line 13);
+/// * `∇b = Σ_rows ∇Y`;
+/// * adapters: `∇L = ∇Yᵀ·T`, `∇R = ∇Tᵀ·X`, `∇X += ∇T·R`.
+#[allow(clippy::too_many_arguments)]
+fn linear_backward(lin: &mut TrainLinear, lora: Option<&mut LoraPair>, x: &Matrix,
+                   dy: &Matrix, dx: &mut Matrix, d_t: &mut Matrix, gw_pool: &mut ShapePool,
+                   lin_pool: &mut ShapePool, policy: &ParallelPolicy) {
+    ensure_out(dx, dy.rows, lin.d_in);
+    // BWD-2 (Eq. 6).
+    match &mut lin.ops {
+        LinOps::Sparse(ops) => spmm_rowmajor_into(dy, &ops.w_t, dx, policy),
+        LinOps::Dense(ops) => gemm_into(dy, ops.bwd_operand(), dx, policy),
+    }
+    // BWD-1 (Eq. 5 + line 13): dense staging shared across linears.
+    let stage = gw_pool.get(lin.d_out, lin.d_in);
+    gemm_tn_into(dy, x, stage, policy);
+    match &mut lin.ops {
+        LinOps::Sparse(ops) => prune_and_compress_into(stage, &ops.w, &mut ops.gw),
+        LinOps::Dense(ops) => {
+            ops.gw.data.copy_from_slice(&stage.data);
+            if let Some(mask) = &ops.mask_r {
+                for (g, k) in ops.gw.data.iter_mut().zip(&mask.keep) {
+                    if !*k {
+                        *g = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    // Bias.
+    lin.bias.g.fill(0.0);
+    for r in 0..dy.rows {
+        for (gb, v) in lin.bias.g.iter_mut().zip(dy.row(r)) {
+            *gb += *v;
+        }
+    }
+    // Adapters (dense autodiff, matching python's matmul/matmul_add VJPs).
+    if let Some(pair) = lora {
+        ensure_out(d_t, dy.rows, pair.down.w.rows);
+        gemm_into(dy, &pair.up.w, d_t, policy);
+        gemm_tn_into(dy, &pair.t, &mut pair.up.g, policy);
+        gemm_tn_into(d_t, x, &mut pair.down.g, policy);
+        let stage = lin_pool.get(dy.rows, lin.d_in);
+        gemm_into(d_t, &pair.down.w, stage, policy);
+        add_inplace(dx, stage);
+    }
+}
+
+/// Layer-norm backward (ε = 1e-5, mirroring [`layer_norm_into`]):
+/// `dx = inv·(dŷ − mean(dŷ) − x̂·mean(dŷ⊙x̂))` with `dŷ = dy⊙g`;
+/// `∇g = Σ dy⊙x̂`, `∇b = Σ dy` (overwritten each call — every norm is
+/// used exactly once per step).
+fn ln_backward(x: &Matrix, dy: &Matrix, g: &[f32], gg: &mut [f32], gb: &mut [f32],
+               dx: &mut Matrix) {
+    ensure_out(dx, x.rows, x.cols);
+    gg.fill(0.0);
+    gb.fill(0.0);
+    let n = x.cols as f32;
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let dyr = dy.row(r);
+        let mut mu = 0.0f32;
+        for v in xr {
+            mu += *v;
+        }
+        mu /= n;
+        let mut var = 0.0f32;
+        for v in xr {
+            let dv = *v - mu;
+            var += dv * dv;
+        }
+        var /= n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let mut s1 = 0.0f32;
+        let mut s2 = 0.0f32;
+        for j in 0..xr.len() {
+            let xh = (xr[j] - mu) * inv;
+            let dxh = dyr[j] * g[j];
+            s1 += dxh;
+            s2 += dxh * xh;
+            gg[j] += dyr[j] * xh;
+            gb[j] += dyr[j];
+        }
+        s1 /= n;
+        s2 /= n;
+        let dxr = dx.row_mut(r);
+        for j in 0..xr.len() {
+            let xh = (xr[j] - mu) * inv;
+            let dxh = dyr[j] * g[j];
+            dxr[j] = inv * (dxh - s1 - xh * s2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::host::write_host_train_artifact;
+
+    fn fixture(tag: &str) -> (std::path::PathBuf, Manifest) {
+        let dir = std::env::temp_dir().join(format!("slope_host_train_unit_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        write_host_train_artifact(&dir, &format!("unit-{tag}")).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        (dir, manifest)
+    }
+
+    /// Assert the Eq.-6 operand invariant for every packed linear:
+    /// `decompress(w_t)ᵀ == mask_rc ⊙ decompress(w)` — i.e. the BWD-2
+    /// SpMM operand IS `W^{R,C}`, pads contributing exact zeros.
+    /// Returns how many packed linears were checked.
+    fn assert_wt_invariant(model: &HostTrainModel) -> usize {
+        let mut checked = 0;
+        for blk in &model.blocks {
+            for lin in [&blk.qkv, &blk.proj, &blk.up, &blk.down] {
+                let LinOps::Sparse(ops) = &lin.ops else {
+                    continue;
+                };
+                let w_dense = ops.w.decompress();
+                let mut mask_rc = Matrix::zeros(0, 0);
+                ops.mask_rc_dense(&mut mask_rc);
+                let want = w_dense.hadamard(&mask_rc);
+                let got = ops.w_t.decompress().transpose();
+                assert_eq!(
+                    got.data, want.data,
+                    "{}: w_t is not the packed W^(R,C) transpose",
+                    lin.wsuffix
+                );
+                checked += 1;
+            }
+        }
+        checked
+    }
+
+    #[test]
+    fn packed_bwd2_operand_is_masked_transpose_at_init_and_after_steps() {
+        let (dir, manifest) = fixture("wtpin");
+        let mut model = HostTrainModel::init(&manifest, 3, ParallelPolicy::serial()).unwrap();
+        // The invariant holds at construction...
+        let linears = assert_wt_invariant(&model);
+        assert_eq!(linears, 2 * 4 - 1, "layer-0 qkv stays dense");
+        // ...and double pruning is active (mask_rc strictly below mask_r
+        // somewhere), so the pin is not vacuous.
+        let mut removed = 0usize;
+        for blk in &model.blocks {
+            for lin in [&blk.qkv, &blk.proj, &blk.up, &blk.down] {
+                if let LinOps::Sparse(ops) = &lin.ops {
+                    let mut mr = Matrix::zeros(0, 0);
+                    let mut mrc = Matrix::zeros(0, 0);
+                    ops.mask_r_dense(&mut mr);
+                    ops.mask_rc_dense(&mut mrc);
+                    removed += mr
+                        .data
+                        .iter()
+                        .zip(&mrc.data)
+                        .filter(|(r, rc)| **r == 1.0 && **rc == 0.0)
+                        .count();
+                }
+            }
+        }
+        assert!(removed > 0, "double pruning removed nothing");
+        // ...and survives optimizer updates (the refresh_wt scan-gather).
+        let c = &manifest.config;
+        let mut rng = Rng::seed_from_u64(1);
+        let tokens: Vec<i32> = (0..c.batch_size * (c.seq_len + 1))
+            .map(|_| rng.below(c.vocab_size) as i32)
+            .collect();
+        for _ in 0..3 {
+            model.train_step(&tokens).unwrap();
+        }
+        assert_wt_invariant(&model);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_vocab_targets_error_instead_of_panicking() {
+        let (dir, manifest) = fixture("badtgt");
+        let c = manifest.config.clone();
+        let mut model = HostTrainModel::init(&manifest, 5, ParallelPolicy::serial()).unwrap();
+        // Valid inputs, poisoned final (target-only) column.
+        let mut tokens = vec![1i32; c.batch_size * (c.seq_len + 1)];
+        tokens[c.seq_len] = c.vocab_size as i32; // row 0's last column
+        assert!(model.eval_loss(&tokens, false).is_err());
+        assert!(model.train_step(&tokens).is_err());
+        tokens[c.seq_len] = -3;
+        assert!(model.eval_loss(&tokens, false).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Causal multi-head attention backward over the fused-QKV tape,
+/// recomputing each query row's softmax exactly as the forward did
+/// (max-subtracted, same traversal), then applying the standard
+/// softmax/score chain.  Serial — bit-identical at every thread count.
+#[allow(clippy::too_many_arguments)]
+fn attention_backward(qkv: &Matrix, d_att: &Matrix, batch: usize, s: usize, d: usize,
+                      n_head: usize, probs: &mut Vec<f32>, dw: &mut Vec<f32>,
+                      dq: &mut Vec<f32>, d_qkv: &mut Matrix) {
+    ensure_out(d_qkv, batch * s, 3 * d);
+    d_qkv.data.fill(0.0);
+    let hd = d / n_head;
+    let scale = 1.0 / (hd as f32).sqrt();
+    if probs.len() < s {
+        probs.resize(s, 0.0);
+    }
+    if dw.len() < s {
+        dw.resize(s, 0.0);
+    }
+    if dq.len() < hd {
+        dq.resize(hd, 0.0);
+    }
+    for b in 0..batch {
+        for h in 0..n_head {
+            let qo = h * hd;
+            let ko = d + h * hd;
+            let vo = 2 * d + h * hd;
+            for q in 0..s {
+                // Recompute this query's softmax row (forward-identical).
+                let qrow = &qkv.row(b * s + q)[qo..qo + hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for t in 0..=q {
+                    let sc = dot(qrow, &qkv.row(b * s + t)[ko..ko + hd], hd) * scale;
+                    probs[t] = sc;
+                    if sc > maxv {
+                        maxv = sc;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for p in probs.iter_mut().take(q + 1) {
+                    let e = (*p - maxv).exp();
+                    *p = e;
+                    denom += e;
+                }
+                let invd = 1.0 / denom;
+                for p in probs.iter_mut().take(q + 1) {
+                    *p *= invd;
+                }
+                let dout = &d_att.row(b * s + q)[qo..qo + hd];
+                // dw_t = dout·v_t ; softmax backward needs Σ w_t·dw_t.
+                let mut sum_wdw = 0.0f32;
+                for t in 0..=q {
+                    dw[t] = dot(dout, &qkv.row(b * s + t)[vo..vo + hd], hd);
+                    sum_wdw += probs[t] * dw[t];
+                }
+                for v in dq.iter_mut() {
+                    *v = 0.0;
+                }
+                for t in 0..=q {
+                    let wt = probs[t];
+                    let ds = wt * (dw[t] - sum_wdw) * scale;
+                    // dq += ds·k_t (accumulated locally: row t may be q).
+                    {
+                        let kslice = &qkv.row(b * s + t)[ko..ko + hd];
+                        for (acc, kv) in dq.iter_mut().zip(kslice) {
+                            *acc += ds * kv;
+                        }
+                    }
+                    let trow = d_qkv.row_mut(b * s + t);
+                    // dv_t += w_t·dout.
+                    for (o, dv) in trow[vo..vo + hd].iter_mut().zip(dout) {
+                        *o += wt * dv;
+                    }
+                    // dk_t += ds·q.
+                    for (o, qv) in trow[ko..ko + hd].iter_mut().zip(qrow) {
+                        *o += ds * qv;
+                    }
+                }
+                let qrow_out = d_qkv.row_mut(b * s + q);
+                for (o, v) in qrow_out[qo..qo + hd].iter_mut().zip(dq.iter()) {
+                    *o += *v;
+                }
+            }
+        }
+    }
+}

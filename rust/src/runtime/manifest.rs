@@ -92,6 +92,12 @@ pub struct TrainParams {
     pub total_steps: usize,
     pub lazy_fraction: f64,
     pub srste_decay: f64,
+    /// AdamW β₁/β₂ and the global-norm gradient clip — consumed by the
+    /// host training executor; optional in the JSON (older manifests
+    /// predate them), defaulting to python `TrainConfig`'s values.
+    pub beta1: f64,
+    pub beta2: f64,
+    pub grad_clip: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -136,6 +142,9 @@ impl Manifest {
             n_params_dense: c.req_usize("n_params_dense")?,
         };
         let t = j.req("train")?;
+        let opt_f64 = |key: &str, default: f64| {
+            t.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+        };
         let train = TrainParams {
             lr: t.req_f64("lr")?,
             weight_decay: t.req_f64("weight_decay")?,
@@ -143,6 +152,9 @@ impl Manifest {
             total_steps: t.req_usize("total_steps")?,
             lazy_fraction: t.req_f64("lazy_fraction")?,
             srste_decay: t.req_f64("srste_decay")?,
+            beta1: opt_f64("beta1", 0.9),
+            beta2: opt_f64("beta2", 0.95),
+            grad_clip: opt_f64("grad_clip", 1.0),
         };
         // Optional (newer manifests ship the packed-metadata descriptor).
         let sparsity_format = j.get("sparsity_format").map(|sf| -> crate::Result<_> {

@@ -1,33 +1,39 @@
-//! PJRT runtime: load AOT artifacts (`*.hlo.txt`), compile them once on
-//! the CPU client, and drive them from the coordinator's step loop.
+//! Runtime: load an artifact directory (manifest + HLO text, or manifest
+//! + checkpoint only) and drive its executables from the coordinator's
+//! step loop through one backend-agnostic [`Session`].
 //!
-//! Python never runs here — the HLO text was lowered once by
-//! `python/compile/aot.py` (`make artifacts`); this module is the bridge
-//! described in DESIGN.md §3 ("Runtime").
+//! A session wraps an [`Executor`] — the run-executable-by-manifest-name
+//! contract over a name-keyed [`Store`] — with two implementations:
 //!
-//! Design notes:
-//! * Executables are compiled lazily and cached (`Session::exe`); an
-//!   accuracy experiment touching 3 of a config's 14 executables pays for 3.
-//! * Step state lives in a name-keyed [`Store`] of literals.  The AOT
-//!   signature convention (manifest input/output names) lets outputs feed
-//!   the next step's inputs by name — `params.*`, `opt.*` round-trip,
-//!   `tokens` is injected fresh each step by the data pipeline.
-//! * xla-rs 0.1.6 returns tuple results as a single tuple literal (no
-//!   buffer-level donation/untupling), so state round-trips through host
-//!   literals; on the CPU PJRT backend device==host and the copy is a
-//!   memcpy — measured < 3% of step time for every config we ship
-//!   (EXPERIMENTS.md §Perf).
-//! * [`host`] provides the **host kernel executor**: a checkpoint-backed
-//!   implementation of the manifest's `forward`/`forward_lora` semantics
-//!   running on the crate's own sparse kernel engine, used by
-//!   `slope serve --manifest` wherever PJRT compile is unavailable (the
-//!   offline stub, or a checkpoint directory without HLO files).
+//! * **PJRT** ([`exec::PjrtExec`]): the HLO text was lowered once by
+//!   `python/compile/aot.py` (`make artifacts`); executables compile
+//!   lazily on the CPU client and are cached.  State round-trips through
+//!   host literals (xla-rs 0.1.6 has no buffer donation); on the CPU
+//!   backend that copy is a memcpy, measured < 3% of step time.
+//! * **Host kernels** ([`exec::HostExec`]): the same executable
+//!   semantics — including the full **double-pruned backward pass**
+//!   (Eq. 4–6) and AdamW — implemented natively on the crate's sparse
+//!   kernel engine ([`host_train::HostTrainModel`]).  No python, no XLA,
+//!   no artifacts.
+//!
+//! [`Session::open`] picks the route: if the manifest's HLO files exist
+//! beside it, PJRT; otherwise (a fabricated host-train config, or a
+//! serving-checkpoint directory that carries no HLO) the host executor.
+//! `slope train` therefore runs end-to-end on a clean checkout, and
+//! `slope serve`/`slope generate` keep using [`host::HostModel`] — the
+//! inference-tuned executor with KV-cached decode — behind the same
+//! manifests.
 
+pub mod exec;
 pub mod host;
+pub mod host_train;
 pub mod manifest;
 pub mod store;
 
-pub use host::{write_synthetic_artifact, HostModel, KvCache, SynthSpec};
+pub use exec::{Executor, ExecutorKind, HostExec, PjrtExec, HOST_EXES};
+pub use host::{write_host_train_artifact, write_synthetic_artifact, HostModel, KvCache,
+               SynthSpec};
+pub use host_train::{HostTrainModel, TrainStateBytes};
 pub use manifest::{ExeSpec, Manifest, TensorSpec, SPARSE_WEIGHTS};
 pub use store::Store;
 
@@ -40,7 +46,8 @@ use std::rc::Rc;
 /// Shared session handle: XLA compiles are expensive (20–60 s for the
 /// train steps), so sessions are cached per artifact directory and shared
 /// across runs within a thread (`Session::open_cached`).  PJRT handles in
-/// xla-rs 0.1.6 are `!Send`, so the cache is thread-local.
+/// xla-rs 0.1.6 are `!Send`, so the cache is thread-local (the host
+/// executor inherits the same discipline for simplicity).
 pub type SessionHandle = Rc<RefCell<Session>>;
 
 thread_local! {
@@ -48,32 +55,43 @@ thread_local! {
         RefCell::new(HashMap::new());
 }
 
-/// A compiled artifact bundle for one model config.
+/// An executor bundle for one model config (module docs).
 pub struct Session {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Execution parallelism for work dispatched through this session
-    /// (`RunConfig.parallel` threads through here).  Consumed today by the
-    /// host kernel executor ([`HostModel`]) behind manifest-backed
-    /// serving; on a real PJRT backend it is the intra-op thread-count
-    /// hint the client should be created with (xla-rs 0.1.6 exposes no
-    /// knob, so there it is advisory).
+    exec: Box<dyn Executor>,
+    /// Mirror of the most recent `set_parallel` (for `parallel()`).
     parallel: ParallelPolicy,
 }
 
 impl Session {
-    /// Load the manifest for `artifacts/<config>` and create the CPU client.
+    /// Load the manifest for `artifacts/<config>` and resolve the
+    /// execution route: PJRT when any of the manifest's HLO files exists
+    /// on disk, else the host kernel executor.
     pub fn open(artifact_dir: &Path) -> crate::Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| crate::eyre!("PJRT cpu client: {e}"))?;
-        Ok(Self { manifest, client, cache: HashMap::new(), parallel: ParallelPolicy::serial() })
+        let has_hlo = manifest
+            .executables
+            .values()
+            .any(|e| artifact_dir.join(&e.file).exists());
+        let exec: Box<dyn Executor> = if has_hlo {
+            Box::new(PjrtExec::new(manifest.clone())?)
+        } else {
+            Box::new(HostExec::new(manifest.clone()))
+        };
+        Ok(Self { manifest, exec, parallel: ParallelPolicy::serial() })
     }
 
-    /// Set the execution parallelism for this session (see the `parallel`
-    /// field docs).  Cached sessions keep the most recent caller's policy.
+    /// Which backend this session resolved to.
+    pub fn executor_kind(&self) -> ExecutorKind {
+        self.exec.kind()
+    }
+
+    /// Set the execution parallelism for this session: the kernel-engine
+    /// policy on the host route, the intra-op hint on PJRT.  Cached
+    /// sessions keep the most recent caller's policy.
     pub fn set_parallel(&mut self, policy: ParallelPolicy) {
         self.parallel = policy;
+        self.exec.set_parallel(policy);
     }
 
     /// The session's execution-parallelism policy.
@@ -81,9 +99,9 @@ impl Session {
         self.parallel
     }
 
-    /// Process-wide cached open: reuses compiled executables across runs on
-    /// the same artifact config (the experiment sweeps hit each config with
-    /// several methods).
+    /// Process-wide cached open: reuses compiled executables (and the
+    /// host executor's resident operand state) across runs on the same
+    /// artifact config.
     pub fn open_cached(artifact_dir: &Path) -> crate::Result<SessionHandle> {
         SESSION_CACHE.with(|cache| {
             let mut cache = cache.borrow_mut();
@@ -97,62 +115,21 @@ impl Session {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch the cached) executable by manifest name.
-    pub fn exe(&mut self, name: &str) -> crate::Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let path = self.manifest.hlo_path(name)?;
-            let t0 = std::time::Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| crate::eyre!("parsing {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| crate::eyre!("compiling {name}: {e}"))?;
-            eprintln!(
-                "[runtime] compiled {name} ({} in / {} out) in {:.1}s",
-                self.manifest.exe(name)?.inputs.len(),
-                self.manifest.exe(name)?.outputs.len(),
-                t0.elapsed().as_secs_f32()
-            );
-            self.cache.insert(name.to_string(), exe);
+        match self.exec.kind() {
+            ExecutorKind::Pjrt => "pjrt-cpu".to_string(),
+            ExecutorKind::HostKernels => "host-kernels".to_string(),
         }
-        Ok(self.cache.get(name).unwrap())
     }
 
-    /// Run an executable: gather inputs from the store by manifest order,
-    /// execute, untuple, and scatter outputs back into the store by name.
-    /// Returns the output names in order (for callers that want scalars).
+    /// Pre-build an executable (PJRT: compile now so step wall-times
+    /// measure execution; host: validate the name is implemented).
+    pub fn prepare(&mut self, name: &str) -> crate::Result<()> {
+        self.exec.prepare(name)
+    }
+
+    /// Run an executable by manifest name over the store (inputs read by
+    /// name, outputs written back by name).
     pub fn run(&mut self, name: &str, store: &mut Store) -> crate::Result<()> {
-        let spec = self.manifest.exe(name)?.clone();
-        let args: Vec<&xla::Literal> = spec
-            .inputs
-            .iter()
-            .map(|t| store.get(&t.name))
-            .collect::<crate::Result<_>>()?;
-        let exe = self.exe(name)?;
-        let result = exe
-            .execute::<&xla::Literal>(&args)
-            .map_err(|e| crate::eyre!("executing {name}: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| crate::eyre!("fetching {name} result: {e}"))?;
-        let outs = tuple
-            .to_tuple()
-            .map_err(|e| crate::eyre!("untupling {name} result: {e}"))?;
-        if outs.len() != spec.outputs.len() {
-            return Err(crate::eyre!(
-                "{name}: manifest says {} outputs, HLO returned {}",
-                spec.outputs.len(),
-                outs.len()
-            ));
-        }
-        for (t, lit) in spec.outputs.iter().zip(outs) {
-            store.insert(&t.name, lit);
-        }
-        Ok(())
+        self.exec.run(name, store)
     }
 }

@@ -4,13 +4,27 @@
 //! `opt.m.lnf_g`, `tokens`, …).  The store also knows how to fabricate
 //! structured constants the coordinator needs without an executable round
 //! trip: all-ones masks (dense baseline), zero adapters, i32 token batches.
+//!
+//! Every write bumps a per-tensor **version** (and the store carries a
+//! process-unique id), so an [`crate::runtime::Executor`] that keeps
+//! resident operand state — the host kernel executor — can detect exactly
+//! which tensors changed underneath it (e.g. the dense baseline's
+//! fabricated ones-masks) and re-ingest only then, keeping the steady-state
+//! step loop free of per-step re-compression.
 
 use super::manifest::TensorSpec;
 use crate::tensor::Matrix;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static STORE_IDS: AtomicU64 = AtomicU64::new(1);
 
 pub struct Store {
-    map: HashMap<String, xla::Literal>,
+    map: HashMap<String, (u64, xla::Literal)>,
+    /// Monotone write counter — each insert stamps the tensor's version.
+    counter: u64,
+    /// Process-unique identity (executors cache per-store sync state).
+    id: u64,
 }
 
 impl Default for Store {
@@ -21,16 +35,42 @@ impl Default for Store {
 
 impl Store {
     pub fn new() -> Self {
-        Self { map: HashMap::new() }
+        Self {
+            map: HashMap::new(),
+            counter: 0,
+            id: STORE_IDS.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Process-unique store identity (stable for this store's lifetime).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Global write counter: unchanged ⇔ no tensor was (re)inserted.
+    pub fn write_count(&self) -> u64 {
+        self.counter
+    }
+
+    /// Version stamp of one tensor (bumped on every insert of that name).
+    pub fn version_of(&self, name: &str) -> Option<u64> {
+        self.map.get(name).map(|(v, _)| *v)
+    }
+
+    /// Iterate `(name, version)` pairs (unordered).
+    pub fn versions(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, (v, _))| (k.as_str(), *v))
     }
 
     pub fn insert(&mut self, name: &str, lit: xla::Literal) {
-        self.map.insert(name.to_string(), lit);
+        self.counter += 1;
+        self.map.insert(name.to_string(), (self.counter, lit));
     }
 
     pub fn get(&self, name: &str) -> crate::Result<&xla::Literal> {
         self.map
             .get(name)
+            .map(|(_, l)| l)
             .ok_or_else(|| crate::eyre!("store missing tensor {name:?}"))
     }
 
@@ -39,7 +79,7 @@ impl Store {
     }
 
     pub fn remove(&mut self, name: &str) -> Option<xla::Literal> {
-        self.map.remove(name)
+        self.map.remove(name).map(|(_, l)| l)
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -53,7 +93,7 @@ impl Store {
     pub fn duplicate(&mut self, from: &str, to: &str) -> crate::Result<()> {
         let v = self.get(from)?;
         let fresh = clone_literal(v)?;
-        self.map.insert(to.to_string(), fresh);
+        self.insert(to, fresh);
         Ok(())
     }
 
@@ -106,12 +146,27 @@ impl Store {
         Ok(self.read_f32(name)?[0])
     }
 
+    pub fn read_scalar_i32(&self, name: &str) -> crate::Result<i32> {
+        let lit = self.get(name)?;
+        let v = lit.to_vec::<i32>().map_err(|e| crate::eyre!("read {name}: {e}"))?;
+        Ok(v[0])
+    }
+
     /// Read a tensor into a caller-owned buffer (cleared, then filled), so
     /// hot loops reuse the buffer's capacity across calls.  The literal
     /// API itself still materializes one transient host copy — that copy
     /// is inherent to PJRT host transfers, not to this call.
     pub fn read_f32_into(&self, name: &str, out: &mut Vec<f32>) -> crate::Result<()> {
         let v = self.read_f32(name)?;
+        out.clear();
+        out.extend_from_slice(&v);
+        Ok(())
+    }
+
+    /// Read an i32 tensor into a caller-owned buffer (cleared, refilled).
+    pub fn read_i32_into(&self, name: &str, out: &mut Vec<i32>) -> crate::Result<()> {
+        let lit = self.get(name)?;
+        let v = lit.to_vec::<i32>().map_err(|e| crate::eyre!("read {name}: {e}"))?;
         out.clear();
         out.extend_from_slice(&v);
         Ok(())
@@ -144,5 +199,26 @@ fn clone_literal(lit: &xla::Literal) -> crate::Result<xla::Literal> {
             xla::Literal::vec1(&v).reshape(&dims).map_err(|e| crate::eyre!("{e}"))
         }
         other => Err(crate::eyre!("clone_literal: unsupported {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versions_track_writes() {
+        let mut a = Store::new();
+        let b = Store::new();
+        assert_ne!(a.id(), b.id(), "stores must be distinguishable");
+        a.put_f32("x", &[2], &[1.0, 2.0]).unwrap();
+        let v1 = a.version_of("x").unwrap();
+        a.put_f32("y", &[1], &[3.0]).unwrap();
+        assert_eq!(a.version_of("x").unwrap(), v1, "unrelated writes leave x alone");
+        a.put_f32("x", &[2], &[4.0, 5.0]).unwrap();
+        assert!(a.version_of("x").unwrap() > v1, "overwrite bumps the version");
+        assert_eq!(a.versions().count(), 2);
+        assert!(a.write_count() >= 3);
+        assert!(a.version_of("missing").is_none());
     }
 }

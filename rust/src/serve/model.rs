@@ -290,11 +290,19 @@ impl AotModel {
             "manifest {} has no inference executable",
             manifest.config.name
         );
-        // One-time probe: a compile failure (offline xla stub, or no HLO
-        // beside the checkpoint) routes every batch to the host executor.
+        // One-time probe: a host-route session (no HLO beside the
+        // checkpoint) or a compile failure (offline xla stub) routes
+        // every batch to the serving-tuned host executor.
         let probe: Result<(), String> = {
             let mut sess = session.borrow_mut();
-            sess.exe(exe).map(|_| ()).map_err(|e| e.to_string())
+            match sess.executor_kind() {
+                crate::runtime::ExecutorKind::HostKernels => {
+                    Err("session resolved to the host route (no HLO artifacts)".into())
+                }
+                crate::runtime::ExecutorKind::Pjrt => {
+                    sess.prepare(exe).map_err(|e| e.to_string())
+                }
+            }
         };
         let packed_restored = packed.len();
         let (host, store, path) = match probe {

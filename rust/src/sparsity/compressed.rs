@@ -159,13 +159,26 @@ impl CompressedNm {
     /// Expand back to dense (test / checkpoint path).
     pub fn decompress(&self) -> Matrix {
         let mut out = Matrix::zeros(self.rows, self.cols);
+        self.decompress_into(&mut out);
+        out
+    }
+
+    /// Expand into a caller-owned dense buffer (resized once, zeroed and
+    /// scattered each call) — the allocation-free export path the host
+    /// training executor uses to round-trip packed weights through the
+    /// literal store every step.
+    pub fn decompress_into(&self, out: &mut Matrix) {
+        if (out.rows, out.cols) != (self.rows, self.cols) {
+            *out = Matrix::zeros(self.rows, self.cols);
+        } else {
+            out.data.fill(0.0);
+        }
         let kc = self.kcols();
         for r in 0..self.rows {
             for (k, c) in self.row_indices(r).enumerate() {
                 out.data[r * self.cols + c] += self.values[r * kc + k];
             }
         }
-        out
     }
 
     /// Overwrite values in-place from a dense matrix with the *same* mask

@@ -140,6 +140,28 @@ impl Mask {
         true
     }
 
+    /// Verify the row constraint holds with *exactly* `n` kept per group —
+    /// the shape every init-time mask has, and the precondition for the
+    /// pad-free packed layout the host training executor's in-place
+    /// optimizer updates rely on (an under-full group would compress with
+    /// pad slots whose gathered gradients are not zero).
+    pub fn is_exact_row_nm(&self, scheme: NmScheme) -> bool {
+        if self.cols % scheme.m != 0 {
+            return false;
+        }
+        for r in 0..self.rows {
+            for g in 0..self.cols / scheme.m {
+                let kept = (0..scheme.m)
+                    .filter(|i| self.at(r, g * scheme.m + i))
+                    .count();
+                if kept != scheme.n {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
     /// Verify the N:M constraint along columns (groups of `m` within a col).
     pub fn check_col_nm(&self, scheme: NmScheme) -> bool {
         assert_eq!(self.rows % scheme.m, 0);

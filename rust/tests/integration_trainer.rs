@@ -1,62 +1,88 @@
-//! Integration tests over the Trainer (phase schedule, baselines, metrics)
-//! on the smallest artifact config.  Requires `make artifacts`.
+//! Integration tests over the Trainer — phase schedule, lazy-adapter
+//! activation, checkpoint cadence, dense baseline — running on the
+//! **host kernel executor** against fabricated artifacts, so the whole
+//! training story executes in every `cargo test -q` with no
+//! `make artifacts`.  (With real artifacts present the same Trainer
+//! drives the PJRT route instead; `tests/integration_runtime.rs` covers
+//! that side and still skips offline.)
 
-use slope::config::{Fig9Variant, Method, RunConfig};
+use slope::backend::ParallelPolicy;
+use slope::config::{Method, RunConfig};
 use slope::coordinator::Trainer;
-use std::path::Path;
+use slope::serve::{AotModel, DecodeEngine, DecodePolicy, Sampler};
+use std::path::PathBuf;
 
-fn cfg(method: Method, steps: usize, lazy: f64) -> RunConfig {
+/// Per-test artifact root (unique model name ⇒ unique fabricated dir and
+/// session-cache key).
+fn cfg(tag: &str, method: Method, steps: usize, lazy: f64) -> RunConfig {
+    let root = std::env::temp_dir().join("slope_it_trainer");
     RunConfig {
-        model: "gpt-nano-half-depth".into(),
+        model: format!("it-{tag}"),
         method,
         steps,
         lazy_fraction: lazy,
         eval_every: steps.max(1),
         eval_batches: 2,
         seed: 3,
-        artifacts: "artifacts".into(),
-        out_dir: std::env::temp_dir().join("slope_test_runs"),
+        artifacts: root,
+        out_dir: std::env::temp_dir().join("slope_it_trainer_runs"),
         checkpoint_dir: None,
-        parallel: slope::backend::ParallelPolicy::serial(),
+        parallel: ParallelPolicy::serial(),
     }
 }
 
-fn artifacts_present() -> bool {
-    Path::new("artifacts/gpt-nano-half-depth/manifest.json").exists()
+fn clean(cfg: &RunConfig) -> PathBuf {
+    let dir = cfg.artifacts.join(&cfg.model);
+    // NOTE: sessions are cached per directory within a thread; each test
+    // uses a distinct model name so a fresh fabrication is never shadowed
+    // by another test's cached session.
+    std::fs::remove_dir_all(&dir).ok();
+    dir
 }
 
 #[test]
-fn slope_run_with_phase_flip() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts` first)");
-        return;
-    }
-    let mut t = Trainer::new(cfg(Method::Slope, 6, 0.34)).unwrap();
+fn slope_run_with_phase_flip_on_host_executor() {
+    let cfg = cfg("phaseflip", Method::Slope, 12, 0.34);
+    clean(&cfg);
+    let mut t = Trainer::new(cfg).unwrap();
     t.init().unwrap();
     let o = t.train().unwrap();
     assert!(o.final_loss.is_finite());
     assert!(o.final_perplexity.is_finite());
-    // Phase flip happened: last steps tagged "lora".
+    // Phase flip happened: sparse steps then lora steps.
     let phases: Vec<&str> = t.metrics.steps.iter().map(|s| s.phase).collect();
     assert!(phases.contains(&"sparse") && phases.contains(&"lora"), "{phases:?}");
-    // Loss goes down over the run.
-    assert!(o.final_loss < t.metrics.steps[0].loss);
-    // Adapter convergence records were captured during the lazy phase.
+    // The flip lands exactly at (1−λ)·T.
+    let flip_at = t.cfg.sparse_steps();
+    for rec in &t.metrics.steps {
+        let want = if rec.step <= flip_at { "sparse" } else { "lora" };
+        assert_eq!(rec.phase, want, "step {}", rec.step);
+    }
+    // Native training actually learns.
+    assert!(
+        o.final_loss < t.metrics.steps[0].loss,
+        "loss did not go down: {} -> {}",
+        t.metrics.steps[0].loss,
+        o.final_loss
+    );
+    // Adapter-convergence records were captured during the lazy phase,
+    // and the store carries live adapters.
     assert!(!t.metrics.adapters.is_empty());
+    assert!(t.store.contains("lora.blocks.0.wqkv_up"));
+    // Cloze probe ran through the host `forward` executable.
+    assert!(o.cloze_accuracy.is_finite());
     // Metrics serialize and save.
     let path = t.metrics.save(&t.cfg.out_dir.clone()).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     let j = slope::util::Json::parse(&text).unwrap();
-    assert_eq!(j.req("steps").unwrap().as_arr().unwrap().len(), 6);
+    assert_eq!(j.req("steps").unwrap().as_arr().unwrap().len(), 12);
 }
 
 #[test]
-fn dense_baseline_uses_ones_masks() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts` first)");
-        return;
-    }
-    let mut t = Trainer::new(cfg(Method::Dense, 3, 0.0)).unwrap();
+fn dense_baseline_uses_ones_masks_on_host_executor() {
+    let cfg = cfg("dense", Method::Dense, 3, 0.0);
+    clean(&cfg);
+    let mut t = Trainer::new(cfg).unwrap();
     t.init().unwrap();
     let mask = t.store.read_f32("masks.blocks.1.wup_r").unwrap();
     assert!(mask.iter().all(|v| *v == 1.0), "dense run must see ones masks");
@@ -65,77 +91,85 @@ fn dense_baseline_uses_ones_masks() {
     // Dense weights are NOT support-constrained.
     let w = t.store.read_f32("params.blocks.1.wup").unwrap();
     let zeros = w.iter().filter(|v| **v == 0.0).count();
-    assert!(zeros < w.len() / 10, "dense weights should stay dense");
+    assert!(zeros < w.len() / 10, "dense weights should stay dense ({zeros}/{})", w.len());
 }
 
 #[test]
-fn srste_churn_metric_is_populated() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts` first)");
-        return;
-    }
-    // SR-STE executables are exported for gpt-nano (half-depth is core-only).
-    let mut c = cfg(Method::Srste, 8, 0.0);
-    c.model = "gpt-nano".into();
-    let mut t = Trainer::new(c).unwrap();
+fn sparse_weights_stay_on_support_through_host_steps() {
+    let cfg = cfg("support", Method::Slope, 4, 0.0);
+    clean(&cfg);
+    let mut t = Trainer::new(cfg).unwrap();
     t.init().unwrap();
     let o = t.train().unwrap();
     assert!(o.final_loss.is_finite());
-    assert!(!t.metrics.churn.is_empty(), "SR-STE must record mask churn");
-    let last = t.metrics.churn.last().unwrap();
-    // The final snapshot IS the converged mask: distance zero.
-    assert!(last.frac_changed_vs_final.abs() < 1e-12);
+    // Algorithm-1 invariant: pruned slots are exactly zero after steps.
+    let mask = t.store.read_f32("masks.blocks.1.wup_r").unwrap();
+    let w = t.store.read_f32("params.blocks.1.wup").unwrap();
+    for (mv, wv) in mask.iter().zip(&w) {
+        if *mv == 0.0 {
+            assert_eq!(*wv, 0.0, "pruned slot moved off zero");
+        }
+    }
+    // 2:4 density on the support.
+    let kept = mask.iter().filter(|v| **v != 0.0).count();
+    assert_eq!(kept * 2, mask.len(), "mask must be exactly 2:4");
 }
 
 #[test]
-fn wanda_flow_installs_nm_masks_after_dense_training() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts` first)");
-        return;
-    }
-    let mut t = Trainer::new(cfg(Method::Wanda, 3, 0.0)).unwrap();
-    t.init().unwrap();
-    // This config has no wanda executable? half-depth exports core only —
-    // use magnitude path guard: skip if absent.
-    if !t.manifest.executables.contains_key("wanda_masks") {
-        eprintln!("skipping: no wanda_masks exe for this config");
-        return;
-    }
-    let o = t.train().unwrap();
-    assert!(o.final_loss.is_finite());
-}
-
-#[test]
-fn fig9_weight_static_matches_support_invariant() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts` first)");
-        return;
-    }
-    if !Path::new("artifacts/gpt-nano/train_step_fig9_weight_static.hlo.txt").exists() {
-        eprintln!("skipping: fig9 set not exported");
-        return;
-    }
-    let mut c = cfg(Method::Fig9(Fig9Variant::WeightStatic), 2, 0.0);
-    c.model = "gpt-nano".into();
-    let mut t = Trainer::new(c).unwrap();
+fn checkpoint_cadence_feeds_serve_and_generate() {
+    let mut cfg = cfg("ckpt", Method::Slope, 4, 0.0);
+    cfg.eval_every = 2; // checkpoints at steps 0, 2, 4
+    let ckpt = std::env::temp_dir().join("slope_it_trainer_ckpt");
+    std::fs::remove_dir_all(&ckpt).ok();
+    cfg.checkpoint_dir = Some(ckpt.clone());
+    clean(&cfg);
+    let mut t = Trainer::new(cfg).unwrap();
     t.init().unwrap();
     let o = t.train().unwrap();
     assert!(o.final_loss.is_finite());
+    assert!(ckpt.join("model.slopeckpt").exists(), "serving checkpoint missing");
+    assert!(ckpt.join("manifest.json").exists(), "manifest copy missing");
+
+    // The acceptance pipeline: the checkpoint a host-executor training
+    // run wrote serves autoregressive generation with zero artifacts.
+    let model = AotModel::open(&ckpt, ParallelPolicy::with_threads(2)).unwrap();
+    let vocab = model.manifest().config.vocab_size;
+    let policy = DecodePolicy {
+        max_batch: 2,
+        max_new_tokens: 4,
+        eos: None,
+        sampler: Sampler::Greedy,
+        seed: 0,
+        queue_cap: None,
+    };
+    let mut eng = DecodeEngine::new(model, policy).unwrap();
+    let start = std::time::Instant::now();
+    eng.submit(vec![1, 2, 3], None, start.elapsed()).unwrap();
+    eng.submit(vec![5], None, start.elapsed()).unwrap();
+    let done = eng.run_to_completion(start).unwrap();
+    assert_eq!(done.len(), 2);
+    for g in &done {
+        assert_eq!(g.tokens.len(), 4);
+        for tok in &g.tokens {
+            assert!(*tok >= 0 && (*tok as usize) < vocab);
+        }
+    }
+    std::fs::remove_dir_all(&ckpt).ok();
 }
 
 #[test]
-fn coordinator_overhead_is_small() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts` first)");
-        return;
-    }
-    let mut t = Trainer::new(cfg(Method::Slope, 5, 0.0)).unwrap();
+fn step_zero_checkpoint_survives_without_steps() {
+    // `--steps 0` still leaves a servable checkpoint behind (the step-0
+    // checkpoint point), straight from the host `init`.
+    let mut cfg = cfg("ckpt0", Method::Slope, 0, 0.0);
+    let ckpt = std::env::temp_dir().join("slope_it_trainer_ckpt0");
+    std::fs::remove_dir_all(&ckpt).ok();
+    cfg.checkpoint_dir = Some(ckpt.clone());
+    clean(&cfg);
+    let mut t = Trainer::new(cfg).unwrap();
     t.init().unwrap();
-    let o = t.train().unwrap();
-    // L3 target (DESIGN.md §8): everything outside execute < 5% of step.
-    assert!(
-        o.coordinator_overhead < 0.05,
-        "coordinator overhead {:.3} ≥ 5%",
-        o.coordinator_overhead
-    );
+    let _ = t.train().unwrap();
+    let model = AotModel::open(&ckpt, ParallelPolicy::serial()).unwrap();
+    assert!(model.packed_restored() > 0, "packed planes must ship in the checkpoint");
+    std::fs::remove_dir_all(&ckpt).ok();
 }

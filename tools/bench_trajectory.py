@@ -95,6 +95,20 @@ def archive(args) -> int:
         )
     print(f"bench_serve series: {len(kernel)} kernel-stack, {len(manifest)} manifest, "
           f"{len(decode)} decode")
+    # bench_train guards the native training hot path the same way: both
+    # the sparse-phase and the lazy-phase step series must be present.
+    train_cases = {r["case"] for r in rows if r["bench"] == "bench_train"}
+    if not train_cases:
+        raise SystemExit(
+            "no bench_train rows in the smoke run — the trajectory must carry "
+            "the host train/step and train_lora/step series"
+        )
+    if "train/step" not in train_cases or "train_lora/step" not in train_cases:
+        raise SystemExit(
+            "bench_train must emit both the train/step and train_lora/step "
+            f"series; got {sorted(train_cases)}"
+        )
+    print(f"bench_train series: {sorted(train_cases)}")
     return 0
 
 
