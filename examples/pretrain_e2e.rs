@@ -32,6 +32,8 @@ fn main() -> slope::Result<()> {
         artifacts: "artifacts".into(),
         out_dir: "runs".into(),
         checkpoint_dir: None,
+        resume: None,
+        keep_checkpoints: 3,
         parallel: slope::backend::ParallelPolicy::auto(),
     };
     println!("== pretrain_e2e: {model}, {steps} steps, SLoPe 2:4 + lazy adapters ==");

@@ -71,7 +71,17 @@ pub struct RunConfig {
     /// When set, write a serving checkpoint (store planes + packed
     /// compressed-weight planes + a manifest copy) into this directory at
     /// every eval point — the artifact `slope serve --manifest` restores.
+    /// Each checkpoint point also writes a full **training** checkpoint
+    /// (moments, adapter chain, step/RNG state) under `<dir>/train/`.
     pub checkpoint_dir: Option<PathBuf>,
+    /// When set, restore the newest valid training checkpoint from this
+    /// directory and continue the run from its step (bitwise identical to
+    /// the uninterrupted run).  Defaults `checkpoint_dir` to the same
+    /// directory so the resumed run keeps checkpointing in place.
+    pub resume: Option<PathBuf>,
+    /// Training-checkpoint retention: keep the newest K `step_*`
+    /// directories under `<checkpoint_dir>/train/`.
+    pub keep_checkpoints: usize,
     /// Kernel-engine parallelism for every CPU backend call this run
     /// makes (threads = 0 ⇒ auto-detect hardware threads).
     pub parallel: ParallelPolicy,
@@ -90,6 +100,8 @@ impl Default for RunConfig {
             artifacts: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("runs"),
             checkpoint_dir: None,
+            resume: None,
+            keep_checkpoints: 3,
             parallel: ParallelPolicy::auto(),
         }
     }

@@ -1,275 +1,555 @@
 //! Checkpointing: persist a subset of the literal store to a simple
 //! length-prefixed binary format (`.slopeckpt`) and restore it.
 //!
-//! Format (little endian):
+//! ## Format v3 (little endian)
+//!
 //! ```text
-//!   magic   "SLPE" u32-version
-//!   count   u32
-//!   repeat: name_len u32 | name bytes | dtype u8 (0=f32, 1=i32, 2=u8)
-//!           ndims u32 | dims u64×ndims | raw data
+//!   magic    "SLPE"
+//!   version  u32 (=3)
+//!   count    u32
+//!   repeat:  name_len u32 | name bytes | dtype u8 (0=f32, 1=i32, 2=u8)
+//!            ndims u32 | dims u64×ndims | raw data
+//!            crc u32            — CRC-32/IEEE of this record (header+data)
+//!   footer   "SLPF" | crc u32   — CRC-32/IEEE of every preceding byte
 //! ```
 //!
-//! Version 2 adds the `u8` dtype (tag 2), used to ship the Eq.-7
-//! bit-packed metadata plane of compressed weights: a
-//! [`CompressedNm`] serializes as three records —
-//! `<name>.values` (f32 `[rows, kcols]`), `<name>.meta` (u8
-//! `[rows, row_meta_bytes]`, the byte layout `python/compile/sparsity.py`
-//! mirrors), and `<name>.scheme` (i32 `[n, m, rows, cols]`) — via
-//! [`save_packed_weights`] / [`load_packed_weights`].  Version-1 files
-//! load unchanged.
+//! Version history: v1 is the bare record stream (f32/i32 only); v2 adds
+//! the `u8` dtype (tag 2) for the Eq.-7 bit-packed metadata plane of
+//! compressed weights; v3 adds the per-record CRCs and the file footer.
+//! v1/v2 files still load (with a logged warning — no integrity check is
+//! possible), so pre-v3 checkpoints stay restorable.
 //!
-//! On top of the raw formats sit **serving-checkpoint directories**
-//! ([`save_model_checkpoint`] / [`load_model_checkpoint`]): the trainer
-//! writes one at every eval checkpoint when `--checkpoint-dir` is set —
-//! store planes plus the pruned weights' packed `CompressedNm` planes —
-//! and `slope serve --manifest <dir>` restores it without re-running
-//! compression.
+//! Every file is written **crash-safely** through
+//! [`crate::util::faultfs::write_atomic`]: temp file in the same
+//! directory → `sync_all` → atomic rename → parent-directory fsync.  A
+//! torn or bit-flipped file therefore either never replaces its
+//! predecessor, or is caught at load time by the checksums; `load` parses
+//! the whole file into a scratch store and absorbs it only on full
+//! success, so a corrupt checkpoint can never leave the live [`Store`]
+//! partially populated.  Structural failures surface as [`CkptError`]
+//! (downcastable from [`crate::Error`]).
+//!
+//! A [`CompressedNm`] serializes as three records — `<name>.values` (f32
+//! `[rows, kcols]`), `<name>.meta` (u8 `[rows, row_meta_bytes]`, the byte
+//! layout `python/compile/sparsity.py` mirrors), and `<name>.scheme` (i32
+//! `[n, m, rows, cols]`) — via [`save_packed_weights`] /
+//! [`load_packed_weights`].
+//!
+//! On top of the raw formats sit two directory layouts:
+//!
+//! * **Serving checkpoints** ([`save_model_checkpoint`] /
+//!   [`load_model_checkpoint`]): store planes + packed `CompressedNm`
+//!   planes + a manifest copy — what `slope serve --manifest <dir>`
+//!   restores without re-running compression.
+//! * **Training checkpoints** ([`save_train_checkpoint`] /
+//!   [`load_train_checkpoint`]): the FULL resumable state — `params.*`,
+//!   `opt.*` compressed-space moments, `masks.*`, the adapter chain
+//!   (`lora.*` / `lora_opt.*`), plus a [`TrainMeta`] sidecar (step
+//!   counter, schedule position, RNG state) — under
+//!   `<dir>/train/step_NNNNNNNN/`, with a `LATEST` pointer that advances
+//!   only after the written files re-read and verify, and a keep-last-K
+//!   retention sweep.  `slope train --resume <dir>` restores the newest
+//!   valid step and continues bitwise-identically.
 
 use crate::runtime::{Manifest, Store, SPARSE_WEIGHTS};
 use crate::sparsity::{CompressedNm, Mask, NmScheme};
-use std::collections::HashMap;
-use std::io::{Read, Write};
-use std::path::Path;
+use crate::util::crc32::crc32;
+use crate::util::{faultfs, json, Json};
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"SLPE";
-const VERSION: u32 = 2;
+const FOOTER_MAGIC: &[u8; 4] = b"SLPF";
+const VERSION: u32 = 3;
+
+/// Caps a bit-flipped length field before it becomes a giant allocation:
+/// every length is validated against the actual bytes remaining, and
+/// names additionally against this bound.
+const MAX_NAME_LEN: usize = 1 << 12;
+const MAX_NDIMS: usize = 8;
 
 /// Store-plane file inside a serving-checkpoint directory.
 pub const MODEL_FILE: &str = "model.slopeckpt";
-/// Packed compressed-weight planes (format v2) beside [`MODEL_FILE`].
+/// Packed compressed-weight planes beside [`MODEL_FILE`].
 pub const PACKED_FILE: &str = "model.packed.slopeckpt";
+/// Training-checkpoint subdirectory inside a checkpoint directory.
+pub const TRAIN_DIR: &str = "train";
+/// Full training-state planes inside one `step_NNNNNNNN` directory.
+pub const TRAIN_FILE: &str = "train_state.slopeckpt";
+/// Trainer-side metadata (step, schedule, RNG) beside [`TRAIN_FILE`].
+pub const TRAIN_META_FILE: &str = "train_meta.json";
+/// Pointer file naming the newest verified `step_NNNNNNNN` directory.
+pub const LATEST_FILE: &str = "LATEST";
+/// Store prefixes a training checkpoint persists — everything the host
+/// executor rebuilds model state from, moments and adapter chain included.
+pub const TRAIN_PREFIXES: [&str; 5] = ["params.", "opt.", "masks.", "lora.", "lora_opt."];
 
-/// Save every store tensor whose name starts with one of `prefixes`.
-pub fn save(store: &Store, prefixes: &[&str], path: &Path) -> crate::Result<usize> {
-    let names: Vec<String> = store
-        .names()
-        .into_iter()
-        .filter(|n| prefixes.iter().any(|p| n.starts_with(p)))
-        .map(|s| s.to_string())
-        .collect();
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(names.len() as u32).to_le_bytes())?;
-    for name in &names {
+// ---- structured errors --------------------------------------------------
+
+/// Structured checkpoint failures — every corrupt-file shape `load` can
+/// detect.  Boxed into [`crate::Error`]; tests downcast to assert the
+/// exact failure class.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CkptError {
+    /// The file does not start with the `SLPE` magic.
+    NotACheckpoint { path: PathBuf },
+    /// The version field is 0 or newer than this build understands.
+    UnsupportedVersion { version: u32 },
+    /// The file ends before the structure it promises (torn write).
+    Truncated { offset: usize, detail: String },
+    /// A record's CRC does not match its bytes (bit rot / flip).
+    CorruptRecord { name: String, offset: usize },
+    /// The file footer is missing, mis-tagged, or its CRC mismatches.
+    CorruptFooter { detail: String },
+    /// Two records share a name (a valid writer never emits this).
+    DuplicateRecord { name: String },
+    /// Any other structural violation (bad dtype tag, oversized length
+    /// field, non-UTF-8 name, trailing garbage, …).
+    Malformed { detail: String },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::NotACheckpoint { path } => {
+                write!(f, "not a slope checkpoint: {}", path.display())
+            }
+            CkptError::UnsupportedVersion { version } => {
+                write!(f, "unsupported checkpoint version {version}")
+            }
+            CkptError::Truncated { offset, detail } => {
+                write!(f, "checkpoint truncated at byte {offset}: {detail}")
+            }
+            CkptError::CorruptRecord { name, offset } => {
+                write!(f, "checkpoint record {name:?} at byte {offset} fails its CRC")
+            }
+            CkptError::CorruptFooter { detail } => {
+                write!(f, "checkpoint footer invalid: {detail}")
+            }
+            CkptError::DuplicateRecord { name } => {
+                write!(f, "duplicate checkpoint record {name:?}")
+            }
+            CkptError::Malformed { detail } => write!(f, "malformed checkpoint: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+// ---- serializer ---------------------------------------------------------
+
+/// In-memory builder for one checkpoint file (header + records + footer);
+/// the finished byte image goes through [`faultfs::write_atomic`].
+struct FileWriter {
+    buf: Vec<u8>,
+    count: u32,
+    version: u32,
+}
+
+impl FileWriter {
+    fn new(version: u32) -> Self {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&version.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes()); // count, patched in finish()
+        Self { buf, count: 0, version }
+    }
+
+    fn record(&mut self, name: &str, dtype: u8, dims: &[u64], data: impl FnOnce(&mut Vec<u8>)) {
+        let start = self.buf.len();
+        self.buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(name.as_bytes());
+        self.buf.push(dtype);
+        self.buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for d in dims {
+            self.buf.extend_from_slice(&d.to_le_bytes());
+        }
+        data(&mut self.buf);
+        if self.version >= 3 {
+            let crc = crc32(&self.buf[start..]);
+            self.buf.extend_from_slice(&crc.to_le_bytes());
+        }
+        self.count += 1;
+    }
+
+    fn store_record(&mut self, store: &Store, name: &str) -> crate::Result<()> {
         let lit = store.get(name)?;
         let shape = lit.array_shape().map_err(|e| crate::eyre!("{e}"))?;
         let dims: Vec<u64> = shape.dims().iter().map(|d| *d as u64).collect();
-        let ty = lit.ty().map_err(|e| crate::eyre!("{e}"))?;
-        f.write_all(&(name.len() as u32).to_le_bytes())?;
-        f.write_all(name.as_bytes())?;
-        match ty {
+        match lit.ty().map_err(|e| crate::eyre!("{e}"))? {
             xla::ElementType::F32 => {
-                f.write_all(&[0u8])?;
-                f.write_all(&(dims.len() as u32).to_le_bytes())?;
-                for d in &dims {
-                    f.write_all(&d.to_le_bytes())?;
-                }
-                for v in lit.to_vec::<f32>().map_err(|e| crate::eyre!("{e}"))? {
-                    f.write_all(&v.to_le_bytes())?;
-                }
+                let v = lit.to_vec::<f32>().map_err(|e| crate::eyre!("{e}"))?;
+                self.record(name, 0, &dims, |buf| {
+                    for x in &v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                });
             }
             xla::ElementType::S32 => {
-                f.write_all(&[1u8])?;
-                f.write_all(&(dims.len() as u32).to_le_bytes())?;
-                for d in &dims {
-                    f.write_all(&d.to_le_bytes())?;
-                }
-                for v in lit.to_vec::<i32>().map_err(|e| crate::eyre!("{e}"))? {
-                    f.write_all(&v.to_le_bytes())?;
-                }
+                let v = lit.to_vec::<i32>().map_err(|e| crate::eyre!("{e}"))?;
+                self.record(name, 1, &dims, |buf| {
+                    for x in &v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                });
             }
             other => return Err(crate::eyre!("checkpoint: unsupported dtype {other:?}")),
         }
+        Ok(())
     }
+
+    fn finish(mut self) -> Vec<u8> {
+        let count = self.count.to_le_bytes();
+        self.buf[8..12].copy_from_slice(&count);
+        if self.version >= 3 {
+            let crc = crc32(&self.buf);
+            self.buf.extend_from_slice(FOOTER_MAGIC);
+            self.buf.extend_from_slice(&crc.to_le_bytes());
+        }
+        self.buf
+    }
+}
+
+// ---- parser -------------------------------------------------------------
+
+enum RecData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+struct Record {
+    name: String,
+    dims: Vec<usize>,
+    data: RecData,
+}
+
+struct Parsed {
+    version: u32,
+    records: Vec<Record>,
+    /// Byte offset where each record starts, plus the offset right after
+    /// the last record (= footer start on v3 files).
+    boundaries: Vec<usize>,
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn need(&self, n: usize, what: &str) -> Result<(), CkptError> {
+        if self.remaining() < n {
+            return Err(CkptError::Truncated {
+                offset: self.i,
+                detail: format!("need {n} bytes for {what}, {} left", self.remaining()),
+            });
+        }
+        Ok(())
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], CkptError> {
+        self.need(n, what)?;
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, CkptError> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, CkptError> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, CkptError> {
+        let b = self.bytes(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+/// Parse a whole checkpoint file, verifying structure and (v3) checksums
+/// BEFORE any caller sees a record — a corrupt file yields a
+/// [`CkptError`] and nothing else.  Every length field is validated
+/// against the bytes actually present before it sizes an allocation, so
+/// a bit-flipped length cannot trigger a huge `vec!`.
+fn parse_file(path: &Path) -> crate::Result<Parsed> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| crate::eyre!("reading checkpoint {}: {e}", path.display()))?;
+    let mut cur = Cur { b: &bytes, i: 0 };
+    if cur.remaining() < 4 || &bytes[..4] != MAGIC {
+        return Err(CkptError::NotACheckpoint { path: path.to_path_buf() }.into());
+    }
+    cur.i = 4;
+    let version = cur.u32("version")?;
+    if version == 0 || version > VERSION {
+        return Err(CkptError::UnsupportedVersion { version }.into());
+    }
+    if version < VERSION {
+        eprintln!(
+            "[checkpoint] {} is format v{version} (pre-checksum); loading without \
+             integrity verification",
+            path.display()
+        );
+    }
+    let count = cur.u32("record count")? as usize;
+    let mut records = Vec::new();
+    let mut boundaries = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    for idx in 0..count {
+        let start = cur.i;
+        boundaries.push(start);
+        let name_len = cur.u32("record name length")? as usize;
+        if name_len > MAX_NAME_LEN {
+            return Err(CkptError::Malformed {
+                detail: format!("record {idx}: name length {name_len} exceeds {MAX_NAME_LEN}"),
+            }
+            .into());
+        }
+        let name = std::str::from_utf8(cur.bytes(name_len, "record name")?)
+            .map_err(|_| CkptError::Malformed {
+                detail: format!("record {idx}: name is not UTF-8"),
+            })?
+            .to_string();
+        let dtype = cur.u8("dtype tag")?;
+        let elem_size = match dtype {
+            0 | 1 => 4usize,
+            2 => 1,
+            other => {
+                return Err(CkptError::Malformed {
+                    detail: format!("record {name:?}: bad dtype tag {other}"),
+                }
+                .into())
+            }
+        };
+        let ndims = cur.u32("ndims")? as usize;
+        if ndims > MAX_NDIMS {
+            return Err(CkptError::Malformed {
+                detail: format!("record {name:?}: {ndims} dims exceeds {MAX_NDIMS}"),
+            }
+            .into());
+        }
+        let mut dims = Vec::with_capacity(ndims);
+        let mut elems = 1usize;
+        for _ in 0..ndims {
+            let d = cur.u64("dim")? as usize;
+            elems = elems.checked_mul(d).ok_or_else(|| CkptError::Malformed {
+                detail: format!("record {name:?}: dims overflow"),
+            })?;
+            dims.push(d);
+        }
+        let data_len = elems.checked_mul(elem_size).ok_or_else(|| CkptError::Malformed {
+            detail: format!("record {name:?}: size overflow"),
+        })?;
+        let raw = cur.bytes(data_len, "record data")?;
+        let data = match dtype {
+            0 => RecData::F32(
+                raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect(),
+            ),
+            1 => RecData::I32(
+                raw.chunks_exact(4).map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect(),
+            ),
+            _ => RecData::U8(raw.to_vec()),
+        };
+        if version >= 3 {
+            let body_end = cur.i;
+            let want = cur.u32("record CRC")?;
+            if crc32(&bytes[start..body_end]) != want {
+                return Err(CkptError::CorruptRecord { name, offset: start }.into());
+            }
+        }
+        if !seen.insert(name.clone()) {
+            return Err(CkptError::DuplicateRecord { name }.into());
+        }
+        records.push(Record { name, dims, data });
+    }
+    boundaries.push(cur.i);
+    if version >= 3 {
+        let footer_start = cur.i;
+        let tag = cur.bytes(4, "footer magic").map_err(|_| CkptError::CorruptFooter {
+            detail: "file ends before the footer".into(),
+        })?;
+        if tag != FOOTER_MAGIC {
+            return Err(CkptError::CorruptFooter { detail: "bad footer magic".into() }.into());
+        }
+        let want = cur.u32("footer CRC").map_err(|_| CkptError::CorruptFooter {
+            detail: "file ends inside the footer".into(),
+        })?;
+        if crc32(&bytes[..footer_start]) != want {
+            return Err(CkptError::CorruptFooter { detail: "file CRC mismatch".into() }.into());
+        }
+    }
+    if cur.remaining() != 0 {
+        return Err(CkptError::Malformed {
+            detail: format!("{} trailing bytes after the last record", cur.remaining()),
+        }
+        .into());
+    }
+    Ok(Parsed { version, records, boundaries })
+}
+
+/// Byte offsets of every record boundary in a checkpoint file (record
+/// starts, plus the end of the last record) — the truncation sweep in
+/// `tests/crash_recovery.rs` tears a copy at each of these.
+pub fn record_boundaries(path: &Path) -> crate::Result<Vec<usize>> {
+    Ok(parse_file(path)?.boundaries)
+}
+
+// ---- raw store files ----------------------------------------------------
+
+/// Save every store tensor whose name starts with one of `prefixes`
+/// (format v3, written atomically).
+pub fn save(store: &Store, prefixes: &[&str], path: &Path) -> crate::Result<usize> {
+    let names: Vec<&str> = store
+        .names()
+        .into_iter()
+        .filter(|n| prefixes.iter().any(|p| n.starts_with(p)))
+        .collect();
+    let mut w = FileWriter::new(VERSION);
+    for name in &names {
+        w.store_record(store, name)?;
+    }
+    faultfs::write_atomic(path, &w.finish())?;
+    Ok(names.len())
+}
+
+/// [`save`] in format v2 (no checksums) — the back-compat fixture writer
+/// the corrupt-load tests use to prove pre-v3 files still restore.
+pub fn save_as_v2(store: &Store, prefixes: &[&str], path: &Path) -> crate::Result<usize> {
+    let names: Vec<&str> = store
+        .names()
+        .into_iter()
+        .filter(|n| prefixes.iter().any(|p| n.starts_with(p)))
+        .collect();
+    let mut w = FileWriter::new(2);
+    for name in &names {
+        w.store_record(store, name)?;
+    }
+    faultfs::write_atomic(path, &w.finish())?;
     Ok(names.len())
 }
 
 /// Load a checkpoint into the store (overwrites same-name tensors).
+/// All-or-nothing: the file parses and verifies into a scratch store
+/// first, so on error the live store is untouched.
 pub fn load(store: &mut Store, path: &Path) -> crate::Result<usize> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(crate::eyre!("not a slope checkpoint: {}", path.display()));
-    }
-    let version = read_u32(&mut f)?;
-    if version == 0 || version > VERSION {
-        return Err(crate::eyre!("unsupported checkpoint version {version}"));
-    }
-    let count = read_u32(&mut f)? as usize;
-    for _ in 0..count {
-        let name_len = read_u32(&mut f)? as usize;
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let name = String::from_utf8(name).map_err(|e| crate::eyre!("{e}"))?;
-        let mut dtype = [0u8; 1];
-        f.read_exact(&mut dtype)?;
-        let ndims = read_u32(&mut f)? as usize;
-        let mut dims = Vec::with_capacity(ndims);
-        for _ in 0..ndims {
-            let mut b = [0u8; 8];
-            f.read_exact(&mut b)?;
-            dims.push(u64::from_le_bytes(b) as usize);
-        }
-        let n: usize = dims.iter().product::<usize>().max(1);
-        match dtype[0] {
-            0 => {
-                let mut data = vec![0f32; n];
-                let mut b = [0u8; 4];
-                for v in data.iter_mut() {
-                    f.read_exact(&mut b)?;
-                    *v = f32::from_le_bytes(b);
+    let parsed = parse_file(path)?;
+    let mut scratch = Store::new();
+    for rec in &parsed.records {
+        match &rec.data {
+            RecData::F32(v) => scratch.put_f32(&rec.name, &rec.dims, v)?,
+            RecData::I32(v) => scratch.put_i32(&rec.name, &rec.dims, v)?,
+            RecData::U8(_) => {
+                return Err(CkptError::Malformed {
+                    detail: format!(
+                        "record {:?} is a u8 plane; the store holds f32/i32 only \
+                         (packed planes load via load_packed_weights)",
+                        rec.name
+                    ),
                 }
-                store.put_f32(&name, &dims, &data)?;
+                .into())
             }
-            1 => {
-                let mut data = vec![0i32; n];
-                let mut b = [0u8; 4];
-                for v in data.iter_mut() {
-                    f.read_exact(&mut b)?;
-                    *v = i32::from_le_bytes(b);
-                }
-                store.put_i32(&name, &dims, &data)?;
-            }
-            other => return Err(crate::eyre!("bad dtype tag {other}")),
         }
     }
-    Ok(count)
+    let n = parsed.records.len();
+    store.absorb(scratch);
+    Ok(n)
 }
 
-fn read_u32<R: Read>(r: &mut R) -> crate::Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-// ---- packed compressed-weight planes (version 2) ----------------------
-
-fn write_record_header<W: Write>(f: &mut W, name: &str, dtype: u8,
-                                 dims: &[u64]) -> crate::Result<()> {
-    f.write_all(&(name.len() as u32).to_le_bytes())?;
-    f.write_all(name.as_bytes())?;
-    f.write_all(&[dtype])?;
-    f.write_all(&(dims.len() as u32).to_le_bytes())?;
-    for d in dims {
-        f.write_all(&d.to_le_bytes())?;
-    }
-    Ok(())
-}
+// ---- packed compressed-weight planes ------------------------------------
 
 /// Save compressed weights with their bit-packed metadata plane — the
 /// artifact-shipping path for the Eq.-7 layout (values f32, offsets u8,
 /// scheme/shape i32).  Names must be unique.
 pub fn save_packed_weights(planes: &[(&str, &CompressedNm)], path: &Path) -> crate::Result<usize> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&((planes.len() * 3) as u32).to_le_bytes())?;
+    let mut w = FileWriter::new(VERSION);
     for (name, c) in planes {
-        write_record_header(&mut f, &format!("{name}.values"), 0,
-                            &[c.rows as u64, c.kcols() as u64])?;
-        for v in &c.values {
-            f.write_all(&v.to_le_bytes())?;
-        }
-        write_record_header(&mut f, &format!("{name}.meta"), 2,
-                            &[c.rows as u64, c.row_meta_bytes() as u64])?;
-        f.write_all(&c.meta)?;
-        write_record_header(&mut f, &format!("{name}.scheme"), 1, &[4])?;
-        for v in [c.scheme.n as i32, c.scheme.m as i32, c.rows as i32, c.cols as i32] {
-            f.write_all(&v.to_le_bytes())?;
-        }
+        let values: &[f32] = &c.values;
+        w.record(&format!("{name}.values"), 0, &[c.rows as u64, c.kcols() as u64], |buf| {
+            for v in values {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        });
+        w.record(&format!("{name}.meta"), 2, &[c.rows as u64, c.row_meta_bytes() as u64], |buf| {
+            buf.extend_from_slice(&c.meta);
+        });
+        let scheme = [c.scheme.n as i32, c.scheme.m as i32, c.rows as i32, c.cols as i32];
+        w.record(&format!("{name}.scheme"), 1, &[4], |buf| {
+            for v in scheme {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        });
     }
+    faultfs::write_atomic(path, &w.finish())?;
     Ok(planes.len())
 }
 
 /// Load compressed weights saved by [`save_packed_weights`], rebuilding
 /// each [`CompressedNm`] (values + packed metadata plane) by name.
+/// Assembly is hash-keyed by plane prefix (O(n)); duplicate plane names
+/// are a [`CkptError::DuplicateRecord`], not a silent first-match.
 pub fn load_packed_weights(path: &Path) -> crate::Result<Vec<(String, CompressedNm)>> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(crate::eyre!("not a slope checkpoint: {}", path.display()));
+    let parsed = parse_file(path)?;
+    if parsed.version < 2 {
+        return Err(crate::eyre!(
+            "packed planes need checkpoint version ≥ 2, got {}",
+            parsed.version
+        ));
     }
-    let version = read_u32(&mut f)?;
-    if version < 2 || version > VERSION {
-        return Err(crate::eyre!("packed planes need checkpoint version ≥ 2, got {version}"));
-    }
-    let count = read_u32(&mut f)? as usize;
-    // Collect raw records, then assemble by prefix.
-    let mut values: Vec<(String, Vec<f32>)> = vec![];
-    let mut metas: Vec<(String, Vec<u8>)> = vec![];
-    let mut schemes: Vec<(String, Vec<i32>)> = vec![];
-    for _ in 0..count {
-        let name_len = read_u32(&mut f)? as usize;
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let name = String::from_utf8(name).map_err(|e| crate::eyre!("{e}"))?;
-        let mut dtype = [0u8; 1];
-        f.read_exact(&mut dtype)?;
-        let ndims = read_u32(&mut f)? as usize;
-        let mut n = 1usize;
-        for _ in 0..ndims {
-            let mut b = [0u8; 8];
-            f.read_exact(&mut b)?;
-            n *= u64::from_le_bytes(b) as usize;
-        }
-        match (dtype[0], name.rsplit_once('.')) {
-            (0, Some((prefix, "values"))) => {
-                let mut data = vec![0f32; n];
-                let mut b = [0u8; 4];
-                for v in data.iter_mut() {
-                    f.read_exact(&mut b)?;
-                    *v = f32::from_le_bytes(b);
+    let mut values: HashMap<String, Vec<f32>> = HashMap::new();
+    let mut metas: HashMap<String, Vec<u8>> = HashMap::new();
+    let mut schemes: Vec<(String, Vec<i32>)> = Vec::new();
+    for rec in parsed.records {
+        let split = rec.name.rsplit_once('.');
+        match (rec.data, split) {
+            (RecData::F32(d), Some((prefix, "values"))) => {
+                if values.insert(prefix.to_string(), d).is_some() {
+                    return Err(CkptError::DuplicateRecord { name: rec.name.clone() }.into());
                 }
-                values.push((prefix.to_string(), data));
             }
-            (2, Some((prefix, "meta"))) => {
-                let mut data = vec![0u8; n];
-                f.read_exact(&mut data)?;
-                metas.push((prefix.to_string(), data));
-            }
-            (1, Some((prefix, "scheme"))) => {
-                let mut data = vec![0i32; n];
-                let mut b = [0u8; 4];
-                for v in data.iter_mut() {
-                    f.read_exact(&mut b)?;
-                    *v = i32::from_le_bytes(b);
+            (RecData::U8(d), Some((prefix, "meta"))) => {
+                if metas.insert(prefix.to_string(), d).is_some() {
+                    return Err(CkptError::DuplicateRecord { name: rec.name.clone() }.into());
                 }
-                schemes.push((prefix.to_string(), data));
             }
-            (d, _) => return Err(crate::eyre!("unexpected packed record {name:?} dtype {d}")),
+            (RecData::I32(d), Some((prefix, "scheme"))) => {
+                schemes.push((prefix.to_string(), d));
+            }
+            _ => {
+                return Err(crate::eyre!("unexpected packed record {:?}", rec.name));
+            }
         }
     }
     let mut out = Vec::with_capacity(schemes.len());
     for (prefix, s) in schemes {
         crate::ensure!(s.len() == 4, "malformed scheme record for {prefix:?}");
-        let (n, m, rows, cols) =
-            (s[0] as usize, s[1] as usize, s[2] as usize, s[3] as usize);
+        let (n, m, rows, cols) = (s[0] as usize, s[1] as usize, s[2] as usize, s[3] as usize);
         crate::ensure!(n >= 1 && n <= m && m <= 256 && cols % m == 0,
                        "invalid {n}:{m} scheme for {prefix:?}");
         let vals = values
-            .iter()
-            .find(|(p, _)| *p == prefix)
+            .remove(&prefix)
             .ok_or_else(|| crate::eyre!("missing values plane for {prefix:?}"))?;
         let meta = metas
-            .iter()
-            .find(|(p, _)| *p == prefix)
+            .remove(&prefix)
             .ok_or_else(|| crate::eyre!("missing meta plane for {prefix:?}"))?;
-        let c = CompressedNm {
-            rows,
-            cols,
-            scheme: NmScheme::new(n, m),
-            values: vals.1.clone(),
-            meta: meta.1.clone(),
-        };
+        let c = CompressedNm { rows, cols, scheme: NmScheme::new(n, m), values: vals, meta };
         crate::ensure!(
             c.values.len() == rows * c.kcols() && c.meta.len() == rows * c.row_meta_bytes(),
             "inconsistent packed planes for {prefix:?}"
         );
         out.push((prefix, c));
     }
+    crate::ensure!(
+        values.is_empty() && metas.is_empty(),
+        "packed planes without a scheme record: {:?}",
+        values.keys().chain(metas.keys()).collect::<Vec<_>>()
+    );
     Ok(out)
 }
 
@@ -368,6 +648,242 @@ pub fn load_model_checkpoint(dir: &Path)
         }
     }
     Ok((store, packed))
+}
+
+// ---- training checkpoints (resume) --------------------------------------
+
+/// Trainer-side state beside the store planes: everything the step loop
+/// needs beyond tensors to continue bitwise-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainMeta {
+    /// Last completed optimizer step.
+    pub step: usize,
+    /// The run's total scheduled steps (fixes the LR/phase schedule).
+    pub steps: usize,
+    /// The run's lazy-adapter fraction (fixes the phase-flip step).
+    pub lazy_fraction: f64,
+    /// Data/mask seed of the run.
+    pub seed: u64,
+    /// Whether the lazy adapters were already activated.
+    pub lora_active: bool,
+    /// Data-sampler RNG state as of this step ([`crate::util::Rng::state`]).
+    pub rng: ([u64; 4], Option<f64>),
+}
+
+impl TrainMeta {
+    /// Serialize as one JSON line plus a `crc32:` trailer line, so a
+    /// bit-flip in the sidecar is as detectable as one in the tensor
+    /// file.  u64/f64 values ride as decimal-bit strings: JSON numbers
+    /// are f64 and would round 64-bit integers.
+    fn to_file_string(&self) -> String {
+        let (s, spare) = self.rng;
+        let body = json::obj(vec![
+            ("step", json::num(self.step as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("lazy_fraction_bits", json::s(self.lazy_fraction.to_bits().to_string())),
+            ("seed", json::s(self.seed.to_string())),
+            ("lora_active", Json::Bool(self.lora_active)),
+            ("rng_s", json::arr(s.iter().map(|w| json::s(w.to_string())))),
+            (
+                "rng_spare_bits",
+                match spare {
+                    Some(v) => json::s(v.to_bits().to_string()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+        .to_string();
+        let crc = crc32(body.as_bytes());
+        format!("{body}\ncrc32:{crc:08x}\n")
+    }
+
+    fn from_file_string(text: &str) -> crate::Result<TrainMeta> {
+        let mut lines = text.lines();
+        let body = lines
+            .next()
+            .ok_or_else(|| crate::eyre!("train meta: empty file"))?;
+        let crc_line = lines
+            .next()
+            .ok_or_else(|| crate::eyre!("train meta: missing crc32 trailer"))?;
+        let want = crc_line
+            .strip_prefix("crc32:")
+            .and_then(|h| u32::from_str_radix(h.trim(), 16).ok())
+            .ok_or_else(|| crate::eyre!("train meta: bad crc32 trailer {crc_line:?}"))?;
+        if crc32(body.as_bytes()) != want {
+            return Err(CkptError::CorruptRecord { name: TRAIN_META_FILE.into(), offset: 0 }.into());
+        }
+        let j = Json::parse(body)?;
+        let parse_u64 = |v: &Json, what: &str| -> crate::Result<u64> {
+            v.as_str()
+                .ok_or_else(|| crate::eyre!("train meta: {what} not a string"))?
+                .parse::<u64>()
+                .map_err(|e| crate::eyre!("train meta: bad {what}: {e}"))
+        };
+        let rng_arr = j.req("rng_s")?.as_arr().ok_or_else(|| crate::eyre!("rng_s not an array"))?;
+        crate::ensure!(rng_arr.len() == 4, "train meta: rng_s needs 4 words");
+        let mut s = [0u64; 4];
+        for (i, w) in rng_arr.iter().enumerate() {
+            s[i] = parse_u64(w, "rng_s word")?;
+        }
+        let spare = match j.req("rng_spare_bits")? {
+            Json::Null => None,
+            v => Some(f64::from_bits(parse_u64(v, "rng_spare_bits")?)),
+        };
+        Ok(TrainMeta {
+            step: j.req_usize("step")?,
+            steps: j.req_usize("steps")?,
+            lazy_fraction: f64::from_bits(parse_u64(j.req("lazy_fraction_bits")?,
+                                                    "lazy_fraction_bits")?),
+            seed: parse_u64(j.req("seed")?, "seed")?,
+            lora_active: j.req_bool("lora_active")?,
+            rng: (s, spare),
+        })
+    }
+}
+
+fn step_dir_name(step: usize) -> String {
+    format!("step_{step:08}")
+}
+
+/// `(step, path)` for every `step_NNNNNNNN` directory, newest first.
+fn list_step_dirs(train_root: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out: Vec<(usize, PathBuf)> = Vec::new();
+    let Ok(entries) = std::fs::read_dir(train_root) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(step) = name.strip_prefix("step_").and_then(|s| s.parse::<usize>().ok()) {
+            if entry.path().is_dir() {
+                out.push((step, entry.path()));
+            }
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out
+}
+
+/// Re-read and fully verify one step directory (structure + checksums of
+/// both files); returns its meta.  This is the gate `LATEST` advances
+/// behind — and the recovery walk's validity check.
+fn verify_step_dir(step_dir: &Path) -> crate::Result<TrainMeta> {
+    parse_file(&step_dir.join(TRAIN_FILE))?;
+    let text = std::fs::read_to_string(step_dir.join(TRAIN_META_FILE))
+        .map_err(|e| crate::eyre!("reading {}: {e}", step_dir.join(TRAIN_META_FILE).display()))?;
+    TrainMeta::from_file_string(&text)
+}
+
+/// Write a full **training checkpoint** under `dir/train/step_NNNNNNNN/`:
+/// every [`TRAIN_PREFIXES`] store plane (params, compressed-space
+/// moments, masks, adapters and their AdamW chain) plus the [`TrainMeta`]
+/// sidecar.  The `LATEST` pointer advances only after the just-written
+/// files re-read and verify — a torn or bit-flipped write is deleted and
+/// surfaces as an error, leaving `LATEST` on the previous valid step.
+/// Afterwards prunes all but the newest `keep_last` step directories.
+pub fn save_train_checkpoint(store: &Store, meta: &TrainMeta, dir: &Path,
+                             keep_last: usize) -> crate::Result<PathBuf> {
+    let train_root = dir.join(TRAIN_DIR);
+    let step_dir = train_root.join(step_dir_name(meta.step));
+    std::fs::create_dir_all(&step_dir)
+        .map_err(|e| crate::eyre!("creating {}: {e}", step_dir.display()))?;
+    let write = (|| -> crate::Result<()> {
+        save(store, &TRAIN_PREFIXES, &step_dir.join(TRAIN_FILE))?;
+        faultfs::write_atomic(&step_dir.join(TRAIN_META_FILE),
+                              meta.to_file_string().as_bytes())?;
+        // Verify-after-write: the pointer must never name a checkpoint
+        // that does not load.
+        let back = verify_step_dir(&step_dir)?;
+        crate::ensure!(back == *meta, "train checkpoint verify: meta mismatch after write");
+        Ok(())
+    })();
+    if let Err(e) = write {
+        std::fs::remove_dir_all(&step_dir).ok();
+        return Err(crate::eyre!(
+            "train checkpoint at step {} failed verification and was discarded: {e}",
+            meta.step
+        ));
+    }
+    faultfs::write_atomic(&train_root.join(LATEST_FILE), step_dir_name(meta.step).as_bytes())?;
+    // Retention: keep the newest `keep_last` steps (at least the one just
+    // written).  Best-effort — a failed removal never fails the save.
+    for (_, old) in list_step_dirs(&train_root).into_iter().skip(keep_last.max(1)) {
+        if old != step_dir {
+            std::fs::remove_dir_all(&old).ok();
+        }
+    }
+    Ok(step_dir)
+}
+
+/// Restore the newest **valid** training checkpoint under `dir`: try the
+/// `LATEST` pointer first, then every `step_NNNNNNNN` directory newest
+/// first, skipping (with a logged warning) any that fails verification —
+/// so recovery after a torn or corrupted write lands on the last good
+/// state instead of erroring out.  Errors only when no valid checkpoint
+/// exists at all.
+pub fn load_train_checkpoint(dir: &Path) -> crate::Result<(Store, TrainMeta)> {
+    walk_valid_checkpoints(dir, |step_dir, meta| {
+        let mut store = Store::new();
+        load(&mut store, &step_dir.join(TRAIN_FILE))?;
+        Ok((store, meta))
+    })
+}
+
+/// The newest valid checkpoint's [`TrainMeta`] without loading tensors —
+/// how `slope train --resume` learns the run's schedule and seed before
+/// constructing the trainer.
+pub fn peek_train_meta(dir: &Path) -> crate::Result<TrainMeta> {
+    walk_valid_checkpoints(dir, |_, meta| Ok(meta))
+}
+
+fn walk_valid_checkpoints<T>(
+    dir: &Path,
+    mut use_checkpoint: impl FnMut(&Path, TrainMeta) -> crate::Result<T>,
+) -> crate::Result<T> {
+    let train_root = dir.join(TRAIN_DIR);
+    crate::ensure!(
+        train_root.is_dir(),
+        "no training checkpoint under {} (train with --checkpoint-dir first)",
+        dir.display()
+    );
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    if let Ok(pointer) = std::fs::read_to_string(train_root.join(LATEST_FILE)) {
+        let target = train_root.join(pointer.trim());
+        if target.is_dir() {
+            candidates.push(target);
+        } else {
+            eprintln!(
+                "[checkpoint] LATEST points at missing {:?}; falling back to a scan",
+                pointer.trim()
+            );
+        }
+    }
+    for (_, path) in list_step_dirs(&train_root) {
+        if !candidates.contains(&path) {
+            candidates.push(path);
+        }
+    }
+    let mut last_err: Option<crate::Error> = None;
+    for step_dir in &candidates {
+        match verify_step_dir(step_dir).and_then(|meta| use_checkpoint(step_dir, meta)) {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                eprintln!(
+                    "[checkpoint] skipping invalid checkpoint {}: {e}",
+                    step_dir.display()
+                );
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(match last_err {
+        Some(e) => crate::eyre!(
+            "no valid training checkpoint under {} (all {} candidates failed; last: {e})",
+            dir.display(),
+            candidates.len()
+        ),
+        None => crate::eyre!("no training checkpoint under {}", dir.display()),
+    })
 }
 
 #[cfg(test)]
@@ -477,5 +993,90 @@ mod tests {
         assert_eq!(fresh.read_f32("params.a").unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert_eq!(fresh.read_f32("opt.b").unwrap(), vec![9.0]);
         std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn v2_file_loads_without_checksums() {
+        let mut store = Store::new();
+        store.put_f32("params.a", &[3], &[1.0, 2.0, 3.0]).unwrap();
+        let tmp = std::env::temp_dir().join("slope_ckpt_v2_test.slopeckpt");
+        save_as_v2(&store, &["params."], &tmp).unwrap();
+        let mut fresh = Store::new();
+        assert_eq!(load(&mut fresh, &tmp).unwrap(), 1);
+        assert_eq!(fresh.read_f32("params.a").unwrap(), vec![1.0, 2.0, 3.0]);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn bitflip_is_detected_and_leaves_store_untouched() {
+        let mut store = Store::new();
+        store.put_f32("params.a", &[4], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let tmp = std::env::temp_dir().join("slope_ckpt_flip_test.slopeckpt");
+        save(&store, &["params."], &tmp).unwrap();
+        let mut bytes = std::fs::read(&tmp).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&tmp, &bytes).unwrap();
+        let mut fresh = Store::new();
+        let err = load(&mut fresh, &tmp).unwrap_err();
+        assert!(err.downcast_ref::<CkptError>().is_some(), "structured error, got: {err}");
+        assert!(fresh.names().is_empty(), "corrupt load must not populate the store");
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn train_meta_file_roundtrip_and_crc() {
+        let meta = TrainMeta {
+            step: 7,
+            steps: 12,
+            lazy_fraction: 0.34,
+            seed: u64::MAX - 3,
+            lora_active: true,
+            rng: ([1, u64::MAX, 3, 4], Some(-1.25e-7)),
+        };
+        let text = meta.to_file_string();
+        assert_eq!(TrainMeta::from_file_string(&text).unwrap(), meta);
+        let flipped = text.replace("\"step\":7", "\"step\":9");
+        assert!(TrainMeta::from_file_string(&flipped).is_err(), "crc must catch edits");
+    }
+
+    #[test]
+    fn train_checkpoint_retention_and_latest() {
+        let dir = std::env::temp_dir().join("slope_train_ckpt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut store = Store::new();
+        store.put_f32("params.a", &[2], &[1.0, 2.0]).unwrap();
+        store.put_f32("opt.m.a", &[2], &[0.1, 0.2]).unwrap();
+        let meta = |step: usize| TrainMeta {
+            step,
+            steps: 10,
+            lazy_fraction: 0.0,
+            seed: 1,
+            lora_active: false,
+            rng: ([5, 6, 7, 8], None),
+        };
+        for step in [1usize, 2, 3] {
+            store.put_f32("params.a", &[2], &[step as f32, 2.0]).unwrap();
+            save_train_checkpoint(&store, &meta(step), &dir, 2).unwrap();
+        }
+        let root = dir.join(TRAIN_DIR);
+        assert!(!root.join("step_00000001").exists(), "retention prunes beyond keep-last 2");
+        assert!(root.join("step_00000002").exists() && root.join("step_00000003").exists());
+        assert_eq!(std::fs::read_to_string(root.join(LATEST_FILE)).unwrap(), "step_00000003");
+        let (back, m) = load_train_checkpoint(&dir).unwrap();
+        assert_eq!(m, meta(3));
+        assert_eq!(back.read_f32("params.a").unwrap(), vec![3.0, 2.0]);
+        assert_eq!(peek_train_meta(&dir).unwrap().step, 3);
+        // Corrupt the newest: recovery falls back to step 2.
+        let newest = root.join("step_00000003").join(TRAIN_FILE);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (back, m) = load_train_checkpoint(&dir).unwrap();
+        assert_eq!(m.step, 2, "fallback must land on the previous valid step");
+        assert_eq!(back.read_f32("params.a").unwrap(), vec![2.0, 2.0]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -31,6 +31,9 @@ pub struct Trainer {
     pub metrics: Metrics,
     rng: Rng,
     lora_active: bool,
+    /// Last completed step restored from a `--resume` checkpoint (0 on a
+    /// fresh run); the step loop continues at `start_step + 1`.
+    start_step: usize,
     /// Reusable token staging for the step loop (allocation-free steps).
     tokens_buf: Vec<i32>,
     /// Packed mask snapshots for the SR-STE churn metric.
@@ -49,8 +52,26 @@ pub struct TrainOutcome {
 }
 
 impl Trainer {
-    pub fn new(cfg: RunConfig) -> crate::Result<Self> {
-        let dir = cfg.artifacts.join(&cfg.model);
+    pub fn new(mut cfg: RunConfig) -> crate::Result<Self> {
+        if let Some(resume) = &cfg.resume {
+            // A resumed run opens the checkpoint directory itself as its
+            // artifact dir: the manifest copy written at checkpoint time
+            // (no HLO beside it) routes the session to the host executor,
+            // and the restored state comes from `<resume>/train/`.
+            crate::ensure!(
+                resume.join("manifest.json").exists(),
+                "--resume {}: no manifest.json there (not a checkpoint directory; \
+                 train with --checkpoint-dir first)",
+                resume.display()
+            );
+            if cfg.checkpoint_dir.is_none() {
+                cfg.checkpoint_dir = Some(resume.clone());
+            }
+        }
+        let dir = match &cfg.resume {
+            Some(resume) => resume.clone(),
+            None => cfg.artifacts.join(&cfg.model),
+        };
         if !dir.join("manifest.json").exists() {
             // No AOT artifacts: fabricate a host-trainable config in
             // place (manifest only — `init` creates the state) instead of
@@ -89,6 +110,7 @@ impl Trainer {
             corpus,
             cfg,
             lora_active: false,
+            start_step: 0,
             tokens_buf: vec![],
             churn_snapshots: vec![],
             adapter_snapshots: vec![],
@@ -145,6 +167,14 @@ impl Trainer {
         };
         eprintln!("[trainer] executor: {}", kind.describe());
         self.store.put_scalar_i32("seed", self.cfg.seed as i32);
+        if let Some(resume) = self.cfg.resume.clone() {
+            // Restored state replaces `init` wholesale: params, moments,
+            // masks and the adapter chain come from the checkpoint (the
+            // executor re-ingests them on its first step), so neither the
+            // init executable nor the mask policy may run — both would
+            // overwrite the restored run.
+            return self.restore_from(&resume);
+        }
         self.run_exe("init")?;
         match self.cfg.method {
             Method::Slope => {}
@@ -154,6 +184,45 @@ impl Trainer {
                 self.run_exe("fig9_init")?;
             }
         }
+        Ok(())
+    }
+
+    /// Restore the newest valid training checkpoint under `dir` and
+    /// position the run to continue at its step + 1.  The restored RNG
+    /// state, step counter and schedule make the continuation bitwise
+    /// identical to the uninterrupted run (the crate's kernels are
+    /// bit-deterministic across thread counts).
+    fn restore_from(&mut self, dir: &std::path::Path) -> crate::Result<()> {
+        let (loaded, meta) = checkpoint::load_train_checkpoint(dir)?;
+        crate::ensure!(
+            meta.seed == self.cfg.seed,
+            "--resume: checkpoint was trained with seed {}, this run is configured \
+             with seed {} (the data stream would diverge); pass --seed {}",
+            meta.seed,
+            self.cfg.seed,
+            meta.seed
+        );
+        if meta.steps != self.cfg.steps
+            || meta.lazy_fraction.to_bits() != self.cfg.lazy_fraction.to_bits()
+        {
+            eprintln!(
+                "[trainer] warning: resumed schedule (steps={}, lazy={}) differs from \
+                 the checkpoint's (steps={}, lazy={}); the phase flip shifts and the \
+                 run is no longer bitwise-reproducible against the original",
+                self.cfg.steps, self.cfg.lazy_fraction, meta.steps, meta.lazy_fraction
+            );
+        }
+        self.store.absorb(loaded);
+        self.rng = Rng::from_state(meta.rng.0, meta.rng.1);
+        self.lora_active = meta.lora_active;
+        self.start_step = meta.step;
+        eprintln!(
+            "[trainer] resumed from {} at step {}/{} ({} phase)",
+            dir.display(),
+            meta.step,
+            self.cfg.steps,
+            if meta.lora_active { "lora" } else { "sparse" }
+        );
         Ok(())
     }
 
@@ -207,16 +276,20 @@ impl Trainer {
                  single-stream"
             }
         );
-        self.eval_point(0)?;
-        // Checkpoint at EVERY eval point, step 0 included — a
-        // `--steps 0` run (or one that diverges before the first cadence
-        // point) must still leave a servable checkpoint behind.
-        self.checkpoint_point(0)?;
+        if self.start_step == 0 {
+            self.eval_point(0)?;
+            // Checkpoint at EVERY eval point, step 0 included — a
+            // `--steps 0` run (or one that diverges before the first
+            // cadence point) must still leave a servable checkpoint
+            // behind.  A resumed run skips the step-0 points: they
+            // already happened in the original run.
+            self.checkpoint_point(0)?;
+        }
         let flip_at = self.cfg.sparse_steps();
 
         let (b, s1) = self.manifest.train_tokens_shape();
         let mut last_loss = f32::NAN;
-        for step in 1..=self.cfg.steps {
+        for step in (self.start_step + 1)..=self.cfg.steps {
             if lazy_enabled && !self.lora_active && step > flip_at {
                 self.activate_lora()?;
             }
@@ -277,10 +350,15 @@ impl Trainer {
         })
     }
 
-    /// Eval-cadence serving checkpoint (when `--checkpoint-dir` is set):
-    /// store planes + the backends' packed `CompressedNm` planes (format
-    /// v2, so restores skip re-compression) + a manifest copy, making the
-    /// directory self-contained for `slope serve --manifest`.
+    /// Eval-cadence checkpoint (when `--checkpoint-dir` is set): the
+    /// **serving** checkpoint (store planes + packed `CompressedNm`
+    /// planes + a manifest copy, self-contained for
+    /// `slope serve --manifest`) plus a full **training** checkpoint
+    /// under `<dir>/train/` — moments, adapter chain, step counter and
+    /// RNG state — so `slope train --resume <dir>` continues the run
+    /// bitwise-identically.  All files go through the crash-safe atomic
+    /// writer; the train `LATEST` pointer only advances after the new
+    /// step directory re-reads and verifies.
     fn checkpoint_point(&mut self, step: usize) -> crate::Result<()> {
         let Some(dir) = self.cfg.checkpoint_dir.clone() else {
             return Ok(());
@@ -291,16 +369,21 @@ impl Trainer {
             checkpoint::save_model_checkpoint(&self.store, &self.manifest, &dir)?;
         // Copy the manifest the session actually loaded (its recorded
         // `dir`), not a re-derived artifacts/<model> path.
-        let manifest_src = self.manifest.dir.join("manifest.json");
-        let manifest_dst = dir.join("manifest.json");
-        if manifest_src != manifest_dst {
-            std::fs::copy(&manifest_src, &manifest_dst).map_err(|e| {
-                crate::eyre!("copying {} into the checkpoint: {e}", manifest_src.display())
-            })?;
-        }
+        self.manifest.copy_into(&dir)?;
+        let meta = checkpoint::TrainMeta {
+            step,
+            steps: self.cfg.steps,
+            lazy_fraction: self.cfg.lazy_fraction,
+            seed: self.cfg.seed,
+            lora_active: self.lora_active,
+            // RNG state AFTER this step's batch draw: the resumed loop
+            // continues at step+1 with exactly the next batch.
+            rng: self.rng.state(),
+        };
+        checkpoint::save_train_checkpoint(&self.store, &meta, &dir, self.cfg.keep_checkpoints)?;
         eprintln!(
-            "[trainer] step {step}: serving checkpoint ({tensors} tensors, \
-             {planes} packed planes) -> {}",
+            "[trainer] step {step}: checkpoint ({tensors} tensors, {planes} packed \
+             planes, train state) -> {}",
             dir.display()
         );
         Ok(())

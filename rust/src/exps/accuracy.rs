@@ -23,6 +23,8 @@ fn run_cfg(args: &ExpArgs, model: &str, method: Method, lazy: f64) -> RunConfig 
         artifacts: args.artifacts.clone(),
         out_dir: args.out_dir.clone(),
         checkpoint_dir: None,
+        resume: None,
+        keep_checkpoints: 3,
         parallel: crate::backend::ParallelPolicy::auto(),
     }
 }

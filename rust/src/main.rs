@@ -11,7 +11,7 @@
 
 use slope::backend::{ParallelPolicy, PartitionStrategy};
 use slope::config::{Fig9Variant, Method, RunConfig};
-use slope::coordinator::Trainer;
+use slope::coordinator::{checkpoint, Trainer};
 use slope::exps::{self, ExpArgs};
 use slope::runtime::Manifest;
 use slope::serve::{Admission, AotModel, BatchPolicy, DecodeAdmission, DecodeEngine,
@@ -28,12 +28,15 @@ slope — SLoPe (ICLR'25) rust coordinator
 USAGE:
   slope train [--model M] [--method METH] [--steps N] [--lazy-fraction F]
               [--eval-every N] [--seed S] [--artifacts DIR] [--out-dir DIR]
-              [--checkpoint-dir DIR]           # serving checkpoints at evals
+              [--checkpoint-dir DIR]           # serving + training ckpts at evals
+              [--resume DIR]                   # continue from newest valid ckpt
+              [--keep-checkpoints K]           # training-ckpt retention (default 3)
               [--threads T] [--partition P]    # kernel engine; 0 = auto
 
   slope serve [--manifest DIR]                 # serve a checkpointed model
               [--layers L] [--d-model D] [--d-ff F] [--rank R]  # synthetic stack
               [--requests N] [--max-batch B] [--max-wait-ms MS]
+              [--request-timeout-ms MS]        # per-request deadline (0 = none)
               [--producers N]                  # async admission, N producer threads
               [--queue-cap N] [--overload O]   # bounded admission (shed/backpressure)
               [--decode]                       # continuous-batching generation mode
@@ -135,8 +138,8 @@ fn print_serve_summary(done: usize, s: &StatsSummary, max_batch: usize) {
 /// `queue` with the reject policy, shed submissions are counted rather
 /// than treated as failures — overload is the behaviour being measured.
 fn serve_run<M, F, G>(build: F, make_input: G, n_requests: usize, producers: usize,
-                      policy: BatchPolicy, queue: QueuePolicy,
-                      seed: u64) -> slope::Result<()>
+                      policy: BatchPolicy, queue: QueuePolicy, seed: u64,
+                      request_timeout: Option<Duration>) -> slope::Result<()>
 where
     M: ServeModel + 'static,
     F: FnOnce() -> slope::Result<ServeEngine<M>> + Send + 'static,
@@ -146,13 +149,15 @@ where
         let mut eng = build()?;
         println!("model      : {}", eng.model().describe());
         let mut rng = Rng::seed_from_u64(seed);
-        let done = eng.run_open_loop(n_requests, || make_input(&mut rng))?;
+        let done = eng.run_open_loop_with_deadline(n_requests, || make_input(&mut rng),
+                                                   request_timeout)?;
         let s = eng.stats().summary();
         print_serve_summary(done, &s, eng.policy().max_batch);
         return Ok(());
     }
 
-    let adm = Admission::spawn_with_queue(build, Admission::tick_for(policy.max_wait), queue);
+    let adm = Admission::spawn_with_opts(build, Admission::tick_for(policy.max_wait), queue,
+                                         request_timeout);
     let base = n_requests / producers;
     let extra = n_requests % producers;
     let mut handles = Vec::with_capacity(producers);
@@ -197,8 +202,8 @@ where
 /// through the continuous-batching [`DecodeEngine`] — inline
 /// (`producers == 0`) or via the async [`DecodeAdmission`] front-end.
 fn serve_decode_run<M, F, G>(build: F, make_prompt: G, n_requests: usize, producers: usize,
-                             max_batch: usize, queue: QueuePolicy,
-                             seed: u64) -> slope::Result<()>
+                             max_batch: usize, queue: QueuePolicy, seed: u64,
+                             request_timeout: Option<Duration>) -> slope::Result<()>
 where
     M: DecodeModel + 'static,
     F: FnOnce() -> slope::Result<DecodeEngine<M>> + Send + 'static,
@@ -211,7 +216,9 @@ where
         let start = Instant::now();
         let (mut done, mut shed) = (0usize, 0usize);
         for _ in 0..n_requests {
-            match eng.submit(make_prompt(&mut rng), None, start.elapsed()) {
+            let now = start.elapsed();
+            let deadline = request_timeout.map(|t| now + t);
+            match eng.submit_with_deadline(make_prompt(&mut rng), None, now, deadline) {
                 Ok(_) => {}
                 Err(_) => shed += 1, // inline engines can only shed
             }
@@ -226,7 +233,8 @@ where
         return Ok(());
     }
 
-    let adm = DecodeAdmission::spawn(build, Duration::from_micros(200), queue);
+    let adm = DecodeAdmission::spawn_with_opts(build, Duration::from_micros(200), queue,
+                                               request_timeout);
     let base = n_requests / producers;
     let extra = n_requests % producers;
     let mut handles = Vec::with_capacity(producers);
@@ -335,17 +343,33 @@ fn main() -> slope::Result<()> {
 
     match cmd {
         "train" => {
+            let resume = flags.map.get("resume").map(PathBuf::from);
+            // A resumed run defaults its schedule/seed flags to the
+            // checkpoint's recorded values, so a bare `slope train
+            // --resume D` continues the original run exactly; explicit
+            // flags still override (the Trainer hard-errors on a seed
+            // mismatch and warns on schedule drift).
+            let ckpt_meta = match &resume {
+                Some(dir) => Some(checkpoint::peek_train_meta(dir)?),
+                None => None,
+            };
+            let (d_steps, d_lazy, d_seed) = match &ckpt_meta {
+                Some(m) => (m.steps, m.lazy_fraction, m.seed),
+                None => (200, 0.05, 0),
+            };
             let cfg = RunConfig {
                 model: flags.get("model", "gpt-nano"),
                 method: parse_method(&flags.get("method", "slope"))?,
-                steps: flags.usize("steps", 200)?,
-                lazy_fraction: flags.f64("lazy-fraction", 0.05)?,
+                steps: flags.usize("steps", d_steps)?,
+                lazy_fraction: flags.f64("lazy-fraction", d_lazy)?,
                 eval_every: flags.usize("eval-every", 25)?,
                 eval_batches: flags.usize("eval-batches", 4)?,
-                seed: flags.usize("seed", 0)? as u64,
+                seed: flags.usize("seed", d_seed as usize)? as u64,
                 artifacts,
                 out_dir: out_dir.clone(),
                 checkpoint_dir: flags.map.get("checkpoint-dir").map(PathBuf::from),
+                resume,
+                keep_checkpoints: flags.usize("keep-checkpoints", 3)?.max(1),
                 parallel: ParallelPolicy::with_threads(flags.usize("threads", 0)?)
                     .with_partition(parse_partition(&flags.get("partition", "auto"))?),
             };
@@ -384,6 +408,10 @@ fn main() -> slope::Result<()> {
                     flags.usize("queue-cap", 64)?.max(1),
                     parse_overload(&flags.get("overload", "reject"))?,
                 ),
+            };
+            let request_timeout = {
+                let ms = flags.f64("request-timeout-ms", 0.0)?;
+                (ms > 0.0).then(|| Duration::from_secs_f64(ms / 1e3))
             };
 
             if flags.flag_set("decode") {
@@ -454,6 +482,7 @@ fn main() -> slope::Result<()> {
                         eff_batch,
                         queue,
                         seed,
+                        request_timeout,
                     )?;
                 } else {
                     let d_model = flags.usize("d-model", 256)?;
@@ -493,6 +522,7 @@ fn main() -> slope::Result<()> {
                         max_batch,
                         queue,
                         seed,
+                        request_timeout,
                     )?;
                 }
             } else if let Some(dir) = flags.map.get("manifest").map(PathBuf::from) {
@@ -528,6 +558,7 @@ fn main() -> slope::Result<()> {
                     batch_policy,
                     queue,
                     seed,
+                    request_timeout,
                 )?;
             } else {
                 // Synthetic kernel-stack path: alternating
@@ -578,6 +609,7 @@ fn main() -> slope::Result<()> {
                     batch_policy,
                     queue,
                     seed,
+                    request_timeout,
                 )?;
             }
         }

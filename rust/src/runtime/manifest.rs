@@ -197,6 +197,21 @@ impl Manifest {
         Ok(Manifest { config, train, sparsity_format, executables, dir: dir.to_path_buf() })
     }
 
+    /// Copy this manifest's `manifest.json` into `dst_dir` crash-safely
+    /// (atomic replace via [`crate::util::faultfs::write_atomic`]) — the
+    /// checkpoint writer's manifest-copy step, so a kill mid-copy can
+    /// never leave a half-written manifest in a checkpoint directory.
+    pub fn copy_into(&self, dst_dir: &Path) -> crate::Result<()> {
+        let src = self.dir.join("manifest.json");
+        let dst = dst_dir.join("manifest.json");
+        if src == dst {
+            return Ok(());
+        }
+        let bytes = std::fs::read(&src)
+            .map_err(|e| crate::eyre!("reading {}: {e}", src.display()))?;
+        crate::util::faultfs::write_atomic(&dst, &bytes)
+    }
+
     pub fn exe(&self, name: &str) -> crate::Result<&ExeSpec> {
         self.executables
             .get(name)

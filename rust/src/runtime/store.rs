@@ -88,6 +88,17 @@ impl Store {
         v
     }
 
+    /// Move every tensor of `other` into this store (version-bumped like
+    /// any insert).  Checkpoint restores parse into a scratch store first
+    /// and absorb only on full success, so a corrupt file can never leave
+    /// the live store partially populated.
+    pub fn absorb(&mut self, other: Store) {
+        for (name, (_, lit)) in other.map {
+            self.counter += 1;
+            self.map.insert(name, (self.counter, lit));
+        }
+    }
+
     /// Copy a tensor under a new name (literals clone cheaply enough at our
     /// scales; used for snapshotting converged adapters in Fig 3b).
     pub fn duplicate(&mut self, from: &str, to: &str) -> crate::Result<()> {

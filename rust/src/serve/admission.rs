@@ -145,6 +145,13 @@ fn queue_channel<T>(policy: QueuePolicy) -> (Tx<T>, Receiver<T>) {
 /// One routed reply: the client's tag plus the outcome.
 pub type Reply = (u64, crate::Result<Response>);
 
+/// Slack added to a client's total `recv` wait on top of the configured
+/// request timeout: the dispatcher enforces the real deadline and always
+/// replies (expired ⇒ an error reply), so this bound only has to cover
+/// dispatch/compute latency — it exists so a wedged dispatcher can never
+/// strand a producer forever once a budget is configured.
+const CLIENT_RECV_GRACE: Duration = Duration::from_secs(5);
+
 enum Msg {
     Submit { tag: u64, input: Vec<f32>, reply: Sender<Reply> },
 }
@@ -158,6 +165,9 @@ pub struct Admission {
     /// them in `recv` (each client holds its own reply sender, so the
     /// reply channel alone cannot signal disconnection).
     alive: Arc<AtomicBool>,
+    /// Per-request deadline budget applied at admission (`None` = no
+    /// deadlines); also bounds minted clients' total `recv` wait.
+    request_timeout: Option<Duration>,
 }
 
 /// A producer-side handle: submit tagged inputs, receive tagged replies.
@@ -167,6 +177,9 @@ pub struct AdmissionClient {
     reply_tx: Sender<Reply>,
     reply_rx: Receiver<Reply>,
     alive: Arc<AtomicBool>,
+    /// Total-wait bound on `recv` (request timeout + grace); `None` when
+    /// the front-end runs without deadlines.
+    max_wait: Option<Duration>,
 }
 
 /// RAII: clears the liveness flag however the dispatch thread exits
@@ -199,6 +212,21 @@ impl Admission {
         M: ServeModel + 'static,
         F: FnOnce() -> crate::Result<ServeEngine<M>> + Send + 'static,
     {
+        Self::spawn_with_opts(build, tick, queue, None)
+    }
+
+    /// [`Admission::spawn_with_queue`] plus a per-request deadline
+    /// budget: each request's deadline is its admission time plus
+    /// `request_timeout` (channel wait is governed by the queue policy),
+    /// expired requests are answered with an error reply and counted in
+    /// the engine's `deadline_expired` stat, and minted clients bound
+    /// their total `recv` wait instead of polling forever.
+    pub fn spawn_with_opts<M, F>(build: F, tick: Duration, queue: QueuePolicy,
+                                 request_timeout: Option<Duration>) -> Self
+    where
+        M: ServeModel + 'static,
+        F: FnOnce() -> crate::Result<ServeEngine<M>> + Send + 'static,
+    {
         let (tx, rx) = queue_channel::<Msg>(queue);
         let alive = Arc::new(AtomicBool::new(true));
         let alive_in_thread = Arc::clone(&alive);
@@ -206,10 +234,10 @@ impl Admission {
             .name("slope-admission".into())
             .spawn(move || {
                 let _clear = ClearOnExit(alive_in_thread);
-                dispatch(build, rx, tick, queue)
+                dispatch(build, rx, tick, queue, request_timeout)
             })
             .expect("spawning admission dispatch thread");
-        Self { tx: Some(tx), dispatcher: Some(dispatcher), alive }
+        Self { tx: Some(tx), dispatcher: Some(dispatcher), alive, request_timeout }
     }
 
     /// A reasonable dispatch tick for a batch policy: a quarter of
@@ -226,6 +254,7 @@ impl Admission {
             reply_tx,
             reply_rx,
             alive: Arc::clone(&self.alive),
+            max_wait: self.request_timeout.map(|t| t + CLIENT_RECV_GRACE),
         }
     }
 
@@ -253,8 +282,11 @@ impl AdmissionClient {
 
     /// Block until the next reply for this client arrives.  Returns an
     /// error (instead of hanging) if the dispatcher has died with the
-    /// request unanswered.
+    /// request unanswered — or, under a configured request timeout, once
+    /// the total wait exceeds the budget plus grace (instead of polling
+    /// forever).
     pub fn recv(&self) -> crate::Result<(u64, Response)> {
+        let waited = Instant::now();
         loop {
             match self.reply_rx.recv_timeout(Duration::from_millis(5)) {
                 Ok((tag, result)) => return Ok((tag, result?)),
@@ -266,6 +298,11 @@ impl AdmissionClient {
                             return Ok((tag, result?));
                         }
                         return Err(crate::eyre!("admission dispatcher is gone"));
+                    }
+                    if matches!(self.max_wait, Some(bound) if waited.elapsed() > bound) {
+                        return Err(crate::eyre!(
+                            "no reply within the request-timeout budget"
+                        ));
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
@@ -280,13 +317,13 @@ impl AdmissionClient {
 /// `Err` to every submission still sitting in the queue so no producer is
 /// left blocking on a reply that will never come (submissions arriving
 /// after this drain fail at `send` — the receiver is dropped with us).
-fn dispatch<M, F>(build: F, rx: Receiver<Msg>, tick: Duration,
-                  queue: QueuePolicy) -> crate::Result<StatsSummary>
+fn dispatch<M, F>(build: F, rx: Receiver<Msg>, tick: Duration, queue: QueuePolicy,
+                  request_timeout: Option<Duration>) -> crate::Result<StatsSummary>
 where
     M: ServeModel,
     F: FnOnce() -> crate::Result<ServeEngine<M>>,
 {
-    let result = dispatch_loop(build, &rx, tick, queue);
+    let result = dispatch_loop(build, &rx, tick, queue, request_timeout);
     if let Err(e) = &result {
         let why = e.to_string();
         while let Ok(Msg::Submit { tag, reply, .. }) = rx.try_recv() {
@@ -297,8 +334,8 @@ where
 }
 
 /// The dispatch loop (runs on the dedicated thread).
-fn dispatch_loop<M, F>(build: F, rx: &Receiver<Msg>, tick: Duration,
-                       queue: QueuePolicy) -> crate::Result<StatsSummary>
+fn dispatch_loop<M, F>(build: F, rx: &Receiver<Msg>, tick: Duration, queue: QueuePolicy,
+                       request_timeout: Option<Duration>) -> crate::Result<StatsSummary>
 where
     M: ServeModel,
     F: FnOnce() -> crate::Result<ServeEngine<M>>,
@@ -318,13 +355,15 @@ where
         if room(&engine) {
             match rx.recv_timeout(tick) {
                 Ok(msg) => {
-                    admit(&mut engine, msg, start, &mut routes);
+                    admit(&mut engine, msg, start, &mut routes, request_timeout);
                     // Drain whatever else queued up while we were busy, so
                     // a burst coalesces into one batch instead of one per
                     // tick — but never past the queue bound.
                     while room(&engine) {
                         match rx.try_recv() {
-                            Ok(msg) => admit(&mut engine, msg, start, &mut routes),
+                            Ok(msg) => {
+                                admit(&mut engine, msg, start, &mut routes, request_timeout)
+                            }
                             Err(_) => break,
                         }
                     }
@@ -354,9 +393,13 @@ where
 }
 
 fn admit<M: ServeModel>(engine: &mut ServeEngine<M>, msg: Msg, start: Instant,
-                        routes: &mut HashMap<u64, (u64, Sender<Reply>)>) {
+                        routes: &mut HashMap<u64, (u64, Sender<Reply>)>,
+                        request_timeout: Option<Duration>) {
     let Msg::Submit { tag, input, reply } = msg;
-    match engine.submit(input, start.elapsed()) {
+    // The deadline clock starts at admission (the engine's submit time);
+    // time spent in the bounded channel is governed by the queue policy.
+    let now = start.elapsed();
+    match engine.submit_with_deadline(input, now, request_timeout.map(|t| now + t)) {
         Ok(id) => {
             routes.insert(id, (tag, reply));
         }
@@ -375,7 +418,14 @@ fn route(result: crate::Result<Vec<Response>>,
         Ok(responses) => {
             for resp in responses {
                 if let Some((tag, reply)) = routes.remove(&resp.id) {
-                    let _ = reply.send((tag, Ok(resp)));
+                    // An expired request is answered with an error, not a
+                    // payload-less success.
+                    let outcome = if resp.deadline_expired {
+                        Err(crate::eyre!("request deadline expired before dispatch"))
+                    } else {
+                        Ok(resp)
+                    };
+                    let _ = reply.send((tag, outcome));
                 }
             }
             Ok(())
@@ -405,6 +455,9 @@ pub struct DecodeAdmission {
     tx: Option<Tx<GenMsg>>,
     dispatcher: Option<JoinHandle<crate::Result<StatsSummary>>>,
     alive: Arc<AtomicBool>,
+    /// Per-request deadline budget applied at admission (`None` = no
+    /// deadlines); also bounds minted clients' total `recv` wait.
+    request_timeout: Option<Duration>,
 }
 
 /// A producer-side handle for generation requests.
@@ -413,6 +466,9 @@ pub struct DecodeClient {
     reply_tx: Sender<GenReply>,
     reply_rx: Receiver<GenReply>,
     alive: Arc<AtomicBool>,
+    /// Total-wait bound on `recv` (request timeout + grace); `None` when
+    /// the front-end runs without deadlines.
+    max_wait: Option<Duration>,
 }
 
 impl DecodeAdmission {
@@ -425,6 +481,20 @@ impl DecodeAdmission {
         M: DecodeModel + 'static,
         F: FnOnce() -> crate::Result<DecodeEngine<M>> + Send + 'static,
     {
+        Self::spawn_with_opts(build, tick, queue, None)
+    }
+
+    /// [`DecodeAdmission::spawn`] plus a per-request deadline budget:
+    /// each sequence's deadline is its admission time plus
+    /// `request_timeout`; an expired sequence is dropped by the scheduler
+    /// (waiting or mid-decode) and its client receives a
+    /// [`crate::serve::FinishReason::Deadline`] generation.
+    pub fn spawn_with_opts<M, F>(build: F, tick: Duration, queue: QueuePolicy,
+                                 request_timeout: Option<Duration>) -> Self
+    where
+        M: DecodeModel + 'static,
+        F: FnOnce() -> crate::Result<DecodeEngine<M>> + Send + 'static,
+    {
         let (tx, rx) = queue_channel::<GenMsg>(queue);
         let alive = Arc::new(AtomicBool::new(true));
         let alive_in_thread = Arc::clone(&alive);
@@ -432,10 +502,10 @@ impl DecodeAdmission {
             .name("slope-decode-admission".into())
             .spawn(move || {
                 let _clear = ClearOnExit(alive_in_thread);
-                gen_dispatch(build, rx, tick, queue)
+                gen_dispatch(build, rx, tick, queue, request_timeout)
             })
             .expect("spawning decode admission dispatch thread");
-        Self { tx: Some(tx), dispatcher: Some(dispatcher), alive }
+        Self { tx: Some(tx), dispatcher: Some(dispatcher), alive, request_timeout }
     }
 
     /// Mint a producer handle (its own private reply channel).
@@ -446,6 +516,7 @@ impl DecodeAdmission {
             reply_tx,
             reply_rx,
             alive: Arc::clone(&self.alive),
+            max_wait: self.request_timeout.map(|t| t + CLIENT_RECV_GRACE),
         }
     }
 
@@ -472,7 +543,11 @@ impl DecodeClient {
     }
 
     /// Block until this client's next completed generation arrives.
+    /// Returns an error (instead of hanging) if the dispatcher has died
+    /// with the request unanswered — or, under a configured request
+    /// timeout, once the total wait exceeds the budget plus grace.
     pub fn recv(&self) -> crate::Result<(u64, Generation)> {
+        let waited = Instant::now();
         loop {
             match self.reply_rx.recv_timeout(Duration::from_millis(5)) {
                 Ok((tag, result)) => return Ok((tag, result?)),
@@ -483,6 +558,11 @@ impl DecodeClient {
                         }
                         return Err(crate::eyre!("decode admission dispatcher is gone"));
                     }
+                    if matches!(self.max_wait, Some(bound) if waited.elapsed() > bound) {
+                        return Err(crate::eyre!(
+                            "no reply within the request-timeout budget"
+                        ));
+                    }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(crate::eyre!("decode admission dispatcher is gone"));
@@ -492,13 +572,13 @@ impl DecodeClient {
     }
 }
 
-fn gen_dispatch<M, F>(build: F, rx: Receiver<GenMsg>, tick: Duration,
-                      queue: QueuePolicy) -> crate::Result<StatsSummary>
+fn gen_dispatch<M, F>(build: F, rx: Receiver<GenMsg>, tick: Duration, queue: QueuePolicy,
+                      request_timeout: Option<Duration>) -> crate::Result<StatsSummary>
 where
     M: DecodeModel,
     F: FnOnce() -> crate::Result<DecodeEngine<M>>,
 {
-    let result = gen_dispatch_loop(build, &rx, tick, queue);
+    let result = gen_dispatch_loop(build, &rx, tick, queue, request_timeout);
     if let Err(e) = &result {
         let why = e.to_string();
         while let Ok(GenMsg::Submit { tag, reply, .. }) = rx.try_recv() {
@@ -509,7 +589,8 @@ where
 }
 
 fn gen_dispatch_loop<M, F>(build: F, rx: &Receiver<GenMsg>, tick: Duration,
-                           queue: QueuePolicy) -> crate::Result<StatsSummary>
+                           queue: QueuePolicy,
+                           request_timeout: Option<Duration>) -> crate::Result<StatsSummary>
 where
     M: DecodeModel,
     F: FnOnce() -> crate::Result<DecodeEngine<M>>,
@@ -533,7 +614,10 @@ where
                             break;
                         }
                         match rx.try_recv() {
-                            Ok(msg) => gen_admit(&mut engine, msg, start, &mut routes),
+                            Ok(msg) => {
+                                gen_admit(&mut engine, msg, start, &mut routes,
+                                          request_timeout)
+                            }
                             Err(std::sync::mpsc::TryRecvError::Empty) => break,
                             Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                                 open = false;
@@ -544,11 +628,12 @@ where
                 } else {
                     match rx.recv_timeout(tick) {
                         Ok(msg) => {
-                            gen_admit(&mut engine, msg, start, &mut routes);
+                            gen_admit(&mut engine, msg, start, &mut routes, request_timeout);
                             while room(&engine) {
                                 match rx.try_recv() {
                                     Ok(msg) => {
-                                        gen_admit(&mut engine, msg, start, &mut routes)
+                                        gen_admit(&mut engine, msg, start, &mut routes,
+                                                  request_timeout)
                                     }
                                     Err(_) => break,
                                 }
@@ -571,9 +656,14 @@ where
 }
 
 fn gen_admit<M: DecodeModel>(engine: &mut DecodeEngine<M>, msg: GenMsg, start: Instant,
-                             routes: &mut HashMap<u64, (u64, Sender<GenReply>)>) {
+                             routes: &mut HashMap<u64, (u64, Sender<GenReply>)>,
+                             request_timeout: Option<Duration>) {
     let GenMsg::Submit { tag, prompt, max_new, reply } = msg;
-    match engine.submit(prompt, max_new, start.elapsed()) {
+    // The deadline clock starts at admission; time spent in the bounded
+    // channel is governed by the queue policy.
+    let now = start.elapsed();
+    match engine.submit_with_deadline(prompt, max_new, now,
+                                      request_timeout.map(|t| now + t)) {
         Ok(id) => {
             routes.insert(id, (tag, reply));
         }
@@ -723,6 +813,65 @@ mod tests {
         submitter.join().expect("submitter");
         let stats = adm.finish().unwrap();
         assert_eq!(stats.served, n as usize, "blocking producers lose nothing");
+    }
+
+    #[test]
+    fn expired_response_routes_back_as_an_error_reply() {
+        // Deterministic unit check of the route conversion: a response
+        // flagged `deadline_expired` must reach its submitter as an Err
+        // reply, not a payload-less success.
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut routes: HashMap<u64, (u64, Sender<Reply>)> = HashMap::new();
+        routes.insert(1, (41, reply_tx.clone()));
+        routes.insert(2, (42, reply_tx));
+        let responses = vec![
+            Response {
+                id: 1,
+                output: vec![],
+                queued: Duration::from_millis(9),
+                latency: Duration::from_millis(9),
+                deadline_expired: true,
+            },
+            Response {
+                id: 2,
+                output: vec![1.0; 8],
+                queued: Duration::from_millis(1),
+                latency: Duration::from_millis(2),
+                deadline_expired: false,
+            },
+        ];
+        route(Ok(responses), &mut routes).unwrap();
+        assert!(routes.is_empty(), "both replies routed");
+        let mut outcomes: Vec<(u64, bool)> = (0..2)
+            .map(|_| {
+                let (tag, r) = reply_rx.try_recv().unwrap();
+                (tag, r.is_ok())
+            })
+            .collect();
+        outcomes.sort_unstable();
+        assert_eq!(outcomes, vec![(41, false), (42, true)],
+                   "expired → Err, live → Ok");
+    }
+
+    #[test]
+    fn request_timeout_expires_queued_work_with_an_error_reply() {
+        // A zero budget puts the deadline at the admission instant, so
+        // the request is deterministically expired by the time the batch
+        // dispatches — no sleep-based timing in the test.
+        let adm = Admission::spawn_with_opts(
+            engine,
+            Duration::from_micros(100),
+            QueuePolicy::unbounded(),
+            Some(Duration::ZERO),
+        );
+        let client = adm.client();
+        client.submit(5, vec![1.0; 16]).unwrap();
+        let err = client.recv().unwrap_err();
+        assert!(err.to_string().contains("deadline expired"), "{err}");
+        drop(client);
+        let stats = adm.finish().unwrap();
+        assert_eq!(stats.served, 0, "expired requests are not served");
+        assert_eq!(stats.deadline_expired, 1);
     }
 
     #[test]

@@ -43,6 +43,10 @@ pub struct Request {
     pub input: Vec<f32>,
     /// Engine-relative submission time.
     pub submitted: Duration,
+    /// Engine-relative deadline (`None` = no budget): a request still
+    /// queued past this instant is expired at dispatch instead of
+    /// consuming forward compute.
+    pub deadline: Option<Duration>,
 }
 
 /// FIFO coalescing queue under a [`BatchPolicy`].
@@ -108,7 +112,12 @@ mod tests {
     use super::*;
 
     fn req(id: u64, at_ms: u64) -> Request {
-        Request { id, input: vec![0.0; 4], submitted: Duration::from_millis(at_ms) }
+        Request {
+            id,
+            input: vec![0.0; 4],
+            submitted: Duration::from_millis(at_ms),
+            deadline: None,
+        }
     }
 
     #[test]

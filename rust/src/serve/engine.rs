@@ -37,6 +37,9 @@ pub struct Response {
     pub queued: Duration,
     /// Queue wait + batch compute.
     pub latency: Duration,
+    /// True when the request expired past its deadline before dispatch:
+    /// `output` is empty and no forward compute was spent on it.
+    pub deadline_expired: bool,
 }
 
 /// The serving engine (see module docs).
@@ -111,6 +114,15 @@ impl<M: ServeModel> ServeEngine<M> {
     /// (wrong length, or the model's [`ServeModel::validate_request`]) is
     /// per-request; batch dispatch never sees a malformed payload.
     pub fn submit(&mut self, input: Vec<f32>, now: Duration) -> crate::Result<u64> {
+        self.submit_with_deadline(input, now, None)
+    }
+
+    /// [`ServeEngine::submit`] with an engine-relative deadline: if the
+    /// request is still queued when a batch dispatches at or past this
+    /// instant, it is expired (empty [`Response`] flagged
+    /// `deadline_expired`) instead of consuming forward compute.
+    pub fn submit_with_deadline(&mut self, input: Vec<f32>, now: Duration,
+                                deadline: Option<Duration>) -> crate::Result<u64> {
         crate::ensure!(
             input.len() == self.d_in(),
             "request dim {} != engine d_in {}",
@@ -120,7 +132,7 @@ impl<M: ServeModel> ServeEngine<M> {
         self.model.validate_request(&input)?;
         let id = self.next_id;
         self.next_id += 1;
-        self.batcher.push(Request { id, input, submitted: now });
+        self.batcher.push(Request { id, input, submitted: now, deadline });
         Ok(id)
     }
 
@@ -150,14 +162,26 @@ impl<M: ServeModel> ServeEngine<M> {
     /// completed responses (the single-submitter loop the CLI and
     /// `examples/inference_serve.rs` share; stats accumulate on the
     /// engine as usual).
-    pub fn run_open_loop<G>(&mut self, n: usize, mut make_input: G) -> crate::Result<usize>
+    pub fn run_open_loop<G>(&mut self, n: usize, make_input: G) -> crate::Result<usize>
+    where
+        G: FnMut() -> Vec<f32>,
+    {
+        self.run_open_loop_with_deadline(n, make_input, None)
+    }
+
+    /// [`ServeEngine::run_open_loop`] with a per-request deadline budget:
+    /// each submission's deadline is its submit time plus `budget`
+    /// (`None` = no deadlines, the classic loop).
+    pub fn run_open_loop_with_deadline<G>(&mut self, n: usize, mut make_input: G,
+                                          budget: Option<Duration>) -> crate::Result<usize>
     where
         G: FnMut() -> Vec<f32>,
     {
         let start = Instant::now();
         let mut done = 0usize;
         for _ in 0..n {
-            self.submit(make_input(), start.elapsed())?;
+            let now = start.elapsed();
+            self.submit_with_deadline(make_input(), now, budget.map(|b| now + b))?;
             done += self.poll(start.elapsed())?.len();
         }
         done += self.flush(start.elapsed())?.len();
@@ -171,14 +195,39 @@ impl<M: ServeModel> ServeEngine<M> {
     fn forward_batch(&mut self, now: Duration) -> crate::Result<Vec<Response>> {
         let mut batch = std::mem::take(&mut self.batch_buf);
         self.batcher.take_batch_into(&mut batch);
-        let k = batch.len();
-        if k == 0 {
+        if batch.is_empty() {
             self.batch_buf = batch;
             return Ok(Vec::new());
         }
+        // Expire requests past their deadline before staging: they get an
+        // empty flagged response and never touch the model, so a stale
+        // backlog cannot consume forward compute.
+        let expired = |req: &Request| matches!(req.deadline, Some(d) if now >= d);
+        let mut responses: Vec<Response> = Vec::new();
+        let mut n_expired = 0usize;
+        for req in batch.iter().filter(|r| expired(r)) {
+            let queued = now.saturating_sub(req.submitted);
+            responses.push(Response {
+                id: req.id,
+                output: Vec::new(),
+                queued,
+                latency: queued,
+                deadline_expired: true,
+            });
+            n_expired += 1;
+        }
+        if n_expired > 0 {
+            self.stats.record_deadline_expired(n_expired);
+        }
+        let k = batch.len() - n_expired;
+        if k == 0 {
+            batch.clear();
+            self.batch_buf = batch;
+            return Ok(responses);
+        }
         let d_in = self.model.d_in();
         ensure_out(&mut self.staging, k, d_in);
-        for (row, req) in batch.iter().enumerate() {
+        for (row, req) in batch.iter().filter(|r| !expired(r)).enumerate() {
             self.staging.row_mut(row).copy_from_slice(&req.input);
         }
         let t0 = Instant::now();
@@ -190,23 +239,21 @@ impl<M: ServeModel> ServeEngine<M> {
         }
         let compute = t0.elapsed();
         debug_assert_eq!((self.out.rows, self.out.cols), (k, self.model.d_out()));
-        let responses: Vec<Response> = batch
-            .iter()
-            .enumerate()
-            .map(|(row, req)| {
-                let queued = now.saturating_sub(req.submitted);
-                Response {
-                    id: req.id,
-                    output: self.out.row(row).to_vec(),
-                    queued,
-                    latency: queued + compute,
-                }
-            })
-            .collect();
+        let first_live = responses.len();
+        for (row, req) in batch.iter().filter(|r| !expired(r)).enumerate() {
+            let queued = now.saturating_sub(req.submitted);
+            responses.push(Response {
+                id: req.id,
+                output: self.out.row(row).to_vec(),
+                queued,
+                latency: queued + compute,
+                deadline_expired: false,
+            });
+        }
         self.stats.record_batch(
             now,
             compute,
-            responses.iter().map(|r| r.latency),
+            responses[first_live..].iter().map(|r| r.latency),
         );
         batch.clear();
         self.batch_buf = batch;
@@ -261,6 +308,11 @@ pub enum FinishReason {
     /// Hit its generated-token cap (request cap, policy cap, or the
     /// model's context bound — whichever bound first).
     MaxTokens,
+    /// Expired past its per-request deadline: dropped from the waiting
+    /// queue (no tokens) or from the running batch (partial tokens), its
+    /// sequence freed.  Counted in [`ServeStats`]' `deadline_expired`,
+    /// not in `served`.
+    Deadline,
 }
 
 /// A completed generation request.
@@ -283,6 +335,7 @@ struct WaitingGen {
     prompt: Vec<i32>,
     max_new: usize,
     submitted: Duration,
+    deadline: Option<Duration>,
 }
 
 struct RunningGen {
@@ -292,6 +345,7 @@ struct RunningGen {
     max_new: usize,
     submitted: Duration,
     queued: Duration,
+    deadline: Option<Duration>,
     tokens: Vec<i32>,
     rng: Rng,
 }
@@ -382,6 +436,16 @@ impl<M: DecodeModel> DecodeEngine<M> {
     /// prompt can never fail a shared decode step.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: Option<usize>,
                   now: Duration) -> crate::Result<u64> {
+        self.submit_with_deadline(prompt, max_new, now, None)
+    }
+
+    /// [`DecodeEngine::submit`] with an engine-relative deadline: past
+    /// this instant the request is dropped with
+    /// [`FinishReason::Deadline`] — from the waiting queue before any
+    /// prefill, or from the running batch with its partial tokens.
+    pub fn submit_with_deadline(&mut self, prompt: Vec<i32>, max_new: Option<usize>,
+                                now: Duration,
+                                deadline: Option<Duration>) -> crate::Result<u64> {
         if let Some(cap) = self.policy.queue_cap {
             crate::ensure!(
                 self.waiting.len() < cap,
@@ -404,7 +468,7 @@ impl<M: DecodeModel> DecodeEngine<M> {
             .min(bound - prompt.len());
         let id = self.next_id;
         self.next_id += 1;
-        self.waiting.push_back(WaitingGen { id, prompt, max_new, submitted: now });
+        self.waiting.push_back(WaitingGen { id, prompt, max_new, submitted: now, deadline });
         Ok(id)
     }
 
@@ -419,6 +483,26 @@ impl<M: DecodeModel> DecodeEngine<M> {
     pub fn step(&mut self, now: Duration) -> crate::Result<Vec<Generation>> {
         let mut done = Vec::new();
         let mut admit_err: Option<crate::Error> = None;
+        // Deadline expiry, waiting side: a request past its deadline
+        // leaves the queue unserved (no prefill compute) — rotate the
+        // queue once so survivor order is preserved.
+        for _ in 0..self.waiting.len() {
+            let req = self.waiting.pop_front().expect("length-bounded loop");
+            if matches!(req.deadline, Some(d) if now >= d) {
+                self.stats.record_deadline_expired(1);
+                let queued = now.saturating_sub(req.submitted);
+                done.push(Generation {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    tokens: Vec::new(),
+                    finish: FinishReason::Deadline,
+                    queued,
+                    latency: queued,
+                });
+            } else {
+                self.waiting.push_back(req);
+            }
+        }
         // Admission: prefill into free slots — sequences join the running
         // batch mid-stream, the "continuous" in continuous batching.
         while self.running.len() < self.policy.max_batch {
@@ -445,6 +529,7 @@ impl<M: DecodeModel> DecodeEngine<M> {
                 max_new: req.max_new,
                 submitted: req.submitted,
                 queued: now.saturating_sub(req.submitted),
+                deadline: req.deadline,
                 tokens: Vec::with_capacity(req.max_new),
                 rng: Rng::seed_from_u64(
                     self.policy.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -472,9 +557,26 @@ impl<M: DecodeModel> DecodeEngine<M> {
                 return Err(e);
             }
             for g in &done {
-                self.stats.record_generation(g.latency);
+                if g.finish != FinishReason::Deadline {
+                    self.stats.record_generation(g.latency);
+                }
             }
             return Ok(done);
+        }
+        // Deadline expiry, running side: drop expired sequences (partial
+        // tokens delivered, KV slot freed) before spending a coalesced
+        // decode step on them.
+        let mut i = 0;
+        while i < self.running.len() {
+            if matches!(self.running[i].deadline, Some(d) if now >= d) {
+                // `remove` keeps batch order stable, like the finish path.
+                let run = self.running.remove(i);
+                let _ = self.model.free_seq(run.seq);
+                self.stats.record_deadline_expired(1);
+                done.push(complete(run, FinishReason::Deadline, now, Duration::ZERO));
+            } else {
+                i += 1;
+            }
         }
         // One coalesced decode step over every running sequence.
         if !self.running.is_empty() {
@@ -524,7 +626,9 @@ impl<M: DecodeModel> DecodeEngine<M> {
             }
         }
         for g in &done {
-            self.stats.record_generation(g.latency);
+            if g.finish != FinishReason::Deadline {
+                self.stats.record_generation(g.latency);
+            }
         }
         Ok(done)
     }
@@ -830,6 +934,85 @@ mod tests {
             done.extend(eng.step(Duration::ZERO).unwrap());
         }
         assert_eq!(done[0].tokens.len(), 1, "context bound clamps the request cap");
+    }
+
+    #[test]
+    fn expired_requests_skip_compute_and_flag_the_response() {
+        let mut rng = Rng::seed_from_u64(5);
+        let mut eng = ServeEngine::new(vec![layer(8, 16, 0, 1, &mut rng)],
+                                       BatchPolicy::new(4, MS))
+            .unwrap();
+        // One request with a 3 ms budget, one without; dispatch at 10 ms:
+        // the budgeted one expires, the other is served.
+        let stale = eng
+            .submit_with_deadline(vec![0.5; 16], Duration::ZERO, Some(3 * MS))
+            .unwrap();
+        let fresh = eng.submit(vec![0.5; 16], Duration::ZERO).unwrap();
+        let mut r = eng.poll(10 * MS).unwrap();
+        assert_eq!(r.len(), 2);
+        r.sort_by_key(|resp| resp.id);
+        assert_eq!(r[0].id, stale);
+        assert!(r[0].deadline_expired);
+        assert!(r[0].output.is_empty(), "no compute spent on an expired request");
+        assert_eq!(r[1].id, fresh);
+        assert!(!r[1].deadline_expired);
+        assert_eq!(r[1].output.len(), 8);
+        let s = eng.stats().summary();
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.served, 1, "the expired request is not served");
+        // An all-expired batch never calls the model.
+        eng.submit_with_deadline(vec![0.5; 16], 20 * MS, Some(21 * MS)).unwrap();
+        let r = eng.flush(30 * MS).unwrap();
+        assert!(r.iter().all(|resp| resp.deadline_expired));
+        assert_eq!(eng.stats().summary().deadline_expired, 2);
+        assert_eq!(eng.stats().summary().batches, 1, "no batch dispatched for it");
+    }
+
+    #[test]
+    fn decode_deadline_drops_waiting_and_running_sequences() {
+        // Waiting-side expiry: max_batch 1, so the second request queues;
+        // its 2 ms budget lapses before a slot frees.
+        let policy = DecodePolicy { max_batch: 1, max_new_tokens: 4, ..Default::default() };
+        let mut eng = DecodeEngine::new(Arith::new(), policy).unwrap();
+        let slow = eng.submit(vec![3], None, Duration::ZERO).unwrap();
+        let starved = eng
+            .submit_with_deadline(vec![9], None, Duration::ZERO, Some(2 * MS))
+            .unwrap();
+        let mut done = Vec::new();
+        let mut t = Duration::ZERO;
+        while eng.active() > 0 {
+            done.extend(eng.step(t).unwrap());
+            t += 5 * MS;
+        }
+        done.sort_by_key(|g| g.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, slow);
+        assert_eq!(done[0].finish, FinishReason::MaxTokens);
+        assert_eq!(done[0].tokens, vec![4, 5, 6, 7]);
+        assert_eq!(done[1].id, starved);
+        assert_eq!(done[1].finish, FinishReason::Deadline);
+        assert!(done[1].tokens.is_empty(), "expired before any prefill");
+        assert_eq!(eng.model().live_seqs(), 0, "every sequence freed");
+        let s = eng.stats().summary();
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.served, 1, "deadline drops are not served");
+        assert_eq!(s.prefills, 1, "the starved request never prefilled");
+
+        // Running-side expiry: a 7 ms budget lapses mid-generation — the
+        // partial stream is delivered and the KV slot freed.
+        let policy = DecodePolicy { max_batch: 2, max_new_tokens: 8, ..Default::default() };
+        let mut eng = DecodeEngine::new(Arith::new(), policy).unwrap();
+        eng.submit_with_deadline(vec![3], None, Duration::ZERO, Some(7 * MS)).unwrap();
+        let mut done = Vec::new();
+        done.extend(eng.step(Duration::ZERO).unwrap()); // prefill 4, decode 5
+        done.extend(eng.step(5 * MS).unwrap()); // decode: token 6
+        done.extend(eng.step(10 * MS).unwrap()); // expired before decoding
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Deadline);
+        assert_eq!(done[0].tokens, vec![4, 5, 6], "partial tokens survive expiry");
+        assert_eq!(eng.active(), 0);
+        assert_eq!(eng.model().live_seqs(), 0, "expired sequence freed");
+        assert_eq!(eng.stats().summary().deadline_expired, 1);
     }
 
     #[test]

@@ -58,6 +58,11 @@ pub struct ServeStats {
     tokens_out: usize,
     decode_steps: usize,
     prefills: usize,
+    /// Requests that expired past their per-request deadline unserved
+    /// (dropped from the queue, or mid-generation) — counted here and
+    /// kept OUT of the latency windows and `served`, so expiry under
+    /// overload cannot flatter the quantiles.
+    deadline_expired: usize,
     compute: Duration,
     /// Engine-relative time of the first/last dispatch observed.
     first_dispatch: Option<Duration>,
@@ -93,6 +98,9 @@ pub struct StatsSummary {
     pub decode_p99_ms: f64,
     /// Generated tokens per second over the dispatch span.
     pub tok_per_s: f64,
+    /// Requests dropped past their per-request deadline (not in
+    /// `served` or any latency window).
+    pub deadline_expired: usize,
 }
 
 impl ServeStats {
@@ -135,6 +143,11 @@ impl ServeStats {
         self.served += 1;
     }
 
+    /// Record `n` requests expired past their deadline unserved.
+    pub fn record_deadline_expired(&mut self, n: usize) {
+        self.deadline_expired += n;
+    }
+
     fn mark_dispatch(&mut self, now: Duration, compute: Duration) {
         self.compute += compute;
         self.first_dispatch.get_or_insert(now);
@@ -147,6 +160,10 @@ impl ServeStats {
 
     pub fn tokens_out(&self) -> usize {
         self.tokens_out
+    }
+
+    pub fn deadline_expired(&self) -> usize {
+        self.deadline_expired
     }
 
     /// Request-latency quantile in milliseconds over the retained window
@@ -188,6 +205,7 @@ impl ServeStats {
             decode_p95_ms: quantile_of_sorted(&dec_sorted, 0.95),
             decode_p99_ms: quantile_of_sorted(&dec_sorted, 0.99),
             tok_per_s: if wall > 0.0 { self.tokens_out as f64 / wall } else { 0.0 },
+            deadline_expired: self.deadline_expired,
         }
     }
 }
@@ -222,6 +240,12 @@ impl StatsSummary {
                  decode rate: {:.0} tok/s",
                 self.tokens_out, self.decode_steps, self.prefills, self.mean_decode_fill,
                 self.decode_p50_ms, self.decode_p95_ms, self.decode_p99_ms, self.tok_per_s
+            ));
+        }
+        if self.deadline_expired > 0 {
+            out.push_str(&format!(
+                "\ndeadlines  : {} requests expired unserved",
+                self.deadline_expired
             ));
         }
         out
@@ -270,6 +294,22 @@ mod tests {
         assert_eq!(s.served(), n, "served counts every request");
         assert!(s.requests.ms.len() <= LATENCY_WINDOW, "quantile window is bounded");
         assert!((s.summary().p50_ms - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_expiries_stay_out_of_latency_windows() {
+        let mut s = ServeStats::default();
+        s.record_batch(Duration::ZERO, MS, [10 * MS]);
+        s.record_deadline_expired(3);
+        let sum = s.summary();
+        assert_eq!(sum.deadline_expired, 3);
+        assert_eq!(sum.served, 1, "expiries are not served requests");
+        assert!((sum.p99_ms - 10.0).abs() < 1e-9, "quantiles untouched by expiry");
+        let rep = sum.report(1, 4);
+        assert!(rep.contains("3 requests expired"), "{rep}");
+        // No expiries ⇒ no deadlines line.
+        let rep = ServeStats::default().summary().report(0, 4);
+        assert!(!rep.contains("expired"), "{rep}");
     }
 
     #[test]

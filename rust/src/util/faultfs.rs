@@ -1,0 +1,280 @@
+//! Fault-injecting filesystem layer for the checkpoint writer.
+//!
+//! All checkpoint files go through [`write_atomic`]: serialize to a
+//! sibling temp file, `sync_all`, atomically rename over the target, then
+//! fsync the parent directory so the rename itself is durable.  A
+//! [`FaultPlan`] — from the `SLOPE_FAULT` env var or a thread-local
+//! builder ([`with_plan`], for tests) — injects crashes at the exact
+//! points a real power loss or bit rot would hit:
+//!
+//! * `truncate_at:N`  — the temp write tears after `N` bytes and errors
+//!   (torn write; the target file is never replaced);
+//! * `bitflip_at:N`   — one bit of byte `N` flips silently and the write
+//!   "succeeds" (latent corruption, caught by the v3 checksums);
+//! * `fail_rename`    — the rename step fails (crash between temp write
+//!   and publish);
+//! * `kill_after_ckpt_bytes:N` — hard `process::exit(3)` once `N`
+//!   cumulative checkpoint bytes have been written across the whole
+//!   process (the CI kill-and-resume smoke's kill point).
+//!
+//! Several faults may be combined comma-separated in `SLOPE_FAULT`.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// What to break during [`write_atomic`].  Default: nothing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Tear the temp-file write after this many bytes, then error.
+    pub truncate_at: Option<usize>,
+    /// Flip one bit (bit `N % 8`) of byte `N` and report success.
+    pub bitflip_at: Option<usize>,
+    /// Fail the rename step (temp file written, target untouched).
+    pub fail_rename: bool,
+    /// `process::exit(3)` once this many cumulative bytes were written
+    /// by checkpoint writes process-wide.
+    pub kill_after_bytes: Option<u64>,
+}
+
+impl FaultPlan {
+    pub fn is_noop(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// Parse the `SLOPE_FAULT` syntax: comma-separated
+    /// `truncate_at:N`, `bitflip_at:N`, `fail_rename`,
+    /// `kill_after_ckpt_bytes:N`.  Unknown directives error so typos in
+    /// CI scripts fail loudly instead of silently disabling the fault.
+    pub fn parse(spec: &str) -> crate::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = match part.split_once(':') {
+                Some((k, v)) => (k.trim(), Some(v.trim())),
+                None => (part, None),
+            };
+            let num = |v: Option<&str>| -> crate::Result<u64> {
+                v.ok_or_else(|| crate::eyre!("SLOPE_FAULT: {key} needs a :N argument"))?
+                    .parse::<u64>()
+                    .map_err(|e| crate::eyre!("SLOPE_FAULT: bad number in {part:?}: {e}"))
+            };
+            match key {
+                "truncate_at" => plan.truncate_at = Some(num(val)? as usize),
+                "bitflip_at" => plan.bitflip_at = Some(num(val)? as usize),
+                "fail_rename" => plan.fail_rename = true,
+                "kill_after_ckpt_bytes" => plan.kill_after_bytes = Some(num(val)?),
+                other => return Err(crate::eyre!("SLOPE_FAULT: unknown directive {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The process-wide plan from `SLOPE_FAULT` (empty plan when unset;
+    /// a malformed value aborts rather than training un-faulted).
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("SLOPE_FAULT") {
+            Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    eprintln!("[faultfs] {e}");
+                    std::process::exit(2);
+                }
+            },
+            _ => FaultPlan::default(),
+        }
+    }
+}
+
+thread_local! {
+    /// Test override: takes precedence over the env plan on this thread.
+    static LOCAL_PLAN: RefCell<Option<FaultPlan>> = const { RefCell::new(None) };
+}
+
+/// Cumulative bytes written by checkpoint writes, process-wide — the
+/// odometer `kill_after_ckpt_bytes` reads.
+static WRITTEN: AtomicU64 = AtomicU64::new(0);
+
+/// Run `f` with `plan` active for this thread's [`write_atomic`] calls
+/// (restored afterwards, even on panic-free early return).
+pub fn with_plan<T>(plan: FaultPlan, f: impl FnOnce() -> T) -> T {
+    let prev = LOCAL_PLAN.with(|p| p.replace(Some(plan)));
+    struct Restore(Option<FaultPlan>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_PLAN.with(|p| *p.borrow_mut() = self.0);
+        }
+    }
+    let _restore = Restore(prev);
+    f()
+}
+
+fn active_plan() -> FaultPlan {
+    LOCAL_PLAN
+        .with(|p| *p.borrow())
+        .unwrap_or_else(FaultPlan::from_env)
+}
+
+/// Write `bytes` to `path` crash-safely: temp file in the same directory
+/// → `sync_all` → atomic rename → parent-directory fsync.  On any error
+/// the previous contents of `path` (if any) are still intact.  Honors
+/// the active [`FaultPlan`].
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> crate::Result<()> {
+    let plan = active_plan();
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| crate::eyre!("write_atomic: bad path {}", path.display()))?;
+    let tmp = match dir {
+        Some(d) => d.join(format!(".{file_name}.tmp")),
+        None => std::path::PathBuf::from(format!(".{file_name}.tmp")),
+    };
+
+    let mut staged: Vec<u8>;
+    let payload: &[u8] = if let Some(at) = plan.bitflip_at {
+        staged = bytes.to_vec();
+        if at < staged.len() {
+            staged[at] ^= 1 << (at % 8);
+        }
+        &staged
+    } else {
+        bytes
+    };
+
+    use std::io::Write;
+    let mut f = std::fs::File::create(&tmp)
+        .map_err(|e| crate::eyre!("creating {}: {e}", tmp.display()))?;
+
+    if let Some(at) = plan.truncate_at {
+        // Torn write: flush a prefix, sync it, then fail — the temp file
+        // is left behind exactly as a crash mid-write would.
+        let kept = at.min(payload.len());
+        f.write_all(&payload[..kept])?;
+        f.sync_all()?;
+        count_written(kept as u64, plan);
+        return Err(crate::eyre!(
+            "faultfs: injected torn write after {kept} bytes ({})",
+            tmp.display()
+        ));
+    }
+
+    f.write_all(payload)
+        .map_err(|e| crate::eyre!("writing {}: {e}", tmp.display()))?;
+    f.sync_all()
+        .map_err(|e| crate::eyre!("syncing {}: {e}", tmp.display()))?;
+    drop(f);
+    count_written(payload.len() as u64, plan);
+
+    if plan.fail_rename {
+        return Err(crate::eyre!(
+            "faultfs: injected rename failure for {}",
+            path.display()
+        ));
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| crate::eyre!("renaming over {}: {e}", path.display()))?;
+
+    // Make the rename itself durable: fsync the containing directory.
+    if let Some(d) = dir {
+        if let Ok(dh) = std::fs::File::open(d) {
+            // Directory fsync is advisory on some filesystems; a failure
+            // here does not un-publish the rename.
+            let _ = dh.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Advance the process-wide checkpoint-byte odometer, exiting if the
+/// active plan's kill point was crossed.
+fn count_written(n: u64, plan: FaultPlan) {
+    let total = WRITTEN.fetch_add(n, Ordering::SeqCst) + n;
+    if let Some(kill_at) = plan.kill_after_bytes {
+        if total >= kill_at {
+            eprintln!(
+                "[faultfs] kill point: {total} checkpoint bytes written (limit {kill_at}); exiting"
+            );
+            std::process::exit(3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("slope_faultfs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let plan =
+            FaultPlan::parse("truncate_at:12, bitflip_at:7,fail_rename,kill_after_ckpt_bytes:900")
+                .unwrap();
+        assert_eq!(plan.truncate_at, Some(12));
+        assert_eq!(plan.bitflip_at, Some(7));
+        assert!(plan.fail_rename);
+        assert_eq!(plan.kill_after_bytes, Some(900));
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(FaultPlan::parse("explode").is_err());
+        assert!(FaultPlan::parse("truncate_at").is_err());
+        assert!(FaultPlan::parse("truncate_at:xyz").is_err());
+    }
+
+    #[test]
+    fn clean_write_is_atomic_and_durable() {
+        let path = tmp_path("clean.bin");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(!path.parent().unwrap().join(".clean.bin.tmp").exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_write_preserves_previous_contents() {
+        let path = tmp_path("torn.bin");
+        write_atomic(&path, b"intact contents").unwrap();
+        let plan = FaultPlan { truncate_at: Some(4), ..Default::default() };
+        let err = with_plan(plan, || write_atomic(&path, b"replacement")).unwrap_err();
+        assert!(err.to_string().contains("torn write"), "{err}");
+        assert_eq!(std::fs::read(&path).unwrap(), b"intact contents");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn failed_rename_preserves_previous_contents() {
+        let path = tmp_path("rename.bin");
+        write_atomic(&path, b"old").unwrap();
+        let plan = FaultPlan { fail_rename: true, ..Default::default() };
+        assert!(with_plan(plan, || write_atomic(&path, b"new")).is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"old");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bitflip_corrupts_exactly_one_bit() {
+        let path = tmp_path("flip.bin");
+        let data = vec![0u8; 32];
+        let plan = FaultPlan { bitflip_at: Some(9), ..Default::default() };
+        with_plan(plan, || write_atomic(&path, &data)).unwrap();
+        let back = std::fs::read(&path).unwrap();
+        assert_eq!(back.len(), 32);
+        let diff: Vec<usize> =
+            back.iter().enumerate().filter(|(_, b)| **b != 0).map(|(i, _)| i).collect();
+        assert_eq!(diff, vec![9]);
+        assert_eq!(back[9].count_ones(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn plan_restores_after_with_plan() {
+        let plan = FaultPlan { fail_rename: true, ..Default::default() };
+        with_plan(plan, || assert_eq!(active_plan(), plan));
+        assert!(active_plan().is_noop() || std::env::var("SLOPE_FAULT").is_ok());
+    }
+}

@@ -5,8 +5,12 @@
 //! * [`json`]     — JSON parser/writer (`serde_json` stand-in)
 //! * [`bench`]    — median-of-N micro-bench harness (`criterion` stand-in)
 //! * [`proptest`] — seeded property-test helper (`proptest` stand-in)
+//! * [`crc32`]    — CRC-32/IEEE (`crc32fast` stand-in)
+//! * [`faultfs`]  — crash-safe atomic writes + fault injection
 
 pub mod bench;
+pub mod crc32;
+pub mod faultfs;
 pub mod json;
 pub mod proptest;
 pub mod rng;

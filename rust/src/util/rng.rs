@@ -98,6 +98,18 @@ impl Rng {
     pub fn chance(&mut self, p: f64) -> bool {
         self.f64() < p
     }
+
+    /// Snapshot the full generator state (xoshiro words + the cached
+    /// Box–Muller spare) for checkpointing: [`Rng::from_state`] of this
+    /// snapshot continues the exact same stream.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare)
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4], spare: Option<f64>) -> Self {
+        Self { s, spare }
+    }
 }
 
 #[cfg(test)]

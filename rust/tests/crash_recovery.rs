@@ -1,0 +1,298 @@
+//! Crash-safety property suite for the v3 checkpoint format and
+//! `--resume` (ISSUE 6 acceptance):
+//!
+//! * for every injected fault point (torn write, bit-flip, failed
+//!   rename) a subsequent recovery either loads the previous valid
+//!   checkpoint or fails with a structured error — never a panic, never
+//!   a partially-populated [`Store`];
+//! * corrupt model/packed files error at every record boundary and under
+//!   single-byte flips, while a v2 (pre-checksum) file still loads;
+//! * a `--resume`d run is **bitwise identical** to the uninterrupted run
+//!   at the same total step count, across thread counts {1, 4}, in both
+//!   the sparse-only and lazy-adapter phases;
+//! * a corrupted serving checkpoint refuses to open — corrupt weights
+//!   are never served.
+
+use slope::backend::ParallelPolicy;
+use slope::config::{Method, RunConfig};
+use slope::coordinator::checkpoint::{self, CkptError, TrainMeta};
+use slope::coordinator::Trainer;
+use slope::runtime::Store;
+use slope::serve::AotModel;
+use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::faultfs::{self, FaultPlan};
+use slope::util::Rng;
+use std::path::PathBuf;
+
+/// Fresh per-test scratch directory (unique tag ⇒ no cross-test races).
+fn tmp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("slope_crash_recovery_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small store covering every [`checkpoint::TRAIN_PREFIXES`] plane
+/// (f32 and i32 records), parameterized so distinct steps are
+/// distinguishable.
+fn train_store(v: f32) -> Store {
+    let mut s = Store::new();
+    s.put_f32("params.a", &[2, 2], &[v, 1.5, -2.0, 3.25]).unwrap();
+    s.put_f32("opt.m.a", &[2, 2], &[0.1, 0.2, v, -0.4]).unwrap();
+    s.put_i32("opt.t", &[1], &[v as i32]).unwrap();
+    s.put_f32("masks.a_r", &[2, 2], &[1.0, 0.0, 0.0, 1.0]).unwrap();
+    s.put_f32("lora.a_up", &[2, 1], &[v, -v]).unwrap();
+    s.put_f32("lora_opt.m.a_up", &[2, 1], &[0.0, v]).unwrap();
+    s
+}
+
+fn meta_at(step: usize) -> TrainMeta {
+    TrainMeta {
+        step,
+        steps: 10,
+        lazy_fraction: 0.25,
+        seed: 42,
+        lora_active: step > 5,
+        rng: ([step as u64 + 1, 2, 3, 4], None),
+    }
+}
+
+#[test]
+fn every_injected_fault_point_recovers_or_errors_cleanly() {
+    let dir = tmp_root("faults");
+    let s1 = train_store(1.0);
+    checkpoint::save_train_checkpoint(&s1, &meta_at(1), &dir, 16).unwrap();
+    let root = dir.join(checkpoint::TRAIN_DIR);
+    let step1_file = root.join("step_00000001").join(checkpoint::TRAIN_FILE);
+    let file_len = std::fs::metadata(&step1_file).unwrap().len() as usize;
+    // Step 2 writes the same plane set, so step 1's record boundaries are
+    // exactly the interesting byte offsets of the file about to be torn.
+    let boundaries = checkpoint::record_boundaries(&step1_file).unwrap();
+
+    let mut plans = vec![
+        FaultPlan { fail_rename: true, ..Default::default() },
+        FaultPlan { truncate_at: Some(0), ..Default::default() },
+        FaultPlan { bitflip_at: Some(file_len - 1), ..Default::default() },
+        FaultPlan { bitflip_at: Some(file_len + 10_000), ..Default::default() },
+    ];
+    for &b in &boundaries {
+        plans.push(FaultPlan { truncate_at: Some(b), ..Default::default() });
+        plans.push(FaultPlan { truncate_at: Some(b + 1), ..Default::default() });
+        plans.push(FaultPlan { bitflip_at: Some(b), ..Default::default() });
+        plans.push(FaultPlan { bitflip_at: Some(b.saturating_sub(2)), ..Default::default() });
+    }
+
+    let s2 = train_store(2.0);
+    for plan in plans {
+        let result = faultfs::with_plan(plan, || {
+            checkpoint::save_train_checkpoint(&s2, &meta_at(2), &dir, 16)
+        });
+        match result {
+            Ok(_) => {
+                // Only reachable when the fault misses every byte actually
+                // written (a flip offset beyond the files): the published
+                // checkpoint must then be fully valid.
+                let (st, m) = checkpoint::load_train_checkpoint(&dir).unwrap();
+                assert_eq!(m, meta_at(2), "plan {plan:?}");
+                assert_eq!(st.read_f32("params.a").unwrap(),
+                           s2.read_f32("params.a").unwrap());
+                // Reset to the step-1-only state for the next plan.
+                std::fs::remove_dir_all(root.join("step_00000002")).unwrap();
+                std::fs::write(root.join(checkpoint::LATEST_FILE), "step_00000001").unwrap();
+            }
+            Err(e) => {
+                assert!(!root.join("step_00000002").exists(),
+                        "plan {plan:?}: failed save must not leave its step dir behind: {e}");
+                assert_eq!(
+                    std::fs::read_to_string(root.join(checkpoint::LATEST_FILE)).unwrap(),
+                    "step_00000001",
+                    "plan {plan:?}: LATEST must stay on the previous step"
+                );
+                let (st, m) = checkpoint::load_train_checkpoint(&dir).unwrap();
+                assert_eq!(m, meta_at(1), "plan {plan:?}");
+                assert_eq!(st.read_f32("params.a").unwrap(),
+                           s1.read_f32("params.a").unwrap(),
+                           "plan {plan:?}: recovery must land on the step-1 state exactly");
+                assert_eq!(st.read_scalar_i32("opt.t").unwrap(), 1);
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupt_model_files_error_and_never_populate_the_store() {
+    let dir = tmp_root("corrupt_model");
+    let mut store = Store::new();
+    store.put_f32("params.w", &[2, 3], &[0.5, -1.0, 2.0, 3.5, -4.0, 0.25]).unwrap();
+    store.put_i32("params.steps", &[2], &[7, 9]).unwrap();
+    store.put_f32("opt.m.w", &[6], &[0.0, 0.1, 0.2, 0.3, 0.4, 0.5]).unwrap();
+    let path = dir.join(checkpoint::MODEL_FILE);
+    assert_eq!(checkpoint::save(&store, &["params.", "opt."], &path).unwrap(), 3);
+    let bytes = std::fs::read(&path).unwrap();
+    let boundaries = checkpoint::record_boundaries(&path).unwrap();
+    let victim = dir.join("victim.slopeckpt");
+
+    // Truncate at every record boundary, inside the header, and
+    // mid-record: all torn shapes must surface a structured error.
+    let mut cuts = boundaries.clone();
+    cuts.extend([0, 2, 4, 8, 11]);
+    cuts.extend(boundaries.iter().map(|b| b + 3));
+    cuts.retain(|c| *c < bytes.len());
+    for cut in cuts {
+        std::fs::write(&victim, &bytes[..cut]).unwrap();
+        let mut fresh = Store::new();
+        let err = checkpoint::load(&mut fresh, &victim).unwrap_err();
+        assert!(err.downcast_ref::<CkptError>().is_some(),
+                "cut at {cut}: structured error expected, got: {err}");
+        assert!(fresh.names().is_empty(), "cut at {cut}: store must stay empty");
+    }
+
+    // One byte-flip per region — magic, version, count, every record,
+    // footer tag and footer CRC.  The file checksum catches them all.
+    let mut flips = vec![1usize, 5, 9, bytes.len() - 6, bytes.len() - 1];
+    flips.extend(boundaries.iter().map(|b| b + 2));
+    flips.retain(|f| *f < bytes.len());
+    for flip in flips {
+        let mut b = bytes.clone();
+        b[flip] ^= 0x20;
+        std::fs::write(&victim, &b).unwrap();
+        let mut fresh = Store::new();
+        let err = checkpoint::load(&mut fresh, &victim).unwrap_err();
+        assert!(err.downcast_ref::<CkptError>().is_some(),
+                "flip at {flip}: structured error expected, got: {err}");
+        assert!(fresh.names().is_empty(), "flip at {flip}: store must stay empty");
+    }
+
+    // A v2 (pre-checksum) file still loads — with a logged warning only.
+    let v2 = dir.join("v2.slopeckpt");
+    checkpoint::save_as_v2(&store, &["params.", "opt."], &v2).unwrap();
+    let mut fresh = Store::new();
+    assert_eq!(checkpoint::load(&mut fresh, &v2).unwrap(), 3);
+    assert_eq!(fresh.read_f32("params.w").unwrap(), store.read_f32("params.w").unwrap());
+    assert_eq!(fresh.read_f32("opt.m.w").unwrap(), store.read_f32("opt.m.w").unwrap());
+}
+
+#[test]
+fn corrupt_packed_weight_files_error_cleanly() {
+    let dir = tmp_root("corrupt_packed");
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    let w = Matrix::randn(8, 16, 1.0, &mut rng);
+    let mask = random_row_mask(8, 16, NmScheme::TWO_FOUR, &mut rng);
+    let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+    let path = dir.join(checkpoint::PACKED_FILE);
+    checkpoint::save_packed_weights(&[("blocks.0.wq", &c)], &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let victim = dir.join("victim.packed.slopeckpt");
+
+    for cut in checkpoint::record_boundaries(&path).unwrap() {
+        std::fs::write(&victim, &bytes[..cut]).unwrap();
+        assert!(checkpoint::load_packed_weights(&victim).is_err(), "cut at {cut}");
+    }
+    for flip in [6usize, bytes.len() / 2, bytes.len() - 3] {
+        let mut b = bytes.clone();
+        b[flip] ^= 0x01;
+        std::fs::write(&victim, &b).unwrap();
+        assert!(checkpoint::load_packed_weights(&victim).is_err(), "flip at {flip}");
+    }
+    // The pristine file still round-trips after all of the above.
+    let back = checkpoint::load_packed_weights(&path).unwrap();
+    assert_eq!(back.len(), 1);
+    assert_eq!(back[0].1, c, "values AND packed metadata survive");
+}
+
+/// One full train → corrupt-the-newest → resume cycle on the host
+/// executor: asserts the resumed continuation is **bitwise identical** to
+/// the uninterrupted reference run — final loss bits, every train-state
+/// plane, and the meta sidecar (step counter, schedule, RNG state).
+fn resume_is_bitwise_identical(tag: &str, threads: usize, steps: usize, lazy: f64) {
+    let artifacts = std::env::temp_dir().join("slope_crash_recovery_models");
+    let model = format!("cr-{tag}-t{threads}");
+    std::fs::remove_dir_all(artifacts.join(&model)).ok();
+    let cfg = |ckpt: PathBuf, resume: Option<PathBuf>| RunConfig {
+        model: model.clone(),
+        method: Method::Slope,
+        steps,
+        lazy_fraction: lazy,
+        eval_every: 2,
+        eval_batches: 1,
+        seed: 11,
+        artifacts: artifacts.clone(),
+        out_dir: std::env::temp_dir().join("slope_crash_recovery_runs"),
+        checkpoint_dir: Some(ckpt),
+        resume,
+        keep_checkpoints: 16,
+        parallel: ParallelPolicy::with_threads(threads),
+    };
+
+    // Uninterrupted reference run.
+    let da = tmp_root(&format!("{tag}_t{threads}_ref"));
+    let mut a = Trainer::new(cfg(da.clone(), None)).unwrap();
+    a.init().unwrap();
+    let a_out = a.train().unwrap();
+
+    // Identical run into its own checkpoint dir, then the "crash": its
+    // newest training checkpoint is bit-flipped, so recovery must skip it
+    // and fall back to the previous step.
+    let db = tmp_root(&format!("{tag}_t{threads}_crash"));
+    let mut b = Trainer::new(cfg(db.clone(), None)).unwrap();
+    b.init().unwrap();
+    b.train().unwrap();
+    let step_dir = |root: &PathBuf| {
+        root.join(checkpoint::TRAIN_DIR).join(format!("step_{steps:08}"))
+    };
+    let newest = step_dir(&db).join(checkpoint::TRAIN_FILE);
+    let mut tampered = std::fs::read(&newest).unwrap();
+    let mid = tampered.len() / 2;
+    tampered[mid] ^= 0x08;
+    std::fs::write(&newest, &tampered).unwrap();
+    assert_eq!(checkpoint::peek_train_meta(&db).unwrap().step, steps - 2,
+               "{tag} t{threads}: recovery must fall back past the corrupted newest step");
+
+    // Resume restores step T-2 and re-runs the final two steps.
+    let mut c = Trainer::new(cfg(db.clone(), Some(db.clone()))).unwrap();
+    c.init().unwrap();
+    let c_out = c.train().unwrap();
+
+    assert_eq!(c_out.final_loss.to_bits(), a_out.final_loss.to_bits(),
+               "{tag} t{threads}: resumed final loss must be bitwise equal \
+                ({} vs {})", c_out.final_loss, a_out.final_loss);
+    // Checkpoint files are byte-deterministic (records in sorted name
+    // order), so whole-file equality IS plane-by-plane bitwise equality —
+    // params, compressed-space moments, masks, adapter chain, RNG state.
+    for f in [checkpoint::TRAIN_FILE, checkpoint::TRAIN_META_FILE] {
+        assert_eq!(std::fs::read(step_dir(&da).join(f)).unwrap(),
+                   std::fs::read(step_dir(&db).join(f)).unwrap(),
+                   "{tag} t{threads}: {f} must be bitwise identical after resume");
+    }
+
+    // A corrupted serving checkpoint must refuse to open: the v3
+    // checksums keep corrupt weights out of the serve path entirely.
+    let model_file = db.join(checkpoint::MODEL_FILE);
+    let mut mb = std::fs::read(&model_file).unwrap();
+    let mid = mb.len() / 2;
+    mb[mid] ^= 0x40;
+    std::fs::write(&model_file, &mb).unwrap();
+    assert!(AotModel::open(&db, ParallelPolicy::serial()).is_err(),
+            "{tag} t{threads}: a corrupt serving checkpoint must not open");
+
+    std::fs::remove_dir_all(&da).ok();
+    std::fs::remove_dir_all(&db).ok();
+}
+
+#[test]
+fn resume_is_bitwise_identical_sparse_phase() {
+    // Sparse-only schedule (λ = 0): checkpoints at steps 0,2,4,6,8;
+    // resume falls back to step 6 and re-runs 7..8.
+    resume_is_bitwise_identical("sparse", 1, 8, 0.0);
+    resume_is_bitwise_identical("sparse", 4, 8, 0.0);
+}
+
+#[test]
+fn resume_is_bitwise_identical_across_the_lora_flip() {
+    // λ = 0.34 over 12 steps flips the lazy adapters on after step 8;
+    // the fallback checkpoint (step 10) is inside the lora phase, so the
+    // restore must carry the adapter chain and its optimizer state.
+    resume_is_bitwise_identical("lora", 1, 12, 0.34);
+    resume_is_bitwise_identical("lora", 4, 12, 0.34);
+}

@@ -27,6 +27,8 @@ fn cfg(tag: &str, method: Method, steps: usize, lazy: f64) -> RunConfig {
         artifacts: root,
         out_dir: std::env::temp_dir().join("slope_it_trainer_runs"),
         checkpoint_dir: None,
+        resume: None,
+        keep_checkpoints: 3,
         parallel: ParallelPolicy::serial(),
     }
 }
