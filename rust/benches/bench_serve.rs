@@ -26,7 +26,7 @@
 //! restricts the sweep (default all; `both` is the legacy alias for
 //! all).
 
-use slope::backend::{ParallelPolicy, SparseBackend, SpmmAlgo};
+use slope::backend::{simd_level, ParallelPolicy, SparseBackend, SpmmAlgo};
 use slope::coordinator::checkpoint;
 use slope::runtime::{write_synthetic_artifact, HostModel, KvCache, Manifest, SynthSpec};
 use slope::serve::{AotModel, BatchPolicy, LoraAdapter, ServeEngine, ServeLayer, ServeModel};
@@ -98,6 +98,7 @@ fn main() {
     let run_decode = mode == "decode" || all;
     let mut rng = Rng::seed_from_u64(0);
     print_header("bench_serve — coalesced forward latency (both ServeModel backends)");
+    println!("simd level: {} (SLOPE_SIMD to override)", simd_level());
     println!(
         "{:<22} {:>3} {:>12} {:>12} {:>9}",
         "case", "thr", "per-batch", "per-req", "vs 1thr"

@@ -9,7 +9,8 @@
 //! per thread count.  Set `SLOPE_BENCH_JSON` for the machine-readable
 //! perf trajectory.
 
-use slope::backend::{gemm_nt_with, spmm_rowmajor_with, ParallelPolicy};
+use slope::backend::{gemm_nt_with, simd_level, spmm_rowmajor_with, spmm_rowmajor_with_at,
+                     ParallelPolicy, SimdLevel};
 use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
 use slope::tensor::Matrix;
 use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
@@ -20,6 +21,7 @@ const THREADS: [usize; 3] = [1, 2, 4];
 fn main() {
     let mut rng = Rng::seed_from_u64(0);
     print_header("bench_spmm — dense vs 2:4 compressed (batch 64), by threads");
+    println!("simd level: {} (SLOPE_SIMD to override)", simd_level());
     println!(
         "{:<28} {:>3} {:>12} {:>12} {:>9} {:>9}",
         "shape", "thr", "dense", "spmm", "vs dense", "vs 1thr"
@@ -62,6 +64,31 @@ fn main() {
                 spmm_1thr_ns / sparse.median_ns
             );
         }
+        // Level-split series at one thread: the scalar reference vs the
+        // auto-detected level, same shape and policy, so the trajectory
+        // attributes any spmm movement to the dispatch level that ran.
+        // (On non-AVX2 hardware `auto` degenerates to scalar and the two
+        // rows coincide — the series still exists, which is what the
+        // archive step enforces.)
+        let p1 = ParallelPolicy::for_width(1, d_in);
+        let scalar = bench_auto("simd-scalar", 120.0, || {
+            black_box(spmm_rowmajor_with_at(SimdLevel::Scalar, black_box(&x), black_box(&c),
+                                            &p1));
+        });
+        let auto = bench_auto("simd-auto", 120.0, || {
+            black_box(spmm_rowmajor_with_at(simd_level(), black_box(&x), black_box(&c), &p1));
+        });
+        emit_json("bench_spmm", &format!("simd/{name}/scalar"), 1, &scalar);
+        emit_json("bench_spmm", &format!("simd/{name}/auto"), 1, &auto);
+        println!(
+            "{:<28} {:>3} {:>12} {:>10.2}us {:>8.2}x {:>9}",
+            format!("  simd {} vs scalar", simd_level()),
+            1,
+            "",
+            auto.median_us(),
+            scalar.median_ns / auto.median_ns,
+            ""
+        );
     }
     println!("\n(2:4 halves MACs and weight bytes; CPU speedup vs dense < 2x at one\n thread because the gather-indexed access costs more per element than\n streaming — the hardware analogue is the metadata decode sparse tensor\n cores do for free.  The vs-1thr column is the kernel engine's scaling.)");
 }

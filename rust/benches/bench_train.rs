@@ -15,7 +15,7 @@
 //! tape and every staging pool, so the loop is allocation-free past the
 //! first iteration.
 
-use slope::backend::ParallelPolicy;
+use slope::backend::{simd_level, ParallelPolicy};
 use slope::runtime::{write_host_train_artifact, HostTrainModel, Manifest};
 use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
 use slope::util::Rng;
@@ -34,6 +34,7 @@ fn main() {
         .collect();
 
     print_header("bench_train — host train step (double-pruned backward)");
+    println!("simd level: {} (SLOPE_SIMD to override)", simd_level());
     println!(
         "{:<26} {:>3} {:>12} {:>12} {:>9}",
         "case", "thr", "per-step", "per-seq", "vs 1thr"

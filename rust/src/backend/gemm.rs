@@ -22,9 +22,19 @@
 //! `batch = 1` call still spreads across the pool.  Per output element
 //! the reduction order never depends on the partition, so parallel
 //! results are bit-identical to serial at any thread count.
+//!
+//! All entry points dispatch through a [`SimdLevel`]
+//! ([`crate::backend::simd`]): the row-dot inner product ([`dot`]) and
+//! the rank-1 row update run AVX2+FMA microkernels on capable hardware
+//! and the original safe-Rust loops otherwise (or under
+//! `SLOPE_SIMD=scalar`).  The per-element reduction order at a given
+//! level never depends on the partition, so the bit-identical-to-serial
+//! contract holds at both levels; across levels FMA reassociation is
+//! tolerance-pinned in `tests/simd_parity.rs`.
 
 use crate::backend::pool::{parallel_over_col_stripes, parallel_over_rows, ParallelPolicy,
                            Partition, StripedOut};
+use crate::backend::simd::{self, SimdLevel};
 use crate::tensor::Matrix;
 use std::ops::Range;
 
@@ -49,11 +59,18 @@ pub fn gemm_with(a: &Matrix, b: &Matrix, policy: &ParallelPolicy) -> Matrix {
 
 /// `C = A · B` into a caller-owned output (overwritten).
 pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy) {
+    gemm_into_at(simd::simd_level(), a, b, c, policy);
+}
+
+/// `C = A · B` at an explicit [`SimdLevel`] (clamped to hardware).
+pub fn gemm_into_at(level: SimdLevel, a: &Matrix, b: &Matrix, c: &mut Matrix,
+                    policy: &ParallelPolicy) {
+    let level = simd::effective(level);
     assert_eq!(a.cols, b.rows, "gemm shape mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm output shape");
     c.data.fill(0.0);
     parallel_over_rows(policy, &mut c.data, b.cols, |range, chunk| {
-        gemm_rows(a, b, range, chunk);
+        gemm_rows(level, a, b, range, chunk);
     });
 }
 
@@ -65,7 +82,7 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy
 /// the partition, so parallel results stay bit-identical to serial.  The
 /// inner j-loop is branch-free (a zero-skip here mispredicts on dense
 /// operands and starves the vector units).
-fn gemm_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
+fn gemm_rows(level: SimdLevel, a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
     let (k, n) = (a.cols, b.cols);
     for kk in (0..k).step_by(KB) {
         let kend = (kk + KB).min(k);
@@ -73,11 +90,7 @@ fn gemm_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
             let arow = a.row(i);
             let crow = &mut out[local * n..(local + 1) * n];
             for p in kk..kend {
-                let av = arow[p];
-                let brow = b.row(p);
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
+                axpy_at(level, arow[p], b.row(p), crow, n);
             }
         }
     }
@@ -104,6 +117,13 @@ pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPol
     gemm_nt_acc_into(a, b, c, policy);
 }
 
+/// `C = A · Bᵀ` at an explicit [`SimdLevel`] (clamped to hardware).
+pub fn gemm_nt_into_at(level: SimdLevel, a: &Matrix, b: &Matrix, c: &mut Matrix,
+                       policy: &ParallelPolicy) {
+    c.data.fill(0.0);
+    gemm_nt_acc_into_at(level, a, b, c, policy);
+}
+
 /// `C += A · Bᵀ` accumulating into an existing output — the fused
 /// matmul+add of §2.4 (Eq. 11-right): one traversal, no extra pass.
 /// By-value form kept for the seed API.
@@ -116,13 +136,20 @@ pub fn gemm_nt_acc(a: &Matrix, b: &Matrix, mut c: Matrix) -> Matrix {
 /// policy's partition strategy (row ranges, or column stripes when the
 /// batch is too small to occupy the pool).
 pub fn gemm_nt_acc_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy) {
+    gemm_nt_acc_into_at(simd::simd_level(), a, b, c, policy);
+}
+
+/// `C += A · Bᵀ` at an explicit [`SimdLevel`] (clamped to hardware).
+pub fn gemm_nt_acc_into_at(level: SimdLevel, a: &Matrix, b: &Matrix, c: &mut Matrix,
+                           policy: &ParallelPolicy) {
+    let level = simd::effective(level);
     assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows));
     match policy.resolve(a.rows, b.rows) {
-        Partition::Serial => gemm_nt_rows(a, b, 0..a.rows, &mut c.data),
+        Partition::Serial => gemm_nt_rows(level, a, b, 0..a.rows, &mut c.data),
         Partition::Rows(_) => {
             parallel_over_rows(policy, &mut c.data, b.rows, |range, chunk| {
-                gemm_nt_rows(a, b, range, chunk);
+                gemm_nt_rows(level, a, b, range, chunk);
             });
         }
         Partition::Cols(tasks) => {
@@ -136,7 +163,7 @@ pub fn gemm_nt_acc_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &Paralle
                     for (local, j) in stripe.clone().enumerate() {
                         // Same single-dot-per-element computation as the
                         // row path ⇒ bit-identical results.
-                        dst[local] += dot(arow, b.row(j), k);
+                        dst[local] += dot_at(level, arow, b.row(j), k);
                     }
                 }
             });
@@ -144,7 +171,7 @@ pub fn gemm_nt_acc_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &Paralle
     }
 }
 
-fn gemm_nt_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
+fn gemm_nt_rows(level: SimdLevel, a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
     let k = a.cols;
     let n = b.rows;
     for (local, i) in range.enumerate() {
@@ -153,7 +180,7 @@ fn gemm_nt_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
         for jb in (0..n).step_by(JB) {
             let jend = (jb + JB).min(n);
             for j in jb..jend {
-                crow[j] += dot(arow, b.row(j), k);
+                crow[j] += dot_at(level, arow, b.row(j), k);
             }
         }
     }
@@ -176,11 +203,18 @@ pub fn gemm_tn_with(a: &Matrix, b: &Matrix, policy: &ParallelPolicy) -> Matrix {
 
 /// `C = Aᵀ · B` into a caller-owned output (overwritten).
 pub fn gemm_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPolicy) {
+    gemm_tn_into_at(simd::simd_level(), a, b, c, policy);
+}
+
+/// `C = Aᵀ · B` at an explicit [`SimdLevel`] (clamped to hardware).
+pub fn gemm_tn_into_at(level: SimdLevel, a: &Matrix, b: &Matrix, c: &mut Matrix,
+                       policy: &ParallelPolicy) {
+    let level = simd::effective(level);
     assert_eq!(a.rows, b.rows, "gemm_tn shape mismatch");
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "gemm_tn output shape");
     c.data.fill(0.0);
     parallel_over_rows(policy, &mut c.data, b.cols, |range, chunk| {
-        gemm_tn_rows(a, b, range, chunk);
+        gemm_tn_rows(level, a, b, range, chunk);
     });
 }
 
@@ -188,23 +222,43 @@ pub fn gemm_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, policy: &ParallelPol
 /// `a[p, i] · b[p, :]` for `p` ascending — the same per-row order as the
 /// rank-1-update serial loop, so parallel results stay bit-identical.
 /// The j-loop is branch-free (no zero-skip; see `gemm_rows`).
-fn gemm_tn_rows(a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
+fn gemm_tn_rows(level: SimdLevel, a: &Matrix, b: &Matrix, range: Range<usize>, out: &mut [f32]) {
     let (k, n) = (a.rows, b.cols);
     for (local, i) in range.enumerate() {
         let crow = &mut out[local * n..(local + 1) * n];
         for p in 0..k {
-            let av = a.data[p * a.cols + i];
-            let brow = b.row(p);
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
+            axpy_at(level, a.data[p * a.cols + i], b.row(p), crow, n);
         }
     }
 }
 
-/// 8-wide unrolled dot product (auto-vectorizes to SIMD).
+/// Inner product at the process-wide [`SimdLevel`]: FMA microkernel on
+/// AVX2 hardware, the 8-wide unrolled scalar loop otherwise.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
+    dot_at(simd::simd_level(), a, b, k)
+}
+
+/// [`dot`] at an explicit [`SimdLevel`] (clamped to hardware).
+#[inline]
+pub fn dot_at(level: SimdLevel, a: &[f32], b: &[f32], k: usize) -> f32 {
+    let level = simd::effective(level);
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2 {
+        // SAFETY: `effective` verified AVX2+FMA for this level; the
+        // callers' slices hold at least `k` elements (asserted scalar-side
+        // too via indexing).
+        return unsafe { simd::x86::dot(a, b, k) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = level;
+    dot_scalar(a, b, k)
+}
+
+/// Reference 8-wide unrolled dot product (auto-vectorizes without FMA
+/// contraction) — the pinned scalar-level reduction.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32], k: usize) -> f32 {
     let mut acc = [0.0f32; 8];
     let chunks = k / 8;
     for c in 0..chunks {
@@ -218,6 +272,25 @@ pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
         s += a[i] * b[i];
     }
     s
+}
+
+/// Rank-1 row update `crow[..n] += av · brow[..n]` at a (pre-clamped)
+/// level — the inner loop of `gemm` / `gemm_tn`.  The scalar body is the
+/// exact branch-free loop those kernels always ran.
+#[inline]
+fn axpy_at(level: SimdLevel, av: f32, brow: &[f32], crow: &mut [f32], n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2 {
+        // SAFETY: callers only pass Avx2 after `effective` clamping at
+        // the kernel entry point.
+        unsafe { simd::x86::axpy(av, brow, crow, n) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = level;
+    for (c, &bv) in crow[..n].iter_mut().zip(&brow[..n]) {
+        *c += av * bv;
+    }
 }
 
 #[cfg(test)]

@@ -43,6 +43,31 @@
 //! [`crate::serve`] subsystem drives these kernels through warm
 //! [`SparseBackend`]s for the deployment path.
 //!
+//! # SIMD dispatch ([`simd`])
+//!
+//! Every kernel additionally routes through a process-wide
+//! [`SimdLevel`], detected once (`is_x86_feature_detected!` on x86_64;
+//! scalar elsewhere) and overridable via `SLOPE_SIMD=auto|avx2|scalar`.
+//! At `Avx2` the 2:4 gather-dot, the dense inner product, and the rank-1
+//! row update run `#[target_feature(enable = "avx2,fma")]` microkernels;
+//! at `Scalar` the original safe-Rust loops run byte-for-byte unchanged.
+//! The contract, pinned by `tests/simd_parity.rs`:
+//!
+//! * **bitwise within a level, across thread counts and traversals** —
+//!   at a fixed level every output element is computed by one
+//!   per-element function in one reduction order, whatever the
+//!   partition, tile, or entry point, so all determinism pins
+//!   (parallel-vs-serial, tiled-vs-rowmajor, decode-vs-recompute,
+//!   crash-recovery byte compares) hold unchanged at either level;
+//! * **tolerance across levels** — FMA contraction reassociates the
+//!   float reduction, so `Avx2` vs `Scalar` is pinned to tight relative
+//!   tolerance, and **bitwise** on small-integer inputs where no
+//!   rounding occurs (an end-to-end check of the gather indexing).
+//!
+//! `*_at(level, ...)` variants pin a level explicitly (parity tests,
+//! level-split benches); levels are clamped to hardware capability, so
+//! requesting `Avx2` without AVX2 runs scalar rather than UB.
+//!
 //! # Packed metadata (Eq. 7 accounting)
 //!
 //! [`CompressedNm`] stores its index plane bit-packed: one intra-group
@@ -71,14 +96,19 @@
 
 pub mod gemm;
 pub mod pool;
+pub mod simd;
 pub mod spmm;
 
-pub use gemm::{gemm, gemm_into, gemm_nt, gemm_nt_acc, gemm_nt_acc_into, gemm_nt_into,
-               gemm_nt_with, gemm_tn, gemm_tn_into, gemm_tn_with, gemm_with};
+pub use gemm::{dot, dot_at, dot_scalar, gemm, gemm_into, gemm_into_at, gemm_nt, gemm_nt_acc,
+               gemm_nt_acc_into, gemm_nt_acc_into_at, gemm_nt_into, gemm_nt_into_at,
+               gemm_nt_with, gemm_tn, gemm_tn_into, gemm_tn_into_at, gemm_tn_with, gemm_with};
 pub use pool::{parallel_over_col_stripes, parallel_over_rows, spawned_thread_count,
                ParallelPolicy, Partition, PartitionStrategy, WorkerPool};
-pub use spmm::{sparse_dot, sparse_dot_scalar, spmm_rowmajor, spmm_rowmajor_into,
-               spmm_rowmajor_with, spmm_tiled, spmm_tiled_into, spmm_tiled_with, SpmmAlgo};
+pub use simd::{avx2_available, simd_level, SimdLevel};
+pub use spmm::{sparse_dot, sparse_dot_at, sparse_dot_scalar, spmm_rowmajor, spmm_rowmajor_into,
+               spmm_rowmajor_into_at, spmm_rowmajor_with, spmm_rowmajor_with_at, spmm_tiled,
+               spmm_tiled_into, spmm_tiled_into_at, spmm_tiled_with, spmm_tiled_with_at,
+               SpmmAlgo};
 
 use crate::sparsity::{CompressedNm, Mask, NmScheme};
 use crate::tensor::Matrix;

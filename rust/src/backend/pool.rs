@@ -22,7 +22,11 @@
 //! from an atomic counter, but since every task computes the same output
 //! range it would compute serially, results are **bit-identical** to the
 //! serial kernel at any thread count — the property the
-//! `parallel_and_packed` and `serve_and_pool` test suites pin.
+//! `parallel_and_packed` and `serve_and_pool` test suites pin.  The
+//! partition is also independent of the kernels' [`crate::backend::simd`]
+//! dispatch level: column stripes stay quad-aligned and tasks stay pure
+//! functions of (shape, policy), so the across-thread bitwise contract
+//! holds at every `SimdLevel` (pinned in `tests/simd_parity.rs`).
 //!
 //! # Partitioning strategies
 //!

@@ -1,0 +1,335 @@
+//! Runtime-dispatched SIMD microkernels for the kernel engine.
+//!
+//! Every hot loop in [`crate::backend::gemm`] and [`crate::backend::spmm`]
+//! routes through a [`SimdLevel`] chosen **once per process**:
+//! `Avx2` (AVX2 + FMA, x86_64 only, detected via
+//! `is_x86_feature_detected!`) or `Scalar` (the original safe-Rust
+//! kernels, byte-for-byte unchanged — the pinned ground truth on every
+//! architecture).  `SLOPE_SIMD=auto|avx2|scalar` overrides detection;
+//! requesting `avx2` on hardware without it warns and falls back rather
+//! than executing illegal instructions.
+//!
+//! # Determinism contract
+//!
+//! * **Within a level**: every output element is computed by the same
+//!   microkernel in the same reduction order regardless of how the pool
+//!   partitions the output (serial / row ranges / quad-aligned column
+//!   stripes / tiles).  Results are therefore **bit-identical across
+//!   thread counts and traversal orders**, exactly as before this layer
+//!   existed — all pre-SIMD bitwise pins (parallel-vs-serial,
+//!   tiled-vs-rowmajor, KV-decode-vs-recompute, crash-recovery resume
+//!   byte-compares) hold at any fixed level.
+//! * **Across levels**: the AVX2 kernels accumulate in vector lanes and
+//!   contract multiply-adds through FMA, which reassociates the float
+//!   reduction; `Avx2` and `Scalar` results agree to tight relative
+//!   tolerance (pinned in `tests/simd_parity.rs`), and agree **bitwise**
+//!   on inputs where no rounding occurs at all (small integers — also
+//!   pinned, which checks the gather indexing end-to-end).
+//!
+//! # Microkernels
+//!
+//! * [`x86::dot`] — 4×8-lane FMA inner product (dense `gemm_nt` /
+//!   `gemm_nt_acc`, attention, LoRA, BWD-1 staging);
+//! * [`x86::axpy`] — 8-lane `y += a·x` row update (`gemm` / `gemm_tn`
+//!   rank-1 inner loops, the BWD-1 `∇Yᵀ·X` saxpy form);
+//! * [`x86::sparse_dot24`] — the 2:4 gather-dot: one metadata byte is
+//!   decoded through the [`IDX24`] lane-permute LUT and its four kept
+//!   values FMA against a 16-float window of `x` in two
+//!   `vpermps`-gathered half-registers — eight multiply-adds per
+//!   iteration where the scalar path does one.  This is the CPU analogue
+//!   of the metadata decode sparse tensor cores do in hardware, and the
+//!   same trick powers the row-compressed double-pruned transpose SpMM
+//!   (Eq.-6 BWD-2) because that operand is just another `CompressedNm`.
+
+use std::sync::OnceLock;
+
+/// Instruction-set level the kernel engine dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable safe-Rust kernels — the pinned reference on every arch.
+    Scalar,
+    /// AVX2 + FMA microkernels (x86_64 only).
+    Avx2,
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+        })
+    }
+}
+
+/// Whether this process can execute the AVX2+FMA microkernels.
+#[inline]
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn detect() -> SimdLevel {
+    let want = std::env::var("SLOPE_SIMD").unwrap_or_default();
+    match want.as_str() {
+        "scalar" => SimdLevel::Scalar,
+        "avx2" => {
+            if avx2_available() {
+                SimdLevel::Avx2
+            } else {
+                eprintln!("[simd] SLOPE_SIMD=avx2 requested but AVX2+FMA unavailable; \
+                           falling back to scalar");
+                SimdLevel::Scalar
+            }
+        }
+        "" | "auto" => {
+            if avx2_available() {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+        other => {
+            eprintln!("[simd] unknown SLOPE_SIMD={other:?} (want auto|avx2|scalar); using auto");
+            if avx2_available() {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+    }
+}
+
+/// The process-wide dispatch level, detected once (first call) and cached.
+pub fn simd_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+/// Clamp a requested level to what the hardware can actually run.  Every
+/// `*_at` kernel entry point calls this, so passing `Avx2` on a machine
+/// without it is safe (it silently runs scalar) rather than UB.
+#[inline]
+pub fn effective(level: SimdLevel) -> SimdLevel {
+    match level {
+        SimdLevel::Avx2 if !avx2_available() => SimdLevel::Scalar,
+        l => l,
+    }
+}
+
+/// AVX2+FMA microkernels.  Callers must hold `effective(Avx2) == Avx2`
+/// (i.e. go through the dispatchers) before entering any of these.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Lane-permute LUT for one 2:4 metadata byte: entries 0/1 are the
+    /// low-nibble group's intra-group offsets (window floats 0..4), and
+    /// entries 2/3 the high-nibble group's offsets biased by 4 (window
+    /// floats 4..8).  Loaded as a `__m256i` permute index whose upper
+    /// four lanes are unused.
+    const IDX24: [[u32; 8]; 256] = build_idx24();
+
+    const fn build_idx24() -> [[u32; 8]; 256] {
+        let mut t = [[0u32; 8]; 256];
+        let mut b = 0usize;
+        while b < 256 {
+            t[b] = [
+                (b & 3) as u32,
+                ((b >> 2) & 3) as u32,
+                4 + ((b >> 4) & 3) as u32,
+                4 + ((b >> 6) & 3) as u32,
+                0,
+                0,
+                0,
+                0,
+            ];
+            b += 1;
+        }
+        t
+    }
+
+    /// Horizontal sum of a `__m256` in a fixed lane order (0..7), so the
+    /// reduction is deterministic run-to-run.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        // Pairwise within 128-bit halves, then across: a fixed tree that
+        // does not depend on data, so results are deterministic.
+        ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+    }
+
+    /// FMA inner product over `k` elements: 4 independent 8-lane
+    /// accumulator chains, an 8-wide cleanup loop, then a fixed-order
+    /// horizontal reduction and a scalar `mul_add` tail.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime; `a` and `b` must each hold at least
+    /// `k` elements.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
+        debug_assert!(a.len() >= k && b.len() >= k);
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 32 <= k {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 16)),
+                _mm256_loadu_ps(pb.add(i + 16)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 24)),
+                _mm256_loadu_ps(pb.add(i + 24)),
+                acc3,
+            );
+            i += 32;
+        }
+        while i + 8 <= k {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+        let mut s = hsum(acc);
+        while i < k {
+            s = (*pa.add(i)).mul_add(*pb.add(i), s);
+            i += 1;
+        }
+        s
+    }
+
+    /// `y[..n] += a · x[..n]` — the rank-1-update row kernel for
+    /// `gemm` / `gemm_tn`.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime; `x` and `y` must each hold at least
+    /// `n` elements.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32], n: usize) {
+        debug_assert!(x.len() >= n && y.len() >= n);
+        let av = _mm256_set1_ps(a);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        let mut i = 0;
+        while i + 8 <= n {
+            let yv = _mm256_loadu_ps(py.add(i));
+            _mm256_storeu_ps(py.add(i), _mm256_fmadd_ps(av, _mm256_loadu_ps(px.add(i)), yv));
+            i += 8;
+        }
+        while i < n {
+            *py.add(i) = a.mul_add(*px.add(i), *py.add(i));
+            i += 1;
+        }
+    }
+
+    /// 2:4 gather-dot over one compressed weight row: per metadata byte
+    /// **pair** (four groups, eight kept values, a 16-float window of
+    /// `x`), decode both bytes through [`IDX24`], `vpermps`-gather each
+    /// byte's four operands from its 8-float half-window, combine the two
+    /// half-registers, and FMA against the eight contiguous `vals` — then
+    /// at most one whole trailing byte and one half-byte scalar tail.
+    /// Two accumulator chains keep the gather streams independent.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime.  `vals.len()` (= kc) kept values and
+    /// `ceil(kc/4)` metadata bytes must be present, and `xrow` must cover
+    /// the dense columns (`≥ kc/4·8` floats for the full bytes it
+    /// touches) — guaranteed by `CompressedNm`'s layout invariants.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sparse_dot24(xrow: &[f32], vals: &[f32], meta: &[u8]) -> f32 {
+        let kc = vals.len();
+        let pairs = kc / 4; // full metadata bytes (2 groups / 8 dense cols each)
+        let px = xrow.as_ptr();
+        let pv = vals.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut byte = 0;
+        // Byte pairs: 16 dense columns / 8 kept values per iteration.
+        while byte + 2 <= pairs {
+            let b0 = *meta.get_unchecked(byte) as usize;
+            let b1 = *meta.get_unchecked(byte + 1) as usize;
+            let base = byte * 8;
+            // Window for byte 0 (cols base..base+8) and byte 1 (+8..+16).
+            let w0 = _mm256_loadu_ps(px.add(base));
+            let w1 = _mm256_loadu_ps(px.add(base + 8));
+            let g0 = _mm256_permutevar8x32_ps(
+                w0,
+                _mm256_loadu_si256(IDX24[b0].as_ptr() as *const __m256i),
+            );
+            let g1 = _mm256_permutevar8x32_ps(
+                w1,
+                _mm256_loadu_si256(IDX24[b1].as_ptr() as *const __m256i),
+            );
+            // Gathered operands live in each register's low 128 bits;
+            // pack byte 1's four into the high half of byte 0's register.
+            let gathered = _mm256_insertf128_ps::<1>(g0, _mm256_castps256_ps128(g1));
+            let v = _mm256_loadu_ps(pv.add(byte * 4));
+            if byte % 4 == 0 {
+                acc0 = _mm256_fmadd_ps(gathered, v, acc0);
+            } else {
+                acc1 = _mm256_fmadd_ps(gathered, v, acc1);
+            }
+            byte += 2;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        let mut k = byte * 4;
+        let mut base = byte * 8;
+        // At most one full trailing byte (odd `pairs`), done scalar.
+        if byte < pairs {
+            let d = IDX24[*meta.get_unchecked(byte) as usize];
+            s = (*px.add(base + d[0] as usize)).mul_add(*pv.add(k), s);
+            s = (*px.add(base + d[1] as usize)).mul_add(*pv.add(k + 1), s);
+            s = (*px.add(base + d[2] as usize)).mul_add(*pv.add(k + 2), s);
+            s = (*px.add(base + d[3] as usize)).mul_add(*pv.add(k + 3), s);
+            k += 4;
+            base += 8;
+        }
+        // Odd group count: the final byte's low nibble holds one group.
+        if k < kc {
+            let d = IDX24[*meta.get_unchecked(pairs) as usize];
+            s = (*px.add(base + d[0] as usize)).mul_add(*pv.add(k), s);
+            s = (*px.add(base + d[1] as usize)).mul_add(*pv.add(k + 1), s);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_never_exceeds_hardware() {
+        assert_eq!(effective(SimdLevel::Scalar), SimdLevel::Scalar);
+        let e = effective(SimdLevel::Avx2);
+        if avx2_available() {
+            assert_eq!(e, SimdLevel::Avx2);
+        } else {
+            assert_eq!(e, SimdLevel::Scalar);
+        }
+    }
+
+    #[test]
+    fn level_display_names() {
+        assert_eq!(SimdLevel::Scalar.to_string(), "scalar");
+        assert_eq!(SimdLevel::Avx2.to_string(), "avx2");
+    }
+}

@@ -25,9 +25,21 @@
 //! are bit-identical to serial at any thread count and `spmm_rowmajor` /
 //! `spmm_tiled` agree bit-for-bit with each other (tiling and striping
 //! only reorder whole elements).
+//!
+//! Every entry point dispatches through a [`SimdLevel`]
+//! ([`crate::backend::simd`]): on AVX2+FMA hardware the 2:4 inner loop
+//! runs the lane-permute gather-dot ([`crate::backend::simd::x86::sparse_dot24`],
+//! eight FMAs per metadata-byte pair), everywhere else — and under
+//! `SLOPE_SIMD=scalar` — the original safe-Rust kernels run unchanged.
+//! Within a level every output element is computed by the same
+//! per-element function regardless of partition or traversal, so the
+//! bit-identical-across-threads contract holds at **both** levels;
+//! `Avx2` vs `Scalar` agree to tight tolerance (FMA reassociation) and
+//! bitwise on small-integer inputs (`tests/simd_parity.rs`).
 
 use crate::backend::pool::{parallel_over_col_stripes, parallel_over_rows, ParallelPolicy,
                            Partition, StripedOut};
+use crate::backend::simd::{self, SimdLevel};
 use crate::sparsity::{compressed::unpack_offset, CompressedNm};
 use crate::tensor::Matrix;
 use std::ops::Range;
@@ -56,21 +68,40 @@ pub fn spmm_rowmajor_with(x: &Matrix, w: &CompressedNm, policy: &ParallelPolicy)
     y
 }
 
+/// Allocating row-major SpMM at an explicit [`SimdLevel`].
+pub fn spmm_rowmajor_with_at(level: SimdLevel, x: &Matrix, w: &CompressedNm,
+                             policy: &ParallelPolicy) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, w.rows);
+    spmm_rowmajor_into_at(level, x, w, &mut y, policy);
+    y
+}
+
 /// Row-major SpMM into a caller-owned output (overwritten; every element
-/// is stored, so no pre-zeroing is needed).
-///
-/// §Perf iteration (EXPERIMENTS.md §Perf/L3): gathers don't
-/// auto-vectorize, so the kernel processes FOUR weight rows per pass —
-/// the four accumulator chains give the out-of-order core independent
-/// gather streams (ILP) and reuse the cached x row.
+/// is stored, so no pre-zeroing is needed) — dispatched at the
+/// process-wide [`simd_level`](crate::backend::simd::simd_level).
 pub fn spmm_rowmajor_into(x: &Matrix, w: &CompressedNm, y: &mut Matrix, policy: &ParallelPolicy) {
+    spmm_rowmajor_into_at(simd::simd_level(), x, w, y, policy);
+}
+
+/// Row-major SpMM at an explicit [`SimdLevel`] (clamped to what the
+/// hardware supports) — the hook parity tests and level-pinned benches
+/// use.
+///
+/// §Perf iteration (EXPERIMENTS.md §Perf/L3): scalar gathers don't
+/// auto-vectorize, so the scalar path processes FOUR weight rows per
+/// pass — the four accumulator chains give the out-of-order core
+/// independent gather streams (ILP) and reuse the cached x row.  The
+/// AVX2 path instead vectorizes within each row's reduction.
+pub fn spmm_rowmajor_into_at(level: SimdLevel, x: &Matrix, w: &CompressedNm, y: &mut Matrix,
+                             policy: &ParallelPolicy) {
+    let level = simd::effective(level);
     assert_eq!(x.cols, w.cols, "spmm: x cols must equal dense weight cols");
     assert_eq!((y.rows, y.cols), (x.rows, w.rows), "spmm output shape");
     match policy.resolve(x.rows, w.rows) {
-        Partition::Serial => spmm_rowmajor_rows(x, w, 0..x.rows, &mut y.data),
+        Partition::Serial => spmm_rowmajor_rows(level, x, w, 0..x.rows, &mut y.data),
         Partition::Rows(_) => {
             parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
-                spmm_rowmajor_rows(x, w, range, chunk);
+                spmm_rowmajor_rows(level, x, w, range, chunk);
             });
         }
         Partition::Cols(tasks) => {
@@ -80,32 +111,59 @@ pub fn spmm_rowmajor_into(x: &Matrix, w: &CompressedNm, y: &mut Matrix, policy: 
                     // SAFETY: this task's stripe is disjoint from every
                     // other task's (pool partition contract).
                     let dst = unsafe { out.row_stripe(b, stripe.clone()) };
-                    spmm_row_block(x.row(b), w, stripe.clone(), dst);
+                    spmm_row_block(level, x.row(b), w, stripe.clone(), dst);
                 }
             });
         }
     }
 }
 
-fn spmm_rowmajor_rows(x: &Matrix, w: &CompressedNm, range: Range<usize>, out: &mut [f32]) {
+fn spmm_rowmajor_rows(level: SimdLevel, x: &Matrix, w: &CompressedNm, range: Range<usize>,
+                      out: &mut [f32]) {
     for (local, b) in range.enumerate() {
         let yrow = &mut out[local * w.rows..(local + 1) * w.rows];
-        spmm_row_block(x.row(b), w, 0..w.rows, yrow);
+        spmm_row_block(level, x.row(b), w, 0..w.rows, yrow);
     }
 }
 
 /// Compute one batch row's outputs for weight rows `orange`, written to
-/// `out` (`orange.len()` long).  Dispatches to the table-driven 2:4 block
-/// or the generic packed-decode block; both accumulate each output in
-/// group-ascending order, so every element is bit-identical to
-/// [`sparse_dot_scalar`] regardless of path or partition.
+/// `out` (`orange.len()` long).  Dispatches to the AVX2 gather-dot, the
+/// table-driven scalar 2:4 block, or the generic packed-decode block.
+/// Within a level every element is the same per-element reduction no
+/// matter which entry point, partition, or tile reached here — the
+/// invariant behind every bitwise pin in the suite.
 #[inline]
-fn spmm_row_block(xrow: &[f32], w: &CompressedNm, orange: Range<usize>, out: &mut [f32]) {
+fn spmm_row_block(level: SimdLevel, xrow: &[f32], w: &CompressedNm, orange: Range<usize>,
+                  out: &mut [f32]) {
     if w.scheme.n == 2 && w.scheme.m == 4 {
-        spmm_row_block24(xrow, w, orange, out);
+        spmm_row_block24_at(level, xrow, w, orange, out);
     } else {
         spmm_row_block_generic(xrow, w, orange, out);
     }
+}
+
+/// Level dispatch for the 2:4 block.  Non-x86 builds only ever see
+/// `Scalar` (detection and `effective` both clamp).
+#[inline]
+fn spmm_row_block24_at(level: SimdLevel, xrow: &[f32], w: &CompressedNm, orange: Range<usize>,
+                       out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2 {
+        let kc = w.kcols();
+        let rmb = w.row_meta_bytes();
+        for (i, o) in orange.enumerate() {
+            let vals = &w.values[o * kc..(o + 1) * kc];
+            let meta = &w.meta[o * rmb..(o + 1) * rmb];
+            // SAFETY: `effective` verified AVX2+FMA before this level
+            // could be selected; slice lengths satisfy the layout
+            // invariants the kernel documents.
+            out[i] = unsafe { simd::x86::sparse_dot24(xrow, vals, meta) };
+        }
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = level;
+    spmm_row_block24(xrow, w, orange, out);
 }
 
 fn spmm_row_block_generic(xrow: &[f32], w: &CompressedNm, orange: Range<usize>, out: &mut [f32]) {
@@ -247,6 +305,14 @@ pub fn spmm_tiled_with(x: &Matrix, w: &CompressedNm, tile: usize,
     y
 }
 
+/// Allocating tiled SpMM at an explicit [`SimdLevel`].
+pub fn spmm_tiled_with_at(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: usize,
+                          policy: &ParallelPolicy) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, w.rows);
+    spmm_tiled_into_at(level, x, w, tile, &mut y, policy);
+    y
+}
+
 /// Tiled SpMM into a caller-owned output: process `tile × tile` output
 /// blocks so the active slice of `X` stays cache-resident while a block
 /// of weight rows streams through — the CPU analogue of splitting the
@@ -256,31 +322,40 @@ pub fn spmm_tiled_with(x: &Matrix, w: &CompressedNm, tile: usize,
 /// traversal order never changes values.
 pub fn spmm_tiled_into(x: &Matrix, w: &CompressedNm, tile: usize, y: &mut Matrix,
                        policy: &ParallelPolicy) {
+    spmm_tiled_into_at(simd::simd_level(), x, w, tile, y, policy);
+}
+
+/// Tiled SpMM at an explicit [`SimdLevel`] (clamped to hardware).
+pub fn spmm_tiled_into_at(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: usize,
+                          y: &mut Matrix, policy: &ParallelPolicy) {
+    let level = simd::effective(level);
     assert_eq!(x.cols, w.cols);
     assert_eq!((y.rows, y.cols), (x.rows, w.rows), "spmm output shape");
     assert!(tile > 0);
     match policy.resolve(x.rows, w.rows) {
-        Partition::Serial => spmm_tiled_rows(x, w, tile, 0..x.rows, &mut y.data),
+        Partition::Serial => spmm_tiled_rows(level, x, w, tile, 0..x.rows, &mut y.data),
         Partition::Rows(_) => {
             parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
-                spmm_tiled_rows(x, w, tile, range, chunk);
+                spmm_tiled_rows(level, x, w, tile, range, chunk);
             });
         }
         Partition::Cols(tasks) => {
             let out = StripedOut::new(&mut y.data, w.rows);
             parallel_over_col_stripes(tasks, w.rows, |stripe| {
-                spmm_tiled_cols(x, w, tile, stripe, &out);
+                spmm_tiled_cols(level, x, w, tile, stripe, &out);
             });
         }
     }
 }
 
-fn spmm_tiled_rows(x: &Matrix, w: &CompressedNm, tile: usize, range: Range<usize>,
-                   out: &mut [f32]) {
-    let kc = w.kcols();
-    let rmb = w.row_meta_bytes();
-    let (n, m) = (w.scheme.n, w.scheme.m);
-    let bits = w.scheme.offset_bits();
+/// Both tiled traversals delegate their inner decode loop to the shared
+/// [`spmm_row_block`] dispatcher (one tile-row of outputs at a time), so
+/// the SIMD path accelerates every SpMM entry point, not just
+/// `spmm_rowmajor`.  Per element nothing changed: at a given level the
+/// block computes exactly the per-element reduction the old inline loop
+/// did, so tiled stays bitwise equal to row-major.
+fn spmm_tiled_rows(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: usize,
+                   range: Range<usize>, out: &mut [f32]) {
     let rows = range.len();
     for bt in (0..rows).step_by(tile) {
         let bend = (bt + tile).min(rows);
@@ -289,11 +364,7 @@ fn spmm_tiled_rows(x: &Matrix, w: &CompressedNm, tile: usize, range: Range<usize
             for local in bt..bend {
                 let xrow = x.row(range.start + local);
                 let yrow = &mut out[local * w.rows..(local + 1) * w.rows];
-                for o in ot..oend {
-                    let vals = &w.values[o * kc..(o + 1) * kc];
-                    let meta = &w.meta[o * rmb..(o + 1) * rmb];
-                    yrow[o] = sparse_dot(xrow, vals, meta, n, m, bits);
-                }
+                spmm_row_block(level, xrow, w, ot..oend, &mut yrow[ot..oend]);
             }
         }
     }
@@ -301,12 +372,8 @@ fn spmm_tiled_rows(x: &Matrix, w: &CompressedNm, tile: usize, range: Range<usize
 
 /// Column-striped tiled traversal: tile batch rows against this task's
 /// stripe of weight rows, writing only inside the stripe.
-fn spmm_tiled_cols(x: &Matrix, w: &CompressedNm, tile: usize, stripe: Range<usize>,
-                   out: &StripedOut) {
-    let kc = w.kcols();
-    let rmb = w.row_meta_bytes();
-    let (n, m) = (w.scheme.n, w.scheme.m);
-    let bits = w.scheme.offset_bits();
+fn spmm_tiled_cols(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: usize,
+                   stripe: Range<usize>, out: &StripedOut) {
     for bt in (0..x.rows).step_by(tile) {
         let bend = (bt + tile).min(x.rows);
         for ot in (stripe.start..stripe.end).step_by(tile) {
@@ -315,24 +382,36 @@ fn spmm_tiled_cols(x: &Matrix, w: &CompressedNm, tile: usize, stripe: Range<usiz
                 let xrow = x.row(b);
                 // SAFETY: ot..oend lies inside this task's stripe.
                 let dst = unsafe { out.row_stripe(b, ot..oend) };
-                for (local, o) in (ot..oend).enumerate() {
-                    let vals = &w.values[o * kc..(o + 1) * kc];
-                    let meta = &w.meta[o * rmb..(o + 1) * rmb];
-                    dst[local] = sparse_dot(xrow, vals, meta, n, m, bits);
-                }
+                spmm_row_block(level, xrow, w, ot..oend, dst);
             }
         }
     }
 }
 
-/// Gather-dot over one compressed weight row, dispatching to the
-/// table-driven whole-byte decode for 2:4 and the scalar packed decode
-/// otherwise.  Both paths accumulate in group-ascending order, so the
-/// result is bit-identical to [`sparse_dot_scalar`] for every scheme —
-/// the property the `parallel_and_packed` suite pins.
+/// Gather-dot over one compressed weight row at the process-wide level:
+/// AVX2 lane-permute gather for 2:4 on capable hardware, the
+/// table-driven whole-byte decode for scalar 2:4, and the packed scalar
+/// decode otherwise.  At `Scalar` the result is bit-identical to
+/// [`sparse_dot_scalar`] for every scheme — the property the
+/// `parallel_and_packed` suite pins.
 #[inline]
 pub fn sparse_dot(xrow: &[f32], vals: &[f32], meta: &[u8], n: usize, m: usize, bits: u32) -> f32 {
+    sparse_dot_at(simd::simd_level(), xrow, vals, meta, n, m, bits)
+}
+
+/// [`sparse_dot`] at an explicit [`SimdLevel`] (clamped to hardware).
+#[inline]
+pub fn sparse_dot_at(level: SimdLevel, xrow: &[f32], vals: &[f32], meta: &[u8], n: usize,
+                     m: usize, bits: u32) -> f32 {
+    let level = simd::effective(level);
     if n == 2 && m == 4 {
+        #[cfg(target_arch = "x86_64")]
+        if level == SimdLevel::Avx2 {
+            // SAFETY: `effective` verified AVX2+FMA for this level.
+            return unsafe { simd::x86::sparse_dot24(xrow, vals, meta) };
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = level;
         sparse_dot24(xrow, vals, meta)
     } else {
         sparse_dot_scalar(xrow, vals, meta, n, m, bits)
@@ -482,7 +561,11 @@ mod tests {
             for o in 0..c.rows {
                 let vals = &c.values[o * kc..(o + 1) * kc];
                 let meta = &c.meta[o * rmb..(o + 1) * rmb];
-                let fast = sparse_dot(x.row(0), vals, meta, s.n, s.m, s.offset_bits());
+                // Pin at forced Scalar: the LUT whole-byte decode must be
+                // bit-identical to the per-offset reference.  (At Avx2 the
+                // FMA gather-dot is tolerance-pinned in simd_parity.)
+                let fast = sparse_dot_at(SimdLevel::Scalar, x.row(0), vals, meta, s.n, s.m,
+                                         s.offset_bits());
                 let scalar = sparse_dot_scalar(x.row(0), vals, meta, s.n, s.m, s.offset_bits());
                 assert_eq!(fast.to_bits(), scalar.to_bits(), "cols={cols} row={o}");
             }

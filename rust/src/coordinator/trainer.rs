@@ -165,7 +165,8 @@ impl Trainer {
             sess.set_parallel(self.cfg.parallel);
             sess.executor_kind()
         };
-        eprintln!("[trainer] executor: {}", kind.describe());
+        eprintln!("[trainer] executor: {} (simd: {})", kind.describe(),
+                  crate::backend::simd_level());
         self.store.put_scalar_i32("seed", self.cfg.seed as i32);
         if let Some(resume) = self.cfg.resume.clone() {
             // Restored state replaces `init` wholesale: params, moments,

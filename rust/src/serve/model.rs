@@ -201,13 +201,14 @@ impl ServeModel for KernelStackModel {
     fn describe(&self) -> String {
         let lora = self.layers.iter().filter(|l| l.lora.is_some()).count();
         format!(
-            "kernel-stack: {} layers ({} -> {}), {} with LoRA, {} {} thread(s)",
+            "kernel-stack: {} layers ({} -> {}), {} with LoRA, {} {} thread(s), simd {}",
             self.layers.len(),
             self.d_in(),
             self.d_out(),
             lora,
             self.layers[0].backend.scheme,
-            self.layers[0].backend.policy.effective_threads()
+            self.layers[0].backend.policy.effective_threads(),
+            crate::backend::simd_level()
         )
     }
 }
@@ -489,7 +490,8 @@ impl ServeModel for AotModel {
             match self.path {
                 AotPath::Pjrt => "pjrt".to_string(),
                 AotPath::HostKernels => format!(
-                    "host kernels, {} thread(s)",
+                    "host kernels (simd {}), {} thread(s)",
+                    crate::backend::simd_level(),
                     self.host.as_ref().map(|h| h.policy().effective_threads()).unwrap_or(1)
                 ),
             },

@@ -9,10 +9,10 @@
 //!   the byte budget `memmodel::packed_metadata_bytes` predicts.
 
 use slope::backend::{gemm, gemm_nt, gemm_nt_acc, gemm_nt_acc_into, gemm_nt_with, gemm_tn,
-                     gemm_tn_with, gemm_with, lora_fused, lora_naive, sparse_dot,
+                     gemm_tn_with, gemm_with, lora_fused, lora_naive, sparse_dot_at,
                      sparse_dot_scalar, spmm_rowmajor, spmm_rowmajor_with, spmm_tiled,
-                     spmm_tiled_with, ParallelPolicy, PartitionStrategy, SparseBackend,
-                     SpmmAlgo};
+                     spmm_tiled_with, ParallelPolicy, PartitionStrategy, SimdLevel,
+                     SparseBackend, SpmmAlgo};
 use slope::memmodel::packed_metadata_bytes;
 use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
 use slope::tensor::Matrix;
@@ -89,7 +89,8 @@ fn prop_parallel_spmm_bit_identical() {
 fn prop_byte_decode_matches_scalar_decode() {
     // The table-driven whole-byte 2:4 decode must agree bit-for-bit with
     // the scalar per-element packed decode on every row, including the
-    // odd-group tail byte (cols ≡ 4 mod 8).
+    // odd-group tail byte (cols ≡ 4 mod 8).  Pinned at SimdLevel::Scalar:
+    // the AVX2 gather-dot is tolerance-pinned in tests/simd_parity.rs.
     cases(30, 0x76, |g| {
         let s = NmScheme::TWO_FOUR;
         let cols = g.dim_multiple_of(4, 16);
@@ -102,7 +103,8 @@ fn prop_byte_decode_matches_scalar_decode() {
         for o in 0..rows {
             let vals = &c.values[o * kc..(o + 1) * kc];
             let meta = &c.meta[o * rmb..(o + 1) * rmb];
-            let fast = sparse_dot(x.row(0), vals, meta, s.n, s.m, s.offset_bits());
+            let fast =
+                sparse_dot_at(SimdLevel::Scalar, x.row(0), vals, meta, s.n, s.m, s.offset_bits());
             let scalar = sparse_dot_scalar(x.row(0), vals, meta, s.n, s.m, s.offset_bits());
             assert_eq!(fast.to_bits(), scalar.to_bits(), "cols={cols} row={o}");
         }

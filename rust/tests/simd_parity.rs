@@ -1,0 +1,250 @@
+//! SIMD-vs-scalar parity for the runtime-dispatched kernel engine.
+//!
+//! The contract (`backend::simd` docs):
+//!
+//! * **within a level** results are bitwise identical across thread
+//!   counts, partitions, and traversal orders — pinned here at *forced*
+//!   `Avx2` (which `effective` clamps to scalar on hardware without it,
+//!   so the suite is meaningful everywhere and strictest on AVX2 hosts);
+//! * **across levels** results agree to tight relative tolerance (FMA
+//!   contraction reassociates float reductions) — pinned over ragged
+//!   shapes, all three schemes, misaligned/tail column counts, and
+//!   threads {1, 4};
+//! * on **small-integer inputs** every multiply-add is exact, so FMA
+//!   cannot round differently and the levels must agree **bitwise** —
+//!   an end-to-end check that the lane-permute gather reads exactly the
+//!   operands the packed metadata names.
+//!
+//! CI additionally runs the whole suite (including the `host_train`
+//! gradient checks) under `SLOPE_SIMD=scalar` to prove the fallback path
+//! is byte-for-byte the pre-SIMD engine.
+
+use slope::backend::simd::effective;
+use slope::backend::{avx2_available, dot_at, dot_scalar, gemm_into_at, gemm_nt_acc_into_at,
+                     gemm_nt_into_at, gemm_tn_into_at, sparse_dot_at, sparse_dot_scalar,
+                     spmm_rowmajor_with_at, spmm_tiled_with_at, ParallelPolicy,
+                     PartitionStrategy, SimdLevel};
+use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
+use slope::tensor::Matrix;
+use slope::util::proptest::cases;
+use slope::util::Rng;
+
+const SCHEMES: [(usize, usize); 3] = [(1, 2), (2, 4), (2, 8)];
+
+fn policy(threads: usize, partition: PartitionStrategy) -> ParallelPolicy {
+    ParallelPolicy { threads, min_rows_per_task: 1, partition }
+}
+
+/// Relative-tolerance matrix compare: FMA reassociation over a length-k
+/// reduction of O(1) operands perturbs at the order of a few ulps scaled
+/// by the partial-sum magnitude; 1e-4 relative is orders of magnitude
+/// above that while far below any indexing mistake.
+fn assert_close(a: &Matrix, b: &Matrix, ctx: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        let tol = 1e-4f32 * 1.0f32.max(x.abs());
+        assert!((x - y).abs() <= tol, "{ctx}: elem {i}: {x} vs {y}");
+    }
+}
+
+/// Fill a matrix with small integers (|v| ≤ 4): products ≤ 16 and the
+/// reductions here stay far below 2^24, so every f32 operation — FMA or
+/// not — is exact and all levels must agree bitwise.
+fn small_int_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        *v = rng.below(9) as f32 - 4.0;
+    }
+    m
+}
+
+#[test]
+fn prop_spmm_levels_agree_within_tolerance() {
+    cases(60, 0x51D0, |g| {
+        let &(n, m) = g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        // Ragged everything: group counts (odd counts hit the half-byte
+        // metadata tail), batch, and output rows (tail of the 4-row ILP
+        // quad and of the AVX2 byte-pair loop).
+        let cols = s.m * g.usize_in(1, 18);
+        let rows = g.usize_in(1, 41);
+        let batch = g.usize_in(1, 9);
+        let x = Matrix::randn(batch, cols, 1.0, &mut g.rng);
+        let w = Matrix::randn(rows, cols, 1.0, &mut g.rng);
+        let mask = random_row_mask(rows, cols, s, &mut g.rng);
+        let c = CompressedNm::compress(&w, &mask, s);
+        let want = spmm_rowmajor_with_at(SimdLevel::Scalar, &x, &c, &ParallelPolicy::serial());
+        for threads in [1usize, 4] {
+            for part in [PartitionStrategy::Rows, PartitionStrategy::Cols] {
+                let p = policy(threads, part);
+                let got = spmm_rowmajor_with_at(SimdLevel::Avx2, &x, &c, &p);
+                assert_close(&got, &want, &format!("{s} t={threads} {part:?}"));
+            }
+        }
+        let tile = g.usize_in(1, 17);
+        let pt = policy(4, PartitionStrategy::Auto);
+        let got = spmm_tiled_with_at(SimdLevel::Avx2, &x, &c, tile, &pt);
+        assert_close(&got, &want, &format!("{s} tiled tile={tile}"));
+    });
+}
+
+#[test]
+fn prop_spmm_levels_agree_bitwise_on_small_integers() {
+    cases(40, 0x51D1, |g| {
+        let &(n, m) = g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        let cols = s.m * g.usize_in(1, 18);
+        let rows = g.usize_in(1, 33);
+        let batch = g.usize_in(1, 6);
+        let x = small_int_matrix(batch, cols, &mut g.rng);
+        let w = small_int_matrix(rows, cols, &mut g.rng);
+        let mask = random_row_mask(rows, cols, s, &mut g.rng);
+        let c = CompressedNm::compress(&w, &mask, s);
+        let p = policy(1, PartitionStrategy::Auto);
+        let scalar = spmm_rowmajor_with_at(SimdLevel::Scalar, &x, &c, &p);
+        let simd = spmm_rowmajor_with_at(SimdLevel::Avx2, &x, &c, &p);
+        // Exact arithmetic ⇒ reassociation is invisible ⇒ any difference
+        // is a wrong gather index, not a rounding artifact.
+        assert_eq!(simd, scalar, "{s} {batch}x{cols} -> {rows}");
+    });
+}
+
+#[test]
+fn avx2_level_is_thread_and_traversal_invariant() {
+    // Within a level (here: forced Avx2, clamped to hardware) results
+    // must stay bitwise identical across thread counts, partitions, and
+    // rowmajor-vs-tiled traversal — the same contract the scalar engine
+    // always had, which is what keeps the crash-recovery and decode
+    // bitwise pins level-agnostic.
+    let mut rng = Rng::seed_from_u64(7);
+    let s = NmScheme::TWO_FOUR;
+    let x = Matrix::randn(13, 96, 1.0, &mut rng); // ragged batch
+    let w = Matrix::randn(37, 96, 1.0, &mut rng); // ragged outs
+    let mask = random_row_mask(37, 96, s, &mut rng);
+    let c = CompressedNm::compress(&w, &mask, s);
+    let lvl = SimdLevel::Avx2;
+    let base = spmm_rowmajor_with_at(lvl, &x, &c, &ParallelPolicy::serial());
+    for threads in [2usize, 4, 7] {
+        for part in [PartitionStrategy::Auto, PartitionStrategy::Rows, PartitionStrategy::Cols] {
+            let p = policy(threads, part);
+            assert_eq!(spmm_rowmajor_with_at(lvl, &x, &c, &p), base, "t={threads} {part:?}");
+            for tile in [1usize, 5, 16] {
+                assert_eq!(spmm_tiled_with_at(lvl, &x, &c, tile, &p), base,
+                           "tiled t={threads} tile={tile} {part:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_dot_tail_shapes_agree_across_levels() {
+    // Column counts chosen to hit every remainder path of the AVX2 2:4
+    // gather-dot: no full byte (4), one trailing full byte (8), full
+    // byte + half byte (12), exactly one byte pair (16), pairs + half
+    // byte (20, 36), long even/odd mixes (64, 100).
+    let mut rng = Rng::seed_from_u64(11);
+    let s = NmScheme::TWO_FOUR;
+    for cols in [4usize, 8, 12, 16, 20, 36, 64, 100] {
+        let x = Matrix::randn(1, cols, 1.0, &mut rng);
+        let w = Matrix::randn(9, cols, 1.0, &mut rng);
+        let mask = random_row_mask(9, cols, s, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, s);
+        let kc = c.kcols();
+        let rmb = c.row_meta_bytes();
+        for o in 0..c.rows {
+            let vals = &c.values[o * kc..(o + 1) * kc];
+            let meta = &c.meta[o * rmb..(o + 1) * rmb];
+            let bits = s.offset_bits();
+            let scalar = sparse_dot_scalar(x.row(0), vals, meta, s.n, s.m, bits);
+            let fast = sparse_dot_at(SimdLevel::Avx2, x.row(0), vals, meta, s.n, s.m, bits);
+            let tol = 1e-4f32 * 1.0f32.max(scalar.abs());
+            assert!((fast - scalar).abs() <= tol, "cols={cols} row={o}: {fast} vs {scalar}");
+            // And the scalar-level dispatch stays pinned bitwise.
+            let pinned = sparse_dot_at(SimdLevel::Scalar, x.row(0), vals, meta, s.n, s.m, bits);
+            assert_eq!(pinned.to_bits(), scalar.to_bits(), "cols={cols} row={o}");
+        }
+    }
+}
+
+#[test]
+fn prop_gemm_family_levels_agree() {
+    cases(40, 0x51D2, |g| {
+        let m = g.usize_in(1, 17);
+        let k = g.usize_in(1, 70); // ragged k: hits the 32/8/scalar dot tails
+        let n = g.usize_in(1, 23);
+        let a = Matrix::randn(m, k, 1.0, &mut g.rng);
+        let b = Matrix::randn(k, n, 1.0, &mut g.rng);
+        let bt = b.transpose();
+        let p = policy(*g.pick(&[1usize, 4]), PartitionStrategy::Auto);
+
+        let mut want = Matrix::zeros(m, n);
+        let mut got = Matrix::zeros(m, n);
+        gemm_into_at(SimdLevel::Scalar, &a, &b, &mut want, &p);
+        gemm_into_at(SimdLevel::Avx2, &a, &b, &mut got, &p);
+        assert_close(&got, &want, "gemm");
+
+        gemm_nt_into_at(SimdLevel::Scalar, &a, &bt, &mut want, &p);
+        gemm_nt_into_at(SimdLevel::Avx2, &a, &bt, &mut got, &p);
+        assert_close(&got, &want, "gemm_nt");
+        // Forced column stripes run the same per-element dot.
+        let pc = policy(4, PartitionStrategy::Cols);
+        let mut got_c = Matrix::zeros(m, n);
+        gemm_nt_into_at(SimdLevel::Avx2, &a, &bt, &mut got_c, &pc);
+        assert_eq!(got_c, got, "gemm_nt col stripes must match rows bitwise within a level");
+
+        let at = a.transpose();
+        let mut want_tn = Matrix::zeros(m, n);
+        let mut got_tn = Matrix::zeros(m, n);
+        gemm_tn_into_at(SimdLevel::Scalar, &at, &b, &mut want_tn, &p);
+        gemm_tn_into_at(SimdLevel::Avx2, &at, &b, &mut got_tn, &p);
+        assert_close(&got_tn, &want_tn, "gemm_tn");
+
+        // Accumulating form: same base, both levels on top.
+        let base = Matrix::randn(m, n, 1.0, &mut g.rng);
+        let mut acc_s = base.clone();
+        let mut acc_v = base.clone();
+        gemm_nt_acc_into_at(SimdLevel::Scalar, &a, &bt, &mut acc_s, &p);
+        gemm_nt_acc_into_at(SimdLevel::Avx2, &a, &bt, &mut acc_v, &p);
+        assert_close(&acc_v, &acc_s, "gemm_nt_acc");
+    });
+}
+
+#[test]
+fn prop_dot_levels_agree_and_exact_on_integers() {
+    cases(60, 0x51D3, |g| {
+        let k = g.usize_in(0, 130);
+        let a: Vec<f32> = (0..k).map(|_| g.rng.normal_f32(1.0)).collect();
+        let b: Vec<f32> = (0..k).map(|_| g.rng.normal_f32(1.0)).collect();
+        let want = dot_scalar(&a, &b, k);
+        let got = dot_at(SimdLevel::Avx2, &a, &b, k);
+        let tol = 1e-4f32 * 1.0f32.max(want.abs());
+        assert!((got - want).abs() <= tol, "k={k}: {got} vs {want}");
+        assert_eq!(dot_at(SimdLevel::Scalar, &a, &b, k).to_bits(), want.to_bits(), "k={k}");
+
+        let ai: Vec<f32> = (0..k).map(|_| g.rng.below(9) as f32 - 4.0).collect();
+        let bi: Vec<f32> = (0..k).map(|_| g.rng.below(9) as f32 - 4.0).collect();
+        assert_eq!(dot_at(SimdLevel::Avx2, &ai, &bi, k).to_bits(),
+                   dot_scalar(&ai, &bi, k).to_bits(), "integer dot k={k}");
+    });
+}
+
+#[test]
+fn effective_clamps_to_hardware() {
+    // Requesting Avx2 anywhere is sound: on hardware without it the
+    // dispatchers run scalar instead of executing illegal instructions.
+    assert_eq!(effective(SimdLevel::Scalar), SimdLevel::Scalar);
+    if avx2_available() {
+        assert_eq!(effective(SimdLevel::Avx2), SimdLevel::Avx2);
+    } else {
+        assert_eq!(effective(SimdLevel::Avx2), SimdLevel::Scalar);
+        // And the Avx2-tagged entry points equal scalar bitwise.
+        let mut rng = Rng::seed_from_u64(3);
+        let x = Matrix::randn(3, 32, 1.0, &mut rng);
+        let w = Matrix::randn(8, 32, 1.0, &mut rng);
+        let mask = random_row_mask(8, 32, NmScheme::TWO_FOUR, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let p = ParallelPolicy::serial();
+        assert_eq!(spmm_rowmajor_with_at(SimdLevel::Avx2, &x, &c, &p),
+                   spmm_rowmajor_with_at(SimdLevel::Scalar, &x, &c, &p));
+    }
+}

@@ -63,6 +63,12 @@ def archive(args) -> int:
         "generated_unix": int(time.time()),
         "rows": sorted(rows, key=key),
     }
+    if getattr(args, "synthetic", False):
+        # A schema-only seed document: it proves the expected series shape
+        # and lets the validators run on machines that cannot bench, but
+        # its timings are placeholders — `compare` skips synthetic docs so
+        # they never poison a real trajectory.
+        doc["synthetic"] = True
     out = os.path.join(args.dir, f"BENCH_{args.sha}.json")
     with open(out, "w") as f:
         json.dump(doc, f, indent=1)
@@ -109,6 +115,27 @@ def archive(args) -> int:
             f"series; got {sorted(train_cases)}"
         )
     print(f"bench_train series: {sorted(train_cases)}")
+    # bench_spmm must carry the SIMD level-split series: each shape's
+    # kernel is measured once at the forced scalar level and once at the
+    # auto-detected level (simd/<shape>/scalar + simd/<shape>/auto), so
+    # a trajectory row is always attributable to the dispatch level that
+    # produced it.  On non-AVX2 runners the two coincide numerically but
+    # both rows must still exist.
+    spmm_cases = {r["case"] for r in rows if r["bench"] == "bench_spmm"}
+    simd_cases = {c for c in spmm_cases if c.startswith("simd/")}
+    if not simd_cases:
+        raise SystemExit(
+            "no spmm simd/* rows in the smoke run — bench_spmm must emit the "
+            "level-split series (simd/<shape>/scalar and simd/<shape>/auto)"
+        )
+    simd_scalar = {c for c in simd_cases if c.endswith("/scalar")}
+    simd_auto = {c for c in simd_cases if c.endswith("/auto")}
+    if not simd_scalar or not simd_auto:
+        raise SystemExit(
+            "bench_spmm simd series must include both a .../scalar and a "
+            f".../auto case per shape; got {sorted(simd_cases)}"
+        )
+    print(f"bench_spmm simd series: {len(simd_scalar)} scalar, {len(simd_auto)} auto")
     return 0
 
 
@@ -126,6 +153,10 @@ def newest_baseline(dirname: str, exclude_sha: str):
             print(f"::warning::unreadable trajectory file {fname}: {e}")
             continue
         if doc.get("sha") == exclude_sha:
+            continue
+        if doc.get("synthetic"):
+            # Schema-only seed archives carry placeholder timings — never
+            # a comparison baseline.
             continue
         if best is None or doc.get("generated_unix", 0) > best.get("generated_unix", 0):
             best = doc
@@ -173,6 +204,10 @@ def main() -> int:
         p.add_argument("--json", required=True, help="bench JSONL emitted by the smoke run")
         p.add_argument("--sha", required=True, help="current commit sha")
         p.add_argument("--dir", required=True, help="trajectory directory (BENCH_<sha>.json)")
+        if name == "archive":
+            p.add_argument("--synthetic", action="store_true",
+                           help="mark the archive as a schema-only seed (placeholder "
+                                "timings; skipped as a compare baseline)")
         if name == "compare":
             p.add_argument("--threshold", type=float, default=0.20,
                            help="relative median_ns growth flagged as regression")
