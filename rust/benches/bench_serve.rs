@@ -17,7 +17,12 @@
 //!   is a steady-state per-token number.  A position sweep is printed
 //!   alongside: step time must stay flat as the sequence grows (the KV
 //!   cache turns O(len·d²) recompute into O(d²) + O(len·d)), which is
-//!   the acceptance gauge for autoregressive serving.
+//!   the acceptance gauge for autoregressive serving.  The decode mode
+//!   also archives the paged-pool dtype series (`kv/<dtype>/batch{B}/
+//!   step` for f32|f16|int8 at 1 thread): the same steady-state step on
+//!   a pool of that plane storage, with the per-sequence pool bytes
+//!   printed so the latency cost of quantized KV is always read next to
+//!   its memory win.
 //!
 //! The batch=1 rows are the acceptance gauge for the column-striped
 //! partition: a single-request forward must scale with worker count
@@ -28,7 +33,8 @@
 
 use slope::backend::{simd_level, ParallelPolicy, SparseBackend, SpmmAlgo};
 use slope::coordinator::checkpoint;
-use slope::runtime::{write_synthetic_artifact, HostModel, KvCache, Manifest, SynthSpec};
+use slope::runtime::{write_synthetic_artifact, HostModel, KvCache, KvDtype, KvPoolConfig,
+                     Manifest, SynthSpec};
 use slope::serve::{AotModel, BatchPolicy, LoraAdapter, ServeEngine, ServeLayer, ServeModel};
 use slope::sparsity::{random_row_mask, NmScheme};
 use slope::tensor::Matrix;
@@ -223,6 +229,63 @@ fn main() {
                     r.median_ns / 1e3,
                     r.median_ns / 1e3 / batch as f64,
                     one_thr_ns / r.median_ns
+                );
+            }
+        }
+
+        // Archived paged-pool dtype series: the identical steady-state
+        // step, but with the KV planes stored in each pool dtype.  One
+        // thread — the dtype axis is about plane storage cost (dequant
+        // on read + quantize on write), not the thread sweep the plain
+        // decode series already carries.
+        println!("\npaged KV pool by dtype (1 thr; bytes are per-sequence pool charge):");
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+            for batch in BATCHES {
+                let policy = ParallelPolicy::for_width(1, spec.d_model);
+                let kv = KvPoolConfig { dtype, ..KvPoolConfig::default() };
+                let mut hm =
+                    HostModel::from_store_with_kv(&manifest, &store, &packed, policy, kv)
+                        .expect("host model");
+                let mut y = Matrix::zeros(0, 0);
+                let mut caches: Vec<KvCache> = (0..batch)
+                    .map(|_| {
+                        let mut c = hm.new_kv_cache();
+                        hm.prefill_into(&prompt, &mut c, &mut y).expect("prefill");
+                        c
+                    })
+                    .collect();
+                let mut tokens: Vec<i32> = (0..batch).map(|i| (i % 19) as i32).collect();
+                while caches[0].len() < step_pos {
+                    hm.decode_step_into(&tokens, &mut caches, &mut y).expect("walk");
+                    for (i, t) in tokens.iter_mut().enumerate() {
+                        *t = (*t + 1 + i as i32) % spec.vocab as i32;
+                    }
+                }
+                let base_len = caches[0].len();
+                let r = bench_auto(
+                    &format!("serve kv/{} b{batch}", dtype.label()),
+                    120.0,
+                    || {
+                        hm.decode_step_into(&tokens, &mut caches, &mut y).expect("step");
+                        black_box(&y);
+                        for c in caches.iter_mut() {
+                            c.truncate(base_len);
+                        }
+                    },
+                );
+                emit_json(
+                    "bench_serve",
+                    &format!("kv/{}/batch{batch}/step", dtype.label()),
+                    1,
+                    &r,
+                );
+                println!(
+                    "{:<22} {:>3} {:>10.2}us {:>10.2}us {:>8} B",
+                    format!("kv/{} batch {}", dtype.label(), batch),
+                    1,
+                    r.median_ns / 1e3,
+                    r.median_ns / 1e3 / batch as f64,
+                    caches[0].bytes()
                 );
             }
         }

@@ -13,7 +13,7 @@ use slope::backend::{ParallelPolicy, PartitionStrategy};
 use slope::config::{Fig9Variant, Method, RunConfig};
 use slope::coordinator::{checkpoint, Trainer};
 use slope::exps::{self, ExpArgs};
-use slope::runtime::Manifest;
+use slope::runtime::{KvDtype, KvPoolConfig, Manifest};
 use slope::serve::{Admission, AotModel, BatchPolicy, DecodeAdmission, DecodeEngine,
                    DecodeModel, DecodePolicy, KernelDecodeModel, LoraAdapter, Overload,
                    QueuePolicy, Sampler, ServeEngine, ServeLayer, ServeModel, StatsSummary};
@@ -41,6 +41,8 @@ USAGE:
               [--queue-cap N] [--overload O]   # bounded admission (shed/backpressure)
               [--decode]                       # continuous-batching generation mode
               [--max-new-tokens N] [--prompt-len P] [--temp T] [--eos ID]
+              [--kv-block N] [--kv-dtype DT]   # paged KV cache (decode route)
+              [--kv-pool-blocks N]             # pool bound (0 = grow on demand)
               [--threads T] [--partition P] [--seed S]
               # dynamic-batched sparse+LoRA serving; --manifest points at a
               # directory holding manifest.json + model.slopeckpt (what
@@ -49,6 +51,7 @@ USAGE:
   slope generate --manifest DIR                # KV-cached autoregressive decode
               [--max-new-tokens N] [--max-batch B] [--requests K]
               [--prompt-len P] [--prompt \"1,2,3\"] [--temp T] [--eos ID]
+              [--kv-block N] [--kv-dtype DT] [--kv-pool-blocks N]
               [--threads T] [--partition P] [--seed S]
 
   slope exp <ID> [--steps N] [--seed S] [--artifacts DIR] [--out-dir DIR]
@@ -58,6 +61,7 @@ USAGE:
 METH: slope | dense | srste | srste-lora | wanda | fig9:<variant>
 P:    auto | rows | cols                       # kernel partition strategy
 O:    reject | block                           # overload policy for --queue-cap
+DT:   f32 | f16 | int8                         # KV-cache plane storage
 ID:   table2|table3|table4|table5|table6|table7|table8|table9|table10|table12
       fig2|fig3a|fig3b|fig4|fig5|fig6|fig7|fig8|fig9|fig10|mem|all-perf
 ";
@@ -122,6 +126,26 @@ impl Flags {
             Some(v) => v.parse().map_err(|e| slope::eyre!("--{key}: {e}")),
         }
     }
+}
+
+/// KV-pool configuration for the decode routes: environment defaults
+/// (`SLOPE_KV_DTYPE` / `SLOPE_KV_BLOCK`) overridden by the explicit
+/// `--kv-dtype`, `--kv-block`, and `--kv-pool-blocks` flags.
+fn kv_config(flags: &Flags) -> slope::Result<KvPoolConfig> {
+    let mut kv = KvPoolConfig::from_env();
+    if let Some(v) = flags.map.get("kv-dtype") {
+        kv.dtype = KvDtype::parse(v)?;
+    }
+    if flags.map.contains_key("kv-block") {
+        let bt = flags.usize("kv-block", 0)?;
+        slope::ensure!(bt > 0, "--kv-block must be a positive token count");
+        kv.block_tokens = bt;
+    }
+    if flags.map.contains_key("kv-pool-blocks") {
+        let cap = flags.usize("kv-pool-blocks", 0)?;
+        kv.max_blocks = (cap > 0).then_some(cap);
+    }
+    Ok(kv)
 }
 
 /// Print the uniform serving summary block (inline and admission modes).
@@ -461,16 +485,20 @@ fn main() -> slope::Result<()> {
                         seed,
                         queue_cap: inline_cap,
                     };
+                    let kv = kv_config(&flags)?;
                     println!(
                         "== slope serve --decode --manifest {} ({}) — max_batch \
-                         {eff_batch}, max_new {max_new}, prompt {prompt_len}, {} thr ==",
+                         {eff_batch}, max_new {max_new}, prompt {prompt_len}, {} thr, \
+                         kv {}/{} tok/blk ==",
                         dir.display(),
                         m.config.name,
                         policy.effective_threads(),
+                        kv.dtype.label(),
+                        kv.block_tokens,
                     );
                     serve_decode_run(
                         move || {
-                            let model = AotModel::open(&dir, policy)?;
+                            let model = AotModel::open_with_kv(&dir, policy, kv)?;
                             eprintln!("[serve] {}", model.describe_decode());
                             DecodeEngine::new(model, dpolicy)
                         },
@@ -655,14 +683,17 @@ fn main() -> slope::Result<()> {
                         .collect()
                 }
             };
+            let kv = kv_config(&flags)?;
             println!(
                 "== slope generate --manifest {} ({}) — max_new {max_new}, \
-                 max_batch {max_batch}, {} thr ==",
+                 max_batch {max_batch}, {} thr, kv {}/{} tok/blk ==",
                 dir.display(),
                 m.config.name,
                 policy.effective_threads(),
+                kv.dtype.label(),
+                kv.block_tokens,
             );
-            let model = AotModel::open(&dir, policy)?;
+            let model = AotModel::open_with_kv(&dir, policy, kv)?;
             println!("model      : {}", model.describe_decode());
             let dpolicy = DecodePolicy {
                 max_batch,

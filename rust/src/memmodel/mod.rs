@@ -17,11 +17,16 @@
 //! paper notes under Table 3.
 //!
 //! Autoregressive serving adds **decode state**: an f32 KV cache of
-//! `layers × 2 × seq × d` per sequence ([`kv_cache_bytes`], matching
-//! [`crate::runtime::KvCache`] exactly).  Sparsity compresses weights,
-//! not activations, so the cache charges both sides of the ratio equally
+//! `layers × 2 × seq × d` per sequence ([`kv_cache_bytes`], the
+//! contiguous-slab reference).  Sparsity compresses weights, not
+//! activations, so that cache charges both sides of the ratio equally
 //! ([`inference_memory_with_decode`]) — the paper's 0.61× inference
-//! claim re-derived with generation state included.
+//! claim re-derived with generation state included.  The paged runtime
+//! pool ([`crate::runtime::KvBlockPool`]) is charged block-granularly
+//! instead ([`kv_block_bytes`] / [`kv_pool_bytes`], matching the pool's
+//! own accounting bit-for-bit), and
+//! [`inference_memory_with_paged_decode`] re-derives the serving ratio
+//! with the SLoPe side's cache paged and optionally f16/int8-quantized.
 
 use crate::config::zoo::ModelShape;
 use crate::sparsity::NmScheme;
@@ -209,6 +214,47 @@ pub fn inference_memory_with_decode(shape: &ModelShape, s: NmScheme, rank_ratio:
     report
 }
 
+/// Resident bytes of ONE block in a paged KV pool: K+V rows for every
+/// layer over `block_tokens` positions at the dtype's width, plus the
+/// per-(layer, plane) f32 scales int8 carries — exactly
+/// [`crate::runtime::KvBlockPool`]'s `block_bytes`.
+pub fn kv_block_bytes(n_layer: usize, block_tokens: usize, d_kv: usize,
+                      dtype: crate::runtime::KvDtype) -> usize {
+    let elems = n_layer * 2 * block_tokens * d_kv;
+    let scales = match dtype {
+        crate::runtime::KvDtype::Int8 => n_layer * 2 * 4,
+        _ => 0,
+    };
+    elems * dtype.elem_bytes() + scales
+}
+
+/// Block-granular bytes of ONE sequence at context `seq_len` in a paged
+/// pool: whole blocks, so a partial tail block is charged in full (the
+/// allocator's real cost, unlike the element-exact [`kv_cache_bytes`]).
+pub fn kv_pool_bytes(n_layer: usize, seq_len: usize, d_kv: usize, block_tokens: usize,
+                     dtype: crate::runtime::KvDtype) -> usize {
+    let blocks = seq_len / block_tokens + usize::from(seq_len % block_tokens != 0);
+    blocks * kv_block_bytes(n_layer, block_tokens, d_kv, dtype)
+}
+
+/// [`inference_memory_with_decode`] with the SLoPe side's cache **paged
+/// and (optionally) quantized**: the dense baseline keeps its contiguous
+/// f32 slab per sequence, the SLoPe deployment charges
+/// `batch × `[`kv_pool_bytes`] at the pool's block size and dtype.  At
+/// f32 the two charges differ only by tail-block rounding; at int8 the
+/// cache term shrinks ~4× and the ratio recovers toward the weight-only
+/// claim even at large `batch × seq_len`.
+pub fn inference_memory_with_paged_decode(shape: &ModelShape, s: NmScheme, rank_ratio: f64,
+                                          seq_len: usize, batch: usize, block_tokens: usize,
+                                          dtype: crate::runtime::KvDtype) -> MemoryReport {
+    let mut report = inference_memory(shape, s, rank_ratio);
+    let d_kv = shape.n_kv_head * shape.head_dim();
+    report.dense_bits += (batch * kv_cache_bytes(shape.n_layer, seq_len, d_kv)) as f64 * 8.0;
+    report.slope_bits +=
+        (batch * kv_pool_bytes(shape.n_layer, seq_len, d_kv, block_tokens, dtype)) as f64 * 8.0;
+    report
+}
+
 /// FST training memory (Table 3 shows FST > 1.0): dense weights PLUS the
 /// compressed sparse copies and transposable-mask metadata coexist.
 pub fn fst_training_memory(shape: &ModelShape, s: NmScheme) -> MemoryReport {
@@ -286,12 +332,29 @@ mod tests {
 
     #[test]
     fn kv_cache_charge_matches_the_runtime_and_relaxes_the_ratio() {
-        use crate::runtime::KvCache;
-        // The closed-form charge is exactly what the decode runtime
-        // allocates per sequence.
+        use crate::runtime::{KvBlockPool, KvDtype, KvPoolConfig, DEFAULT_KV_BLOCK_TOKENS};
+        // The closed-form charge is exactly what the decode runtime holds
+        // at full context (128 divides the default block size, so the
+        // paged charge has no tail rounding and matches the element-exact
+        // slab formula too).
         let (l, s, d) = (4usize, 128usize, 96usize);
-        assert_eq!(KvCache::new(l, d, s).bytes(), kv_cache_bytes(l, s, d));
+        let pool = KvBlockPool::new(l, d, KvPoolConfig::default());
+        let mut cache = pool.new_cache(s);
+        cache.reserve(s).unwrap();
+        cache.set_len(s);
+        assert_eq!(
+            cache.bytes(),
+            kv_pool_bytes(l, s, d, DEFAULT_KV_BLOCK_TOKENS, KvDtype::F32)
+        );
+        assert_eq!(cache.bytes(), kv_cache_bytes(l, s, d));
         assert_eq!(kv_cache_bytes(l, s, d), l * 2 * s * d * 4);
+        // Truncation returns whole blocks and the accounting follows.
+        cache.truncate(s / 2);
+        assert_eq!(
+            cache.bytes(),
+            kv_pool_bytes(l, s / 2, d, DEFAULT_KV_BLOCK_TOKENS, KvDtype::F32),
+            "freed blocks must leave the byte charge"
+        );
         // Decode state is sparsity-blind: both sides gain the same bits,
         // so the ratio sits strictly between the weight-only ratio and 1,
         // and grows monotonically with context and batch.
@@ -310,6 +373,46 @@ mod tests {
         // weights themselves — the quantitative case for paging/quantizing
         // the cache that the report now makes visible.
         assert!(r8 > 0.75, "batched decode state must dominate: {r8:.3}");
+    }
+
+    #[test]
+    fn paged_int8_cache_cuts_kv_bytes_over_3x_and_recovers_the_ratio() {
+        use crate::runtime::{KvBlockPool, KvDtype, KvPoolConfig};
+        // The closed-form block charge is exactly the pool's, per dtype.
+        let (l, bt, d) = (4usize, 16usize, 96usize);
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+            let pool = KvBlockPool::new(
+                l, d, KvPoolConfig { block_tokens: bt, dtype, max_blocks: None },
+            );
+            assert_eq!(pool.block_bytes(), kv_block_bytes(l, bt, d, dtype), "{dtype:?}");
+        }
+        // int8 at full context sits ≥ 3× below the f32 charge (the
+        // acceptance bar; actually ≈ 3.99× — the scales cost 32 B per
+        // 48 KiB-worth of f32 rows), and f16 exactly halves it.
+        let s = 2048usize;
+        let f32b = kv_pool_bytes(l, s, d, bt, KvDtype::F32);
+        let i8b = kv_pool_bytes(l, s, d, bt, KvDtype::Int8);
+        assert!(f32b >= 3 * i8b, "int8 reduction below 3x: {f32b} vs {i8b}");
+        assert_eq!(kv_pool_bytes(l, s, d, bt, KvDtype::F16) * 2, f32b);
+        // Under batched full-context serving the ratio collapses with an
+        // f32 cache (both sides carry it) but recovers with the SLoPe
+        // side quantized — the serving-memory lever the pool exists for.
+        let m = OPT_13B;
+        let slab = inference_memory_with_decode(&m, S24, 0.0156, 8192, 64).ratio();
+        let paged_f32 =
+            inference_memory_with_paged_decode(&m, S24, 0.0156, 8192, 64, bt, KvDtype::F32)
+                .ratio();
+        let paged_i8 =
+            inference_memory_with_paged_decode(&m, S24, 0.0156, 8192, 64, bt, KvDtype::Int8)
+                .ratio();
+        assert!(
+            (paged_f32 - slab).abs() < 1e-9,
+            "8192 % 16 == 0: f32 paging adds no tail rounding ({paged_f32} vs {slab})"
+        );
+        assert!(
+            paged_i8 < paged_f32 && paged_i8 < 0.70,
+            "int8 cache must recover the headline band: {paged_i8:.3} vs {paged_f32:.3}"
+        );
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::backend::gemm::dot;
 use crate::backend::{ensure_out, gemm_nt_acc_into, gemm_nt_into, lora_fused_seq,
                      spmm_rowmajor_into, ParallelPolicy, SpmmAlgo};
 use crate::coordinator::checkpoint;
+use crate::runtime::kvpool::{KvBlockPool, KvCache, KvLayerView, KvPoolConfig};
 use crate::runtime::{Manifest, Store};
 use crate::sparsity::{random_row_mask, CompressedNm, Mask, NmScheme};
 use crate::tensor::Matrix;
@@ -132,6 +133,9 @@ struct HostWs {
     branch: Matrix,
     /// One query row's attention scores (`S` long).
     scores: Vec<f32>,
+    /// Dequantization staging for one cached head-slice (`head_dim`
+    /// long) — unused on the zero-copy f32 read path.
+    kv_scratch: Vec<f32>,
     /// Last-position hidden states, `(k, d)`.
     last: Matrix,
 }
@@ -155,6 +159,9 @@ pub struct HostModel {
     /// Untied LM head; `None` = tied to `tok_emb` (the default configs).
     head_w: Option<Matrix>,
     blocks: Vec<HostBlock>,
+    /// Paged KV arena every [`KvCache`] of this executor draws from
+    /// (see [`crate::runtime::kvpool`]).
+    kv_pool: KvBlockPool,
     ws: HostWs,
 }
 
@@ -166,7 +173,20 @@ impl HostModel {
     pub fn from_store(manifest: &Manifest, store: &Store,
                       packed: &HashMap<String, CompressedNm>,
                       policy: ParallelPolicy) -> crate::Result<Self> {
+        // Default f32 paging: bit-identical to the pre-paging contiguous
+        // cache, so every direct-HostModel parity pin is dtype-agnostic.
+        Self::from_store_with_kv(manifest, store, packed, policy, KvPoolConfig::default())
+    }
+
+    /// [`HostModel::from_store`] with an explicit KV-pool configuration
+    /// (block size, storage dtype, optional block bound) — the seam
+    /// `AotModel::open_with_kv` and the paged-decode suites use.
+    pub fn from_store_with_kv(manifest: &Manifest, store: &Store,
+                              packed: &HashMap<String, CompressedNm>,
+                              policy: ParallelPolicy,
+                              kv: KvPoolConfig) -> crate::Result<Self> {
         let c = &manifest.config;
+        crate::ensure!(kv.block_tokens > 0, "kv block size must be positive");
         let tok_emb = store.read_matrix("params.tok_emb")?;
         crate::ensure!(
             tok_emb.rows == c.vocab_size && tok_emb.cols == c.d_model,
@@ -220,6 +240,7 @@ impl HostModel {
             lnf_b,
             head_w,
             blocks,
+            kv_pool: KvBlockPool::new(c.n_layer, c.d_model, kv),
             ws: HostWs::default(),
         })
     }
@@ -242,11 +263,17 @@ impl HostModel {
         self.forward_prefix(tokens, 1, tokens.len(), None, y)
     }
 
-    /// A fresh per-sequence [`KvCache`] sized to this model's context
-    /// bound (`seq_len` — the S of the manifest's
-    /// `forward_tokens_shape`).
+    /// A fresh per-sequence [`KvCache`] view over this model's shared
+    /// block pool, bounded at the context length (`seq_len` — the S of
+    /// the manifest's `forward_tokens_shape`).  The cache holds no
+    /// blocks until prefill reserves them.
     pub fn new_kv_cache(&self) -> KvCache {
-        KvCache::new(self.n_layer, self.d_model, self.seq_len)
+        self.kv_pool.new_cache(self.seq_len)
+    }
+
+    /// The shared paged KV arena (occupancy stats, block shape).
+    pub fn kv_pool(&self) -> &KvBlockPool {
+        &self.kv_pool
     }
 
     /// Prefill: run one prompt (`1..=seq_len` tokens), populate `cache`
@@ -297,6 +324,18 @@ impl HostModel {
                 "token id {tok} outside vocab 0..{vocab}"
             );
         }
+        // Reserve the appended position's block up front, all caches or
+        // none: on pool exhaustion, spare blocks the earlier caches
+        // acquired are returned and every cache is left untouched.
+        for i in 0..caches.len() {
+            let next = caches[i].len() + 1;
+            if let Err(e) = caches[i].reserve(next) {
+                for c in caches.iter_mut() {
+                    c.release_spare();
+                }
+                return Err(e);
+            }
+        }
         let policy = self.policy;
         let Self { ws, blocks, tok_emb, pos_emb, lnf_g, lnf_b, head_w, .. } = self;
 
@@ -320,8 +359,11 @@ impl HostModel {
                 let pos = cache.len();
                 let row = ws.qkv.row(i);
                 cache.write_row(li, pos, &row[d..2 * d], &row[2 * d..3 * d]);
-                decode_attention_row(&cache.k[li], &cache.v[li], &row[..d], pos,
-                                     n_head, &mut ws.scores, ws.att.row_mut(i));
+                cache.with_layer(li, |view| {
+                    decode_attention_row(&view, &row[..d], pos, n_head,
+                                         &mut ws.scores, &mut ws.kv_scratch,
+                                         ws.att.row_mut(i));
+                });
             }
             blk.proj.forward_into(&ws.att, &mut ws.branch, &policy);
             add_inplace(&mut ws.h, &ws.branch);
@@ -341,7 +383,7 @@ impl HostModel {
         ensure_out(y, kb, vocab);
         gemm_nt_into(&ws.hn, head, y, &policy);
         for c in caches.iter_mut() {
-            c.len += 1;
+            c.advance();
         }
         Ok(())
     }
@@ -401,6 +443,20 @@ impl HostModel {
             }
         }
 
+        // Last fallible step: reserve pool blocks for the prefix, all
+        // caches or none (spares roll back on exhaustion, so an errored
+        // prefill leaves every cache unchanged).
+        if let Some(cs) = caches.as_deref_mut() {
+            for i in 0..cs.len() {
+                if let Err(e) = cs[i].reserve(s) {
+                    for c in cs.iter_mut() {
+                        c.release_spare();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+
         for (li, blk) in blocks.iter_mut().enumerate() {
             // Attention sub-block: ln1 → qkv → causal attention → proj.
             layer_norm_into(&ws.h, &blk.ln1_g, &blk.ln1_b, &mut ws.hn);
@@ -439,7 +495,7 @@ impl HostModel {
         gemm_nt_into(&ws.last, head, y, &policy);
         if let Some(cs) = caches {
             for c in cs.iter_mut() {
-                c.len = s;
+                c.set_len(s);
             }
         }
         Ok(())
@@ -451,115 +507,33 @@ impl HostModel {
     }
 }
 
-// ---- KV cache ---------------------------------------------------------
-
-/// Per-sequence decode state: one K and one V plane per layer, each
-/// `capacity × d_model`, preallocated at the model's context bound so
-/// decode steps never allocate.  `len` is the logical fill — it grows by
-/// one per decoded token (rows `len..capacity` are dead space a later
-/// write simply overwrites).  Resident size is
-/// `layers × 2 × capacity × d_model × 4` bytes — the
-/// [`crate::memmodel::kv_cache_bytes`] charge in the inference memory
-/// model.
-#[derive(Clone, Debug)]
-pub struct KvCache {
-    /// Per-layer key planes; row `t` is the full `d_model`-wide key
-    /// vector (all heads) of position `t`.
-    k: Vec<Matrix>,
-    /// Per-layer value planes, same layout.
-    v: Vec<Matrix>,
-    len: usize,
-}
-
-impl KvCache {
-    pub fn new(n_layer: usize, d_model: usize, capacity: usize) -> Self {
-        assert!(n_layer > 0 && d_model > 0 && capacity > 0, "degenerate KvCache shape");
-        Self {
-            k: (0..n_layer).map(|_| Matrix::zeros(capacity, d_model)).collect(),
-            v: (0..n_layer).map(|_| Matrix::zeros(capacity, d_model)).collect(),
-            len: 0,
-        }
-    }
-
-    pub fn n_layer(&self) -> usize {
-        self.k.len()
-    }
-
-    pub fn d_model(&self) -> usize {
-        self.k[0].cols
-    }
-
-    /// Maximum positions the planes can hold (the model's `seq_len`).
-    pub fn capacity(&self) -> usize {
-        self.k[0].rows
-    }
-
-    /// Positions currently cached (prompt + decoded tokens).
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    /// Forget everything (capacity and allocation are retained).
-    pub fn reset(&mut self) {
-        self.len = 0;
-    }
-
-    /// Roll the logical fill back to `len` — rows beyond it become dead
-    /// and are overwritten by the next step.  The rollback hook the
-    /// bench uses to pin per-step cost at a fixed position (and what a
-    /// speculative-decode rejection would call).
-    pub fn truncate(&mut self, len: usize) {
-        assert!(len <= self.len, "truncate({len}) beyond fill {}", self.len);
-        self.len = len;
-    }
-
-    /// Resident bytes of the preallocated planes:
-    /// `layers × 2 × capacity × d_model × 4` (f32 K and V).
-    pub fn bytes(&self) -> usize {
-        self.k.len() * 2 * self.capacity() * self.d_model() * 4
-    }
-
-    fn check(&self, n_layer: usize, d: usize) -> crate::Result<()> {
-        crate::ensure!(
-            self.k.len() == n_layer && self.d_model() == d,
-            "cache shape ({} layers, d {}) does not match the model ({n_layer}, {d})",
-            self.k.len(),
-            self.d_model()
-        );
-        Ok(())
-    }
-
-    #[inline]
-    fn write_row(&mut self, layer: usize, t: usize, krow: &[f32], vrow: &[f32]) {
-        self.k[layer].row_mut(t).copy_from_slice(krow);
-        self.v[layer].row_mut(t).copy_from_slice(vrow);
-    }
-}
-
 /// One query row's attention over a sequence's cached K/V planes (rows
 /// `0..=pos`, the appended current position included) — the incremental
 /// counterpart of [`causal_attention_into`], mirroring its max-subtracted
-/// softmax term-for-term so the decode path stays bit-identical to the
-/// full recompute.  `q` is the `d`-wide fused-QKV query slice; `out` the
-/// `d`-wide attention output row.
-fn decode_attention_row(kplane: &Matrix, vplane: &Matrix, q: &[f32], pos: usize,
-                        n_head: usize, scores: &mut Vec<f32>, out: &mut [f32]) {
+/// softmax term-for-term.  The planes are read through a paged
+/// [`KvLayerView`]: f32 storage hands back direct arena slices (same
+/// bits, same `dot` reduction order — so the paged decode path stays
+/// bit-identical to the full recompute), f16/int8 dequantize each
+/// head-slice into `scratch` first.  `q` is the `d`-wide fused-QKV query
+/// slice; `out` the `d`-wide attention output row.
+fn decode_attention_row(view: &KvLayerView<'_>, q: &[f32], pos: usize, n_head: usize,
+                        scores: &mut Vec<f32>, scratch: &mut Vec<f32>,
+                        out: &mut [f32]) {
     let d = q.len();
     let hd = d / n_head;
     let scale = 1.0 / (hd as f32).sqrt();
     if scores.len() < pos + 1 {
         scores.resize(pos + 1, 0.0);
     }
+    if scratch.len() < hd {
+        scratch.resize(hd, 0.0);
+    }
     for h in 0..n_head {
         let off = h * hd;
         let qrow = &q[off..off + hd];
         let mut maxv = f32::NEG_INFINITY;
         for t in 0..=pos {
-            let krow = &kplane.row(t)[off..off + hd];
+            let krow = view.k_row(t, off, hd, scratch);
             let sc = dot(qrow, krow, hd) * scale;
             scores[t] = sc;
             if sc > maxv {
@@ -577,7 +551,7 @@ fn decode_attention_row(kplane: &Matrix, vplane: &Matrix, q: &[f32], pos: usize,
         orow.fill(0.0);
         for t in 0..=pos {
             let wgt = scores[t] * inv;
-            let vrow = &vplane.row(t)[off..off + hd];
+            let vrow = view.v_row(t, off, hd, scratch);
             for j in 0..hd {
                 orow[j] += wgt * vrow[j];
             }
@@ -1119,13 +1093,14 @@ mod tests {
             HostModel::from_store(&manifest, &store, &packed, ParallelPolicy::serial())
                 .unwrap();
         let mut cache = hm.new_kv_cache();
-        assert_eq!(
-            cache.bytes(),
-            spec.n_layer * 2 * spec.seq_len * spec.d_model * 4,
-            "KvCache charge must match the memmodel formula"
-        );
+        assert_eq!(cache.bytes(), 0, "a fresh paged cache holds no blocks");
         let mut y = Matrix::zeros(0, 0);
         hm.prefill_into(&[1, 2, 3], &mut cache, &mut y).unwrap();
+        assert_eq!(
+            cache.bytes(),
+            hm.kv_pool().block_bytes(),
+            "3 tokens fit one default block; charge must match the pool"
+        );
         let mut first = Matrix::zeros(0, 0);
         hm.decode_step_into(&[5], std::slice::from_mut(&mut cache), &mut first)
             .unwrap();
@@ -1135,6 +1110,9 @@ mod tests {
         hm.decode_step_into(&[5], std::slice::from_mut(&mut cache), &mut again)
             .unwrap();
         assert_eq!(first.data, again.data, "rollback + replay must be bit-identical");
+        cache.reset();
+        assert_eq!(cache.bytes(), 0, "reset returns every block to the pool");
+        assert_eq!(hm.kv_pool().stats().blocks_in_use, 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

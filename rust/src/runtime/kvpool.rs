@@ -1,0 +1,962 @@
+//! Paged, quantized KV-cache block pool — the serving-memory subsystem.
+//!
+//! The contiguous [`KvCache`] of PR 4 preallocated a full
+//! `layers × 2 × seq_len × d_model` f32 slab per sequence, so a batch of
+//! full-context caches rivals the fp16 weights
+//! ([`crate::memmodel::kv_cache_bytes`]) — the serving-memory ceiling for
+//! thousands of concurrent sequences.  This module replaces the slab with
+//! vLLM-style **block paging**:
+//!
+//! * [`KvBlockPool`] — a process-wide arena of fixed-size token blocks
+//!   (`block_tokens` positions × all layers × K and V planes per block)
+//!   behind one shared free-list.  Allocation, append, and free are O(1)
+//!   amortized; freed blocks are recycled before the arena grows, and an
+//!   optional `max_blocks` bound turns exhaustion into a structured
+//!   error (`kv pool exhausted`, see [`is_pool_exhausted`]) instead of
+//!   unbounded growth — the signal `DecodeEngine` converts into
+//!   admission backpressure.
+//! * [`KvCache`] — now a per-sequence **view**: a block table plus a
+//!   logical fill.  `reserve` grows the table, `truncate`/`reset` return
+//!   whole blocks to the pool immediately (so `bytes()` shrinks with the
+//!   fill — rollback no longer strands capacity), and `Drop` frees
+//!   everything.
+//! * [`KvDtype`] — the storage plane: `f32` (bit-identical to the
+//!   contiguous cache: values round-trip the arena verbatim and the
+//!   attention loop reads direct slices), `f16` (hand-rolled IEEE
+//!   binary16 with round-to-nearest-even, exact vs. the reference
+//!   conversion on every bit pattern), or `int8` (symmetric per-block
+//!   per-plane scale `amax/127`; the scale only grows, requantizing the
+//!   block in place, so a written row's dequantized value never depends
+//!   on batch composition — the determinism the decode suites pin).
+//!
+//! Reads happen inside the decode attention loop through
+//! [`KvLayerView`]: f32 returns arena slices directly (zero copy, zero
+//! rounding), f16/int8 dequantize one head-slice at a time into a
+//! caller-provided scratch row.  Writes and reads take the pool mutex
+//! once per (sequence, layer) — uncontended in the single-threaded
+//! scheduler, and the kernel-engine threads underneath never touch it.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Default block size in token positions — small enough that a short
+/// generation wastes at most 15 trailing rows per layer-plane, large
+/// enough that the block table stays tiny at full context.
+pub const DEFAULT_KV_BLOCK_TOKENS: usize = 16;
+
+/// The error-message marker every pool-exhaustion failure carries.
+const POOL_EXHAUSTED: &str = "kv pool exhausted";
+
+/// True when `err` is a [`KvBlockPool`] exhaustion failure — the signal
+/// the decode engine treats as backpressure (retry when running
+/// sequences free their blocks) rather than a fatal dispatch error.
+pub fn is_pool_exhausted(err: &crate::Error) -> bool {
+    err.to_string().contains(POOL_EXHAUSTED)
+}
+
+/// Whole blocks needed to hold `tokens` positions.
+#[inline]
+fn blocks_for(tokens: usize, block_tokens: usize) -> usize {
+    tokens / block_tokens + usize::from(tokens % block_tokens != 0)
+}
+
+// ---- dtype ------------------------------------------------------------
+
+/// Storage format of the cached K/V planes (module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvDtype {
+    /// 4 bytes/elem, bit-identical to the pre-paging contiguous cache.
+    #[default]
+    F32,
+    /// IEEE binary16, 2 bytes/elem, round-to-nearest-even.
+    F16,
+    /// Symmetric int8 with one f32 scale per (block, layer, K|V plane).
+    Int8,
+}
+
+impl KvDtype {
+    /// Parse a `--kv-dtype` / `SLOPE_KV_DTYPE` value.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(Self::F32),
+            "f16" | "fp16" | "float16" | "half" => Ok(Self::F16),
+            "int8" | "i8" => Ok(Self::Int8),
+            other => Err(crate::eyre!(
+                "unknown kv dtype {other:?} (expected f32 | f16 | int8)"
+            )),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::F16 => "f16",
+            Self::Int8 => "int8",
+        }
+    }
+
+    /// Bytes per stored element (int8 scales are charged separately).
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            Self::F32 => 4,
+            Self::F16 => 2,
+            Self::Int8 => 1,
+        }
+    }
+}
+
+// ---- configuration ----------------------------------------------------
+
+/// Pool shape knobs, threaded from the CLI (`--kv-block`, `--kv-dtype`,
+/// `--kv-pool-blocks`) or the environment into [`KvBlockPool::new`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPoolConfig {
+    /// Token positions per block (every layer's K and V rows for those
+    /// positions live in the same block).
+    pub block_tokens: usize,
+    /// Storage plane format.
+    pub dtype: KvDtype,
+    /// Hard bound on live blocks (`None` = grow on demand).  When the
+    /// bound is hit, `reserve` fails with the structured exhaustion
+    /// error instead of allocating.
+    pub max_blocks: Option<usize>,
+}
+
+impl Default for KvPoolConfig {
+    fn default() -> Self {
+        Self {
+            block_tokens: DEFAULT_KV_BLOCK_TOKENS,
+            dtype: KvDtype::F32,
+            max_blocks: None,
+        }
+    }
+}
+
+impl KvPoolConfig {
+    /// Defaults overridden by `SLOPE_KV_DTYPE` / `SLOPE_KV_BLOCK` —
+    /// the env seam the CI int8 decode leg uses.  Unparsable values warn
+    /// and keep the default (never a panic at model-open time).
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        if let Ok(v) = std::env::var("SLOPE_KV_DTYPE") {
+            match KvDtype::parse(&v) {
+                Ok(d) => cfg.dtype = d,
+                Err(e) => eprintln!("[kvpool] ignoring SLOPE_KV_DTYPE: {e}"),
+            }
+        }
+        if let Ok(v) = std::env::var("SLOPE_KV_BLOCK") {
+            match v.trim().parse::<usize>() {
+                Ok(n) if n > 0 => cfg.block_tokens = n,
+                _ => eprintln!(
+                    "[kvpool] ignoring SLOPE_KV_BLOCK={v:?} (want a positive integer)"
+                ),
+            }
+        }
+        cfg
+    }
+}
+
+// ---- pool -------------------------------------------------------------
+
+/// Occupancy snapshot of a [`KvBlockPool`] — the gauges `ServeStats`
+/// records per decode step and `bench_serve` prints per kv series.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// Blocks currently held by live caches.
+    pub blocks_in_use: usize,
+    /// Blocks ever materialized in the arena (in use + free-listed).
+    pub blocks_allocated: usize,
+    /// High-water mark of `blocks_in_use`.
+    pub peak_blocks: usize,
+    /// Configured bound (`None` = unbounded).
+    pub max_blocks: Option<usize>,
+    /// Resident bytes per block (K+V planes for all layers, plus int8
+    /// scales when quantized).
+    pub block_bytes: usize,
+    /// `blocks_in_use × block_bytes`.
+    pub bytes_in_use: usize,
+    /// `reserve` calls refused because the bound was hit.
+    pub alloc_failures: u64,
+    /// Allocations served by recycling a freed block (vs. arena growth).
+    pub blocks_recycled: u64,
+}
+
+/// Immutable pool shape, cached outside the mutex so accessors and
+/// `bytes()` never lock.
+#[derive(Clone, Copy)]
+struct PoolShape {
+    n_layer: usize,
+    d_model: usize,
+    block_tokens: usize,
+    dtype: KvDtype,
+    block_bytes: usize,
+    max_blocks: Option<usize>,
+}
+
+impl PoolShape {
+    /// Arena elements per block: all layers × {K, V} × block rows.
+    fn group_elems(&self) -> usize {
+        self.n_layer * 2 * self.block_tokens * self.d_model
+    }
+}
+
+/// The storage arena, one flat vector per dtype; block `b` owns elements
+/// `b·group_elems .. (b+1)·group_elems`.
+enum KvStore {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Int8 {
+        q: Vec<i8>,
+        /// One scale per (block, layer, plane): index
+        /// `b·(n_layer·2) + layer·2 + plane`.  Zero = nothing written.
+        scales: Vec<f32>,
+    },
+}
+
+struct PoolInner {
+    shape: PoolShape,
+    store: KvStore,
+    /// Recycled block ids, LIFO.
+    free: Vec<u32>,
+    /// Total blocks materialized in the arena.
+    total: usize,
+    peak_in_use: usize,
+    alloc_failures: u64,
+    blocks_recycled: u64,
+}
+
+impl PoolInner {
+    fn in_use(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Offset of (layer, plane) inside a block group.
+    fn plane_off(&self, layer: usize, plane: usize) -> usize {
+        (layer * 2 + plane) * self.shape.block_tokens * self.shape.d_model
+    }
+
+    /// All-or-nothing: append `want` block ids to `table`, or fail
+    /// without allocating anything.
+    fn alloc_into(&mut self, want: usize, table: &mut Vec<u32>) -> crate::Result<()> {
+        let headroom = match self.shape.max_blocks {
+            Some(cap) => cap.saturating_sub(self.total),
+            None => usize::MAX,
+        };
+        if want > self.free.len().saturating_add(headroom) {
+            self.alloc_failures += 1;
+            return Err(crate::eyre!(
+                "{POOL_EXHAUSTED}: need {want} block(s), {} free of {} \
+                 ({} in use; block {} tokens, {})",
+                self.free.len(),
+                self.shape.max_blocks.map_or_else(|| "unbounded".into(), |c| c.to_string()),
+                self.in_use(),
+                self.shape.block_tokens,
+                self.shape.dtype.label(),
+            ));
+        }
+        for _ in 0..want {
+            let id = if let Some(id) = self.free.pop() {
+                self.blocks_recycled += 1;
+                id
+            } else {
+                let id = self.total as u32;
+                self.total += 1;
+                let g = self.shape.group_elems();
+                match &mut self.store {
+                    KvStore::F32(a) => a.resize(a.len() + g, 0.0),
+                    KvStore::F16(a) => a.resize(a.len() + g, 0),
+                    KvStore::Int8 { q, scales } => {
+                        q.resize(q.len() + g, 0);
+                        scales.resize(scales.len() + self.shape.n_layer * 2, 0.0);
+                    }
+                }
+                id
+            };
+            table.push(id);
+        }
+        self.peak_in_use = self.peak_in_use.max(self.in_use());
+        Ok(())
+    }
+
+    /// Return a block to the free-list.  Int8 scales reset so a recycled
+    /// block quantizes exactly like a fresh one.
+    fn free_block(&mut self, b: u32) {
+        if let KvStore::Int8 { scales, .. } = &mut self.store {
+            let stride = self.shape.n_layer * 2;
+            let base = b as usize * stride;
+            scales[base..base + stride].fill(0.0);
+        }
+        self.free.push(b);
+    }
+
+    /// Store row `r` of block `b` for `layer`: K then V plane.
+    fn write_row(&mut self, b: u32, layer: usize, r: usize, krow: &[f32], vrow: &[f32]) {
+        let d = self.shape.d_model;
+        let bt = self.shape.block_tokens;
+        let base_b = b as usize * self.shape.group_elems();
+        for (plane, row) in [(0usize, krow), (1, vrow)] {
+            let plane_base = base_b + self.plane_off(layer, plane);
+            let dst = plane_base + r * d;
+            match &mut self.store {
+                KvStore::F32(a) => a[dst..dst + d].copy_from_slice(row),
+                KvStore::F16(a) => {
+                    for (h, v) in a[dst..dst + d].iter_mut().zip(row) {
+                        *h = f32_to_f16_bits(*v);
+                    }
+                }
+                KvStore::Int8 { q, scales } => {
+                    let si = b as usize * self.shape.n_layer * 2 + layer * 2 + plane;
+                    let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                    let mut sc = scales[si];
+                    if amax > sc * 127.0 {
+                        // The scale only grows; requantize the block's
+                        // already-written rows to the new grid so every
+                        // stored row stays consistent with one scale.
+                        let new_sc = amax / 127.0;
+                        if sc > 0.0 {
+                            let ratio = sc / new_sc;
+                            for v in &mut q[plane_base..plane_base + bt * d] {
+                                *v = ((*v as f32) * ratio).round().clamp(-127.0, 127.0)
+                                    as i8;
+                            }
+                        }
+                        sc = new_sc;
+                        scales[si] = sc;
+                    }
+                    let out = &mut q[dst..dst + d];
+                    if sc > 0.0 {
+                        let inv = 1.0 / sc;
+                        for (dq, v) in out.iter_mut().zip(row) {
+                            *dq = (*v * inv).round().clamp(-127.0, 127.0) as i8;
+                        }
+                    } else {
+                        out.fill(0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Read-side view of one layer's K and V planes over a block table.
+    fn layer_view<'a>(&'a self, blocks: &'a [u32], layer: usize) -> KvLayerView<'a> {
+        KvLayerView {
+            store: &self.store,
+            blocks,
+            scale_base: layer * 2,
+            scale_stride: self.shape.n_layer * 2,
+            k_off: self.plane_off(layer, 0),
+            v_off: self.plane_off(layer, 1),
+            block_tokens: self.shape.block_tokens,
+            d: self.shape.d_model,
+            group_elems: self.shape.group_elems(),
+        }
+    }
+
+    fn stats(&self, shape: &PoolShape) -> KvPoolStats {
+        KvPoolStats {
+            blocks_in_use: self.in_use(),
+            blocks_allocated: self.total,
+            peak_blocks: self.peak_in_use,
+            max_blocks: shape.max_blocks,
+            block_bytes: shape.block_bytes,
+            bytes_in_use: self.in_use() * shape.block_bytes,
+            alloc_failures: self.alloc_failures,
+            blocks_recycled: self.blocks_recycled,
+        }
+    }
+}
+
+/// Process-wide paged KV arena (module docs).  Cloning the handle shares
+/// the pool; every [`KvCache`] holds one.
+#[derive(Clone)]
+pub struct KvBlockPool {
+    shape: PoolShape,
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl KvBlockPool {
+    pub fn new(n_layer: usize, d_model: usize, cfg: KvPoolConfig) -> Self {
+        assert!(
+            n_layer > 0 && d_model > 0 && cfg.block_tokens > 0,
+            "degenerate KvBlockPool shape"
+        );
+        let elem = cfg.dtype.elem_bytes();
+        let group = n_layer * 2 * cfg.block_tokens * d_model;
+        let scale_bytes = match cfg.dtype {
+            KvDtype::Int8 => n_layer * 2 * 4,
+            _ => 0,
+        };
+        let shape = PoolShape {
+            n_layer,
+            d_model,
+            block_tokens: cfg.block_tokens,
+            dtype: cfg.dtype,
+            block_bytes: group * elem + scale_bytes,
+            max_blocks: cfg.max_blocks,
+        };
+        let store = match cfg.dtype {
+            KvDtype::F32 => KvStore::F32(Vec::new()),
+            KvDtype::F16 => KvStore::F16(Vec::new()),
+            KvDtype::Int8 => KvStore::Int8 { q: Vec::new(), scales: Vec::new() },
+        };
+        Self {
+            shape,
+            inner: Arc::new(Mutex::new(PoolInner {
+                shape,
+                store,
+                free: Vec::new(),
+                total: 0,
+                peak_in_use: 0,
+                alloc_failures: 0,
+                blocks_recycled: 0,
+            })),
+        }
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.shape.n_layer
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.shape.d_model
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.shape.block_tokens
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.shape.dtype
+    }
+
+    /// Resident bytes per block (what `bytes()` charges per table entry).
+    pub fn block_bytes(&self) -> usize {
+        self.shape.block_bytes
+    }
+
+    /// An empty per-sequence cache view over this pool, bounded at
+    /// `capacity` token positions (the model's `seq_len`).
+    pub fn new_cache(&self, capacity: usize) -> KvCache {
+        assert!(capacity > 0, "degenerate KvCache capacity");
+        KvCache {
+            pool: self.clone(),
+            blocks: Vec::new(),
+            len: 0,
+            capacity,
+        }
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        self.lock().stats(&self.shape)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl std::fmt::Debug for KvBlockPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("KvBlockPool")
+            .field("n_layer", &self.shape.n_layer)
+            .field("d_model", &self.shape.d_model)
+            .field("block_tokens", &self.shape.block_tokens)
+            .field("dtype", &self.shape.dtype)
+            .field("blocks_in_use", &s.blocks_in_use)
+            .field("blocks_allocated", &s.blocks_allocated)
+            .finish()
+    }
+}
+
+// ---- per-sequence cache view ------------------------------------------
+
+/// Per-sequence decode state: a block table into a shared
+/// [`KvBlockPool`] plus the logical fill.  Rows `len..` of the reserved
+/// blocks are dead space a later write overwrites; `truncate`/`reset`
+/// return whole blocks to the pool immediately, so `bytes()` always
+/// charges exactly the blocks held.
+pub struct KvCache {
+    pool: KvBlockPool,
+    blocks: Vec<u32>,
+    len: usize,
+    capacity: usize,
+}
+
+impl KvCache {
+    /// Convenience constructor for standalone use (tests, memmodel):
+    /// a private single-cache pool with the default f32 config.
+    pub fn new(n_layer: usize, d_model: usize, capacity: usize) -> Self {
+        KvBlockPool::new(n_layer, d_model, KvPoolConfig::default()).new_cache(capacity)
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.pool.shape.n_layer
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.pool.shape.d_model
+    }
+
+    /// Maximum positions this cache may hold (the model's `seq_len`).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Positions currently cached (prompt + decoded tokens).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.pool.shape.dtype
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.pool.shape.block_tokens
+    }
+
+    /// The pool this cache draws from.
+    pub fn pool(&self) -> &KvBlockPool {
+        &self.pool
+    }
+
+    /// Resident bytes of the blocks currently held — block-granular, so
+    /// `truncate`/`reset` shrink the charge (the accounting `memmodel`
+    /// and `ServeStats` report).
+    pub fn bytes(&self) -> usize {
+        self.blocks.len() * self.pool.shape.block_bytes
+    }
+
+    /// Ensure blocks exist for positions `0..tokens`.  All-or-nothing:
+    /// on exhaustion nothing is allocated and the table is unchanged.
+    pub fn reserve(&mut self, tokens: usize) -> crate::Result<()> {
+        crate::ensure!(
+            tokens <= self.capacity,
+            "reserve({tokens}) beyond cache capacity {}",
+            self.capacity
+        );
+        let needed = blocks_for(tokens, self.pool.shape.block_tokens);
+        if needed > self.blocks.len() {
+            let want = needed - self.blocks.len();
+            self.pool.lock().alloc_into(want, &mut self.blocks)?;
+        }
+        Ok(())
+    }
+
+    /// Forget everything and return every block to the pool.
+    pub fn reset(&mut self) {
+        self.len = 0;
+        self.free_beyond(0);
+    }
+
+    /// Roll the logical fill back to `len`; whole blocks past the new
+    /// fill go back to the pool (the rollback hook the bench and a
+    /// speculative-decode rejection use).
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate({len}) beyond fill {}", self.len);
+        self.len = len;
+        self.free_beyond(len);
+    }
+
+    /// Drop blocks a failed multi-cache reserve left beyond the fill —
+    /// the rollback that keeps an errored decode step side-effect free.
+    pub(crate) fn release_spare(&mut self) {
+        self.free_beyond(self.len);
+    }
+
+    fn free_beyond(&mut self, tokens: usize) {
+        let keep = blocks_for(tokens, self.pool.shape.block_tokens);
+        if self.blocks.len() > keep {
+            let mut inner = self.pool.lock();
+            for b in self.blocks.drain(keep..) {
+                inner.free_block(b);
+            }
+        }
+    }
+
+    pub(crate) fn check(&self, n_layer: usize, d: usize) -> crate::Result<()> {
+        crate::ensure!(
+            self.n_layer() == n_layer && self.d_model() == d,
+            "cache shape ({} layers, d {}) does not match the model ({n_layer}, {d})",
+            self.n_layer(),
+            self.d_model()
+        );
+        Ok(())
+    }
+
+    pub(crate) fn set_len(&mut self, len: usize) {
+        debug_assert!(len <= self.blocks.len() * self.pool.shape.block_tokens);
+        self.len = len;
+    }
+
+    pub(crate) fn advance(&mut self) {
+        self.len += 1;
+    }
+
+    /// Store position `t`'s K and V rows for `layer`.  The block for `t`
+    /// must have been `reserve`d.
+    pub(crate) fn write_row(&mut self, layer: usize, t: usize, krow: &[f32], vrow: &[f32]) {
+        let bt = self.pool.shape.block_tokens;
+        debug_assert!(t / bt < self.blocks.len(), "write_row beyond reserved blocks");
+        let b = self.blocks[t / bt];
+        self.pool.lock().write_row(b, layer, t % bt, krow, vrow);
+    }
+
+    /// Run `f` with a read view of one layer's K/V planes, holding the
+    /// pool lock for the duration (one lock per attention call).
+    pub(crate) fn with_layer<R>(&self, layer: usize,
+                                f: impl FnOnce(KvLayerView<'_>) -> R) -> R {
+        let inner = self.pool.lock();
+        f(inner.layer_view(&self.blocks, layer))
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        self.free_beyond(0);
+    }
+}
+
+impl std::fmt::Debug for KvCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvCache")
+            .field("len", &self.len)
+            .field("capacity", &self.capacity)
+            .field("blocks", &self.blocks.len())
+            .field("dtype", &self.pool.shape.dtype)
+            .finish()
+    }
+}
+
+// ---- read view --------------------------------------------------------
+
+/// One layer's K and V planes over a sequence's block table — what the
+/// decode attention loop reads.  f32 rows come back as direct arena
+/// slices (bit-identity with the contiguous cache); f16/int8 dequantize
+/// into the caller's scratch row.
+pub(crate) struct KvLayerView<'a> {
+    store: &'a KvStore,
+    blocks: &'a [u32],
+    scale_base: usize,
+    scale_stride: usize,
+    k_off: usize,
+    v_off: usize,
+    block_tokens: usize,
+    d: usize,
+    group_elems: usize,
+}
+
+impl KvLayerView<'_> {
+    /// Key head-slice `[off, off+n)` of position `t`.
+    #[inline]
+    pub(crate) fn k_row<'s>(&'s self, t: usize, off: usize, n: usize,
+                            scratch: &'s mut [f32]) -> &'s [f32] {
+        self.row(self.k_off, 0, t, off, n, scratch)
+    }
+
+    /// Value head-slice `[off, off+n)` of position `t`.
+    #[inline]
+    pub(crate) fn v_row<'s>(&'s self, t: usize, off: usize, n: usize,
+                            scratch: &'s mut [f32]) -> &'s [f32] {
+        self.row(self.v_off, 1, t, off, n, scratch)
+    }
+
+    #[inline]
+    fn row<'s>(&'s self, plane_off: usize, plane: usize, t: usize, off: usize,
+               n: usize, scratch: &'s mut [f32]) -> &'s [f32] {
+        let b = self.blocks[t / self.block_tokens] as usize;
+        let base =
+            b * self.group_elems + plane_off + (t % self.block_tokens) * self.d + off;
+        match self.store {
+            KvStore::F32(a) => &a[base..base + n],
+            KvStore::F16(a) => {
+                for (s, h) in scratch[..n].iter_mut().zip(&a[base..base + n]) {
+                    *s = f16_bits_to_f32(*h);
+                }
+                &scratch[..n]
+            }
+            KvStore::Int8 { q, scales } => {
+                let sc = scales[b * self.scale_stride + self.scale_base + plane];
+                for (s, v) in scratch[..n].iter_mut().zip(&q[base..base + n]) {
+                    *s = (*v as f32) * sc;
+                }
+                &scratch[..n]
+            }
+        }
+    }
+}
+
+// ---- f16 bit conversions ----------------------------------------------
+//
+// Hand-rolled IEEE binary16 (no external crates by design): encode is
+// round-to-nearest-even with subnormal and overflow handling, decode is
+// exact.  Both are property-tested below against round-trip and pinned
+// bit patterns; the encode matches the reference conversion on every
+// tested float and the decode on all 2^16 bit patterns.
+
+/// `f32` → binary16 bits, round-to-nearest-even.
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN; keep a NaN's payload non-zero.
+        let pay = if man == 0 { 0 } else { 0x0200 | ((man >> 13) as u16 & 0x03ff) };
+        return sign | 0x7c00 | pay;
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e >= -14 {
+        // Normal half: 10-bit mantissa, round the 13 dropped bits.
+        let mut m = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            // Mantissa carry bumps the exponent.
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        return sign | ((he << 10) as u16) | m as u16;
+    }
+    if e < -25 {
+        return sign; // underflow → ±0
+    }
+    // Subnormal half: shift the full 24-bit significand into place.
+    let full = 0x0080_0000 | man;
+    let shift = (-(e + 1)) as u32; // 14..=24
+    let mut m = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && (m & 1) == 1) {
+        m += 1;
+    }
+    // A carry out of the subnormal mantissa lands exactly on the
+    // smallest normal (bits 0x0400) — no special case needed.
+    sign | m as u16
+}
+
+/// binary16 bits → `f32`, exact.
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize into an f32 exponent.
+            let mut e = 113u32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13) // ±inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_f32(rng: &mut Rng, scale: f32) -> f32 {
+        rng.normal_f32(scale)
+    }
+
+    #[test]
+    fn f16_pinned_bit_patterns() {
+        // (f32 input, expected binary16 bits) — reference values.
+        let cases: [(f32, u16); 12] = [
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (65504.0, 0x7bff),          // largest finite half
+            (65520.0, 0x7c00),          // rounds to inf
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+            (6.103_515_6e-5, 0x0400),   // smallest normal half
+            (5.960_464_5e-8, 0x0001),   // smallest subnormal half
+            (2.980_232_2e-8, 0x0000),   // half of it: ties-to-even → 0
+            (1.5, 0x3e00),
+        ];
+        for (x, want) in cases {
+            assert_eq!(f32_to_f16_bits(x), want, "encode {x}");
+        }
+        // NaN survives as NaN.
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_roundtrip_error_bounded_and_decode_exact_on_exact_halves() {
+        let mut rng = Rng::seed_from_u64(0xF16);
+        for _ in 0..20_000 {
+            let x = rand_f32(&mut rng, 8.0);
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            // Half-precision ulp bound in the normal range: 2^-11.
+            assert!(
+                (rt - x).abs() <= x.abs() * 4.9e-4 + 1e-7,
+                "roundtrip {x} -> {rt}"
+            );
+            // Re-encoding a decoded half is exact (idempotent).
+            assert_eq!(f32_to_f16_bits(rt), f32_to_f16_bits(x), "idempotence at {x}");
+        }
+        // Every finite half decodes and re-encodes to the same bits.
+        for h in 0..0x7c00u16 {
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h);
+            let neg = h | 0x8000;
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(neg)), neg);
+        }
+    }
+
+    fn pool(dtype: KvDtype, block_tokens: usize, max_blocks: Option<usize>) -> KvBlockPool {
+        KvBlockPool::new(2, 8, KvPoolConfig { block_tokens, dtype, max_blocks })
+    }
+
+    /// Read back one full row through the layer view.
+    fn read_row(cache: &KvCache, layer: usize, plane: usize, t: usize) -> Vec<f32> {
+        let d = cache.d_model();
+        let mut scratch = vec![0.0f32; d];
+        cache.with_layer(layer, |view| match plane {
+            0 => view.k_row(t, 0, d, &mut scratch).to_vec(),
+            _ => view.v_row(t, 0, d, &mut scratch).to_vec(),
+        })
+    }
+
+    #[test]
+    fn f32_rows_roundtrip_bitwise_across_blocks() {
+        let p = pool(KvDtype::F32, 3, None);
+        let mut c = p.new_cache(10);
+        c.reserve(10).unwrap();
+        let mut rng = Rng::seed_from_u64(1);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..10)
+            .map(|_| {
+                let k: Vec<f32> = (0..8).map(|_| rand_f32(&mut rng, 3.0)).collect();
+                let v: Vec<f32> = (0..8).map(|_| rand_f32(&mut rng, 3.0)).collect();
+                (k, v)
+            })
+            .collect();
+        for layer in 0..2 {
+            for (t, (k, v)) in rows.iter().enumerate() {
+                c.write_row(layer, t, k, v);
+            }
+        }
+        for layer in 0..2 {
+            for (t, (k, v)) in rows.iter().enumerate() {
+                assert_eq!(&read_row(&c, layer, 0, t), k, "k layer {layer} t {t}");
+                assert_eq!(&read_row(&c, layer, 1, t), v, "v layer {layer} t {t}");
+            }
+        }
+        assert_eq!(c.bytes(), 4 * p.block_bytes(), "10 tokens / 3-token blocks");
+    }
+
+    #[test]
+    fn int8_rows_dequantize_within_block_amax_bound() {
+        let p = pool(KvDtype::Int8, 4, None);
+        let mut c = p.new_cache(8);
+        c.reserve(8).unwrap();
+        let mut rng = Rng::seed_from_u64(2);
+        // Growing magnitudes force scale regrowth + in-place requant.
+        let rows: Vec<Vec<f32>> = (0..8)
+            .map(|t| (0..8).map(|_| rand_f32(&mut rng, 0.5 + t as f32)).collect())
+            .collect();
+        for (t, r) in rows.iter().enumerate() {
+            c.write_row(0, t, r, r);
+        }
+        for blk in 0..2 {
+            let amax = rows[blk * 4..(blk + 1) * 4]
+                .iter()
+                .flatten()
+                .fold(0.0f32, |m, v| m.max(v.abs()));
+            // Requantization after a scale regrow costs at most two
+            // roundings: 2 × amax/254 ≈ 0.0079·amax; measured 0.0133 worst.
+            let tol = amax * 0.016;
+            for t in blk * 4..(blk + 1) * 4 {
+                let got = read_row(&c, 0, 0, t);
+                for (g, w) in got.iter().zip(&rows[t]) {
+                    assert!((g - w).abs() <= tol, "t={t}: {g} vs {w} (tol {tol})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_and_reset_return_blocks_and_shrink_bytes() {
+        let p = pool(KvDtype::F16, 2, None);
+        let mut c = p.new_cache(9);
+        c.reserve(7).unwrap();
+        c.set_len(7);
+        assert_eq!(c.bytes(), 4 * p.block_bytes());
+        assert_eq!(p.stats().blocks_in_use, 4);
+        c.truncate(3); // 3 tokens → 2 blocks
+        assert_eq!((c.len(), c.bytes()), (3, 2 * p.block_bytes()));
+        assert_eq!(p.stats().blocks_in_use, 2);
+        c.reset();
+        assert_eq!((c.len(), c.bytes()), (0, 0));
+        let s = p.stats();
+        assert_eq!(s.blocks_in_use, 0);
+        assert_eq!(s.blocks_allocated, 4, "arena retained for recycling");
+        assert_eq!(s.peak_blocks, 4);
+        // Recycling: a fresh reserve reuses freed blocks, no arena growth.
+        c.reserve(8).unwrap();
+        let s = p.stats();
+        assert_eq!(s.blocks_allocated, 4);
+        assert_eq!(s.blocks_recycled, 4);
+        drop(c);
+        assert_eq!(p.stats().blocks_in_use, 0, "Drop returns blocks");
+    }
+
+    #[test]
+    fn bounded_pool_exhaustion_is_structured_and_all_or_nothing() {
+        let p = pool(KvDtype::F32, 2, Some(3));
+        let mut a = p.new_cache(8);
+        a.reserve(4).unwrap(); // 2 of 3 blocks
+        let mut b = p.new_cache(8);
+        let err = b.reserve(4).unwrap_err(); // needs 2, only 1 left
+        assert!(is_pool_exhausted(&err), "{err}");
+        assert_eq!(b.bytes(), 0, "failed reserve must not hold blocks");
+        assert_eq!(p.stats().alloc_failures, 1);
+        b.reserve(2).unwrap(); // the last block still fits
+        a.reset();
+        b.reserve(4).unwrap(); // freed blocks make room
+        assert_eq!(p.stats().blocks_in_use, 2);
+    }
+
+    #[test]
+    fn config_parsing() {
+        assert_eq!(KvDtype::parse("f32").unwrap(), KvDtype::F32);
+        assert_eq!(KvDtype::parse("FP16").unwrap(), KvDtype::F16);
+        assert_eq!(KvDtype::parse(" int8 ").unwrap(), KvDtype::Int8);
+        assert!(KvDtype::parse("bf16").is_err());
+        let d = KvPoolConfig::default();
+        assert_eq!(d.block_tokens, DEFAULT_KV_BLOCK_TOKENS);
+        assert_eq!(d.dtype, KvDtype::F32);
+        assert_eq!(d.max_blocks, None);
+        // int8 block bytes charge the per-(layer, plane) scales.
+        let p8 = pool(KvDtype::Int8, 16, None);
+        assert_eq!(p8.block_bytes(), 2 * 2 * 16 * 8 + 2 * 2 * 4);
+        let p32 = pool(KvDtype::F32, 16, None);
+        assert_eq!(p32.block_bytes(), 2 * 2 * 16 * 8 * 4);
+        assert!(p32.block_bytes() >= 3 * p8.block_bytes(), "int8 ≥ 3× smaller");
+    }
+}

@@ -27,12 +27,14 @@
 pub mod exec;
 pub mod host;
 pub mod host_train;
+pub mod kvpool;
 pub mod manifest;
 pub mod store;
 
 pub use exec::{Executor, ExecutorKind, HostExec, PjrtExec, HOST_EXES};
-pub use host::{write_host_train_artifact, write_synthetic_artifact, HostModel, KvCache,
-               SynthSpec};
+pub use host::{write_host_train_artifact, write_synthetic_artifact, HostModel, SynthSpec};
+pub use kvpool::{is_pool_exhausted, KvBlockPool, KvCache, KvDtype, KvPoolConfig,
+                 KvPoolStats, DEFAULT_KV_BLOCK_TOKENS};
 pub use host_train::{HostTrainModel, TrainStateBytes};
 pub use manifest::{ExeSpec, Manifest, TensorSpec, SPARSE_WEIGHTS};
 pub use store::Store;

@@ -512,10 +512,18 @@ impl<M: DecodeModel> DecodeEngine<M> {
                 Ok(seq) => seq,
                 Err(e) => {
                     // Don't lose the request: back to the head of the
-                    // queue, surface the error (the next step retries, so
-                    // a transient failure self-heals and a persistent one
-                    // keeps erroring visibly).
+                    // queue.  KV-pool exhaustion with sequences still
+                    // running is backpressure, not failure — running
+                    // sequences free blocks as they finish, so the next
+                    // step retries silently.  Anything else (including
+                    // exhaustion with nothing running, which could never
+                    // clear) surfaces as an error; the next step retries,
+                    // so a transient failure self-heals and a persistent
+                    // one keeps erroring visibly.
                     self.waiting.push_front(req);
+                    if crate::runtime::is_pool_exhausted(&e) && !self.running.is_empty() {
+                        break;
+                    }
                     admit_err = Some(e);
                     break;
                 }
@@ -624,6 +632,26 @@ impl<M: DecodeModel> DecodeEngine<M> {
                     None => i += 1,
                 }
             }
+            // Mid-generation deadline enforcement: a budget that lapsed
+            // *during* this coalesced step finishes its sequence now —
+            // partial tokens delivered, KV blocks freed immediately for
+            // waiting admissions — instead of spending another step's
+            // compute before the entry sweep would catch it.
+            let eff = now + compute;
+            let mut i = 0;
+            while i < self.running.len() {
+                if matches!(self.running[i].deadline, Some(d) if eff >= d) {
+                    let run = self.running.remove(i);
+                    let _ = self.model.free_seq(run.seq);
+                    self.stats.record_deadline_expired(1);
+                    done.push(complete(run, FinishReason::Deadline, now, compute));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if let Some(ps) = self.model.kv_pool_stats() {
+            self.stats.record_kv_pool(&ps);
         }
         for g in &done {
             if g.finish != FinishReason::Deadline {
@@ -1013,6 +1041,102 @@ mod tests {
         assert_eq!(eng.active(), 0);
         assert_eq!(eng.model().live_seqs(), 0, "expired sequence freed");
         assert_eq!(eng.stats().summary().deadline_expired, 1);
+    }
+
+    #[test]
+    fn deadline_lapsing_during_a_step_finishes_mid_generation() {
+        let policy = DecodePolicy { max_batch: 2, max_new_tokens: 8, ..Default::default() };
+        let mut eng = DecodeEngine::new(Arith::new(), policy).unwrap();
+        eng.submit_with_deadline(vec![3], None, Duration::ZERO,
+                                 Some(Duration::from_nanos(1)))
+            .unwrap();
+        // The clock is pinned at zero, so the waiting- and running-side
+        // entry sweeps (which compare against `now`) never fire; only the
+        // post-step check, which adds the measured compute, can expire it.
+        let done = eng.step(Duration::ZERO).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Deadline);
+        assert_eq!(done[0].tokens, vec![4, 5], "partial tokens survive expiry");
+        assert_eq!(eng.active(), 0);
+        assert_eq!(eng.model().live_seqs(), 0, "sequence state freed immediately");
+        let s = eng.stats().summary();
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.served, 0, "a mid-generation expiry is not served");
+    }
+
+    /// [`Arith`] behind a `cap`-sequence "pool": a prefill past the cap
+    /// fails with the pool-exhaustion marker, like a bounded
+    /// [`crate::runtime::KvBlockPool`].
+    struct CappedArith {
+        inner: Arith,
+        cap: usize,
+    }
+
+    impl DecodeModel for CappedArith {
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+        fn max_seq_len(&self) -> usize {
+            self.inner.max_seq_len()
+        }
+        fn validate_prompt(&self, prompt: &[i32]) -> crate::Result<()> {
+            self.inner.validate_prompt(prompt)
+        }
+        fn prefill(&mut self, prompt: &[i32], logits: &mut Matrix) -> crate::Result<SeqId> {
+            crate::ensure!(
+                self.inner.live_seqs() < self.cap,
+                "kv pool exhausted: 0 free of {} block(s)",
+                self.cap
+            );
+            self.inner.prefill(prompt, logits)
+        }
+        fn decode_step(&mut self, seqs: &[SeqId], tokens: &[i32],
+                       logits: &mut Matrix) -> crate::Result<()> {
+            self.inner.decode_step(seqs, tokens, logits)
+        }
+        fn free_seq(&mut self, seq: SeqId) -> crate::Result<()> {
+            self.inner.free_seq(seq)
+        }
+        fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+            self.inner.seq_tokens(seq)
+        }
+        fn live_seqs(&self) -> usize {
+            self.inner.live_seqs()
+        }
+        fn describe_decode(&self) -> String {
+            "capped-arith".into()
+        }
+    }
+
+    #[test]
+    fn pool_exhaustion_backpressures_instead_of_failing_the_queue() {
+        // A 1-sequence pool under a 4-wide batch policy: the second
+        // request's prefill hits the exhausted pool and must wait (no
+        // error) until the first sequence finishes and frees its blocks.
+        let policy = DecodePolicy { max_batch: 4, max_new_tokens: 2, ..Default::default() };
+        let mut eng =
+            DecodeEngine::new(CappedArith { inner: Arith::new(), cap: 1 }, policy).unwrap();
+        let a = eng.submit(vec![3], None, Duration::ZERO).unwrap();
+        let b = eng.submit(vec![9], None, Duration::ZERO).unwrap();
+        let mut done = Vec::new();
+        let mut rounds = 0;
+        while eng.active() > 0 {
+            done.extend(eng.step(Duration::ZERO).unwrap());
+            rounds += 1;
+            assert!(rounds < 20, "backpressure must converge");
+        }
+        done.sort_by_key(|g| g.id);
+        assert_eq!(done.len(), 2, "both requests complete serially");
+        assert_eq!((done[0].id, done[0].tokens.clone()), (a, vec![4, 5]));
+        assert_eq!((done[1].id, done[1].tokens.clone()), (b, vec![10, 11]));
+        assert_eq!(eng.stats().summary().served, 2);
+        // With nothing running, the same failure could never clear — it
+        // surfaces as an error instead of spinning forever.
+        let mut eng =
+            DecodeEngine::new(CappedArith { inner: Arith::new(), cap: 0 }, policy).unwrap();
+        eng.submit(vec![3], None, Duration::ZERO).unwrap();
+        let err = eng.step(Duration::ZERO).unwrap_err();
+        assert!(crate::runtime::is_pool_exhausted(&err), "{err}");
     }
 
     #[test]

@@ -41,7 +41,15 @@
 //!   bound.
 //! * [`stats`] — split telemetry: per-request latency quantiles AND
 //!   per-token decode-step quantiles, batch/decode fill, req/s and
-//!   tok/s.
+//!   tok/s, plus KV block-pool occupancy (blocks/bytes in use, peak,
+//!   recycle and exhaustion counters) on paged decode backends.
+//!
+//! Decode-route KV state lives in the paged
+//! [`crate::runtime::KvBlockPool`] (`runtime/kvpool`): per-sequence
+//! caches are block tables over a shared free-list, `--kv-dtype
+//! f32|f16|int8` selects the plane storage, and pool exhaustion reaches
+//! the scheduler as backpressure (admission waits for running sequences
+//! to free blocks) instead of a panic or a dropped dispatch thread.
 //!
 //! Every model is **row/sequence-independent** (a response never depends
 //! on its batch-mates), so coalescing — however producers race, however

@@ -41,7 +41,8 @@
 use crate::backend::{ensure_out, gemm_nt_into, lora_fused_seq, ParallelPolicy, SparseBackend,
                      SpmmAlgo};
 use crate::coordinator::checkpoint;
-use crate::runtime::{HostModel, KvCache, Manifest, Session, SessionHandle};
+use crate::runtime::{HostModel, KvCache, KvPoolConfig, KvPoolStats, Manifest, Session,
+                     SessionHandle};
 use crate::sparsity::{random_row_mask, NmScheme};
 use crate::tensor::Matrix;
 use crate::util::Rng;
@@ -269,8 +270,17 @@ impl AotModel {
     /// Open `dir` (manifest + serving checkpoint), probe the PJRT path
     /// once, and fall back to the host kernel executor when the probe
     /// fails.  `policy` governs the host executor's kernel calls and is
-    /// recorded on the session (`Session::set_parallel`).
+    /// recorded on the session (`Session::set_parallel`).  The KV pool
+    /// honors the `SLOPE_KV_DTYPE` / `SLOPE_KV_BLOCK` environment
+    /// overrides; use [`AotModel::open_with_kv`] for explicit control.
     pub fn open(dir: &Path, policy: ParallelPolicy) -> crate::Result<Self> {
+        Self::open_with_kv(dir, policy, KvPoolConfig::from_env())
+    }
+
+    /// [`AotModel::open`] with an explicit KV-pool configuration (block
+    /// size, plane dtype, optional block cap) for the host decode route.
+    pub fn open_with_kv(dir: &Path, policy: ParallelPolicy,
+                        kv: KvPoolConfig) -> crate::Result<Self> {
         let session = Session::open_cached(dir)?;
         session.borrow_mut().set_parallel(policy);
         let manifest = session.borrow().manifest.clone();
@@ -313,7 +323,7 @@ impl AotModel {
                     "[serve] PJRT unavailable for {} ({why}); using the host kernel executor",
                     dir.display()
                 );
-                let hm = HostModel::from_store(&manifest, &store, &packed, policy)?;
+                let hm = HostModel::from_store_with_kv(&manifest, &store, &packed, policy, kv)?;
                 // The host executor owns its operand copies; drop the
                 // checkpoint store rather than keeping the model resident
                 // twice.
@@ -675,6 +685,12 @@ pub trait DecodeModel {
     /// Live (prefilled, not yet freed) sequences.
     fn live_seqs(&self) -> usize;
 
+    /// KV block-pool occupancy, when the backend pages its caches
+    /// (`None` for poolless backends like the recurrent kernel stack).
+    fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        None
+    }
+
     /// One-line description for stats headers and the CLI.
     fn describe_decode(&self) -> String;
 }
@@ -808,8 +824,11 @@ impl DecodeModel for AotModel {
     }
 
     fn free_seq(&mut self, seq: SeqId) -> crate::Result<()> {
-        if let SeqState::Host(cache) = self.seqs.remove(seq)? {
-            // Recycle the planes for the next prefill.
+        if let SeqState::Host(mut cache) = self.seqs.remove(seq)? {
+            // Return the blocks to the shared pool *now* (a parked cache
+            // must not pin KV memory), then recycle the empty view for
+            // the next prefill.
+            cache.reset();
             self.cache_pool.push(cache);
         }
         Ok(())
@@ -826,13 +845,24 @@ impl DecodeModel for AotModel {
         self.seqs.live()
     }
 
+    fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        self.host.as_ref().map(|hm| hm.kv_pool().stats())
+    }
+
     fn describe_decode(&self) -> String {
         format!(
             "{} — decode: {}",
             ServeModel::describe(self),
-            match self.path {
-                AotPath::HostKernels => "KV-cached incremental (host kernels)",
-                AotPath::Pjrt => "padded full-recompute replay (PJRT, O(S)/token)",
+            match (self.path, self.host.as_ref()) {
+                (AotPath::HostKernels, Some(hm)) => format!(
+                    "KV-cached incremental (host kernels; paged {} blocks of {} tokens)",
+                    hm.kv_pool().dtype().label(),
+                    hm.kv_pool().block_tokens()
+                ),
+                (AotPath::HostKernels, None) =>
+                    "KV-cached incremental (host kernels)".to_string(),
+                (AotPath::Pjrt, _) =>
+                    "padded full-recompute replay (PJRT, O(S)/token)".to_string(),
             }
         )
     }
@@ -1187,8 +1217,12 @@ mod tests {
             assert_eq!(logits.data, want.data, "decode step diverged at {}", toks.len());
         }
         assert_eq!(m.seq_tokens(seq), Some(7));
+        let stats = m.kv_pool_stats().expect("host route pages its caches");
+        assert!(stats.blocks_in_use > 0, "a live sequence holds blocks");
         m.free_seq(seq).unwrap();
         assert_eq!(m.live_seqs(), 0);
+        let stats = m.kv_pool_stats().unwrap();
+        assert_eq!(stats.blocks_in_use, 0, "free_seq returns blocks to the pool");
         let seq2 = m.prefill(&prompt, &mut logits).unwrap();
         assert_eq!(seq2, seq, "freed slot is recycled");
         std::fs::remove_dir_all(&dir).ok();

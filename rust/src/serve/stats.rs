@@ -63,6 +63,16 @@ pub struct ServeStats {
     /// kept OUT of the latency windows and `served`, so expiry under
     /// overload cannot flatter the quantiles.
     deadline_expired: usize,
+    /// KV block-pool telemetry (paged decode backends only): occupancy
+    /// gauges hold the latest snapshot, `kv_peak_blocks` the high-water
+    /// mark, and the failure/recycle counters mirror the pool's own
+    /// monotone counts.
+    kv_recorded: bool,
+    kv_blocks_in_use: usize,
+    kv_bytes_in_use: usize,
+    kv_peak_blocks: usize,
+    kv_alloc_failures: u64,
+    kv_blocks_recycled: u64,
     compute: Duration,
     /// Engine-relative time of the first/last dispatch observed.
     first_dispatch: Option<Duration>,
@@ -101,6 +111,20 @@ pub struct StatsSummary {
     /// Requests dropped past their per-request deadline (not in
     /// `served` or any latency window).
     pub deadline_expired: usize,
+    // -- KV block pool (all zero when the backend is not paged) --
+    /// True when the engine's backend reported pool occupancy at least
+    /// once (gates the report line).
+    pub kv_recorded: bool,
+    /// Blocks held by live sequences at the latest observation.
+    pub kv_blocks_in_use: usize,
+    /// `kv_blocks_in_use × block_bytes` at the latest observation.
+    pub kv_bytes_in_use: usize,
+    /// High-water mark of in-use blocks across the engine's lifetime.
+    pub kv_peak_blocks: usize,
+    /// Reservations the pool refused at its configured bound.
+    pub kv_alloc_failures: u64,
+    /// Allocations served by recycling freed blocks (vs. arena growth).
+    pub kv_blocks_recycled: u64,
 }
 
 impl ServeStats {
@@ -146,6 +170,19 @@ impl ServeStats {
     /// Record `n` requests expired past their deadline unserved.
     pub fn record_deadline_expired(&mut self, n: usize) {
         self.deadline_expired += n;
+    }
+
+    /// Record one KV block-pool observation (paged decode backends call
+    /// this once per engine step): occupancy gauges overwrite with the
+    /// snapshot, the peak keeps its high-water mark, and the pool's own
+    /// monotone counters are copied through.
+    pub fn record_kv_pool(&mut self, s: &crate::runtime::KvPoolStats) {
+        self.kv_recorded = true;
+        self.kv_blocks_in_use = s.blocks_in_use;
+        self.kv_bytes_in_use = s.bytes_in_use;
+        self.kv_peak_blocks = self.kv_peak_blocks.max(s.peak_blocks);
+        self.kv_alloc_failures = s.alloc_failures;
+        self.kv_blocks_recycled = s.blocks_recycled;
     }
 
     fn mark_dispatch(&mut self, now: Duration, compute: Duration) {
@@ -206,6 +243,12 @@ impl ServeStats {
             decode_p99_ms: quantile_of_sorted(&dec_sorted, 0.99),
             tok_per_s: if wall > 0.0 { self.tokens_out as f64 / wall } else { 0.0 },
             deadline_expired: self.deadline_expired,
+            kv_recorded: self.kv_recorded,
+            kv_blocks_in_use: self.kv_blocks_in_use,
+            kv_bytes_in_use: self.kv_bytes_in_use,
+            kv_peak_blocks: self.kv_peak_blocks,
+            kv_alloc_failures: self.kv_alloc_failures,
+            kv_blocks_recycled: self.kv_blocks_recycled,
         }
     }
 }
@@ -246,6 +289,17 @@ impl StatsSummary {
             out.push_str(&format!(
                 "\ndeadlines  : {} requests expired unserved",
                 self.deadline_expired
+            ));
+        }
+        if self.kv_recorded {
+            out.push_str(&format!(
+                "\nkv pool    : {} blocks in use ({:.2} MiB), peak {}, \
+                 {} recycled, {} alloc failures",
+                self.kv_blocks_in_use,
+                self.kv_bytes_in_use as f64 / (1024.0 * 1024.0),
+                self.kv_peak_blocks,
+                self.kv_blocks_recycled,
+                self.kv_alloc_failures
             ));
         }
         out
@@ -310,6 +364,44 @@ mod tests {
         // No expiries ⇒ no deadlines line.
         let rep = ServeStats::default().summary().report(0, 4);
         assert!(!rep.contains("expired"), "{rep}");
+    }
+
+    #[test]
+    fn kv_pool_gauges_track_latest_and_peak_and_gate_the_report_line() {
+        use crate::runtime::KvPoolStats;
+        let mut s = ServeStats::default();
+        assert!(!s.summary().kv_recorded);
+        s.record_kv_pool(&KvPoolStats {
+            blocks_in_use: 4,
+            blocks_allocated: 6,
+            peak_blocks: 5,
+            max_blocks: None,
+            block_bytes: 1024,
+            bytes_in_use: 4096,
+            alloc_failures: 1,
+            blocks_recycled: 2,
+        });
+        s.record_kv_pool(&KvPoolStats {
+            blocks_in_use: 2,
+            blocks_allocated: 6,
+            peak_blocks: 5,
+            max_blocks: None,
+            block_bytes: 1024,
+            bytes_in_use: 2048,
+            alloc_failures: 3,
+            blocks_recycled: 7,
+        });
+        let sum = s.summary();
+        assert!(sum.kv_recorded);
+        assert_eq!(sum.kv_blocks_in_use, 2, "gauges show the latest snapshot");
+        assert_eq!(sum.kv_bytes_in_use, 2048);
+        assert_eq!(sum.kv_peak_blocks, 5);
+        assert_eq!(sum.kv_alloc_failures, 3);
+        assert_eq!(sum.kv_blocks_recycled, 7);
+        let rep = sum.report(0, 4);
+        assert!(rep.contains("kv pool"), "{rep}");
+        assert!(!ServeStats::default().summary().report(0, 4).contains("kv pool"),
+                "no pool line for poolless backends");
     }
 
     #[test]

@@ -10,11 +10,21 @@
 //!   `AotModel` decode surface;
 //! * **async admission** — N concurrent producers over `DecodeAdmission`
 //!   get the same generations as inline submission, and the bounded
-//!   queue sheds deterministically under the reject policy.
+//!   queue sheds deterministically under the reject policy;
+//! * **paged KV pool** — f32 paging is bit-identical to full recompute
+//!   for every block size (including 1- and 3-token blocks that split
+//!   each sequence across many blocks), truncate returns whole blocks
+//!   and replays bitwise, f16/int8 planes track the f32 logits within
+//!   pinned tolerances (and are themselves run-to-run deterministic),
+//!   interleaved prefill/free/truncate churn drains the pool completely
+//!   without perturbing later generations, and pool exhaustion reaches
+//!   the `DecodeEngine` as backpressure (requests complete serially)
+//!   rather than a failed queue.
 
 use slope::backend::ParallelPolicy;
 use slope::coordinator::checkpoint;
-use slope::runtime::{write_synthetic_artifact, HostModel, KvCache, Manifest, SynthSpec};
+use slope::runtime::{is_pool_exhausted, write_synthetic_artifact, HostModel, KvCache, KvDtype,
+                     KvPoolConfig, Manifest, SynthSpec};
 use slope::serve::{AotModel, DecodeAdmission, DecodeEngine, DecodeModel, DecodePolicy,
                    KernelDecodeModel, Overload, QueuePolicy, Sampler};
 use slope::tensor::Matrix;
@@ -32,6 +42,14 @@ fn host_model(dir: &std::path::Path, threads: usize) -> HostModel {
     let manifest = Manifest::load(dir).unwrap();
     let (store, packed) = checkpoint::load_model_checkpoint(dir).unwrap();
     HostModel::from_store(&manifest, &store, &packed, ParallelPolicy::with_threads(threads))
+        .unwrap()
+}
+
+fn host_model_with_kv(dir: &std::path::Path, threads: usize, kv: KvPoolConfig) -> HostModel {
+    let manifest = Manifest::load(dir).unwrap();
+    let (store, packed) = checkpoint::load_model_checkpoint(dir).unwrap();
+    HostModel::from_store_with_kv(&manifest, &store, &packed,
+                                  ParallelPolicy::with_threads(threads), kv)
         .unwrap()
 }
 
@@ -330,4 +348,276 @@ fn decode_admission_bounded_reject_sheds_deterministically() {
     drop(client);
     let stats = adm.finish().unwrap();
     assert_eq!(stats.served, 2);
+}
+
+#[test]
+fn paged_f32_is_bitwise_identical_across_block_sizes() {
+    let (dir, spec) = synth_dir("blocks", 44);
+    let mut rng = Rng::seed_from_u64(0xB10C);
+    let prompts: Vec<Vec<i32>> = [1usize, 5, spec.seq_len - 2]
+        .iter()
+        .map(|&p| (0..p).map(|_| rng.below(spec.vocab) as i32).collect())
+        .collect();
+    // Reference streams on the default pool (16-token blocks: every
+    // sequence fits one block), each step already pinned bit-for-bit
+    // against full recompute inside `solo_stream`.
+    let mut hm_ref = host_model(&dir, 2);
+    let want: Vec<Vec<i32>> =
+        prompts.iter().map(|p| solo_stream(&mut hm_ref, p, true)).collect();
+    // Pathological block sizes split the same sequences across many
+    // blocks (1-token blocks: one block per position).  The paged reads
+    // must still be bit-identical — and the recompute pin re-asserts the
+    // full logits at every step, not just the argmax stream.
+    for bt in [1usize, 3, 5] {
+        let kv = KvPoolConfig { block_tokens: bt, ..KvPoolConfig::default() };
+        let mut hm = host_model_with_kv(&dir, 2, kv);
+        for (i, (p, w)) in prompts.iter().zip(&want).enumerate() {
+            assert_eq!(&solo_stream(&mut hm, p, true), w,
+                       "prompt {i}: {bt}-token blocks changed the stream");
+        }
+        assert_eq!(hm.kv_pool().stats().blocks_in_use, 0,
+                   "{bt}-token blocks: dropped caches must drain the pool");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncate_frees_whole_blocks_and_replays_bitwise() {
+    let (dir, spec) = synth_dir("trunc", 45);
+    let kv = KvPoolConfig { block_tokens: 3, ..KvPoolConfig::default() };
+    let mut hm = host_model_with_kv(&dir, 1, kv);
+    let bb = hm.kv_pool().block_bytes();
+    let mut cache = hm.new_kv_cache();
+    let mut y = Matrix::zeros(0, 0);
+    let prompt: Vec<i32> = (0..7).map(|i| (i * 5) % spec.vocab as i32).collect();
+    hm.prefill_into(&prompt, &mut cache, &mut y).unwrap();
+    assert_eq!(cache.bytes(), 3 * bb, "7 tokens over 3-token blocks = 3 blocks");
+    let steps = [4i32, 9];
+    let mut snaps: Vec<Vec<f32>> = Vec::new();
+    for t in steps {
+        hm.decode_step_into(&[t], std::slice::from_mut(&mut cache), &mut y).unwrap();
+        snaps.push(y.data.clone());
+    }
+    assert_eq!(cache.len(), 9);
+    assert_eq!(cache.bytes(), 3 * bb, "9 tokens still fit 3 blocks exactly");
+    // Roll back over the decoded tokens and replay them: same logits,
+    // bit for bit, through recycled block storage.
+    cache.truncate(7);
+    assert_eq!(cache.bytes(), 3 * bb, "len 7 still needs 3 blocks");
+    for (t, snap) in steps.iter().zip(&snaps) {
+        hm.decode_step_into(&[*t], std::slice::from_mut(&mut cache), &mut y).unwrap();
+        assert_eq!(&y.data, snap, "replay after truncate diverged");
+    }
+    // Truncating past a block boundary returns whole blocks — and the
+    // byte accounting shrinks with them (it used to stay at high-water).
+    cache.truncate(6);
+    assert_eq!(cache.bytes(), 2 * bb, "a cleared block boundary frees the block");
+    cache.truncate(2);
+    assert_eq!(cache.bytes(), bb);
+    cache.reset();
+    assert_eq!(cache.bytes(), 0);
+    assert_eq!(hm.kv_pool().stats().blocks_in_use, 0);
+    assert!(hm.kv_pool().stats().blocks_recycled > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn f16_and_int8_planes_track_f32_within_pinned_tolerance() {
+    let (dir, spec) = synth_dir("dtype", 46);
+    let mut rng = Rng::seed_from_u64(0xD7);
+    let prompt: Vec<i32> = (0..6).map(|_| rng.below(spec.vocab) as i32).collect();
+    // Walk a FIXED token schedule (not greedy) so every dtype sees
+    // byte-identical inputs and the logit gap is purely KV storage.
+    let run = |dtype: KvDtype| -> Vec<Vec<f32>> {
+        let kv = KvPoolConfig { dtype, ..KvPoolConfig::default() };
+        let mut hm = host_model_with_kv(&dir, 2, kv);
+        let mut cache = hm.new_kv_cache();
+        let mut y = Matrix::zeros(0, 0);
+        hm.prefill_into(&prompt, &mut cache, &mut y).unwrap();
+        let mut out = vec![y.data.clone()];
+        let mut t = 1i32;
+        while cache.len() < cache.capacity() {
+            hm.decode_step_into(&[t], std::slice::from_mut(&mut cache), &mut y).unwrap();
+            out.push(y.data.clone());
+            t = (t + 7) % spec.vocab as i32;
+        }
+        out
+    };
+    let reference = run(KvDtype::F32);
+    let scale = reference
+        .iter()
+        .flatten()
+        .fold(0f32, |m, v| m.max(v.abs()))
+        .max(1e-6);
+    for (dtype, tol) in [(KvDtype::F16, 1e-2f32), (KvDtype::Int8, 0.15)] {
+        let got = run(dtype);
+        assert_eq!(got.len(), reference.len());
+        let mut worst = 0f32;
+        for (a, b) in got.iter().flatten().zip(reference.iter().flatten()) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst <= tol * scale,
+                "{dtype:?}: worst |Δlogit| {worst} exceeds {tol} × max|logit| {scale}");
+        // Quantization must be deterministic: a fresh model on the same
+        // schedule reproduces the quantized logits bit for bit.
+        assert_eq!(run(dtype), got, "{dtype:?} logits must be run-to-run identical");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pool_stress_interleaved_churn_recycles_every_block_and_stays_bitwise() {
+    let (dir, spec) = synth_dir("stress", 47);
+    let mut rng = Rng::seed_from_u64(0xACE);
+    let prompts: Vec<Vec<i32>> = (0..6usize)
+        .map(|i| (0..(1 + i % 4)).map(|_| rng.below(spec.vocab) as i32).collect())
+        .collect();
+
+    // Greedy generation over the AotModel decode surface (SeqSlab slots
+    // + pool blocks), `steps` tokens per prompt.
+    fn greedy(model: &mut AotModel, prompt: &[i32], steps: usize) -> Vec<i32> {
+        let mut y = Matrix::zeros(0, 0);
+        let seq = model.prefill(prompt, &mut y).unwrap();
+        let mut out = vec![argmax(y.row(0))];
+        for _ in 1..steps {
+            let t = *out.last().unwrap();
+            model.decode_step(&[seq], &[t], &mut y).unwrap();
+            out.push(argmax(y.row(0)));
+        }
+        model.free_seq(seq).unwrap();
+        out
+    }
+
+    // Reference streams from a model that has seen no churn.
+    let mut fresh = AotModel::open_with_kv(&dir, ParallelPolicy::with_threads(2),
+                                           KvPoolConfig::default())
+        .unwrap();
+    let want: Vec<Vec<i32>> = prompts.iter().map(|p| greedy(&mut fresh, p, 4)).collect();
+
+    // Churn the slab and the pool: waves of prefill / partial decode /
+    // scrambled-order free, so slots and blocks are recycled across
+    // sequences with different lengths.
+    let mut model = AotModel::open_with_kv(&dir, ParallelPolicy::with_threads(2),
+                                           KvPoolConfig::default())
+        .unwrap();
+    for wave in 0..3 {
+        let mut y = Matrix::zeros(0, 0);
+        let mut live = Vec::new();
+        for p in &prompts {
+            live.push(model.prefill(p, &mut y).unwrap());
+        }
+        // A couple of coalesced steps over the whole wave.
+        let toks: Vec<i32> = (0..live.len() as i32).collect();
+        model.decode_step(&live, &toks, &mut y).unwrap();
+        model.decode_step(&live, &toks, &mut y).unwrap();
+        // Free odd slots first, then evens — freed blocks interleave
+        // back into the free-list out of allocation order.
+        for (i, seq) in live.iter().enumerate() {
+            if i % 2 == 1 {
+                model.free_seq(*seq).unwrap();
+            }
+        }
+        for (i, seq) in live.iter().enumerate() {
+            if i % 2 == 0 {
+                model.free_seq(*seq).unwrap();
+            }
+        }
+        assert_eq!(model.live_seqs(), 0, "wave {wave}: slab drained");
+        let ps = model.kv_pool_stats().unwrap();
+        assert_eq!(ps.blocks_in_use, 0, "wave {wave}: every block back on the free-list");
+    }
+    let ps = model.kv_pool_stats().unwrap();
+    assert!(ps.blocks_recycled > 0, "churn must exercise block recycling");
+    assert!(ps.peak_blocks >= prompts.len(), "all waves held blocks concurrently");
+
+    // HostModel-level churn with truncate in the mix, on tiny blocks so
+    // truncation actually crosses block boundaries.
+    let kv = KvPoolConfig { block_tokens: 2, ..KvPoolConfig::default() };
+    let mut hm = host_model_with_kv(&dir, 2, kv);
+    let mut y = Matrix::zeros(0, 0);
+    let mut caches: Vec<KvCache> = prompts
+        .iter()
+        .map(|p| {
+            let mut c = hm.new_kv_cache();
+            hm.prefill_into(p, &mut c, &mut y).unwrap();
+            c
+        })
+        .collect();
+    let toks: Vec<i32> = (0..caches.len() as i32).map(|t| t % spec.vocab as i32).collect();
+    hm.decode_step_into(&toks, &mut caches, &mut y).unwrap();
+    hm.decode_step_into(&toks, &mut caches, &mut y).unwrap();
+    for (i, c) in caches.iter_mut().enumerate() {
+        c.truncate(c.len() - 1 - i % 2); // ragged rollback across block edges
+    }
+    hm.decode_step_into(&toks, &mut caches, &mut y).unwrap();
+    caches.truncate(3); // drop half the caches entirely (Drop frees blocks)
+    hm.decode_step_into(&toks[..3], &mut caches, &mut y).unwrap();
+    drop(caches);
+    let ps = hm.kv_pool().stats();
+    assert_eq!(ps.blocks_in_use, 0, "post-churn: pool fully drained");
+    assert!(ps.blocks_recycled > 0);
+
+    // Post-churn generations through recycled slots and blocks are
+    // byte-identical to the churn-free reference.
+    for (i, (p, w)) in prompts.iter().zip(&want).enumerate() {
+        assert_eq!(&greedy(&mut model, p, 4), w,
+                   "prompt {i}: churn perturbed a later generation");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pool_exhaustion_backpressures_the_decode_engine() {
+    let (dir, _spec) = synth_dir("exhaust", 48);
+    // Capacity (seq_len 12) fits one default 16-token block, so a
+    // 1-block pool admits exactly one sequence at a time.
+    let policy = || DecodePolicy { max_batch: 2, max_new_tokens: 3, ..Default::default() };
+    let solo = |prompt: Vec<i32>| -> Vec<i32> {
+        let m = AotModel::open_with_kv(&dir, ParallelPolicy::with_threads(2),
+                                       KvPoolConfig::default())
+            .unwrap();
+        let mut eng = DecodeEngine::new(m, policy()).unwrap();
+        eng.submit(prompt, Some(3), Duration::ZERO).unwrap();
+        let mut done = Vec::new();
+        while eng.active() > 0 {
+            done.extend(eng.step(Duration::ZERO).unwrap());
+        }
+        done.pop().unwrap().tokens
+    };
+    let want_a = solo(vec![1, 2]);
+    let want_b = solo(vec![3, 4, 5]);
+
+    let kv = KvPoolConfig { max_blocks: Some(1), ..KvPoolConfig::default() };
+    let model = AotModel::open_with_kv(&dir, ParallelPolicy::with_threads(2), kv).unwrap();
+    let mut eng = DecodeEngine::new(model, policy()).unwrap();
+    eng.submit(vec![1, 2], Some(3), Duration::ZERO).unwrap();
+    eng.submit(vec![3, 4, 5], Some(3), Duration::ZERO).unwrap();
+    let mut done = Vec::new();
+    let mut rounds = 0usize;
+    while eng.active() > 0 {
+        done.extend(eng.step(Duration::ZERO).unwrap());
+        rounds += 1;
+        assert!(rounds < 64, "exhaustion backpressure deadlocked");
+    }
+    assert_eq!(done.len(), 2, "both requests complete, serialized by the pool");
+    done.sort_by_key(|g| g.id);
+    assert_eq!(done[0].tokens, want_a);
+    assert_eq!(done[1].tokens, want_b);
+    let ps = eng.model().kv_pool_stats().unwrap();
+    assert_eq!(ps.blocks_in_use, 0);
+    assert!(ps.alloc_failures > 0, "the block cap must actually have bound");
+
+    // With nothing running that could ever free a block, the pool error
+    // surfaces instead of spinning forever.
+    let starved = AotModel::open_with_kv(
+        &dir,
+        ParallelPolicy::serial(),
+        KvPoolConfig { max_blocks: Some(0), ..KvPoolConfig::default() },
+    )
+    .unwrap();
+    let mut eng = DecodeEngine::new(starved, policy()).unwrap();
+    eng.submit(vec![1], Some(2), Duration::ZERO).unwrap();
+    let err = eng.step(Duration::ZERO).unwrap_err();
+    assert!(is_pool_exhausted(&err), "unexpected error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -99,8 +99,20 @@ def archive(args) -> int:
             "(manifest/...), and decode (decode/...) series; "
             f"got {sorted(serve_cases)}"
         )
+    # The paged KV pool adds a dtype axis (kv/<dtype>/batch{B}/step): the
+    # trajectory must carry every plane storage so a quantization-path
+    # regression (dequant-on-read, quantize-on-write) is attributable to
+    # its dtype, not smeared into the plain decode series.
+    kv = {c for c in serve_cases if c.startswith("kv/")}
+    kv_dtypes = {c.split("/")[1] for c in kv if c.count("/") >= 2}
+    if not {"f32", "f16", "int8"} <= kv_dtypes:
+        raise SystemExit(
+            "bench_serve must emit the paged KV dtype series "
+            "(kv/f32|f16|int8/batch{B}/step); "
+            f"got kv dtypes {sorted(kv_dtypes)}"
+        )
     print(f"bench_serve series: {len(kernel)} kernel-stack, {len(manifest)} manifest, "
-          f"{len(decode)} decode")
+          f"{len(decode)} decode, {len(kv)} kv-dtype")
     # bench_train guards the native training hot path the same way: both
     # the sparse-phase and the lazy-phase step series must be present.
     train_cases = {r["case"] for r in rows if r["bench"] == "bench_train"}
