@@ -43,6 +43,8 @@ USAGE:
               [--max-new-tokens N] [--prompt-len P] [--temp T] [--eos ID]
               [--kv-block N] [--kv-dtype DT]   # paged KV cache (decode route)
               [--kv-pool-blocks N]             # pool bound (0 = grow on demand)
+              [--prefix-cache]                 # radix-tree KV prefix reuse
+              [--prefix-cache-blocks N]        # cache capacity (0 = off)
               [--threads T] [--partition P] [--seed S]
               # dynamic-batched sparse+LoRA serving; --manifest points at a
               # directory holding manifest.json + model.slopeckpt (what
@@ -52,6 +54,7 @@ USAGE:
               [--max-new-tokens N] [--max-batch B] [--requests K]
               [--prompt-len P] [--prompt \"1,2,3\"] [--temp T] [--eos ID]
               [--kv-block N] [--kv-dtype DT] [--kv-pool-blocks N]
+              [--prefix-cache] [--prefix-cache-blocks N]
               [--threads T] [--partition P] [--seed S]
 
   slope exp <ID> [--steps N] [--seed S] [--artifacts DIR] [--out-dir DIR]
@@ -74,7 +77,7 @@ struct Flags {
 
 /// Flags that are boolean switches (value optional, default "true");
 /// every other flag still requires an explicit value.
-const BOOL_FLAGS: [&str; 1] = ["decode"];
+const BOOL_FLAGS: [&str; 2] = ["decode", "prefix-cache"];
 
 impl Flags {
     fn parse(args: &[String]) -> slope::Result<Self> {
@@ -129,8 +132,10 @@ impl Flags {
 }
 
 /// KV-pool configuration for the decode routes: environment defaults
-/// (`SLOPE_KV_DTYPE` / `SLOPE_KV_BLOCK`) overridden by the explicit
-/// `--kv-dtype`, `--kv-block`, and `--kv-pool-blocks` flags.
+/// (`SLOPE_KV_DTYPE` / `SLOPE_KV_BLOCK` / `SLOPE_PREFIX_CACHE`)
+/// overridden by the explicit `--kv-dtype`, `--kv-block`,
+/// `--kv-pool-blocks`, `--prefix-cache`, and `--prefix-cache-blocks`
+/// flags.
 fn kv_config(flags: &Flags) -> slope::Result<KvPoolConfig> {
     let mut kv = KvPoolConfig::from_env();
     if let Some(v) = flags.map.get("kv-dtype") {
@@ -144,6 +149,16 @@ fn kv_config(flags: &Flags) -> slope::Result<KvPoolConfig> {
     if flags.map.contains_key("kv-pool-blocks") {
         let cap = flags.usize("kv-pool-blocks", 0)?;
         kv.max_blocks = (cap > 0).then_some(cap);
+    }
+    // `--prefix-cache` switches the cache on at the default capacity;
+    // `--prefix-cache-blocks N` sets an explicit bound (0 = off) and
+    // wins when both are given.
+    if flags.flag_set("prefix-cache") {
+        kv.prefix_cache = Some(slope::runtime::DEFAULT_PREFIX_CACHE_BLOCKS);
+    }
+    if flags.map.contains_key("prefix-cache-blocks") {
+        let cap = flags.usize("prefix-cache-blocks", 0)?;
+        kv.prefix_cache = (cap > 0).then_some(cap);
     }
     Ok(kv)
 }

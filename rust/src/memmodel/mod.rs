@@ -27,6 +27,10 @@
 //! own accounting bit-for-bit), and
 //! [`inference_memory_with_paged_decode`] re-derives the serving ratio
 //! with the SLoPe side's cache paged and optionally f16/int8-quantized.
+//! When the pool's prefix cache shares prompt blocks copy-on-write,
+//! [`kv_shared_prefix_bytes`] charges the shared whole-block prefix once
+//! and per-sequence suffixes separately — again matching the pool's live
+//! byte count exactly.
 
 use crate::config::zoo::ModelShape;
 use crate::sparsity::NmScheme;
@@ -237,6 +241,24 @@ pub fn kv_pool_bytes(n_layer: usize, seq_len: usize, d_kv: usize, block_tokens: 
     blocks * kv_block_bytes(n_layer, block_tokens, d_kv, dtype)
 }
 
+/// Block-granular bytes of `batch` sequences that SHARE a cached prompt
+/// prefix of `prefix_len` tokens in a prefix-caching pool: the prefix's
+/// whole blocks are resident once (copy-on-write sharing), each sequence
+/// pays only its suffix blocks.  Only `prefix_len / block_tokens` *whole*
+/// blocks are shareable — the partial tail of a prefix is private to each
+/// sequence, which is why the shared term floors rather than ceils.
+/// Setting `prefix_len = 0` (or `batch = 1` with `prefix_len = seq_len`
+/// rounding away) recovers `batch ×` [`kv_pool_bytes`].
+pub fn kv_shared_prefix_bytes(n_layer: usize, prefix_len: usize, seq_len: usize, batch: usize,
+                              d_kv: usize, block_tokens: usize,
+                              dtype: crate::runtime::KvDtype) -> usize {
+    assert!(prefix_len <= seq_len, "prefix cannot exceed the sequence");
+    let bb = kv_block_bytes(n_layer, block_tokens, d_kv, dtype);
+    let shared = prefix_len / block_tokens;
+    let per_seq = seq_len / block_tokens + usize::from(seq_len % block_tokens != 0);
+    shared * bb + batch * (per_seq - shared) * bb
+}
+
 /// [`inference_memory_with_decode`] with the SLoPe side's cache **paged
 /// and (optionally) quantized**: the dense baseline keeps its contiguous
 /// f32 slab per sequence, the SLoPe deployment charges
@@ -382,7 +404,8 @@ mod tests {
         let (l, bt, d) = (4usize, 16usize, 96usize);
         for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
             let pool = KvBlockPool::new(
-                l, d, KvPoolConfig { block_tokens: bt, dtype, max_blocks: None },
+                l, d,
+                KvPoolConfig { block_tokens: bt, dtype, ..KvPoolConfig::default() },
             );
             assert_eq!(pool.block_bytes(), kv_block_bytes(l, bt, d, dtype), "{dtype:?}");
         }
@@ -413,6 +436,48 @@ mod tests {
             paged_i8 < paged_f32 && paged_i8 < 0.70,
             "int8 cache must recover the headline band: {paged_i8:.3} vs {paged_f32:.3}"
         );
+    }
+
+    #[test]
+    fn shared_prefix_charge_matches_a_prefix_caching_pool() {
+        use crate::runtime::{KvBlockPool, KvDtype, KvPoolConfig};
+        let (l, bt, d) = (4usize, 16usize, 96usize);
+        let pool = KvBlockPool::new(
+            l, d,
+            KvPoolConfig { block_tokens: bt, prefix_cache: Some(64), ..KvPoolConfig::default() },
+        );
+        // One sequence computes a 40-token prompt (2 whole blocks plus a
+        // tail) and publishes it; three more attach the cached 32-token
+        // prefix and allocate only their private tail block.
+        let prompt: Vec<i32> = (0..40).collect();
+        let mut seqs = Vec::new();
+        let mut first = pool.new_cache(64);
+        first.reserve(40).unwrap();
+        first.set_len(40);
+        first.publish_prefix(&prompt);
+        seqs.push(first);
+        for _ in 0..3 {
+            let mut c = pool.new_cache(64);
+            assert_eq!(c.attach_prefix(&prompt), 32, "two whole blocks hit");
+            c.reserve(40).unwrap();
+            c.set_len(40);
+            seqs.push(c);
+        }
+        // 2 shared blocks charged once + 4 private tails = 6 resident
+        // blocks, not the 12 a shareless pool would hold — and the
+        // closed form is exactly the pool's live byte count.
+        let st = pool.stats();
+        assert_eq!(st.bytes_in_use, kv_shared_prefix_bytes(l, 32, 40, 4, d, bt, KvDtype::F32));
+        assert_eq!(st.bytes_in_use, 6 * st.block_bytes);
+        assert!(st.bytes_in_use < 4 * kv_pool_bytes(l, 40, d, bt, KvDtype::F32));
+        // With nothing shareable the closed form degrades to batch × pool.
+        assert_eq!(
+            kv_shared_prefix_bytes(l, 0, 40, 4, d, bt, KvDtype::F32),
+            4 * kv_pool_bytes(l, 40, d, bt, KvDtype::F32)
+        );
+        drop(seqs);
+        pool.clear_prefix_cache();
+        assert_eq!(pool.stats().blocks_in_use, 0);
     }
 
     #[test]

@@ -285,8 +285,44 @@ impl HostModel {
     /// full-recompute logits bit-for-bit.
     pub fn prefill_into(&mut self, tokens: &[i32], cache: &mut KvCache,
                         y: &mut Matrix) -> crate::Result<()> {
+        self.prefill_into_saved(tokens, cache, y).map(|_| ())
+    }
+
+    /// [`HostModel::prefill_into`] with the pool's prefix cache
+    /// consulted first: the longest cached whole-block chain matching
+    /// the prompt (minus its last token — the logits position always
+    /// computes) is attached by reference, only the un-matched suffix
+    /// is embedded, projected, and attended (each suffix row through
+    /// [`decode_attention_row`], the same term-for-term mirror of
+    /// [`causal_attention_into`] the decode path is pinned on, over
+    /// direct f32 arena slices), and the prompt's whole-block prefix is
+    /// published back to the cache.  Cache-hit prefill is therefore
+    /// bit-identical to a cache-miss (and cache-disabled) prefill.
+    /// Returns the prompt positions served from the cache instead of
+    /// recomputed (0 when the cache is disabled or missed).  On error
+    /// the cache ends empty — shared references released, nothing
+    /// stranded.
+    pub fn prefill_into_saved(&mut self, tokens: &[i32], cache: &mut KvCache,
+                              y: &mut Matrix) -> crate::Result<usize> {
         cache.reset();
-        self.forward_prefix(tokens, 1, tokens.len(), Some(std::slice::from_mut(cache)), y)
+        let mut matched = 0;
+        if self.kv_pool.prefix_enabled() && tokens.len() > 1 {
+            matched = cache.attach_prefix(&tokens[..tokens.len() - 1]);
+        }
+        let res = if matched == 0 {
+            self.forward_prefix(tokens, 1, tokens.len(),
+                                Some(std::slice::from_mut(cache)), y)
+        } else {
+            self.forward_suffix(tokens, matched, cache, y)
+        };
+        if let Err(e) = res {
+            cache.reset();
+            return Err(e);
+        }
+        if self.kv_pool.prefix_enabled() {
+            cache.publish_prefix(tokens);
+        }
+        Ok(matched)
     }
 
     /// One incremental decode step for a coalesced batch of sequences:
@@ -326,10 +362,17 @@ impl HostModel {
         }
         // Reserve the appended position's block up front, all caches or
         // none: on pool exhaustion, spare blocks the earlier caches
-        // acquired are returned and every cache is left untouched.
+        // acquired are returned and every cache is left untouched.  The
+        // write position is un-shared here too (copy-on-write against a
+        // prefix-cached block, e.g. after a truncate back into the
+        // shared region), so the per-layer hot loop never allocates.
         for i in 0..caches.len() {
-            let next = caches[i].len() + 1;
-            if let Err(e) = caches[i].reserve(next) {
+            let pos = caches[i].len();
+            let res = match caches[i].reserve(pos + 1) {
+                Ok(()) => caches[i].ensure_writable(pos),
+                Err(e) => Err(e),
+            };
+            if let Err(e) = res {
                 for c in caches.iter_mut() {
                     c.release_spare();
                 }
@@ -358,7 +401,7 @@ impl HostModel {
             for (i, cache) in caches.iter_mut().enumerate() {
                 let pos = cache.len();
                 let row = ws.qkv.row(i);
-                cache.write_row(li, pos, &row[d..2 * d], &row[2 * d..3 * d]);
+                cache.write_row(li, pos, &row[d..2 * d], &row[2 * d..3 * d])?;
                 cache.with_layer(li, |view| {
                     decode_attention_row(&view, &row[..d], pos, n_head,
                                          &mut ws.scores, &mut ws.kv_scratch,
@@ -466,7 +509,7 @@ impl HostModel {
                 for (b, cache) in cs.iter_mut().enumerate() {
                     for t in 0..s {
                         let row = ws.qkv.row(b * s + t);
-                        cache.write_row(li, t, &row[d..2 * d], &row[2 * d..3 * d]);
+                        cache.write_row(li, t, &row[d..2 * d], &row[2 * d..3 * d])?;
                     }
                 }
             }
@@ -498,6 +541,103 @@ impl HostModel {
                 c.set_len(s);
             }
         }
+        Ok(())
+    }
+
+    /// The cache-hit half of split prefill: positions `0..p` already
+    /// sit in `cache` (a shared, `block_tokens`-aligned prefix chain);
+    /// only rows `p..s` are embedded, projected, and banked, and each
+    /// suffix row attends over prefix + suffix through the cache view.
+    /// Every op is row-independent and the attention mirrors
+    /// [`causal_attention_into`] term-for-term, so logits and banked
+    /// rows are bit-identical to a full prefill of the same prompt.
+    fn forward_suffix(&mut self, tokens: &[i32], p: usize, cache: &mut KvCache,
+                      y: &mut Matrix) -> crate::Result<()> {
+        let s = tokens.len();
+        crate::ensure!(
+            s >= 1 && s <= self.seq_len,
+            "prefix length {s} outside 1..={}",
+            self.seq_len
+        );
+        debug_assert!(p > 0 && p < s && p % cache.block_tokens() == 0,
+                      "suffix split at {p} of {s}");
+        cache.check(self.n_layer, self.d_model)?;
+        crate::ensure!(
+            cache.capacity() >= s,
+            "cache capacity {} below prefix length {s}",
+            cache.capacity()
+        );
+        let d = self.d_model;
+        let q = s - p;
+        let (n_head, vocab) = (self.n_head, self.vocab);
+        let policy = self.policy;
+        let Self { ws, blocks, tok_emb, pos_emb, lnf_g, lnf_b, head_w, .. } = self;
+
+        // Embedding for the suffix rows only: h[i] = tok_emb + pos_emb
+        // at absolute position p + i.
+        ensure_out(&mut ws.h, q, d);
+        for (i, t) in (p..s).enumerate() {
+            let tok = tokens[t];
+            crate::ensure!(
+                tok >= 0 && (tok as usize) < vocab,
+                "token id {tok} outside vocab 0..{vocab}"
+            );
+            let dst = ws.h.row_mut(i);
+            let te = tok_emb.row(tok as usize);
+            let pe = pos_emb.row(t);
+            for j in 0..d {
+                dst[j] = te[j] + pe[j];
+            }
+        }
+
+        // Reserve the suffix blocks (the attached prefix blocks are
+        // already in the table); spares roll back on exhaustion and the
+        // caller resets the cache, releasing the shared prefix too.
+        if let Err(e) = cache.reserve(s) {
+            cache.release_spare();
+            return Err(e);
+        }
+
+        for (li, blk) in blocks.iter_mut().enumerate() {
+            // Attention sub-block: ln1 → qkv → bank → cached attention
+            // → proj.  All suffix K/V rows are banked before any suffix
+            // row attends: row p+i only reads positions 0..=p+i, so the
+            // order is invisible in the result.
+            layer_norm_into(&ws.h, &blk.ln1_g, &blk.ln1_b, &mut ws.hn);
+            blk.qkv.forward_into(&ws.hn, &mut ws.qkv, &policy);
+            for i in 0..q {
+                let row = ws.qkv.row(i);
+                cache.write_row(li, p + i, &row[d..2 * d], &row[2 * d..3 * d])?;
+            }
+            ensure_out(&mut ws.att, q, d);
+            for i in 0..q {
+                let row = ws.qkv.row(i);
+                cache.with_layer(li, |view| {
+                    decode_attention_row(&view, &row[..d], p + i, n_head,
+                                         &mut ws.scores, &mut ws.kv_scratch,
+                                         ws.att.row_mut(i));
+                });
+            }
+            blk.proj.forward_into(&ws.att, &mut ws.branch, &policy);
+            add_inplace(&mut ws.h, &ws.branch);
+            // MLP sub-block: ln2 → up → gelu → down.
+            layer_norm_into(&ws.h, &blk.ln2_g, &blk.ln2_b, &mut ws.hn);
+            blk.up.forward_into(&ws.hn, &mut ws.up, &policy);
+            gelu_tanh_inplace(&mut ws.up);
+            blk.down.forward_into(&ws.up, &mut ws.branch, &policy);
+            add_inplace(&mut ws.h, &ws.branch);
+        }
+
+        layer_norm_into(&ws.h, lnf_g, lnf_b, &mut ws.hn);
+        ensure_out(&mut ws.last, 1, d);
+        ws.last.row_mut(0).copy_from_slice(ws.hn.row(q - 1));
+        let head: &Matrix = match &*head_w {
+            Some(hw) => hw,
+            None => &*tok_emb,
+        };
+        ensure_out(y, 1, vocab);
+        gemm_nt_into(&ws.last, head, y, &policy);
+        cache.set_len(s);
         Ok(())
     }
 

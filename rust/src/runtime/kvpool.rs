@@ -35,6 +35,18 @@
 //! caller-provided scratch row.  Writes and reads take the pool mutex
 //! once per (sequence, layer) — uncontended in the single-threaded
 //! scheduler, and the kernel-engine threads underneath never touch it.
+//!
+//! **Prefix caching** (PR 9): every block carries a reference count, so
+//! one physical block can back the same prompt prefix in many
+//! sequences.  A radix trie keyed on `block_tokens`-aligned token runs
+//! maps prompt prefixes to already-filled block chains
+//! ([`KvCache::attach_prefix`] / [`KvCache::publish_prefix`]); a shared
+//! block is never written in place — the writer gets a private copy
+//! first (copy-on-write) and the refcount drops.  The cache holds one
+//! reference per cached block; chains no live sequence shares are
+//! evicted LRU leaf-first, both at the configured capacity bound and —
+//! crucially — under allocation pressure, so a hot pool degrades to
+//! cache-miss behavior instead of reporting exhaustion.
 
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -42,6 +54,10 @@ use std::sync::{Arc, Mutex, MutexGuard};
 /// generation wastes at most 15 trailing rows per layer-plane, large
 /// enough that the block table stays tiny at full context.
 pub const DEFAULT_KV_BLOCK_TOKENS: usize = 16;
+
+/// Default capacity of the prefix cache, in blocks, when `--prefix-cache`
+/// is enabled without an explicit bound.
+pub const DEFAULT_PREFIX_CACHE_BLOCKS: usize = 512;
 
 /// The error-message marker every pool-exhaustion failure carries.
 const POOL_EXHAUSTED: &str = "kv pool exhausted";
@@ -119,6 +135,9 @@ pub struct KvPoolConfig {
     /// bound is hit, `reserve` fails with the structured exhaustion
     /// error instead of allocating.
     pub max_blocks: Option<usize>,
+    /// Prefix cache: `Some(cap)` enables the radix index with at most
+    /// `cap` cached blocks (LRU-evicted past that); `None` disables it.
+    pub prefix_cache: Option<usize>,
 }
 
 impl Default for KvPoolConfig {
@@ -127,14 +146,16 @@ impl Default for KvPoolConfig {
             block_tokens: DEFAULT_KV_BLOCK_TOKENS,
             dtype: KvDtype::F32,
             max_blocks: None,
+            prefix_cache: None,
         }
     }
 }
 
 impl KvPoolConfig {
-    /// Defaults overridden by `SLOPE_KV_DTYPE` / `SLOPE_KV_BLOCK` —
-    /// the env seam the CI int8 decode leg uses.  Unparsable values warn
-    /// and keep the default (never a panic at model-open time).
+    /// Defaults overridden by `SLOPE_KV_DTYPE` / `SLOPE_KV_BLOCK` /
+    /// `SLOPE_PREFIX_CACHE` — the env seam the CI int8 and prefix-cache
+    /// decode legs use.  Unparsable values warn and keep the default
+    /// (never a panic at model-open time).
     pub fn from_env() -> Self {
         let mut cfg = Self::default();
         if let Ok(v) = std::env::var("SLOPE_KV_DTYPE") {
@@ -151,7 +172,32 @@ impl KvPoolConfig {
                 ),
             }
         }
+        if let Ok(v) = std::env::var("SLOPE_PREFIX_CACHE") {
+            cfg.prefix_cache = match parse_prefix_cache(&v) {
+                Ok(pc) => pc,
+                Err(e) => {
+                    eprintln!("[kvpool] ignoring SLOPE_PREFIX_CACHE: {e}");
+                    cfg.prefix_cache
+                }
+            };
+        }
         cfg
+    }
+}
+
+/// Parse a `--prefix-cache` / `SLOPE_PREFIX_CACHE` value: `off`/`0`
+/// disables, `on`/`1` enables at [`DEFAULT_PREFIX_CACHE_BLOCKS`], and a
+/// block count enables with that capacity.
+pub fn parse_prefix_cache(s: &str) -> crate::Result<Option<usize>> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "false" | "0" | "" => Ok(None),
+        "on" | "true" => Ok(Some(DEFAULT_PREFIX_CACHE_BLOCKS)),
+        other => match other.parse::<usize>() {
+            Ok(n) => Ok(Some(n)),
+            Err(_) => Err(crate::eyre!(
+                "unknown prefix-cache value {s:?} (expected on | off | <blocks>)"
+            )),
+        },
     }
 }
 
@@ -180,6 +226,129 @@ pub struct KvPoolStats {
     pub blocks_recycled: u64,
 }
 
+/// Prefix-cache counters — `Some` only when the pool was built with
+/// `prefix_cache` configured; `ServeStats` gates its report line on it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// `attach_prefix` calls (one per cache-enabled prefill).
+    pub lookups: u64,
+    /// Lookups that matched at least one block.
+    pub hits: u64,
+    /// Prompt positions served from cached blocks instead of recompute.
+    pub tokens_saved: u64,
+    /// Cached chains dropped (capacity bound or allocation pressure).
+    pub evictions: u64,
+    /// Blocks currently pinned by the trie.
+    pub cached_blocks: usize,
+    /// Configured capacity bound on `cached_blocks`.
+    pub max_cached_blocks: usize,
+    /// Pool blocks with refcount > 1 (physically shared right now).
+    pub shared_blocks: usize,
+}
+
+impl PrefixCacheStats {
+    /// Fraction of lookups that hit (0 when no lookups yet).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 { 0.0 } else { self.hits as f64 / self.lookups as f64 }
+    }
+}
+
+/// One radix-trie edge: `block_tokens` token ids and the pool block
+/// holding their K/V rows, plus the LRU stamp and deeper runs.
+struct PrefixNode {
+    key: Box<[i32]>,
+    block: u32,
+    last_used: u64,
+    children: Vec<PrefixNode>,
+}
+
+/// Trie + counters, living inside the pool mutex so sharing, eviction,
+/// and allocation see one consistent refcount state.
+struct PrefixState {
+    max_blocks: usize,
+    roots: Vec<PrefixNode>,
+    cached_blocks: usize,
+    /// Logical LRU clock, bumped per lookup/insert.
+    clock: u64,
+    lookups: u64,
+    hits: u64,
+    tokens_saved: u64,
+    evictions: u64,
+}
+
+/// Walk `chunks` down the trie, stamping and collecting the blocks of
+/// every matched edge.
+fn trie_lookup(nodes: &mut [PrefixNode], chunks: &[&[i32]], clock: u64, chain: &mut Vec<u32>) {
+    let Some((first, rest)) = chunks.split_first() else { return };
+    if let Some(n) = nodes.iter_mut().find(|n| n.key.as_ref() == *first) {
+        n.last_used = clock;
+        chain.push(n.block);
+        trie_lookup(&mut n.children, rest, clock, chain);
+    }
+}
+
+/// Insert `chunks` under `nodes`, reusing existing edges (an edge that
+/// already maps this run keeps its block) and recording the blocks of
+/// newly created edges in `added`.
+fn trie_insert(nodes: &mut Vec<PrefixNode>, chunks: &[(&[i32], u32)], clock: u64,
+               added: &mut Vec<u32>) {
+    let Some(((key, block), rest)) = chunks.split_first() else { return };
+    let i = match nodes.iter().position(|n| n.key.as_ref() == *key) {
+        Some(i) => i,
+        None => {
+            nodes.push(PrefixNode {
+                key: (*key).into(),
+                block: *block,
+                last_used: clock,
+                children: Vec::new(),
+            });
+            added.push(*block);
+            nodes.len() - 1
+        }
+    };
+    nodes[i].last_used = clock;
+    trie_insert(&mut nodes[i].children, rest, clock, added);
+}
+
+/// LRU stamp of the coldest evictable leaf: no children (chains evict
+/// leaf-first) and a block only the cache holds (refcount 1).
+fn trie_coldest_leaf(nodes: &[PrefixNode], refs: &[u32]) -> Option<u64> {
+    let mut best: Option<u64> = None;
+    for n in nodes {
+        let cand = if n.children.is_empty() {
+            (refs[n.block as usize] == 1).then_some(n.last_used)
+        } else {
+            trie_coldest_leaf(&n.children, refs)
+        };
+        if let Some(c) = cand {
+            best = Some(best.map_or(c, |b| b.min(c)));
+        }
+    }
+    best
+}
+
+/// Remove one evictable leaf carrying `stamp` and return its block.
+fn trie_remove_leaf(nodes: &mut Vec<PrefixNode>, refs: &[u32], stamp: u64) -> Option<u32> {
+    for i in 0..nodes.len() {
+        if nodes[i].children.is_empty() {
+            if refs[nodes[i].block as usize] == 1 && nodes[i].last_used == stamp {
+                return Some(nodes.swap_remove(i).block);
+            }
+        } else if let Some(b) = trie_remove_leaf(&mut nodes[i].children, refs, stamp) {
+            return Some(b);
+        }
+    }
+    None
+}
+
+/// Collect every block in the trie (for `clear_prefix_cache`).
+fn trie_drain(nodes: &mut Vec<PrefixNode>, out: &mut Vec<u32>) {
+    for mut n in nodes.drain(..) {
+        out.push(n.block);
+        trie_drain(&mut n.children, out);
+    }
+}
+
 /// Immutable pool shape, cached outside the mutex so accessors and
 /// `bytes()` never lock.
 #[derive(Clone, Copy)]
@@ -190,6 +359,7 @@ struct PoolShape {
     dtype: KvDtype,
     block_bytes: usize,
     max_blocks: Option<usize>,
+    prefix_cache: Option<usize>,
 }
 
 impl PoolShape {
@@ -219,6 +389,11 @@ struct PoolInner {
     free: Vec<u32>,
     /// Total blocks materialized in the arena.
     total: usize,
+    /// Per-block reference count (sequences + one for the prefix
+    /// cache).  0 for free-listed blocks.
+    refs: Vec<u32>,
+    /// The prefix-cache trie, when configured.
+    prefix: Option<PrefixState>,
     peak_in_use: usize,
     alloc_failures: u64,
     blocks_recycled: u64,
@@ -235,12 +410,18 @@ impl PoolInner {
     }
 
     /// All-or-nothing: append `want` block ids to `table`, or fail
-    /// without allocating anything.
+    /// without allocating anything.  Each handed-out block starts at
+    /// refcount 1.  Under pressure, cold prefix-cache chains are
+    /// evicted first, so a cacheful pool degrades to cache-miss
+    /// behavior before it reports exhaustion.
     fn alloc_into(&mut self, want: usize, table: &mut Vec<u32>) -> crate::Result<()> {
         let headroom = match self.shape.max_blocks {
             Some(cap) => cap.saturating_sub(self.total),
             None => usize::MAX,
         };
+        if want > self.free.len().saturating_add(headroom) && self.prefix.is_some() {
+            self.prefix_evict_until_free(want.saturating_sub(headroom));
+        }
         if want > self.free.len().saturating_add(headroom) {
             self.alloc_failures += 1;
             return Err(crate::eyre!(
@@ -260,6 +441,7 @@ impl PoolInner {
             } else {
                 let id = self.total as u32;
                 self.total += 1;
+                self.refs.push(0);
                 let g = self.shape.group_elems();
                 match &mut self.store {
                     KvStore::F32(a) => a.resize(a.len() + g, 0.0),
@@ -271,21 +453,172 @@ impl PoolInner {
                 }
                 id
             };
+            debug_assert_eq!(self.refs[id as usize], 0, "handed-out block must be unreferenced");
+            self.refs[id as usize] = 1;
             table.push(id);
         }
         self.peak_in_use = self.peak_in_use.max(self.in_use());
         Ok(())
     }
 
-    /// Return a block to the free-list.  Int8 scales reset so a recycled
-    /// block quantizes exactly like a fresh one.
+    /// Drop one reference to a block; the last holder returns it to the
+    /// free-list.  Int8 scales reset only then, so a recycled block
+    /// quantizes exactly like a fresh one while sharers keep reading
+    /// the live scales.
     fn free_block(&mut self, b: u32) {
+        let r = &mut self.refs[b as usize];
+        debug_assert!(*r > 0, "double free of block {b}");
+        *r -= 1;
+        if *r > 0 {
+            return;
+        }
         if let KvStore::Int8 { scales, .. } = &mut self.store {
             let stride = self.shape.n_layer * 2;
             let base = b as usize * stride;
             scales[base..base + stride].fill(0.0);
         }
         self.free.push(b);
+    }
+
+    /// Copy-on-write: materialize a private copy of block `b` (all
+    /// layers, both planes, int8 scales), drop the writer's share of
+    /// `b`, and return the fresh block.  Siblings keep reading `b`
+    /// untouched.
+    fn cow_block(&mut self, b: u32) -> crate::Result<u32> {
+        let mut tbl = Vec::with_capacity(1);
+        self.alloc_into(1, &mut tbl)?;
+        let nb = tbl[0];
+        let g = self.shape.group_elems();
+        let (src, dst) = (b as usize * g, nb as usize * g);
+        match &mut self.store {
+            KvStore::F32(a) => a.copy_within(src..src + g, dst),
+            KvStore::F16(a) => a.copy_within(src..src + g, dst),
+            KvStore::Int8 { q, scales } => {
+                q.copy_within(src..src + g, dst);
+                let stride = self.shape.n_layer * 2;
+                scales.copy_within(b as usize * stride..(b as usize + 1) * stride,
+                                   nb as usize * stride);
+            }
+        }
+        self.free_block(b);
+        Ok(nb)
+    }
+
+    // ---- prefix cache (all under the one pool mutex) ------------------
+
+    /// Share the longest cached whole-block chain matching `tokens`
+    /// into `table` (refcount bumped per block); returns positions
+    /// matched.
+    fn prefix_lookup(&mut self, tokens: &[i32], table: &mut Vec<u32>) -> usize {
+        let bt = self.shape.block_tokens;
+        let Some(st) = self.prefix.as_mut() else { return 0 };
+        st.lookups += 1;
+        st.clock += 1;
+        let chunks: Vec<&[i32]> = tokens.chunks_exact(bt).collect();
+        let mut chain = Vec::new();
+        trie_lookup(&mut st.roots, &chunks, st.clock, &mut chain);
+        if chain.is_empty() {
+            return 0;
+        }
+        st.hits += 1;
+        st.tokens_saved += (chain.len() * bt) as u64;
+        for &b in &chain {
+            self.refs[b as usize] += 1;
+        }
+        let matched = chain.len() * bt;
+        table.extend_from_slice(&chain);
+        matched
+    }
+
+    /// Publish a sequence's whole-block prefix (`tokens` trimmed to
+    /// full blocks, backed by `blocks`) into the trie.  Existing edges
+    /// keep their blocks; new edges pin this sequence's blocks with one
+    /// cache reference each.  Over-capacity chains evict immediately.
+    fn prefix_insert(&mut self, tokens: &[i32], blocks: &[u32]) {
+        let bt = self.shape.block_tokens;
+        let added = {
+            let Some(st) = self.prefix.as_mut() else { return };
+            if st.max_blocks == 0 {
+                return;
+            }
+            st.clock += 1;
+            let chunks: Vec<(&[i32], u32)> =
+                tokens.chunks_exact(bt).zip(blocks.iter().copied()).collect();
+            let mut added = Vec::new();
+            trie_insert(&mut st.roots, &chunks, st.clock, &mut added);
+            st.cached_blocks += added.len();
+            added
+        };
+        for b in added {
+            self.refs[b as usize] += 1;
+        }
+        while self
+            .prefix
+            .as_ref()
+            .is_some_and(|st| st.cached_blocks > st.max_blocks)
+        {
+            if !self.prefix_evict_one() {
+                break;
+            }
+        }
+    }
+
+    /// Evict the coldest unshared leaf chain edge; false when nothing
+    /// is evictable (every cached block is still shared by a live
+    /// sequence, or the cache is empty).
+    fn prefix_evict_one(&mut self) -> bool {
+        let freed = {
+            let Some(st) = self.prefix.as_mut() else { return false };
+            let Some(stamp) = trie_coldest_leaf(&st.roots, &self.refs) else {
+                return false;
+            };
+            let Some(b) = trie_remove_leaf(&mut st.roots, &self.refs, stamp) else {
+                return false;
+            };
+            st.cached_blocks -= 1;
+            st.evictions += 1;
+            b
+        };
+        self.free_block(freed);
+        true
+    }
+
+    /// Evict until at least `target` blocks sit on the free-list (or
+    /// the cache runs dry) — the allocation-pressure release valve.
+    fn prefix_evict_until_free(&mut self, target: usize) {
+        while self.free.len() < target {
+            if !self.prefix_evict_one() {
+                return;
+            }
+        }
+    }
+
+    /// Drop every cached chain (test/teardown hook).
+    fn prefix_clear(&mut self) {
+        let drained = {
+            let Some(st) = self.prefix.as_mut() else { return };
+            let mut out = Vec::new();
+            trie_drain(&mut st.roots, &mut out);
+            st.evictions += out.len() as u64;
+            st.cached_blocks = 0;
+            out
+        };
+        for b in drained {
+            self.free_block(b);
+        }
+    }
+
+    fn prefix_stats(&self) -> Option<PrefixCacheStats> {
+        let st = self.prefix.as_ref()?;
+        Some(PrefixCacheStats {
+            lookups: st.lookups,
+            hits: st.hits,
+            tokens_saved: st.tokens_saved,
+            evictions: st.evictions,
+            cached_blocks: st.cached_blocks,
+            max_cached_blocks: st.max_blocks,
+            shared_blocks: self.refs.iter().filter(|&&r| r > 1).count(),
+        })
     }
 
     /// Store row `r` of block `b` for `layer`: K then V plane.
@@ -392,12 +725,23 @@ impl KvBlockPool {
             dtype: cfg.dtype,
             block_bytes: group * elem + scale_bytes,
             max_blocks: cfg.max_blocks,
+            prefix_cache: cfg.prefix_cache,
         };
         let store = match cfg.dtype {
             KvDtype::F32 => KvStore::F32(Vec::new()),
             KvDtype::F16 => KvStore::F16(Vec::new()),
             KvDtype::Int8 => KvStore::Int8 { q: Vec::new(), scales: Vec::new() },
         };
+        let prefix = cfg.prefix_cache.map(|max_blocks| PrefixState {
+            max_blocks,
+            roots: Vec::new(),
+            cached_blocks: 0,
+            clock: 0,
+            lookups: 0,
+            hits: 0,
+            tokens_saved: 0,
+            evictions: 0,
+        });
         Self {
             shape,
             inner: Arc::new(Mutex::new(PoolInner {
@@ -405,6 +749,8 @@ impl KvBlockPool {
                 store,
                 free: Vec::new(),
                 total: 0,
+                refs: Vec::new(),
+                prefix,
                 peak_in_use: 0,
                 alloc_failures: 0,
                 blocks_recycled: 0,
@@ -447,6 +793,22 @@ impl KvBlockPool {
 
     pub fn stats(&self) -> KvPoolStats {
         self.lock().stats(&self.shape)
+    }
+
+    /// Whether this pool was built with a prefix cache.
+    pub fn prefix_enabled(&self) -> bool {
+        self.shape.prefix_cache.is_some()
+    }
+
+    /// Prefix-cache counters (`None` when no cache is configured).
+    pub fn prefix_stats(&self) -> Option<PrefixCacheStats> {
+        self.lock().prefix_stats()
+    }
+
+    /// Drop every cached chain, releasing the cache's block references
+    /// (teardown / test hook; live sequences keep their shares).
+    pub fn clear_prefix_cache(&self) {
+        self.lock().prefix_clear();
     }
 
     fn lock(&self) -> MutexGuard<'_, PoolInner> {
@@ -597,13 +959,72 @@ impl KvCache {
         self.len += 1;
     }
 
+    /// Attach the longest cached whole-block chain matching `tokens`
+    /// (the cache must be empty).  Matched blocks are shared —
+    /// refcounted, never written in place — and the fill advances past
+    /// them; returns the number of positions attached.  Pass the prompt
+    /// minus its last token so prefill always computes at least the
+    /// logits position.
+    pub fn attach_prefix(&mut self, tokens: &[i32]) -> usize {
+        assert!(
+            self.len == 0 && self.blocks.is_empty(),
+            "attach_prefix on a non-empty cache"
+        );
+        let limit = tokens.len().min(self.capacity);
+        let matched = self.pool.lock().prefix_lookup(&tokens[..limit], &mut self.blocks);
+        self.len = matched;
+        matched
+    }
+
+    /// Publish this sequence's whole-block prefix of `tokens` into the
+    /// pool's prefix cache (no-op when the cache is disabled).  The
+    /// cache pins the published blocks with its own reference, so they
+    /// outlive this sequence until evicted.
+    pub fn publish_prefix(&self, tokens: &[i32]) {
+        let bt = self.pool.shape.block_tokens;
+        let nfull = tokens.len() / bt;
+        if nfull == 0 {
+            return;
+        }
+        debug_assert!(self.len >= nfull * bt, "publish beyond the cache fill");
+        self.pool
+            .lock()
+            .prefix_insert(&tokens[..nfull * bt], &self.blocks[..nfull]);
+    }
+
+    /// Give the block holding position `pos` a private copy if it is
+    /// shared — the copy-on-write step a decode `reserve` applies ahead
+    /// of the write so the hot loop never allocates.
+    pub(crate) fn ensure_writable(&mut self, pos: usize) -> crate::Result<()> {
+        let bi = pos / self.pool.shape.block_tokens;
+        if bi >= self.blocks.len() {
+            return Ok(());
+        }
+        let mut inner = self.pool.lock();
+        let b = self.blocks[bi];
+        if inner.refs[b as usize] > 1 {
+            self.blocks[bi] = inner.cow_block(b)?;
+        }
+        Ok(())
+    }
+
     /// Store position `t`'s K and V rows for `layer`.  The block for `t`
-    /// must have been `reserve`d.
-    pub(crate) fn write_row(&mut self, layer: usize, t: usize, krow: &[f32], vrow: &[f32]) {
+    /// must have been `reserve`d.  A shared block is copied-on-write
+    /// first (fresh private block, sibling readers untouched), which can
+    /// fail on a bounded pool under pressure.
+    pub(crate) fn write_row(&mut self, layer: usize, t: usize, krow: &[f32], vrow: &[f32])
+                            -> crate::Result<()> {
         let bt = self.pool.shape.block_tokens;
         debug_assert!(t / bt < self.blocks.len(), "write_row beyond reserved blocks");
-        let b = self.blocks[t / bt];
-        self.pool.lock().write_row(b, layer, t % bt, krow, vrow);
+        let bi = t / bt;
+        let mut inner = self.pool.lock();
+        let mut b = self.blocks[bi];
+        if inner.refs[b as usize] > 1 {
+            b = inner.cow_block(b)?;
+            self.blocks[bi] = b;
+        }
+        inner.write_row(b, layer, t % bt, krow, vrow);
+        Ok(())
     }
 
     /// Run `f` with a read view of one layer's K/V planes, holding the
@@ -830,7 +1251,12 @@ mod tests {
     }
 
     fn pool(dtype: KvDtype, block_tokens: usize, max_blocks: Option<usize>) -> KvBlockPool {
-        KvBlockPool::new(2, 8, KvPoolConfig { block_tokens, dtype, max_blocks })
+        KvBlockPool::new(2, 8, KvPoolConfig {
+            block_tokens,
+            dtype,
+            max_blocks,
+            ..KvPoolConfig::default()
+        })
     }
 
     /// Read back one full row through the layer view.
@@ -858,7 +1284,7 @@ mod tests {
             .collect();
         for layer in 0..2 {
             for (t, (k, v)) in rows.iter().enumerate() {
-                c.write_row(layer, t, k, v);
+                c.write_row(layer, t, k, v).unwrap();
             }
         }
         for layer in 0..2 {
@@ -881,7 +1307,7 @@ mod tests {
             .map(|t| (0..8).map(|_| rand_f32(&mut rng, 0.5 + t as f32)).collect())
             .collect();
         for (t, r) in rows.iter().enumerate() {
-            c.write_row(0, t, r, r);
+            c.write_row(0, t, r, r).unwrap();
         }
         for blk in 0..2 {
             let amax = rows[blk * 4..(blk + 1) * 4]
@@ -940,6 +1366,132 @@ mod tests {
         a.reset();
         b.reserve(4).unwrap(); // freed blocks make room
         assert_eq!(p.stats().blocks_in_use, 2);
+    }
+
+    fn prefix_pool(block_tokens: usize, max_blocks: Option<usize>,
+                   cache_blocks: usize) -> KvBlockPool {
+        KvBlockPool::new(2, 8, KvPoolConfig {
+            block_tokens,
+            max_blocks,
+            prefix_cache: Some(cache_blocks),
+            ..KvPoolConfig::default()
+        })
+    }
+
+    #[test]
+    fn prefix_attach_shares_blocks_and_cow_keeps_siblings_bitwise() {
+        let p = prefix_pool(2, None, 64);
+        let mut rng = Rng::seed_from_u64(3);
+        let prompt: Vec<i32> = (0..6).collect(); // 3 whole 2-token blocks
+        // Seq A misses cold, computes the prompt, publishes its blocks.
+        let mut a = p.new_cache(16);
+        assert_eq!(a.attach_prefix(&prompt[..5]), 0, "cold cache misses");
+        a.reserve(6).unwrap();
+        let rows: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..8).map(|_| rand_f32(&mut rng, 2.0)).collect())
+            .collect();
+        for layer in 0..2 {
+            for (t, r) in rows.iter().enumerate() {
+                a.write_row(layer, t, r, r).unwrap();
+            }
+        }
+        a.set_len(6);
+        a.publish_prefix(&prompt);
+        let st = p.prefix_stats().unwrap();
+        assert_eq!(st.cached_blocks, 3);
+        assert_eq!((st.lookups, st.hits), (1, 0));
+        // Seq B attaches prompt-minus-last: 5 positions → 2 whole blocks.
+        let mut b = p.new_cache(16);
+        assert_eq!(b.attach_prefix(&prompt[..5]), 4);
+        let st = p.prefix_stats().unwrap();
+        assert_eq!((st.lookups, st.hits, st.tokens_saved), (2, 1, 4));
+        // Blocks 0, 1: A + cache + B; block 2: A + cache — all shared.
+        assert_eq!(st.shared_blocks, 3);
+        assert_eq!(p.stats().blocks_in_use, 3, "sharing allocates nothing");
+        // B reads A's rows bit-for-bit through the shared blocks.
+        for layer in 0..2 {
+            for (t, r) in rows.iter().take(4).enumerate() {
+                assert_eq!(&read_row(&b, layer, 0, t), r, "layer {layer} t {t}");
+            }
+        }
+        // B overwrites position 0 → copy-on-write: B gets a private
+        // block carrying the rest of the block's old bits; A and the
+        // cache keep the original.
+        let newrow: Vec<f32> = (0..8).map(|_| rand_f32(&mut rng, 2.0)).collect();
+        b.write_row(0, 0, &newrow, &newrow).unwrap();
+        assert_eq!(read_row(&b, 0, 0, 0), newrow);
+        assert_eq!(&read_row(&b, 0, 0, 1), &rows[1], "COW copies the whole block");
+        assert_eq!(&read_row(&a, 0, 0, 0), &rows[0], "sibling untouched by COW");
+        assert_eq!(p.stats().blocks_in_use, 4, "COW materialized one block");
+        // Teardown: sequences drop, the cache still pins its chain;
+        // clearing it drains every refcount to zero.
+        drop(a);
+        drop(b);
+        assert_eq!(p.stats().blocks_in_use, 3, "cache pins its chain");
+        p.clear_prefix_cache();
+        assert_eq!(p.stats().blocks_in_use, 0, "all refcounts drained");
+        assert_eq!(p.prefix_stats().unwrap().cached_blocks, 0);
+    }
+
+    #[test]
+    fn prefix_cache_capacity_evicts_lru_leaf_first() {
+        let p = prefix_pool(2, None, 2);
+        // Chain X: two blocks, then cache-only (sequence dropped).
+        let mut a = p.new_cache(8);
+        a.reserve(4).unwrap();
+        a.set_len(4);
+        a.publish_prefix(&[1, 2, 3, 4]);
+        drop(a);
+        assert_eq!(p.prefix_stats().unwrap().cached_blocks, 2);
+        // Chain Y: one more block → over capacity → X's deepest (leaf)
+        // block evicts; its root survives.
+        let mut b = p.new_cache(8);
+        b.reserve(2).unwrap();
+        b.set_len(2);
+        b.publish_prefix(&[9, 9]);
+        drop(b);
+        let st = p.prefix_stats().unwrap();
+        assert_eq!((st.cached_blocks, st.evictions), (2, 1));
+        let mut c = p.new_cache(8);
+        assert_eq!(c.attach_prefix(&[1, 2, 3]), 2, "X's root block still cached");
+        drop(c);
+        let mut d = p.new_cache(8);
+        assert_eq!(d.attach_prefix(&[9, 9, 0]), 2, "Y untouched by the eviction");
+        drop(d);
+        p.clear_prefix_cache();
+        assert_eq!(p.stats().blocks_in_use, 0);
+    }
+
+    #[test]
+    fn pool_pressure_evicts_cached_chains_before_erroring() {
+        let p = prefix_pool(2, Some(4), 64);
+        // A 4-block chain, cache-only after the sequence drops: the
+        // bounded pool is now nominally full.
+        let mut a = p.new_cache(8);
+        a.reserve(8).unwrap();
+        a.set_len(8);
+        a.publish_prefix(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        drop(a);
+        assert_eq!(p.stats().blocks_in_use, 4, "cache pins the whole chain");
+        // A 3-block reserve: cold chain blocks evict to make room — the
+        // hot pool degrades to cache-miss, not to an error.
+        let mut b = p.new_cache(8);
+        b.reserve(6).unwrap();
+        let st = p.prefix_stats().unwrap();
+        assert_eq!(st.evictions, 3, "evicted exactly what the reserve needed");
+        assert_eq!(st.cached_blocks, 1);
+        assert_eq!(p.stats().alloc_failures, 0);
+        // Further pressure drains the cache, then fails structured —
+        // live sequences' blocks are never stolen.
+        let mut c = p.new_cache(8);
+        let err = c.reserve(4).unwrap_err();
+        assert!(is_pool_exhausted(&err), "{err}");
+        assert_eq!(p.prefix_stats().unwrap().cached_blocks, 0);
+        assert_eq!(p.stats().alloc_failures, 1);
+        c.reserve(2).unwrap();
+        drop(b);
+        drop(c);
+        assert_eq!(p.stats().blocks_in_use, 0);
     }
 
     #[test]

@@ -33,8 +33,9 @@ pub mod store;
 
 pub use exec::{Executor, ExecutorKind, HostExec, PjrtExec, HOST_EXES};
 pub use host::{write_host_train_artifact, write_synthetic_artifact, HostModel, SynthSpec};
-pub use kvpool::{is_pool_exhausted, KvBlockPool, KvCache, KvDtype, KvPoolConfig,
-                 KvPoolStats, DEFAULT_KV_BLOCK_TOKENS};
+pub use kvpool::{is_pool_exhausted, parse_prefix_cache, KvBlockPool, KvCache, KvDtype,
+                 KvPoolConfig, KvPoolStats, PrefixCacheStats, DEFAULT_KV_BLOCK_TOKENS,
+                 DEFAULT_PREFIX_CACHE_BLOCKS};
 pub use host_train::{HostTrainModel, TrainStateBytes};
 pub use manifest::{ExeSpec, Manifest, TensorSpec, SPARSE_WEIGHTS};
 pub use store::Store;

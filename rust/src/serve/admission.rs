@@ -447,6 +447,7 @@ pub type GenReply = (u64, crate::Result<Generation>);
 
 enum GenMsg {
     Submit { tag: u64, prompt: Vec<i32>, max_new: Option<usize>, reply: Sender<GenReply> },
+    Cancel { tag: u64 },
 }
 
 /// Handle to a running generation admission front-end: the async face of
@@ -542,6 +543,19 @@ impl DecodeClient {
         self.tx.send(GenMsg::Submit { tag, prompt, max_new, reply: self.reply_tx.clone() })
     }
 
+    /// Request cancellation of a previously submitted generation by its
+    /// tag (fire-and-forget).  The scheduler drops the request on its
+    /// next step and the pending [`DecodeClient::recv`] receives the
+    /// generation with [`crate::serve::FinishReason::Cancelled`] and
+    /// whatever tokens were already decoded — its KV blocks and
+    /// prefix-cache references are freed immediately.  Cancelling an
+    /// unknown or already-finished tag is a silent no-op.  Errors only
+    /// if the queue has shut down (or sheds the message under a full
+    /// bounded [`Overload::Reject`] queue, like any submit).
+    pub fn cancel(&self, tag: u64) -> crate::Result<()> {
+        self.tx.send(GenMsg::Cancel { tag })
+    }
+
     /// Block until this client's next completed generation arrives.
     /// Returns an error (instead of hanging) if the dispatcher has died
     /// with the request unanswered — or, under a configured request
@@ -581,8 +595,10 @@ where
     let result = gen_dispatch_loop(build, &rx, tick, queue, request_timeout);
     if let Err(e) = &result {
         let why = e.to_string();
-        while let Ok(GenMsg::Submit { tag, reply, .. }) = rx.try_recv() {
-            let _ = reply.send((tag, Err(crate::eyre!("decode dispatch failed: {why}"))));
+        while let Ok(msg) = rx.try_recv() {
+            if let GenMsg::Submit { tag, reply, .. } = msg {
+                let _ = reply.send((tag, Err(crate::eyre!("decode dispatch failed: {why}"))));
+            }
         }
     }
     result
@@ -658,17 +674,31 @@ where
 fn gen_admit<M: DecodeModel>(engine: &mut DecodeEngine<M>, msg: GenMsg, start: Instant,
                              routes: &mut HashMap<u64, (u64, Sender<GenReply>)>,
                              request_timeout: Option<Duration>) {
-    let GenMsg::Submit { tag, prompt, max_new, reply } = msg;
-    // The deadline clock starts at admission; time spent in the bounded
-    // channel is governed by the queue policy.
-    let now = start.elapsed();
-    match engine.submit_with_deadline(prompt, max_new, now,
-                                      request_timeout.map(|t| now + t)) {
-        Ok(id) => {
-            routes.insert(id, (tag, reply));
+    match msg {
+        GenMsg::Submit { tag, prompt, max_new, reply } => {
+            // The deadline clock starts at admission; time spent in the
+            // bounded channel is governed by the queue policy.
+            let now = start.elapsed();
+            match engine.submit_with_deadline(prompt, max_new, now,
+                                              request_timeout.map(|t| now + t)) {
+                Ok(id) => {
+                    routes.insert(id, (tag, reply));
+                }
+                Err(e) => {
+                    let _ = reply.send((tag, Err(e)));
+                }
+            }
         }
-        Err(e) => {
-            let _ = reply.send((tag, Err(e)));
+        GenMsg::Cancel { tag } => {
+            // Fire-and-forget: resolve the tag against the in-flight
+            // route table (FIFO ordering guarantees the submit was
+            // admitted first); unknown or already-routed tags are a
+            // no-op.  The route entry stays — the Cancelled generation
+            // is delivered through it on the scheduler's next step.
+            let id = routes.iter().find(|(_, (t, _))| *t == tag).map(|(&id, _)| id);
+            if let Some(id) = id {
+                engine.cancel(id);
+            }
         }
     }
 }
@@ -700,7 +730,7 @@ mod tests {
     use crate::backend::{ParallelPolicy, SparseBackend, SpmmAlgo};
     use crate::serve::batcher::BatchPolicy;
     use crate::serve::engine::DecodePolicy;
-    use crate::serve::model::{KernelDecodeModel, ServeLayer};
+    use crate::serve::model::{KernelDecodeModel, SeqId, ServeLayer};
     use crate::sparsity::{random_row_mask, NmScheme};
     use crate::tensor::Matrix;
     use crate::util::Rng;
@@ -872,6 +902,89 @@ mod tests {
         let stats = adm.finish().unwrap();
         assert_eq!(stats.served, 0, "expired requests are not served");
         assert_eq!(stats.deadline_expired, 1);
+    }
+
+    /// A decode model that can never finish on its own (huge context, no
+    /// EOS): the only way its generations complete is cancellation, so
+    /// the client-cancel round trip below is free of finish races.
+    #[derive(Default)]
+    struct Endless {
+        seqs: Vec<bool>,
+    }
+
+    impl DecodeModel for Endless {
+        fn vocab(&self) -> usize {
+            4
+        }
+        fn max_seq_len(&self) -> usize {
+            1 << 30
+        }
+        fn validate_prompt(&self, prompt: &[i32]) -> crate::Result<()> {
+            crate::ensure!(!prompt.is_empty(), "empty prompt");
+            Ok(())
+        }
+        fn prefill(&mut self, _prompt: &[i32],
+                   logits: &mut crate::tensor::Matrix) -> crate::Result<SeqId> {
+            crate::backend::ensure_out(logits, 1, 4);
+            logits.row_mut(0).fill(0.0);
+            logits.row_mut(0)[0] = 1.0;
+            self.seqs.push(true);
+            Ok((self.seqs.len() - 1) as SeqId)
+        }
+        fn decode_step(&mut self, seqs: &[SeqId], _tokens: &[i32],
+                       logits: &mut crate::tensor::Matrix) -> crate::Result<()> {
+            crate::backend::ensure_out(logits, seqs.len(), 4);
+            for i in 0..seqs.len() {
+                logits.row_mut(i).fill(0.0);
+                logits.row_mut(i)[0] = 1.0;
+            }
+            // Keep the hot dispatch loop from spinning flat out while
+            // the test thread sends the cancel.
+            std::thread::sleep(Duration::from_micros(200));
+            Ok(())
+        }
+        fn free_seq(&mut self, seq: SeqId) -> crate::Result<()> {
+            crate::ensure!(std::mem::take(&mut self.seqs[seq as usize]), "double free");
+            Ok(())
+        }
+        fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+            self.seqs.get(seq as usize).copied().then_some(2)
+        }
+        fn live_seqs(&self) -> usize {
+            self.seqs.iter().filter(|s| **s).count()
+        }
+        fn describe_decode(&self) -> String {
+            "endless".into()
+        }
+    }
+
+    #[test]
+    fn client_cancel_finishes_an_endless_generation() {
+        use crate::serve::engine::FinishReason;
+        let build = || -> crate::Result<DecodeEngine<Endless>> {
+            DecodeEngine::new(
+                Endless::default(),
+                // A cap large enough that MaxTokens never fires within the
+                // test's lifetime (each decode step sleeps 200 µs).
+                DecodePolicy { max_batch: 2, max_new_tokens: 1 << 20, ..Default::default() },
+            )
+        };
+        let adm = DecodeAdmission::spawn(build, Duration::from_micros(100),
+                                         QueuePolicy::unbounded());
+        let client = adm.client();
+        client.submit(7, vec![1, 2], None).unwrap();
+        client.cancel(7).unwrap();
+        let (tag, gen) = client.recv().unwrap();
+        assert_eq!(tag, 7);
+        assert_eq!(gen.finish, FinishReason::Cancelled);
+        assert!(gen.tokens.len() < 1 << 20, "cancelled well before the cap");
+        // Cancelling an unknown or already-finished tag is a silent no-op.
+        client.cancel(99).unwrap();
+        client.cancel(7).unwrap();
+        drop(client);
+        let stats = adm.finish().unwrap();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.served, 0, "a cancelled generation is not served");
     }
 
     #[test]

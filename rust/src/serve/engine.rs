@@ -313,6 +313,12 @@ pub enum FinishReason {
     /// sequence freed.  Counted in [`ServeStats`]' `deadline_expired`,
     /// not in `served`.
     Deadline,
+    /// Cancelled by the client ([`DecodeEngine::cancel`] /
+    /// `DecodeClient::cancel`): finished on the next step — no tokens if
+    /// it was still waiting, the partial tokens if it was running — with
+    /// its sequence (KV blocks, prefix-cache references) freed.  Counted
+    /// in [`ServeStats`]' `cancelled`, not in `served`.
+    Cancelled,
 }
 
 /// A completed generation request.
@@ -328,6 +334,10 @@ pub struct Generation {
     pub queued: Duration,
     /// Submit → final token.
     pub latency: Duration,
+    /// Prompt positions this request's prefill served from the
+    /// backend's prefix cache instead of recomputing (0 without a
+    /// cache, on a miss, or when no prefill ran).
+    pub prefill_tokens_saved: usize,
 }
 
 struct WaitingGen {
@@ -348,6 +358,7 @@ struct RunningGen {
     deadline: Option<Duration>,
     tokens: Vec<i32>,
     rng: Rng,
+    prefill_saved: usize,
 }
 
 /// The continuous-batching decode scheduler: sequences join the running
@@ -374,6 +385,8 @@ pub struct DecodeEngine<M: DecodeModel> {
     logits: Matrix,
     step_seqs: Vec<SeqId>,
     step_tokens: Vec<i32>,
+    /// Ids marked by [`DecodeEngine::cancel`], swept on the next step.
+    cancelled: std::collections::HashSet<u64>,
     next_id: u64,
 }
 
@@ -397,6 +410,7 @@ impl<M: DecodeModel> DecodeEngine<M> {
             logits: Matrix::zeros(0, 0),
             step_seqs: Vec::new(),
             step_tokens: Vec::new(),
+            cancelled: std::collections::HashSet::new(),
             next_id: 0,
         })
     }
@@ -472,6 +486,22 @@ impl<M: DecodeModel> DecodeEngine<M> {
         Ok(id)
     }
 
+    /// Request cancellation of an in-flight generation.  The next `step`
+    /// finishes it with [`FinishReason::Cancelled`] — no tokens if it was
+    /// still waiting (no prefill spent), the partial tokens so far if it
+    /// was running — and frees its sequence, returning its KV blocks and
+    /// prefix-cache references to the pool.  Returns `false` when `id` is
+    /// not in flight (unknown, already finished, or already delivered):
+    /// cancelling is then a no-op, never an error.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let in_flight = self.waiting.iter().any(|w| w.id == id)
+            || self.running.iter().any(|r| r.id == id);
+        if in_flight {
+            self.cancelled.insert(id);
+        }
+        in_flight
+    }
+
     /// Advance the world: admit waiting requests into free slots (one
     /// prefill each, first token sampled), then run ONE coalesced decode
     /// step over the running batch.  Returns the generations that
@@ -483,24 +513,34 @@ impl<M: DecodeModel> DecodeEngine<M> {
     pub fn step(&mut self, now: Duration) -> crate::Result<Vec<Generation>> {
         let mut done = Vec::new();
         let mut admit_err: Option<crate::Error> = None;
-        // Deadline expiry, waiting side: a request past its deadline
-        // leaves the queue unserved (no prefill compute) — rotate the
-        // queue once so survivor order is preserved.
+        // Cancellation + deadline expiry, waiting side: a cancelled or
+        // expired request leaves the queue unserved (no prefill compute)
+        // — rotate the queue once so survivor order is preserved.
         for _ in 0..self.waiting.len() {
             let req = self.waiting.pop_front().expect("length-bounded loop");
-            if matches!(req.deadline, Some(d) if now >= d) {
+            let finish = if self.cancelled.remove(&req.id) {
+                self.stats.record_cancelled(1);
+                Some(FinishReason::Cancelled)
+            } else if matches!(req.deadline, Some(d) if now >= d) {
                 self.stats.record_deadline_expired(1);
-                let queued = now.saturating_sub(req.submitted);
-                done.push(Generation {
-                    id: req.id,
-                    prompt_len: req.prompt.len(),
-                    tokens: Vec::new(),
-                    finish: FinishReason::Deadline,
-                    queued,
-                    latency: queued,
-                });
+                Some(FinishReason::Deadline)
             } else {
-                self.waiting.push_back(req);
+                None
+            };
+            match finish {
+                Some(finish) => {
+                    let queued = now.saturating_sub(req.submitted);
+                    done.push(Generation {
+                        id: req.id,
+                        prompt_len: req.prompt.len(),
+                        tokens: Vec::new(),
+                        finish,
+                        queued,
+                        latency: queued,
+                        prefill_tokens_saved: 0,
+                    });
+                }
+                None => self.waiting.push_back(req),
             }
         }
         // Admission: prefill into free slots — sequences join the running
@@ -542,6 +582,7 @@ impl<M: DecodeModel> DecodeEngine<M> {
                 rng: Rng::seed_from_u64(
                     self.policy.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
                 ),
+                prefill_saved: self.model.last_prefill_tokens_saved(),
             };
             let first = self.policy.sampler.sample(self.logits.row(0), &mut run.rng);
             run.tokens.push(first);
@@ -565,19 +606,24 @@ impl<M: DecodeModel> DecodeEngine<M> {
                 return Err(e);
             }
             for g in &done {
-                if g.finish != FinishReason::Deadline {
+                if served(g.finish) {
                     self.stats.record_generation(g.latency);
                 }
             }
             return Ok(done);
         }
-        // Deadline expiry, running side: drop expired sequences (partial
-        // tokens delivered, KV slot freed) before spending a coalesced
-        // decode step on them.
+        // Cancellation + deadline expiry, running side: drop cancelled or
+        // expired sequences (partial tokens delivered, KV slot freed)
+        // before spending a coalesced decode step on them.
         let mut i = 0;
         while i < self.running.len() {
-            if matches!(self.running[i].deadline, Some(d) if now >= d) {
+            if self.cancelled.remove(&self.running[i].id) {
                 // `remove` keeps batch order stable, like the finish path.
+                let run = self.running.remove(i);
+                let _ = self.model.free_seq(run.seq);
+                self.stats.record_cancelled(1);
+                done.push(complete(run, FinishReason::Cancelled, now, Duration::ZERO));
+            } else if matches!(self.running[i].deadline, Some(d) if now >= d) {
                 let run = self.running.remove(i);
                 let _ = self.model.free_seq(run.seq);
                 self.stats.record_deadline_expired(1);
@@ -653,8 +699,11 @@ impl<M: DecodeModel> DecodeEngine<M> {
         if let Some(ps) = self.model.kv_pool_stats() {
             self.stats.record_kv_pool(&ps);
         }
+        if let Some(pc) = self.model.prefix_cache_stats() {
+            self.stats.record_prefix_cache(&pc);
+        }
         for g in &done {
-            if g.finish != FinishReason::Deadline {
+            if served(g.finish) {
                 self.stats.record_generation(g.latency);
             }
         }
@@ -670,6 +719,12 @@ impl<M: DecodeModel> DecodeEngine<M> {
         }
         Ok(out)
     }
+}
+
+/// Whether a finish reason counts toward `served` (vs the shed paths —
+/// deadline expiry and client cancellation — tallied separately).
+fn served(finish: FinishReason) -> bool {
+    !matches!(finish, FinishReason::Deadline | FinishReason::Cancelled)
 }
 
 fn finish_of(run: &RunningGen, eos: Option<i32>) -> Option<FinishReason> {
@@ -692,6 +747,7 @@ fn complete(run: RunningGen, finish: FinishReason, now: Duration,
         finish,
         queued: run.queued,
         latency: now.saturating_sub(run.submitted) + compute,
+        prefill_tokens_saved: run.prefill_saved,
     }
 }
 
@@ -1062,6 +1118,42 @@ mod tests {
         let s = eng.stats().summary();
         assert_eq!(s.deadline_expired, 1);
         assert_eq!(s.served, 0, "a mid-generation expiry is not served");
+    }
+
+    #[test]
+    fn cancel_drops_waiting_and_running_requests() {
+        let policy = DecodePolicy { max_batch: 1, max_new_tokens: 8, ..Default::default() };
+        let mut eng = DecodeEngine::new(Arith::new(), policy).unwrap();
+        let run = eng.submit(vec![3], None, Duration::ZERO).unwrap();
+        let queued = eng.submit(vec![9], None, Duration::ZERO).unwrap();
+        assert!(!eng.cancel(999), "unknown id is a no-op");
+        // Step once: `run` admits and decodes (tokens 4, 5); `queued`
+        // waits behind max_batch 1.
+        assert!(eng.step(Duration::ZERO).unwrap().is_empty());
+        // Cancel the waiting request: it leaves on the next step with no
+        // tokens and no prefill spent.
+        assert!(eng.cancel(queued));
+        let done = eng.step(Duration::ZERO).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, queued);
+        assert_eq!(done[0].finish, FinishReason::Cancelled);
+        assert!(done[0].tokens.is_empty(), "cancelled before any prefill");
+        // Cancel the running request mid-generation: the partial stream
+        // is delivered and its sequence freed before the next decode.
+        assert!(eng.cancel(run));
+        let done = eng.step(Duration::ZERO).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, run);
+        assert_eq!(done[0].finish, FinishReason::Cancelled);
+        assert_eq!(done[0].tokens, vec![4, 5, 6], "partial tokens survive cancel");
+        assert_eq!(done[0].prefill_tokens_saved, 0, "no cache on this model");
+        assert_eq!(eng.active(), 0);
+        assert_eq!(eng.model().live_seqs(), 0, "cancelled sequence freed");
+        assert!(!eng.cancel(run), "already delivered: no-op");
+        let s = eng.stats().summary();
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.served, 0, "cancellations are not served");
+        assert_eq!(s.prefills, 1, "the queued request never prefilled");
     }
 
     /// [`Arith`] behind a `cap`-sequence "pool": a prefill past the cap

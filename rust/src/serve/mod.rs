@@ -50,6 +50,17 @@
 //! f32|f16|int8` selects the plane storage, and pool exhaustion reaches
 //! the scheduler as backpressure (admission waits for running sequences
 //! to free blocks) instead of a panic or a dropped dispatch thread.
+//! `--prefix-cache` turns on the pool's radix prefix cache: whole
+//! prompt blocks are published to a trie keyed on token runs, later
+//! prompts attach the longest cached chain by reference (copy-on-write,
+//! per-block refcounts) and prefill computes only the unmatched suffix
+//! — bit-identical to a cache-less prefill, with LRU eviction of
+//! unreferenced chains feeding the same backpressure path so a hot pool
+//! degrades to cache-miss rather than erroring.  Requests in flight can
+//! be withdrawn cooperatively: [`DecodeClient::cancel`] (engine-side
+//! [`DecodeEngine::cancel`]) finishes the generation with
+//! [`FinishReason::Cancelled`] at the next tick, delivering the partial
+//! tokens and releasing its blocks and prefix references.
 //!
 //! Every model is **row/sequence-independent** (a response never depends
 //! on its batch-mates), so coalescing — however producers race, however

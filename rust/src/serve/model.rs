@@ -41,7 +41,8 @@
 use crate::backend::{ensure_out, gemm_nt_into, lora_fused_seq, ParallelPolicy, SparseBackend,
                      SpmmAlgo};
 use crate::coordinator::checkpoint;
-use crate::runtime::{HostModel, KvCache, KvPoolConfig, KvPoolStats, Manifest, Session,
+use crate::runtime::{HostModel, KvCache, KvPoolConfig, KvPoolStats, Manifest,
+                     PrefixCacheStats, Session,
                      SessionHandle};
 use crate::sparsity::{random_row_mask, NmScheme};
 use crate::tensor::Matrix;
@@ -255,6 +256,9 @@ pub struct AotModel {
     /// `prefill` reuses them (`prefill_into` resets), so steady-state
     /// traffic allocates no KV planes once the pool is warm.
     cache_pool: Vec<KvCache>,
+    /// Prompt positions the prefix cache served in the most recent
+    /// successful `prefill` (see `DecodeModel::last_prefill_tokens_saved`).
+    last_prefill_saved: usize,
 }
 
 /// Per-sequence decode state (see [`DecodeModel`] impl on [`AotModel`]).
@@ -343,6 +347,7 @@ impl AotModel {
             seqs: SeqSlab::new(),
             dec_caches: Vec::new(),
             cache_pool: Vec::new(),
+            last_prefill_saved: 0,
         })
     }
 
@@ -691,6 +696,19 @@ pub trait DecodeModel {
         None
     }
 
+    /// Prefix-cache counters, when the backend's pool carries a prefix
+    /// cache (`None` otherwise — the gate on the `ServeStats` line).
+    fn prefix_cache_stats(&self) -> Option<PrefixCacheStats> {
+        None
+    }
+
+    /// Prompt positions the backend's prefix cache served (instead of
+    /// recomputing) in the most recent successful `prefill` — 0 for
+    /// cacheless backends.
+    fn last_prefill_tokens_saved(&self) -> usize {
+        0
+    }
+
     /// One-line description for stats headers and the CLI.
     fn describe_decode(&self) -> String;
 }
@@ -735,12 +753,18 @@ impl DecodeModel for AotModel {
         if let Some(hm) = self.host.as_mut() {
             let mut cache =
                 self.cache_pool.pop().unwrap_or_else(|| hm.new_kv_cache());
-            if let Err(e) = hm.prefill_into(prompt, &mut cache, logits) {
-                self.cache_pool.push(cache);
-                return Err(e);
+            match hm.prefill_into_saved(prompt, &mut cache, logits) {
+                Ok(saved) => self.last_prefill_saved = saved,
+                Err(e) => {
+                    // The failed prefill left the cache empty (shared
+                    // prefix references released) — safe to recycle.
+                    self.cache_pool.push(cache);
+                    return Err(e);
+                }
             }
             return Ok(self.seqs.insert(SeqState::Host(cache)));
         }
+        self.last_prefill_saved = 0;
         let hists = vec![prompt.to_vec()];
         self.pjrt_hist_logits(&hists, logits)?;
         let hist = hists.into_iter().next().expect("one history");
@@ -849,15 +873,24 @@ impl DecodeModel for AotModel {
         self.host.as_ref().map(|hm| hm.kv_pool().stats())
     }
 
+    fn prefix_cache_stats(&self) -> Option<PrefixCacheStats> {
+        self.host.as_ref().and_then(|hm| hm.kv_pool().prefix_stats())
+    }
+
+    fn last_prefill_tokens_saved(&self) -> usize {
+        self.last_prefill_saved
+    }
+
     fn describe_decode(&self) -> String {
         format!(
             "{} — decode: {}",
             ServeModel::describe(self),
             match (self.path, self.host.as_ref()) {
                 (AotPath::HostKernels, Some(hm)) => format!(
-                    "KV-cached incremental (host kernels; paged {} blocks of {} tokens)",
+                    "KV-cached incremental (host kernels; paged {} blocks of {} tokens{})",
                     hm.kv_pool().dtype().label(),
-                    hm.kv_pool().block_tokens()
+                    hm.kv_pool().block_tokens(),
+                    if hm.kv_pool().prefix_enabled() { ", prefix-cached" } else { "" }
                 ),
                 (AotPath::HostKernels, None) =>
                     "KV-cached incremental (host kernels)".to_string(),

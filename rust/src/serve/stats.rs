@@ -63,6 +63,10 @@ pub struct ServeStats {
     /// kept OUT of the latency windows and `served`, so expiry under
     /// overload cannot flatter the quantiles.
     deadline_expired: usize,
+    /// Requests cancelled by the client before finishing (dropped from
+    /// the queue, or mid-generation with partial tokens) — like deadline
+    /// expiries, kept out of the latency windows and `served`.
+    cancelled: usize,
     /// KV block-pool telemetry (paged decode backends only): occupancy
     /// gauges hold the latest snapshot, `kv_peak_blocks` the high-water
     /// mark, and the failure/recycle counters mirror the pool's own
@@ -73,6 +77,16 @@ pub struct ServeStats {
     kv_peak_blocks: usize,
     kv_alloc_failures: u64,
     kv_blocks_recycled: u64,
+    /// Prefix-cache telemetry (prefix-caching decode backends only):
+    /// the pool's monotone counters are copied through, the block
+    /// gauges hold the latest snapshot.
+    prefix_recorded: bool,
+    prefix_lookups: u64,
+    prefix_hits: u64,
+    prefix_tokens_saved: u64,
+    prefix_evictions: u64,
+    prefix_cached_blocks: usize,
+    prefix_shared_blocks: usize,
     compute: Duration,
     /// Engine-relative time of the first/last dispatch observed.
     first_dispatch: Option<Duration>,
@@ -111,6 +125,9 @@ pub struct StatsSummary {
     /// Requests dropped past their per-request deadline (not in
     /// `served` or any latency window).
     pub deadline_expired: usize,
+    /// Requests cancelled by the client before finishing (not in
+    /// `served` or any latency window).
+    pub cancelled: usize,
     // -- KV block pool (all zero when the backend is not paged) --
     /// True when the engine's backend reported pool occupancy at least
     /// once (gates the report line).
@@ -125,6 +142,24 @@ pub struct StatsSummary {
     pub kv_alloc_failures: u64,
     /// Allocations served by recycling freed blocks (vs. arena growth).
     pub kv_blocks_recycled: u64,
+    // -- prefix cache (all zero when the backend has none) --
+    /// True when the engine's backend reported prefix-cache stats at
+    /// least once (gates the report line).
+    pub prefix_recorded: bool,
+    /// Prefill-time cache probes.
+    pub prefix_lookups: u64,
+    /// Probes that matched at least one cached block.
+    pub prefix_hits: u64,
+    /// `prefix_hits / prefix_lookups` (0 with no lookups).
+    pub prefix_hit_rate: f64,
+    /// Prompt positions served from the cache instead of recomputed.
+    pub prefix_tokens_saved: u64,
+    /// Cached chains evicted (LRU at capacity, or under pool pressure).
+    pub prefix_evictions: u64,
+    /// Blocks the cache index holds at the latest observation.
+    pub prefix_cached_blocks: usize,
+    /// Blocks shared by 2+ holders at the latest observation.
+    pub prefix_shared_blocks: usize,
 }
 
 impl ServeStats {
@@ -172,6 +207,11 @@ impl ServeStats {
         self.deadline_expired += n;
     }
 
+    /// Record `n` requests cancelled by the client before finishing.
+    pub fn record_cancelled(&mut self, n: usize) {
+        self.cancelled += n;
+    }
+
     /// Record one KV block-pool observation (paged decode backends call
     /// this once per engine step): occupancy gauges overwrite with the
     /// snapshot, the peak keeps its high-water mark, and the pool's own
@@ -183,6 +223,20 @@ impl ServeStats {
         self.kv_peak_blocks = self.kv_peak_blocks.max(s.peak_blocks);
         self.kv_alloc_failures = s.alloc_failures;
         self.kv_blocks_recycled = s.blocks_recycled;
+    }
+
+    /// Record one prefix-cache observation (prefix-caching decode
+    /// backends call this once per engine step): the pool's monotone
+    /// counters are copied through, the block gauges overwrite with the
+    /// snapshot.
+    pub fn record_prefix_cache(&mut self, s: &crate::runtime::PrefixCacheStats) {
+        self.prefix_recorded = true;
+        self.prefix_lookups = s.lookups;
+        self.prefix_hits = s.hits;
+        self.prefix_tokens_saved = s.tokens_saved;
+        self.prefix_evictions = s.evictions;
+        self.prefix_cached_blocks = s.cached_blocks;
+        self.prefix_shared_blocks = s.shared_blocks;
     }
 
     fn mark_dispatch(&mut self, now: Duration, compute: Duration) {
@@ -243,12 +297,25 @@ impl ServeStats {
             decode_p99_ms: quantile_of_sorted(&dec_sorted, 0.99),
             tok_per_s: if wall > 0.0 { self.tokens_out as f64 / wall } else { 0.0 },
             deadline_expired: self.deadline_expired,
+            cancelled: self.cancelled,
             kv_recorded: self.kv_recorded,
             kv_blocks_in_use: self.kv_blocks_in_use,
             kv_bytes_in_use: self.kv_bytes_in_use,
             kv_peak_blocks: self.kv_peak_blocks,
             kv_alloc_failures: self.kv_alloc_failures,
             kv_blocks_recycled: self.kv_blocks_recycled,
+            prefix_recorded: self.prefix_recorded,
+            prefix_lookups: self.prefix_lookups,
+            prefix_hits: self.prefix_hits,
+            prefix_hit_rate: if self.prefix_lookups == 0 {
+                0.0
+            } else {
+                self.prefix_hits as f64 / self.prefix_lookups as f64
+            },
+            prefix_tokens_saved: self.prefix_tokens_saved,
+            prefix_evictions: self.prefix_evictions,
+            prefix_cached_blocks: self.prefix_cached_blocks,
+            prefix_shared_blocks: self.prefix_shared_blocks,
         }
     }
 }
@@ -291,6 +358,12 @@ impl StatsSummary {
                 self.deadline_expired
             ));
         }
+        if self.cancelled > 0 {
+            out.push_str(&format!(
+                "\ncancelled  : {} requests cancelled by the client",
+                self.cancelled
+            ));
+        }
         if self.kv_recorded {
             out.push_str(&format!(
                 "\nkv pool    : {} blocks in use ({:.2} MiB), peak {}, \
@@ -300,6 +373,19 @@ impl StatsSummary {
                 self.kv_peak_blocks,
                 self.kv_blocks_recycled,
                 self.kv_alloc_failures
+            ));
+        }
+        if self.prefix_recorded {
+            out.push_str(&format!(
+                "\nprefix     : {}/{} hits ({:.0}%), {} prefill tokens saved, \
+                 {} cached / {} shared blocks, {} evicted",
+                self.prefix_hits,
+                self.prefix_lookups,
+                self.prefix_hit_rate * 100.0,
+                self.prefix_tokens_saved,
+                self.prefix_cached_blocks,
+                self.prefix_shared_blocks,
+                self.prefix_evictions
             ));
         }
         out
@@ -402,6 +488,59 @@ mod tests {
         assert!(rep.contains("kv pool"), "{rep}");
         assert!(!ServeStats::default().summary().report(0, 4).contains("kv pool"),
                 "no pool line for poolless backends");
+    }
+
+    #[test]
+    fn prefix_cache_counters_copy_through_and_gate_the_report_line() {
+        use crate::runtime::PrefixCacheStats;
+        let mut s = ServeStats::default();
+        assert!(!s.summary().prefix_recorded);
+        s.record_prefix_cache(&PrefixCacheStats {
+            lookups: 2,
+            hits: 1,
+            tokens_saved: 16,
+            evictions: 0,
+            cached_blocks: 3,
+            max_cached_blocks: 64,
+            shared_blocks: 1,
+        });
+        s.record_prefix_cache(&PrefixCacheStats {
+            lookups: 4,
+            hits: 3,
+            tokens_saved: 48,
+            evictions: 2,
+            cached_blocks: 5,
+            max_cached_blocks: 64,
+            shared_blocks: 2,
+        });
+        let sum = s.summary();
+        assert!(sum.prefix_recorded);
+        assert_eq!(sum.prefix_lookups, 4, "monotone counters copy through");
+        assert_eq!(sum.prefix_hits, 3);
+        assert!((sum.prefix_hit_rate - 0.75).abs() < 1e-12);
+        assert_eq!(sum.prefix_tokens_saved, 48);
+        assert_eq!(sum.prefix_evictions, 2);
+        assert_eq!(sum.prefix_cached_blocks, 5, "gauges show the latest snapshot");
+        assert_eq!(sum.prefix_shared_blocks, 2);
+        let rep = sum.report(0, 4);
+        assert!(rep.contains("prefix"), "{rep}");
+        assert!(rep.contains("3/4 hits (75%)"), "{rep}");
+        assert!(!ServeStats::default().summary().report(0, 4).contains("prefix"),
+                "no prefix line for cacheless backends");
+    }
+
+    #[test]
+    fn cancellations_stay_out_of_latency_windows() {
+        let mut s = ServeStats::default();
+        s.record_generation(10 * MS);
+        s.record_cancelled(2);
+        let sum = s.summary();
+        assert_eq!(sum.cancelled, 2);
+        assert_eq!(sum.served, 1, "cancellations are not served requests");
+        assert!((sum.p99_ms - 10.0).abs() < 1e-9, "quantiles untouched by cancels");
+        let rep = sum.report(1, 4);
+        assert!(rep.contains("2 requests cancelled"), "{rep}");
+        assert!(!ServeStats::default().summary().report(0, 4).contains("cancelled"));
     }
 
     #[test]

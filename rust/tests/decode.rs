@@ -466,6 +466,78 @@ fn f16_and_int8_planes_track_f32_within_pinned_tolerance() {
 }
 
 #[test]
+fn prefix_cache_hits_are_bit_identical_across_block_sizes_and_threads() {
+    let (dir, spec) = synth_dir("prefix_id", 49);
+    let mut rng = Rng::seed_from_u64(0xCAFE);
+    let base: Vec<i32> = (0..8).map(|_| rng.below(spec.vocab) as i32).collect();
+    // A prompt family mixing hits and misses: an exact repeat, a
+    // partial-prefix divergence, a disjoint miss, and a prompt shorter
+    // than the cached chain.
+    let prompts: Vec<Vec<i32>> = vec![
+        base.clone(),
+        base.clone(),
+        { let mut p = base[..5].to_vec(); p.extend_from_slice(&[1, 2, 3]); p },
+        (0..6).map(|_| rng.below(spec.vocab) as i32).collect(),
+        base[..3].to_vec(),
+    ];
+    for bt in [1usize, 3, 5, 16] {
+        for threads in [1usize, 4] {
+            let mut hm_off = host_model_with_kv(
+                &dir, threads,
+                KvPoolConfig { block_tokens: bt, ..KvPoolConfig::default() });
+            let mut hm_on = host_model_with_kv(
+                &dir, threads,
+                KvPoolConfig { block_tokens: bt, prefix_cache: Some(64),
+                               ..KvPoolConfig::default() });
+            let (mut y_off, mut y_on) = (Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+            let mut c_off: Vec<KvCache> = Vec::new();
+            let mut c_on: Vec<KvCache> = Vec::new();
+            let mut last: Vec<i32> = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                let mut c = hm_off.new_kv_cache();
+                hm_off.prefill_into(p, &mut c, &mut y_off).unwrap();
+                c_off.push(c);
+                let mut c = hm_on.new_kv_cache();
+                let saved = hm_on.prefill_into_saved(p, &mut c, &mut y_on).unwrap();
+                c_on.push(c);
+                assert_eq!(y_on.data, y_off.data,
+                           "bt {bt}, {threads} thr, prompt {i} (saved {saved}): \
+                            cache-hit prefill logits diverged");
+                last.push(argmax(y_off.row(0)));
+            }
+            // Mixed hit/miss batch, forced per-lane tokens so the two
+            // identical prompts diverge immediately: copy-on-write must
+            // keep every lane bitwise equal to the cache-off run.
+            for step in 0..4i32 {
+                let toks: Vec<i32> = (0..last.len() as i32)
+                    .map(|i| (i * 7 + step * 3 + 1) % spec.vocab as i32)
+                    .collect();
+                hm_off.decode_step_into(&toks, &mut c_off, &mut y_off).unwrap();
+                hm_on.decode_step_into(&toks, &mut c_on, &mut y_on).unwrap();
+                assert_eq!(y_on.data, y_off.data,
+                           "bt {bt}, {threads} thr, step {step}: shared-prefix \
+                            decode diverged from the cache-off run");
+            }
+            let st = hm_on.kv_pool().prefix_stats().unwrap();
+            assert_eq!(st.lookups, prompts.len() as u64,
+                       "every multi-token prompt consults the cache");
+            // The exact repeat shares whole blocks whenever one fits in
+            // its matchable 7-token prefix (every bt here but 16).
+            if bt < 8 {
+                assert!(st.hits >= 1 && st.tokens_saved > 0,
+                        "bt {bt}: repeat prompt must hit: {st:?}");
+            }
+            drop(c_on);
+            drop(c_off);
+            hm_on.kv_pool().clear_prefix_cache();
+            assert_eq!(hm_on.kv_pool().stats().blocks_in_use, 0,
+                       "bt {bt}: refcounts drained after drop + clear");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn pool_stress_interleaved_churn_recycles_every_block_and_stays_bitwise() {
     let (dir, spec) = synth_dir("stress", 47);
     let mut rng = Rng::seed_from_u64(0xACE);
@@ -556,6 +628,40 @@ fn pool_stress_interleaved_churn_recycles_every_block_and_stays_bitwise() {
     let ps = hm.kv_pool().stats();
     assert_eq!(ps.blocks_in_use, 0, "post-churn: pool fully drained");
     assert!(ps.blocks_recycled > 0);
+
+    // Prefix-cache churn: waves of repeated prompts over tiny blocks,
+    // every wave's prefills and decode pinned bitwise against a
+    // cache-off twin, and every shared refcount drained once the
+    // sequences drop and the cache is cleared.
+    let mut hm_pc = host_model_with_kv(
+        &dir, 2,
+        KvPoolConfig { block_tokens: 2, prefix_cache: Some(16),
+                       ..KvPoolConfig::default() });
+    let mut hm_ref = host_model_with_kv(
+        &dir, 2, KvPoolConfig { block_tokens: 2, ..KvPoolConfig::default() });
+    for wave in 0..3 {
+        let (mut y, mut yr) = (Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+        let mut caches: Vec<KvCache> = Vec::new();
+        let mut refs: Vec<KvCache> = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let mut c = hm_pc.new_kv_cache();
+            hm_pc.prefill_into(p, &mut c, &mut y).unwrap();
+            let mut cr = hm_ref.new_kv_cache();
+            hm_ref.prefill_into(p, &mut cr, &mut yr).unwrap();
+            assert_eq!(y.data, yr.data, "wave {wave}, prompt {i}: cached prefill diverged");
+            caches.push(c);
+            refs.push(cr);
+        }
+        let toks: Vec<i32> = (0..caches.len() as i32).collect();
+        hm_pc.decode_step_into(&toks, &mut caches, &mut y).unwrap();
+        hm_ref.decode_step_into(&toks, &mut refs, &mut yr).unwrap();
+        assert_eq!(y.data, yr.data, "wave {wave}: shared-prefix decode diverged");
+    }
+    let st = hm_pc.kv_pool().prefix_stats().unwrap();
+    assert!(st.hits > 0, "repeated waves must hit the prefix cache: {st:?}");
+    hm_pc.kv_pool().clear_prefix_cache();
+    assert_eq!(hm_pc.kv_pool().stats().blocks_in_use, 0,
+               "post-churn: every shared refcount drained");
 
     // Post-churn generations through recycled slots and blocks are
     // byte-identical to the churn-free reference.

@@ -111,8 +111,20 @@ def archive(args) -> int:
             "(kv/f32|f16|int8/batch{B}/step); "
             f"got kv dtypes {sorted(kv_dtypes)}"
         )
+    # The radix prefix cache adds an on/off pair (prefix/{on,off}/
+    # batch{B}/step): both sides must be archived so a cache-path
+    # regression is attributable — `on` drifting alone is a cache bug,
+    # both drifting together is the prefill math.
+    prefix = {c for c in serve_cases if c.startswith("prefix/")}
+    prefix_modes = {c.split("/")[1] for c in prefix if c.count("/") >= 2}
+    if not {"on", "off"} <= prefix_modes:
+        raise SystemExit(
+            "bench_serve must emit the prefix-cache pair "
+            "(prefix/on|off/batch{B}/step); "
+            f"got prefix modes {sorted(prefix_modes)}"
+        )
     print(f"bench_serve series: {len(kernel)} kernel-stack, {len(manifest)} manifest, "
-          f"{len(decode)} decode, {len(kv)} kv-dtype")
+          f"{len(decode)} decode, {len(kv)} kv-dtype, {len(prefix)} prefix-cache")
     # bench_train guards the native training hot path the same way: both
     # the sparse-phase and the lazy-phase step series must be present.
     train_cases = {r["case"] for r in rows if r["bench"] == "bench_train"}
