@@ -9,9 +9,9 @@
 //! per thread count.  Set `SLOPE_BENCH_JSON` for the machine-readable
 //! perf trajectory.
 
-use slope::backend::{gemm_nt_with, simd_level, spmm_rowmajor_with, spmm_rowmajor_with_at,
-                     ParallelPolicy, SimdLevel};
-use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
+use slope::backend::{gemm_nt_with, simd_level, spmm_prepacked_with_at, spmm_rowmajor_with,
+                     spmm_rowmajor_with_at, ParallelPolicy, SimdLevel};
+use slope::sparsity::{random_row_mask, CompressedNm, NmScheme, PrepackedNm};
 use slope::tensor::Matrix;
 use slope::util::bench::{bench_auto, black_box, emit_json, print_header};
 use slope::util::Rng;
@@ -78,8 +78,18 @@ fn main() {
         let auto = bench_auto("simd-auto", 120.0, || {
             black_box(spmm_rowmajor_with_at(simd_level(), black_box(&x), black_box(&c), &p1));
         });
+        // Prepacked fused plane at the same level/policy: isolates the
+        // register-blocked micro-tile + single-stream layout win over the
+        // per-dot compressed path (the output is pinned bit-identical, so
+        // any delta is pure layout/blocking, not arithmetic).
+        let pre = PrepackedNm::prepack(&c);
+        let prepacked = bench_auto("simd-prepacked", 120.0, || {
+            black_box(spmm_prepacked_with_at(simd_level(), black_box(&x), black_box(&pre),
+                                             &p1));
+        });
         emit_json("bench_spmm", &format!("simd/{name}/scalar"), 1, &scalar);
         emit_json("bench_spmm", &format!("simd/{name}/auto"), 1, &auto);
+        emit_json("bench_spmm", &format!("simd/{name}/prepacked"), 1, &prepacked);
         println!(
             "{:<28} {:>3} {:>12} {:>10.2}us {:>8.2}x {:>9}",
             format!("  simd {} vs scalar", simd_level()),
@@ -87,6 +97,15 @@ fn main() {
             "",
             auto.median_us(),
             scalar.median_ns / auto.median_ns,
+            ""
+        );
+        println!(
+            "{:<28} {:>3} {:>12} {:>10.2}us {:>8.2}x {:>9}",
+            "  prepacked vs compressed",
+            1,
+            "",
+            prepacked.median_us(),
+            auto.median_ns / prepacked.median_ns,
             ""
         );
     }

@@ -160,14 +160,33 @@ pub fn gemm_nt_acc_into_at(level: SimdLevel, a: &Matrix, b: &Matrix, c: &mut Mat
                     let arow = a.row(i);
                     // SAFETY: stripes of distinct tasks are disjoint.
                     let dst = unsafe { out.row_stripe(i, stripe.clone()) };
-                    for (local, j) in stripe.clone().enumerate() {
-                        // Same single-dot-per-element computation as the
-                        // row path ⇒ bit-identical results.
-                        dst[local] += dot_at(level, arow, b.row(j), k);
-                    }
+                    // Paired micro-tile over the stripe; per element the
+                    // computation equals the row path's single dot ⇒
+                    // bit-identical results regardless of stripe bounds.
+                    gemm_nt_cols_pair(level, arow, b, stripe.clone(), dst, k);
                 }
             });
         }
+    }
+}
+
+/// `dst[local] += a·b[j]ᵀ` for `j` in `stripe`, two output columns per
+/// pass through the [`dot2_at`] micro-tile (shared `a` loads); `dot2`'s
+/// per-output reduction is bitwise [`dot_at`]'s, so pairing — and where
+/// the pairing starts — cannot change any element.
+fn gemm_nt_cols_pair(level: SimdLevel, arow: &[f32], b: &Matrix, stripe: Range<usize>,
+                     dst: &mut [f32], k: usize) {
+    let mut j = stripe.start;
+    let mut local = 0;
+    while j + 2 <= stripe.end {
+        let (s0, s1) = dot2_at(level, arow, b.row(j), b.row(j + 1), k);
+        dst[local] += s0;
+        dst[local + 1] += s1;
+        j += 2;
+        local += 2;
+    }
+    if j < stripe.end {
+        dst[local] += dot_at(level, arow, b.row(j), k);
     }
 }
 
@@ -179,7 +198,18 @@ fn gemm_nt_rows(level: SimdLevel, a: &Matrix, b: &Matrix, range: Range<usize>, o
         let crow = &mut out[local * n..(local + 1) * n];
         for jb in (0..n).step_by(JB) {
             let jend = (jb + JB).min(n);
-            for j in jb..jend {
+            // Register-blocked pairing inside the JB block: two output
+            // columns share each `a` load (x86::dot2); odd remainder
+            // falls back to the single dot.  Bitwise identical to the
+            // unpaired loop by dot2's contract.
+            let mut j = jb;
+            while j + 2 <= jend {
+                let (s0, s1) = dot2_at(level, arow, b.row(j), b.row(j + 1), k);
+                crow[j] += s0;
+                crow[j + 1] += s1;
+                j += 2;
+            }
+            if j < jend {
                 crow[j] += dot_at(level, arow, b.row(j), k);
             }
         }
@@ -253,6 +283,24 @@ pub fn dot_at(level: SimdLevel, a: &[f32], b: &[f32], k: usize) -> f32 {
     #[cfg(not(target_arch = "x86_64"))]
     let _ = level;
     dot_scalar(a, b, k)
+}
+
+/// Two inner products sharing the `a` operand, at a (pre-clamped) level:
+/// the AVX2 micro-tile loads each `a` vector once for both outputs; the
+/// scalar twin is literally two [`dot_scalar`] calls.  Per output the
+/// result is bitwise [`dot_at`]'s — the property that lets `gemm_nt`
+/// pair its column loop without touching any determinism pin.
+#[inline]
+fn dot2_at(level: SimdLevel, a: &[f32], b0: &[f32], b1: &[f32], k: usize) -> (f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2 {
+        // SAFETY: callers only pass Avx2 after `effective` clamping at
+        // the kernel entry point.
+        return unsafe { simd::x86::dot2(a, b0, b1, k) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = level;
+    (dot_scalar(a, b0, k), dot_scalar(a, b1, k))
 }
 
 /// Reference 8-wide unrolled dot product (auto-vectorizes without FMA
@@ -383,6 +431,25 @@ mod tests {
         let mut ctn = Matrix::randn(12, 9, 1.0, &mut rng);
         gemm_tn_into(&a, &d, &mut ctn, &ParallelPolicy::with_threads(2));
         assert_eq!(ctn, gemm_tn(&a, &d));
+    }
+
+    #[test]
+    fn paired_dot_matches_single_bitwise() {
+        // dot2's whole contract: per output, bitwise equal to dot —
+        // across every remainder shape (chains / cleanup / scalar tail).
+        let mut rng = Rng::seed_from_u64(9);
+        for k in [1usize, 7, 8, 19, 31, 32, 33, 40, 64, 100] {
+            let a = Matrix::randn(1, k, 1.0, &mut rng);
+            let b = Matrix::randn(2, k, 1.0, &mut rng);
+            for level in [SimdLevel::Scalar, SimdLevel::Avx2] {
+                let level = simd::effective(level);
+                let (s0, s1) = dot2_at(level, a.row(0), b.row(0), b.row(1), k);
+                let d0 = dot_at(level, a.row(0), b.row(0), k);
+                let d1 = dot_at(level, a.row(0), b.row(1), k);
+                assert_eq!(s0.to_bits(), d0.to_bits(), "k={k} {level}");
+                assert_eq!(s1.to_bits(), d1.to_bits(), "k={k} {level}");
+            }
+        }
     }
 
     #[test]

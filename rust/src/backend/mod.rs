@@ -68,6 +68,47 @@
 //! level-split benches); levels are clamped to hardware capability, so
 //! requesting `Avx2` without AVX2 runs scalar rather than UB.
 //!
+//! ## Prepacked operand layout ([`crate::sparsity::prepacked`])
+//!
+//! [`CompressedNm`] keeps values and metadata in two planes, and the
+//! AVX2 gather-dot consults a 256-entry permute LUT per metadata byte.
+//! [`PrepackedNm`] fuses all three streams at **prepack time** — once
+//! per plane, not per SpMM: each 2:4 metadata byte is decoded into the
+//! `vpermps` lane indices the kernel needs and interleaved with the
+//! eight values it gathers for.  The 2:4 fused row, in `u32` slots
+//! (little-endian bytes):
+//!
+//! ```text
+//! per metadata-byte PAIR (16 dense cols):   10 slots
+//!   [ v0 v1 v2 v3 v4 v5 v6 v7 | i0₀ i0₁ i0₂ i0₃ | i1₀ i1₁ i1₂ i1₃ ]
+//!     8 × f32 (as bits)         slot 8: 4 lane    slot 9: 4 lane
+//!                               bytes for byte 0  bytes for byte 1
+//! [+ 5-slot unit (4 values + 1 lane slot) when the byte count is odd]
+//! [+ 3-slot unit (2 values + 1 offset slot) for a half-byte tail    ]
+//! ```
+//!
+//! Slots 8–9 are eight consecutive bytes: one `vpmovzxbd` widens them
+//! into the full permute index — no LUT in the loop.  Generic schemes
+//! (1:2, 2:8) append the raw packed metadata bytes after the row's
+//! values.  [`spmm_prepacked`] consumes the fused plane with
+//! register-blocked micro-tiles (four weight rows share each `x` window
+//! load; `gemm_nt` pairs output columns the same way via `x86::dot2`)
+//! whose per-element reduction order is **identical** to the
+//! compressed-plane kernels at the same level — so prepacked output is
+//! bit-identical to `spmm_rowmajor*`, across threads, partitions, and
+//! traversals, and all cross-level tolerance/small-integer pins carry
+//! over verbatim (`tests/simd_parity.rs`).
+//!
+//! Prepacking happens **once per plane version**: `HostModel` prepacks
+//! each pruned linear at `AotModel::open`/store ingest, `HostTrainModel`
+//! at build and on `HostExec`'s tracked-version rebuild, and the
+//! training loop refreshes only the value slots after in-place optimizer
+//! steps ([`PrepackedNm::refresh_values`] — the pattern is static, so
+//! index slots never change).  `SLOPE_PREPACK=off` disables the fused
+//! path process-wide (the compressed plane stays resident and remains
+//! the pinned ground truth; CI runs the parity suites both ways);
+//! `memmodel::prepacked_plane_bytes` charges the extra resident stream.
+//!
 //! # Packed metadata (Eq. 7 accounting)
 //!
 //! [`CompressedNm`] stores its index plane bit-packed: one intra-group
@@ -105,12 +146,13 @@ pub use gemm::{dot, dot_at, dot_scalar, gemm, gemm_into, gemm_into_at, gemm_nt, 
 pub use pool::{parallel_over_col_stripes, parallel_over_rows, spawned_thread_count,
                ParallelPolicy, Partition, PartitionStrategy, WorkerPool};
 pub use simd::{avx2_available, simd_level, SimdLevel};
-pub use spmm::{sparse_dot, sparse_dot_at, sparse_dot_scalar, spmm_rowmajor, spmm_rowmajor_into,
-               spmm_rowmajor_into_at, spmm_rowmajor_with, spmm_rowmajor_with_at, spmm_tiled,
-               spmm_tiled_into, spmm_tiled_into_at, spmm_tiled_with, spmm_tiled_with_at,
-               SpmmAlgo};
+pub use spmm::{sparse_dot, sparse_dot_at, sparse_dot_scalar, spmm_prepacked,
+               spmm_prepacked_into, spmm_prepacked_into_at, spmm_prepacked_with,
+               spmm_prepacked_with_at, spmm_rowmajor, spmm_rowmajor_into, spmm_rowmajor_into_at,
+               spmm_rowmajor_with, spmm_rowmajor_with_at, spmm_tiled, spmm_tiled_into,
+               spmm_tiled_into_at, spmm_tiled_with, spmm_tiled_with_at, SpmmAlgo};
 
-use crate::sparsity::{CompressedNm, Mask, NmScheme};
+use crate::sparsity::{CompressedNm, Mask, NmScheme, PrepackedNm};
 use crate::tensor::Matrix;
 
 /// Grow-once output buffer helper: (re)shape `buf` only when the target
@@ -317,6 +359,22 @@ pub fn lora_fused_seq(algo: SpmmAlgo, policy: &ParallelPolicy, w: &CompressedNm,
     ensure_out(y, x.rows, w.rows);
     ensure_out(t, x.rows, lo_down.rows);
     spmm_into_algo(algo, policy, x, w, y);
+    gemm_nt_into(x, lo_down, t, policy);
+    gemm_nt_acc_into(t, lo_up, y, policy);
+}
+
+/// [`lora_fused_seq`] over the fused prepacked plane — the serving
+/// executor's Eq.-11 hot path once a linear has been prepacked.  The
+/// SpMM streams the interleaved operand through the register-blocked
+/// micro-tiles; per element the reduction equals the compressed path's,
+/// so swapping planes is invisible to every output bit at a fixed level.
+/// (Prepacked SpMM is row-major only; the tiled §2.4 ablation keeps the
+/// compressed plane.)
+pub fn lora_fused_seq_pre(policy: &ParallelPolicy, w: &PrepackedNm, x: &Matrix, lo_up: &Matrix,
+                          lo_down: &Matrix, t: &mut Matrix, y: &mut Matrix) {
+    ensure_out(y, x.rows, w.rows);
+    ensure_out(t, x.rows, lo_down.rows);
+    spmm_prepacked_into(x, w, y, policy);
     gemm_nt_into(x, lo_down, t, policy);
     gemm_nt_acc_into(t, lo_up, y, policy);
 }

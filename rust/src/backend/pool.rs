@@ -149,6 +149,22 @@ impl ParallelPolicy {
         self.effective_threads().min(cap.max(1)).max(1)
     }
 
+    /// Batch-row tile height for a tiled traversal over `rows` rows,
+    /// capped at the caller's requested `tile` edge.  Matching the tile
+    /// height to the resolved task count (`ceil(rows / tasks)`) keeps a
+    /// narrow batch from being swallowed whole by one oversized tile —
+    /// with 13 rows, 4 workers, and a 64-edge tile the old fixed step
+    /// left the traversal's blocking useless and (with coarse
+    /// `min_rows_per_task`) work lumped onto few workers; the derived
+    /// height tracks how the pool will actually split the rows.  Purely
+    /// a traversal-order knob: every output element is an independent
+    /// reduction, so any tile height yields bit-identical results
+    /// (pinned against the fixed tiling in the spmm tests).
+    pub fn tile_rows(&self, rows: usize, tile: usize) -> usize {
+        let tasks = self.tasks_for(rows.max(1)).max(1);
+        rows.max(1).div_ceil(tasks).clamp(1, tile.max(1))
+    }
+
     /// Resolve the partition for an `out_rows × out_cols` kernel output.
     ///
     /// `Auto` prefers the row split (contiguous writes) whenever it can

@@ -40,6 +40,29 @@
 //!   of the metadata decode sparse tensor cores do in hardware, and the
 //!   same trick powers the row-compressed double-pruned transpose SpMM
 //!   (Eq.-6 BWD-2) because that operand is just another `CompressedNm`.
+//!
+//! # Prepacked micro-tiles
+//!
+//! The fused [`crate::sparsity::PrepackedNm`] layout stores each row's
+//! values interleaved with its *pre-decoded* `vpermps` lane indices (the
+//! `IDX24` entry, computed once at prepack time), so the prepacked
+//! kernels read one forward-moving stream and never touch the LUT:
+//!
+//! * [`x86::sparse_dot24_pre`] — per-dot over the fused stream.  One
+//!   `vpmovzxbd` widens the eight stored lane bytes into the full
+//!   permute index; permuting **both** windows by it and blending
+//!   (`0b1111_0000`) produces the exact register `sparse_dot24` builds
+//!   with its two LUT loads + `insertf128`, so results are bitwise
+//!   identical to the compressed-plane kernel.
+//! * [`x86::spmm_pre24_x4`] — the register-blocked SpMM micro-tile: four
+//!   weight rows against one `x` row, sharing each 16-float window load
+//!   (and the decode traffic it represents) across all four outputs —
+//!   4×-amortized operand loads, eight live accumulator chains.  Each
+//!   output's reduction replays `sparse_dot24_pre` exactly, so tiling
+//!   changes nothing bitwise.
+//! * [`x86::dot2`] — the dense `gemm_nt` micro-tile: one `a` row against
+//!   two `b` rows, sharing every `a` load across both outputs; each
+//!   output's chains/cleanup/tail replay [`x86::dot`] exactly.
 
 use std::sync::OnceLock;
 
@@ -309,6 +332,196 @@ pub(crate) mod x86 {
             s = (*px.add(base + d[1] as usize)).mul_add(*pv.add(k + 1), s);
         }
         s
+    }
+
+    /// 2:4 gather-dot over one **prepacked** weight row (`PrepackedNm`
+    /// fused stream): per 10-slot byte-pair unit, widen the eight stored
+    /// lane bytes (`vpmovzxbd`) into the permute index, gather from both
+    /// 8-float half-windows, blend, and FMA against the unit's eight
+    /// contiguous values — no LUT access, one stream.  The blended
+    /// register is bitwise the one [`sparse_dot24`] builds (low half =
+    /// byte 0's gather, high half = byte 1's; the stored lanes carry byte
+    /// 1's indices in positions 4..8), the accumulator parity matches
+    /// (`byte % 4`), and the trailing-byte / half-byte tails replay the
+    /// same `mul_add` sequence — so prepacked output is **bit-identical**
+    /// to the compressed-plane kernel.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime.  `row` must be a `PrepackedNm` 2:4
+    /// fused row for `kc` kept values (`row.len() == row_stride_for`),
+    /// and `xrow` must cover the dense columns, as for [`sparse_dot24`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sparse_dot24_pre(xrow: &[f32], row: &[u32], kc: usize) -> f32 {
+        let pairs = kc / 4;
+        let px = xrow.as_ptr();
+        let ps = row.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut slot = 0;
+        let mut byte = 0;
+        while byte + 2 <= pairs {
+            let w0 = _mm256_loadu_ps(px.add(byte * 8));
+            let w1 = _mm256_loadu_ps(px.add(byte * 8 + 8));
+            let idx = _mm256_cvtepu8_epi32(_mm_loadl_epi64(ps.add(slot + 8) as *const __m128i));
+            let g0 = _mm256_permutevar8x32_ps(w0, idx);
+            let g1 = _mm256_permutevar8x32_ps(w1, idx);
+            let gathered = _mm256_blend_ps::<0b1111_0000>(g0, g1);
+            let v = _mm256_loadu_ps(ps.add(slot) as *const f32);
+            if byte % 4 == 0 {
+                acc0 = _mm256_fmadd_ps(gathered, v, acc0);
+            } else {
+                acc1 = _mm256_fmadd_ps(gathered, v, acc1);
+            }
+            slot += 10;
+            byte += 2;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        let mut k = byte * 4;
+        let mut base = byte * 8;
+        // At most one full trailing byte (odd `pairs`): a 5-slot unit.
+        if byte < pairs {
+            let l = (*ps.add(slot + 4)).to_le_bytes();
+            s = (*px.add(base + l[0] as usize)).mul_add(f32::from_bits(*ps.add(slot)), s);
+            s = (*px.add(base + l[1] as usize)).mul_add(f32::from_bits(*ps.add(slot + 1)), s);
+            s = (*px.add(base + l[2] as usize)).mul_add(f32::from_bits(*ps.add(slot + 2)), s);
+            s = (*px.add(base + l[3] as usize)).mul_add(f32::from_bits(*ps.add(slot + 3)), s);
+            slot += 5;
+            k += 4;
+            base += 8;
+        }
+        // Half-byte tail (odd group count): a 3-slot unit, two offsets.
+        if k < kc {
+            let l = (*ps.add(slot + 2)).to_le_bytes();
+            s = (*px.add(base + l[0] as usize)).mul_add(f32::from_bits(*ps.add(slot)), s);
+            s = (*px.add(base + l[1] as usize)).mul_add(f32::from_bits(*ps.add(slot + 1)), s);
+        }
+        s
+    }
+
+    /// Register-blocked 2:4 SpMM micro-tile over prepacked rows: four
+    /// weight rows × one `x` row.  Each 16-float window of `x` is loaded
+    /// **once** and consumed by all four outputs (4×-amortized operand
+    /// traffic vs. four per-dot calls), with eight live accumulator
+    /// chains (even/odd unit per output).  Per output the reduction is
+    /// exactly [`sparse_dot24_pre`] — same chains, same parity, same
+    /// tails — so the tile is bitwise a transparent batching and every
+    /// partition/traversal bitwise pin carries over.
+    ///
+    /// Writes `out[0..4]`.
+    ///
+    /// # Safety
+    /// Same requirements as [`sparse_dot24_pre`] for each of the four
+    /// rows (all share `kc`); `out` must hold at least 4 elements.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmm_pre24_x4(xrow: &[f32], rows: [&[u32]; 4], kc: usize, out: &mut [f32]) {
+        let pairs = kc / 4;
+        let px = xrow.as_ptr();
+        let prs = [rows[0].as_ptr(), rows[1].as_ptr(), rows[2].as_ptr(), rows[3].as_ptr()];
+        let mut acc0 = [_mm256_setzero_ps(); 4];
+        let mut acc1 = [_mm256_setzero_ps(); 4];
+        let mut slot = 0;
+        let mut byte = 0;
+        while byte + 2 <= pairs {
+            let w0 = _mm256_loadu_ps(px.add(byte * 8));
+            let w1 = _mm256_loadu_ps(px.add(byte * 8 + 8));
+            for e in 0..4 {
+                let ps = prs[e];
+                let idx =
+                    _mm256_cvtepu8_epi32(_mm_loadl_epi64(ps.add(slot + 8) as *const __m128i));
+                let g0 = _mm256_permutevar8x32_ps(w0, idx);
+                let g1 = _mm256_permutevar8x32_ps(w1, idx);
+                let gathered = _mm256_blend_ps::<0b1111_0000>(g0, g1);
+                let v = _mm256_loadu_ps(ps.add(slot) as *const f32);
+                if byte % 4 == 0 {
+                    acc0[e] = _mm256_fmadd_ps(gathered, v, acc0[e]);
+                } else {
+                    acc1[e] = _mm256_fmadd_ps(gathered, v, acc1[e]);
+                }
+            }
+            slot += 10;
+            byte += 2;
+        }
+        for e in 0..4 {
+            let ps = prs[e];
+            let mut s = hsum(_mm256_add_ps(acc0[e], acc1[e]));
+            let mut sl = slot;
+            let mut k = byte * 4;
+            let mut base = byte * 8;
+            if byte < pairs {
+                let l = (*ps.add(sl + 4)).to_le_bytes();
+                s = (*px.add(base + l[0] as usize)).mul_add(f32::from_bits(*ps.add(sl)), s);
+                s = (*px.add(base + l[1] as usize)).mul_add(f32::from_bits(*ps.add(sl + 1)), s);
+                s = (*px.add(base + l[2] as usize)).mul_add(f32::from_bits(*ps.add(sl + 2)), s);
+                s = (*px.add(base + l[3] as usize)).mul_add(f32::from_bits(*ps.add(sl + 3)), s);
+                sl += 5;
+                k += 4;
+                base += 8;
+            }
+            if k < kc {
+                let l = (*ps.add(sl + 2)).to_le_bytes();
+                s = (*px.add(base + l[0] as usize)).mul_add(f32::from_bits(*ps.add(sl)), s);
+                s = (*px.add(base + l[1] as usize)).mul_add(f32::from_bits(*ps.add(sl + 1)), s);
+            }
+            out[e] = s;
+        }
+    }
+
+    /// Register-blocked dense micro-tile: one `a` row against two `b`
+    /// rows, sharing every `a` load across both outputs (halved operand
+    /// traffic in `gemm_nt`'s j-loop).  Each output runs [`dot`]'s exact
+    /// reduction — 4 chains, 8-wide cleanup, fixed-tree `hsum`, scalar
+    /// `mul_add` tail — so `dot2(a, b0, b1, k) == (dot(a, b0, k),
+    /// dot(a, b1, k))` bitwise, and pairing the loop is invisible to
+    /// every determinism pin.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime; `a`, `b0`, `b1` must each hold at
+    /// least `k` elements.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot2(a: &[f32], b0: &[f32], b1: &[f32], k: usize) -> (f32, f32) {
+        debug_assert!(a.len() >= k && b0.len() >= k && b1.len() >= k);
+        let (pa, p0, p1) = (a.as_ptr(), b0.as_ptr(), b1.as_ptr());
+        let mut a00 = _mm256_setzero_ps();
+        let mut a01 = _mm256_setzero_ps();
+        let mut a02 = _mm256_setzero_ps();
+        let mut a03 = _mm256_setzero_ps();
+        let mut a10 = _mm256_setzero_ps();
+        let mut a11 = _mm256_setzero_ps();
+        let mut a12 = _mm256_setzero_ps();
+        let mut a13 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 32 <= k {
+            let av0 = _mm256_loadu_ps(pa.add(i));
+            let av1 = _mm256_loadu_ps(pa.add(i + 8));
+            let av2 = _mm256_loadu_ps(pa.add(i + 16));
+            let av3 = _mm256_loadu_ps(pa.add(i + 24));
+            a00 = _mm256_fmadd_ps(av0, _mm256_loadu_ps(p0.add(i)), a00);
+            a01 = _mm256_fmadd_ps(av1, _mm256_loadu_ps(p0.add(i + 8)), a01);
+            a02 = _mm256_fmadd_ps(av2, _mm256_loadu_ps(p0.add(i + 16)), a02);
+            a03 = _mm256_fmadd_ps(av3, _mm256_loadu_ps(p0.add(i + 24)), a03);
+            a10 = _mm256_fmadd_ps(av0, _mm256_loadu_ps(p1.add(i)), a10);
+            a11 = _mm256_fmadd_ps(av1, _mm256_loadu_ps(p1.add(i + 8)), a11);
+            a12 = _mm256_fmadd_ps(av2, _mm256_loadu_ps(p1.add(i + 16)), a12);
+            a13 = _mm256_fmadd_ps(av3, _mm256_loadu_ps(p1.add(i + 24)), a13);
+            i += 32;
+        }
+        while i + 8 <= k {
+            let av = _mm256_loadu_ps(pa.add(i));
+            a00 = _mm256_fmadd_ps(av, _mm256_loadu_ps(p0.add(i)), a00);
+            a10 = _mm256_fmadd_ps(av, _mm256_loadu_ps(p1.add(i)), a10);
+            i += 8;
+        }
+        let r0 = _mm256_add_ps(_mm256_add_ps(a00, a01), _mm256_add_ps(a02, a03));
+        let r1 = _mm256_add_ps(_mm256_add_ps(a10, a11), _mm256_add_ps(a12, a13));
+        let mut s0 = hsum(r0);
+        let mut s1 = hsum(r1);
+        while i < k {
+            let av = *pa.add(i);
+            s0 = av.mul_add(*p0.add(i), s0);
+            s1 = av.mul_add(*p1.add(i), s1);
+            i += 1;
+        }
+        (s0, s1)
     }
 }
 

@@ -36,11 +36,23 @@
 //! bit-identical-across-threads contract holds at **both** levels;
 //! `Avx2` vs `Scalar` agree to tight tolerance (FMA reassociation) and
 //! bitwise on small-integer inputs (`tests/simd_parity.rs`).
+//!
+//! The [`spmm_prepacked`] family runs the same contract over the fused
+//! [`PrepackedNm`] operand ([`crate::sparsity::prepacked`]): values
+//! interleaved with pre-decoded permute lanes in one stream, consumed on
+//! AVX2 by the register-blocked four-row micro-tile
+//! ([`crate::backend::simd::x86::spmm_pre24_x4`] — each `x` window
+//! loaded once for four outputs) and on scalar by fused-stream twins of
+//! the table-driven blocks.  At a given level every output element's
+//! reduction order is **identical** to the compressed-plane kernel's, so
+//! prepacked output is bit-identical to `spmm_rowmajor*` — across
+//! threads, partitions, and traversals (pinned in `tests/simd_parity.rs`).
 
 use crate::backend::pool::{parallel_over_col_stripes, parallel_over_rows, ParallelPolicy,
                            Partition, StripedOut};
 use crate::backend::simd::{self, SimdLevel};
-use crate::sparsity::{compressed::unpack_offset, CompressedNm};
+use crate::sparsity::prepacked::unpack_offset_slots;
+use crate::sparsity::{compressed::unpack_offset, CompressedNm, PrepackedNm};
 use crate::tensor::Matrix;
 use std::ops::Range;
 
@@ -290,6 +302,247 @@ fn spmm_row_block24(xrow: &[f32], w: &CompressedNm, orange: Range<usize>, out: &
     }
 }
 
+// ---- prepacked --------------------------------------------------------
+
+/// SpMM over the fused prepacked plane, serial.
+pub fn spmm_prepacked(x: &Matrix, w: &PrepackedNm) -> Matrix {
+    spmm_prepacked_with(x, w, &ParallelPolicy::serial())
+}
+
+/// Prepacked SpMM, parallel per the policy's partition strategy.
+pub fn spmm_prepacked_with(x: &Matrix, w: &PrepackedNm, policy: &ParallelPolicy) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, w.rows);
+    spmm_prepacked_into(x, w, &mut y, policy);
+    y
+}
+
+/// Allocating prepacked SpMM at an explicit [`SimdLevel`].
+pub fn spmm_prepacked_with_at(level: SimdLevel, x: &Matrix, w: &PrepackedNm,
+                              policy: &ParallelPolicy) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, w.rows);
+    spmm_prepacked_into_at(level, x, w, &mut y, policy);
+    y
+}
+
+/// Prepacked SpMM into a caller-owned output (overwritten) at the
+/// process-wide level.
+pub fn spmm_prepacked_into(x: &Matrix, w: &PrepackedNm, y: &mut Matrix,
+                           policy: &ParallelPolicy) {
+    spmm_prepacked_into_at(simd::simd_level(), x, w, y, policy);
+}
+
+/// Prepacked SpMM at an explicit [`SimdLevel`] (clamped to hardware).
+/// Partitioning mirrors [`spmm_rowmajor_into_at`] exactly — same
+/// `resolve`, same row split, same quad-aligned column stripes — and the
+/// per-element reduction at a given level is identical to the
+/// compressed-plane kernel's, so output is bit-identical to
+/// `spmm_rowmajor*` for any thread count or partition.
+pub fn spmm_prepacked_into_at(level: SimdLevel, x: &Matrix, w: &PrepackedNm, y: &mut Matrix,
+                              policy: &ParallelPolicy) {
+    let level = simd::effective(level);
+    assert_eq!(x.cols, w.cols, "spmm: x cols must equal dense weight cols");
+    assert_eq!((y.rows, y.cols), (x.rows, w.rows), "spmm output shape");
+    match policy.resolve(x.rows, w.rows) {
+        Partition::Serial => spmm_prepacked_rows(level, x, w, 0..x.rows, &mut y.data),
+        Partition::Rows(_) => {
+            parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
+                spmm_prepacked_rows(level, x, w, range, chunk);
+            });
+        }
+        Partition::Cols(tasks) => {
+            let out = StripedOut::new(&mut y.data, w.rows);
+            parallel_over_col_stripes(tasks, w.rows, |stripe| {
+                for b in 0..x.rows {
+                    // SAFETY: this task's stripe is disjoint from every
+                    // other task's (pool partition contract).
+                    let dst = unsafe { out.row_stripe(b, stripe.clone()) };
+                    spmm_pre_row_block(level, x.row(b), w, stripe.clone(), dst);
+                }
+            });
+        }
+    }
+}
+
+fn spmm_prepacked_rows(level: SimdLevel, x: &Matrix, w: &PrepackedNm, range: Range<usize>,
+                       out: &mut [f32]) {
+    for (local, b) in range.enumerate() {
+        let yrow = &mut out[local * w.rows..(local + 1) * w.rows];
+        spmm_pre_row_block(level, x.row(b), w, 0..w.rows, yrow);
+    }
+}
+
+/// One batch row's outputs for prepacked weight rows `orange` — the
+/// fused-stream counterpart of [`spmm_row_block`].  AVX2 2:4 runs the
+/// four-row register-blocked micro-tile with a per-dot remainder;
+/// everything else runs the scalar fused-stream twins.  Per element the
+/// reduction order equals the compressed path's at the same level.
+#[inline]
+fn spmm_pre_row_block(level: SimdLevel, xrow: &[f32], w: &PrepackedNm, orange: Range<usize>,
+                      out: &mut [f32]) {
+    if w.is_fused24() {
+        #[cfg(target_arch = "x86_64")]
+        if level == SimdLevel::Avx2 {
+            let kc = w.kcols();
+            let len = orange.len();
+            let quads = len / 4 * 4;
+            let mut i = 0;
+            while i < quads {
+                let o = orange.start + i;
+                // SAFETY: `effective` verified AVX2+FMA before this level
+                // could be selected; each `row(o)` is a full fused row.
+                unsafe {
+                    simd::x86::spmm_pre24_x4(
+                        xrow,
+                        [w.row(o), w.row(o + 1), w.row(o + 2), w.row(o + 3)],
+                        kc,
+                        &mut out[i..i + 4],
+                    );
+                }
+                i += 4;
+            }
+            for i in quads..len {
+                let o = orange.start + i;
+                // SAFETY: as above.
+                out[i] = unsafe { simd::x86::sparse_dot24_pre(xrow, w.row(o), kc) };
+            }
+            return;
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = level;
+        spmm_pre_row_block24_scalar(xrow, w, orange, out);
+    } else {
+        spmm_pre_row_block_generic(xrow, w, orange, out);
+    }
+}
+
+/// Scalar twin of the 2:4 prepacked block: four weight rows per pass
+/// (independent accumulators = gather-stream ILP, mirroring
+/// [`spmm_row_block24`]), decoding the stored lane bytes instead of the
+/// LUT.  Lanes 2/3 carry the +4 window bias from prepack time, so per
+/// element the adds replay [`sparse_dot24`]'s k-ascending order exactly
+/// — bit-identical to the compressed scalar path.
+fn spmm_pre_row_block24_scalar(xrow: &[f32], w: &PrepackedNm, orange: Range<usize>,
+                               out: &mut [f32]) {
+    let len = orange.len();
+    let quads = len / 4 * 4;
+    let mut i = 0;
+    while i < quads {
+        let o = orange.start + i;
+        let rows = [w.row(o), w.row(o + 1), w.row(o + 2), w.row(o + 3)];
+        let mut acc = [0.0f32; 4];
+        for (a, row) in acc.iter_mut().zip(rows) {
+            *a = sparse_dot24_pre_scalar(xrow, row, w.kcols());
+        }
+        out[i..i + 4].copy_from_slice(&acc);
+        i += 4;
+    }
+    for i in quads..len {
+        let o = orange.start + i;
+        out[i] = sparse_dot24_pre_scalar(xrow, w.row(o), w.kcols());
+    }
+}
+
+/// Generic-scheme prepacked block (1:2, 2:8, …): the packed metadata
+/// bytes ride behind the row's values in the same stream; decode with
+/// the same bit arithmetic as the compressed path, four rows per pass.
+/// Per element this is [`sparse_dot_scalar`]'s group-ascending order —
+/// bit-identical at every level (the generic scheme has no AVX2 kernel
+/// on the compressed path either).
+fn spmm_pre_row_block_generic(xrow: &[f32], w: &PrepackedNm, orange: Range<usize>,
+                              out: &mut [f32]) {
+    let kc = w.kcols();
+    let (n, m) = (w.scheme.n, w.scheme.m);
+    let bits = w.scheme.offset_bits();
+    let groups = if n == 0 { 0 } else { kc / n };
+    let len = orange.len();
+    let quads = len / 4 * 4;
+    let mut i = 0;
+    while i < quads {
+        let o = orange.start + i;
+        let rows = [w.row(o), w.row(o + 1), w.row(o + 2), w.row(o + 3)];
+        let metas = [&rows[0][kc..], &rows[1][kc..], &rows[2][kc..], &rows[3][kc..]];
+        let mut acc = [0.0f32; 4];
+        let mut k = 0;
+        let mut base = 0;
+        for _ in 0..groups {
+            for j in 0..n {
+                for e in 0..4 {
+                    acc[e] += xrow[base + unpack_offset_slots(metas[e], k + j, bits)]
+                        * f32::from_bits(rows[e][k + j]);
+                }
+            }
+            k += n;
+            base += m;
+        }
+        out[i..i + 4].copy_from_slice(&acc);
+        i += 4;
+    }
+    for i in quads..len {
+        let o = orange.start + i;
+        out[i] = sparse_dot_pre_scalar(xrow, w.row(o), kc, n, m, bits);
+    }
+}
+
+/// Per-dot scalar reference over one fused 2:4 row — the k-ascending add
+/// order of [`sparse_dot24`], reading values and (pre-biased) lane bytes
+/// from the interleaved stream.
+fn sparse_dot24_pre_scalar(xrow: &[f32], row: &[u32], kc: usize) -> f32 {
+    let pairs = kc / 4;
+    let mut s = 0.0f32;
+    let mut slot = 0;
+    let mut byte = 0;
+    let mut base = 0;
+    while byte + 2 <= pairs {
+        for half in 0..2 {
+            let l = row[slot + 8 + half].to_le_bytes();
+            let v = &row[slot + half * 4..slot + half * 4 + 4];
+            s += xrow[base + l[0] as usize] * f32::from_bits(v[0]);
+            s += xrow[base + l[1] as usize] * f32::from_bits(v[1]);
+            s += xrow[base + l[2] as usize] * f32::from_bits(v[2]);
+            s += xrow[base + l[3] as usize] * f32::from_bits(v[3]);
+            base += 8;
+        }
+        slot += 10;
+        byte += 2;
+    }
+    if byte < pairs {
+        let l = row[slot + 4].to_le_bytes();
+        s += xrow[base + l[0] as usize] * f32::from_bits(row[slot]);
+        s += xrow[base + l[1] as usize] * f32::from_bits(row[slot + 1]);
+        s += xrow[base + l[2] as usize] * f32::from_bits(row[slot + 2]);
+        s += xrow[base + l[3] as usize] * f32::from_bits(row[slot + 3]);
+        slot += 5;
+        base += 8;
+    }
+    if kc % 4 == 2 {
+        let l = row[slot + 2].to_le_bytes();
+        s += xrow[base + l[0] as usize] * f32::from_bits(row[slot]);
+        s += xrow[base + l[1] as usize] * f32::from_bits(row[slot + 1]);
+    }
+    s
+}
+
+/// Per-dot scalar reference over one fused generic-scheme row:
+/// [`sparse_dot_scalar`]'s exact traversal with operands drawn from the
+/// interleaved stream.
+fn sparse_dot_pre_scalar(xrow: &[f32], row: &[u32], kc: usize, n: usize, m: usize,
+                         bits: u32) -> f32 {
+    let meta = &row[kc..];
+    let groups = if n == 0 { 0 } else { kc / n };
+    let mut s = 0.0f32;
+    let mut k = 0;
+    let mut base = 0;
+    for _ in 0..groups {
+        for j in 0..n {
+            s += xrow[base + unpack_offset_slots(meta, k + j, bits)]
+                * f32::from_bits(row[k + j]);
+        }
+        k += n;
+        base += m;
+    }
+    s
+}
+
 // ---- tiled ------------------------------------------------------------
 
 /// Square-tiled traversal (paper §2.4 / Appendix E), serial.
@@ -326,23 +579,32 @@ pub fn spmm_tiled_into(x: &Matrix, w: &CompressedNm, tile: usize, y: &mut Matrix
 }
 
 /// Tiled SpMM at an explicit [`SimdLevel`] (clamped to hardware).
+///
+/// The **weight-row** tile edge is the caller's `tile` (the §2.4
+/// ablation knob), but the **batch-row** step is derived from the
+/// resolved policy ([`ParallelPolicy::tile_rows`]): a narrow batch under
+/// a wide fixed tile used to collapse the traversal's row blocking
+/// entirely, so the step now tracks how the pool splits the rows.  Tile
+/// geometry only reorders whole elements — the derived tiling is pinned
+/// bit-identical to the old fixed tiling in the tests below.
 pub fn spmm_tiled_into_at(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: usize,
                           y: &mut Matrix, policy: &ParallelPolicy) {
     let level = simd::effective(level);
     assert_eq!(x.cols, w.cols);
     assert_eq!((y.rows, y.cols), (x.rows, w.rows), "spmm output shape");
     assert!(tile > 0);
+    let btile = policy.tile_rows(x.rows, tile);
     match policy.resolve(x.rows, w.rows) {
-        Partition::Serial => spmm_tiled_rows(level, x, w, tile, 0..x.rows, &mut y.data),
+        Partition::Serial => spmm_tiled_rows(level, x, w, btile, tile, 0..x.rows, &mut y.data),
         Partition::Rows(_) => {
             parallel_over_rows(policy, &mut y.data, w.rows, |range, chunk| {
-                spmm_tiled_rows(level, x, w, tile, range, chunk);
+                spmm_tiled_rows(level, x, w, btile, tile, range, chunk);
             });
         }
         Partition::Cols(tasks) => {
             let out = StripedOut::new(&mut y.data, w.rows);
             parallel_over_col_stripes(tasks, w.rows, |stripe| {
-                spmm_tiled_cols(level, x, w, tile, stripe, &out);
+                spmm_tiled_cols(level, x, w, btile, tile, stripe, &out);
             });
         }
     }
@@ -354,11 +616,11 @@ pub fn spmm_tiled_into_at(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: 
 /// `spmm_rowmajor`.  Per element nothing changed: at a given level the
 /// block computes exactly the per-element reduction the old inline loop
 /// did, so tiled stays bitwise equal to row-major.
-fn spmm_tiled_rows(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: usize,
+fn spmm_tiled_rows(level: SimdLevel, x: &Matrix, w: &CompressedNm, btile: usize, tile: usize,
                    range: Range<usize>, out: &mut [f32]) {
     let rows = range.len();
-    for bt in (0..rows).step_by(tile) {
-        let bend = (bt + tile).min(rows);
+    for bt in (0..rows).step_by(btile) {
+        let bend = (bt + btile).min(rows);
         for ot in (0..w.rows).step_by(tile) {
             let oend = (ot + tile).min(w.rows);
             for local in bt..bend {
@@ -372,10 +634,10 @@ fn spmm_tiled_rows(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: usize,
 
 /// Column-striped tiled traversal: tile batch rows against this task's
 /// stripe of weight rows, writing only inside the stripe.
-fn spmm_tiled_cols(level: SimdLevel, x: &Matrix, w: &CompressedNm, tile: usize,
+fn spmm_tiled_cols(level: SimdLevel, x: &Matrix, w: &CompressedNm, btile: usize, tile: usize,
                    stripe: Range<usize>, out: &StripedOut) {
-    for bt in (0..x.rows).step_by(tile) {
-        let bend = (bt + tile).min(x.rows);
+    for bt in (0..x.rows).step_by(btile) {
+        let bend = (bt + btile).min(x.rows);
         for ot in (stripe.start..stripe.end).step_by(tile) {
             let oend = (ot + tile).min(stripe.end);
             for b in bt..bend {
@@ -543,6 +805,70 @@ mod tests {
             assert_eq!(p.resolve(x.rows, w.rows), Partition::Cols(threads.min(53 / 8)));
             assert_eq!(spmm_rowmajor_with(&x, &c, &p), serial, "t={threads}");
             assert_eq!(spmm_tiled_with(&x, &c, 8, &p), spmm_tiled(&x, &c, 8), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn derived_batch_tiling_matches_fixed_and_rowmajor() {
+        // Narrow batches under wide tiles: the policy-derived batch step
+        // (`tile_rows`) must change nothing bitwise — tiled stays exact
+        // vs. row-major (the pre-change fixed tiling equalled row-major
+        // by the same argument, so this transitively pins old == new).
+        let mut rng = Rng::seed_from_u64(7);
+        for rows in [1usize, 3, 5, 13] {
+            let x = Matrix::randn(rows, 32, 1.0, &mut rng);
+            let w = Matrix::randn(29, 32, 1.0, &mut rng);
+            let mask = random_row_mask(29, 32, NmScheme::TWO_FOUR, &mut rng);
+            let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+            let want = spmm_rowmajor(&x, &c);
+            for tile in [8usize, 64] {
+                assert_eq!(spmm_tiled(&x, &c, tile), want, "serial rows={rows} tile={tile}");
+                for threads in [2usize, 4] {
+                    let p =
+                        ParallelPolicy { threads, min_rows_per_task: 1,
+                                         partition: PartitionStrategy::Auto };
+                    assert_eq!(spmm_tiled_with(&x, &c, tile, &p), want,
+                               "rows={rows} tile={tile} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_rows_tracks_worker_count() {
+        let p = ParallelPolicy { threads: 4, min_rows_per_task: 1,
+                                 partition: PartitionStrategy::Auto };
+        // 13 rows / 4 tasks → ceil = 4; capped by the requested tile.
+        assert_eq!(p.tile_rows(13, 64), 4);
+        assert_eq!(p.tile_rows(13, 2), 2);
+        assert_eq!(p.tile_rows(1, 64), 1);
+        // Serial policy: one task owns all rows, tile cap applies.
+        assert_eq!(ParallelPolicy::serial().tile_rows(100, 16), 16);
+    }
+
+    #[test]
+    fn prepacked_matches_compressed_bitwise_all_partitions() {
+        let mut rng = Rng::seed_from_u64(8);
+        for (n, m) in [(1usize, 2usize), (2, 4), (2, 8)] {
+            let s = NmScheme::new(n, m);
+            let x = Matrix::randn(5, 5 * m, 1.0, &mut rng);
+            let w = Matrix::randn(37, 5 * m, 1.0, &mut rng);
+            let mask = random_row_mask(37, 5 * m, s, &mut rng);
+            let c = CompressedNm::compress(&w, &mask, s);
+            let p = crate::sparsity::PrepackedNm::prepack(&c);
+            for level in [SimdLevel::Scalar, SimdLevel::Avx2] {
+                let want = spmm_rowmajor_with_at(level, &x, &c, &ParallelPolicy::serial());
+                for threads in [1usize, 4] {
+                    for strategy in [PartitionStrategy::Auto, PartitionStrategy::Rows,
+                                     PartitionStrategy::Cols]
+                    {
+                        let pol = ParallelPolicy { threads, min_rows_per_task: 1,
+                                                   partition: strategy };
+                        assert_eq!(spmm_prepacked_with_at(level, &x, &p, &pol), want,
+                                   "{s} {level} t={threads} {strategy:?}");
+                    }
+                }
+            }
         }
     }
 

@@ -44,11 +44,13 @@
 
 use crate::backend::gemm::dot;
 use crate::backend::{ensure_out, gemm_nt_acc_into, gemm_nt_into, lora_fused_seq,
-                     spmm_rowmajor_into, ParallelPolicy, SpmmAlgo};
+                     lora_fused_seq_pre, spmm_prepacked_into, spmm_rowmajor_into,
+                     ParallelPolicy, SpmmAlgo};
 use crate::coordinator::checkpoint;
 use crate::runtime::kvpool::{KvBlockPool, KvCache, KvLayerView, KvPoolConfig};
 use crate::runtime::{Manifest, Store};
-use crate::sparsity::{random_row_mask, CompressedNm, Mask, NmScheme};
+use crate::sparsity::{prepack_enabled, random_row_mask, CompressedNm, Mask, NmScheme,
+                      PrepackedNm};
 use crate::tensor::Matrix;
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -67,14 +69,25 @@ struct HostLinear {
 
 enum HostWeight {
     Dense(Matrix),
-    Sparse(CompressedNm),
+    /// Packed N:M plane, plus the fused prepacked stream built once at
+    /// model open/ingest (`None` under `SLOPE_PREPACK=off`).  Forward
+    /// streams `pre` when present — bit-identical to the compressed
+    /// path at the same SIMD level, so the toggle never changes output.
+    Sparse { c: CompressedNm, pre: Option<PrepackedNm> },
+}
+
+/// Wrap a packed plane as a host weight, prepacking the fused stream
+/// unless `SLOPE_PREPACK=off` disabled it.
+fn sparse_weight(c: CompressedNm) -> HostWeight {
+    let pre = prepack_enabled().then(|| PrepackedNm::prepack(&c));
+    HostWeight::Sparse { c, pre }
 }
 
 impl HostLinear {
     fn d_out(&self) -> usize {
         match &self.w {
             HostWeight::Dense(m) => m.rows,
-            HostWeight::Sparse(c) => c.rows,
+            HostWeight::Sparse { c, .. } => c.rows,
         }
     }
 
@@ -82,10 +95,16 @@ impl HostLinear {
     fn forward_into(&mut self, x: &Matrix, y: &mut Matrix, policy: &ParallelPolicy) {
         ensure_out(y, x.rows, self.d_out());
         match (&self.w, &self.lora) {
-            (HostWeight::Sparse(c), Some((up, down))) => {
+            (HostWeight::Sparse { pre: Some(p), .. }, Some((up, down))) => {
+                lora_fused_seq_pre(policy, p, x, up, down, &mut self.t, y);
+            }
+            (HostWeight::Sparse { c, pre: None }, Some((up, down))) => {
                 lora_fused_seq(SpmmAlgo::RowMajor, policy, c, x, up, down, &mut self.t, y);
             }
-            (HostWeight::Sparse(c), None) => spmm_rowmajor_into(x, c, y, policy),
+            (HostWeight::Sparse { pre: Some(p), .. }, None) => {
+                spmm_prepacked_into(x, p, y, policy)
+            }
+            (HostWeight::Sparse { c, pre: None }, None) => spmm_rowmajor_into(x, c, y, policy),
             (HostWeight::Dense(w), lora) => {
                 gemm_nt_into(x, w, y, policy);
                 if let Some((up, down)) = lora {
@@ -714,13 +733,13 @@ fn build_linear(manifest: &Manifest, store: &Store, packed: &HashMap<String, Com
     };
     let w = if let Some(c) = packed.get(&pname) {
         *packed_restored += 1;
-        HostWeight::Sparse(c.clone())
+        sparse_weight(c.clone())
     } else if let Some(c) =
         checkpoint::packed_plane_from_store(store, manifest, layer, wname)?
     {
         // No pre-packed plane shipped (pre-packing checkpoint): compress
         // through the same rule the checkpoint writer uses.
-        HostWeight::Sparse(c)
+        sparse_weight(c)
     } else {
         // Dense route — unpruned weight, or a non-N:M (dynamic-baseline)
         // mask.  Python's forward always multiplies by mask_r (ones
@@ -741,11 +760,11 @@ fn build_linear(manifest: &Manifest, store: &Store, packed: &HashMap<String, Com
     if let Some((up, down)) = &lora {
         let d_out = match &w {
             HostWeight::Dense(m) => m.rows,
-            HostWeight::Sparse(c) => c.rows,
+            HostWeight::Sparse { c, .. } => c.rows,
         };
         let d_in = match &w {
             HostWeight::Dense(m) => m.cols,
-            HostWeight::Sparse(c) => c.cols,
+            HostWeight::Sparse { c, .. } => c.cols,
         };
         crate::ensure!(
             up.rows == d_out && down.cols == d_in && up.cols == down.rows,
@@ -756,7 +775,7 @@ fn build_linear(manifest: &Manifest, store: &Store, packed: &HashMap<String, Com
     crate::ensure!(
         bias.len() == match &w {
             HostWeight::Dense(m) => m.rows,
-            HostWeight::Sparse(c) => c.rows,
+            HostWeight::Sparse { c, .. } => c.rows,
         },
         "bias length mismatch for {pname}"
     );

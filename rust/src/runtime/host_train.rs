@@ -41,12 +41,14 @@
 
 use crate::backend::gemm::dot;
 use crate::backend::{ensure_out, gemm_into, gemm_nt_acc_into, gemm_nt_into, gemm_tn_into,
-                     prune_and_compress_into, spmm_rowmajor_into, ParallelPolicy};
+                     prune_and_compress_into, spmm_prepacked_into, spmm_rowmajor_into,
+                     ParallelPolicy};
 use crate::runtime::host::{add_inplace, causal_attention_into, gelu_tanh, gelu_tanh_grad,
                            layer_norm_into};
 use crate::runtime::manifest::{ModelConfig, TrainParams};
 use crate::runtime::{Manifest, Store, SPARSE_WEIGHTS};
-use crate::sparsity::{double_prune_mask, random_row_mask, CompressedNm, Mask, NmScheme};
+use crate::sparsity::{double_prune_mask, prepack_enabled, random_row_mask, CompressedNm, Mask,
+                      NmScheme, PrepackedNm};
 use crate::tensor::Matrix;
 use crate::util::Rng;
 
@@ -194,6 +196,10 @@ struct SparseOps {
     /// optimizer state).
     m: Vec<f32>,
     v: Vec<f32>,
+    /// Fused prepacked stream of `w` for the forward SpMM (`None` under
+    /// `SLOPE_PREPACK=off`).  Values are refreshed in place after every
+    /// optimizer step; the metadata never changes (masks are static).
+    pre: Option<PrepackedNm>,
 }
 
 impl SparseOps {
@@ -1072,6 +1078,9 @@ impl HostTrainModel {
                             ops.w.values[i] -= upd;
                         }
                         ops.refresh_wt();
+                        if let Some(pre) = &mut ops.pre {
+                            pre.refresh_values(&ops.w);
+                        }
                     }
                     LinOps::Dense(ops) => {
                         // python masks update AND moments by mask_r.
@@ -1376,6 +1385,9 @@ impl HostTrainModel {
                         pruned += plane(&ops.w) + plane(&ops.w_t) + plane(&ops.gw);
                         pruned += ops.wt_pad.len() * 8;
                         pruned += (ops.m.len() + ops.v.len()) * 4;
+                        if let Some(pre) = &ops.pre {
+                            pruned += pre.stream_bytes();
+                        }
                         pruned_dense += lin.d_out * lin.d_in * 4 * 4;
                     }
                     LinOps::Dense(ops) => {
@@ -1622,6 +1634,9 @@ fn build_linear(wsuffix: &str, bsuffix: &str, w: Matrix, bias: Vec<f32>,
         let v_packed = gather(v_dense);
         drop(gather);
         let gw = w_c.clone();
+        // Prepack the forward operand once at ingest; subsequent steps
+        // only rewrite the value slots (`refresh_values`).
+        let pre = prepack_enabled().then(|| PrepackedNm::prepack(&w_c));
         LinOps::Sparse(SparseOps {
             scheme,
             m: m_packed,
@@ -1630,6 +1645,7 @@ fn build_linear(wsuffix: &str, bsuffix: &str, w: Matrix, bias: Vec<f32>,
             w_t,
             wt_pad,
             gw,
+            pre,
         })
     } else {
         // All-ones masks are trivial: drop them so the dense route runs
@@ -1672,6 +1688,7 @@ fn linear_forward(lin: &mut TrainLinear, lora: Option<&mut LoraPair>, x: &Matrix
                   y: &mut Matrix, policy: &ParallelPolicy) {
     ensure_out(y, x.rows, lin.d_out);
     match &lin.ops {
+        LinOps::Sparse(SparseOps { pre: Some(p), .. }) => spmm_prepacked_into(x, p, y, policy),
         LinOps::Sparse(ops) => spmm_rowmajor_into(x, &ops.w, y, policy),
         LinOps::Dense(ops) => gemm_nt_into(x, ops.fwd_operand(), y, policy),
     }

@@ -11,8 +11,10 @@
 
 pub mod compressed;
 pub mod lemma;
+pub mod prepacked;
 
 pub use compressed::CompressedNm;
+pub use prepacked::{prepack_enabled, PrepackedNm};
 pub use lemma::{imposed_sparsity, monte_carlo_imposed_sparsity};
 
 use crate::tensor::Matrix;

@@ -1,0 +1,412 @@
+//! Fused ("prepacked") N:M operand layout: one contiguous stream per row
+//! interleaving the kept values with their decode metadata, built once
+//! from a [`CompressedNm`] — the DeepSparse-style CPU analogue of the
+//! compressed-operand format sparse tensor cores stream from HBM.
+//!
+//! [`CompressedNm`] keeps two planes (`values`, `meta`) plus — on the
+//! AVX2 path — a 256-entry lane-permute LUT consulted per metadata byte.
+//! That is three streams per weight row.  [`PrepackedNm`] fuses them: at
+//! prepack time every 2:4 metadata byte is decoded **once** into the
+//! `vpermps` lane indices the gather kernel needs, and those indices are
+//! interleaved with the eight values they gather for, so the hot loop
+//! reads a single forward-moving stream and never touches the LUT.
+//!
+//! # 2:4 fused row layout (`u32` slots, little-endian bytes)
+//!
+//! ```text
+//!  ┌ per metadata-byte PAIR (16 dense cols, 8 kept values): 10 slots ┐
+//!  │ v0 v1 v2 v3 v4 v5 v6 v7 │ i00 i01 i02 i03 │ i10 i11 i12 i13 │   │
+//!  │   8 × f32 (as bits)     │  slot 8: 4 × u8 │  slot 9: 4 × u8 │   │
+//!  └──────────────────────────────────────────────────────────────────┘
+//!  [ + one 5-slot unit (4 values, 4 lane bytes) if the byte count is odd ]
+//!  [ + one 3-slot unit (2 values, 2 offset bytes) for a half-byte tail  ]
+//! ```
+//!
+//! `i0j`/`i1j` are exactly the `IDX24`-style window lane indices
+//! (`[b & 3, (b >> 2) & 3, 4 + ((b >> 4) & 3), 4 + ((b >> 6) & 3)]` for
+//! metadata byte `b`): slots 8–9 are eight consecutive bytes, so one
+//! `vpmovzxbd` widens them into the full 8-lane `vpermps` index vector —
+//! no table lookup in the loop.  Other schemes (1:2, 2:8) fuse the raw
+//! packed metadata bytes behind the row's values (`kcols` value slots +
+//! `ceil(row_meta_bytes/4)` metadata slots); their kernels decode with
+//! the same bit arithmetic as the compressed path.
+//!
+//! # Contract
+//!
+//! * `unpack(prepack(c)) == c` exactly, for every scheme — the layout is
+//!   a pure re-encoding, pinned by the round-trip suite.
+//! * SpMM over the prepacked plane is **bit-identical** to SpMM over the
+//!   source `CompressedNm` at the same [`crate::backend::SimdLevel`]:
+//!   the prepacked kernels replay the per-element reduction order of the
+//!   compressed-plane kernels and only re-arrange where operands are
+//!   loaded from (`tests/simd_parity.rs` pins this across levels,
+//!   thread counts, and partition strategies).
+//! * [`PrepackedNm::refresh_values`] rewrites the interleaved value slots
+//!   in place from an updated `CompressedNm` with the same pattern — the
+//!   cheap O(nnz) path the training executor takes after each in-place
+//!   optimizer step (the pattern, hence the index slots, never changes
+//!   under static masks).
+//!
+//! `SLOPE_PREPACK=off` ([`prepack_enabled`]) disables prepacking
+//! process-wide so the compressed-plane path stays an always-available
+//! pinned ground truth (CI runs the decode + parity suites both ways).
+
+use super::{CompressedNm, NmScheme};
+use std::sync::OnceLock;
+
+/// Process-wide prepack gate, read once from `SLOPE_PREPACK`
+/// (`off|0|false` disables; anything else, including unset, enables).
+/// Mirrors the `SLOPE_SIMD` dispatch pattern: decided at first use,
+/// constant for the life of the process.
+pub fn prepack_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| match std::env::var("SLOPE_PREPACK").unwrap_or_default().as_str() {
+        "off" | "0" | "false" => false,
+        "" | "on" | "auto" | "1" => true,
+        other => {
+            eprintln!("[prepack] unknown SLOPE_PREPACK={other:?} (want on|off); using on");
+            true
+        }
+    })
+}
+
+/// A compressed N:M plane re-encoded as one interleaved value+metadata
+/// stream per row (module docs hold the byte layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrepackedNm {
+    pub rows: usize,
+    /// Original (dense) number of columns.
+    pub cols: usize,
+    pub scheme: NmScheme,
+    /// `rows × row_stride` fused slots; values stored as `f32::to_bits`,
+    /// index/metadata bytes packed little-endian.
+    stream: Vec<u32>,
+    row_stride: usize,
+}
+
+/// The four window lane indices of one 2:4 metadata byte — entries 2/3
+/// carry the second group's +4 window bias (same encoding as the AVX2
+/// `IDX24` LUT, stored here so the kernel never consults the table).
+#[inline]
+fn lanes24(b: u8) -> [u8; 4] {
+    [b & 3, (b >> 2) & 3, 4 + ((b >> 4) & 3), 4 + ((b >> 6) & 3)]
+}
+
+/// Inverse of [`lanes24`]: recover the metadata byte (half-byte tails
+/// pass `half = true` and only restore the low nibble).
+#[inline]
+fn byte_from_lanes(l: [u8; 4], half: bool) -> u8 {
+    let lo = (l[0] & 3) | ((l[1] & 3) << 2);
+    if half {
+        lo
+    } else {
+        lo | ((l[2] - 4) << 4) | ((l[3] - 4) << 6)
+    }
+}
+
+/// Read metadata byte `j` out of the little-endian byte stream packed
+/// into `u32` slots (the generic-scheme fused metadata region).
+#[inline]
+pub(crate) fn slot_meta_byte(slots: &[u32], j: usize) -> u8 {
+    (slots[j / 4] >> (8 * (j % 4))) as u8
+}
+
+/// [`unpack_offset`] over slot-packed metadata bytes — identical bit
+/// arithmetic, different backing store.
+#[inline]
+pub(crate) fn unpack_offset_slots(slots: &[u32], k: usize, bits: u32) -> usize {
+    if bits == 0 {
+        return 0;
+    }
+    let bitpos = k * bits as usize;
+    let byte = bitpos >> 3;
+    let sh = (bitpos & 7) as u32;
+    let mut w = (slot_meta_byte(slots, byte) as u32) >> sh;
+    if sh + bits > 8 {
+        w |= (slot_meta_byte(slots, byte + 1) as u32) << (8 - sh);
+    }
+    (w & ((1u32 << bits) - 1)) as usize
+}
+
+impl PrepackedNm {
+    /// Whether this plane uses the fused 2:4 lane-index layout (vs. the
+    /// generic values+metadata concatenation).
+    #[inline]
+    pub fn is_fused24(&self) -> bool {
+        self.scheme.n == 2 && self.scheme.m == 4
+    }
+
+    /// Kept entries per row (same as the source plane).
+    #[inline]
+    pub fn kcols(&self) -> usize {
+        self.cols / self.scheme.m * self.scheme.n
+    }
+
+    /// Fused `u32` slots per row.
+    #[inline]
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// One row's fused stream.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.stream[r * self.row_stride..(r + 1) * self.row_stride]
+    }
+
+    /// Bytes of the fused stream actually resident — what `memmodel`
+    /// charges for a prepacked plane.
+    #[inline]
+    pub fn stream_bytes(&self) -> usize {
+        self.stream.len() * 4
+    }
+
+    /// Fused slots per row for a `cols`-wide plane under `s` — the pure
+    /// size function `memmodel::prepacked_plane_bytes` mirrors.
+    pub fn row_stride_for(cols: usize, s: NmScheme) -> usize {
+        let kc = cols / s.m * s.n;
+        if s.n == 2 && s.m == 4 {
+            let pairs = kc / 4;
+            pairs / 2 * 10 + pairs % 2 * 5 + if kc % 4 == 2 { 3 } else { 0 }
+        } else {
+            let rmb = (kc * s.offset_bits() as usize).div_ceil(8);
+            kc + rmb.div_ceil(4)
+        }
+    }
+
+    /// Build the fused plane from a compressed one (decode-once: for 2:4
+    /// every metadata byte becomes its four window lane indices here, so
+    /// the SpMM loop never touches a LUT).
+    pub fn prepack(c: &CompressedNm) -> Self {
+        let kc = c.kcols();
+        let rmb = c.row_meta_bytes();
+        let row_stride = Self::row_stride_for(c.cols, c.scheme);
+        let mut stream = vec![0u32; c.rows * row_stride];
+        let fused24 = c.scheme.n == 2 && c.scheme.m == 4;
+        for r in 0..c.rows {
+            let vals = &c.values[r * kc..(r + 1) * kc];
+            let meta = &c.meta[r * rmb..(r + 1) * rmb];
+            let out = &mut stream[r * row_stride..(r + 1) * row_stride];
+            if fused24 {
+                let pairs = kc / 4;
+                let mut slot = 0;
+                let mut byte = 0;
+                while byte + 2 <= pairs {
+                    for (j, v) in vals[byte * 4..byte * 4 + 8].iter().enumerate() {
+                        out[slot + j] = v.to_bits();
+                    }
+                    out[slot + 8] = u32::from_le_bytes(lanes24(meta[byte]));
+                    out[slot + 9] = u32::from_le_bytes(lanes24(meta[byte + 1]));
+                    slot += 10;
+                    byte += 2;
+                }
+                if byte < pairs {
+                    for (j, v) in vals[byte * 4..byte * 4 + 4].iter().enumerate() {
+                        out[slot + j] = v.to_bits();
+                    }
+                    out[slot + 4] = u32::from_le_bytes(lanes24(meta[byte]));
+                    slot += 5;
+                    byte += 1;
+                }
+                if kc % 4 == 2 {
+                    out[slot] = vals[kc - 2].to_bits();
+                    out[slot + 1] = vals[kc - 1].to_bits();
+                    let l = lanes24(meta[byte]);
+                    out[slot + 2] = u32::from_le_bytes([l[0], l[1], 0, 0]);
+                }
+            } else {
+                for (j, v) in vals.iter().enumerate() {
+                    out[j] = v.to_bits();
+                }
+                for (j, b) in meta.iter().enumerate() {
+                    out[kc + j / 4] |= (*b as u32) << (8 * (j % 4));
+                }
+            }
+        }
+        Self { rows: c.rows, cols: c.cols, scheme: c.scheme, stream, row_stride }
+    }
+
+    /// Invert [`Self::prepack`] exactly — the round-trip the suite pins.
+    pub fn unpack(&self) -> CompressedNm {
+        let kc = self.kcols();
+        let s = self.scheme;
+        let rmb = (kc * s.offset_bits() as usize).div_ceil(8);
+        let mut values = vec![0.0f32; self.rows * kc];
+        let mut meta = vec![0u8; self.rows * rmb];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let vals = &mut values[r * kc..(r + 1) * kc];
+            let mrow = &mut meta[r * rmb..(r + 1) * rmb];
+            if self.is_fused24() {
+                let pairs = kc / 4;
+                let mut slot = 0;
+                let mut byte = 0;
+                while byte + 2 <= pairs {
+                    for (j, v) in vals[byte * 4..byte * 4 + 8].iter_mut().enumerate() {
+                        *v = f32::from_bits(row[slot + j]);
+                    }
+                    mrow[byte] = byte_from_lanes(row[slot + 8].to_le_bytes(), false);
+                    mrow[byte + 1] = byte_from_lanes(row[slot + 9].to_le_bytes(), false);
+                    slot += 10;
+                    byte += 2;
+                }
+                if byte < pairs {
+                    for (j, v) in vals[byte * 4..byte * 4 + 4].iter_mut().enumerate() {
+                        *v = f32::from_bits(row[slot + j]);
+                    }
+                    mrow[byte] = byte_from_lanes(row[slot + 4].to_le_bytes(), false);
+                    slot += 5;
+                    byte += 1;
+                }
+                if kc % 4 == 2 {
+                    vals[kc - 2] = f32::from_bits(row[slot]);
+                    vals[kc - 1] = f32::from_bits(row[slot + 1]);
+                    mrow[byte] = byte_from_lanes(row[slot + 2].to_le_bytes(), true);
+                }
+            } else {
+                for (j, v) in vals.iter_mut().enumerate() {
+                    *v = f32::from_bits(row[j]);
+                }
+                for (j, b) in mrow.iter_mut().enumerate() {
+                    *b = slot_meta_byte(&row[kc..], j);
+                }
+            }
+        }
+        CompressedNm { rows: self.rows, cols: self.cols, scheme: s, values, meta }
+    }
+
+    /// Rewrite the interleaved value slots from `c` (same shape, scheme,
+    /// and — by the static-mask contract — the same pattern), leaving the
+    /// index slots untouched.  O(nnz); the post-optimizer-step refresh.
+    pub fn refresh_values(&mut self, c: &CompressedNm) {
+        assert_eq!(
+            (self.rows, self.cols, self.scheme),
+            (c.rows, c.cols, c.scheme),
+            "refresh_values: plane shape/scheme mismatch"
+        );
+        let kc = self.kcols();
+        let stride = self.row_stride;
+        for r in 0..self.rows {
+            let vals = &c.values[r * kc..(r + 1) * kc];
+            let out = &mut self.stream[r * stride..(r + 1) * stride];
+            if self.scheme.n == 2 && self.scheme.m == 4 {
+                let pairs = kc / 4;
+                let mut slot = 0;
+                let mut byte = 0;
+                while byte + 2 <= pairs {
+                    for (j, v) in vals[byte * 4..byte * 4 + 8].iter().enumerate() {
+                        out[slot + j] = v.to_bits();
+                    }
+                    slot += 10;
+                    byte += 2;
+                }
+                if byte < pairs {
+                    for (j, v) in vals[byte * 4..byte * 4 + 4].iter().enumerate() {
+                        out[slot + j] = v.to_bits();
+                    }
+                    slot += 5;
+                }
+                if kc % 4 == 2 {
+                    out[slot] = vals[kc - 2].to_bits();
+                    out[slot + 1] = vals[kc - 1].to_bits();
+                }
+            } else {
+                for (j, v) in vals.iter().enumerate() {
+                    out[j] = v.to_bits();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::{random_row_mask, Mask};
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn prepack_roundtrips_all_schemes_and_tails() {
+        let mut rng = Rng::seed_from_u64(0x9E);
+        for (n, m) in [(1usize, 2usize), (2, 4), (2, 8)] {
+            let s = NmScheme::new(n, m);
+            // Group counts hitting every tail shape: even pairs, odd
+            // trailing byte, half-byte tail, and single-group rows.
+            for groups in [1usize, 2, 3, 4, 5, 7, 8, 9] {
+                let cols = groups * m;
+                let w = Matrix::randn(5, cols, 1.0, &mut rng);
+                let mask = random_row_mask(5, cols, s, &mut rng);
+                let c = CompressedNm::compress(&w, &mask, s);
+                let p = PrepackedNm::prepack(&c);
+                assert_eq!(p.row_stride(), PrepackedNm::row_stride_for(cols, s));
+                assert_eq!(p.unpack(), c, "{s} groups={groups}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused24_interleaves_values_with_lane_indexes() {
+        // 2:4 offsets [1, 3 | 0, 2] → metadata byte 0b1000_1101 (the
+        // golden-byte pin in `compressed`); its fused lane word must hold
+        // [1, 3, 4+0, 4+2].
+        let mask = Mask {
+            rows: 1,
+            cols: 8,
+            keep: vec![false, true, false, true, true, false, true, false],
+        };
+        let w = Matrix::from_vec(1, 8, (1..=8).map(|v| v as f32).collect());
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        assert_eq!(c.meta, vec![0b1000_1101]);
+        let p = PrepackedNm::prepack(&c);
+        // One metadata byte ⇒ one trailing 5-slot unit: 4 values + lanes.
+        assert_eq!(p.row_stride(), 5);
+        let row = p.row(0);
+        assert_eq!(f32::from_bits(row[0]), 2.0);
+        assert_eq!(f32::from_bits(row[3]), 7.0);
+        assert_eq!(row[4].to_le_bytes(), [1, 3, 4, 6]);
+    }
+
+    #[test]
+    fn refresh_values_tracks_in_place_updates() {
+        let mut rng = Rng::seed_from_u64(0x9F);
+        for (n, m) in [(1usize, 2usize), (2, 4), (2, 8)] {
+            let s = NmScheme::new(n, m);
+            let w = Matrix::randn(4, 5 * m, 1.0, &mut rng);
+            let mask = random_row_mask(4, 5 * m, s, &mut rng);
+            let mut c = CompressedNm::compress(&w, &mask, s);
+            let mut p = PrepackedNm::prepack(&c);
+            let w2 = Matrix::randn(4, 5 * m, 1.0, &mut rng);
+            c.update_from_dense(&w2);
+            p.refresh_values(&c);
+            assert_eq!(p.unpack(), c, "{s}");
+            assert_eq!(p, PrepackedNm::prepack(&c), "{s}: refresh == full prepack");
+        }
+    }
+
+    #[test]
+    fn stream_bytes_matches_layout_arithmetic() {
+        let mut rng = Rng::seed_from_u64(0xA0);
+        // 2:4, 7 groups = 14 kept = 3 full metadata bytes + a half byte:
+        // one pair unit (10 slots) + one trailing-byte unit (5) + the
+        // half-byte tail (3) — all three unit kinds in one row.
+        let w = Matrix::randn(3, 28, 1.0, &mut rng);
+        let mask = random_row_mask(3, 28, NmScheme::TWO_FOUR, &mut rng);
+        let c = CompressedNm::compress(&w, &mask, NmScheme::TWO_FOUR);
+        let p = PrepackedNm::prepack(&c);
+        assert_eq!(p.row_stride(), 18);
+        assert_eq!(p.stream_bytes(), 3 * 18 * 4);
+    }
+
+    #[test]
+    fn prepack_env_gate_defaults_on() {
+        // The test binary never sets SLOPE_PREPACK, so the cached gate
+        // resolves from the ambient environment; CI's escape-hatch leg
+        // exports SLOPE_PREPACK=off and flips this expectation.
+        let want = !matches!(
+            std::env::var("SLOPE_PREPACK").unwrap_or_default().as_str(),
+            "off" | "0" | "false"
+        );
+        assert_eq!(prepack_enabled(), want);
+    }
+}

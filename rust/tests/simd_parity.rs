@@ -22,9 +22,9 @@
 use slope::backend::simd::effective;
 use slope::backend::{avx2_available, dot_at, dot_scalar, gemm_into_at, gemm_nt_acc_into_at,
                      gemm_nt_into_at, gemm_tn_into_at, sparse_dot_at, sparse_dot_scalar,
-                     spmm_rowmajor_with_at, spmm_tiled_with_at, ParallelPolicy,
-                     PartitionStrategy, SimdLevel};
-use slope::sparsity::{random_row_mask, CompressedNm, NmScheme};
+                     spmm_prepacked_with_at, spmm_rowmajor_with_at, spmm_tiled_with_at,
+                     ParallelPolicy, PartitionStrategy, SimdLevel};
+use slope::sparsity::{random_row_mask, CompressedNm, NmScheme, PrepackedNm};
 use slope::tensor::Matrix;
 use slope::util::proptest::cases;
 use slope::util::Rng;
@@ -226,6 +226,108 @@ fn prop_dot_levels_agree_and_exact_on_integers() {
         assert_eq!(dot_at(SimdLevel::Avx2, &ai, &bi, k).to_bits(),
                    dot_scalar(&ai, &bi, k).to_bits(), "integer dot k={k}");
     });
+}
+
+#[test]
+fn prop_prepacked_matches_compressed_bitwise() {
+    // The tentpole contract: at the SAME level, the fused prepacked plane
+    // is a pure layout change — every dot replays the compressed kernel's
+    // reduction order exactly, so the output is bitwise identical across
+    // schemes, ragged shapes, thread counts, and partition strategies.
+    cases(60, 0x51D4, |g| {
+        let &(n, m) = g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        let cols = s.m * g.usize_in(1, 18);
+        let rows = g.usize_in(1, 41); // rows % 4 sweeps the quad-tile tail
+        let batch = g.usize_in(1, 9);
+        let x = Matrix::randn(batch, cols, 1.0, &mut g.rng);
+        let w = Matrix::randn(rows, cols, 1.0, &mut g.rng);
+        let mask = random_row_mask(rows, cols, s, &mut g.rng);
+        let c = CompressedNm::compress(&w, &mask, s);
+        let pre = PrepackedNm::prepack(&c);
+        assert_eq!(pre.unpack(), c, "{s} prepack round-trip");
+        for lvl in [SimdLevel::Scalar, SimdLevel::Avx2] {
+            for threads in [1usize, 4] {
+                for part in
+                    [PartitionStrategy::Auto, PartitionStrategy::Rows, PartitionStrategy::Cols]
+                {
+                    let p = policy(threads, part);
+                    let want = spmm_rowmajor_with_at(lvl, &x, &c, &p);
+                    let got = spmm_prepacked_with_at(lvl, &x, &pre, &p);
+                    assert_eq!(got, want, "{s} {lvl:?} t={threads} {part:?}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_prepacked_levels_agree_within_tolerance() {
+    // Across levels the prepacked path inherits the compressed contract:
+    // tight relative tolerance on random floats (FMA reassociation only).
+    cases(40, 0x51D5, |g| {
+        let &(n, m) = g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        let cols = s.m * g.usize_in(1, 18);
+        let rows = g.usize_in(1, 33);
+        let batch = g.usize_in(1, 6);
+        let x = Matrix::randn(batch, cols, 1.0, &mut g.rng);
+        let w = Matrix::randn(rows, cols, 1.0, &mut g.rng);
+        let mask = random_row_mask(rows, cols, s, &mut g.rng);
+        let pre = PrepackedNm::prepack(&CompressedNm::compress(&w, &mask, s));
+        let p = policy(1, PartitionStrategy::Auto);
+        let want = spmm_prepacked_with_at(SimdLevel::Scalar, &x, &pre, &p);
+        let got = spmm_prepacked_with_at(SimdLevel::Avx2, &x, &pre, &p);
+        assert_close(&got, &want, &format!("prepacked {s} {batch}x{cols} -> {rows}"));
+    });
+}
+
+#[test]
+fn prop_prepacked_levels_agree_bitwise_on_small_integers() {
+    // Exact arithmetic ⇒ any cross-level difference is a wrong stream
+    // offset or lane index, not rounding — an end-to-end audit that the
+    // fused layout decodes to exactly the operands the metadata names.
+    cases(40, 0x51D6, |g| {
+        let &(n, m) = g.pick(&SCHEMES);
+        let s = NmScheme::new(n, m);
+        let cols = s.m * g.usize_in(1, 18);
+        let rows = g.usize_in(1, 33);
+        let batch = g.usize_in(1, 6);
+        let x = small_int_matrix(batch, cols, &mut g.rng);
+        let w = small_int_matrix(rows, cols, &mut g.rng);
+        let mask = random_row_mask(rows, cols, s, &mut g.rng);
+        let pre = PrepackedNm::prepack(&CompressedNm::compress(&w, &mask, s));
+        let p = policy(1, PartitionStrategy::Auto);
+        let scalar = spmm_prepacked_with_at(SimdLevel::Scalar, &x, &pre, &p);
+        let simd = spmm_prepacked_with_at(SimdLevel::Avx2, &x, &pre, &p);
+        assert_eq!(simd, scalar, "prepacked {s} {batch}x{cols} -> {rows}");
+    });
+}
+
+#[test]
+fn prepacked_remainder_paths_stay_pinned() {
+    // Deterministic sweep of every micro-tile remainder: weight-row
+    // counts covering each quad tail (rows % 4 ∈ {0,1,2,3}) crossed with
+    // 2:4 column counts hitting the byte-pair loop, the trailing full
+    // byte, and the half-byte metadata tail — each pinned bitwise against
+    // the compressed path at both levels.
+    let mut rng = Rng::seed_from_u64(23);
+    let s = NmScheme::TWO_FOUR;
+    for rows in [1usize, 2, 3, 4, 5, 7, 8, 9] {
+        for cols in [4usize, 8, 12, 16, 20, 36, 64, 100] {
+            let x = Matrix::randn(3, cols, 1.0, &mut rng);
+            let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+            let mask = random_row_mask(rows, cols, s, &mut rng);
+            let c = CompressedNm::compress(&w, &mask, s);
+            let pre = PrepackedNm::prepack(&c);
+            for lvl in [SimdLevel::Scalar, SimdLevel::Avx2] {
+                let p = ParallelPolicy::serial();
+                assert_eq!(spmm_prepacked_with_at(lvl, &x, &pre, &p),
+                           spmm_rowmajor_with_at(lvl, &x, &c, &p),
+                           "{rows}x{cols} {lvl:?}");
+            }
+        }
+    }
 }
 
 #[test]

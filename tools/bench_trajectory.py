@@ -154,12 +154,16 @@ def archive(args) -> int:
         )
     simd_scalar = {c for c in simd_cases if c.endswith("/scalar")}
     simd_auto = {c for c in simd_cases if c.endswith("/auto")}
-    if not simd_scalar or not simd_auto:
+    simd_prepacked = {c for c in simd_cases if c.endswith("/prepacked")}
+    if not simd_scalar or not simd_auto or not simd_prepacked:
         raise SystemExit(
-            "bench_spmm simd series must include both a .../scalar and a "
-            f".../auto case per shape; got {sorted(simd_cases)}"
+            "bench_spmm simd series must include .../scalar, .../auto and "
+            f".../prepacked cases per shape; got {sorted(simd_cases)}"
         )
-    print(f"bench_spmm simd series: {len(simd_scalar)} scalar, {len(simd_auto)} auto")
+    print(
+        f"bench_spmm simd series: {len(simd_scalar)} scalar, "
+        f"{len(simd_auto)} auto, {len(simd_prepacked)} prepacked"
+    )
     return 0
 
 
